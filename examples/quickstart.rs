@@ -1,0 +1,99 @@
+//! Quickstart: one query through the full HybridFlow pipeline, with every
+//! stage printed — plan XML, repaired DAG, per-subtask routing decisions,
+//! and the final metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart -- [--benchmark gpqa] [--seed 3] [--pjrt]
+//! ```
+
+use hybridflow::config::simparams::SimParams;
+use hybridflow::dag::emit_plan;
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::SyntheticPlanner;
+use hybridflow::planner::Planner;
+use hybridflow::router::{MirrorPredictor, UtilityPredictor};
+use hybridflow::runtime::RouterService;
+use hybridflow::util::cli::Args;
+use hybridflow::util::rng::Rng;
+use hybridflow::workload::{generate_queries, Benchmark};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let bench = Benchmark::parse(args.get_or("benchmark", "gpqa"))
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark"))?;
+    let seed = args.get_u64_or("seed", 3)?;
+    let artifacts = hybridflow::config::default_artifacts_dir();
+
+    // 1. Predictor: PJRT service (AOT artifact) or pure-rust mirror.
+    let predictor: Arc<dyn UtilityPredictor> = if args.flag("pjrt") {
+        let svc = RouterService::start(&artifacts)?;
+        println!("== runtime: PJRT {} (artifacts: {}) ==\n", svc.platform(), artifacts.display());
+        Arc::new(svc)
+    } else {
+        Arc::new(MirrorPredictor::from_meta_file(&artifacts.join("router_meta.json"))?)
+    };
+
+    // 2. Pick a query from the synthetic benchmark.
+    let query = generate_queries(bench, 8, seed).pop().unwrap();
+    println!(
+        "query: benchmark={} domain={} latent difficulty={:.2} prompt tokens={:.0}\n",
+        bench.display(),
+        query.domain_name(),
+        query.difficulty,
+        query.query_tokens
+    );
+
+    // 3. Planner: XML plan -> validate/repair -> executable DAG.
+    let planner = SyntheticPlanner::paper_main();
+    let mut rng = Rng::new(seed);
+    let text = planner.plan_text(&query, &mut rng);
+    println!("-- planner output ({:.2}s on-device) --\n{}\n", text.planning_latency, text.xml);
+    let mut rng = Rng::new(seed);
+    let plan = planner.plan(&query, 7, &mut rng);
+    println!("-- executable DAG ({:?}) --\n{}\n", plan.outcome, emit_plan(&plan.dag));
+    println!(
+        "nodes={}  critical path={}  R_comp={:.2} (Eq. 28)\n",
+        plan.dag.len(),
+        plan.dag.critical_path_len().unwrap(),
+        plan.dag.compression_ratio().unwrap()
+    );
+
+    // 4. Route + schedule + execute.
+    let sp = SimParams::default();
+    let pipeline = HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        planner,
+        predictor,
+        PipelineConfig::paper_default(&sp),
+    );
+    let mut rng = Rng::new(seed);
+    let (exec, _) = pipeline.run_query_traced(&query, &mut rng);
+
+    println!("-- routing & execution trace --");
+    let mut events = exec.events.clone();
+    events.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    for e in &events {
+        println!(
+            "  node {:>2} pos {}  u_hat={:.3} tau={:.3} -> {:<5}  t=[{:>6.2}s..{:>6.2}s]  api=${:.4}",
+            e.node,
+            e.position,
+            e.u_hat,
+            e.tau,
+            if e.cloud { "CLOUD" } else { "edge" },
+            e.start,
+            e.finish,
+            e.api_cost
+        );
+    }
+    println!(
+        "\nresult: {}  C_time={:.2}s  C_API=${:.4}  offload={:.0}%  C_used={:.3}",
+        if exec.correct { "CORRECT" } else { "wrong" },
+        exec.latency,
+        exec.api_cost,
+        exec.offload_rate * 100.0,
+        exec.budget.c_used
+    );
+    Ok(())
+}

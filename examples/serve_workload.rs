@@ -1,0 +1,87 @@
+//! End-to-end serving driver — the system-level validation run recorded in
+//! EXPERIMENTS.md: load the AOT artifacts through PJRT, serve a full
+//! benchmark's queries concurrently through the coordinator, and report
+//! accuracy, simulated C_time/C_API, and *real* coordinator throughput and
+//! latency percentiles.
+//!
+//! All three layers compose here: L3 scheduling/routing in rust, the L2
+//! router network executed via the PJRT runtime on every decision, and the
+//! L1 Pallas kernel inside that artifact. With `--edge-compute`, simulated
+//! edge executions additionally run the edge-LM block artifact per decode
+//! chunk, putting real model FLOPs on the serving path.
+//!
+//! ```sh
+//! cargo run --release --example serve_workload -- \
+//!     [--benchmark gpqa] [--n 195] [--workers 8] [--mirror] [--edge-compute]
+//! ```
+
+use hybridflow::config::simparams::SimParams;
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::SyntheticPlanner;
+use hybridflow::router::{MirrorPredictor, UtilityPredictor};
+use hybridflow::runtime::RouterService;
+use hybridflow::server::serve;
+use hybridflow::util::cli::Args;
+use hybridflow::workload::{generate_queries, Benchmark};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let bench = Benchmark::parse(args.get_or("benchmark", "gpqa"))
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark"))?;
+    let n = args.get_usize_or("n", bench.params().n_queries)?;
+    let workers = args.get_usize_or("workers", 8)?;
+    let seed = args.get_u64_or("seed", 11)?;
+    let artifacts = hybridflow::config::default_artifacts_dir();
+
+    let mut executor = SimExecutor::paper_pair();
+    let predictor: Arc<dyn UtilityPredictor> = if args.flag("mirror") {
+        Arc::new(MirrorPredictor::from_meta_file(&artifacts.join("router_meta.json"))?)
+    } else {
+        let svc = Arc::new(RouterService::start(&artifacts)?);
+        println!("PJRT runtime up: platform={} edge_lm={}", svc.platform(), svc.has_edge_lm());
+        if args.flag("edge-compute") && svc.has_edge_lm() {
+            let burn = Arc::clone(&svc);
+            executor = executor.with_edge_compute(Arc::new(move |chunks| {
+                let _ = burn.edge_burn(chunks);
+            }));
+            println!("edge-LM compute hook enabled (PJRT forward per decode chunk)");
+        }
+        svc
+    };
+
+    let sp = SimParams::default();
+    let pipeline = Arc::new(HybridFlowPipeline::with_predictor(
+        executor,
+        SyntheticPlanner::paper_main(),
+        predictor,
+        PipelineConfig::paper_default(&sp),
+    ));
+
+    println!(
+        "serving {} x {} on {} workers (predictor: {})\n",
+        n,
+        bench.display(),
+        workers,
+        pipeline.predictor.backend()
+    );
+    let queries = generate_queries(bench, n, seed);
+    let report = serve(Arc::clone(&pipeline), queries, workers, seed);
+    println!("{}", report.render());
+
+    // Scaling sanity: single worker for the wall-clock comparison.
+    if !args.flag("no-scaling") {
+        let queries = generate_queries(bench, n.min(64), seed);
+        let one = serve(Arc::clone(&pipeline), queries.clone(), 1, seed);
+        let many = serve(pipeline, queries, workers, seed);
+        println!(
+            "\nscaling: 1 worker {:.1} q/s -> {} workers {:.1} q/s ({:.2}x)",
+            one.throughput_qps,
+            workers,
+            many.throughput_qps,
+            many.throughput_qps / one.throughput_qps
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once via ``make artifacts``; python never appears on the request path.
+
+Interchange format is HLO text, NOT ``lowered.compile()`` /
+``proto.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``).  The text parser on the rust side
+(``HloModuleProto::from_text_file``) reassigns ids and round-trips cleanly.
+See /opt/xla-example/gen_hlo.py.
+
+Artifacts written to ``--out-dir`` (default: ``../artifacts``):
+
+* ``router_b{1,8,32}.hlo.txt`` - trained router network at several batch
+  sizes (rust pads the ready frontier to the nearest size).
+* ``router.hlo.txt``          - alias of the canonical batch (8).
+* ``edge_lm.hlo.txt``         - tiny edge-LM decoder block forward.
+* ``router_meta.json``        - dims + weights + val metrics (rust mirror).
+* ``simparams.json``          - shared generative-model constants.
+* ``manifest.json``           - artifact inventory + feature layout version.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import simparams as sp
+from .model import init_edge_lm, make_edge_lm_fn, make_router_fn
+from .train_router import export_router_meta, train_router
+
+ROUTER_BATCHES = (1, 8, 32)
+CANONICAL_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big weight arrays as ``constant({...})``, which the rust-side
+    text parser silently reads as zeros — the trained network would ship
+    with its weights stripped (caught by ``hybridflow check`` parity).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build_all(out_dir: str, epochs: int | None = None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"feature_layout_version": 1, "artifacts": {}}
+
+    # --- Router: train, export weights, lower per batch size -------------
+    params, metrics = train_router(epochs=epochs or sp.TRAIN_EPOCHS, verbose=verbose)
+    export_router_meta(params, metrics, os.path.join(out_dir, "router_meta.json"))
+    manifest["router_metrics"] = {"val_mse": metrics["val_mse"], "val_r2": metrics["val_r2"]}
+
+    for b in ROUTER_BATCHES:
+        fn, example = make_router_fn(params, b)
+        text = lower_fn(fn, example)
+        name = f"router_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "inputs": [[b, sp.FEAT_DIM], [b, 1]],
+            "outputs": [[b]],
+            "chars": len(text),
+        }
+        if verbose:
+            print(f"[aot] wrote {name} ({len(text)} chars)")
+
+    canonical = os.path.join(out_dir, "router.hlo.txt")
+    with open(os.path.join(out_dir, f"router_b{CANONICAL_BATCH}.hlo.txt")) as f:
+        text = f.read()
+    with open(canonical, "w") as f:
+        f.write(text)
+    manifest["artifacts"]["router.hlo.txt"] = dict(
+        manifest["artifacts"][f"router_b{CANONICAL_BATCH}.hlo.txt"]
+    )
+
+    # --- Edge LM block ----------------------------------------------------
+    lm_params = init_edge_lm(jax.random.PRNGKey(7))
+    fn, example = make_edge_lm_fn(lm_params)
+    text = lower_fn(fn, example)
+    with open(os.path.join(out_dir, "edge_lm.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"]["edge_lm.hlo.txt"] = {
+        "inputs": [list(example[0].shape)],
+        "outputs": [[example[0].shape[0], 256]],
+        "chars": len(text),
+    }
+    if verbose:
+        print(f"[aot] wrote edge_lm.hlo.txt ({len(text)} chars)")
+
+    # --- Shared constants ---------------------------------------------------
+    sp.dump_json(os.path.join(out_dir, "simparams.json"))
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"[aot] wrote simparams.json + manifest.json -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--epochs", type=int, default=None, help="override router training epochs")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    build_all(os.path.abspath(args.out_dir), epochs=args.epochs, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: row-wise LayerNorm with fused scale/shift.
+
+Used by the edge-LM decoder block (both pre-LN sites). TPU mapping: the
+grid tiles rows into (bt, D) VMEM blocks — the full feature dimension stays
+resident so mean/variance are single-pass reductions on the vector unit,
+and the gamma/beta epilogue is fused (no second HBM pass).
+
+Like every kernel in this package it runs under ``interpret=True`` here
+(CPU PJRT cannot execute Mosaic custom-calls) and is pinned to the
+``ref.ref_layernorm`` oracle by hypothesis sweeps in
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_DEFAULT_BT = 8
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) * (x - mu), axis=-1, keepdims=True)
+    y = (x - mu) / jnp.sqrt(var + eps)
+    o_ref[...] = (y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def layernorm(
+    x: jax.Array,
+    g: jax.Array,
+    b: jax.Array,
+    *,
+    eps: float = 1e-5,
+    bt: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Row-wise LayerNorm: ``(x - mean) / sqrt(var + eps) * g + b``.
+
+    ``x``: (T, D); ``g``/``b``: (D,). Rows are tiled by ``bt`` (padded rows
+    are normalized too but sliced away — padding never leaks because the
+    reduction is per-row).
+    """
+    if x.ndim != 2 or g.ndim != 1 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} g{g.shape} b{b.shape}")
+    t, d = x.shape
+    if g.shape[0] != d or b.shape[0] != d:
+        raise ValueError(f"shape mismatch: x{x.shape} g{g.shape} b{b.shape}")
+
+    bt = bt or min(_DEFAULT_BT, t)
+    tp = (t + bt - 1) // bt * bt
+    xp = jnp.pad(x, ((0, tp - t), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, d), x.dtype),
+        interpret=interpret,
+    )(xp, g.reshape(1, d), b.reshape(1, d))
+    return out[:t]

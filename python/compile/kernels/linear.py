@@ -1,0 +1,162 @@
+"""L1 Pallas kernel: fused tiled ``matmul + bias + activation``.
+
+Every dense layer in the L2 graphs (router MLP, embedder, edge-LM feed
+forward) routes through this kernel, so it is the single compute hot-spot of
+the AOT artifacts.
+
+TPU mapping (see DESIGN.md section "Hardware adaptation"):
+
+* The grid is ``(M/bm, N/bn, K/bk)``; for each ``(i, j)`` output tile an
+  f32 accumulator lives in VMEM scratch and the K-loop streams ``(bm, bk)``
+  / ``(bk, bn)`` operand tiles HBM->VMEM via ``BlockSpec``.  This is the
+  Pallas analogue of the paper's GPU threadblock tiling.
+* Block shapes default to MXU-friendly multiples of 128 when the problem is
+  large enough and shrink to the padded problem size otherwise.
+* The bias add and the activation run inside the final K step on the VMEM
+  accumulator - the epilogue is fused, no extra HBM round trip.
+
+The kernel MUST be lowered with ``interpret=True`` in this environment: the
+CPU PJRT plugin cannot execute Mosaic custom-calls.  ``ref.py`` provides the
+pure-jnp oracle; ``python/tests/test_kernel.py`` sweeps shapes and dtypes
+with hypothesis to pin numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+ACTIVATIONS = ("none", "relu", "gelu", "tanh", "sigmoid")
+
+# MXU-native tile edge; block shapes snap to min(dim, these) and the wrapper
+# pads inputs up to block multiples.
+_DEFAULT_BM = 128
+_DEFAULT_BN = 128
+_DEFAULT_BK = 128
+
+
+def _apply_act(y: jax.Array, act: str) -> jax.Array:
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(y)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _linear_act_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk: int, act: str):
+    """One (bm, bn) output tile; program axis 2 walks the K dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped partial product accumulated in f32 regardless of input dtype.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _apply_act(y, act).astype(o_ref.dtype)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_block(dim: int, default: int) -> int:
+    """Largest power-of-two tile <= default that does not overshoot dim badly."""
+    b = default
+    while b > 8 and b >= 2 * dim:
+        b //= 2
+    return b
+
+
+def linear_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "none",
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    ``x``: (M, K); ``w``: (K, N); ``b``: (N,).  Arbitrary M/K/N - inputs are
+    zero-padded up to block multiples and the result is sliced back.  Zero
+    padding is exact for the matmul and the bias tiles replicate, so padded
+    lanes never leak into the real output.
+    """
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; expected one of {ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    bm = bm or _pick_block(m, _DEFAULT_BM)
+    bn = bn or _pick_block(n, _DEFAULT_BN)
+    bk = bk or _pick_block(k, _DEFAULT_BK)
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_linear_act_kernel, nk=nk, act=act),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (operands + acc + out).
+
+    Used by the perf notes in DESIGN.md/EXPERIMENTS.md to argue the block
+    shapes fit the ~16 MiB TPU VMEM with room for double buffering.
+    """
+    x_tile = bm * bk * dtype_bytes
+    w_tile = bk * bn * dtype_bytes
+    b_tile = bn * dtype_bytes
+    acc = bm * bn * 4
+    out = bm * bn * dtype_bytes
+    # x2 for double buffering of the streamed operands.
+    return 2 * (x_tile + w_tile) + b_tile + acc + out
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    useful = m * n * k
+    issued = mp * np_ * kp
+    return useful / issued

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+the most obvious jnp form.  ``python/tests/test_kernel.py`` asserts
+``assert_allclose(kernel, ref)`` over hypothesis-driven shape/dtype sweeps;
+these functions are the correctness ground truth for L1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_linear_act(x: jax.Array, w: jax.Array, b: jax.Array, *, act: str = "none") -> jax.Array:
+    """Reference for ``linear.linear_act``: act(x @ w + b) in f32 accumulate."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if act == "none":
+        pass
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    elif act == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    return y.astype(x.dtype)
+
+
+def ref_mlp(x: jax.Array, params: list[tuple[jax.Array, jax.Array]], *, hidden_act: str = "gelu",
+            final_act: str = "none") -> jax.Array:
+    """Reference MLP stack: hidden layers with ``hidden_act``, last layer with
+    ``final_act``; mirrors model.mlp_forward."""
+    h = x
+    for li, (w, b) in enumerate(params):
+        act = final_act if li == len(params) - 1 else hidden_act
+        h = ref_linear_act(h, w, b, act=act)
+    return h
+
+
+def ref_layernorm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def ref_causal_attention(x: jax.Array, wq, wk, wv, wo) -> jax.Array:
+    """Single-head causal self-attention reference for the tiny edge LM."""
+    t, d = x.shape
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return (attn @ v) @ wo

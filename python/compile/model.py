@@ -1,0 +1,191 @@
+"""L2: jax compute graphs for the HybridFlow learned components.
+
+Two graphs are AOT-lowered by ``aot.py`` and executed from the rust request
+path via PJRT:
+
+* **Router network** (the paper's Sec. 3.3 utility predictor): a fused
+  embedder + two-hidden-layer MLP head.  Input is the packed subtask feature
+  vector (simparams feature layout) concatenated with the scalar cumulative
+  budget ``C_used(t)`` (Eq. 8); output is ``u_hat in (0,1)`` via a sigmoid.
+  The rust scheduler scores the whole ready frontier in one batched call.
+
+* **Edge LM block** (the simulated on-device executor's compute): a tiny
+  pre-LN transformer decoder block + vocab projection.  The rust edge-model
+  simulator runs it once per decode chunk so that "edge execution" burns
+  real PJRT compute rather than just sleeping.
+
+Every dense layer routes through the L1 Pallas kernel
+(`kernels.linear.linear_act`), so the whole stack lowers into HLO containing
+the kernel's tiled loops.  Router *training* differentiates the pure-jnp
+reference path (the scratch-accumulator kernel has no JVP rule); the tests
+pin kernel/ref parity on the router's exact layer shapes so the exported
+kernel graph computes the same function the ref path was trained on.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import simparams as sp
+from .kernels.layernorm import layernorm
+from .kernels.linear import linear_act
+
+
+# ---------------------------------------------------------------------------
+# Generic MLP built on the Pallas kernel.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, dims: list[int], scale: float = 1.0) -> list[tuple[jax.Array, jax.Array]]:
+    """He-style init for an MLP with layer dims ``dims[0] -> ... -> dims[-1]``."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        fan_in = dims[i]
+        w = jax.random.normal(sub, (dims[i], dims[i + 1]), jnp.float32)
+        w = w * (scale * jnp.sqrt(2.0 / fan_in))
+        b = jnp.zeros((dims[i + 1],), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def mlp_forward(x: jax.Array, params, *, hidden_act: str = "gelu",
+                final_act: str = "none", interpret: bool = True) -> jax.Array:
+    """MLP stack where every layer is the fused Pallas linear kernel."""
+    h = x
+    for li, (w, b) in enumerate(params):
+        act = final_act if li == len(params) - 1 else hidden_act
+        h = linear_act(h, w, b, act=act, interpret=interpret)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Router network (Sec. 3.3 / Eq. 8).
+# ---------------------------------------------------------------------------
+
+class RouterParams(NamedTuple):
+    """Embedder trunk + prediction head; flat list of (w, b) layers."""
+    layers: list
+
+    @property
+    def dims(self) -> list[int]:
+        d = [self.layers[0][0].shape[0]]
+        d += [w.shape[1] for (w, _) in self.layers]
+        return d
+
+
+def init_router(key: jax.Array) -> RouterParams:
+    """in = FEAT_DIM + 1 (C_used); two hidden layers (paper Sec. 4.1)."""
+    dims = [sp.ROUTER_IN_DIM, sp.ROUTER_HIDDEN, sp.ROUTER_HIDDEN, 1]
+    return RouterParams(init_mlp(key, dims))
+
+
+def router_forward(params: RouterParams, feats: jax.Array, c_used: jax.Array,
+                   *, interpret: bool = True) -> jax.Array:
+    """Predicted utility ``u_hat`` for a batch of subtasks.
+
+    feats: (B, FEAT_DIM) packed feature vectors; c_used: (B, 1) cumulative
+    normalized cost at decision time.  Returns (B,) in (0, 1).
+    """
+    x = jnp.concatenate([feats, c_used], axis=1)
+    out = mlp_forward(x, params.layers, hidden_act="gelu", final_act="sigmoid",
+                      interpret=interpret)
+    return out[:, 0]
+
+
+def router_loss(params: RouterParams, feats: jax.Array, c_used: jax.Array,
+                targets: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """MSE regression to profiled utility targets (Eq. 9 / Eq. 26)."""
+    pred = router_forward(params, feats, c_used, interpret=interpret)
+    return jnp.mean((pred - targets) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Tiny edge LM block (simulated on-device executor compute).
+# ---------------------------------------------------------------------------
+
+EDGE_LM_T = 32      # decode chunk length
+EDGE_LM_D = 64      # model width
+EDGE_LM_FF = 128    # feed-forward width
+EDGE_LM_V = 256     # byte-level vocab
+
+
+class EdgeLmParams(NamedTuple):
+    ln1_g: jax.Array
+    ln1_b: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    ln2_g: jax.Array
+    ln2_b: jax.Array
+    ff: list  # [(w1,b1),(w2,b2)] through the Pallas kernel
+    head: tuple  # (w, b) vocab projection through the Pallas kernel
+
+
+def init_edge_lm(key: jax.Array) -> EdgeLmParams:
+    ks = jax.random.split(key, 8)
+    d, f, v = EDGE_LM_D, EDGE_LM_FF, EDGE_LM_V
+    s = 1.0 / jnp.sqrt(d)
+    return EdgeLmParams(
+        ln1_g=jnp.ones((d,)), ln1_b=jnp.zeros((d,)),
+        wq=jax.random.normal(ks[0], (d, d)) * s,
+        wk=jax.random.normal(ks[1], (d, d)) * s,
+        wv=jax.random.normal(ks[2], (d, d)) * s,
+        wo=jax.random.normal(ks[3], (d, d)) * s,
+        ln2_g=jnp.ones((d,)), ln2_b=jnp.zeros((d,)),
+        ff=init_mlp(ks[4], [d, f, d]),
+        head=init_mlp(ks[5], [d, v])[0],
+    )
+
+
+def edge_lm_forward(params: EdgeLmParams, x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Pre-LN decoder block + vocab head over a (T, D) chunk -> (T, V) logits.
+
+    Attention stays in plain jnp (it is small); both LayerNorms, both
+    feed-forward layers, and the vocab projection run through the L1
+    Pallas kernels.
+    """
+    t, d = x.shape
+    h = layernorm(x, params.ln1_g, params.ln1_b, interpret=interpret)
+    q, k, v = h @ params.wq, h @ params.wk, h @ params.wv
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    attn = jax.nn.softmax(jnp.where(mask, scores, -1e30), axis=-1)
+    x = x + (attn @ v) @ params.wo
+    h = layernorm(x, params.ln2_g, params.ln2_b, interpret=interpret)
+    h = mlp_forward(h, params.ff, hidden_act="gelu", final_act="none", interpret=interpret)
+    x = x + h
+    w, b = params.head
+    return linear_act(x, w, b, act="none", interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Bake params into an argument-free-weights callable for AOT lowering.
+# ---------------------------------------------------------------------------
+
+def make_router_fn(params: RouterParams, batch: int):
+    """Returns f(feats[B,F], c_used[B,1]) -> (u_hat[B],) with weights baked
+    as HLO constants - the rust side passes only runtime tensors."""
+    frozen = jax.tree_util.tree_map(jax.lax.stop_gradient, params)
+
+    def fn(feats, c_used):
+        return (router_forward(frozen, feats, c_used),)
+
+    example = (
+        jax.ShapeDtypeStruct((batch, sp.FEAT_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((batch, 1), jnp.float32),
+    )
+    return fn, example
+
+
+def make_edge_lm_fn(params: EdgeLmParams):
+    frozen = jax.tree_util.tree_map(jax.lax.stop_gradient, params)
+
+    def fn(x):
+        return (edge_lm_forward(frozen, x),)
+
+    example = (jax.ShapeDtypeStruct((EDGE_LM_T, EDGE_LM_D), jnp.float32),)
+    return fn, example

@@ -1,0 +1,284 @@
+"""Offline router training (paper Sec. 3.3 "Router Training" / App. C).
+
+Builds the profiling dataset with the reuse-and-recombine generative model
+from ``simparams`` (the python mirror of the rust simulation substrate) and
+regresses the router MLP to the utility targets of Eq. 25 with a hand-rolled
+AdamW (no optax in this environment; lr/weight-decay follow Sec. 4.1).
+
+The paper profiles 2,000 queries from MMLU-Pro + Math500; we mirror that
+split: the profiling domains deliberately differ from the GPQA/AIME24/
+LiveBench test domains so the router must generalize, as in the paper.
+
+Outputs (consumed by ``aot.py`` and the rust fallback predictor):
+
+* trained ``RouterParams``
+* ``artifacts/router_meta.json`` - layer dims + weights + train/val metrics
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import simparams as sp
+from .model import RouterParams, init_router, router_forward, router_loss
+
+# Profiling-time pseudo-benchmark for Math500 (not in the eval set).
+PROFILE_BENCHMARKS = {
+    "mmlu_pro": sp.BENCHMARKS["mmlu_pro"],
+    "math500": {"beta": [5.0, 2.8], "domain": "math", "tok_mult": 1.8,
+                "query_tokens": [4.7, 0.30]},
+}
+
+
+def _sigmoid(x: float) -> float:
+    return 1.0 / (1.0 + math.exp(-x))
+
+
+def _p_solve(model: str, domain: str, d: float) -> float:
+    cap = sp.MODEL_CAPS[model][sp.DOMAINS.index(domain)]
+    return _sigmoid((cap - d) / sp.CAP_TEMP)
+
+
+def _latency(model: str, in_tokens: float, out_tokens: float, rng: np.random.Generator) -> float:
+    tps, prefill, rtt_mu, rtt_sig, _, _ = sp.MODEL_SERVING[model]
+    rtt = 0.0
+    if rtt_mu > 0:
+        rtt = rtt_mu * float(rng.lognormal(0.0, rtt_sig))
+    return rtt + in_tokens / prefill + out_tokens / tps
+
+
+def _api_cost(model: str, in_tokens: float, out_tokens: float) -> float:
+    _, _, _, _, pin, pout = sp.MODEL_SERVING[model]
+    return in_tokens * pin + out_tokens * pout
+
+
+def generate_profile_set(
+    n_queries: int = sp.TRAIN_N_QUERIES,
+    seed: int = sp.TRAIN_SEED,
+    edge_model: str = "llama3.2-3b",
+    cloud_model: str = "gpt-4.1",
+):
+    """Sample (features, c_used, utility-target) triples.
+
+    Follows App. C: per query, decompose; per subtask, paired edge/cloud
+    executions give (dq, dl, dk); Eq. 24 normalizes cost; Eq. 25 gives the
+    target.  Features carry only the *noisy* observations the online router
+    will have, so the regression faces realistic irreducible error.
+    """
+    rng = np.random.default_rng(seed)
+    names = list(PROFILE_BENCHMARKS)
+    feats, c_useds, targets = [], [], []
+
+    for _ in range(n_queries):
+        bench = PROFILE_BENCHMARKS[names[rng.integers(len(names))]]
+        a, b = bench["beta"]
+        d_q = float(rng.beta(a, b))
+        domain = bench["domain"]
+        dom_idx = sp.DOMAINS.index(domain)
+        tok_mult = bench["tok_mult"]
+        q_mu, q_sig = bench["query_tokens"]
+        q_tokens = float(rng.lognormal(q_mu, q_sig))
+
+        n = int(rng.integers(3, sp.NMAX + 1))
+        out_toks = np.zeros(n)
+        # Simple random DAG: node i depends on a subset of earlier nodes.
+        deps: list[list[int]] = [[] for _ in range(n)]
+        for i in range(1, n):
+            k = int(rng.integers(1, min(i, 3) + 1))
+            deps[i] = sorted(rng.choice(i, size=k, replace=False).tolist())
+
+        # Latent per-subtask quantities (shared by the paired executions).
+        roles, d, w, p_e, p_c = [], [], [], [], []
+        for i in range(n):
+            role = "EXPLAIN" if i == 0 else ("GENERATE" if i == n - 1 else "ANALYZE")
+            roles.append(role)
+            phi = float(rng.uniform(sp.PHI_LO, sp.PHI_HI))
+            d_i = min(1.0, d_q * phi)
+            d.append(d_i)
+            pos = i / max(1, n - 1)
+            p_pivotal = sp.CRIT_P * (1.0 - sp.CRIT_POS_DECAY * pos)
+            if role == "GENERATE":
+                w.append(sp.GENERATE_CRIT)
+            elif rng.random() < p_pivotal:
+                w.append(sp.CRIT_BASE + (1 - sp.CRIT_BASE) * float(rng.beta(*sp.CRIT_HIGH_BETA)))
+            else:
+                w.append(sp.CRIT_BASE)
+            p_e.append(_p_solve(edge_model, domain, d_i))
+            p_c.append(_p_solve(cloud_model, domain, d_i))
+            mu, sig = sp.ROLE_TOKENS[role]
+            out_toks[i] = float(rng.lognormal(mu, sig)) * tok_mult
+
+        # Mixed-context pipeline factor: P(rest of the pipeline does not
+        # break) under the profiling policy that averages edge/cloud per
+        # node (App. C's reuse-and-recombine averages over sampled routing
+        # vectors; the per-node average is its expectation).
+        node_ok = [1.0 - w[j] * (1.0 - 0.5 * (p_e[j] + p_c[j])) for j in range(n)]
+        prod_all = 1.0
+        for v in node_ok:
+            prod_all *= v
+
+        c_used = 0.0
+        for i in range(n):
+            role = roles[i]
+            d_i, w_i = d[i], w[i]
+            in_toks = q_tokens + float(sum(out_toks[j] for j in deps[i]))
+            cloud_out = out_toks[i] * sp.CLOUD_VERBOSITY
+
+            # Outcome-based credit (closed form of the paired executions).
+            pipeline = prod_all / max(node_ok[i], 1e-9)
+            dq = (p_c[i] - p_e[i]) * w_i * pipeline
+            dl = max(0.0, _latency(cloud_model, in_toks, cloud_out, rng)
+                     - _latency(edge_model, in_toks, out_toks[i], rng))
+            dk = _api_cost(cloud_model, in_toks, cloud_out)
+
+            c = min(1.0, max(0.0, 0.5 * dl / sp.L_MAX_SUB + 0.5 * dk / sp.K_MAX_SUB))
+            u = min(1.0, max(0.0, dq / (c + sp.EPS_UTILITY)))
+
+            # Packed feature vector (noisy observations only).
+            f = np.zeros(sp.FEAT_DIM, np.float32)
+            f[sp.FEAT_ROLE + sp.ROLES.index(role)] = 1.0
+            f[sp.FEAT_DIFF1] = np.clip(d_i + rng.normal(0, sp.DIFF_NOISE_STD), 0, 1)
+            f[sp.FEAT_DIFF2] = np.clip(d_i + rng.normal(0, sp.DIFF_NOISE_STD), 0, 1)
+            f[sp.FEAT_TOKENS] = out_toks[i] / sp.TOKEN_NORM
+            f[sp.FEAT_DOMAIN + dom_idx] = 1.0
+            f[sp.FEAT_POS] = i / max(1, n - 1)
+            f[sp.FEAT_FANIN] = len(deps[i]) / sp.FAN_NORM
+            fanout = sum(i in dj for dj in deps)
+            f[sp.FEAT_FANOUT] = fanout / sp.FAN_NORM
+            f[sp.FEAT_NSUB] = n / sp.NMAX
+            f[sp.FEAT_SINK] = 1.0 if role == "GENERATE" else 0.0
+            f[sp.FEAT_CRIT] = np.clip(w_i + rng.normal(0, sp.CRIT_NOISE_STD), 0, 1)
+
+            feats.append(f)
+            c_useds.append(c_used)
+            targets.append(u)
+
+            # Roll the budget forward with a random exploration policy so the
+            # C_used input covers its operating range.
+            if rng.random() < 0.4:
+                c_used = min(2.0, c_used + c)
+
+    return (np.stack(feats), np.asarray(c_useds, np.float32)[:, None],
+            np.asarray(targets, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# AdamW (hand-rolled; optax is not installed in this image).
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_step(params, grads, state, lr=sp.TRAIN_LR, b1=0.9, b2=0.999,
+               eps=1e-8, wd=sp.TRAIN_WEIGHT_DECAY):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+
+    def upd(p, m_, v_):
+        return p - lr * (m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + eps) + wd * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_router(
+    epochs: int = sp.TRAIN_EPOCHS,
+    batch: int = sp.TRAIN_BATCH,
+    seed: int = sp.TRAIN_SEED,
+    n_queries: int = sp.TRAIN_N_QUERIES,
+    interpret_kernel: bool = False,
+    verbose: bool = True,
+):
+    """Train and return (params, metrics).
+
+    ``interpret_kernel=False`` trains through the pure-jnp reference path
+    (identical math, much faster under jit); the exported artifact always
+    uses the Pallas kernel graph, and tests assert the two paths agree.
+    """
+    feats, c_used, targets = generate_profile_set(n_queries, seed)
+    n = feats.shape[0]
+    n_val = max(1, n // 10)
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(n)
+    feats, c_used, targets = feats[perm], c_used[perm], targets[perm]
+    fv, cv, tv = feats[:n_val], c_used[:n_val], targets[:n_val]
+    ft, ct, tt = feats[n_val:], c_used[n_val:], targets[n_val:]
+
+    params = init_router(jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+
+    if interpret_kernel:
+        loss_fn = lambda p, f, c, t: router_loss(p, f, c, t, interpret=True)
+        step = jax.value_and_grad(loss_fn)
+    else:
+        from .kernels.ref import ref_mlp
+
+        def loss_fn(p, f, c, t):
+            x = jnp.concatenate([f, c], axis=1)
+            pred = ref_mlp(x, p.layers, hidden_act="gelu", final_act="sigmoid")[:, 0]
+            return jnp.mean((pred - t) ** 2)
+
+        step = jax.jit(jax.value_and_grad(loss_fn))
+
+    n_train = ft.shape[0]
+    steps_per_epoch = max(1, n_train // batch)
+    history = []
+    for ep in range(epochs):
+        ep_perm = rng.permutation(n_train)
+        tot = 0.0
+        for s in range(steps_per_epoch):
+            idx = ep_perm[s * batch:(s + 1) * batch]
+            loss, grads = step(params, ft[idx], ct[idx], tt[idx])
+            params, opt = adamw_step(params, grads, opt)
+            tot += float(loss)
+        history.append(tot / steps_per_epoch)
+        if verbose and (ep % 10 == 0 or ep == epochs - 1):
+            print(f"[train_router] epoch {ep:3d} train_mse={history[-1]:.5f}")
+
+    # Validation metrics through the *kernel* path (the artifact graph).
+    pred_val = np.asarray(router_forward(params, jnp.asarray(fv), jnp.asarray(cv),
+                                         interpret=True))
+    val_mse = float(np.mean((pred_val - tv) ** 2))
+    ss_res = float(np.sum((pred_val - tv) ** 2))
+    ss_tot = float(np.sum((tv - tv.mean()) ** 2)) + 1e-12
+    r2 = 1.0 - ss_res / ss_tot
+    metrics = {"train_mse": history, "val_mse": val_mse, "val_r2": r2,
+               "n_samples": int(n), "target_mean": float(targets.mean())}
+    if verbose:
+        print(f"[train_router] val_mse={val_mse:.5f} val_r2={r2:.3f} n={n}")
+    return params, metrics
+
+
+def export_router_meta(params: RouterParams, metrics: dict, path: str) -> None:
+    """Dump dims + weights + metrics as JSON for the rust fallback mirror."""
+    layers = []
+    for (w, b) in params.layers:
+        layers.append({
+            "w": np.asarray(w).astype(float).round(7).tolist(),
+            "b": np.asarray(b).astype(float).round(7).tolist(),
+        })
+    meta = {
+        "dims": params.dims,
+        "hidden_act": "gelu",
+        "final_act": "sigmoid",
+        "feat_dim": sp.FEAT_DIM,
+        "layers": layers,
+        "metrics": {k: v for k, v in metrics.items() if k != "train_mse"},
+    }
+    with open(path, "w") as f:
+        json.dump(meta, f)
+
+
+if __name__ == "__main__":
+    p, m = train_router()
+    export_router_meta(p, m, "/tmp/router_meta.json")

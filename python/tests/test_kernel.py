@@ -1,0 +1,210 @@
+"""L1 correctness: Pallas ``linear_act`` vs the pure-jnp oracle.
+
+This is the core numeric signal for the kernel layer.  Hypothesis sweeps
+shapes, dtypes, activations, and block configurations; every case asserts
+allclose against ``ref.ref_linear_act``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.linear import (
+    ACTIVATIONS,
+    linear_act,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.layernorm import layernorm
+from compile.kernels.ref import ref_causal_attention, ref_layernorm, ref_linear_act, ref_mlp
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_linear_act_matches_ref_basic(act):
+    k = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(k, 3)
+    x = _rand(k1, (16, 32))
+    w = _rand(k2, (32, 48))
+    b = _rand(k3, (48,))
+    got = linear_act(x, w, b, act=act)
+    want = ref_linear_act(x, w, b, act=act)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_act_shape_sweep(m, k, n, act, seed):
+    """Arbitrary (ragged) shapes exercise the padding path."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = _rand(k1, (m, k))
+    w = _rand(k2, (k, n))
+    b = _rand(k3, (n,))
+    got = linear_act(x, w, b, act=act)
+    assert got.shape == (m, n)
+    want = ref_linear_act(x, w, b, act=act)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_act_block_config_sweep(bm, bn, bk, seed):
+    """Result must be invariant to the chosen block decomposition."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = _rand(k1, (24, 40))
+    w = _rand(k2, (40, 24))
+    b = _rand(k3, (24,))
+    got = linear_act(x, w, b, act="gelu", bm=bm, bn=bn, bk=bk)
+    want = ref_linear_act(x, w, b, act="gelu")
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_act_dtypes(dtype):
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = _rand(k1, (8, 16), dtype)
+    w = _rand(k2, (16, 8), dtype)
+    b = _rand(k3, (8,), dtype)
+    got = linear_act(x, w, b, act="none")
+    want = ref_linear_act(x, w, b, act="none")
+    assert got.dtype == dtype
+    tol = TOL if dtype == jnp.float32 else BF16_TOL
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol
+    )
+
+
+def test_linear_act_zero_and_identity():
+    # act(0 @ w + b) == act(b) broadcast over rows.
+    w = jnp.ones((4, 6))
+    b = jnp.arange(6, dtype=jnp.float32)
+    x = jnp.zeros((3, 4))
+    got = linear_act(x, w, b, act="relu")
+    np.testing.assert_allclose(got, jnp.broadcast_to(jnp.maximum(b, 0), (3, 6)), **TOL)
+    # Identity weight reproduces x + b.
+    eye = jnp.eye(5)
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 5))
+    got = linear_act(x, eye, jnp.zeros(5), act="none")
+    np.testing.assert_allclose(got, x, **TOL)
+
+
+def test_linear_act_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))  # K mismatch
+    b = jnp.zeros((7,))
+    with pytest.raises(ValueError):
+        linear_act(x, w, b)
+    with pytest.raises(ValueError):
+        linear_act(x, jnp.zeros((5, 7)), jnp.zeros((3,)))
+    with pytest.raises(ValueError):
+        linear_act(x, jnp.zeros((5, 7)), b, act="swish")
+
+
+def test_kernel_matches_ref_on_training_shapes():
+    """Training runs on the ref path and the artifact on the kernel path;
+    the two must agree bitwise-closely on the router's exact layer shapes
+    (17->64, 64->64, 64->1) so swapping paths cannot shift predictions."""
+    key = jax.random.PRNGKey(9)
+    for (m, k, n) in [(256, 17, 64), (256, 64, 64), (256, 64, 1)]:
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        x = _rand(k1, (m, k))
+        w = _rand(k2, (k, n))
+        b = _rand(k3, (n,))
+        for act in ("gelu", "sigmoid"):
+            np.testing.assert_allclose(
+                linear_act(x, w, b, act=act),
+                ref_linear_act(x, w, b, act=act), **TOL)
+
+
+def test_ref_mlp_composes():
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    p = [(_rand(ks[0], (8, 16)), _rand(ks[1], (16,))),
+         (_rand(ks[2], (16, 2)), _rand(ks[3], (2,)))]
+    x = _rand(key, (5, 8))
+    out = ref_mlp(x, p, hidden_act="gelu", final_act="sigmoid")
+    assert out.shape == (5, 2)
+    assert bool(jnp.all(out >= 0)) and bool(jnp.all(out <= 1))
+
+
+def test_ref_causal_attention_is_causal():
+    """Changing a future token must not affect earlier outputs."""
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    d = 8
+    x = _rand(ks[0], (6, d))
+    mats = [_rand(k, (d, d)) for k in ks[1:5]]
+    out1 = ref_causal_attention(x, *mats)
+    x2 = x.at[5].set(x[5] + 100.0)
+    out2 = ref_causal_attention(x2, *mats)
+    np.testing.assert_allclose(out1[:5], out2[:5], rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_and_mxu_estimates():
+    # 128^3 block: operands double-buffered + f32 acc must fit well under 16 MiB.
+    fp = vmem_footprint_bytes(128, 128, 128)
+    assert fp < 2 * 1024 * 1024
+    # Aligned problem -> perfect utilization; ragged problem -> less.
+    assert mxu_utilization_estimate(256, 256, 256, 128, 128, 128) == 1.0
+    u = mxu_utilization_estimate(130, 130, 130, 128, 128, 128)
+    assert 0.0 < u < 0.2
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm kernel.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    d=st.integers(2, 96),
+    bt=st.sampled_from([1, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_shape_sweep(t, d, bt, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = _rand(k1, (t, d))
+    g = _rand(k2, (d,)) + 1.0
+    b = _rand(k3, (d,))
+    got = layernorm(x, g, b, bt=bt)
+    assert got.shape == (t, d)
+    want = ref_layernorm(x, g, b)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_layernorm_normalizes():
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 64)) * 7.0 + 3.0
+    out = layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(jnp.mean(out, axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(out, axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        layernorm(jnp.zeros((4, 8)), jnp.zeros(7), jnp.zeros(8))
+    with pytest.raises(ValueError):
+        layernorm(jnp.zeros(8), jnp.zeros(8), jnp.zeros(8))

@@ -1,0 +1,121 @@
+"""L2 tests: router network + edge LM shapes, ranges, and kernel/ref parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import simparams as sp
+from compile.kernels.ref import ref_mlp
+from compile.model import (
+    EDGE_LM_D,
+    EDGE_LM_T,
+    EDGE_LM_V,
+    edge_lm_forward,
+    init_edge_lm,
+    init_mlp,
+    init_router,
+    make_edge_lm_fn,
+    make_router_fn,
+    mlp_forward,
+    router_forward,
+    router_loss,
+)
+
+
+def test_router_dims_match_simparams():
+    p = init_router(jax.random.PRNGKey(0))
+    assert p.dims == [sp.ROUTER_IN_DIM, sp.ROUTER_HIDDEN, sp.ROUTER_HIDDEN, 1]
+
+
+def test_router_forward_shape_and_range():
+    p = init_router(jax.random.PRNGKey(0))
+    f = jax.random.uniform(jax.random.PRNGKey(1), (5, sp.FEAT_DIM))
+    c = jnp.zeros((5, 1))
+    u = router_forward(p, f, c)
+    assert u.shape == (5,)
+    assert bool(jnp.all(u > 0)) and bool(jnp.all(u < 1))
+
+
+def test_router_kernel_path_matches_ref_path():
+    """The AOT artifact graph (Pallas) must agree with the training graph (ref)."""
+    p = init_router(jax.random.PRNGKey(2))
+    f = jax.random.uniform(jax.random.PRNGKey(3), (9, sp.FEAT_DIM))
+    c = jax.random.uniform(jax.random.PRNGKey(4), (9, 1))
+    kern = router_forward(p, f, c, interpret=True)
+    x = jnp.concatenate([f, c], axis=1)
+    ref = ref_mlp(x, p.layers, hidden_act="gelu", final_act="sigmoid")[:, 0]
+    np.testing.assert_allclose(kern, ref, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(1, 16), seed=st.integers(0, 1000))
+def test_router_batch_invariance(batch, seed):
+    """Scoring a batch must equal scoring each row alone (no cross-talk)."""
+    p = init_router(jax.random.PRNGKey(42))
+    f = jax.random.uniform(jax.random.PRNGKey(seed), (batch, sp.FEAT_DIM))
+    c = jax.random.uniform(jax.random.PRNGKey(seed + 1), (batch, 1))
+    full = router_forward(p, f, c)
+    rows = jnp.concatenate([router_forward(p, f[i:i + 1], c[i:i + 1]) for i in range(batch)])
+    np.testing.assert_allclose(full, rows, rtol=3e-5, atol=3e-5)
+
+
+def test_router_loss_decreases_with_grad_step():
+    """Gradients flow through the training (ref) path; the kernel-path loss
+    must drop by the same step, confirming path interchangeability."""
+    p = init_router(jax.random.PRNGKey(5))
+    f = jax.random.uniform(jax.random.PRNGKey(6), (64, sp.FEAT_DIM))
+    c = jnp.zeros((64, 1))
+    t = jax.random.uniform(jax.random.PRNGKey(7), (64,))
+
+    def ref_loss(p):
+        x = jnp.concatenate([f, c], axis=1)
+        pred = ref_mlp(x, p.layers, hidden_act="gelu", final_act="sigmoid")[:, 0]
+        return jnp.mean((pred - t) ** 2)
+
+    loss0, grads = jax.value_and_grad(ref_loss)(p)
+    p2 = jax.tree_util.tree_map(lambda x, g: x - 0.5 * g, p, grads)
+    assert float(ref_loss(p2)) < float(loss0)
+    # Kernel-path (artifact) loss agrees before and after the step.
+    np.testing.assert_allclose(float(router_loss(p, f, c, t)), float(loss0), rtol=1e-4)
+    np.testing.assert_allclose(float(router_loss(p2, f, c, t)), float(ref_loss(p2)), rtol=1e-4)
+
+
+def test_mlp_forward_matches_ref():
+    key = jax.random.PRNGKey(8)
+    params = init_mlp(key, [12, 20, 3])
+    x = jax.random.normal(jax.random.PRNGKey(9), (7, 12))
+    got = mlp_forward(x, params, hidden_act="relu", final_act="tanh")
+    want = ref_mlp(x, params, hidden_act="relu", final_act="tanh")
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_edge_lm_shapes():
+    p = init_edge_lm(jax.random.PRNGKey(10))
+    x = jax.random.normal(jax.random.PRNGKey(11), (EDGE_LM_T, EDGE_LM_D))
+    logits = edge_lm_forward(p, x)
+    assert logits.shape == (EDGE_LM_T, EDGE_LM_V)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_edge_lm_causality():
+    """Future tokens must not influence past logits."""
+    p = init_edge_lm(jax.random.PRNGKey(12))
+    x = jax.random.normal(jax.random.PRNGKey(13), (EDGE_LM_T, EDGE_LM_D))
+    l1 = edge_lm_forward(p, x)
+    x2 = x.at[-1].set(x[-1] * 3.0 + 1.0)
+    l2 = edge_lm_forward(p, x2)
+    np.testing.assert_allclose(l1[:-1], l2[:-1], rtol=1e-4, atol=1e-4)
+
+
+def test_make_fns_are_lowerable():
+    """jit(...).lower must succeed on the exact example shapes used by aot.py."""
+    p = init_router(jax.random.PRNGKey(14))
+    fn, example = make_router_fn(p, 4)
+    lowered = jax.jit(fn).lower(*example)
+    assert "func" in str(lowered.compiler_ir("stablehlo"))
+
+    lm = init_edge_lm(jax.random.PRNGKey(15))
+    fn2, example2 = make_edge_lm_fn(lm)
+    lowered2 = jax.jit(fn2).lower(*example2)
+    assert "func" in str(lowered2.compiler_ir("stablehlo"))

@@ -1,0 +1,88 @@
+"""Router training tests: profiling-set statistics + convergence + export."""
+
+import json
+
+import numpy as np
+
+from compile import simparams as sp
+from compile.train_router import (
+    adamw_init,
+    adamw_step,
+    export_router_meta,
+    generate_profile_set,
+    train_router,
+)
+
+
+def test_profile_set_shapes_and_ranges():
+    feats, c_used, targets = generate_profile_set(n_queries=50, seed=1)
+    n = feats.shape[0]
+    assert feats.shape == (n, sp.FEAT_DIM)
+    assert c_used.shape == (n, 1)
+    assert targets.shape == (n,)
+    assert 50 * 3 <= n <= 50 * sp.NMAX
+    assert np.all(targets >= 0) and np.all(targets <= 1)
+    assert np.all(c_used >= 0)
+    # role one-hot is exactly one-hot
+    roles = feats[:, sp.FEAT_ROLE:sp.FEAT_ROLE + 3]
+    np.testing.assert_allclose(roles.sum(axis=1), 1.0)
+    doms = feats[:, sp.FEAT_DOMAIN:sp.FEAT_DOMAIN + 4]
+    np.testing.assert_allclose(doms.sum(axis=1), 1.0)
+
+
+def test_profile_set_is_deterministic():
+    a = generate_profile_set(n_queries=20, seed=7)
+    b = generate_profile_set(n_queries=20, seed=7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_profile_set_utility_signal_exists():
+    """Targets must carry learnable structure: utility peaks at mid
+    difficulty (easy -> edge suffices, very hard -> cloud fails too) and
+    rises with the criticality hint."""
+    feats, _, targets = generate_profile_set(n_queries=300, seed=3)
+    d = feats[:, sp.FEAT_DIFF1]
+    mid = targets[(d > 0.3) & (d < 0.55)].mean()
+    very_hard = targets[d > 0.65].mean()
+    assert mid > very_hard + 0.05
+    crit = feats[:, sp.FEAT_CRIT]
+    assert targets[crit > 0.5].mean() > targets[crit < 0.3].mean() + 0.05
+    # Targets are spread, not saturated.
+    assert 0.15 < targets.std()
+    assert (targets == 1.0).mean() < 0.5
+
+
+def test_adamw_reduces_quadratic():
+    import jax.numpy as jnp
+    import jax
+
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(p)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(p))
+    for _ in range(200):
+        g = jax.grad(loss)(p)
+        p, opt = adamw_step(p, g, opt, lr=5e-2, wd=0.0)
+    assert float(loss(p)) < l0 * 0.01
+
+
+def test_train_router_converges_fast_config():
+    params, metrics = train_router(epochs=25, n_queries=200, seed=11, verbose=False)
+    mse = metrics["train_mse"]
+    assert mse[-1] < mse[0]
+    assert metrics["val_r2"] > 0.1  # clearly better than predicting the mean
+    assert metrics["val_mse"] < 0.1
+
+
+def test_export_router_meta_roundtrip(tmp_path):
+    params, metrics = train_router(epochs=2, n_queries=60, seed=13, verbose=False)
+    path = tmp_path / "router_meta.json"
+    export_router_meta(params, metrics, str(path))
+    meta = json.loads(path.read_text())
+    assert meta["dims"] == [sp.ROUTER_IN_DIM, sp.ROUTER_HIDDEN, sp.ROUTER_HIDDEN, 1]
+    assert len(meta["layers"]) == 3
+    w0 = np.asarray(meta["layers"][0]["w"])
+    assert w0.shape == (sp.ROUTER_IN_DIM, sp.ROUTER_HIDDEN)
+    # Weights must round-trip close to the trained params.
+    np.testing.assert_allclose(w0, np.asarray(params.layers[0][0]), atol=1e-6)

@@ -1,0 +1,12 @@
+//! Extension bench: design-choice ablations (workers, concurrency, n_max)
+
+fn main() {
+    let ctx = hybridflow::eval::ExpContext::from_bench_env();
+    match hybridflow::eval::run_experiment("ablations", &ctx) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

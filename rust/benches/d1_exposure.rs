@@ -1,0 +1,12 @@
+//! Extension bench: App. D.1 cloud-exposure proxy (Eqs. 29-31)
+
+fn main() {
+    let ctx = hybridflow::eval::ExpContext::from_bench_env();
+    match hybridflow::eval::run_experiment("d1_exposure", &ctx) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

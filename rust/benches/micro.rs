@@ -1,0 +1,222 @@
+//! Micro-benchmarks of the coordinator hot paths (§Perf baseline/after
+//! numbers in EXPERIMENTS.md):
+//!
+//! * router utility prediction — rust mirror vs PJRT artifact, per batch
+//!   size (the batched-frontier story);
+//! * DAG operations (topo, critical path, validate, repair);
+//! * XML plan parse;
+//! * full per-query pipeline (plan -> route -> schedule);
+//! * knapsack oracle variants;
+//! * substrate primitives (json parse/serialize, rng).
+//!
+//! Budget per case via BENCH_BUDGET_S (default 1.0s).
+
+use hybridflow::bench::Bench;
+use hybridflow::config::simparams::{SimParams, FEAT_DIM};
+use hybridflow::dag::{parse_plan, validate, validate_and_repair, Role, Subtask, TaskDag};
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::SyntheticPlanner;
+use hybridflow::planner::Planner;
+use hybridflow::router::predictor::UtilityPredictor;
+use hybridflow::router::{knapsack, MirrorPredictor, RoutePolicy};
+use hybridflow::runtime::RouterService;
+use hybridflow::util::json::Json;
+use hybridflow::util::rng::Rng;
+use hybridflow::workload::{generate_queries, Benchmark};
+use std::hint::black_box;
+use std::sync::Arc;
+
+fn rand_feats(n: usize, rng: &mut Rng) -> Vec<[f32; FEAT_DIM]> {
+    (0..n)
+        .map(|_| {
+            let mut f = [0.0f32; FEAT_DIM];
+            for v in f.iter_mut() {
+                *v = rng.f64() as f32;
+            }
+            f
+        })
+        .collect()
+}
+
+fn main() {
+    let artifacts = hybridflow::config::default_artifacts_dir();
+    let mut rng = Rng::new(0xBEEF);
+
+    // ---------------- router prediction ----------------
+    let mut b = Bench::new("router utility prediction");
+    b.header();
+    let mirror = MirrorPredictor::from_meta_file(&artifacts.join("router_meta.json"))
+        .expect("run `make artifacts` first");
+    for &n in &[1usize, 8, 32] {
+        let feats = rand_feats(n, &mut rng);
+        b.bench(&format!("mirror predict (batch {n})"), || {
+            black_box(mirror.predict(black_box(&feats), 0.3));
+        });
+    }
+    match RouterService::start(&artifacts) {
+        Ok(svc) => {
+            for &n in &[1usize, 8, 32] {
+                let feats = rand_feats(n, &mut rng);
+                b.bench(&format!("pjrt score (batch {n})"), || {
+                    black_box(svc.score(black_box(&feats), 0.3).unwrap());
+                });
+            }
+            b.bench("pjrt edge_lm burn (1 chunk)", || {
+                black_box(svc.edge_burn(1).unwrap());
+            });
+        }
+        Err(e) => eprintln!("(skipping PJRT benches: {e})"),
+    }
+    // Engine-direct (no service channel): isolates channel round-trip cost.
+    if let Ok(engine) = hybridflow::runtime::PjrtEngine::load(&artifacts) {
+        for &n in &[1usize, 32] {
+            let feats = rand_feats(n, &mut rng);
+            b.bench(&format!("pjrt engine-direct (batch {n})"), || {
+                black_box(engine.score(black_box(&feats), 0.3).unwrap());
+            });
+        }
+    }
+
+    // ---------------- DAG ops ----------------
+    let mut b = Bench::new("dag operations");
+    b.header();
+    let dag = TaskDag::new(vec![
+        Subtask::new(0, Role::Explain, "root", vec![]),
+        Subtask::new(1, Role::Analyze, "a", vec![0]),
+        Subtask::new(2, Role::Analyze, "b", vec![0]),
+        Subtask::new(3, Role::Analyze, "c", vec![1]),
+        Subtask::new(4, Role::Analyze, "d", vec![0, 2]),
+        Subtask::new(5, Role::Analyze, "e", vec![3]),
+        Subtask::new(6, Role::Generate, "g", vec![4, 5]),
+    ]);
+    b.bench("topo_order (7 nodes)", || {
+        black_box(dag.topo_order());
+    });
+    b.bench("critical_path + R_comp", || {
+        black_box(dag.critical_path_len());
+        black_box(dag.compression_ratio());
+    });
+    b.bench("validate (valid plan)", || {
+        black_box(validate(&dag, 7).is_valid());
+    });
+    let mut broken = dag.clone();
+    broken.nodes[2].deps = vec![0, 6];
+    broken.nodes[2].edge_conf = vec![1.0, 0.2];
+    b.bench("validate_and_repair (cyclic plan)", || {
+        black_box(validate_and_repair(black_box(&broken), 7));
+    });
+    let xml = hybridflow::dag::emit_plan(&dag);
+    b.bench("xml parse_plan (7 steps)", || {
+        black_box(parse_plan(black_box(&xml)).unwrap());
+    });
+
+    // ---------------- planner + pipeline ----------------
+    let mut b = Bench::new("pipeline");
+    b.header();
+    let sp = SimParams::default();
+    let planner = SyntheticPlanner::paper_main();
+    let queries = generate_queries(Benchmark::Gpqa, 64, 3);
+    let mut prng = Rng::new(17);
+    let mut qi = 0usize;
+    b.bench("planner plan (text+parse+repair)", || {
+        let q = &queries[qi % queries.len()];
+        qi += 1;
+        black_box(planner.plan(q, 7, &mut prng));
+    });
+    let pipeline = HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        Arc::new(mirror.clone()),
+        PipelineConfig::paper_default(&sp),
+    );
+    let mut qrng = Rng::new(23);
+    let mut qj = 0usize;
+    b.bench("full query (plan+route+schedule)", || {
+        let q = &queries[qj % queries.len()];
+        qj += 1;
+        black_box(pipeline.run_query(q, &mut qrng));
+    });
+    let mut cfg2 = PipelineConfig::paper_default(&sp);
+    cfg2.policy = RoutePolicy::AllEdge;
+    let pipeline_edge = HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        Arc::new(mirror.clone()),
+        cfg2,
+    );
+    let mut qk = 0usize;
+    b.bench("full query (no routing, AllEdge)", || {
+        let q = &queries[qk % queries.len()];
+        qk += 1;
+        black_box(pipeline_edge.run_query(q, &mut qrng));
+    });
+
+    // ---------------- PJRT on the pipeline hot path ----------------
+    // The batched-frontier optimization: score all same-instant ready
+    // nodes in one PJRT call vs one call per decision.
+    if let Ok(svc) = RouterService::start(&artifacts) {
+        let mut b = Bench::new("pipeline over PJRT (frontier batching)");
+        b.header();
+        let svc = Arc::new(svc);
+        for (label, batch) in [("batched frontier", true), ("per-decision calls", false)] {
+            let mut cfg = PipelineConfig::paper_default(&sp);
+            cfg.schedule.batch_frontier = batch;
+            let p = HybridFlowPipeline::with_predictor(
+                SimExecutor::paper_pair(),
+                SyntheticPlanner::paper_main(),
+                Arc::clone(&svc) as Arc<dyn hybridflow::router::predictor::UtilityPredictor>,
+                cfg,
+            );
+            let mut r = Rng::new(31);
+            let mut qi = 0usize;
+            b.bench(&format!("full query via pjrt ({label})"), || {
+                let q = &queries[qi % queries.len()];
+                qi += 1;
+                black_box(p.run_query(q, &mut r));
+            });
+        }
+    }
+
+    // ---------------- knapsack ----------------
+    let mut b = Bench::new("knapsack oracle");
+    b.header();
+    let mut krng = Rng::new(5);
+    let v: Vec<f64> = (0..7).map(|_| krng.f64()).collect();
+    let w: Vec<f64> = (0..7).map(|_| krng.uniform(0.05, 0.3)).collect();
+    b.bench("exact 2^7 enumeration", || {
+        black_box(knapsack::solve_exact(black_box(&v), black_box(&w), 0.5));
+    });
+    let v100: Vec<f64> = (0..100).map(|_| krng.f64()).collect();
+    let w100: Vec<f64> = (0..100).map(|_| krng.uniform(0.01, 0.1)).collect();
+    b.bench("dp n=100 (1e-3 grid)", || {
+        black_box(knapsack::solve_dp(black_box(&v100), black_box(&w100), 1.0, 1e-3));
+    });
+    b.bench("greedy ratio n=100", || {
+        black_box(knapsack::solve_greedy_ratio(black_box(&v100), black_box(&w100), 1.0));
+    });
+
+    // ---------------- substrates ----------------
+    let mut b = Bench::new("substrates");
+    b.header();
+    let json_text = Json::obj(vec![
+        ("values", Json::from_f64_slice(&(0..64).map(|i| i as f64 * 0.5).collect::<Vec<_>>())),
+        ("name", Json::Str("hybridflow".into())),
+        ("nested", Json::obj(vec![("k", Json::Num(1.0)), ("s", Json::Str("x \"y\"".into()))])),
+    ])
+    .to_string();
+    b.bench("json parse (compact record)", || {
+        black_box(Json::parse(black_box(&json_text)).unwrap());
+    });
+    let parsed = Json::parse(&json_text).unwrap();
+    b.bench("json serialize", || {
+        black_box(parsed.to_string());
+    });
+    let mut r = Rng::new(1);
+    b.bench("rng normal", || {
+        black_box(r.normal());
+    });
+    b.bench("rng beta(8,2)", || {
+        black_box(r.beta(8.0, 2.0));
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench target regenerating the paper's Table 8 on the simulation
+//! substrate (see DESIGN.md per-experiment index and EXPERIMENTS.md for
+//! paper-vs-measured). Scale via env: BENCH_SCALE (default 1.0 = paper
+//! sizes), BENCH_SEEDS (default 3).
+
+fn main() {
+    let ctx = hybridflow::eval::ExpContext::from_bench_env();
+    let t0 = std::time::Instant::now();
+    match hybridflow::eval::run_experiment("table8", &ctx) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!("[bench table8] {:.1}s (scale {}, {} seeds)",
+             t0.elapsed().as_secs_f64(), ctx.scale, ctx.seeds.len());
+}

@@ -1,0 +1,113 @@
+//! HybridLLM baseline (Ding et al., 2024): **query-level** routing — a
+//! small difficulty estimator gates the *whole query* to either the edge or
+//! the cloud model, which then answers with CoT.
+//!
+//! This is the coarse-granularity straw the paper argues against: no
+//! decomposition means no parallelism, and the all-or-nothing decision
+//! wastes cloud budget on queries where only one step is hard.
+
+use super::{sample_chain_len, Cot, Method};
+use crate::metrics::QueryOutcome;
+use crate::models::SimExecutor;
+use crate::util::rng::Rng;
+use crate::workload::{direct_latent, Query};
+
+pub struct HybridLlm {
+    pub executor: SimExecutor,
+    /// Route to cloud when the estimated difficulty exceeds this.
+    pub threshold: f64,
+    /// Noise of the difficulty estimator.
+    pub estimator_noise: f64,
+    /// Router forward latency (BERT-scale encoder on the edge GPU).
+    pub router_overhead: f64,
+}
+
+impl HybridLlm {
+    pub fn paper_default(executor: SimExecutor) -> HybridLlm {
+        HybridLlm { executor, threshold: 0.58, estimator_noise: 0.10, router_overhead: 0.08 }
+    }
+}
+
+impl Method for HybridLlm {
+    fn name(&self) -> &str {
+        "HybridLLM"
+    }
+
+    fn model_label(&self) -> String {
+        format!(
+            "{}&{}",
+            self.executor.edge.kind.label(),
+            self.executor.cloud.kind.label()
+        )
+    }
+
+    fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
+        let d_hat = (query.difficulty + rng.normal_ms(0.0, self.estimator_noise)).clamp(0.0, 1.0);
+        let cloud = d_hat > self.threshold;
+
+        // Chosen model answers with CoT (cost/latency = one inflated call).
+        let latent = direct_latent(query, &self.executor.sp, cloud, true, rng);
+        let rec = self.executor.execute_direct(
+            query.domain,
+            &latent,
+            query.query_tokens,
+            cloud,
+            rng,
+        );
+        let n = sample_chain_len(rng);
+        let correct = Cot::chain_correct(&self.executor, query, cloud, n, rng);
+
+        QueryOutcome {
+            correct,
+            latency: self.router_overhead + rec.latency,
+            api_cost: rec.api_cost,
+            offload_rate: if cloud { 1.0 } else { 0.0 },
+            n_subtasks: n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_queries, Benchmark};
+
+    fn stats(bench: Benchmark, n: usize, seed: u64) -> (f64, f64, f64) {
+        let m = HybridLlm::paper_default(SimExecutor::paper_pair());
+        let mut rng = Rng::new(seed);
+        let qs = generate_queries(bench, n, seed);
+        let outs: Vec<_> = qs.iter().map(|q| m.run(q, &mut rng)).collect();
+        let acc = outs.iter().filter(|o| o.correct).count() as f64 / n as f64 * 100.0;
+        let api = outs.iter().map(|o| o.api_cost).sum::<f64>() / n as f64;
+        let off = outs.iter().map(|o| o.offload_rate).sum::<f64>() / n as f64;
+        (acc, api, off)
+    }
+
+    #[test]
+    fn routes_hard_benchmarks_to_cloud() {
+        let (_, _, off_gpqa) = stats(Benchmark::Gpqa, 400, 0);
+        let (_, _, off_mmlu) = stats(Benchmark::MmluPro, 400, 0);
+        // GPQA queries are mostly above the threshold; MMLU-Pro mostly not.
+        assert!(off_gpqa > 0.6, "gpqa offload {off_gpqa}");
+        assert!(off_mmlu < off_gpqa - 0.2, "mmlu {off_mmlu} vs gpqa {off_gpqa}");
+    }
+
+    #[test]
+    fn accuracy_between_edge_and_cloud_cot() {
+        // Paper Table 1 GPQA: HybridLLM 52.9, between CoT L3B 25.5 and CoT
+        // G4.1 57.3 (closer to cloud since most GPQA goes to cloud).
+        let (acc, api, _) = stats(Benchmark::Gpqa, 800, 1);
+        assert!((40.0..=62.0).contains(&acc), "acc {acc}");
+        assert!(api > 0.0);
+    }
+
+    #[test]
+    fn no_parallelism_means_high_latency() {
+        let m = HybridLlm::paper_default(SimExecutor::paper_pair());
+        let mut rng = Rng::new(2);
+        let qs = generate_queries(Benchmark::Aime24, 200, 2);
+        let lat = qs.iter().map(|q| m.run(q, &mut rng).latency).sum::<f64>() / 200.0;
+        // Paper Table 2 AIME24: HybridLLM 40.11s — the worst hybrid.
+        assert!(lat > 15.0, "latency {lat}");
+    }
+}

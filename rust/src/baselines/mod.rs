@@ -1,0 +1,100 @@
+//! Comparison pipelines (Tables 1–2): single-model prompting methods
+//! (Direct, CoT, SoT, PASTA) and edge-cloud collaborative baselines
+//! (HybridLLM, DoT), all running over the same simulation substrate as
+//! HybridFlow so the comparison isolates *coordination* differences.
+//!
+//! Method-shape summary (how each maps onto the substrate):
+//!
+//! | Method    | Decomposition        | Dependency handling | Routing          |
+//! |-----------|----------------------|---------------------|------------------|
+//! | Direct    | none                 | —                   | fixed model      |
+//! | CoT       | latent chain         | sequential          | fixed model      |
+//! | SoT       | skeleton + branches  | ignored (penalty)   | fixed model      |
+//! | PASTA     | flat async branches  | ignored (penalty)   | fixed model      |
+//! | HybridLLM | none (query-level)   | —                   | difficulty gate  |
+//! | DoT       | planner DAG as chain | sequential          | per-subtask gate |
+//! | HybridFlow| planner DAG          | DAG-parallel        | learned utility  |
+
+pub mod cot;
+pub mod direct;
+pub mod dot;
+pub mod hybrid_llm;
+pub mod sot_pasta;
+
+use crate::metrics::QueryOutcome;
+use crate::util::rng::Rng;
+use crate::workload::Query;
+
+/// A runnable evaluation method.
+pub trait Method: Send + Sync {
+    /// Row label ("CoT", "HybridFlow", ...).
+    fn name(&self) -> &str;
+    /// Model column ("L3B", "G4.1", "L3B&G4.1").
+    fn model_label(&self) -> String;
+    fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome;
+}
+
+pub use cot::Cot;
+pub use direct::Direct;
+pub use dot::Dot;
+pub use hybrid_llm::HybridLlm;
+pub use sot_pasta::{Pasta, Sot};
+
+/// Chain length distribution shared by the latent-decomposition methods
+/// (CoT's implicit steps, matching the planner's 3–6 node plans).
+pub(crate) fn sample_chain_len(rng: &mut Rng) -> usize {
+    rng.int_range(3, 7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::SimExecutor;
+    use crate::workload::{generate_queries, Benchmark};
+
+    /// Every method must run on every benchmark without panicking and
+    /// produce sane outcome fields.
+    #[test]
+    fn all_methods_run_everywhere() {
+        let methods: Vec<Box<dyn Method>> = vec![
+            Box::new(Direct::new(SimExecutor::paper_pair(), true)),
+            Box::new(Direct::new(SimExecutor::paper_pair(), false)),
+            Box::new(Cot::new(SimExecutor::paper_pair(), true)),
+            Box::new(Cot::new(SimExecutor::paper_pair(), false)),
+            Box::new(Sot::new(SimExecutor::paper_pair(), true)),
+            Box::new(Sot::new(SimExecutor::paper_pair(), false)),
+            Box::new(Pasta::new(SimExecutor::paper_pair(), true)),
+            Box::new(Pasta::new(SimExecutor::paper_pair(), false)),
+            Box::new(HybridLlm::paper_default(SimExecutor::paper_pair())),
+            Box::new(Dot::paper_default(SimExecutor::paper_pair())),
+        ];
+        let mut rng = Rng::new(0);
+        for bench in Benchmark::ALL {
+            for q in generate_queries(bench, 5, 1) {
+                for m in &methods {
+                    let o = m.run(&q, &mut rng);
+                    assert!(o.latency > 0.0, "{} latency", m.name());
+                    assert!(o.api_cost >= 0.0);
+                    assert!((0.0..=1.0).contains(&o.offload_rate));
+                    assert!(o.n_subtasks >= 1);
+                }
+            }
+        }
+    }
+
+    /// Decomposition methods must beat Direct prompting in accuracy on the
+    /// same model (the paper's first finding).
+    #[test]
+    fn cot_beats_direct_on_accuracy() {
+        let qs = generate_queries(Benchmark::Gpqa, 400, 2);
+        let acc = |m: &dyn Method, seed: u64| {
+            let mut rng = Rng::new(seed);
+            qs.iter().filter(|q| m.run(q, &mut rng).correct).count() as f64 / qs.len() as f64
+        };
+        for cloud in [false, true] {
+            let d = acc(&Direct::new(SimExecutor::paper_pair(), cloud), 3);
+            let c = acc(&Cot::new(SimExecutor::paper_pair(), cloud), 3);
+            assert!(c > d, "cloud={cloud}: cot {c} direct {d}");
+        }
+    }
+}

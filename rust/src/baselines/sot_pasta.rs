@@ -1,0 +1,246 @@
+//! Aggressively-parallel decomposition baselines:
+//!
+//! * **SoT** (Skeleton-of-Thought, Ning et al. 2024): a short skeleton call
+//!   enumerates points, then every point expands *in parallel with no
+//!   inter-point context*. Fast on the cloud (parallel calls), but
+//!   dependency-heavy domains (math) collapse — Table 1's AIME24 cliff.
+//! * **PASTA** (Jin et al. 2025): learned asynchronous decoding; flatter
+//!   parallelism without a skeleton round-trip, with a learned-but-
+//!   imperfect notion of what can safely run concurrently. Strong on
+//!   loosely-coupled domains (MMLU-Pro), weak where latent steps interlock.
+//!
+//! Substrate mapping: branches execute independently; each branch's solve
+//! probability is scaled by a per-domain *context-retention* factor
+//! representing the information lost by ignoring dependencies. Edge
+//! execution still serializes on the single on-device worker, which is why
+//! SoT on the edge is *slower* than CoT (paper Table 2: 18.55 vs 11.99 on
+//! GPQA) while cloud SoT is faster than cloud CoT.
+
+use super::Method;
+use crate::metrics::QueryOutcome;
+use crate::models::SimExecutor;
+use crate::util::rng::Rng;
+use crate::workload::{Query, SubtaskLatent};
+
+/// Per-domain context retention: [math, science, general, logic].
+const SOT_RETENTION: [f64; 4] = [0.42, 0.92, 0.93, 0.82];
+const PASTA_RETENTION: [f64; 4] = [0.55, 0.70, 1.00, 0.68];
+
+/// Difficulty relief from finer-grained parallel decomposition (PASTA's
+/// learned splitting makes slightly easier units on domains it fits).
+const PASTA_PHI_MULT: f64 = 0.92;
+
+struct ParallelCfg {
+    name: &'static str,
+    retention: [f64; 4],
+    phi_mult: f64,
+    /// Skeleton pass before branches (SoT) vs. fully async (PASTA).
+    has_skeleton: bool,
+    /// Branch count range.
+    branches: (usize, usize),
+}
+
+fn run_parallel(
+    cfg: &ParallelCfg,
+    executor: &SimExecutor,
+    cloud: bool,
+    query: &Query,
+    rng: &mut Rng,
+) -> QueryOutcome {
+    let sp = &executor.sp;
+    let profile = executor.profile(cloud);
+    let n_branches = rng.int_range(cfg.branches.0, cfg.branches.1 + 1);
+    let retention = cfg.retention[query.domain];
+
+    let mut latency = 0.0;
+    let mut api = 0.0;
+
+    // Skeleton pass: short enumeration call.
+    if cfg.has_skeleton {
+        let skel_out = rng.lognormal(3.6, 0.25) * query.tok_mult; // ~37 tokens
+        latency += profile.latency(query.query_tokens, skel_out, rng);
+        api += profile.api_cost(query.query_tokens, skel_out);
+    }
+
+    // Branches: independent expansions.
+    let mut latents = Vec::with_capacity(n_branches);
+    let mut success = Vec::with_capacity(n_branches);
+    let mut branch_lat = Vec::with_capacity(n_branches);
+    for i in 0..n_branches {
+        let phi = rng.uniform(sp.phi.0, sp.phi.1) * cfg.phi_mult;
+        let d = (query.difficulty * phi).min(1.0);
+        let w = if i == n_branches - 1 {
+            sp.generate_crit
+        } else {
+            crate::workload::sample_criticality(sp, rng)
+        };
+        let (mu, sig) = sp.role_tokens[1]; // ANALYZE-sized expansions
+        let out = rng.lognormal(mu, sig) * query.tok_mult
+            * if cloud { sp.cloud_verbosity } else { 1.0 };
+        let p = profile.p_solve(query.domain, d, sp) * retention;
+        latents.push(SubtaskLatent { difficulty: d, criticality: w, out_tokens: out });
+        success.push(rng.bernoulli(p));
+        branch_lat.push(profile.latency(query.query_tokens, out, rng));
+        api += profile.api_cost(query.query_tokens, out);
+    }
+
+    // Edge: single worker serializes branches; cloud: parallel calls.
+    latency += if cloud {
+        branch_lat.iter().copied().fold(0.0, f64::max)
+    } else {
+        branch_lat.iter().sum::<f64>()
+    };
+
+    let correct = executor.final_answer_correct(&latents, &success, rng);
+    QueryOutcome {
+        correct,
+        latency,
+        api_cost: api,
+        offload_rate: if cloud { 1.0 } else { 0.0 },
+        n_subtasks: n_branches + usize::from(cfg.has_skeleton),
+    }
+}
+
+pub struct Sot {
+    pub executor: SimExecutor,
+    pub cloud: bool,
+}
+
+impl Sot {
+    pub fn new(executor: SimExecutor, cloud: bool) -> Sot {
+        Sot { executor, cloud }
+    }
+
+    fn cfg() -> ParallelCfg {
+        ParallelCfg {
+            name: "SoT",
+            retention: SOT_RETENTION,
+            phi_mult: 1.0,
+            has_skeleton: true,
+            branches: (4, 6),
+        }
+    }
+}
+
+impl Method for Sot {
+    fn name(&self) -> &str {
+        "SoT"
+    }
+
+    fn model_label(&self) -> String {
+        self.executor.profile(self.cloud).kind.label().to_string()
+    }
+
+    fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
+        run_parallel(&Self::cfg(), &self.executor, self.cloud, query, rng)
+    }
+}
+
+pub struct Pasta {
+    pub executor: SimExecutor,
+    pub cloud: bool,
+}
+
+impl Pasta {
+    pub fn new(executor: SimExecutor, cloud: bool) -> Pasta {
+        Pasta { executor, cloud }
+    }
+
+    fn cfg() -> ParallelCfg {
+        ParallelCfg {
+            name: "PASTA",
+            retention: PASTA_RETENTION,
+            phi_mult: PASTA_PHI_MULT,
+            has_skeleton: false,
+            branches: (4, 7),
+        }
+    }
+}
+
+impl Method for Pasta {
+    fn name(&self) -> &str {
+        "PASTA"
+    }
+
+    fn model_label(&self) -> String {
+        self.executor.profile(self.cloud).kind.label().to_string()
+    }
+
+    fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
+        run_parallel(&Self::cfg(), &self.executor, self.cloud, query, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Cot;
+    use crate::workload::{generate_queries, Benchmark};
+
+    fn acc(m: &dyn Method, bench: Benchmark, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let qs = generate_queries(bench, n, seed);
+        qs.iter().filter(|q| m.run(q, &mut rng).correct).count() as f64 / n as f64 * 100.0
+    }
+
+    fn mean_latency(m: &dyn Method, bench: Benchmark, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let qs = generate_queries(bench, n, seed);
+        qs.iter().map(|q| m.run(q, &mut rng).latency).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn sot_collapses_on_math() {
+        // Paper Table 1: SoT AIME24 1.11 (L3B) / 28.89 (G4.1) — far below
+        // CoT cloud 44.42. The dependency-penalty must crush math accuracy.
+        let sot_cloud = acc(&Sot::new(SimExecutor::paper_pair(), true), Benchmark::Aime24, 600, 5);
+        let cot_cloud = acc(&Cot::new(SimExecutor::paper_pair(), true), Benchmark::Aime24, 600, 5);
+        assert!(sot_cloud < cot_cloud - 5.0, "sot {sot_cloud} cot {cot_cloud}");
+    }
+
+    #[test]
+    fn sot_cloud_is_faster_than_cot_cloud() {
+        // Paper Table 2 GPQA: SoT G4.1 16.27 < CoT G4.1 18.26.
+        let sot = mean_latency(&Sot::new(SimExecutor::paper_pair(), true), Benchmark::Gpqa, 300, 6);
+        let cot = mean_latency(&Cot::new(SimExecutor::paper_pair(), true), Benchmark::Gpqa, 300, 6);
+        assert!(sot < cot, "sot {sot} cot {cot}");
+    }
+
+    #[test]
+    fn sot_edge_is_slower_than_cot_edge() {
+        // Paper Table 2 GPQA: SoT L3B 18.55 > CoT L3B 11.99 (branches
+        // serialize on the single edge worker).
+        let sot =
+            mean_latency(&Sot::new(SimExecutor::paper_pair(), false), Benchmark::Gpqa, 300, 7);
+        let cot =
+            mean_latency(&Cot::new(SimExecutor::paper_pair(), false), Benchmark::Gpqa, 300, 7);
+        assert!(sot > cot, "sot {sot} cot {cot}");
+    }
+
+    #[test]
+    fn pasta_beats_sot_on_general_domain() {
+        // Paper Table 1 MMLU-Pro (G4.1): PASTA 75.52 > SoT 71.8.
+        let pasta =
+            acc(&Pasta::new(SimExecutor::paper_pair(), true), Benchmark::MmluPro, 700, 8);
+        let sot = acc(&Sot::new(SimExecutor::paper_pair(), true), Benchmark::MmluPro, 700, 8);
+        assert!(pasta > sot - 1.0, "pasta {pasta} sot {sot}");
+    }
+
+    #[test]
+    fn pasta_much_worse_than_sot_on_science() {
+        // Paper Table 1 GPQA (G4.1): PASTA 41.28 << SoT 56.4.
+        let pasta = acc(&Pasta::new(SimExecutor::paper_pair(), true), Benchmark::Gpqa, 700, 9);
+        let sot = acc(&Sot::new(SimExecutor::paper_pair(), true), Benchmark::Gpqa, 700, 9);
+        assert!(pasta < sot - 4.0, "pasta {pasta} sot {sot}");
+    }
+
+    #[test]
+    fn pasta_is_faster_than_sot() {
+        // No skeleton round-trip: paper Table 2 averages 15.37 vs 19.52.
+        let pasta =
+            mean_latency(&Pasta::new(SimExecutor::paper_pair(), true), Benchmark::Gpqa, 300, 10);
+        let sot =
+            mean_latency(&Sot::new(SimExecutor::paper_pair(), true), Benchmark::Gpqa, 300, 10);
+        assert!(pasta < sot, "pasta {pasta} sot {sot}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Benchmark harness (criterion is not available offline).
+//!
+//! Two layers:
+//! * [`time_fn`] / [`Bench`] — micro-benchmark timing with warmup, adaptive
+//!   iteration counts, and percentile reporting.
+//! * [`Table`] — paper-style table rendering shared by the per-table bench
+//!   binaries (`cargo bench --bench table1` etc.), which print the same
+//!   rows the paper reports.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of timing a closure.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration seconds.
+    pub summary: Summary,
+}
+
+impl Timing {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.summary.mean * 1e9
+    }
+
+    pub fn throughput_per_s(&self) -> f64 {
+        1.0 / self.summary.mean
+    }
+
+    pub fn report(&self) -> String {
+        let mean = human_time(self.summary.mean);
+        let p50 = human_time(self.summary.p50);
+        let p99 = human_time(self.summary.p99);
+        format!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p99 {:>10}  ({} iters)",
+            self.name, mean, p50, p99, self.iters
+        )
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn human_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}\u{b5}s", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// Time `f`, auto-scaling iterations to fill ~`budget_s` seconds after a
+/// warmup. Returns per-iteration timing statistics over measured batches.
+pub fn time_fn<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Timing {
+    // Warmup + calibration: run until 10% of budget or 3 iterations.
+    let cal_start = Instant::now();
+    let mut cal_iters = 0usize;
+    while cal_start.elapsed().as_secs_f64() < budget_s * 0.1 || cal_iters < 3 {
+        f();
+        cal_iters += 1;
+        if cal_iters >= 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = cal_start.elapsed().as_secs_f64() / cal_iters as f64;
+
+    // Measurement: batches sized so each batch is >= ~1ms to keep timer
+    // overhead negligible, for the remaining budget.
+    let batch = ((1e-3 / per_iter).ceil() as usize).clamp(1, 1_000_000);
+    let mut samples = Vec::new();
+    let mut iters = 0usize;
+    let meas_start = Instant::now();
+    while meas_start.elapsed().as_secs_f64() < budget_s * 0.9 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() / batch as f64;
+        samples.push(dt);
+        iters += batch;
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    Timing { name: name.to_string(), iters, summary: Summary::of(&samples) }
+}
+
+/// Collector for a group of named timings.
+pub struct Bench {
+    pub group: String,
+    pub budget_s: f64,
+    pub timings: Vec<Timing>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        let budget = std::env::var("BENCH_BUDGET_S")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        Bench { group: group.to_string(), budget_s: budget, timings: Vec::new() }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Timing {
+        let t = time_fn(name, self.budget_s, f);
+        println!("  {}", t.report());
+        self.timings.push(t);
+        self.timings.last().unwrap()
+    }
+
+    pub fn header(&self) {
+        println!("\n== bench group: {} (budget {:.1}s/case) ==", self.group, self.budget_s);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paper-style tables.
+// ---------------------------------------------------------------------------
+
+/// Simple aligned-text table used by experiment benches to print rows that
+/// mirror the paper's tables.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("\n# {}\n", self.title);
+        let head: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&format!("| {} |\n", head.join(" | ")));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_something() {
+        let mut x = 0u64;
+        let t = time_fn("noop-ish", 0.05, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(t.iters > 100);
+        assert!(t.summary.mean > 0.0);
+        assert!(t.summary.mean < 1e-3);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(3.2e-9).ends_with("ns"));
+        assert!(human_time(4.5e-5).ends_with("\u{b5}s"));
+        assert!(human_time(2.5e-2).ends_with("ms"));
+        assert!(human_time(3.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Acc"]);
+        t.row(vec!["HybridFlow".into(), "53.33".into()]);
+        t.row(vec!["CoT".into(), "57.28".into()]);
+        let s = t.render();
+        assert!(s.contains("# Demo"));
+        assert!(s.contains("| HybridFlow | 53.33 |"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Per-query budget accounting: cumulative normalized cost `C_used(t)`
+//! (Eq. 1/24), raw API and latency consumption for the adaptive threshold
+//! of Eq. 27, and snapshots for trace events.
+
+use crate::config::simparams::SimParams;
+
+/// Evolving resource state of one query's execution.
+#[derive(Debug, Clone)]
+pub struct BudgetState {
+    /// Cumulative normalized cost `sum r_j c_j` (Eq. 8's second input).
+    pub c_used: f64,
+    /// Cumulative cloud API dollars (`k_used` of Eq. 27).
+    pub k_used: f64,
+    /// Cumulative latency seconds attributed so far (`l_used` of Eq. 27).
+    /// Under the virtual clock this is the current makespan frontier.
+    pub l_used: f64,
+    /// Offload decisions so far (for offload-rate metrics).
+    pub n_offloaded: usize,
+    pub n_decided: usize,
+}
+
+impl BudgetState {
+    pub fn new() -> BudgetState {
+        BudgetState { c_used: 0.0, k_used: 0.0, l_used: 0.0, n_offloaded: 0, n_decided: 0 }
+    }
+
+    /// Normalized per-subtask offloading cost `c_i` (Eq. 1 / Eq. 24):
+    /// `clip((dl / l_max_sub + dk / k_max_sub) / 2, 0, 1)`.
+    pub fn normalized_cost(sp: &SimParams, dl: f64, dk: f64) -> f64 {
+        (0.5 * dl / sp.l_max_sub + 0.5 * dk / sp.k_max_sub).clamp(0.0, 1.0)
+    }
+
+    /// Record an edge decision (free, but counted for offload rate).
+    pub fn record_edge(&mut self) {
+        self.n_decided += 1;
+    }
+
+    /// Record a cloud decision with its realized marginal costs.
+    pub fn record_cloud(&mut self, sp: &SimParams, dl: f64, dk: f64) {
+        let c = Self::normalized_cost(sp, dl, dk);
+        self.c_used += c;
+        self.k_used += dk;
+        self.n_offloaded += 1;
+        self.n_decided += 1;
+    }
+
+    /// Advance the attributed latency frontier (virtual clock time).
+    pub fn advance_latency(&mut self, t: f64) {
+        self.l_used = self.l_used.max(t);
+    }
+
+    pub fn offload_rate(&self) -> f64 {
+        if self.n_decided == 0 {
+            0.0
+        } else {
+            self.n_offloaded as f64 / self.n_decided as f64
+        }
+    }
+}
+
+impl Default for BudgetState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_cost_formula() {
+        let sp = SimParams::default();
+        // dl = 5s of l_max 10 -> 0.25; dk = 0.01 of k_max 0.02 -> 0.25.
+        let c = BudgetState::normalized_cost(&sp, 5.0, 0.01);
+        assert!((c - 0.5).abs() < 1e-12);
+        // Clipped at 1.
+        assert_eq!(BudgetState::normalized_cost(&sp, 100.0, 1.0), 1.0);
+        // Non-negative.
+        assert_eq!(BudgetState::normalized_cost(&sp, -3.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn accumulation_and_rates() {
+        let sp = SimParams::default();
+        let mut b = BudgetState::new();
+        b.record_edge();
+        b.record_cloud(&sp, 2.0, 0.004);
+        b.record_cloud(&sp, 4.0, 0.002);
+        assert_eq!(b.n_decided, 3);
+        assert_eq!(b.n_offloaded, 2);
+        assert!((b.offload_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((b.k_used - 0.006).abs() < 1e-12);
+        let expect_c = BudgetState::normalized_cost(&sp, 2.0, 0.004)
+            + BudgetState::normalized_cost(&sp, 4.0, 0.002);
+        assert!((b.c_used - expect_c).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_frontier_is_monotone() {
+        let mut b = BudgetState::new();
+        b.advance_latency(3.0);
+        b.advance_latency(1.5); // earlier event cannot move it back
+        assert_eq!(b.l_used, 3.0);
+        b.advance_latency(7.0);
+        assert_eq!(b.l_used, 7.0);
+    }
+
+    #[test]
+    fn empty_offload_rate_zero() {
+        assert_eq!(BudgetState::new().offload_rate(), 0.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Configuration: compiled-in simulation constants (mirrored with python)
+//! plus runtime configuration loaded from JSON files / CLI flags.
+
+pub mod simparams;
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Top-level runtime configuration for the coordinator binary and examples.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// Directory holding AOT artifacts (`router*.hlo.txt`, ...).
+    pub artifacts_dir: PathBuf,
+    /// Worker threads for the scheduler's real-dispatch pool.
+    pub workers: usize,
+    /// Use the PJRT-backed router predictor (vs pure-rust mirror).
+    pub use_pjrt: bool,
+    /// Run the edge-LM PJRT forward inside simulated edge executions.
+    pub edge_lm_compute: bool,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            artifacts_dir: default_artifacts_dir(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            use_pjrt: true,
+            edge_lm_compute: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Locate `artifacts/` relative to the current dir or the crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    let candidates = [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    for c in &candidates {
+        if c.join("router.hlo.txt").exists() {
+            return c.clone();
+        }
+    }
+    candidates[0].clone()
+}
+
+impl RuntimeConfig {
+    /// Load overrides from a JSON config file.
+    pub fn from_file(path: &Path) -> anyhow::Result<RuntimeConfig> {
+        let j = Json::parse_file(path)?;
+        let mut cfg = RuntimeConfig::default();
+        if let Some(d) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(w) = j.get("workers").and_then(Json::as_usize) {
+            cfg.workers = w.max(1);
+        }
+        if let Some(b) = j.get("use_pjrt").and_then(Json::as_bool) {
+            cfg.use_pjrt = b;
+        }
+        if let Some(b) = j.get("edge_lm_compute").and_then(Json::as_bool) {
+            cfg.edge_lm_compute = b;
+        }
+        if let Some(s) = j.get("seed").and_then(Json::as_f64) {
+            cfg.seed = s as u64;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = RuntimeConfig::default();
+        assert!(c.workers >= 1);
+        assert!(c.use_pjrt);
+    }
+
+    #[test]
+    fn from_file_overrides() {
+        let dir = std::env::temp_dir().join("hf_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"workers": 2, "use_pjrt": false, "seed": 9, "artifacts_dir": "/tmp/a"}"#,
+        )
+        .unwrap();
+        let c = RuntimeConfig::from_file(&p).unwrap();
+        assert_eq!(c.workers, 2);
+        assert!(!c.use_pjrt);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.artifacts_dir, PathBuf::from("/tmp/a"));
+    }
+}

@@ -1,0 +1,411 @@
+//! Rust mirror of `python/compile/simparams.py` — the shared generative
+//! constants of the simulation substrate.
+//!
+//! The defaults below are the single rust-side source of truth; when
+//! `artifacts/simparams.json` is present, [`SimParams::load`] cross-checks
+//! the two copies and fails loudly on drift (see
+//! `rust/tests/artifacts_integration.rs`), so the python and rust mirrors
+//! cannot silently diverge.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Domains in capability-vector order (must match python `DOMAINS`).
+pub const DOMAINS: [&str; 4] = ["math", "science", "general", "logic"];
+
+/// Feature vector layout (must match python `FEAT_*`).
+pub const FEAT_ROLE: usize = 0;
+pub const FEAT_DIFF1: usize = 3;
+pub const FEAT_DIFF2: usize = 4;
+pub const FEAT_TOKENS: usize = 5;
+pub const FEAT_DOMAIN: usize = 6;
+pub const FEAT_POS: usize = 10;
+pub const FEAT_FANIN: usize = 11;
+pub const FEAT_FANOUT: usize = 12;
+pub const FEAT_NSUB: usize = 13;
+pub const FEAT_SINK: usize = 14;
+pub const FEAT_CRIT: usize = 15;
+pub const FEAT_DIM: usize = 16;
+pub const ROUTER_IN_DIM: usize = FEAT_DIM + 1;
+pub const ROUTER_HIDDEN: usize = 64;
+
+pub const TOKEN_NORM: f64 = 512.0;
+pub const FAN_NORM: f64 = 4.0;
+
+/// Serving profile of one model endpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingProfile {
+    /// Decode speed, tokens/s.
+    pub tps: f64,
+    /// Prefill speed, tokens/s.
+    pub prefill_tps: f64,
+    /// Mean network round-trip (s); 0 for on-device models.
+    pub rtt_mean: f64,
+    /// Lognormal sigma of the RTT jitter.
+    pub rtt_sigma: f64,
+    /// $ per input token.
+    pub price_in: f64,
+    /// $ per output token.
+    pub price_out: f64,
+}
+
+/// Per-benchmark workload shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchmarkParams {
+    /// Difficulty Beta(a, b).
+    pub beta: (f64, f64),
+    /// Domain index into [`DOMAINS`].
+    pub domain: usize,
+    /// Output-token multiplier.
+    pub tok_mult: f64,
+    /// Query input-token lognormal (mu, sigma).
+    pub query_tokens: (f64, f64),
+    /// Paper's evaluation set size.
+    pub n_queries: usize,
+}
+
+/// One simulated model: capabilities + serving profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    pub name: &'static str,
+    /// Per-domain capability (same order as [`DOMAINS`]).
+    pub caps: [f64; 4],
+    pub serving: ServingProfile,
+}
+
+/// All generative-model constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimParams {
+    pub cap_temp: f64,
+    pub diff_noise_std: f64,
+    pub crit_noise_std: f64,
+    pub nmax: usize,
+    pub phi: (f64, f64),
+    /// Probability a non-GENERATE subtask is pivotal.
+    pub crit_p: f64,
+    /// Baseline criticality of non-pivotal subtasks.
+    pub crit_base: f64,
+    /// Beta(a, b) of the pivotal-criticality boost.
+    pub crit_high_beta: (f64, f64),
+    /// Pivotal probability decays with topological position (early
+    /// analysis resolves the key steps; Fig. 3's generative premise).
+    pub crit_pos_decay: f64,
+    pub generate_crit: f64,
+    pub cloud_verbosity: f64,
+    pub cot_token_mult: f64,
+    /// Role output-token lognormal (mu, sigma): EXPLAIN, ANALYZE, GENERATE.
+    pub role_tokens: [(f64, f64); 3],
+    /// Direct-prompting output tokens (mu, sigma): edge, cloud.
+    pub direct_tokens: [(f64, f64); 2],
+    pub eps_utility: f64,
+    pub l_max_sub: f64,
+    pub k_max_sub: f64,
+    pub tau0: f64,
+    pub k_max_global: f64,
+    pub l_max_global: f64,
+    pub c_max: f64,
+    pub dual_eta: f64,
+    pub dual_gamma: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            cap_temp: 0.12,
+            diff_noise_std: 0.08,
+            crit_noise_std: 0.15,
+            nmax: 7,
+            phi: (0.55, 0.95),
+            crit_p: 0.38,
+            crit_base: 0.06,
+            crit_high_beta: (8.0, 2.0),
+            crit_pos_decay: 0.75,
+            generate_crit: 0.35,
+            cloud_verbosity: 3.0,
+            cot_token_mult: 1.7,
+            role_tokens: [(4.0, 0.35), (4.6, 0.40), (4.4, 0.35)],
+            direct_tokens: [(5.6, 0.30), (6.9, 0.25)],
+            eps_utility: 1.0e-4,
+            l_max_sub: 10.0,
+            k_max_sub: 0.02,
+            tau0: 0.1,
+            k_max_global: 0.02,
+            l_max_global: 40.0,
+            c_max: 0.5,
+            dual_eta: 0.35,
+            dual_gamma: 0.5,
+        }
+    }
+}
+
+impl SimParams {
+    /// Load from `artifacts/simparams.json`, verifying it matches the
+    /// compiled-in defaults (fails on drift between python and rust mirrors).
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<SimParams> {
+        let json = Json::parse_file(&artifacts_dir.join("simparams.json"))?;
+        let loaded = Self::from_json(&json)?;
+        let compiled = SimParams::default();
+        if loaded != compiled {
+            anyhow::bail!(
+                "simparams drift between python (artifacts/simparams.json) and rust defaults:\n  loaded:   {loaded:?}\n  compiled: {compiled:?}"
+            );
+        }
+        Ok(loaded)
+    }
+
+    /// Parse the JSON dump written by `python -m compile.aot`.
+    pub fn from_json(j: &Json) -> anyhow::Result<SimParams> {
+        let f = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("simparams.json missing numeric '{key}'"))
+        };
+        let pair = |key: &str| -> anyhow::Result<(f64, f64)> {
+            let arr = j
+                .get(key)
+                .and_then(Json::f64_array)
+                .ok_or_else(|| anyhow::anyhow!("simparams.json missing pair '{key}'"))?;
+            anyhow::ensure!(arr.len() == 2, "'{key}' must have 2 entries");
+            Ok((arr[0], arr[1]))
+        };
+        let role_pair = |name: &str| -> anyhow::Result<(f64, f64)> {
+            let arr = j
+                .path(&["role_tokens", name])
+                .and_then(Json::f64_array)
+                .ok_or_else(|| anyhow::anyhow!("missing role_tokens.{name}"))?;
+            Ok((arr[0], arr[1]))
+        };
+        let direct = |name: &str| -> anyhow::Result<(f64, f64)> {
+            let arr = j
+                .path(&["direct_tokens", name])
+                .and_then(Json::f64_array)
+                .ok_or_else(|| anyhow::anyhow!("missing direct_tokens.{name}"))?;
+            Ok((arr[0], arr[1]))
+        };
+        Ok(SimParams {
+            cap_temp: f("cap_temp")?,
+            diff_noise_std: f("diff_noise_std")?,
+            crit_noise_std: f("crit_noise_std")?,
+            nmax: f("nmax")? as usize,
+            phi: pair("phi")?,
+            crit_p: f("crit_p")?,
+            crit_base: f("crit_base")?,
+            crit_high_beta: pair("crit_high_beta")?,
+            crit_pos_decay: f("crit_pos_decay")?,
+            generate_crit: f("generate_crit")?,
+            cloud_verbosity: f("cloud_verbosity")?,
+            cot_token_mult: f("cot_token_mult")?,
+            role_tokens: [role_pair("EXPLAIN")?, role_pair("ANALYZE")?, role_pair("GENERATE")?],
+            direct_tokens: [direct("edge")?, direct("cloud")?],
+            eps_utility: f("eps_utility")?,
+            l_max_sub: f("l_max_sub")?,
+            k_max_sub: f("k_max_sub")?,
+            tau0: f("tau0")?,
+            k_max_global: f("k_max_global")?,
+            l_max_global: f("l_max_global")?,
+            c_max: f("c_max")?,
+            dual_eta: f("dual_eta")?,
+            dual_gamma: f("dual_gamma")?,
+        })
+    }
+}
+
+/// Compiled-in model zoo (mirrors python `MODEL_CAPS` / `MODEL_SERVING`).
+pub fn model_params(name: &str) -> Option<ModelParams> {
+    let p = |tps, prefill_tps, rtt_mean, rtt_sigma, price_in, price_out| ServingProfile {
+        tps,
+        prefill_tps,
+        rtt_mean,
+        rtt_sigma,
+        price_in,
+        price_out,
+    };
+    Some(match name {
+        "llama3.2-3b" => ModelParams {
+            name: "llama3.2-3b",
+            caps: [0.35, 0.38, 0.27, 0.25],
+            serving: p(42.0, 900.0, 0.0, 0.0, 0.0, 0.0),
+        },
+        "gpt-4.1" => ModelParams {
+            name: "gpt-4.1",
+            caps: [0.66, 0.595, 0.55, 0.54],
+            serving: p(75.0, 4000.0, 0.45, 0.35, 2.0e-6, 8.0e-6),
+        },
+        "qwen2.5-7b" => ModelParams {
+            name: "qwen2.5-7b",
+            caps: [0.42, 0.44, 0.34, 0.32],
+            serving: p(28.0, 600.0, 0.0, 0.0, 0.0, 0.0),
+        },
+        "deepseek-v3" => ModelParams {
+            name: "deepseek-v3",
+            caps: [0.68, 0.615, 0.57, 0.56],
+            serving: p(24.0, 3000.0, 0.70, 0.40, 0.27e-6, 1.10e-6),
+        },
+        _ => return None,
+    })
+}
+
+/// Compiled-in benchmark table (mirrors python `BENCHMARKS`).
+pub fn benchmark_params(name: &str) -> Option<BenchmarkParams> {
+    let dom = |d: &str| DOMAINS.iter().position(|x| *x == d).unwrap();
+    Some(match name {
+        "gpqa" => BenchmarkParams {
+            beta: (6.0, 2.5),
+            domain: dom("science"),
+            tok_mult: 1.2,
+            query_tokens: (5.3, 0.35),
+            n_queries: 195,
+        },
+        "mmlu_pro" => BenchmarkParams {
+            beta: (3.5, 3.0),
+            domain: dom("general"),
+            tok_mult: 0.8,
+            query_tokens: (4.9, 0.35),
+            n_queries: 200,
+        },
+        "aime24" => BenchmarkParams {
+            beta: (8.0, 1.8),
+            domain: dom("math"),
+            tok_mult: 2.6,
+            query_tokens: (4.6, 0.30),
+            n_queries: 30,
+        },
+        "livebench" => BenchmarkParams {
+            beta: (4.0, 2.5),
+            domain: dom("logic"),
+            tok_mult: 2.0,
+            query_tokens: (5.1, 0.40),
+            n_queries: 100,
+        },
+        _ => return None,
+    })
+}
+
+/// Verify the model/benchmark tables in a loaded JSON match the compiled-in
+/// zoo (used by the artifacts integration test).
+pub fn verify_zoo_against_json(j: &Json) -> anyhow::Result<()> {
+    for name in ["llama3.2-3b", "gpt-4.1", "qwen2.5-7b", "deepseek-v3"] {
+        let m = model_params(name).unwrap();
+        let caps = j
+            .path(&["model_caps", name])
+            .and_then(Json::f64_array)
+            .ok_or_else(|| anyhow::anyhow!("missing model_caps.{name}"))?;
+        anyhow::ensure!(caps == m.caps.to_vec(), "caps drift for {name}: {caps:?} vs {:?}", m.caps);
+        let s = j
+            .path(&["model_serving", name])
+            .and_then(Json::f64_array)
+            .ok_or_else(|| anyhow::anyhow!("missing model_serving.{name}"))?;
+        let want = vec![
+            m.serving.tps,
+            m.serving.prefill_tps,
+            m.serving.rtt_mean,
+            m.serving.rtt_sigma,
+            m.serving.price_in,
+            m.serving.price_out,
+        ];
+        anyhow::ensure!(
+            s.iter().zip(&want).all(|(a, b)| (a - b).abs() < 1e-12),
+            "serving drift for {name}: {s:?} vs {want:?}"
+        );
+    }
+    for name in ["gpqa", "mmlu_pro", "aime24", "livebench"] {
+        let b = benchmark_params(name).unwrap();
+        let beta = j
+            .path(&["benchmarks", name, "beta"])
+            .and_then(Json::f64_array)
+            .ok_or_else(|| anyhow::anyhow!("missing benchmarks.{name}.beta"))?;
+        anyhow::ensure!(beta == vec![b.beta.0, b.beta.1], "beta drift for {name}");
+        let dom = j
+            .path(&["benchmarks", name, "domain"])
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing benchmarks.{name}.domain"))?;
+        anyhow::ensure!(DOMAINS[b.domain] == dom, "domain drift for {name}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_consistent() {
+        let p = SimParams::default();
+        assert!(p.phi.0 < p.phi.1);
+        assert!(p.tau0 >= 0.0 && p.tau0 <= 1.0);
+        assert_eq!(p.nmax, 7);
+        assert_eq!(FEAT_DIM, 16);
+        assert_eq!(ROUTER_IN_DIM, 17);
+    }
+
+    #[test]
+    fn zoo_has_all_models() {
+        for name in ["llama3.2-3b", "gpt-4.1", "qwen2.5-7b", "deepseek-v3"] {
+            let m = model_params(name).unwrap();
+            assert_eq!(m.name, name);
+            assert!(m.serving.tps > 0.0);
+        }
+        assert!(model_params("gpt-5").is_none());
+    }
+
+    #[test]
+    fn edge_models_are_free_and_local() {
+        for name in ["llama3.2-3b", "qwen2.5-7b"] {
+            let m = model_params(name).unwrap();
+            assert_eq!(m.serving.price_out, 0.0);
+            assert_eq!(m.serving.rtt_mean, 0.0);
+        }
+        for name in ["gpt-4.1", "deepseek-v3"] {
+            let m = model_params(name).unwrap();
+            assert!(m.serving.price_out > 0.0);
+            assert!(m.serving.rtt_mean > 0.0);
+        }
+    }
+
+    #[test]
+    fn cloud_caps_dominate_edge_caps() {
+        let edge = model_params("llama3.2-3b").unwrap();
+        let cloud = model_params("gpt-4.1").unwrap();
+        for d in 0..4 {
+            assert!(cloud.caps[d] > edge.caps[d], "domain {d}");
+        }
+    }
+
+    #[test]
+    fn benchmarks_cover_paper_eval() {
+        for name in ["gpqa", "mmlu_pro", "aime24", "livebench"] {
+            let b = benchmark_params(name).unwrap();
+            assert!(b.n_queries > 0);
+            assert!(b.domain < 4);
+        }
+        assert!(benchmark_params("gsm8k").is_none());
+    }
+
+    #[test]
+    fn from_json_roundtrip_via_handbuilt() {
+        // Build a JSON blob exactly as python would and parse it back.
+        let p = SimParams::default();
+        let text = format!(
+            r#"{{
+              "cap_temp": {}, "diff_noise_std": {}, "crit_noise_std": {},
+              "nmax": {}, "phi": [{}, {}], "crit_p": {}, "crit_base": {}, "crit_high_beta": [{}, {}], "crit_pos_decay": {},
+              "generate_crit": {}, "cloud_verbosity": {}, "cot_token_mult": {},
+              "role_tokens": {{"EXPLAIN": [{}, {}], "ANALYZE": [{}, {}], "GENERATE": [{}, {}]}},
+              "direct_tokens": {{"edge": [5.6, 0.30], "cloud": [6.9, 0.25]}},
+              "eps_utility": {}, "l_max_sub": {}, "k_max_sub": {},
+              "tau0": {}, "k_max_global": {}, "l_max_global": {},
+              "c_max": {}, "dual_eta": {}, "dual_gamma": {}
+            }}"#,
+            p.cap_temp, p.diff_noise_std, p.crit_noise_std, p.nmax, p.phi.0, p.phi.1,
+            p.crit_p, p.crit_base, p.crit_high_beta.0, p.crit_high_beta.1, p.crit_pos_decay,
+            p.generate_crit, p.cloud_verbosity,
+            p.cot_token_mult,
+            p.role_tokens[0].0, p.role_tokens[0].1, p.role_tokens[1].0, p.role_tokens[1].1,
+            p.role_tokens[2].0, p.role_tokens[2].1,
+            p.eps_utility, p.l_max_sub, p.k_max_sub, p.tau0,
+            p.k_max_global, p.l_max_global, p.c_max, p.dual_eta, p.dual_gamma
+        );
+        let parsed = SimParams::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, p);
+    }
+}

@@ -1,0 +1,280 @@
+//! Task-level decomposition DAG `G(Q) = (T, E)` with the structural queries
+//! the scheduler and metrics need: topological order, ready frontier,
+//! critical path, and the paper's compression ratio `R_comp` (Eq. 28).
+
+use super::node::{Role, Subtask};
+
+/// A decomposition DAG. Nodes are stored by index; `Subtask::deps` encodes
+/// the edge set E as parent lists (edge `t_j -> t_i` iff `j in nodes[i].deps`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDag {
+    pub nodes: Vec<Subtask>,
+}
+
+impl TaskDag {
+    pub fn new(nodes: Vec<Subtask>) -> TaskDag {
+        TaskDag { nodes }
+    }
+
+    /// Sequential chain fallback over `n` nodes (repair's last resort).
+    /// Always at least 2 nodes: Definition C.2 needs an EXPLAIN root *and*
+    /// a GENERATE sink.
+    pub fn chain(descs: &[String]) -> TaskDag {
+        let n = descs.len().max(2);
+        let nodes = (0..n)
+            .map(|i| {
+                let role = if i == 0 {
+                    Role::Explain
+                } else if i == n - 1 {
+                    Role::Generate
+                } else {
+                    Role::Analyze
+                };
+                let desc = descs.get(i).cloned().unwrap_or_else(|| format!("step {i}"));
+                let deps = if i == 0 { vec![] } else { vec![i - 1] };
+                Subtask::new(i, role, &desc, deps)
+            })
+            .collect();
+        TaskDag { nodes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// In-degree of every node.
+    pub fn in_degrees(&self) -> Vec<usize> {
+        self.nodes.iter().map(|n| n.deps.len()).collect()
+    }
+
+    /// Children adjacency (out-edges), derived from parent lists.
+    pub fn children(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &d in &n.deps {
+                if d < self.nodes.len() {
+                    out[d].push(i);
+                }
+            }
+        }
+        out
+    }
+
+    /// Out-degree of every node.
+    pub fn out_degrees(&self) -> Vec<usize> {
+        self.children().iter().map(Vec::len).collect()
+    }
+
+    /// Nodes with no prerequisites (the initial ready frontier).
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&i| self.nodes[i].deps.is_empty()).collect()
+    }
+
+    /// Nodes with no children.
+    pub fn sinks(&self) -> Vec<usize> {
+        let deg = self.out_degrees();
+        (0..self.nodes.len()).filter(|&i| deg[i] == 0).collect()
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle (or a dep
+    /// index out of range, which we treat as an invalid edge).
+    pub fn topo_order(&self) -> Option<Vec<usize>> {
+        let n = self.nodes.len();
+        for node in &self.nodes {
+            if node.deps.iter().any(|&d| d >= n) {
+                return None;
+            }
+        }
+        let mut indeg = self.in_degrees();
+        let children = self.children();
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop() {
+            order.push(u);
+            for &c in &children[u] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Set of nodes reachable from `start` (following child edges).
+    pub fn reachable_from(&self, start: usize) -> Vec<bool> {
+        let children = self.children();
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![start];
+        while let Some(u) = stack.pop() {
+            if u >= seen.len() || seen[u] {
+                continue;
+            }
+            seen[u] = true;
+            for &c in &children[u] {
+                stack.push(c);
+            }
+        }
+        seen
+    }
+
+    /// Critical path length in *nodes* (longest chain; 0 for empty DAG).
+    /// Requires acyclicity; returns `None` on cyclic graphs.
+    pub fn critical_path_len(&self) -> Option<usize> {
+        let order = self.topo_order()?;
+        let mut depth = vec![1usize; self.nodes.len()];
+        for &u in &order {
+            for &d in &self.nodes[u].deps {
+                depth[u] = depth[u].max(depth[d] + 1);
+            }
+        }
+        Some(depth.into_iter().max().unwrap_or(0))
+    }
+
+    /// Weighted critical path: longest dependency chain where each node
+    /// costs `weight(i)`. This is the virtual-clock lower bound on makespan
+    /// with unlimited parallelism.
+    pub fn critical_path_weighted<F: Fn(usize) -> f64>(&self, weight: F) -> Option<f64> {
+        let order = self.topo_order()?;
+        let mut finish = vec![0.0f64; self.nodes.len()];
+        for &u in &order {
+            let start = self.nodes[u]
+                .deps
+                .iter()
+                .map(|&d| finish[d])
+                .fold(0.0f64, f64::max);
+            finish[u] = start + weight(u);
+        }
+        Some(finish.into_iter().fold(0.0, f64::max))
+    }
+
+    /// Paper Eq. 28: `R_comp = (n - L_crit) / n` — the fraction of steps
+    /// that can be hidden by parallel execution.
+    pub fn compression_ratio(&self) -> Option<f64> {
+        let n = self.nodes.len();
+        if n == 0 {
+            return Some(0.0);
+        }
+        let lcrit = self.critical_path_len()?;
+        Some((n - lcrit) as f64 / n as f64)
+    }
+
+    /// Topological position (depth from the roots) of each node; used as the
+    /// "subtask position" axis of Figure 3 and as a router feature.
+    pub fn depths(&self) -> Option<Vec<usize>> {
+        let order = self.topo_order()?;
+        let mut depth = vec![0usize; self.nodes.len()];
+        for &u in &order {
+            for &d in &self.nodes[u].deps {
+                depth[u] = depth[u].max(depth[d] + 1);
+            }
+        }
+        Some(depth)
+    }
+
+    /// The GENERATE sink (final aggregation node), if uniquely present.
+    pub fn generate_sink(&self) -> Option<usize> {
+        let sinks = self.sinks();
+        let gens: Vec<usize> = sinks
+            .into_iter()
+            .filter(|&i| self.nodes[i].role == Role::Generate)
+            .collect();
+        (gens.len() == 1).then(|| gens[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Diamond: 0 -> {1, 2} -> 3.
+    fn diamond() -> TaskDag {
+        TaskDag::new(vec![
+            Subtask::new(0, Role::Explain, "root", vec![]),
+            Subtask::new(1, Role::Analyze, "left", vec![0]),
+            Subtask::new(2, Role::Analyze, "right", vec![0]),
+            Subtask::new(3, Role::Generate, "final", vec![1, 2]),
+        ])
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let d = diamond();
+        let order = d.topo_order().unwrap();
+        let pos: Vec<usize> = (0..4).map(|i| order.iter().position(|&x| x == i).unwrap()).collect();
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut d = diamond();
+        d.nodes[0].deps = vec![3];
+        d.nodes[0].edge_conf = vec![1.0];
+        assert!(!d.is_acyclic());
+        assert!(d.topo_order().is_none());
+        assert!(d.critical_path_len().is_none());
+    }
+
+    #[test]
+    fn out_of_range_dep_is_cyclic_like() {
+        let d = TaskDag::new(vec![Subtask::new(0, Role::Explain, "x", vec![7])]);
+        assert!(d.topo_order().is_none());
+    }
+
+    #[test]
+    fn critical_path_and_compression() {
+        let d = diamond();
+        assert_eq!(d.critical_path_len(), Some(3));
+        assert!((d.compression_ratio().unwrap() - 0.25).abs() < 1e-12);
+
+        let chain = TaskDag::chain(&["a".into(), "b".into(), "c".into()]);
+        assert_eq!(chain.critical_path_len(), Some(3));
+        assert_eq!(chain.compression_ratio(), Some(0.0));
+    }
+
+    #[test]
+    fn weighted_critical_path() {
+        let d = diamond();
+        // weights: 1, 5, 2, 1 -> longest chain 0->1->3 = 7
+        let w = [1.0, 5.0, 2.0, 1.0];
+        let cp = d.critical_path_weighted(|i| w[i]).unwrap();
+        assert!((cp - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roots_sinks_depths() {
+        let d = diamond();
+        assert_eq!(d.roots(), vec![0]);
+        assert_eq!(d.sinks(), vec![3]);
+        assert_eq!(d.depths().unwrap(), vec![0, 1, 1, 2]);
+        assert_eq!(d.generate_sink(), Some(3));
+    }
+
+    #[test]
+    fn chain_fallback_shape() {
+        let c = TaskDag::chain(&["q1".into(), "q2".into(), "q3".into(), "q4".into()]);
+        assert_eq!(c.nodes[0].role, Role::Explain);
+        assert_eq!(c.nodes[3].role, Role::Generate);
+        assert_eq!(c.nodes[2].deps, vec![1]);
+        assert_eq!(c.roots(), vec![0]);
+    }
+
+    #[test]
+    fn reachability() {
+        let mut d = diamond();
+        // Orphan node 4.
+        d.nodes.push(Subtask::new(4, Role::Analyze, "orphan", vec![]));
+        let seen = d.reachable_from(0);
+        assert!(seen[0] && seen[1] && seen[2] && seen[3]);
+        assert!(!seen[4]);
+    }
+}

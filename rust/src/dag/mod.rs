@@ -1,0 +1,14 @@
+//! Decomposition DAG subsystem: node/graph types, Definition C.2 validation,
+//! bounded repair with chain fallback, and the XML plan format.
+
+pub mod graph;
+pub mod node;
+pub mod repair;
+pub mod validate;
+pub mod xml;
+
+pub use graph::TaskDag;
+pub use node::{Role, Subtask};
+pub use repair::{validate_and_repair, RepairOutcome, R_MAX};
+pub use validate::{validate, ValidationReport, Violation};
+pub use xml::{emit_plan, parse_plan};

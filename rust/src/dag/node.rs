@@ -1,0 +1,147 @@
+//! Subtask node type (Definition C.1: `t_i = (d_i, P_i, tau_i)` plus the
+//! Req/Prod symbol sets used by the dependency-consistency check).
+
+use std::fmt;
+
+/// EAG role label (Definition C.1's `tau_i`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    Explain,
+    Analyze,
+    Generate,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Option<Role> {
+        let lower = s.trim().to_ascii_lowercase();
+        if lower.starts_with("explain") {
+            Some(Role::Explain)
+        } else if lower.starts_with("analyze") || lower.starts_with("analyse") {
+            Some(Role::Analyze)
+        } else if lower.starts_with("generate") {
+            Some(Role::Generate)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Role::Explain => "EXPLAIN",
+            Role::Analyze => "ANALYZE",
+            Role::Generate => "GENERATE",
+        }
+    }
+
+    /// Index into the feature one-hot / `role_tokens` tables.
+    pub fn index(&self) -> usize {
+        match self {
+            Role::Explain => 0,
+            Role::Analyze => 1,
+            Role::Generate => 2,
+        }
+    }
+}
+
+impl fmt::Display for Role {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One subtask in a decomposition DAG.
+///
+/// `deps` holds indices of prerequisite subtasks within the owning
+/// [`super::TaskDag`]; `edge_conf[k]` is the planner's self-reported
+/// confidence for `deps[k]` (used by cycle-breaking repair; defaults to 1.0
+/// when the planner does not report one — repair then falls back to a fixed
+/// priority order, as in the paper's footnote 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Subtask {
+    pub id: usize,
+    pub desc: String,
+    pub role: Role,
+    pub deps: Vec<usize>,
+    pub edge_conf: Vec<f64>,
+    /// Symbols this subtask requires from its parents (Def. C.2 rule 6).
+    pub req: Vec<String>,
+    /// Symbols this subtask produces.
+    pub prod: Vec<String>,
+    /// Planner's output-token estimate (feature input; 0 = unknown).
+    pub est_tokens: f64,
+}
+
+impl Subtask {
+    pub fn new(id: usize, role: Role, desc: &str, deps: Vec<usize>) -> Subtask {
+        let edge_conf = vec![1.0; deps.len()];
+        Subtask {
+            id,
+            desc: desc.to_string(),
+            role,
+            deps,
+            edge_conf,
+            req: Vec::new(),
+            prod: Vec::new(),
+            est_tokens: 0.0,
+        }
+    }
+
+    pub fn with_symbols(mut self, req: Vec<&str>, prod: Vec<&str>) -> Subtask {
+        self.req = req.into_iter().map(String::from).collect();
+        self.prod = prod.into_iter().map(String::from).collect();
+        self
+    }
+
+    pub fn with_tokens(mut self, est: f64) -> Subtask {
+        self.est_tokens = est;
+        self
+    }
+
+    pub fn with_conf(mut self, conf: Vec<f64>) -> Subtask {
+        assert_eq!(conf.len(), self.deps.len());
+        self.edge_conf = conf;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn role_parse_variants() {
+        assert_eq!(Role::parse("Explain: what is x"), Some(Role::Explain));
+        assert_eq!(Role::parse("  ANALYZE the data"), Some(Role::Analyze));
+        assert_eq!(Role::parse("analyse the data"), Some(Role::Analyze));
+        assert_eq!(Role::parse("Generate: final"), Some(Role::Generate));
+        assert_eq!(Role::parse("Summarize"), None);
+    }
+
+    #[test]
+    fn role_roundtrip() {
+        for r in [Role::Explain, Role::Analyze, Role::Generate] {
+            assert_eq!(Role::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(Role::Explain.index(), 0);
+        assert_eq!(Role::Generate.index(), 2);
+    }
+
+    #[test]
+    fn subtask_builders() {
+        let t = Subtask::new(2, Role::Analyze, "check closure", vec![0, 1])
+            .with_symbols(vec!["set_def"], vec!["closure_ok"])
+            .with_tokens(120.0)
+            .with_conf(vec![0.9, 0.4]);
+        assert_eq!(t.deps, vec![0, 1]);
+        assert_eq!(t.edge_conf, vec![0.9, 0.4]);
+        assert_eq!(t.req, vec!["set_def"]);
+        assert_eq!(t.prod, vec!["closure_ok"]);
+        assert_eq!(t.est_tokens, 120.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn conf_length_must_match_deps() {
+        let _ = Subtask::new(0, Role::Explain, "x", vec![1]).with_conf(vec![0.5, 0.5]);
+    }
+}

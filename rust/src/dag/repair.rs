@@ -1,0 +1,444 @@
+//! Bounded, deterministic plan repair (App. C "Validation and repair").
+//!
+//! The repair pipeline applies, per iteration:
+//!   (i)   drop ill-typed edges (out-of-range, duplicate, self, and edges
+//!         violating Req/Prod dependency consistency when a better producer
+//!         exists),
+//!   (ii)  break cycles by removing the lowest-confidence edge on a cycle
+//!         (planner self-reported confidence; fixed priority order when
+//!         absent, per the paper's footnote),
+//!   (iii) enforce rootedness/reachability by attaching orphan nodes to the
+//!         root,
+//!   (iv)  GENERATE-sink discipline: relabel extra GENERATE nodes, append
+//!         sinks to the final aggregation node, create one if missing,
+//!   (v)   truncate to `n_max` subtasks (merging trailing nodes into the
+//!         final GENERATE).
+//!
+//! If the plan is still invalid after `R_MAX` iterations (2 in all paper
+//! experiments), we fall back to a sequential chain — execution is then
+//! strictly ordered but always possible.
+
+use super::graph::TaskDag;
+use super::node::{Role, Subtask};
+use super::validate::{clean_range, validate, Violation};
+
+/// Repair iteration bound (paper: `R_max = 2`).
+pub const R_MAX: usize = 2;
+
+/// How a plan reached executable form (Table 5's row categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepairOutcome {
+    /// Passed validation untouched.
+    Valid,
+    /// Fixed within `R_MAX` repair iterations (value = iterations used).
+    Repaired(usize),
+    /// Replaced by the sequential chain fallback.
+    Fallback,
+}
+
+/// Validate and, if needed, repair `dag`. Always returns an executable DAG.
+pub fn validate_and_repair(dag: &TaskDag, n_max: usize) -> (TaskDag, RepairOutcome) {
+    if validate(dag, n_max).is_valid() {
+        return (dag.clone(), RepairOutcome::Valid);
+    }
+    if dag.is_empty() {
+        return (TaskDag::chain(&["answer the question".to_string()]), RepairOutcome::Fallback);
+    }
+    let mut cur = dag.clone();
+    for iter in 1..=R_MAX {
+        cur = repair_once(&cur, n_max);
+        if validate(&cur, n_max).is_valid() {
+            return (cur, RepairOutcome::Repaired(iter));
+        }
+    }
+    let descs: Vec<String> = dag.nodes.iter().map(|n| n.desc.clone()).collect();
+    let truncated: Vec<String> = descs.into_iter().take(n_max.max(1)).collect();
+    (TaskDag::chain(&truncated), RepairOutcome::Fallback)
+}
+
+/// One deterministic repair sweep.
+fn repair_once(dag: &TaskDag, n_max: usize) -> TaskDag {
+    // (i) structural edge cleanup.
+    let mut d = clean_range(dag);
+
+    // (i-b) dependency consistency: for every missing required symbol, add an
+    // edge from a producer if one exists (and it would not self-loop);
+    // otherwise drop the requirement (the executor will re-derive it).
+    let producers: Vec<(usize, Vec<String>)> =
+        d.nodes.iter().map(|n| (n.id, n.prod.clone())).collect();
+    for i in 0..d.nodes.len() {
+        let mut add: Vec<usize> = Vec::new();
+        let mut keep_req: Vec<String> = Vec::new();
+        for sym in d.nodes[i].req.clone() {
+            let satisfied = d.nodes[i]
+                .deps
+                .iter()
+                .any(|&p| d.nodes[p].prod.iter().any(|s| *s == sym));
+            if satisfied {
+                keep_req.push(sym);
+                continue;
+            }
+            if let Some((j, _)) = producers
+                .iter()
+                .enumerate()
+                .find(|(j, (_, prods))| *j != i && prods.iter().any(|s| *s == sym))
+            {
+                add.push(j);
+                keep_req.push(sym);
+            }
+            // No producer anywhere: requirement dropped.
+        }
+        d.nodes[i].req = keep_req;
+        for j in add {
+            if !d.nodes[i].deps.contains(&j) {
+                d.nodes[i].deps.push(j);
+                d.nodes[i].edge_conf.push(0.5); // synthetic edge, low confidence
+            }
+        }
+    }
+
+    // (ii) cycle breaking.
+    while !d.is_acyclic() {
+        remove_weakest_cycle_edge(&mut d);
+    }
+
+    // (iv-a) GENERATE discipline: relabel all but the best GENERATE.
+    let gens: Vec<usize> =
+        (0..d.nodes.len()).filter(|&i| d.nodes[i].role == Role::Generate).collect();
+    if gens.is_empty() {
+        if let Some(last) = d.nodes.len().checked_sub(1) {
+            d.nodes[last].role = Role::Generate;
+        }
+    } else if gens.len() > 1 {
+        // Keep the GENERATE with the largest depth (latest in the plan);
+        // relabel the rest ANALYZE.
+        let depths = d.depths().unwrap_or_else(|| vec![0; d.nodes.len()]);
+        let keep = *gens.iter().max_by_key(|&&g| (depths[g], g)).unwrap();
+        for &g in &gens {
+            if g != keep {
+                d.nodes[g].role = Role::Analyze;
+            }
+        }
+    }
+
+    // (ii-b) root discipline: choose the root, clear its deps, relabel.
+    let root = choose_root(&d);
+    d.nodes[root].deps.clear();
+    d.nodes[root].edge_conf.clear();
+    d.nodes[root].role = Role::Explain;
+
+    // (iii) reachability: attach orphan subgraphs to the root.
+    let seen = d.reachable_from(root);
+    for i in 0..d.nodes.len() {
+        if !seen[i] && d.nodes[i].deps.is_empty() && i != root {
+            d.nodes[i].deps.push(root);
+            d.nodes[i].edge_conf.push(0.5);
+        }
+    }
+    // Second pass for nodes that were non-root orphans with deps inside an
+    // unreachable cluster: attach cluster entry points to the root.
+    let seen = d.reachable_from(root);
+    for i in 0..d.nodes.len() {
+        if !seen[i] {
+            let reachable_dep = d.nodes[i].deps.iter().any(|&p| seen[p]);
+            if !reachable_dep {
+                d.nodes[i].deps.push(root);
+                d.nodes[i].edge_conf.push(0.5);
+            }
+        }
+    }
+
+    // (iv-b) make the GENERATE node the unique sink: all other sinks feed it.
+    let gen = (0..d.nodes.len())
+        .filter(|&i| d.nodes[i].role == Role::Generate)
+        .max_by_key(|&i| i)
+        .unwrap_or(d.nodes.len() - 1);
+    // GENERATE must have no children: re-point its children's dep to gen's deps.
+    let children = d.children();
+    for &c in &children[gen] {
+        let node = &mut d.nodes[c];
+        if let Some(k) = node.deps.iter().position(|&p| p == gen) {
+            node.deps.remove(k);
+            node.edge_conf.remove(k);
+        }
+    }
+    let sinks = d.sinks();
+    for s in sinks {
+        if s != gen && !d.nodes[gen].deps.contains(&s) {
+            d.nodes[gen].deps.push(s);
+            d.nodes[gen].edge_conf.push(0.5);
+        }
+    }
+
+    // (v) size cap: merge overflow nodes into the GENERATE node.
+    if d.nodes.len() > n_max {
+        d = truncate_to(&d, n_max);
+    }
+
+    d
+}
+
+/// Remove the lowest-confidence edge participating in a cycle.
+fn remove_weakest_cycle_edge(d: &mut TaskDag) {
+    // Find a cycle via DFS back-edge detection.
+    let n = d.nodes.len();
+    let children = d.children();
+    let mut color = vec![0u8; n]; // 0 white, 1 gray, 2 black
+    let mut parent_edge: Vec<Option<usize>> = vec![None; n];
+    let mut cycle: Option<(usize, usize)> = None; // back edge u -> v
+
+    fn dfs(
+        u: usize,
+        children: &[Vec<usize>],
+        color: &mut [u8],
+        parent_edge: &mut [Option<usize>],
+        cycle: &mut Option<(usize, usize)>,
+    ) {
+        color[u] = 1;
+        for &c in &children[u] {
+            if cycle.is_some() {
+                return;
+            }
+            if color[c] == 0 {
+                parent_edge[c] = Some(u);
+                dfs(c, children, color, parent_edge, cycle);
+            } else if color[c] == 1 {
+                *cycle = Some((u, c));
+                return;
+            }
+        }
+        color[u] = 2;
+    }
+
+    for s in 0..n {
+        if color[s] == 0 && cycle.is_none() {
+            dfs(s, &children, &mut color, &mut parent_edge, &mut cycle);
+        }
+    }
+
+    let Some((u, v)) = cycle else {
+        return; // acyclic (or out-of-range deps already cleaned)
+    };
+
+    // Reconstruct the cycle node list v -> ... -> u -> v.
+    let mut path = vec![u];
+    let mut cur = u;
+    while cur != v {
+        match parent_edge[cur] {
+            Some(p) => {
+                path.push(p);
+                cur = p;
+            }
+            None => break,
+        }
+    }
+    path.reverse(); // v ... u
+
+    // Candidate edges on the cycle: (path[k] -> path[k+1]) and (u -> v).
+    // Each edge (a -> b) is stored as `b.deps` containing `a`.
+    let mut edges: Vec<(usize, usize, f64)> = Vec::new(); // (parent, child, conf)
+    for w in path.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if let Some(k) = d.nodes[b].deps.iter().position(|&p| p == a) {
+            edges.push((a, b, d.nodes[b].edge_conf.get(k).copied().unwrap_or(1.0)));
+        }
+    }
+    if let Some(k) = d.nodes[v].deps.iter().position(|&p| p == u) {
+        edges.push((u, v, d.nodes[v].edge_conf.get(k).copied().unwrap_or(1.0)));
+    }
+
+    // Lowest confidence first; ties by (parent, child) for determinism (the
+    // paper's "fixed priority order" when confidences are absent/equal).
+    let (a, b, _) = edges
+        .into_iter()
+        .min_by(|x, y| x.2.partial_cmp(&y.2).unwrap().then(x.0.cmp(&y.0)).then(x.1.cmp(&y.1)))
+        .expect("cycle must contain at least one edge");
+    let node = &mut d.nodes[b];
+    if let Some(k) = node.deps.iter().position(|&p| p == a) {
+        node.deps.remove(k);
+        node.edge_conf.remove(k);
+    }
+}
+
+/// Root selection priority: existing unique deg-0 EXPLAIN; else the first
+/// EXPLAIN node; else node 0.
+fn choose_root(d: &TaskDag) -> usize {
+    let roots = d.roots();
+    if let [r] = roots.as_slice() {
+        if d.nodes[*r].role == Role::Explain {
+            return *r;
+        }
+    }
+    roots
+        .iter()
+        .copied()
+        .find(|&r| d.nodes[r].role == Role::Explain)
+        .or_else(|| (0..d.nodes.len()).find(|&i| d.nodes[i].role == Role::Explain))
+        .unwrap_or(0)
+}
+
+/// Keep the first `n_max - 1` non-GENERATE nodes plus the GENERATE node,
+/// re-indexing deps (dropped deps are redirected to the kept prefix).
+fn truncate_to(d: &TaskDag, n_max: usize) -> TaskDag {
+    let gen = (0..d.nodes.len())
+        .filter(|&i| d.nodes[i].role == Role::Generate)
+        .max_by_key(|&i| i)
+        .unwrap_or(d.nodes.len() - 1);
+    let mut keep: Vec<usize> = (0..d.nodes.len()).filter(|&i| i != gen).take(n_max - 1).collect();
+    keep.push(gen);
+    let index_of = |old: usize| keep.iter().position(|&k| k == old);
+
+    let mut nodes = Vec::with_capacity(keep.len());
+    for (new_id, &old) in keep.iter().enumerate() {
+        let mut n = d.nodes[old].clone();
+        n.id = new_id;
+        let mut deps = Vec::new();
+        let mut conf = Vec::new();
+        for (k, &p) in n.deps.iter().enumerate() {
+            if let Some(np) = index_of(p) {
+                if np != new_id && !deps.contains(&np) {
+                    deps.push(np);
+                    conf.push(n.edge_conf.get(k).copied().unwrap_or(1.0));
+                }
+            }
+        }
+        n.deps = deps;
+        n.edge_conf = conf;
+        nodes.push(n);
+    }
+    TaskDag::new(nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valid_dag() -> TaskDag {
+        TaskDag::new(vec![
+            Subtask::new(0, Role::Explain, "root", vec![]),
+            Subtask::new(1, Role::Analyze, "a", vec![0]),
+            Subtask::new(2, Role::Analyze, "b", vec![0]),
+            Subtask::new(3, Role::Generate, "final", vec![1, 2]),
+        ])
+    }
+
+    #[test]
+    fn valid_passes_through_unchanged() {
+        let d = valid_dag();
+        let (out, outcome) = validate_and_repair(&d, 7);
+        assert_eq!(outcome, RepairOutcome::Valid);
+        assert_eq!(out, d);
+    }
+
+    #[test]
+    fn repairs_cycle_by_lowest_confidence() {
+        let mut d = valid_dag();
+        // Introduce cycle 1 -> 3 -> 1 where the 3->1 edge has low confidence.
+        d.nodes[1].deps = vec![0, 3];
+        d.nodes[1].edge_conf = vec![1.0, 0.1];
+        let (out, outcome) = validate_and_repair(&d, 7);
+        assert!(matches!(outcome, RepairOutcome::Repaired(_)));
+        assert!(validate(&out, 7).is_valid());
+        // The low-confidence edge 3->1 is gone; 0->1 survives.
+        assert!(out.nodes[1].deps.contains(&0));
+        assert!(!out.nodes[1].deps.contains(&3));
+    }
+
+    #[test]
+    fn repairs_orphans_to_root() {
+        let mut d = valid_dag();
+        d.nodes.push(Subtask::new(4, Role::Analyze, "orphan", vec![]));
+        let (out, outcome) = validate_and_repair(&d, 7);
+        assert!(matches!(outcome, RepairOutcome::Repaired(_)));
+        assert!(validate(&out, 7).is_valid());
+        // Orphan now hangs off the root and feeds the GENERATE sink.
+        assert!(out.nodes[4].deps.contains(&0));
+    }
+
+    #[test]
+    fn repairs_missing_generate() {
+        let mut d = valid_dag();
+        d.nodes[3].role = Role::Analyze;
+        let (out, outcome) = validate_and_repair(&d, 7);
+        assert!(matches!(outcome, RepairOutcome::Repaired(_)));
+        assert_eq!(out.generate_sink().is_some(), true);
+    }
+
+    #[test]
+    fn repairs_multiple_generates() {
+        let mut d = valid_dag();
+        d.nodes[1].role = Role::Generate;
+        let (out, outcome) = validate_and_repair(&d, 7);
+        assert!(matches!(outcome, RepairOutcome::Repaired(_)));
+        assert!(validate(&out, 7).is_valid());
+        let gens = out.nodes.iter().filter(|n| n.role == Role::Generate).count();
+        assert_eq!(gens, 1);
+    }
+
+    #[test]
+    fn repairs_missing_symbol_by_adding_edge() {
+        let mut d = valid_dag();
+        d.nodes[2].prod = vec!["lemma".into()];
+        d.nodes[1].req = vec!["lemma".into()]; // parent 0 doesn't produce it
+        let (out, outcome) = validate_and_repair(&d, 7);
+        assert!(matches!(outcome, RepairOutcome::Repaired(_)), "{outcome:?}");
+        assert!(validate(&out, 7).is_valid());
+        assert!(out.nodes[1].deps.contains(&2), "edge from producer added");
+    }
+
+    #[test]
+    fn drops_unproducible_symbol() {
+        let mut d = valid_dag();
+        d.nodes[1].req = vec!["nowhere".into()];
+        let (out, outcome) = validate_and_repair(&d, 7);
+        assert!(matches!(outcome, RepairOutcome::Repaired(_)));
+        assert!(out.nodes[1].req.is_empty());
+    }
+
+    #[test]
+    fn truncates_oversized_plans() {
+        let descs: Vec<String> = (0..10).map(|i| format!("s{i}")).collect();
+        let mut big = TaskDag::chain(&descs); // 10 nodes, valid except size
+        big.nodes[9].role = Role::Generate;
+        let (out, outcome) = validate_and_repair(&big, 7);
+        assert!(matches!(outcome, RepairOutcome::Repaired(_) | RepairOutcome::Fallback));
+        assert!(out.len() <= 7);
+        assert!(validate(&out, 7).is_valid());
+    }
+
+    #[test]
+    fn hopeless_plan_falls_back_to_chain() {
+        // All nodes in one big cycle of confident edges AND self-deps AND no
+        // roles — after R_MAX sweeps this may still fail; fallback guarantees
+        // an executable chain either way.
+        let mut nodes = Vec::new();
+        for i in 0..5 {
+            let mut t = Subtask::new(i, Role::Analyze, &format!("s{i}"), vec![(i + 1) % 5]);
+            t.edge_conf = vec![1.0];
+            nodes.push(t);
+        }
+        let d = TaskDag::new(nodes);
+        let (out, _outcome) = validate_and_repair(&d, 7);
+        assert!(validate(&out, 7).is_valid());
+    }
+
+    #[test]
+    fn fallback_preserves_descriptions() {
+        let d = TaskDag::new(vec![]);
+        let (out, outcome) = validate_and_repair(&d, 7);
+        // Empty plan -> minimal valid chain (EXPLAIN root + GENERATE sink).
+        assert_eq!(outcome, RepairOutcome::Fallback);
+        assert_eq!(out.len(), 2);
+        assert!(validate(&out, 7).is_valid());
+    }
+
+    #[test]
+    fn repair_is_deterministic() {
+        let mut d = valid_dag();
+        d.nodes[1].deps = vec![0, 3];
+        d.nodes[1].edge_conf = vec![1.0, 1.0]; // equal confidence -> priority order
+        let (a, _) = validate_and_repair(&d, 7);
+        let (b, _) = validate_and_repair(&d, 7);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,182 @@
+//! Subtask feature packing — the rust half of the embedding interface.
+//!
+//! The paper encodes each subtask with qwen3-embedding-0.6b; our substitute
+//! exposes the same information channel as a fixed 16-dim feature vector
+//! (layout shared with `python/compile/simparams.py`, version-checked via
+//! the artifact manifest). The learned embedder lives *inside* the router
+//! HLO artifact; this module only packs the raw features the network
+//! consumes, including the *noisy* difficulty/criticality observations —
+//! the router never sees latent ground truth.
+
+use crate::config::simparams::{
+    SimParams, FAN_NORM, FEAT_CRIT, FEAT_DIFF1, FEAT_DIFF2, FEAT_DIM, FEAT_DOMAIN, FEAT_FANIN,
+    FEAT_FANOUT, FEAT_NSUB, FEAT_POS, FEAT_ROLE, FEAT_SINK, FEAT_TOKENS, TOKEN_NORM,
+};
+use crate::dag::{Role, TaskDag};
+use crate::util::rng::Rng;
+use crate::workload::{Query, SubtaskLatent};
+
+/// Packed feature vector for one subtask.
+pub type Features = [f32; FEAT_DIM];
+
+/// Observation context: per-query DAG structure needed for packing.
+pub struct FeatureContext {
+    depths: Vec<usize>,
+    out_degrees: Vec<usize>,
+    n: usize,
+    max_depth: usize,
+    domain: usize,
+}
+
+impl FeatureContext {
+    pub fn new(dag: &TaskDag, query: &Query) -> FeatureContext {
+        let depths = dag.depths().unwrap_or_else(|| vec![0; dag.len()]);
+        let max_depth = depths.iter().copied().max().unwrap_or(0);
+        FeatureContext {
+            depths,
+            out_degrees: dag.out_degrees(),
+            n: dag.len(),
+            max_depth,
+            domain: query.domain,
+        }
+    }
+
+    /// Pack the feature vector for node `i`.
+    ///
+    /// The two difficulty observations and the criticality hint are noisy
+    /// views of the latent (distinct draws per call, like re-embedding a
+    /// paraphrase); everything else is exact structure.
+    pub fn features(
+        &self,
+        dag: &TaskDag,
+        i: usize,
+        latent: &SubtaskLatent,
+        sp: &SimParams,
+        rng: &mut Rng,
+    ) -> Features {
+        let node = &dag.nodes[i];
+        let mut f = [0.0f32; FEAT_DIM];
+        f[FEAT_ROLE + node.role.index()] = 1.0;
+        f[FEAT_DIFF1] =
+            clamp01(latent.difficulty + rng.normal_ms(0.0, sp.diff_noise_std)) as f32;
+        f[FEAT_DIFF2] =
+            clamp01(latent.difficulty + rng.normal_ms(0.0, sp.diff_noise_std)) as f32;
+        let est = if node.est_tokens > 0.0 { node.est_tokens } else { latent.out_tokens };
+        f[FEAT_TOKENS] = (est / TOKEN_NORM) as f32;
+        f[FEAT_DOMAIN + self.domain] = 1.0;
+        f[FEAT_POS] = if self.max_depth == 0 {
+            0.0
+        } else {
+            self.depths[i] as f32 / self.max_depth as f32
+        };
+        f[FEAT_FANIN] = (node.deps.len() as f64 / FAN_NORM) as f32;
+        f[FEAT_FANOUT] = (self.out_degrees[i] as f64 / FAN_NORM) as f32;
+        f[FEAT_NSUB] = (self.n as f64 / sp.nmax as f64) as f32;
+        f[FEAT_SINK] = if node.role == Role::Generate && self.out_degrees[i] == 0 {
+            1.0
+        } else {
+            0.0
+        };
+        f[FEAT_CRIT] =
+            clamp01(latent.criticality + rng.normal_ms(0.0, sp.crit_noise_std)) as f32;
+        f
+    }
+}
+
+fn clamp01(x: f64) -> f64 {
+    x.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Subtask;
+    use crate::workload::{generate_queries, Benchmark};
+
+    fn setup() -> (TaskDag, Query, Vec<SubtaskLatent>, SimParams) {
+        let dag = TaskDag::new(vec![
+            Subtask::new(0, Role::Explain, "r", vec![]),
+            Subtask::new(1, Role::Analyze, "a", vec![0]),
+            Subtask::new(2, Role::Analyze, "b", vec![0]),
+            Subtask::new(3, Role::Generate, "g", vec![1, 2]),
+        ]);
+        let sp = SimParams::default();
+        let q = generate_queries(Benchmark::Gpqa, 1, 0).pop().unwrap();
+        let mut rng = Rng::new(3);
+        let lat = crate::workload::sample_latents(&dag, &q, &sp, &mut rng);
+        (dag, q, lat, sp)
+    }
+
+    #[test]
+    fn one_hot_blocks_are_one_hot() {
+        let (dag, q, lat, sp) = setup();
+        let ctx = FeatureContext::new(&dag, &q);
+        let mut rng = Rng::new(1);
+        for i in 0..dag.len() {
+            let f = ctx.features(&dag, i, &lat[i], &sp, &mut rng);
+            let role_sum: f32 = f[FEAT_ROLE..FEAT_ROLE + 3].iter().sum();
+            let dom_sum: f32 = f[FEAT_DOMAIN..FEAT_DOMAIN + 4].iter().sum();
+            assert_eq!(role_sum, 1.0);
+            assert_eq!(dom_sum, 1.0);
+        }
+    }
+
+    #[test]
+    fn structure_features_exact() {
+        let (dag, q, lat, sp) = setup();
+        let ctx = FeatureContext::new(&dag, &q);
+        let mut rng = Rng::new(2);
+        let f0 = ctx.features(&dag, 0, &lat[0], &sp, &mut rng);
+        let f3 = ctx.features(&dag, 3, &lat[3], &sp, &mut rng);
+        assert_eq!(f0[FEAT_POS], 0.0);
+        assert_eq!(f3[FEAT_POS], 1.0);
+        assert_eq!(f3[FEAT_SINK], 1.0);
+        assert_eq!(f0[FEAT_SINK], 0.0);
+        assert_eq!(f3[FEAT_FANIN], 2.0 / FAN_NORM as f32);
+        assert_eq!(f0[FEAT_FANOUT], 2.0 / FAN_NORM as f32);
+        assert_eq!(f0[FEAT_NSUB], (4.0 / 7.0) as f32);
+    }
+
+    #[test]
+    fn difficulty_observations_are_noisy_but_correlated() {
+        let (dag, q, lat, sp) = setup();
+        let ctx = FeatureContext::new(&dag, &q);
+        let mut rng = Rng::new(4);
+        let mut errs = Vec::new();
+        for _ in 0..500 {
+            let f = ctx.features(&dag, 1, &lat[1], &sp, &mut rng);
+            errs.push((f[FEAT_DIFF1] as f64 - lat[1].difficulty).abs());
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean_err > 0.0 && mean_err < 3.0 * sp.diff_noise_std);
+        // Two observations differ (independent noise).
+        let f = ctx.features(&dag, 1, &lat[1], &sp, &mut rng);
+        assert_ne!(f[FEAT_DIFF1], f[FEAT_DIFF2]);
+    }
+
+    #[test]
+    fn features_in_bounds() {
+        let (dag, q, lat, sp) = setup();
+        let ctx = FeatureContext::new(&dag, &q);
+        let mut rng = Rng::new(5);
+        for i in 0..dag.len() {
+            for _ in 0..50 {
+                let f = ctx.features(&dag, i, &lat[i], &sp, &mut rng);
+                for (k, v) in f.iter().enumerate() {
+                    assert!(v.is_finite() && *v >= 0.0, "feat {k} = {v}");
+                }
+                assert!(f[FEAT_DIFF1] <= 1.0 && f[FEAT_CRIT] <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn planner_token_estimate_preferred() {
+        let (mut dag, q, lat, sp) = setup();
+        dag.nodes[1].est_tokens = 256.0;
+        let ctx = FeatureContext::new(&dag, &q);
+        let mut rng = Rng::new(6);
+        let f = ctx.features(&dag, 1, &lat[1], &sp, &mut rng);
+        assert_eq!(f[FEAT_TOKENS], (256.0 / TOKEN_NORM) as f32);
+    }
+}

@@ -1,0 +1,827 @@
+//! Per-table / per-figure experiment implementations.
+//!
+//! Every function regenerates one artifact of the paper's evaluation
+//! section on the simulation substrate and renders it in the paper's row
+//! format. Absolute numbers are substrate-dependent; the *shape* — method
+//! ordering, who wins each column, crossover locations — is the
+//! reproduction target (see EXPERIMENTS.md for paper-vs-measured).
+
+use crate::baselines::{Cot, Direct, Dot, HybridLlm, Method, Pasta, Sot};
+use crate::bench::Table;
+use crate::config::simparams::SimParams;
+use crate::dag::RepairOutcome;
+use crate::metrics::{MethodMetrics, QueryOutcome, SeedStats};
+use crate::models::SimExecutor;
+use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
+use crate::planner::synthetic::{PlannerProfile, SyntheticPlanner};
+use crate::planner::Planner;
+use crate::router::{MirrorPredictor, RoutePolicy};
+use crate::scheduler::events::PositionHistogram;
+use crate::scheduler::ScheduleConfig;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::workload::{generate_queries, Benchmark, Query};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// All registered experiment ids.
+pub const EXPERIMENT_IDS: [&str; 12] = [
+    "calibrate", "table1", "table2", "table3", "table5", "table6_fig4", "fig3", "table7",
+    "table8", "fig5", "d1_exposure", "ablations",
+];
+
+/// Shared experiment context.
+#[derive(Clone)]
+pub struct ExpContext {
+    pub seeds: Vec<u64>,
+    /// Query-count scale factor (1.0 = paper-sized sets).
+    pub scale: f64,
+    pub artifacts_dir: PathBuf,
+    pub threads: usize,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            seeds: vec![11, 22, 33],
+            scale: 1.0,
+            artifacts_dir: crate::config::default_artifacts_dir(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+impl ExpContext {
+    /// Bench configuration from env: BENCH_SCALE (default 1.0 = paper
+    /// sizes), BENCH_SEEDS (default 3).
+    pub fn from_bench_env() -> ExpContext {
+        let mut ctx = ExpContext::default();
+        if let Some(s) = std::env::var("BENCH_SCALE").ok().and_then(|v| v.parse().ok()) {
+            ctx.scale = s;
+        }
+        if let Some(n) = std::env::var("BENCH_SEEDS").ok().and_then(|v| v.parse::<u64>().ok()) {
+            ctx.seeds = (0..n).map(|i| 11 + 11 * i).collect();
+        }
+        ctx
+    }
+
+    pub fn quick() -> ExpContext {
+        ExpContext { seeds: vec![11], scale: 0.3, ..Default::default() }
+    }
+
+    fn n_queries(&self, bench: Benchmark) -> usize {
+        ((bench.params().n_queries as f64 * self.scale).round() as usize).max(10)
+    }
+
+    /// Load the trained-router mirror (synthetic fallback keeps experiments
+    /// runnable pre-`make artifacts`, with a loud note).
+    pub fn predictor(&self) -> Arc<MirrorPredictor> {
+        match MirrorPredictor::from_meta_file(&self.artifacts_dir.join("router_meta.json")) {
+            Ok(p) => Arc::new(p),
+            Err(e) => {
+                eprintln!(
+                    "[eval] WARNING: trained router unavailable ({e}); using synthetic predictor"
+                );
+                Arc::new(MirrorPredictor::synthetic_for_tests())
+            }
+        }
+    }
+
+    pub fn hybridflow(&self, policy: RoutePolicy) -> HybridFlowPipeline {
+        let sp = SimParams::default();
+        let mut cfg = PipelineConfig::paper_default(&sp);
+        cfg.policy = policy;
+        HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            self.predictor(),
+            cfg,
+        )
+    }
+}
+
+/// Adapter: run a HybridFlow pipeline as a `Method` row.
+pub struct HybridFlowMethod {
+    pub pipeline: HybridFlowPipeline,
+    pub row_name: String,
+}
+
+impl Method for HybridFlowMethod {
+    fn name(&self) -> &str {
+        &self.row_name
+    }
+
+    fn model_label(&self) -> String {
+        format!(
+            "{}&{}",
+            self.pipeline.executor.edge.kind.label(),
+            self.pipeline.executor.cloud.kind.label()
+        )
+    }
+
+    fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
+        self.pipeline.run_query(query, rng)
+    }
+}
+
+/// Evaluate one method on one benchmark across seeds (parallel over seeds).
+pub fn eval_method(
+    method: Arc<dyn Method>,
+    bench: Benchmark,
+    ctx: &ExpContext,
+    pool: &ThreadPool,
+) -> MethodMetrics {
+    let n = ctx.n_queries(bench);
+    let jobs: Vec<u64> = ctx.seeds.clone();
+    let seeds: Vec<SeedStats> = pool.map(jobs, move |seed| {
+        let queries = generate_queries(bench, n, seed);
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let outcomes: Vec<QueryOutcome> =
+            queries.iter().map(|q| method.run(q, &mut rng)).collect();
+        SeedStats::from_outcomes(&outcomes)
+    });
+    MethodMetrics::from_seeds(&seeds)
+}
+
+fn method_grid(ctx: &ExpContext) -> Vec<Arc<dyn Method>> {
+    let ex = SimExecutor::paper_pair;
+    let sp = SimParams::default();
+    vec![
+        Arc::new(Direct::new(ex(), false)),
+        Arc::new(Direct::new(ex(), true)),
+        Arc::new(Cot::new(ex(), false)),
+        Arc::new(Cot::new(ex(), true)),
+        Arc::new(Sot::new(ex(), false)),
+        Arc::new(Sot::new(ex(), true)),
+        Arc::new(Pasta::new(ex(), false)),
+        Arc::new(Pasta::new(ex(), true)),
+        Arc::new(HybridLlm::paper_default(ex())),
+        Arc::new(Dot::paper_default(ex())),
+        Arc::new(HybridFlowMethod {
+            pipeline: ctx.hybridflow(RoutePolicy::hybridflow(&sp)),
+            row_name: "HybridFlow (Ours)".into(),
+        }),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Experiments.
+// ---------------------------------------------------------------------------
+
+/// Single-model reference accuracies vs. the paper's Table 1 targets —
+/// the substrate calibration check.
+pub fn calibrate(ctx: &ExpContext) -> String {
+    let pool = ThreadPool::new(ctx.threads);
+    let mut t = Table::new(
+        "Calibration: single-model reference vs paper targets",
+        &["Method", "Model", "Benchmark", "Acc (sim)", "Acc (paper)", "C_time (sim)", "C_time (paper)"],
+    );
+    let paper: &[(&str, bool, Benchmark, f64, f64)] = &[
+        ("Direct", false, Benchmark::Gpqa, 16.89, 6.61),
+        ("Direct", true, Benchmark::Gpqa, 51.79, 15.26),
+        ("Direct", false, Benchmark::MmluPro, 22.83, 7.03),
+        ("Direct", true, Benchmark::MmluPro, 65.50, 11.77),
+        ("Direct", false, Benchmark::Aime24, 4.44, 9.92),
+        ("Direct", true, Benchmark::Aime24, 37.78, 50.44),
+        ("Direct", false, Benchmark::LiveBench, 12.00, 13.34),
+        ("Direct", true, Benchmark::LiveBench, 58.25, 36.77),
+        ("CoT", false, Benchmark::Gpqa, 25.54, 11.99),
+        ("CoT", true, Benchmark::Gpqa, 57.28, 18.26),
+        ("CoT", true, Benchmark::MmluPro, 72.00, 19.35),
+        ("CoT", true, Benchmark::Aime24, 44.42, 56.70),
+        ("CoT", true, Benchmark::LiveBench, 62.25, 29.77),
+    ];
+    for &(name, cloud, bench, acc_paper, time_paper) in paper {
+        let m: Arc<dyn Method> = if name == "Direct" {
+            Arc::new(Direct::new(SimExecutor::paper_pair(), cloud))
+        } else {
+            Arc::new(Cot::new(SimExecutor::paper_pair(), cloud))
+        };
+        let label = m.model_label();
+        let metrics = eval_method(m, bench, ctx, &pool);
+        t.row(vec![
+            name.into(),
+            label,
+            bench.display().into(),
+            format!("{:.2}", metrics.acc_mean),
+            format!("{acc_paper:.2}"),
+            format!("{:.2}", metrics.time_mean),
+            format!("{time_paper:.2}"),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 1: accuracy of all methods across the four benchmarks.
+pub fn table1(ctx: &ExpContext) -> String {
+    let pool = ThreadPool::new(ctx.threads);
+    let mut t = Table::new(
+        "Table 1: Accuracy (%, mean+/-std)",
+        &["Method", "Model", "GPQA", "MMLU-Pro", "AIME24", "LiveBench-Reasoning", "Avg"],
+    );
+    for m in method_grid(ctx) {
+        let mut cells = vec![m.name().to_string(), m.model_label()];
+        let mut accs = Vec::new();
+        for bench in Benchmark::ALL {
+            let metrics = eval_method(Arc::clone(&m), bench, ctx, &pool);
+            accs.push(metrics.acc_mean);
+            cells.push(metrics.acc_cell());
+        }
+        cells.push(format!("{:.2}", mean(&accs)));
+        t.row(cells);
+    }
+    t.render()
+}
+
+/// Table 2: efficiency (C_time and C_API) of all methods.
+pub fn table2(ctx: &ExpContext) -> String {
+    let pool = ThreadPool::new(ctx.threads);
+    let mut t = Table::new(
+        "Table 2: Efficiency (C_time s / C_API $)",
+        &["Method", "Model", "Metric", "GPQA", "MMLU-Pro", "AIME24", "LiveBench-Reasoning", "Avg"],
+    );
+    for m in method_grid(ctx) {
+        let per_bench: Vec<MethodMetrics> = Benchmark::ALL
+            .iter()
+            .map(|&b| eval_method(Arc::clone(&m), b, ctx, &pool))
+            .collect();
+        let mut time_cells = vec![m.name().to_string(), m.model_label(), "C_time".to_string()];
+        let mut times = Vec::new();
+        for metrics in &per_bench {
+            time_cells.push(metrics.time_cell());
+            times.push(metrics.time_mean);
+        }
+        time_cells.push(format!("{:.2}", mean(&times)));
+        t.row(time_cells);
+
+        let mut api_cells = vec![m.name().to_string(), m.model_label(), "C_API".to_string()];
+        let mut apis = Vec::new();
+        for metrics in &per_bench {
+            api_cells.push(metrics.api_cell());
+            apis.push(metrics.api_mean);
+        }
+        let avg_api = mean(&apis);
+        api_cells.push(if avg_api == 0.0 { "-".into() } else { format!("{avg_api:.4}") });
+        t.row(api_cells);
+    }
+    t.render()
+}
+
+/// Table 3: routing-strategy ablation on GPQA.
+pub fn table3(ctx: &ExpContext) -> String {
+    let pool = ThreadPool::new(ctx.threads);
+    let sp = SimParams::default();
+    let bench = Benchmark::Gpqa;
+
+    // Reference: edge CoT (the paper's Edge row is CoT on Llama3.2-3B).
+    let edge_ref = eval_method(
+        Arc::new(Cot::new(SimExecutor::paper_pair(), false)),
+        bench,
+        ctx,
+        &pool,
+    );
+
+    let rows: Vec<(String, Arc<dyn Method>)> = vec![
+        (
+            "Cloud (all)".into(),
+            Arc::new(HybridFlowMethod {
+                pipeline: ctx.hybridflow(RoutePolicy::AllCloud),
+                row_name: "Cloud".into(),
+            }),
+        ),
+        (
+            "Random".into(),
+            Arc::new(HybridFlowMethod {
+                pipeline: ctx.hybridflow(RoutePolicy::Random(0.42)),
+                row_name: "Random".into(),
+            }),
+        ),
+        (
+            "Fixed Threshold (tau0=0.5)".into(),
+            Arc::new(HybridFlowMethod {
+                pipeline: ctx.hybridflow(RoutePolicy::FixedThreshold(0.5)),
+                row_name: "Fixed".into(),
+            }),
+        ),
+        ("HybridFlow-Chain".into(), {
+            let mut p = ctx.hybridflow(RoutePolicy::hybridflow(&sp));
+            p.config.schedule = ScheduleConfig { chain_mode: true, ..Default::default() };
+            Arc::new(HybridFlowMethod { pipeline: p, row_name: "HybridFlow-Chain".into() })
+        }),
+        (
+            "HybridFlow (Ours)".into(),
+            Arc::new(HybridFlowMethod {
+                pipeline: ctx.hybridflow(RoutePolicy::hybridflow(&sp)),
+                row_name: "HybridFlow".into(),
+            }),
+        ),
+        (
+            "Oracle (knapsack bound)".into(),
+            Arc::new(HybridFlowMethod {
+                pipeline: ctx.hybridflow(RoutePolicy::Oracle),
+                row_name: "Oracle".into(),
+            }),
+        ),
+    ];
+
+    let mut t = Table::new(
+        "Table 3: Routing ablation on GPQA",
+        &["Method", "Offload (%)", "Acc (%)", "Latency (s)", "API ($)", "Norm.Cost c", "Utility u"],
+    );
+    t.row(vec![
+        "Edge (all)".into(),
+        "0.0".into(),
+        format!("{:.2}", edge_ref.acc_mean),
+        format!("{:.2}", edge_ref.time_mean),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    for (label, m) in rows {
+        let metrics = eval_method(m, bench, ctx, &pool);
+        let (c, u) = metrics.norm_cost_and_utility(&sp, &edge_ref);
+        t.row(vec![
+            label,
+            format!("{:.1}", metrics.offload_mean * 100.0),
+            format!("{:.2}", metrics.acc_mean),
+            format!("{:.2}", metrics.time_mean),
+            metrics.api_cell(),
+            c.map_or("-".into(), |v| format!("{v:.4}")),
+            u.map_or("-".into(), |v| format!("{v:.4}")),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 5: planner validity/repair/fallback statistics.
+pub fn table5(ctx: &ExpContext) -> String {
+    let planner = SyntheticPlanner::paper_main();
+    let mut t = Table::new(
+        "Table 5: Planner DAG validity and repair",
+        &["Benchmark", "Valid (%)", "Repaired (%)", "Fallback (%)", "#nodes (avg)"],
+    );
+    for bench in [Benchmark::Gpqa, Benchmark::LiveBench] {
+        let n = (500.0 * ctx.scale).max(50.0) as usize;
+        let mut valid = 0;
+        let mut repaired = 0;
+        let mut fallback = 0;
+        let mut nodes = 0usize;
+        let mut executed = 0usize;
+        for seed in &ctx.seeds {
+            let mut rng = Rng::new(seed ^ 0x7a5);
+            for q in generate_queries(bench, n, *seed) {
+                let plan = planner.plan(&q, 7, &mut rng);
+                match plan.outcome {
+                    RepairOutcome::Valid => valid += 1,
+                    RepairOutcome::Repaired(_) => repaired += 1,
+                    RepairOutcome::Fallback => fallback += 1,
+                }
+                if plan.outcome != RepairOutcome::Fallback {
+                    nodes += plan.dag.len();
+                    executed += 1;
+                }
+            }
+        }
+        let total = (valid + repaired + fallback) as f64;
+        t.row(vec![
+            bench.display().into(),
+            format!("{:.0}", valid as f64 / total * 100.0),
+            format!("{:.0}", repaired as f64 / total * 100.0),
+            format!("{:.0}", fallback as f64 / total * 100.0),
+            format!("{:.2}", nodes as f64 / executed.max(1) as f64),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 6 / Figure 4: fixed-threshold sweep on GPQA.
+pub fn table6_fig4(ctx: &ExpContext) -> String {
+    let pool = ThreadPool::new(ctx.threads);
+    let sp = SimParams::default();
+    let bench = Benchmark::Gpqa;
+    let edge_ref =
+        eval_method(Arc::new(Cot::new(SimExecutor::paper_pair(), false)), bench, ctx, &pool);
+
+    let mut t = Table::new(
+        "Table 6 / Figure 4: fixed offload threshold sweep on GPQA",
+        &["tau0", "Offload (%)", "Acc (%)", "Latency (s)", "API ($)", "Norm.Cost c", "Utility u"],
+    );
+    let mut best: Option<(f64, f64)> = None;
+    for k in (0..=10).rev() {
+        let tau = k as f64 / 10.0;
+        let m = Arc::new(HybridFlowMethod {
+            pipeline: ctx.hybridflow(RoutePolicy::FixedThreshold(tau)),
+            row_name: format!("tau={tau}"),
+        });
+        let metrics = eval_method(m, bench, ctx, &pool);
+        let (c, u) = metrics.norm_cost_and_utility(&sp, &edge_ref);
+        if let Some(uv) = u {
+            if best.map_or(true, |(_, bu)| uv > bu) {
+                best = Some((tau, uv));
+            }
+        }
+        t.row(vec![
+            format!("{tau:.1}"),
+            format!("{:.2}", metrics.offload_mean * 100.0),
+            format!("{:.2}", metrics.acc_mean),
+            format!("{:.2}", metrics.time_mean),
+            metrics.api_cell(),
+            c.map_or("N/A".into(), |v| format!("{v:.4}")),
+            u.map_or("N/A".into(), |v| format!("{v:.4}")),
+        ]);
+    }
+    let mut out = t.render();
+    if let Some((tau, u)) = best {
+        out.push_str(&format!(
+            "\nBest fixed threshold: tau0={tau:.1} (u={u:.4}); paper peaks at tau0=0.6 (u=0.6329).\n\
+             The adaptive router (Table 3) should exceed every fixed point.\n"
+        ));
+    }
+    out
+}
+
+/// Figure 3: edge/cloud distribution by subtask position + mean threshold.
+pub fn fig3(ctx: &ExpContext) -> String {
+    let sp = SimParams::default();
+    // The paper's Figure 3 plots the Eq. 27 deployment, whose threshold
+    // rises with cumulative k/l consumption - i.e. with subtask position.
+    let pipeline = ctx.hybridflow(RoutePolicy::hybridflow_eq27(&sp));
+    let mut hist = PositionHistogram::default();
+    let n = ctx.n_queries(Benchmark::Gpqa);
+    for seed in &ctx.seeds {
+        let mut rng = Rng::new(seed ^ 0xF16);
+        for q in generate_queries(Benchmark::Gpqa, n, *seed) {
+            let (exec, _) = pipeline.run_query_traced(&q, &mut rng);
+            hist.add(&exec.events);
+        }
+    }
+    let mut t = Table::new(
+        "Figure 3: executed subtasks by position (GPQA)",
+        &["Position", "Edge", "Cloud", "Cloud share (%)", "Mean tau"],
+    );
+    for p in 0..hist.positions() {
+        let e = hist.edge[p];
+        let c = hist.cloud[p];
+        let total = (e + c).max(1);
+        t.row(vec![
+            p.to_string(),
+            e.to_string(),
+            c.to_string(),
+            format!("{:.1}", c as f64 / total as f64 * 100.0),
+            format!("{:.3}", hist.mean_tau(p)),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "\nExpected shape (paper): cloud usage concentrates at early positions;\n\
+         mean tau rises with position as budget burns; node counts shrink at depth.\n",
+    );
+    out
+}
+
+/// Table 7: base vs SFT planner (worker: edge model only).
+pub fn table7(ctx: &ExpContext) -> String {
+    let mut t = Table::new(
+        "Table 7: Planner comparison (worker: Llama3.2-3B, GPQA)",
+        &["Planner", "Avg Steps", "R_comp (%)", "C_time (s)", "Acc (%)"],
+    );
+    for (name, profile) in [
+        ("Llama3.2-3B base", PlannerProfile::base_llama()),
+        ("Llama3.2-3B SFT", PlannerProfile::sft_llama()),
+    ] {
+        let sp = SimParams::default();
+        let mut cfg = PipelineConfig::paper_default(&sp);
+        cfg.policy = RoutePolicy::AllEdge;
+        let pipeline = HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::new(profile),
+            ctx.predictor(),
+            cfg,
+        );
+        let n = ctx.n_queries(Benchmark::Gpqa);
+        let mut steps = Vec::new();
+        let mut rcomp = Vec::new();
+        let mut outcomes = Vec::new();
+        for seed in &ctx.seeds {
+            let mut rng = Rng::new(seed ^ 0x707);
+            for q in generate_queries(Benchmark::Gpqa, n, *seed) {
+                let plan = pipeline.planner.plan(&q, 7, &mut rng);
+                steps.push(plan.dag.len() as f64);
+                rcomp.push(plan.dag.compression_ratio().unwrap_or(0.0) * 100.0);
+                outcomes.push(pipeline.run_query(&q, &mut rng));
+            }
+        }
+        let stats = SeedStats::from_outcomes(&outcomes);
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", mean(&steps)),
+            format!("{:.1}", mean(&rcomp)),
+            format!("{:.2}", stats.time),
+            format!("{:.2}", stats.acc),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str("\nPaper: base 5.84 steps / 10.7% / 10.81s / 20.0%; SFT 6.12 / 34.3% / 11.59s / 22.0%.\n");
+    out
+}
+
+/// Table 8: model-pair swap (Qwen2.5-7B edge, DeepSeek-V3 cloud) on GPQA.
+pub fn table8(ctx: &ExpContext) -> String {
+    let pool = ThreadPool::new(ctx.threads);
+    let sp = SimParams::default();
+    let bench = Benchmark::Gpqa;
+    let swap = SimExecutor::swap_pair;
+
+    let hybrid = |policy: RoutePolicy, name: &str| -> Arc<dyn Method> {
+        let mut cfg = PipelineConfig::paper_default(&sp);
+        cfg.policy = policy;
+        Arc::new(HybridFlowMethod {
+            pipeline: HybridFlowPipeline::with_predictor(
+                swap(),
+                SyntheticPlanner::paper_main(),
+                ctx.predictor(),
+                cfg,
+            ),
+            row_name: name.into(),
+        })
+    };
+
+    let rows: Vec<(&str, Arc<dyn Method>)> = vec![
+        ("All-Edge CoT (Qwen2.5-7B)", Arc::new(Cot::new(swap(), false))),
+        ("All-Cloud CoT (DeepSeek-V3)", Arc::new(Cot::new(swap(), true))),
+        ("HybridLLM", Arc::new(HybridLlm::paper_default(swap()))),
+        ("DoT", Arc::new(Dot::paper_default(swap()))),
+        ("HybridFlow (Ours)", hybrid(RoutePolicy::hybridflow(&sp), "HybridFlow")),
+    ];
+
+    let mut t = Table::new(
+        "Table 8: GPQA under swapped edge/cloud pair (Qwen2.5-7B + DeepSeek-V3)",
+        &["Method", "Accuracy (%)", "API Cost (1e-3 $)", "Latency (s)"],
+    );
+    for (name, m) in rows {
+        let metrics = eval_method(m, bench, ctx, &pool);
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", metrics.acc_mean),
+            if metrics.api_mean == 0.0 {
+                "NA".into()
+            } else {
+                format!("{:.2}", metrics.api_mean * 1e3)
+            },
+            format!("{:.2}", metrics.time_mean),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str("\nPaper: Edge 34/NA/19.52; Cloud 59/6.70/61.00; HybridLLM 47/3.63/47.87; DoT 49/1.80/40.90; HybridFlow 53/1.16/36.86.\n");
+    out
+}
+
+/// Figure 5: planner quality across five intrinsic dimensions.
+pub fn fig5(ctx: &ExpContext) -> String {
+    let dims = ["Soundness", "DependencyFlow", "Clarity", "AttributeAcc", "Relevance"];
+    let mut t = Table::new(
+        "Figure 5: planner evaluation across five dimensions (0-10)",
+        &["Planner", dims[0], dims[1], dims[2], dims[3], dims[4]],
+    );
+    for (name, profile) in [
+        ("Ours (SFT)", PlannerProfile::sft_llama()),
+        ("Base Llama3.2-3B", PlannerProfile::base_llama()),
+        ("EAG main planner", PlannerProfile::paper_main()),
+        ("Frontier reference", PlannerProfile::frontier_reference()),
+    ] {
+        // Two dims are *measured* from generated plans (soundness from
+        // valid+repaired rate, dependency flow from R_comp); the judge-style
+        // dims come from the profile's quality model with sampling noise.
+        let planner = SyntheticPlanner::new(profile.clone());
+        let n = (200.0 * ctx.scale).max(30.0) as usize;
+        let mut rng = Rng::new(0x515);
+        let mut ok = 0usize;
+        let mut rcomp = 0.0;
+        let qs = generate_queries(Benchmark::Gpqa, n, 99);
+        for q in &qs {
+            let plan = planner.plan(q, 7, &mut rng);
+            if plan.outcome != RepairOutcome::Fallback {
+                ok += 1;
+            }
+            rcomp += plan.dag.compression_ratio().unwrap_or(0.0);
+        }
+        let soundness = ok as f64 / n as f64 * 10.0;
+        let depflow = (rcomp / n as f64) / 0.5 * 10.0; // 0.5 R_comp ~ full marks
+        let judged: Vec<f64> = profile
+            .quality_dims
+            .iter()
+            .map(|&q| (q + rng.normal_ms(0.0, 0.15)).clamp(0.0, 10.0))
+            .collect();
+        t.row(vec![
+            name.into(),
+            format!("{soundness:.1}"),
+            format!("{:.1}", depflow.min(10.0)),
+            format!("{:.1}", judged[2]),
+            format!("{:.1}", judged[3]),
+            format!("{:.1}", judged[4]),
+        ]);
+    }
+    t.render()
+}
+
+/// App. D.1: cloud data-exposure proxy (Eqs. 29-31) across paradigms.
+pub fn d1_exposure(ctx: &ExpContext) -> String {
+    use crate::metrics::exposure::Exposure;
+    let sp = SimParams::default();
+    let bench = Benchmark::Gpqa;
+    let n = ctx.n_queries(bench);
+
+    let mut t = Table::new(
+        "App. D.1: cloud exposure proxy on GPQA (tokens transmitted to cloud)",
+        &["Paradigm", "E_cloud (tok/query)", "E_bar (norm.)", "Cloud calls/query", "Acc (%)"],
+    );
+    let rows: Vec<(&str, RoutePolicy)> = vec![
+        ("Edge-only", RoutePolicy::AllEdge),
+        ("Cloud-only (per-subtask)", RoutePolicy::AllCloud),
+        ("HybridFlow", RoutePolicy::hybridflow(&sp)),
+        ("HybridFlow (Eq. 27)", RoutePolicy::hybridflow_eq27(&sp)),
+    ];
+    for (name, policy) in rows {
+        let pipeline = ctx.hybridflow(policy);
+        let mut total = Exposure::default();
+        let mut correct = 0usize;
+        let mut queries_run = 0usize;
+        for seed in &ctx.seeds {
+            let mut rng = Rng::new(seed ^ 0xD1);
+            for q in generate_queries(bench, n, *seed) {
+                let (exec, _) = pipeline.run_query_traced(&q, &mut rng);
+                total.merge(&Exposure::from_events(&exec.events));
+                correct += usize::from(exec.correct);
+                queries_run += 1;
+            }
+        }
+        let qf = queries_run.max(1) as f64;
+        t.row(vec![
+            name.into(),
+            format!("{:.0}", total.e_cloud / qf),
+            if total.e_cloud + total.e_edge > 0.0 {
+                format!("{:.3}", total.normalized())
+            } else {
+                "-".into()
+            },
+            format!("{:.2}", total.n_cloud_calls as f64 / qf),
+            format!("{:.2}", correct as f64 / qf * 100.0),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "\nPaper claim (App. D.1): HybridFlow reduces the exposure *surface* vs\n\
+         cloud-only by offloading a subset of subtasks and transmitting only\n\
+         (s_i, dep answers), never the full query; it is not a privacy guarantee.\n",
+    );
+    out
+}
+
+/// Design-choice ablations DESIGN.md calls out: edge-worker count, cloud
+/// concurrency, and the planner subtask cap n_max.
+pub fn ablations(ctx: &ExpContext) -> String {
+    let sp = SimParams::default();
+    let bench = Benchmark::Gpqa;
+    let n = ctx.n_queries(bench);
+
+    let run = |mut cfg_mut: Box<dyn FnMut(&mut PipelineConfig)>| -> (f64, f64, f64) {
+        let mut cfg = PipelineConfig::paper_default(&sp);
+        cfg_mut(&mut cfg);
+        let pipeline = HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            ctx.predictor(),
+            cfg,
+        );
+        let mut correct = 0usize;
+        let (mut lat, mut api) = (0.0, 0.0);
+        let mut count = 0usize;
+        for seed in &ctx.seeds {
+            let mut rng = Rng::new(seed ^ 0xAB1);
+            for q in generate_queries(bench, n, *seed) {
+                let o = pipeline.run_query(&q, &mut rng);
+                correct += usize::from(o.correct);
+                lat += o.latency;
+                api += o.api_cost;
+                count += 1;
+            }
+        }
+        let cf = count.max(1) as f64;
+        (correct as f64 / cf * 100.0, lat / cf, api / cf)
+    };
+
+    let mut t = Table::new(
+        "Ablations: resource topology and planner cap (GPQA, HybridFlow)",
+        &["Variant", "Acc (%)", "C_time (s)", "C_API ($)"],
+    );
+    for workers in [1usize, 2, 4] {
+        let (acc, lat, api) = run(Box::new(move |c| c.schedule.edge_workers = workers));
+        t.row(vec![format!("edge workers = {workers}"), format!("{acc:.2}"), format!("{lat:.2}"), format!("{api:.4}")]);
+    }
+    for cw in [1usize, 2, 8] {
+        let (acc, lat, api) = run(Box::new(move |c| c.schedule.cloud_workers = cw));
+        t.row(vec![format!("cloud concurrency = {cw}"), format!("{acc:.2}"), format!("{lat:.2}"), format!("{api:.4}")]);
+    }
+    for nmax in [3usize, 5, 7] {
+        let (acc, lat, api) = run(Box::new(move |c| c.n_max = nmax));
+        t.row(vec![format!("planner n_max = {nmax}"), format!("{acc:.2}"), format!("{lat:.2}"), format!("{api:.4}")]);
+    }
+
+    // Observation-noise sensitivity: degrade the router's difficulty /
+    // criticality observations and watch routing quality decay toward the
+    // Random baseline (motivates the paper's online calibration).
+    for noise_mult in [1.0f64, 2.0, 4.0] {
+        let mut executor = SimExecutor::paper_pair();
+        executor.sp.diff_noise_std *= noise_mult;
+        executor.sp.crit_noise_std *= noise_mult;
+        let pipeline = HybridFlowPipeline::with_predictor(
+            executor,
+            SyntheticPlanner::paper_main(),
+            ctx.predictor(),
+            PipelineConfig::paper_default(&sp),
+        );
+        let mut correct = 0usize;
+        let (mut lat, mut api) = (0.0, 0.0);
+        let mut count = 0usize;
+        for seed in &ctx.seeds {
+            let mut rng = Rng::new(seed ^ 0xAB2);
+            for q in generate_queries(bench, n, *seed) {
+                let o = pipeline.run_query(&q, &mut rng);
+                correct += usize::from(o.correct);
+                lat += o.latency;
+                api += o.api_cost;
+                count += 1;
+            }
+        }
+        let cf = count.max(1) as f64;
+        t.row(vec![
+            format!("observation noise x{noise_mult}"),
+            format!("{:.2}", correct as f64 / cf * 100.0),
+            format!("{:.2}", lat / cf),
+            format!("{:.4}", api / cf),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str("\nExpected: more edge workers cut C_time toward the cloud-parallel bound;\n\
+        cloud concurrency=1 serializes API calls (latency rises, accuracy flat);\n\
+        small n_max truncates plans (coarser routing granularity).\n");
+    out
+}
+
+/// Run an experiment by id.
+pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<String> {
+    Ok(match id {
+        "calibrate" => calibrate(ctx),
+        "table1" => table1(ctx),
+        "table2" => table2(ctx),
+        "table3" => table3(ctx),
+        "table5" => table5(ctx),
+        "table6_fig4" => table6_fig4(ctx),
+        "fig3" => fig3(ctx),
+        "table7" => table7(ctx),
+        "table8" => table8(ctx),
+        "fig5" => fig5(ctx),
+        "d1_exposure" => d1_exposure(ctx),
+        "ablations" => ablations(ctx),
+        other => anyhow::bail!(
+            "unknown experiment '{other}'; available: {}",
+            EXPERIMENT_IDS.join(", ")
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ctx() -> ExpContext {
+        ExpContext { seeds: vec![1], scale: 0.08, ..Default::default() }
+    }
+
+    #[test]
+    fn experiment_registry_rejects_unknown() {
+        assert!(run_experiment("table99", &tiny_ctx()).is_err());
+    }
+
+    #[test]
+    fn table5_runs_tiny() {
+        let out = table5(&tiny_ctx());
+        assert!(out.contains("Valid"));
+        assert!(out.contains("GPQA"));
+    }
+
+    #[test]
+    fn fig5_runs_tiny() {
+        let out = fig5(&tiny_ctx());
+        assert!(out.contains("Soundness"));
+        assert!(out.lines().count() >= 7);
+    }
+
+    #[test]
+    fn table7_runs_tiny() {
+        let out = table7(&tiny_ctx());
+        assert!(out.contains("SFT"));
+        assert!(out.contains("R_comp"));
+    }
+}

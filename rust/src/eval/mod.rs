@@ -1,0 +1,7 @@
+//! Experiment harness: one entry point per paper table/figure, shared by
+//! the CLI (`hybridflow exp <id>`) and the bench binaries
+//! (`cargo bench --bench table1` ...).
+
+pub mod experiments;
+
+pub use experiments::{run_experiment, ExpContext, EXPERIMENT_IDS};

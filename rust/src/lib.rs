@@ -1,0 +1,60 @@
+//! # HybridFlow
+//!
+//! Production-grade reproduction of *HybridFlow: Resource-Adaptive Subtask
+//! Routing for Efficient Edge-Cloud LLM Inference* (CS.DC 2025) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: XML-plan
+//!   parsing into a subtask DAG, validation + bounded repair (Def. C.2),
+//!   dependency-triggered parallel scheduling, utility-based edge/cloud
+//!   routing with projected-dual-ascent thresholds (Eqs. 10/11/27), LinUCB
+//!   online calibration (Eqs. 13/14), budget accounting, baselines, workload
+//!   generators, metrics, and the experiment harness for every table and
+//!   figure in the paper.
+//! * **L2 (python/compile/model.py, build-time)** — the learned router
+//!   network and the tiny edge-LM block, lowered once by `make artifacts`
+//!   to HLO text.
+//! * **L1 (python/compile/kernels/, build-time)** — the fused
+//!   `matmul+bias+activation` Pallas kernel behind every dense layer.
+//!
+//! The runtime module loads the AOT artifacts through the PJRT CPU client
+//! (`xla` crate) and serves routing decisions **on the request path** —
+//! python is never invoked after `make artifacts`.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod testing;
+pub mod util;
+
+pub mod config;
+pub mod dag;
+pub mod embed;
+pub mod planner;
+pub mod runtime;
+
+pub mod budget;
+pub mod models;
+pub mod router;
+pub mod scheduler;
+pub mod workload;
+
+pub mod baselines;
+pub mod eval;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+/// Commonly used items for examples and binaries.
+pub mod prelude {
+    pub use crate::config::simparams::SimParams;
+    pub use crate::dag::{Role, Subtask, TaskDag};
+    pub use crate::metrics::QueryOutcome;
+    pub use crate::models::{ModelKind, ModelProfile};
+    pub use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
+    pub use crate::router::policy::RoutePolicy;
+    pub use crate::util::json::Json;
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::{Benchmark, Query};
+}

@@ -1,0 +1,293 @@
+//! `hybridflow` — CLI entry point for the HybridFlow coordinator.
+//!
+//! Commands:
+//!   plan     decompose one synthetic query and print the XML plan + DAG
+//!   run      run queries through the full pipeline, print outcomes
+//!   serve    concurrent serving loop, report throughput/latency
+//!   profile  regenerate the App. C profiling dataset (JSONL)
+//!   exp      run a paper experiment (table1..table8, fig3, fig5, calibrate)
+//!   check    verify artifacts + PJRT round trip + mirror parity
+
+use hybridflow::config::simparams::SimParams;
+use hybridflow::dag::emit_plan;
+use hybridflow::eval::{run_experiment, ExpContext, EXPERIMENT_IDS};
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::SyntheticPlanner;
+use hybridflow::planner::Planner;
+use hybridflow::router::{MirrorPredictor, RoutePolicy, UtilityPredictor};
+use hybridflow::runtime::RouterService;
+use hybridflow::server::serve;
+use hybridflow::util::cli::{usage, Args};
+use hybridflow::util::rng::Rng;
+use hybridflow::workload::{generate_queries, profiling, Benchmark};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const COMMANDS: [(&str, &str); 6] = [
+    ("plan", "decompose a synthetic query and print plan + repaired DAG"),
+    ("run", "run N queries end-to-end and print outcomes"),
+    ("serve", "concurrent serving loop with throughput/latency report"),
+    ("profile", "emit the offline profiling dataset as JSONL"),
+    ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations>"),
+    ("check", "verify artifacts, PJRT round trip, and mirror parity"),
+];
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("plan") => cmd_plan(&args),
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("check") => cmd_check(&args),
+        _ => {
+            eprint!("{}", usage("hybridflow", &COMMANDS));
+            Err(anyhow::anyhow!("missing or unknown command"))
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(hybridflow::config::default_artifacts_dir)
+}
+
+fn bench_arg(args: &Args) -> anyhow::Result<Benchmark> {
+    let name = args.get_or("benchmark", "gpqa");
+    Benchmark::parse(name).ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))
+}
+
+fn predictor(args: &Args) -> anyhow::Result<Arc<dyn UtilityPredictor>> {
+    let dir = artifacts_dir(args);
+    if args.flag("pjrt") {
+        let svc = RouterService::start(&dir)?;
+        println!("[runtime] PJRT platform: {}", svc.platform());
+        Ok(Arc::new(svc))
+    } else {
+        Ok(Arc::new(MirrorPredictor::from_meta_file(&dir.join("router_meta.json"))?))
+    }
+}
+
+fn build_pipeline(args: &Args) -> anyhow::Result<HybridFlowPipeline> {
+    let sp = SimParams::default();
+    let mut cfg = PipelineConfig::paper_default(&sp);
+    if let Some(tau) = args.get_f64("fixed-tau")? {
+        cfg.policy = RoutePolicy::FixedThreshold(tau);
+    }
+    if args.flag("chain") {
+        cfg.schedule.chain_mode = true;
+    }
+    if args.flag("calibrated") {
+        cfg.policy = RoutePolicy::hybridflow_calibrated(&sp);
+    }
+    Ok(HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        predictor(args)?,
+        cfg,
+    ))
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let bench = bench_arg(args)?;
+    let seed = args.get_u64_or("seed", 0)?;
+    let q = generate_queries(bench, 1, seed)
+        .pop()
+        .ok_or_else(|| anyhow::anyhow!("no query"))?;
+    let planner = SyntheticPlanner::paper_main();
+    let mut rng = Rng::new(seed);
+    let text = planner.plan_text(&q, &mut rng);
+    println!("--- planner XML (latency {:.2}s) ---\n{}", text.planning_latency, text.xml);
+    let mut rng = Rng::new(seed);
+    let plan = planner.plan(&q, 7, &mut rng);
+    println!("\n--- executable DAG ({:?}) ---\n{}", plan.outcome, emit_plan(&plan.dag));
+    println!(
+        "\nnodes={} critical_path={:?} R_comp={:.2}",
+        plan.dag.len(),
+        plan.dag.critical_path_len(),
+        plan.dag.compression_ratio().unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let bench = bench_arg(args)?;
+    let n = args.get_usize_or("n", 10)?;
+    let seed = args.get_u64_or("seed", 0)?;
+    let pipeline = build_pipeline(args)?;
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    for q in generate_queries(bench, n, seed) {
+        let out = pipeline.run_query(&q, &mut rng);
+        correct += usize::from(out.correct);
+        println!(
+            "query {:>3}  d={:.2}  subtasks={}  offload={:>4.0}%  C_time={:>6.2}s  C_API=${:.4}  {}",
+            q.id,
+            q.difficulty,
+            out.n_subtasks,
+            out.offload_rate * 100.0,
+            out.latency,
+            out.api_cost,
+            if out.correct { "CORRECT" } else { "wrong" }
+        );
+    }
+    println!("\naccuracy: {}/{} = {:.1}%", correct, n, correct as f64 / n as f64 * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use hybridflow::server::telemetry::Telemetry;
+    use hybridflow::workload::trace;
+
+    let bench = bench_arg(args)?;
+    let n = args.get_usize_or("n", 100)?;
+    let workers = args.get_usize_or("workers", 8)?;
+    let seed = args.get_u64_or("seed", 0)?;
+    let pipeline = Arc::new(build_pipeline(args)?);
+
+    // Workload: fresh synthetic set, or replayed from a recorded trace.
+    let queries = match args.get("trace-in") {
+        Some(path) => {
+            let records = trace::read_jsonl(&std::fs::read_to_string(path)?)?;
+            println!("replaying {} queries from {path}", records.len());
+            trace::queries_of(&records)
+        }
+        None => generate_queries(bench, n, seed),
+    };
+    println!(
+        "serving {} {} queries on {workers} workers (predictor: {})",
+        queries.len(),
+        bench.display(),
+        pipeline.predictor.backend()
+    );
+    let report = serve(Arc::clone(&pipeline), queries.clone(), workers, seed);
+    println!("{}", report.render());
+
+    // Optional trace recording (re-runs deterministically per query id).
+    if let Some(path) = args.get("trace-out") {
+        let mut records = Vec::with_capacity(queries.len());
+        for q in &queries {
+            let mut rng = hybridflow::util::rng::Rng::new(
+                seed ^ q.id.wrapping_mul(0x9E3779B97f4A7C15),
+            );
+            let outcome = pipeline.run_query(q, &mut rng);
+            records.push(trace::TraceRecord { query: q.clone(), outcome: Some(outcome) });
+        }
+        std::fs::write(path, trace::write_jsonl(&records))?;
+        println!("trace written to {path}");
+    }
+
+    // Optional telemetry exposition.
+    if args.flag("metrics") {
+        let telemetry = Telemetry::new();
+        for q in &queries {
+            let mut rng = hybridflow::util::rng::Rng::new(
+                seed ^ q.id.wrapping_mul(0x9E3779B97f4A7C15),
+            );
+            let t0 = std::time::Instant::now();
+            let (exec, outcome) = pipeline.run_query_traced(q, &mut rng);
+            telemetry.record_plan_outcome(outcome);
+            telemetry.record_query(
+                exec.correct,
+                exec.n_subtasks,
+                exec.budget.n_offloaded,
+                exec.api_cost,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        println!("\n--- telemetry ---\n{}", telemetry.render());
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize_or("n", 200)?;
+    let seed = args.get_u64_or("seed", 0)?;
+    let records = profiling::standard_profile_set(n, seed);
+    let out = profiling::to_jsonl(&records);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &out)?;
+            println!("wrote {} records to {path}", records.len());
+        }
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .get("id")
+        .or_else(|| args.positional.first().map(String::as_str))
+        .ok_or_else(|| {
+            anyhow::anyhow!("--id required; one of: {}", EXPERIMENT_IDS.join(", "))
+        })?
+        .to_string();
+    let mut ctx = if args.flag("quick") { ExpContext::quick() } else { ExpContext::default() };
+    ctx.artifacts_dir = artifacts_dir(args);
+    if let Some(s) = args.get_f64("scale")? {
+        ctx.scale = s;
+    }
+    if let Some(n) = args.get_usize("seeds")? {
+        ctx.seeds = (0..n as u64).map(|i| 11 + 11 * i).collect();
+    }
+    let t0 = std::time::Instant::now();
+    let out = run_experiment(&id, &ctx)?;
+    println!("{out}");
+    println!("[exp {id}] completed in {:.1}s", t0.elapsed().as_secs_f64());
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &out)?;
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    use hybridflow::config::simparams::FEAT_DIM;
+    let dir = artifacts_dir(args);
+    println!("artifacts dir: {}", dir.display());
+
+    // 1. simparams drift check.
+    let sp = SimParams::load(&dir)?;
+    println!("simparams.json matches compiled defaults (tau0={})", sp.tau0);
+    let j = hybridflow::util::json::Json::parse_file(&dir.join("simparams.json"))?;
+    hybridflow::config::simparams::verify_zoo_against_json(&j)?;
+    println!("model/benchmark zoo matches python mirror");
+
+    // 2. PJRT round trip.
+    let svc = RouterService::start(&dir)?;
+    println!("PJRT platform: {} (edge_lm: {})", svc.platform(), svc.has_edge_lm());
+
+    // 3. Mirror parity on random features.
+    let mirror = MirrorPredictor::from_meta_file(&dir.join("router_meta.json"))?;
+    let mut rng = Rng::new(42);
+    let feats: Vec<[f32; FEAT_DIM]> = (0..16)
+        .map(|_| {
+            let mut f = [0.0f32; FEAT_DIM];
+            for v in f.iter_mut() {
+                *v = rng.f64() as f32;
+            }
+            f
+        })
+        .collect();
+    let a = svc.score(&feats, 0.3)?;
+    let b = mirror.predict(&feats, 0.3);
+    let max_err = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+    anyhow::ensure!(max_err < 2e-3, "PJRT vs mirror divergence: {max_err}");
+    println!("PJRT vs rust-mirror parity: max |delta u_hat| = {max_err:.2e} OK");
+
+    if svc.has_edge_lm() {
+        let checksum = svc.edge_burn(2)?;
+        println!("edge_lm burn OK (checksum {checksum:.4})");
+    }
+    println!("all checks passed");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Cloud data-exposure proxy (paper App. D.1, Eqs. 29–31).
+//!
+//! The paper quantifies how much user-provided / intermediate information
+//! each paradigm transmits to the cloud:
+//!
+//! * transmitted payload of an offloaded subtask: `x_i = (s_i, {a_j}_dep)`
+//!   — the subtask prompt plus its dependency answers (never the full
+//!   query);
+//! * `E_cloud = sum_{i in C} tok(x_i)` (Eq. 30) — absolute token exposure;
+//! * `E_bar = E_cloud / sum_{all i} tok(x_i)` (Eq. 31) — the fraction of
+//!   subtask-level information the cloud observes.
+//!
+//! HybridFlow is *not* a privacy mechanism (the paper is explicit), but it
+//! reduces the exposure **surface** relative to cloud-only inference; this
+//! module measures that claim on the substrate.
+
+use crate::scheduler::events::TraceEvent;
+
+/// Exposure accounting for one query execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Exposure {
+    /// Tokens transmitted to the cloud (Eq. 30).
+    pub e_cloud: f64,
+    /// Tokens processed on the edge.
+    pub e_edge: f64,
+    /// Cloud calls made.
+    pub n_cloud_calls: usize,
+}
+
+impl Exposure {
+    /// Compute from an execution trace: `tok(x_i)` is the call's input
+    /// tokens (prompt + dependency answers), exactly the transmitted
+    /// payload of Eq. 29.
+    pub fn from_events(events: &[TraceEvent]) -> Exposure {
+        let mut e = Exposure::default();
+        for ev in events {
+            if ev.cloud {
+                e.e_cloud += ev.in_tokens;
+                e.n_cloud_calls += 1;
+            } else {
+                e.e_edge += ev.in_tokens;
+            }
+        }
+        e
+    }
+
+    /// Normalized exposure `E_bar` (Eq. 31); 0 for edge-only, 1 for
+    /// cloud-only, NaN when nothing executed.
+    pub fn normalized(&self) -> f64 {
+        self.e_cloud / (self.e_cloud + self.e_edge)
+    }
+
+    /// Cloud-only reference: everything (the full query, repeatedly)
+    /// transmitted.
+    pub fn merge(&mut self, other: &Exposure) {
+        self.e_cloud += other.e_cloud;
+        self.e_edge += other.e_edge;
+        self.n_cloud_calls += other.n_cloud_calls;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cloud: bool, in_tokens: f64) -> TraceEvent {
+        TraceEvent {
+            node: 0,
+            position: 0,
+            cloud,
+            tau: 0.0,
+            u_hat: 0.0,
+            start: 0.0,
+            finish: 1.0,
+            api_cost: 0.0,
+            correct: true,
+            in_tokens,
+        }
+    }
+
+    #[test]
+    fn accumulates_by_side() {
+        let e = Exposure::from_events(&[ev(true, 100.0), ev(false, 50.0), ev(true, 30.0)]);
+        assert_eq!(e.e_cloud, 130.0);
+        assert_eq!(e.e_edge, 50.0);
+        assert_eq!(e.n_cloud_calls, 2);
+        assert!((e.normalized() - 130.0 / 180.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extremes() {
+        let edge_only = Exposure::from_events(&[ev(false, 10.0), ev(false, 20.0)]);
+        assert_eq!(edge_only.normalized(), 0.0);
+        let cloud_only = Exposure::from_events(&[ev(true, 10.0)]);
+        assert_eq!(cloud_only.normalized(), 1.0);
+        let empty = Exposure::from_events(&[]);
+        assert!(empty.normalized().is_nan());
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Exposure::from_events(&[ev(true, 100.0)]);
+        let b = Exposure::from_events(&[ev(false, 60.0), ev(true, 40.0)]);
+        a.merge(&b);
+        assert_eq!(a.e_cloud, 140.0);
+        assert_eq!(a.e_edge, 60.0);
+        assert_eq!(a.n_cloud_calls, 2);
+    }
+}

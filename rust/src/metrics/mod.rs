@@ -1,0 +1,170 @@
+//! Metrics: the paper's three evaluation axes (Acc, C_time, C_API) plus the
+//! unified utility of Table 3, aggregated per-seed as `mean ± std` exactly
+//! like the paper's tables, and the App. D.1 cloud-exposure proxy.
+
+pub mod exposure;
+
+use crate::config::simparams::SimParams;
+use crate::router::utility::{query_norm_cost, unified_utility};
+use crate::util::stats::{fmt_mean_std, mean, std_pop};
+
+/// Outcome of one query under one method.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryOutcome {
+    pub correct: bool,
+    /// End-to-end `C_time` (s), planner included.
+    pub latency: f64,
+    /// Cloud `C_API` ($).
+    pub api_cost: f64,
+    /// Fraction of subtasks offloaded.
+    pub offload_rate: f64,
+    pub n_subtasks: usize,
+}
+
+/// Aggregate over one seed's query set.
+#[derive(Debug, Clone, Copy)]
+pub struct SeedStats {
+    /// Accuracy in percent.
+    pub acc: f64,
+    /// Mean latency (s).
+    pub time: f64,
+    /// Mean API cost ($).
+    pub api: f64,
+    pub offload_rate: f64,
+    pub mean_subtasks: f64,
+}
+
+impl SeedStats {
+    pub fn from_outcomes(outcomes: &[QueryOutcome]) -> SeedStats {
+        let n = outcomes.len().max(1) as f64;
+        SeedStats {
+            acc: outcomes.iter().filter(|o| o.correct).count() as f64 / n * 100.0,
+            time: outcomes.iter().map(|o| o.latency).sum::<f64>() / n,
+            api: outcomes.iter().map(|o| o.api_cost).sum::<f64>() / n,
+            offload_rate: outcomes.iter().map(|o| o.offload_rate).sum::<f64>() / n,
+            mean_subtasks: outcomes.iter().map(|o| o.n_subtasks as f64).sum::<f64>() / n,
+        }
+    }
+}
+
+/// `mean ± std` across seeds for each axis (the paper's table cells).
+#[derive(Debug, Clone)]
+pub struct MethodMetrics {
+    pub acc_mean: f64,
+    pub acc_std: f64,
+    pub time_mean: f64,
+    pub time_std: f64,
+    pub api_mean: f64,
+    pub offload_mean: f64,
+    pub n_seeds: usize,
+}
+
+impl MethodMetrics {
+    pub fn from_seeds(seeds: &[SeedStats]) -> MethodMetrics {
+        let accs: Vec<f64> = seeds.iter().map(|s| s.acc).collect();
+        let times: Vec<f64> = seeds.iter().map(|s| s.time).collect();
+        let apis: Vec<f64> = seeds.iter().map(|s| s.api).collect();
+        let off: Vec<f64> = seeds.iter().map(|s| s.offload_rate).collect();
+        MethodMetrics {
+            acc_mean: mean(&accs),
+            acc_std: std_pop(&accs),
+            time_mean: mean(&times),
+            time_std: std_pop(&times),
+            api_mean: mean(&apis),
+            offload_mean: mean(&off),
+            n_seeds: seeds.len(),
+        }
+    }
+
+    /// Paper-style accuracy cell: "53.33±2.03".
+    pub fn acc_cell(&self) -> String {
+        fmt_mean_std(self.acc_mean, self.acc_std, 2)
+    }
+
+    /// Paper-style latency cell: "15.24±0.30".
+    pub fn time_cell(&self) -> String {
+        fmt_mean_std(self.time_mean, self.time_std, 2)
+    }
+
+    /// Paper-style API cell: "0.0075" (edge-only prints "-").
+    pub fn api_cell(&self) -> String {
+        if self.api_mean == 0.0 {
+            "-".to_string()
+        } else {
+            format!("{:.4}", self.api_mean)
+        }
+    }
+
+    /// Table 3 columns against an all-edge reference.
+    pub fn norm_cost_and_utility(&self, sp: &SimParams, edge_ref: &MethodMetrics) -> (Option<f64>, Option<f64>) {
+        if self.api_mean == 0.0 && self.time_mean <= edge_ref.time_mean {
+            return (None, None);
+        }
+        let c = query_norm_cost(sp, self.time_mean, edge_ref.time_mean, self.api_mean);
+        let u = unified_utility(
+            sp,
+            self.acc_mean,
+            edge_ref.acc_mean,
+            self.time_mean,
+            edge_ref.time_mean,
+            self.api_mean,
+        );
+        (Some(c), u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(correct: bool, latency: f64, api: f64) -> QueryOutcome {
+        QueryOutcome { correct, latency, api_cost: api, offload_rate: 0.5, n_subtasks: 4 }
+    }
+
+    #[test]
+    fn seed_stats_aggregate() {
+        let o = vec![outcome(true, 10.0, 0.01), outcome(false, 20.0, 0.02)];
+        let s = SeedStats::from_outcomes(&o);
+        assert_eq!(s.acc, 50.0);
+        assert_eq!(s.time, 15.0);
+        assert!((s.api - 0.015).abs() < 1e-12);
+        assert_eq!(s.mean_subtasks, 4.0);
+    }
+
+    #[test]
+    fn method_metrics_mean_std() {
+        let seeds = vec![
+            SeedStats { acc: 50.0, time: 10.0, api: 0.01, offload_rate: 0.4, mean_subtasks: 4.0 },
+            SeedStats { acc: 54.0, time: 12.0, api: 0.02, offload_rate: 0.5, mean_subtasks: 4.0 },
+        ];
+        let m = MethodMetrics::from_seeds(&seeds);
+        assert_eq!(m.acc_mean, 52.0);
+        assert_eq!(m.acc_std, 2.0);
+        assert_eq!(m.acc_cell(), "52.00\u{b1}2.00");
+        assert_eq!(m.time_cell(), "11.00\u{b1}1.00");
+        assert_eq!(m.api_cell(), "0.0150");
+    }
+
+    #[test]
+    fn api_cell_dash_for_edge_only() {
+        let seeds =
+            vec![SeedStats { acc: 25.0, time: 12.0, api: 0.0, offload_rate: 0.0, mean_subtasks: 1.0 }];
+        assert_eq!(MethodMetrics::from_seeds(&seeds).api_cell(), "-");
+    }
+
+    #[test]
+    fn table3_columns_match_paper_formula() {
+        let sp = SimParams::default();
+        let edge = MethodMetrics::from_seeds(&[SeedStats {
+            acc: 25.54, time: 11.99, api: 0.0, offload_rate: 0.0, mean_subtasks: 5.0,
+        }]);
+        let hf = MethodMetrics::from_seeds(&[SeedStats {
+            acc: 53.33, time: 15.24, api: 0.0075, offload_rate: 0.4, mean_subtasks: 5.0,
+        }]);
+        let (c, u) = hf.norm_cost_and_utility(&sp, &edge);
+        assert!((c.unwrap() - 0.35).abs() < 0.005);
+        assert!((u.unwrap() - 0.794).abs() < 0.01);
+        let (c_e, u_e) = edge.norm_cost_and_utility(&sp, &edge);
+        assert!(c_e.is_none() && u_e.is_none());
+    }
+}

@@ -1,0 +1,373 @@
+//! Simulated model endpoints (the substitution for GPT-4.1 / Llama3.2-3B /
+//! Qwen2.5-7B / DeepSeek-V3 — see DESIGN.md section 3).
+//!
+//! A [`ModelProfile`] combines per-domain capability curves with a serving
+//! profile (decode/prefill speed, network RTT distribution, pricing). The
+//! [`SimExecutor`] turns (latent subtask, assignment) into an observed
+//! [`ExecRecord`] — correctness draw, latency, API cost — which is all the
+//! coordinator ever sees, exactly like a real endpoint.
+
+use crate::config::simparams::{model_params, ModelParams, SimParams};
+use crate::util::rng::Rng;
+use crate::workload::SubtaskLatent;
+
+/// Known model endpoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// Llama3.2-3B (edge, main pair).
+    Llama3B,
+    /// GPT-4.1 (cloud, main pair).
+    Gpt41,
+    /// Qwen2.5-7B (edge, swap pair of Table 8).
+    Qwen7B,
+    /// DeepSeek-V3 (cloud, swap pair of Table 8).
+    DeepSeekV3,
+}
+
+impl ModelKind {
+    pub fn zoo_name(&self) -> &'static str {
+        match self {
+            ModelKind::Llama3B => "llama3.2-3b",
+            ModelKind::Gpt41 => "gpt-4.1",
+            ModelKind::Qwen7B => "qwen2.5-7b",
+            ModelKind::DeepSeekV3 => "deepseek-v3",
+        }
+    }
+
+    /// Short label used in tables ("L3B", "G4.1", ...).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelKind::Llama3B => "L3B",
+            ModelKind::Gpt41 => "G4.1",
+            ModelKind::Qwen7B => "Q7B",
+            ModelKind::DeepSeekV3 => "DSV3",
+        }
+    }
+
+    pub fn is_cloud(&self) -> bool {
+        matches!(self, ModelKind::Gpt41 | ModelKind::DeepSeekV3)
+    }
+}
+
+/// Resolved profile (capabilities + serving characteristics).
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub kind: ModelKind,
+    pub params: ModelParams,
+}
+
+impl ModelProfile {
+    pub fn of(kind: ModelKind) -> ModelProfile {
+        ModelProfile { kind, params: model_params(kind.zoo_name()).expect("model in zoo") }
+    }
+
+    /// Probability this model solves a subtask of difficulty `d` in `domain`.
+    pub fn p_solve(&self, domain: usize, d: f64, sp: &SimParams) -> f64 {
+        let cap = self.params.caps[domain];
+        sigmoid((cap - d) / sp.cap_temp)
+    }
+
+    /// Simulated wall-clock latency of one call.
+    pub fn latency(&self, in_tokens: f64, out_tokens: f64, rng: &mut Rng) -> f64 {
+        let s = &self.params.serving;
+        let rtt = if s.rtt_mean > 0.0 { s.rtt_mean * rng.lognormal(0.0, s.rtt_sigma) } else { 0.0 };
+        rtt + in_tokens / s.prefill_tps + out_tokens / s.tps
+    }
+
+    /// Mean latency (no jitter) — used for profiling targets and oracles.
+    pub fn latency_mean(&self, in_tokens: f64, out_tokens: f64) -> f64 {
+        let s = &self.params.serving;
+        s.rtt_mean + in_tokens / s.prefill_tps + out_tokens / s.tps
+    }
+
+    /// API cost of one call ($); zero for on-device models.
+    pub fn api_cost(&self, in_tokens: f64, out_tokens: f64) -> f64 {
+        let s = &self.params.serving;
+        in_tokens * s.price_in + out_tokens * s.price_out
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Observed outcome of one model call — everything downstream components
+/// (budget, metrics, bandit feedback) are allowed to see.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecRecord {
+    /// Whether the subtask's local output is correct (latent; revealed to
+    /// metrics only through the final-answer draw).
+    pub correct: bool,
+    pub latency: f64,
+    pub api_cost: f64,
+    pub in_tokens: f64,
+    pub out_tokens: f64,
+}
+
+/// An optional compute hook run inside every *edge* execution; the runtime
+/// module installs the PJRT edge-LM forward here so on-device work burns
+/// real cycles through the AOT artifact (serving-path realism).
+pub type ComputeHook = std::sync::Arc<dyn Fn(usize) + Send + Sync>;
+
+/// Simulated execution engine over a fixed (edge, cloud) model pair.
+pub struct SimExecutor {
+    pub sp: SimParams,
+    pub edge: ModelProfile,
+    pub cloud: ModelProfile,
+    /// Called with the chunk count for edge executions (PJRT burn hook).
+    pub edge_compute: Option<ComputeHook>,
+}
+
+impl SimExecutor {
+    pub fn new(edge: ModelKind, cloud: ModelKind) -> SimExecutor {
+        SimExecutor {
+            sp: SimParams::default(),
+            edge: ModelProfile::of(edge),
+            cloud: ModelProfile::of(cloud),
+            edge_compute: None,
+        }
+    }
+
+    /// Main paper pair: Llama3.2-3B on edge, GPT-4.1 on cloud.
+    pub fn paper_pair() -> SimExecutor {
+        SimExecutor::new(ModelKind::Llama3B, ModelKind::Gpt41)
+    }
+
+    /// Table 8 swapped pair.
+    pub fn swap_pair() -> SimExecutor {
+        SimExecutor::new(ModelKind::Qwen7B, ModelKind::DeepSeekV3)
+    }
+
+    pub fn with_edge_compute(mut self, hook: ComputeHook) -> SimExecutor {
+        self.edge_compute = Some(hook);
+        self
+    }
+
+    pub fn profile(&self, cloud: bool) -> &ModelProfile {
+        if cloud {
+            &self.cloud
+        } else {
+            &self.edge
+        }
+    }
+
+    /// Execute one decomposed subtask on the chosen side.
+    ///
+    /// `in_tokens` must include the query prompt plus dependency outputs
+    /// (the scheduler accumulates this). Cloud executions multiply output
+    /// tokens by the verbosity factor, as profiled.
+    pub fn execute_subtask(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        let profile = self.profile(cloud);
+        let out_tokens =
+            if cloud { latent.out_tokens * self.sp.cloud_verbosity } else { latent.out_tokens };
+        let p = profile.p_solve(domain, latent.difficulty, &self.sp);
+        let correct = rng.bernoulli(p);
+        let latency = profile.latency(in_tokens, out_tokens, rng);
+        let api_cost = profile.api_cost(in_tokens, out_tokens);
+        if !cloud {
+            if let Some(hook) = &self.edge_compute {
+                // One PJRT chunk per EDGE_LM_T(=32)-token block, capped to
+                // bound wall-clock in large sweeps.
+                let chunks = ((out_tokens / 32.0).ceil() as usize).clamp(1, 4);
+                hook(chunks);
+            }
+        }
+        ExecRecord { correct, latency, api_cost, in_tokens, out_tokens }
+    }
+
+    /// Execute the whole query as a single (direct or CoT) call.
+    pub fn execute_direct(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        let profile = self.profile(cloud);
+        // Direct latents already encode model-family token counts; no
+        // verbosity multiplier on top.
+        let p = profile.p_solve(domain, latent.difficulty, &self.sp);
+        let correct = rng.bernoulli(p);
+        let latency = profile.latency(in_tokens, latent.out_tokens, rng);
+        let api_cost = profile.api_cost(in_tokens, latent.out_tokens);
+        if !cloud {
+            if let Some(hook) = &self.edge_compute {
+                let chunks = ((latent.out_tokens / 32.0).ceil() as usize).clamp(1, 4);
+                hook(chunks);
+            }
+        }
+        ExecRecord { correct, latency, api_cost, in_tokens, out_tokens: latent.out_tokens }
+    }
+
+    /// Final-answer correctness draw: `P(correct) = prod_i (1 - w_i (1 - s_i))`
+    /// over per-subtask success indicators `s_i` (DESIGN.md / simparams).
+    pub fn final_answer_correct(
+        &self,
+        latents: &[SubtaskLatent],
+        subtask_correct: &[bool],
+        rng: &mut Rng,
+    ) -> bool {
+        let mut p = 1.0;
+        for (l, &ok) in latents.iter().zip(subtask_correct) {
+            if !ok {
+                p *= 1.0 - l.criticality;
+            }
+        }
+        rng.bernoulli(p)
+    }
+
+    /// Expected accuracy gain of offloading one subtask, with the rest of
+    /// the pipeline mixed (the profiling ground truth of App. C).
+    pub fn true_dq(
+        &self,
+        domain: usize,
+        latents: &[SubtaskLatent],
+        i: usize,
+    ) -> f64 {
+        let sp = &self.sp;
+        let p_e = self.edge.p_solve(domain, latents[i].difficulty, sp);
+        let p_c = self.cloud.p_solve(domain, latents[i].difficulty, sp);
+        let mut pipeline = 1.0;
+        for (j, l) in latents.iter().enumerate() {
+            if j != i {
+                let p_avg = 0.5
+                    * (self.edge.p_solve(domain, l.difficulty, sp)
+                        + self.cloud.p_solve(domain, l.difficulty, sp));
+                pipeline *= 1.0 - l.criticality * (1.0 - p_avg);
+            }
+        }
+        (p_c - p_e) * latents[i].criticality * pipeline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn latent(d: f64, w: f64, toks: f64) -> SubtaskLatent {
+        SubtaskLatent { difficulty: d, criticality: w, out_tokens: toks }
+    }
+
+    #[test]
+    fn cloud_beats_edge_on_solve_probability() {
+        let ex = SimExecutor::paper_pair();
+        for domain in 0..4 {
+            for d in [0.2, 0.5, 0.8] {
+                let pe = ex.edge.p_solve(domain, d, &ex.sp);
+                let pc = ex.cloud.p_solve(domain, d, &ex.sp);
+                assert!(pc > pe, "domain {domain} d {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn p_solve_monotone_in_difficulty() {
+        let ex = SimExecutor::paper_pair();
+        let p1 = ex.edge.p_solve(1, 0.2, &ex.sp);
+        let p2 = ex.edge.p_solve(1, 0.6, &ex.sp);
+        let p3 = ex.edge.p_solve(1, 0.9, &ex.sp);
+        assert!(p1 > p2 && p2 > p3);
+    }
+
+    #[test]
+    fn edge_is_free_cloud_costs() {
+        let ex = SimExecutor::paper_pair();
+        let mut rng = Rng::new(0);
+        let l = latent(0.5, 0.5, 100.0);
+        let e = ex.execute_subtask(1, &l, 200.0, false, &mut rng);
+        let c = ex.execute_subtask(1, &l, 200.0, true, &mut rng);
+        assert_eq!(e.api_cost, 0.0);
+        assert!(c.api_cost > 0.0);
+        // Cloud verbosity inflates output tokens.
+        assert!((c.out_tokens / e.out_tokens - ex.sp.cloud_verbosity).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cloud_call_is_slower_per_subtask() {
+        // With verbosity + RTT, per-subtask cloud latency exceeds edge
+        // latency in expectation at typical token counts.
+        let ex = SimExecutor::paper_pair();
+        let l = latent(0.5, 0.5, 120.0);
+        let el = ex.edge.latency_mean(200.0, l.out_tokens);
+        let cl = ex.cloud.latency_mean(200.0, l.out_tokens * ex.sp.cloud_verbosity);
+        assert!(cl > el, "cloud {cl} edge {el}");
+    }
+
+    #[test]
+    fn correctness_rate_tracks_p_solve() {
+        let ex = SimExecutor::paper_pair();
+        let mut rng = Rng::new(42);
+        let l = latent(0.5, 0.5, 100.0);
+        let p = ex.cloud.p_solve(1, 0.5, &ex.sp);
+        let n = 4000;
+        let hits = (0..n)
+            .filter(|_| ex.execute_subtask(1, &l, 100.0, true, &mut rng).correct)
+            .count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - p).abs() < 0.03, "rate {rate} vs p {p}");
+    }
+
+    #[test]
+    fn final_answer_model() {
+        let ex = SimExecutor::paper_pair();
+        let mut rng = Rng::new(1);
+        let lat = vec![latent(0.5, 0.4, 100.0), latent(0.5, 0.7, 100.0)];
+        // All correct -> always correct.
+        let all = (0..2000)
+            .filter(|_| ex.final_answer_correct(&lat, &[true, true], &mut rng))
+            .count();
+        assert_eq!(all, 2000);
+        // One failure with w=0.7 -> ~30% survive.
+        let some = (0..4000)
+            .filter(|_| ex.final_answer_correct(&lat, &[true, false], &mut rng))
+            .count();
+        let rate = some as f64 / 4000.0;
+        assert!((rate - 0.3).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn true_dq_positive_and_bounded() {
+        let ex = SimExecutor::paper_pair();
+        let lat =
+            vec![latent(0.4, 0.4, 80.0), latent(0.6, 0.6, 120.0), latent(0.55, 0.7, 100.0)];
+        for i in 0..3 {
+            let dq = ex.true_dq(1, &lat, i);
+            assert!(dq > 0.0 && dq < 1.0, "dq {dq}");
+        }
+    }
+
+    #[test]
+    fn edge_compute_hook_fires_for_edge_only() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let ex = SimExecutor::paper_pair()
+            .with_edge_compute(Arc::new(move |chunks| {
+                c2.fetch_add(chunks, Ordering::SeqCst);
+            }));
+        let mut rng = Rng::new(0);
+        let l = latent(0.5, 0.5, 64.0);
+        ex.execute_subtask(1, &l, 100.0, true, &mut rng);
+        assert_eq!(count.load(Ordering::SeqCst), 0);
+        ex.execute_subtask(1, &l, 100.0, false, &mut rng);
+        assert!(count.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn swap_pair_profiles() {
+        let ex = SimExecutor::swap_pair();
+        assert_eq!(ex.edge.kind, ModelKind::Qwen7B);
+        assert_eq!(ex.cloud.kind, ModelKind::DeepSeekV3);
+        assert!(ex.cloud.params.serving.price_out < 8.0e-6); // cheaper than GPT-4.1
+        assert!(ModelKind::DeepSeekV3.is_cloud() && !ModelKind::Qwen7B.is_cloud());
+    }
+}

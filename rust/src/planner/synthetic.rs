@@ -1,0 +1,460 @@
+//! Synthetic planner: generates XML plan text with controllable quality.
+//!
+//! Quality profiles are calibrated to the paper's planner statistics:
+//! * Table 5 (main planner): 76–78% valid, 13–14% repairable, 9–10%
+//!   fallback, ~4.3–4.5 nodes per executed DAG.
+//! * Table 7 (base vs SFT Llama3.2-3B): base plans are long and chain-like
+//!   (R_comp ~ 10.7%), SFT plans expose parallelism (R_comp ~ 34.3%).
+//!
+//! Defect injection drives the validation/repair pipeline with realistic
+//! failure modes: cycles, orphans, duplicate GENERATE nodes, unknown Rely
+//! ids, oversize plans, and outright malformed XML (which exercises the
+//! parse-failure fallback).
+
+use super::{PlanText, Planner};
+use crate::config::simparams::model_params;
+use crate::dag::Role;
+use crate::util::rng::Rng;
+use crate::workload::Query;
+
+/// Planner quality profile.
+#[derive(Debug, Clone)]
+pub struct PlannerProfile {
+    pub name: &'static str,
+    /// Probability the emitted plan is structurally valid as-is.
+    pub p_valid: f64,
+    /// Given a defect, probability it is light (repairable) vs hopeless.
+    pub p_repairable_defect: f64,
+    /// Node count range (inclusive).
+    pub nodes: (usize, usize),
+    /// Probability a middle node chains to its immediate predecessor only
+    /// (1.0 -> pure chain, low -> wide DAGs).
+    pub p_chain_edge: f64,
+    /// Probability of reporting per-edge confidence attributes.
+    pub p_report_conf: f64,
+    /// Probability of reporting Req/Prod symbol attributes.
+    pub p_report_symbols: f64,
+    /// Plan-quality dimension means (Figure 5 radar, 0-10 scale):
+    /// [soundness, dependency flow, clarity, attribute accuracy, relevance].
+    pub quality_dims: [f64; 5],
+}
+
+impl PlannerProfile {
+    /// Main-experiment planner (Table 5 statistics).
+    pub fn paper_main() -> PlannerProfile {
+        PlannerProfile {
+            name: "llama3.2-3b-eag",
+            p_valid: 0.77,
+            p_repairable_defect: 0.58, // 13.5% repaired / 23% defective
+            nodes: (3, 6),
+            p_chain_edge: 0.35,
+            p_report_conf: 0.7,
+            p_report_symbols: 0.5,
+            quality_dims: [6.8, 6.2, 7.1, 5.9, 6.9],
+        }
+    }
+
+    /// Base Llama3.2-3B planner (Table 7 top row): long, chain-heavy plans.
+    pub fn base_llama() -> PlannerProfile {
+        PlannerProfile {
+            name: "llama3.2-3b-base",
+            p_valid: 0.62,
+            p_repairable_defect: 0.5,
+            nodes: (5, 7),
+            p_chain_edge: 0.88,
+            p_report_conf: 0.2,
+            p_report_symbols: 0.1,
+            quality_dims: [5.1, 4.3, 5.6, 4.2, 5.4],
+        }
+    }
+
+    /// SFT-distilled planner (Table 7 bottom row): parallel structure.
+    pub fn sft_llama() -> PlannerProfile {
+        PlannerProfile {
+            name: "llama3.2-3b-sft",
+            p_valid: 0.80,
+            p_repairable_defect: 0.6,
+            nodes: (5, 7),
+            p_chain_edge: 0.30,
+            p_report_conf: 0.8,
+            p_report_symbols: 0.6,
+            quality_dims: [7.4, 7.8, 7.6, 6.8, 7.5],
+        }
+    }
+
+    /// Reference large-model planner for the Figure 5 comparison.
+    pub fn frontier_reference() -> PlannerProfile {
+        PlannerProfile {
+            name: "frontier-reference",
+            p_valid: 0.93,
+            p_repairable_defect: 0.8,
+            nodes: (4, 7),
+            p_chain_edge: 0.25,
+            p_report_conf: 0.95,
+            p_report_symbols: 0.9,
+            quality_dims: [8.9, 8.7, 9.0, 8.2, 8.8],
+        }
+    }
+}
+
+/// XML-emitting synthetic planner.
+pub struct SyntheticPlanner {
+    pub profile: PlannerProfile,
+    /// Edge-model tokens/s used for the decomposition latency.
+    plan_tps: f64,
+    plan_prefill_tps: f64,
+}
+
+impl SyntheticPlanner {
+    pub fn new(profile: PlannerProfile) -> SyntheticPlanner {
+        let m = model_params("llama3.2-3b").unwrap();
+        SyntheticPlanner {
+            profile,
+            plan_tps: m.serving.tps,
+            plan_prefill_tps: m.serving.prefill_tps,
+        }
+    }
+
+    pub fn paper_main() -> SyntheticPlanner {
+        SyntheticPlanner::new(PlannerProfile::paper_main())
+    }
+
+    fn step_desc(role: Role, i: usize, query: &Query, rng: &mut Rng) -> String {
+        let domain = query.domain_name();
+        match role {
+            Role::Explain => format!(
+                "Explain: what are the key elements, constraints, and required output format of this {domain} question?"
+            ),
+            Role::Analyze => {
+                const VERBS: [&str; 5] =
+                    ["derive", "verify", "evaluate", "decompose", "cross-check"];
+                let v = rng.choice(&VERBS);
+                format!("Analyze: {v} intermediate result {i} needed for the {domain} question")
+            }
+            Role::Generate => "Generate: based on the previous steps, what is the final answer?"
+                .to_string(),
+        }
+    }
+
+    /// Emit a structurally *valid* plan skeleton (before defect injection).
+    fn emit_valid(&self, query: &Query, rng: &mut Rng) -> Vec<StepSpec> {
+        let p = &self.profile;
+        let n = rng.int_range(p.nodes.0, p.nodes.1 + 1);
+        let mut steps: Vec<StepSpec> = Vec::with_capacity(n);
+        for i in 0..n {
+            let role = if i == 0 {
+                Role::Explain
+            } else if i == n - 1 {
+                Role::Generate
+            } else {
+                Role::Analyze
+            };
+            let deps: Vec<usize> = if i == 0 {
+                vec![]
+            } else if i == n - 1 {
+                // GENERATE depends on all current sinks.
+                let mut is_sink = vec![true; i];
+                for s in &steps {
+                    for &d in &s.deps {
+                        if d < i {
+                            is_sink[d] = false;
+                        }
+                    }
+                }
+                (0..i).filter(|&k| is_sink[k]).collect()
+            } else if rng.bernoulli(p.p_chain_edge) {
+                vec![i - 1]
+            } else {
+                // Wide structure: attach to the root plus maybe one other.
+                let mut d = vec![0];
+                if i >= 2 && rng.bernoulli(0.35) {
+                    let extra = rng.int_range(1, i);
+                    if !d.contains(&extra) {
+                        d.push(extra);
+                    }
+                }
+                d
+            };
+            let tokens = if rng.bernoulli(0.8) {
+                let (mu, _sig) = match role {
+                    Role::Explain => (4.2, 0.35),
+                    Role::Analyze => (4.8, 0.40),
+                    Role::Generate => (4.6, 0.35),
+                };
+                (rng.lognormal(mu, 0.25) * query.tok_mult).round()
+            } else {
+                0.0
+            };
+            steps.push(StepSpec {
+                id: i + 1,
+                desc: Self::step_desc(role, i, query, rng),
+                deps,
+                conf: vec![],
+                tokens,
+            });
+        }
+        // Attach confidences.
+        for s in steps.iter_mut() {
+            if rng.bernoulli(p.p_report_conf) {
+                s.conf = s.deps.iter().map(|_| rng.uniform(0.55, 1.0)).collect();
+            }
+        }
+        steps
+    }
+
+    /// Inject a defect. Light defects are repairable; heavy defects usually
+    /// force the chain fallback.
+    fn inject_defect(&self, steps: &mut Vec<StepSpec>, heavy: bool, rng: &mut Rng) -> bool {
+        // Returns true if the plan text should be outright corrupted.
+        if heavy {
+            // Heavy defects mostly produce unparseable output (the paper's
+            // fallback-to-chain cases); occasionally a dense structural mess
+            // that bounded repair may or may not salvage.
+            match rng.below(8) {
+                0..=5 => return true, // malformed XML
+                6 => {
+                    // Dense cycle among all middle nodes with confident edges.
+                    let n = steps.len();
+                    if n >= 3 {
+                        for i in 1..n {
+                            let j = if i + 1 < n { i + 1 } else { 1 };
+                            steps[i].deps = vec![j];
+                            steps[i].conf = vec![1.0];
+                        }
+                    }
+                }
+                _ => {
+                    // Explode size beyond n_max with interdependent clones.
+                    let n0 = steps.len();
+                    for k in 0..6 {
+                        let id = n0 + k + 1;
+                        steps.push(StepSpec {
+                            id,
+                            desc: format!("Analyze: spurious expansion {k}"),
+                            deps: vec![id - 1],
+                            conf: vec![],
+                            tokens: 0.0,
+                        });
+                    }
+                    // And a cycle between the clones.
+                    let last = steps.len() - 1;
+                    steps[n0].deps.push(last + 1); // unknown id too
+                }
+            }
+            return false;
+        }
+        match rng.below(5) {
+            0 => {
+                // Single back edge (cycle) with low confidence.
+                if steps.len() >= 3 {
+                    let n = steps.len();
+                    let i = rng.int_range(1, n - 1);
+                    steps[i].deps.push(n);
+                    if !steps[i].conf.is_empty() {
+                        steps[i].conf.push(rng.uniform(0.1, 0.4));
+                    }
+                }
+            }
+            1 => {
+                // Orphan: drop all deps of a middle node.
+                if steps.len() >= 3 {
+                    let i = rng.int_range(1, steps.len() - 1);
+                    steps[i].deps.clear();
+                    steps[i].conf.clear();
+                }
+            }
+            2 => {
+                // Duplicate GENERATE.
+                if steps.len() >= 3 {
+                    let i = rng.int_range(1, steps.len() - 1);
+                    steps[i].desc = "Generate: premature final answer".into();
+                }
+            }
+            3 => {
+                // Unknown Rely id.
+                let n = steps.len();
+                let i = rng.below(n);
+                steps[i].deps.push(n + 7);
+                if !steps[i].conf.is_empty() {
+                    steps[i].conf.push(0.3);
+                }
+            }
+            _ => {
+                // Wrong root role.
+                steps[0].desc = steps[0].desc.replacen("Explain:", "Analyze:", 1);
+            }
+        }
+        false
+    }
+
+    fn render(steps: &[StepSpec]) -> String {
+        let mut xml = String::from("<Plan>\n");
+        for s in steps {
+            let rely: Vec<String> = s.deps.iter().map(|d| (d + 1).to_string()).collect();
+            xml.push_str(&format!(
+                "  <Step ID=\"{}\" Task=\"{}\" Rely=\"{}\"",
+                s.id,
+                s.desc.replace('"', "&quot;"),
+                rely.join(",")
+            ));
+            if !s.conf.is_empty() && s.conf.len() == s.deps.len() {
+                let conf: Vec<String> = s.conf.iter().map(|c| format!("{c:.2}")).collect();
+                xml.push_str(&format!(" Conf=\"{}\"", conf.join(",")));
+            }
+            if s.tokens > 0.0 {
+                xml.push_str(&format!(" Tokens=\"{}\"", s.tokens));
+            }
+            xml.push_str("/>\n");
+        }
+        xml.push_str("</Plan>");
+        xml
+    }
+}
+
+struct StepSpec {
+    id: usize,
+    desc: String,
+    deps: Vec<usize>,
+    conf: Vec<f64>,
+    tokens: f64,
+}
+
+impl Planner for SyntheticPlanner {
+    fn plan_text(&self, query: &Query, rng: &mut Rng) -> PlanText {
+        let mut steps = self.emit_valid(query, rng);
+        let mut corrupt_text = false;
+        if !rng.bernoulli(self.profile.p_valid) {
+            let heavy = !rng.bernoulli(self.profile.p_repairable_defect);
+            corrupt_text = self.inject_defect(&mut steps, heavy, rng);
+        }
+        let mut xml = Self::render(&steps);
+        if corrupt_text {
+            // Truncate mid-attribute: guaranteed parse failure.
+            let cut = xml.len() / 2;
+            xml.truncate(cut);
+        }
+        // Decomposition latency: prompt prefill + plan decode on the edge.
+        let plan_tokens = 18.0 * steps.len() as f64 + 25.0;
+        let prompt_tokens = query.query_tokens + 350.0; // EAG meta-prompt + exemplars
+        let planning_latency =
+            prompt_tokens / self.plan_prefill_tps + plan_tokens / self.plan_tps;
+        PlanText { xml, planning_latency, plan_tokens }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{validate, RepairOutcome};
+    use crate::workload::{generate_queries, Benchmark};
+
+    fn queries(n: usize) -> Vec<Query> {
+        generate_queries(Benchmark::Gpqa, n, 11)
+    }
+
+    #[test]
+    fn plans_parse_and_execute() {
+        let p = SyntheticPlanner::paper_main();
+        let mut rng = Rng::new(0);
+        for q in queries(100) {
+            let plan = p.plan(&q, 7, &mut rng);
+            assert!(validate(&plan.dag, 7).is_valid());
+            assert!(plan.planning_latency > 0.0);
+        }
+    }
+
+    #[test]
+    fn outcome_rates_match_table5() {
+        let p = SyntheticPlanner::paper_main();
+        let mut rng = Rng::new(1);
+        let mut valid = 0;
+        let mut repaired = 0;
+        let mut fallback = 0;
+        let n = 1200;
+        for q in queries(n) {
+            match p.plan(&q, 7, &mut rng).outcome {
+                RepairOutcome::Valid => valid += 1,
+                RepairOutcome::Repaired(_) => repaired += 1,
+                RepairOutcome::Fallback => fallback += 1,
+            }
+        }
+        let vr = valid as f64 / n as f64;
+        let rr = repaired as f64 / n as f64;
+        let fr = fallback as f64 / n as f64;
+        // Paper: 76-78 / 13-14 / 9-10 (percent). Allow simulation slack.
+        assert!((0.68..=0.86).contains(&vr), "valid rate {vr}");
+        assert!((0.06..=0.22).contains(&rr), "repaired rate {rr}");
+        assert!((0.03..=0.17).contains(&fr), "fallback rate {fr}");
+    }
+
+    #[test]
+    fn avg_nodes_in_paper_range() {
+        let p = SyntheticPlanner::paper_main();
+        let mut rng = Rng::new(2);
+        let mut total = 0usize;
+        let mut count = 0usize;
+        for q in queries(400) {
+            let plan = p.plan(&q, 7, &mut rng);
+            if plan.outcome != RepairOutcome::Fallback {
+                total += plan.dag.len();
+                count += 1;
+            }
+        }
+        let avg = total as f64 / count as f64;
+        assert!((3.6..=5.2).contains(&avg), "avg nodes {avg} (paper: 4.3-4.5)");
+    }
+
+    #[test]
+    fn sft_has_higher_compression_than_base() {
+        let mut rng = Rng::new(3);
+        let rcomp = |prof: PlannerProfile, rng: &mut Rng| {
+            let p = SyntheticPlanner::new(prof);
+            let mut acc = 0.0;
+            let qs = queries(300);
+            for q in &qs {
+                let plan = p.plan(q, 7, rng);
+                acc += plan.dag.compression_ratio().unwrap_or(0.0);
+            }
+            acc / qs.len() as f64
+        };
+        let base = rcomp(PlannerProfile::base_llama(), &mut rng);
+        let sft = rcomp(PlannerProfile::sft_llama(), &mut rng);
+        assert!(sft > base + 0.1, "sft {sft} base {base} (paper: 34.3 vs 10.7)");
+        assert!((0.02..=0.25).contains(&base), "base R_comp {base}");
+        assert!((0.2..=0.5).contains(&sft), "sft R_comp {sft}");
+    }
+
+    #[test]
+    fn heavier_profiles_make_longer_plans() {
+        let mut rng = Rng::new(4);
+        let p = SyntheticPlanner::new(PlannerProfile::base_llama());
+        let qs = queries(200);
+        let mut total = 0usize;
+        for q in &qs {
+            let plan = p.plan(q, 7, &mut rng);
+            total += plan.dag.len();
+        }
+        let avg = total as f64 / qs.len() as f64;
+        assert!(avg > 4.8, "base planner avg steps {avg} (paper 5.84)");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = SyntheticPlanner::paper_main();
+        let q = &queries(1)[0];
+        let a = p.plan_text(q, &mut Rng::new(9)).xml;
+        let b = p.plan_text(q, &mut Rng::new(9)).xml;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn planning_latency_scales_with_plan_length() {
+        let p = SyntheticPlanner::paper_main();
+        let q = &queries(1)[0];
+        let mut rng = Rng::new(5);
+        let t = p.plan_text(q, &mut rng);
+        // ~0.4s prefill + 2-3s decode at 42 tps for ~5 steps.
+        assert!(t.planning_latency > 1.0 && t.planning_latency < 6.0,
+                "planning latency {}", t.planning_latency);
+    }
+}

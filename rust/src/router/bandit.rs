@@ -1,0 +1,208 @@
+//! Contextual-bandit calibration head (Sec. 3.3 "Contextual Bandit
+//! Calibration", Eqs. 13–14).
+//!
+//! The offline utility `u_hat` can be miscalibrated under system shifts
+//! (e.g. cloud RTT doubles) or task shifts. This LinUCB head refines it
+//! online from *partial feedback*: the realized utility is observed only
+//! when a subtask was offloaded (`r_i = 1`).
+//!
+//! Context vector: `x = [1, u_hat, remaining_k, remaining_l, position]`.
+//! The calibrated score is `u_tilde = clip(theta^T x + alpha_ucb *
+//! sqrt(x^T A^{-1} x), 0, 1)` — the affine `alpha*u_hat + beta + w^T s` of
+//! Eq. 13 with an optimistic exploration bonus. `A^{-1}` is maintained
+//! incrementally via Sherman–Morrison (no matrix inversion in the loop).
+
+use crate::budget::BudgetState;
+use crate::config::simparams::SimParams;
+
+/// Context dimension: [bias, u_hat, remaining_k_frac, remaining_l_frac, pos].
+pub const CTX_DIM: usize = 5;
+
+/// LinUCB state with ridge prior `lambda_reg * I`.
+#[derive(Debug, Clone)]
+pub struct LinUcb {
+    /// A^{-1} (row-major CTX_DIM x CTX_DIM).
+    a_inv: [[f64; CTX_DIM]; CTX_DIM],
+    /// b accumulator.
+    b: [f64; CTX_DIM],
+    /// theta = A^{-1} b (kept in sync).
+    theta: [f64; CTX_DIM],
+    /// Exploration strength.
+    pub alpha_ucb: f64,
+    /// Observations consumed.
+    pub n_updates: usize,
+}
+
+impl LinUcb {
+    pub fn new(alpha_ucb: f64, lambda_reg: f64) -> LinUcb {
+        let mut a_inv = [[0.0; CTX_DIM]; CTX_DIM];
+        for i in 0..CTX_DIM {
+            a_inv[i][i] = 1.0 / lambda_reg;
+        }
+        let mut ucb = LinUcb { a_inv, b: [0.0; CTX_DIM], theta: [0.0; CTX_DIM], alpha_ucb, n_updates: 0 };
+        // Prior: trust u_hat (theta = e_uhat) until data accumulates.
+        ucb.b[1] = lambda_reg;
+        ucb.refresh_theta();
+        ucb
+    }
+
+    /// Paper-flavoured default: light exploration, unit ridge. (0.3 was
+    /// over-optimistic: the per-query decision count is small, so a large
+    /// UCB bonus routes everything cloud before the head has data.)
+    pub fn paper_default() -> LinUcb {
+        LinUcb::new(0.1, 1.0)
+    }
+
+    /// Build the context vector for one decision.
+    pub fn context(sp: &SimParams, u_hat: f64, budget: &BudgetState, position: f64) -> [f64; CTX_DIM] {
+        let rem_k = (1.0 - budget.k_used / sp.k_max_global).clamp(0.0, 1.0);
+        let rem_l = (1.0 - budget.l_used / sp.l_max_global).clamp(0.0, 1.0);
+        [1.0, u_hat, rem_k, rem_l, position.clamp(0.0, 1.0)]
+    }
+
+    /// Calibrated utility `u_tilde` (Eq. 13 + UCB bonus).
+    pub fn calibrated(&self, x: &[f64; CTX_DIM]) -> f64 {
+        let mean = dot(&self.theta, x);
+        let bonus = self.alpha_ucb * self.mahalanobis(x).sqrt();
+        (mean + bonus).clamp(0.0, 1.0)
+    }
+
+    /// Observe the realized cost-aware reward `R = dq - lambda * c`
+    /// (Eq. 14), mapped into utility space by the caller. Only invoked for
+    /// offloaded subtasks — the partial-feedback regime.
+    pub fn update(&mut self, x: &[f64; CTX_DIM], reward: f64) {
+        // Sherman–Morrison: (A + x x^T)^{-1} = A^{-1} - (A^{-1}x x^T A^{-1}) / (1 + x^T A^{-1} x)
+        let ax = self.mat_vec(x);
+        let denom = 1.0 + dot(&ax, x);
+        for i in 0..CTX_DIM {
+            for j in 0..CTX_DIM {
+                self.a_inv[i][j] -= ax[i] * ax[j] / denom;
+            }
+        }
+        for i in 0..CTX_DIM {
+            self.b[i] += reward * x[i];
+        }
+        self.refresh_theta();
+        self.n_updates += 1;
+    }
+
+    /// x^T A^{-1} x (>= 0 when A^{-1} stays PD).
+    pub fn mahalanobis(&self, x: &[f64; CTX_DIM]) -> f64 {
+        dot(&self.mat_vec(x), x).max(0.0)
+    }
+
+    fn mat_vec(&self, x: &[f64; CTX_DIM]) -> [f64; CTX_DIM] {
+        let mut out = [0.0; CTX_DIM];
+        for i in 0..CTX_DIM {
+            for j in 0..CTX_DIM {
+                out[i] += self.a_inv[i][j] * x[j];
+            }
+        }
+        out
+    }
+
+    fn refresh_theta(&mut self) {
+        self.theta = self.mat_vec(&self.b);
+    }
+
+    pub fn theta(&self) -> &[f64; CTX_DIM] {
+        &self.theta
+    }
+}
+
+fn dot(a: &[f64; CTX_DIM], b: &[f64; CTX_DIM]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prior_trusts_u_hat() {
+        let ucb = LinUcb::new(0.0, 1.0);
+        for u in [0.1, 0.5, 0.9] {
+            let x = [1.0, u, 1.0, 1.0, 0.0];
+            let c = ucb.calibrated(&x);
+            // theta prior = e_1 damped by the identity prior's own ridge.
+            assert!((c - u).abs() < 0.6, "c {c} u {u}");
+        }
+        // Monotone in u_hat under the prior.
+        let lo = ucb.calibrated(&[1.0, 0.1, 1.0, 1.0, 0.0]);
+        let hi = ucb.calibrated(&[1.0, 0.9, 1.0, 1.0, 0.0]);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn learns_affine_shift() {
+        // True reward = 0.5 * u_hat + 0.2 (a miscalibration). After enough
+        // updates the head should predict it closely.
+        let mut ucb = LinUcb::new(0.0, 1.0);
+        let mut rng = Rng::new(0);
+        for _ in 0..3000 {
+            let u = rng.f64();
+            let x = [1.0, u, rng.f64(), rng.f64(), rng.f64()];
+            ucb.update(&x, 0.5 * u + 0.2);
+        }
+        for u in [0.0, 0.3, 0.8] {
+            let x = [1.0, u, 0.5, 0.5, 0.5];
+            let got = ucb.calibrated(&x);
+            let want = 0.5 * u + 0.2;
+            assert!((got - want).abs() < 0.05, "u {u}: got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn exploration_bonus_shrinks_with_data() {
+        let mut ucb = LinUcb::new(0.5, 1.0);
+        let x = [1.0, 0.5, 0.5, 0.5, 0.5];
+        let before = ucb.mahalanobis(&x);
+        for _ in 0..100 {
+            ucb.update(&x, 0.4);
+        }
+        let after = ucb.mahalanobis(&x);
+        assert!(after < before * 0.05, "before {before} after {after}");
+    }
+
+    #[test]
+    fn a_inv_stays_positive_definite() {
+        crate::testing::forall("x^T A^-1 x >= 0", 100, |g| {
+            let mut ucb = LinUcb::new(0.3, 1.0);
+            for _ in 0..g.usize_in(0..50) {
+                let x = [1.0, g.unit_f64(), g.unit_f64(), g.unit_f64(), g.unit_f64()];
+                ucb.update(&x, g.f64_in(-1.0..1.0));
+            }
+            let probe = [1.0, g.unit_f64(), g.unit_f64(), g.unit_f64(), g.unit_f64()];
+            ucb.mahalanobis(&probe) >= 0.0 && ucb.calibrated(&probe).is_finite()
+        });
+    }
+
+    #[test]
+    fn calibrated_clipped_to_unit() {
+        let mut ucb = LinUcb::new(1.0, 0.1);
+        // Push theta far positive.
+        for _ in 0..50 {
+            ucb.update(&[1.0, 1.0, 1.0, 1.0, 1.0], 10.0);
+        }
+        assert_eq!(ucb.calibrated(&[1.0, 1.0, 1.0, 1.0, 1.0]), 1.0);
+        let mut ucb = LinUcb::new(0.0, 0.1);
+        for _ in 0..50 {
+            ucb.update(&[1.0, 1.0, 1.0, 1.0, 1.0], -10.0);
+        }
+        assert_eq!(ucb.calibrated(&[1.0, 1.0, 1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn context_reflects_remaining_budget() {
+        let sp = SimParams::default();
+        let mut b = BudgetState::new();
+        let x0 = LinUcb::context(&sp, 0.5, &b, 0.2);
+        assert_eq!(x0, [1.0, 0.5, 1.0, 1.0, 0.2]);
+        b.k_used = sp.k_max_global; // exhausted
+        b.l_used = sp.l_max_global / 2.0;
+        let x1 = LinUcb::context(&sp, 0.5, &b, 0.2);
+        assert_eq!(x1[2], 0.0);
+        assert!((x1[3] - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,193 @@
+//! 0–1 knapsack oracle (App. B.1): the offline-optimal subtask allocation
+//! `max sum r_i dq_i  s.t.  sum r_i c_i <= C_max`.
+//!
+//! Used as the evaluation upper bound for routing quality and to test the
+//! Lagrangian-threshold structure (Eq. 6). Plans are small (n <= 7), so the
+//! exact exponential enumeration is cheap; a discretized DP handles the
+//! larger profiling sets; a greedy ratio heuristic provides the classic
+//! approximation for comparison benches.
+
+/// Exact solution by exhaustive enumeration (n <= 25 guarded).
+pub fn solve_exact(values: &[f64], weights: &[f64], capacity: f64) -> (f64, Vec<bool>) {
+    let n = values.len();
+    assert_eq!(n, weights.len());
+    assert!(n <= 25, "exhaustive knapsack limited to n<=25, got {n}");
+    let mut best_val = 0.0;
+    let mut best_mask = 0usize;
+    for mask in 0..(1usize << n) {
+        let mut v = 0.0;
+        let mut w = 0.0;
+        for i in 0..n {
+            if mask & (1 << i) != 0 {
+                v += values[i];
+                w += weights[i];
+            }
+        }
+        if w <= capacity + 1e-12 && v > best_val {
+            best_val = v;
+            best_mask = mask;
+        }
+    }
+    let pick = (0..n).map(|i| best_mask & (1 << i) != 0).collect();
+    (best_val, pick)
+}
+
+/// Discretized DP for larger instances: weights quantized to `resolution`
+/// (conservative rounding up, so the returned set always fits the true
+/// capacity).
+pub fn solve_dp(values: &[f64], weights: &[f64], capacity: f64, resolution: f64) -> (f64, Vec<bool>) {
+    let n = values.len();
+    assert_eq!(n, weights.len());
+    let cap_q = (capacity / resolution).floor() as usize;
+    let wq: Vec<usize> = weights.iter().map(|w| (w / resolution).ceil() as usize).collect();
+    // dp[w] = best value using weight exactly <= w; keep choice bits.
+    let mut dp = vec![0.0f64; cap_q + 1];
+    let mut choice = vec![vec![false; n]; cap_q + 1];
+    for i in 0..n {
+        if values[i] <= 0.0 {
+            continue;
+        }
+        for w in (wq[i]..=cap_q).rev() {
+            let cand = dp[w - wq[i]] + values[i];
+            if cand > dp[w] {
+                dp[w] = cand;
+                choice[w] = choice[w - wq[i]].clone();
+                choice[w][i] = true;
+            }
+        }
+    }
+    let best_w = (0..=cap_q)
+        .max_by(|&a, &b| dp[a].partial_cmp(&dp[b]).unwrap())
+        .unwrap_or(0);
+    (dp[best_w], choice[best_w].clone())
+}
+
+/// Greedy benefit–cost ratio heuristic — exactly the Lagrangian threshold
+/// family of Eq. 6: sort by `dq_i / c_i`, take while budget lasts.
+pub fn solve_greedy_ratio(values: &[f64], weights: &[f64], capacity: f64) -> (f64, Vec<bool>) {
+    let n = values.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        let ra = values[a] / weights[a].max(1e-12);
+        let rb = values[b] / weights[b].max(1e-12);
+        rb.partial_cmp(&ra).unwrap()
+    });
+    let mut pick = vec![false; n];
+    let mut used = 0.0;
+    let mut total = 0.0;
+    for &i in &idx {
+        if values[i] <= 0.0 {
+            continue;
+        }
+        if used + weights[i] <= capacity + 1e-12 {
+            pick[i] = true;
+            used += weights[i];
+            total += values[i];
+        }
+    }
+    (total, pick)
+}
+
+/// The threshold rule of Eq. 6 for a fixed shadow price `lambda`:
+/// offload iff `dq_i / c_i > lambda`.
+pub fn threshold_allocation(values: &[f64], weights: &[f64], lambda: f64) -> Vec<bool> {
+    values
+        .iter()
+        .zip(weights)
+        .map(|(&v, &w)| v / w.max(1e-12) > lambda)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn exact_solves_textbook_instance() {
+        let v = [60.0, 100.0, 120.0];
+        let w = [0.10, 0.20, 0.30];
+        let (best, pick) = solve_exact(&v, &w, 0.5);
+        assert_eq!(best, 220.0);
+        assert_eq!(pick, vec![false, true, true]);
+    }
+
+    #[test]
+    fn zero_capacity_picks_nothing() {
+        let (best, pick) = solve_exact(&[1.0, 2.0], &[0.5, 0.5], 0.0);
+        assert_eq!(best, 0.0);
+        assert!(pick.iter().all(|&p| !p));
+    }
+
+    #[test]
+    fn dp_matches_exact_on_random_instances() {
+        forall("dp == exact (fine grid)", 60, |g| {
+            let n = g.usize_in(1..10);
+            let v: Vec<f64> = (0..n).map(|_| g.f64_in(0.0..1.0)).collect();
+            // Weights on the resolution grid so DP rounding is exact.
+            let w: Vec<f64> = (0..n).map(|_| (g.usize_in(1..100) as f64) * 1e-3).collect();
+            let cap = g.f64_in(0.0..2.0);
+            let (ve, _) = solve_exact(&v, &w, cap);
+            let (vd, pick) = solve_dp(&v, &w, cap, 1e-3);
+            let wd: f64 = pick.iter().zip(&w).filter(|(p, _)| **p).map(|(_, w)| w).sum();
+            (ve - vd).abs() < 1e-9 && wd <= cap + 1e-9
+        });
+    }
+
+    #[test]
+    fn greedy_never_beats_exact_and_respects_capacity() {
+        forall("greedy <= exact", 80, |g| {
+            let n = g.usize_in(1..12);
+            let v: Vec<f64> = (0..n).map(|_| g.f64_in(0.0..1.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| g.f64_in(0.01..0.5)).collect();
+            let cap = g.f64_in(0.0..1.5);
+            let (ve, _) = solve_exact(&v, &w, cap);
+            let (vg, pick) = solve_greedy_ratio(&v, &w, cap);
+            let wg: f64 = pick.iter().zip(&w).filter(|(p, _)| **p).map(|(_, w)| w).sum();
+            vg <= ve + 1e-9 && wg <= cap + 1e-9
+        });
+    }
+
+    #[test]
+    fn threshold_rule_monotone_in_lambda() {
+        let v = [0.3, 0.1, 0.5, 0.05];
+        let w = [0.2, 0.2, 0.25, 0.3];
+        let count = |lam: f64| {
+            threshold_allocation(&v, &w, lam).iter().filter(|&&b| b).count()
+        };
+        assert!(count(0.0) >= count(0.5));
+        assert!(count(0.5) >= count(1.5));
+        assert!(count(1.5) >= count(5.0));
+        assert_eq!(count(1e9), 0);
+    }
+
+    #[test]
+    fn lagrangian_threshold_achieves_exact_for_some_lambda() {
+        // For instances where the LP relaxation is tight (no fractional
+        // item), some lambda reproduces the exact optimum. Verify a sweep
+        // finds a threshold allocation matching exact value on easy cases.
+        let v = [0.6, 0.2, 0.15];
+        let w = [0.3, 0.2, 0.15];
+        let cap = 0.65;
+        let (ve, _) = solve_exact(&v, &w, cap);
+        let mut best = 0.0f64;
+        for k in 0..200 {
+            let lam = k as f64 * 0.02;
+            let pick = threshold_allocation(&v, &w, lam);
+            let wsum: f64 = pick.iter().zip(&w).filter(|(p, _)| **p).map(|(_, w)| w).sum();
+            if wsum <= cap {
+                let vsum: f64 = pick.iter().zip(&v).filter(|(p, _)| **p).map(|(_, v)| v).sum();
+                best = best.max(vsum);
+            }
+        }
+        assert!((best - ve).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "limited")]
+    fn exact_guards_large_n() {
+        let v = vec![1.0; 30];
+        let w = vec![0.1; 30];
+        let _ = solve_exact(&v, &w, 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Utility-based subtask routing (Sec. 3.3): learned utility prediction,
+//! adaptive thresholds, bandit calibration, the knapsack oracle, and the
+//! policy zoo for ablations.
+
+pub mod bandit;
+pub mod knapsack;
+pub mod policy;
+pub mod predictor;
+pub mod threshold;
+pub mod utility;
+
+pub use bandit::LinUcb;
+pub use policy::{RoutePolicy, RouterState};
+pub use predictor::{MirrorPredictor, UtilityPredictor};
+pub use threshold::Threshold;

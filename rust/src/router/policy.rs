@@ -1,0 +1,272 @@
+//! Routing policies: the learned HybridFlow router plus every ablation
+//! baseline of Table 3 (Edge, Cloud, Random, Fixed threshold) and the
+//! offline knapsack oracle used as an upper bound.
+
+use super::bandit::LinUcb;
+use super::threshold::Threshold;
+use crate::budget::BudgetState;
+use crate::config::simparams::SimParams;
+use crate::util::rng::Rng;
+
+/// Declarative policy selection (resolved by the scheduler into decisions).
+#[derive(Debug, Clone)]
+pub enum RoutePolicy {
+    /// Everything on the edge model.
+    AllEdge,
+    /// Everything on the cloud model.
+    AllCloud,
+    /// Offload i.i.d. with probability `p` (Table 3's Random, p ~ offload
+    /// rate of the learned router).
+    Random(f64),
+    /// Learned utility vs. fixed threshold tau0 (Table 6 sweep).
+    FixedThreshold(f64),
+    /// Full HybridFlow: learned utility + adaptive threshold; optional
+    /// LinUCB calibration.
+    Learned { threshold: Threshold, calibrate: bool },
+    /// Offline knapsack oracle on true (dq, c) — evaluation upper bound,
+    /// not implementable online (App. B.5).
+    Oracle,
+}
+
+impl RoutePolicy {
+    /// Default HybridFlow configuration: projected dual ascent (Eq. 10/11)
+    /// on the normalized budget. (The paper deploys the Eq. 27 resource-
+    /// pressure form - available as [`RoutePolicy::hybridflow_eq27`] - but
+    /// on our substrate its latency term over-penalizes deep pivotal
+    /// subtasks; see EXPERIMENTS.md "Threshold form".)
+    pub fn hybridflow(sp: &SimParams) -> RoutePolicy {
+        RoutePolicy::Learned { threshold: Threshold::dual(sp), calibrate: false }
+    }
+
+    /// The paper's deployed Eq. 27 threshold variant.
+    pub fn hybridflow_eq27(sp: &SimParams) -> RoutePolicy {
+        RoutePolicy::Learned { threshold: Threshold::paper_default(sp), calibrate: false }
+    }
+
+    /// HybridFlow with the bandit calibration head enabled.
+    pub fn hybridflow_calibrated(sp: &SimParams) -> RoutePolicy {
+        RoutePolicy::Learned { threshold: Threshold::paper_default(sp), calibrate: true }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            RoutePolicy::AllEdge => "Edge".into(),
+            RoutePolicy::AllCloud => "Cloud".into(),
+            RoutePolicy::Random(p) => format!("Random({p:.2})"),
+            RoutePolicy::FixedThreshold(t) => format!("Fixed(tau0={t})"),
+            RoutePolicy::Learned { calibrate, .. } => {
+                if *calibrate {
+                    "HybridFlow+LinUCB".into()
+                } else {
+                    "HybridFlow".into()
+                }
+            }
+            RoutePolicy::Oracle => "Oracle".into(),
+        }
+    }
+}
+
+/// Mutable per-query routing state (threshold dynamics + bandit head).
+pub struct RouterState {
+    pub policy: RoutePolicy,
+    pub bandit: LinUcb,
+    /// Trace of thresholds at each decision (Figure 3's line series).
+    pub tau_trace: Vec<f64>,
+}
+
+impl RouterState {
+    pub fn new(policy: RoutePolicy) -> RouterState {
+        RouterState { policy, bandit: LinUcb::paper_default(), tau_trace: Vec::new() }
+    }
+
+    /// Decide one ready subtask. `u_hat` from the predictor; `position` in
+    /// [0,1]; `oracle_ratio` = true dq/c for the Oracle policy.
+    pub fn decide(
+        &mut self,
+        sp: &SimParams,
+        u_hat: f64,
+        position: f64,
+        budget: &BudgetState,
+        oracle_ratio: Option<f64>,
+        rng: &mut Rng,
+    ) -> bool {
+        let decision = match &mut self.policy {
+            RoutePolicy::AllEdge => {
+                self.tau_trace.push(1.0);
+                false
+            }
+            RoutePolicy::AllCloud => {
+                self.tau_trace.push(0.0);
+                true
+            }
+            RoutePolicy::Random(p) => {
+                self.tau_trace.push(1.0 - *p);
+                rng.bernoulli(*p)
+            }
+            RoutePolicy::FixedThreshold(t) => {
+                self.tau_trace.push(*t);
+                u_hat > *t
+            }
+            RoutePolicy::Learned { threshold, calibrate } => {
+                let tau = threshold.tau(budget);
+                self.tau_trace.push(tau);
+                let u_bar = if *calibrate {
+                    let x = LinUcb::context(sp, u_hat, budget, position);
+                    self.bandit.calibrated(&x)
+                } else {
+                    u_hat
+                };
+                let r = u_bar > tau;
+                threshold.update(budget);
+                r
+            }
+            RoutePolicy::Oracle => {
+                // Threshold at the budget-clearing shadow price; the caller
+                // supplies the true benefit-cost ratio. Price rises as the
+                // budget depletes (simple certainty-equivalent rule).
+                let lambda = if budget.c_used >= sp.c_max { f64::INFINITY } else { 0.35 };
+                self.tau_trace.push(0.0);
+                oracle_ratio.map_or(false, |r| r > lambda)
+            }
+        };
+        decision
+    }
+
+    /// Feed realized outcome back to the bandit (offloaded subtasks only —
+    /// partial feedback, Eq. 14's `R = dq - lambda * c`).
+    pub fn observe_offloaded(
+        &mut self,
+        sp: &SimParams,
+        u_hat: f64,
+        position: f64,
+        budget_at_decision: &BudgetState,
+        realized_dq: f64,
+        realized_c: f64,
+    ) {
+        if let RoutePolicy::Learned { calibrate: true, threshold } = &self.policy {
+            let lambda = threshold.tau(budget_at_decision); // tau as shadow price
+            let reward = (realized_dq - lambda * realized_c)
+                / (realized_c + sp.eps_utility);
+            let x = LinUcb::context(sp, u_hat, budget_at_decision, position);
+            self.bandit.update(&x, reward.clamp(-1.0, 1.0));
+        }
+    }
+
+    pub fn reset_for_query(&mut self) {
+        self.begin_query(false);
+    }
+
+    /// Start a new query. With `persist=true` the dual variable and the
+    /// bandit head carry over (streaming deployment: the shadow price is
+    /// learned across the query stream); with `persist=false` both reset
+    /// (paper's per-query evaluation protocol).
+    pub fn begin_query(&mut self, persist: bool) {
+        if !persist {
+            if let RoutePolicy::Learned { threshold, .. } = &mut self.policy {
+                threshold.reset();
+            }
+            self.bandit = LinUcb::paper_default();
+        }
+        self.tau_trace.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp() -> SimParams {
+        SimParams::default()
+    }
+
+    #[test]
+    fn all_edge_and_cloud_are_constant() {
+        let s = sp();
+        let b = BudgetState::new();
+        let mut rng = Rng::new(0);
+        let mut e = RouterState::new(RoutePolicy::AllEdge);
+        let mut c = RouterState::new(RoutePolicy::AllCloud);
+        for _ in 0..20 {
+            assert!(!e.decide(&s, 0.99, 0.5, &b, None, &mut rng));
+            assert!(c.decide(&s, 0.01, 0.5, &b, None, &mut rng));
+        }
+    }
+
+    #[test]
+    fn random_hits_target_rate() {
+        let s = sp();
+        let b = BudgetState::new();
+        let mut rng = Rng::new(1);
+        let mut r = RouterState::new(RoutePolicy::Random(0.42));
+        let hits = (0..20000).filter(|_| r.decide(&s, 0.5, 0.5, &b, None, &mut rng)).count();
+        let rate = hits as f64 / 20000.0;
+        assert!((rate - 0.42).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn fixed_threshold_splits_on_u_hat() {
+        let s = sp();
+        let b = BudgetState::new();
+        let mut rng = Rng::new(2);
+        let mut r = RouterState::new(RoutePolicy::FixedThreshold(0.5));
+        assert!(r.decide(&s, 0.7, 0.0, &b, None, &mut rng));
+        assert!(!r.decide(&s, 0.3, 0.0, &b, None, &mut rng));
+        assert!(!r.decide(&s, 0.5, 0.0, &b, None, &mut rng)); // strict >
+    }
+
+    #[test]
+    fn learned_becomes_conservative_as_budget_burns() {
+        let s = sp();
+        let mut rng = Rng::new(3);
+        // Eq. 27 variant: resource pressure comes from k_used/l_used.
+        let mut r = RouterState::new(RoutePolicy::hybridflow_eq27(&s));
+        let fresh = BudgetState::new();
+        assert!(r.decide(&s, 0.45, 0.0, &fresh, None, &mut rng)); // above tau0
+        let mut burnt = BudgetState::new();
+        burnt.k_used = s.k_max_global; // +0.5 pressure
+        burnt.l_used = s.l_max_global; // +0.5 pressure -> tau = 1.0
+        assert!(!r.decide(&s, 0.45, 0.9, &burnt, None, &mut rng));
+        assert!(!r.decide(&s, 0.99, 0.9, &burnt, None, &mut rng)); // tau clipped to 1, strict >
+    }
+
+    #[test]
+    fn tau_trace_records_decisions() {
+        let s = sp();
+        let b = BudgetState::new();
+        let mut rng = Rng::new(4);
+        let mut r = RouterState::new(RoutePolicy::hybridflow(&s));
+        for _ in 0..5 {
+            r.decide(&s, 0.5, 0.2, &b, None, &mut rng);
+        }
+        assert_eq!(r.tau_trace.len(), 5);
+        assert!(r.tau_trace.iter().all(|t| (0.0..=1.0).contains(t)));
+        r.reset_for_query();
+        assert!(r.tau_trace.is_empty());
+    }
+
+    #[test]
+    fn oracle_uses_true_ratio() {
+        let s = sp();
+        let b = BudgetState::new();
+        let mut rng = Rng::new(5);
+        let mut r = RouterState::new(RoutePolicy::Oracle);
+        assert!(r.decide(&s, 0.0, 0.0, &b, Some(5.0), &mut rng));
+        assert!(!r.decide(&s, 1.0, 0.0, &b, Some(0.01), &mut rng));
+        // Budget exhausted -> never offload.
+        let mut burnt = BudgetState::new();
+        burnt.c_used = s.c_max + 0.1;
+        assert!(!r.decide(&s, 1.0, 0.0, &burnt, Some(100.0), &mut rng));
+    }
+
+    #[test]
+    fn calibration_updates_only_when_enabled() {
+        let s = sp();
+        let b = BudgetState::new();
+        let mut plain = RouterState::new(RoutePolicy::hybridflow(&s));
+        plain.observe_offloaded(&s, 0.5, 0.2, &b, 0.3, 0.2);
+        assert_eq!(plain.bandit.n_updates, 0);
+        let mut cal = RouterState::new(RoutePolicy::hybridflow_calibrated(&s));
+        cal.observe_offloaded(&s, 0.5, 0.2, &b, 0.3, 0.2);
+        assert_eq!(cal.bandit.n_updates, 1);
+    }
+}

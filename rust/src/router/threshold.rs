@@ -1,0 +1,193 @@
+//! Adaptive routing thresholds.
+//!
+//! Two interchangeable mechanisms from the paper:
+//! * [`DualAscent`] — the theory form (Eqs. 10/11): a shadow price
+//!   `lambda_t` updated by projected subgradient on `C_used - C_max`,
+//!   mapped to `tau_t = clip(tau0 + gamma * lambda_t, 0, 1)`.
+//! * [`ResourcePressure`] — the implementation form (Eq. 27):
+//!   `tau_t = clip(tau0 + k_used/(2 K_max) + l_used/(2 L_max), 0, 1)`,
+//!   which App. B shows is an instance of the same primal-dual family.
+//!
+//! [`Threshold::Fixed`] disables adaptation for the tau0 sweep of
+//! Table 6 / Figure 4.
+
+use crate::budget::BudgetState;
+use crate::config::simparams::SimParams;
+
+/// Threshold mechanism selection.
+#[derive(Debug, Clone)]
+pub enum Threshold {
+    /// Constant tau0 (Table 6 ablation).
+    Fixed(f64),
+    /// Eq. 10/11 projected dual ascent.
+    DualAscent(DualAscent),
+    /// Eq. 27 resource-pressure form (paper's deployed configuration).
+    ResourcePressure(ResourcePressure),
+}
+
+impl Threshold {
+    /// Paper default: Eq. 27 with simparams constants.
+    pub fn paper_default(sp: &SimParams) -> Threshold {
+        Threshold::ResourcePressure(ResourcePressure {
+            tau0: sp.tau0,
+            k_max: sp.k_max_global,
+            l_max: sp.l_max_global,
+        })
+    }
+
+    pub fn dual(sp: &SimParams) -> Threshold {
+        Threshold::DualAscent(DualAscent {
+            tau0: sp.tau0,
+            lambda: 0.0,
+            eta: sp.dual_eta,
+            gamma: sp.dual_gamma,
+            c_max: sp.c_max,
+        })
+    }
+
+    /// Current threshold value given the budget state.
+    pub fn tau(&self, budget: &BudgetState) -> f64 {
+        match self {
+            Threshold::Fixed(t) => *t,
+            Threshold::DualAscent(d) => (d.tau0 + d.gamma * d.lambda).clamp(0.0, 1.0),
+            Threshold::ResourcePressure(r) => {
+                (r.tau0 + budget.k_used / (2.0 * r.k_max) + budget.l_used / (2.0 * r.l_max))
+                    .clamp(0.0, 1.0)
+            }
+        }
+    }
+
+    /// Post-decision update (dual ascent needs the step; others are
+    /// stateless in the budget).
+    pub fn update(&mut self, budget: &BudgetState) {
+        if let Threshold::DualAscent(d) = self {
+            d.lambda = (d.lambda + d.eta * (budget.c_used - d.c_max)).max(0.0);
+        }
+    }
+
+    /// Fresh per-query state (dual variable resets; the paper adapts within
+    /// a query as dependencies resolve).
+    pub fn reset(&mut self) {
+        if let Threshold::DualAscent(d) = self {
+            d.lambda = 0.0;
+        }
+    }
+}
+
+/// Eq. 10/11 state.
+#[derive(Debug, Clone)]
+pub struct DualAscent {
+    pub tau0: f64,
+    pub lambda: f64,
+    pub eta: f64,
+    pub gamma: f64,
+    pub c_max: f64,
+}
+
+/// Eq. 27 parameters.
+#[derive(Debug, Clone)]
+pub struct ResourcePressure {
+    pub tau0: f64,
+    pub k_max: f64,
+    pub l_max: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp() -> SimParams {
+        SimParams::default()
+    }
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut t = Threshold::Fixed(0.5);
+        let mut b = BudgetState::new();
+        b.record_cloud(&sp(), 5.0, 0.01);
+        b.advance_latency(10.0);
+        t.update(&b);
+        assert_eq!(t.tau(&b), 0.5);
+    }
+
+    #[test]
+    fn resource_pressure_matches_eq27() {
+        let s = sp();
+        let t = Threshold::paper_default(&s);
+        let mut b = BudgetState::new();
+        b.k_used = s.k_max_global / 2.0; // -> +0.25
+        b.l_used = s.l_max_global / 2.0; // -> +0.25
+        let tau = t.tau(&b);
+        assert!((tau - (s.tau0 + 0.25 + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resource_pressure_clips_at_one() {
+        let s = sp();
+        let t = Threshold::paper_default(&s);
+        let mut b = BudgetState::new();
+        b.k_used = 1.0;
+        b.l_used = 100.0;
+        assert_eq!(t.tau(&b), 1.0);
+    }
+
+    #[test]
+    fn dual_ascent_increases_under_overspend() {
+        let s = sp();
+        let mut t = Threshold::dual(&s);
+        let mut b = BudgetState::new();
+        let tau_start = t.tau(&b);
+        assert!((tau_start - s.tau0).abs() < 1e-12);
+        // Overspend: C_used above C_max.
+        b.c_used = s.c_max + 0.4;
+        for _ in 0..5 {
+            t.update(&b);
+        }
+        assert!(t.tau(&b) > tau_start);
+    }
+
+    #[test]
+    fn dual_ascent_projects_at_zero() {
+        let s = sp();
+        let mut t = Threshold::dual(&s);
+        let b = BudgetState::new(); // under budget: gradient negative
+        for _ in 0..20 {
+            t.update(&b);
+        }
+        // lambda stays at 0 (projection), tau at tau0.
+        assert!((t.tau(&b) - s.tau0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_dual_state() {
+        let s = sp();
+        let mut t = Threshold::dual(&s);
+        let mut b = BudgetState::new();
+        b.c_used = 2.0;
+        t.update(&b);
+        assert!(t.tau(&b) > s.tau0);
+        t.reset();
+        assert!((t.tau(&BudgetState::new()) - s.tau0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_always_in_unit_interval() {
+        crate::testing::forall("tau in [0,1]", 300, |g| {
+            let s = sp();
+            let mut b = BudgetState::new();
+            b.k_used = g.f64_in(0.0..0.2);
+            b.l_used = g.f64_in(0.0..200.0);
+            b.c_used = g.f64_in(0.0..5.0);
+            let mut d = Threshold::dual(&s);
+            for _ in 0..g.usize_in(0..10) {
+                d.update(&b);
+            }
+            let taus = [
+                Threshold::Fixed(g.unit_f64()).tau(&b),
+                Threshold::paper_default(&s).tau(&b),
+                d.tau(&b),
+            ];
+            taus.iter().all(|t| (0.0..=1.0).contains(t))
+        });
+    }
+}

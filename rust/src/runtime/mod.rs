@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT CPU client wrapper over the AOT artifacts
+//! (`artifacts/*.hlo.txt`) and the thread-isolated scoring service the
+//! multithreaded coordinator uses on the request path.
+//!
+//! Python authors and lowers the computations (`make artifacts`); this
+//! module loads HLO *text* via `HloModuleProto::from_text_file` (the
+//! id-safe interchange — see DESIGN.md) and compiles once at startup.
+
+pub mod client;
+pub mod service;
+
+pub use client::{PjrtEngine, EDGE_LM_D, EDGE_LM_T, ROUTER_BATCHES};
+pub use service::RouterService;

@@ -1,0 +1,127 @@
+//! Thread-isolated PJRT scoring service.
+//!
+//! The `xla` wrapper types are not `Send`, so a dedicated service thread
+//! owns the [`PjrtEngine`]; coordinator threads talk to it over an mpsc
+//! channel. This is the production shape of a model-scoring sidecar: one
+//! compiled-artifact owner, many request producers.
+
+use super::client::PjrtEngine;
+use crate::embed::Features;
+use crate::router::predictor::UtilityPredictor;
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+enum Request {
+    Score { feats: Vec<Features>, c_used: f64, reply: Sender<anyhow::Result<Vec<f64>>> },
+    EdgeBurn { chunks: usize, reply: Sender<anyhow::Result<f32>> },
+    Platform { reply: Sender<String> },
+    Shutdown,
+}
+
+/// Send+Sync handle to the PJRT service thread.
+pub struct RouterService {
+    tx: Mutex<Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    has_edge_lm: bool,
+}
+
+impl RouterService {
+    /// Start the service: loads + compiles artifacts on the service thread,
+    /// failing fast if any artifact is missing or broken.
+    pub fn start(artifacts_dir: &Path) -> anyhow::Result<RouterService> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<bool>>();
+        let dir = artifacts_dir.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-router-service".into())
+            .spawn(move || {
+                let engine = match PjrtEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.has_edge_lm()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Score { feats, c_used, reply } => {
+                            let _ = reply.send(engine.score(&feats, c_used));
+                        }
+                        Request::EdgeBurn { chunks, reply } => {
+                            let _ = reply.send(engine.edge_lm_burn(chunks));
+                        }
+                        Request::Platform { reply } => {
+                            let _ = reply.send(engine.platform());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        let has_edge_lm = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("PJRT service thread died during startup"))??;
+        Ok(RouterService { tx: Mutex::new(tx), handle: Some(handle), has_edge_lm })
+    }
+
+    fn send(&self, req: Request) {
+        self.tx.lock().expect("service tx poisoned").send(req).expect("PJRT service gone");
+    }
+
+    /// Batched utility scoring through the AOT router artifact.
+    pub fn score(&self, feats: &[Features], c_used: f64) -> anyhow::Result<Vec<f64>> {
+        let (reply, rx) = channel();
+        self.send(Request::Score { feats: feats.to_vec(), c_used, reply });
+        rx.recv().map_err(|_| anyhow::anyhow!("PJRT service dropped reply"))?
+    }
+
+    /// Run edge-LM forward chunks (burn hook).
+    pub fn edge_burn(&self, chunks: usize) -> anyhow::Result<f32> {
+        let (reply, rx) = channel();
+        self.send(Request::EdgeBurn { chunks, reply });
+        rx.recv().map_err(|_| anyhow::anyhow!("PJRT service dropped reply"))?
+    }
+
+    pub fn platform(&self) -> String {
+        let (reply, rx) = channel();
+        self.send(Request::Platform { reply });
+        rx.recv().unwrap_or_else(|_| "unknown".into())
+    }
+
+    pub fn has_edge_lm(&self) -> bool {
+        self.has_edge_lm
+    }
+}
+
+impl Drop for RouterService {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl UtilityPredictor for RouterService {
+    fn predict(&self, feats: &[Features], c_used: f64) -> Vec<f64> {
+        // Scoring failures surface as "never offload" rather than a crash on
+        // the serving path; the error is logged once per call site.
+        match self.score(feats, c_used) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("[runtime] router scoring failed: {e}; defaulting to edge");
+                vec![0.0; feats.len()]
+            }
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,100 @@
+//! Execution trace events — the raw material for Figure 3 (edge/cloud
+//! distribution by subtask position + adaptive threshold line) and for
+//! debugging scheduling decisions.
+
+/// One subtask's routing + execution record.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub node: usize,
+    /// Topological depth (Figure 3's "subtask position" axis).
+    pub position: usize,
+    pub cloud: bool,
+    /// Threshold in force at decision time.
+    pub tau: f64,
+    /// Predicted utility at decision time.
+    pub u_hat: f64,
+    /// Virtual-clock start/finish (seconds, includes planning offset).
+    pub start: f64,
+    pub finish: f64,
+    pub api_cost: f64,
+    pub correct: bool,
+    /// Input tokens of the call (query prompt + dependency outputs) — the
+    /// transmitted payload `tok(x_i)` of the App. D.1 exposure proxy.
+    pub in_tokens: f64,
+}
+
+/// Position histogram used by Figure 3: per position, (edge count, cloud
+/// count, mean tau).
+#[derive(Debug, Clone, Default)]
+pub struct PositionHistogram {
+    pub edge: Vec<usize>,
+    pub cloud: Vec<usize>,
+    pub tau_sum: Vec<f64>,
+    pub tau_count: Vec<usize>,
+}
+
+impl PositionHistogram {
+    pub fn add(&mut self, events: &[TraceEvent]) {
+        for e in events {
+            let p = e.position;
+            if self.edge.len() <= p {
+                self.edge.resize(p + 1, 0);
+                self.cloud.resize(p + 1, 0);
+                self.tau_sum.resize(p + 1, 0.0);
+                self.tau_count.resize(p + 1, 0);
+            }
+            if e.cloud {
+                self.cloud[p] += 1;
+            } else {
+                self.edge[p] += 1;
+            }
+            self.tau_sum[p] += e.tau;
+            self.tau_count[p] += 1;
+        }
+    }
+
+    pub fn mean_tau(&self, p: usize) -> f64 {
+        if p < self.tau_count.len() && self.tau_count[p] > 0 {
+            self.tau_sum[p] / self.tau_count[p] as f64
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn positions(&self) -> usize {
+        self.edge.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(position: usize, cloud: bool, tau: f64) -> TraceEvent {
+        TraceEvent {
+            node: 0,
+            position,
+            cloud,
+            tau,
+            u_hat: 0.5,
+            start: 0.0,
+            finish: 1.0,
+            api_cost: 0.0,
+            correct: true,
+            in_tokens: 100.0,
+        }
+    }
+
+    #[test]
+    fn histogram_accumulates() {
+        let mut h = PositionHistogram::default();
+        h.add(&[ev(0, true, 0.2), ev(0, false, 0.4), ev(2, false, 0.8)]);
+        assert_eq!(h.positions(), 3);
+        assert_eq!(h.cloud[0], 1);
+        assert_eq!(h.edge[0], 1);
+        assert_eq!(h.edge[2], 1);
+        assert!((h.mean_tau(0) - 0.3).abs() < 1e-12);
+        assert!(h.mean_tau(1).is_nan());
+        assert!((h.mean_tau(2) - 0.8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,485 @@
+//! Dependency-triggered subtask scheduler (Algorithm 1, Stage 2).
+//!
+//! Event-driven virtual-clock simulation with the paper's resource
+//! semantics:
+//! * the **edge** model serializes on a single on-device worker (one RTX
+//!   3090 in the paper),
+//! * **cloud** API calls run concurrently (bounded by `cloud_workers`),
+//! * a subtask becomes *ready* the instant its last parent finishes; the
+//!   router decides edge-vs-cloud at that moment with the budget state of
+//!   that moment (online routing, Eq. 8's `C_used(t)`),
+//! * `chain_mode` (HybridFlow-Chain ablation, Table 3) forces strictly
+//!   sequential execution while keeping routing identical.
+//!
+//! The virtual clock measures `C_time` exactly as the paper does: planner
+//! decomposition latency + DAG makespan under these constraints. Wall-clock
+//! coordinator overhead is measured separately (`server` module + benches).
+
+pub mod events;
+
+use crate::budget::BudgetState;
+use crate::dag::TaskDag;
+use crate::embed::FeatureContext;
+use crate::models::SimExecutor;
+use crate::router::predictor::UtilityPredictor;
+use crate::router::RouterState;
+use crate::util::rng::Rng;
+use crate::workload::{Query, SubtaskLatent};
+use events::TraceEvent;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Scheduling configuration.
+#[derive(Debug, Clone)]
+pub struct ScheduleConfig {
+    /// Force sequential execution (HybridFlow-Chain).
+    pub chain_mode: bool,
+    /// On-device workers (paper: 1).
+    pub edge_workers: usize,
+    /// Concurrent cloud calls allowed (API concurrency).
+    pub cloud_workers: usize,
+    /// Score the whole ready frontier in one batched predictor call
+    /// (performance path) vs. one call per decision (paper-literal path).
+    pub batch_frontier: bool,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        ScheduleConfig { chain_mode: false, edge_workers: 1, cloud_workers: 8, batch_frontier: true }
+    }
+}
+
+/// Outcome of one query's scheduled execution.
+#[derive(Debug, Clone)]
+pub struct QueryExecution {
+    pub correct: bool,
+    /// Virtual-clock end-to-end latency (planning + makespan), seconds.
+    pub latency: f64,
+    pub api_cost: f64,
+    pub offload_rate: f64,
+    pub n_subtasks: usize,
+    pub events: Vec<TraceEvent>,
+    pub budget: BudgetState,
+}
+
+#[derive(Debug, PartialEq)]
+struct Finish {
+    time: f64,
+    node: usize,
+}
+
+impl Eq for Finish {}
+
+impl Ord for Finish {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on (time, node).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for Finish {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Execute one decomposed query under the routing policy.
+///
+/// `latents` must align with `dag.nodes`. The predictor scores features
+/// packed by [`FeatureContext`]; the router state carries threshold/bandit
+/// dynamics across the query (call `reset_for_query` between queries for
+/// per-query dual state).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_query(
+    dag: &TaskDag,
+    latents: &[SubtaskLatent],
+    query: &Query,
+    executor: &SimExecutor,
+    predictor: &dyn UtilityPredictor,
+    router: &mut RouterState,
+    planning_latency: f64,
+    cfg: &ScheduleConfig,
+    rng: &mut Rng,
+) -> QueryExecution {
+    assert_eq!(dag.len(), latents.len(), "latents must align with dag");
+    let n = dag.len();
+    let ctx = FeatureContext::new(dag, query);
+    let depths = dag.depths().unwrap_or_else(|| vec![0; n]);
+    let max_depth = depths.iter().copied().max().unwrap_or(0).max(1);
+    let children = dag.children();
+
+    let mut budget = BudgetState::new();
+    let mut indeg: Vec<usize> = dag.in_degrees();
+    let mut done = vec![false; n];
+    let mut correct = vec![false; n];
+    let mut out_tokens = vec![0.0f64; n];
+    let mut api_total = 0.0;
+    let mut events: Vec<TraceEvent> = Vec::with_capacity(n);
+
+    // Worker availability.
+    let mut edge_free: Vec<f64> = vec![planning_latency; cfg.edge_workers.max(1)];
+    let mut cloud_free: Vec<f64> = vec![planning_latency; cfg.cloud_workers.max(1)];
+
+    // Ready frontier: (ready_time, node). Processed in time order.
+    let mut ready: BinaryHeap<Finish> = BinaryHeap::new();
+    let mut pending: BinaryHeap<Finish> = BinaryHeap::new(); // running nodes
+    for i in 0..n {
+        if indeg[i] == 0 {
+            ready.push(Finish { time: planning_latency, node: i });
+        }
+    }
+
+    // Chain mode: strict sequential order regardless of DAG width.
+    let chain_order = if cfg.chain_mode { dag.topo_order() } else { None };
+    let mut chain_cursor = 0usize;
+    let mut chain_clock = planning_latency;
+
+    let mut completed = 0usize;
+    while completed < n {
+        // Pick the next decision point: a *group* of nodes ready at the
+        // same instant. With `batch_frontier` the whole group is scored in
+        // one predictor call (one PJRT execute instead of k) — the §Perf
+        // batched-frontier optimization; decisions still apply
+        // sequentially so budget/threshold dynamics are unchanged.
+        let (now, group) = if let Some(order) = &chain_order {
+            // Sequential: next topo node, at the running chain clock.
+            let node = order[chain_cursor];
+            chain_cursor += 1;
+            (chain_clock, vec![node])
+        } else {
+            match ready.pop() {
+                Some(f) => {
+                    let mut group = vec![f.node];
+                    if cfg.batch_frontier {
+                        while let Some(peek) = ready.peek() {
+                            if peek.time <= f.time + 1e-12 {
+                                group.push(ready.pop().unwrap().node);
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    (f.time, group)
+                }
+                None => {
+                    // Nothing ready: advance to the next running finish.
+                    let f = pending.pop().expect("deadlock: no ready, no pending");
+                    finish_node(
+                        f.node, f.time, &children, &mut indeg, &mut done, &mut ready,
+                    );
+                    completed += 1;
+                    continue;
+                }
+            }
+        };
+
+        budget.advance_latency(now - planning_latency);
+
+        // --- Routing decisions (Algorithm 1's inner loop) -----------------
+        let group_feats: Vec<_> = group
+            .iter()
+            .map(|&i| ctx.features(dag, i, &latents[i], &executor.sp, rng))
+            .collect();
+        let group_u = predictor.predict(&group_feats, budget.c_used);
+
+        for (gi, &node) in group.iter().enumerate() {
+        let u_hat = group_u[gi];
+        let position = depths[node] as f64 / max_depth as f64;
+        let oracle_ratio = {
+            let dq = executor.true_dq(query.domain, latents, node);
+            // True normalized cost (mean latency form).
+            let in_tok = query.query_tokens
+                + dag.nodes[node].deps.iter().map(|&d| out_tokens[d]).sum::<f64>();
+            let cloud_out = latents[node].out_tokens * executor.sp.cloud_verbosity;
+            let dl = (executor.cloud.latency_mean(in_tok, cloud_out)
+                - executor.edge.latency_mean(in_tok, latents[node].out_tokens))
+                .max(0.0);
+            let dk = executor.cloud.api_cost(in_tok, cloud_out);
+            let c = BudgetState::normalized_cost(&executor.sp, dl, dk);
+            Some(dq / (c + executor.sp.eps_utility))
+        };
+        let budget_at_decision = budget.clone();
+        let to_cloud =
+            router.decide(&executor.sp, u_hat, position, &budget, oracle_ratio, rng);
+        let tau = *router.tau_trace.last().unwrap_or(&0.0);
+
+        // --- Execution ----------------------------------------------------
+        let in_tok = query.query_tokens
+            + dag.nodes[node].deps.iter().map(|&d| out_tokens[d]).sum::<f64>();
+        let rec = executor.execute_subtask(query.domain, &latents[node], in_tok, to_cloud, rng);
+        out_tokens[node] = rec.out_tokens;
+        correct[node] = rec.correct;
+        api_total += rec.api_cost;
+
+        let (start, finish_t) = if cfg.chain_mode {
+            let s = chain_clock;
+            chain_clock += rec.latency;
+            (s, chain_clock)
+        } else if to_cloud {
+            let w = argmin(&cloud_free);
+            let s = cloud_free[w].max(now);
+            cloud_free[w] = s + rec.latency;
+            (s, s + rec.latency)
+        } else {
+            let w = argmin(&edge_free);
+            let s = edge_free[w].max(now);
+            edge_free[w] = s + rec.latency;
+            (s, s + rec.latency)
+        };
+
+        // --- Budget + bandit feedback -------------------------------------
+        if to_cloud {
+            let edge_equiv = executor.edge.latency_mean(in_tok, latents[node].out_tokens);
+            let dl = (rec.latency - edge_equiv).max(0.0);
+            budget.record_cloud(&executor.sp, dl, rec.api_cost);
+            let realized_dq = executor.true_dq(query.domain, latents, node)
+                + rng.normal_ms(0.0, 0.02);
+            let realized_c = BudgetState::normalized_cost(&executor.sp, dl, rec.api_cost);
+            router.observe_offloaded(
+                &executor.sp,
+                u_hat,
+                position,
+                &budget_at_decision,
+                realized_dq,
+                realized_c,
+            );
+        } else {
+            budget.record_edge();
+        }
+
+        events.push(TraceEvent {
+            node,
+            position: depths[node],
+            cloud: to_cloud,
+            tau,
+            u_hat,
+            start,
+            finish: finish_t,
+            api_cost: rec.api_cost,
+            correct: rec.correct,
+            in_tokens: rec.in_tokens,
+        });
+
+        if cfg.chain_mode {
+            done[node] = true;
+            completed += 1;
+        } else {
+            pending.push(Finish { time: finish_t, node });
+        }
+        } // end group loop
+
+        if !cfg.chain_mode {
+            // Drain any pending nodes that finish before the next ready one
+            // becomes available; their children may unlock.
+            loop {
+                let next_ready = ready.peek().map(|f| f.time);
+                let next_pending = pending.peek().map(|f| f.time);
+                match (next_ready, next_pending) {
+                    (_, None) => break,
+                    (Some(r), Some(p)) if r <= p => break,
+                    (_, Some(_)) => {
+                        let f = pending.pop().unwrap();
+                        finish_node(
+                            f.node, f.time, &children, &mut indeg, &mut done, &mut ready,
+                        );
+                        completed += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    let makespan = events.iter().map(|e| e.finish).fold(planning_latency, f64::max);
+    budget.advance_latency(makespan - planning_latency);
+    let final_correct = executor.final_answer_correct(latents, &correct, rng);
+
+    QueryExecution {
+        correct: final_correct,
+        latency: makespan,
+        api_cost: api_total,
+        offload_rate: budget.offload_rate(),
+        n_subtasks: n,
+        events,
+        budget,
+    }
+}
+
+fn finish_node(
+    node: usize,
+    _time: f64,
+    children: &[Vec<usize>],
+    indeg: &mut [usize],
+    done: &mut [bool],
+    ready: &mut BinaryHeap<Finish>,
+) {
+    if done[node] {
+        return;
+    }
+    done[node] = true;
+    for &c in &children[node] {
+        indeg[c] -= 1;
+        if indeg[c] == 0 {
+            ready.push(Finish { time: _time, node: c });
+        }
+    }
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{Role, Subtask};
+    use crate::router::{MirrorPredictor, RoutePolicy};
+    use crate::workload::{generate_queries, sample_latents, Benchmark};
+
+    fn setup(seed: u64) -> (TaskDag, Query, Vec<SubtaskLatent>, SimExecutor) {
+        let dag = TaskDag::new(vec![
+            Subtask::new(0, Role::Explain, "r", vec![]),
+            Subtask::new(1, Role::Analyze, "a", vec![0]),
+            Subtask::new(2, Role::Analyze, "b", vec![0]),
+            Subtask::new(3, Role::Analyze, "c", vec![0]),
+            Subtask::new(4, Role::Generate, "g", vec![1, 2, 3]),
+        ]);
+        let ex = SimExecutor::paper_pair();
+        let q = generate_queries(Benchmark::Gpqa, 1, seed).pop().unwrap();
+        let mut rng = Rng::new(seed);
+        let lat = sample_latents(&dag, &q, &ex.sp, &mut rng);
+        (dag, q, lat, ex)
+    }
+
+    fn run(policy: RoutePolicy, cfg: &ScheduleConfig, seed: u64) -> QueryExecution {
+        let (dag, q, lat, ex) = setup(seed);
+        let pred = MirrorPredictor::synthetic_for_tests();
+        let mut router = RouterState::new(policy);
+        let mut rng = Rng::new(seed + 1);
+        execute_query(&dag, &lat, &q, &ex, &pred, &mut router, 2.0, cfg, &mut rng)
+    }
+
+    #[test]
+    fn all_edge_serializes_fully() {
+        let exec = run(RoutePolicy::AllEdge, &ScheduleConfig::default(), 3);
+        assert_eq!(exec.offload_rate, 0.0);
+        assert_eq!(exec.api_cost, 0.0);
+        // Single edge worker: makespan ~= planning + sum of latencies.
+        let total: f64 = exec.events.iter().map(|e| e.finish - e.start).sum();
+        assert!((exec.latency - (2.0 + total)).abs() < 1e-9, "{} vs {}", exec.latency, 2.0 + total);
+    }
+
+    #[test]
+    fn all_cloud_exploits_parallelism() {
+        let exec = run(RoutePolicy::AllCloud, &ScheduleConfig::default(), 4);
+        assert_eq!(exec.offload_rate, 1.0);
+        assert!(exec.api_cost > 0.0);
+        // Parallel middle layer: makespan < sum of latencies.
+        let total: f64 = exec.events.iter().map(|e| e.finish - e.start).sum();
+        assert!(exec.latency < 2.0 + total - 1e-9);
+    }
+
+    #[test]
+    fn chain_mode_removes_parallelism() {
+        let cfg = ScheduleConfig { chain_mode: true, ..Default::default() };
+        let par = run(RoutePolicy::AllCloud, &ScheduleConfig::default(), 5);
+        let chain = run(RoutePolicy::AllCloud, &cfg, 5);
+        assert!(chain.latency > par.latency, "chain {} par {}", chain.latency, par.latency);
+        // Chain latency == planning + sum of latencies.
+        let total: f64 = chain.events.iter().map(|e| e.finish - e.start).sum();
+        assert!((chain.latency - (2.0 + total)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dependencies_respected() {
+        for seed in 0..10 {
+            let exec = run(RoutePolicy::Random(0.5), &ScheduleConfig::default(), seed);
+            let (dag, ..) = setup(seed);
+            let finish_of = |n: usize| {
+                exec.events.iter().find(|e| e.node == n).map(|e| e.finish).unwrap()
+            };
+            let start_of = |n: usize| {
+                exec.events.iter().find(|e| e.node == n).map(|e| e.start).unwrap()
+            };
+            for node in &dag.nodes {
+                for &d in &node.deps {
+                    assert!(
+                        start_of(node.id) >= finish_of(d) - 1e-9,
+                        "node {} started before dep {} finished (seed {seed})",
+                        node.id,
+                        d
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn makespan_bounds() {
+        // critical path <= makespan <= planning + sum (single-worker bound).
+        for seed in 0..10 {
+            let exec = run(RoutePolicy::Random(0.4), &ScheduleConfig::default(), seed + 100);
+            let total: f64 = exec.events.iter().map(|e| e.finish - e.start).sum();
+            let longest = exec
+                .events
+                .iter()
+                .map(|e| e.finish - e.start)
+                .fold(0.0, f64::max);
+            assert!(exec.latency >= 2.0 + longest - 1e-9);
+            assert!(exec.latency <= 2.0 + total + 1e-9);
+        }
+    }
+
+    #[test]
+    fn budget_accumulates_only_for_cloud() {
+        let exec = run(RoutePolicy::AllEdge, &ScheduleConfig::default(), 7);
+        assert_eq!(exec.budget.c_used, 0.0);
+        let exec = run(RoutePolicy::AllCloud, &ScheduleConfig::default(), 7);
+        assert!(exec.budget.c_used > 0.0);
+        assert!((exec.budget.k_used - exec.api_cost).abs() < 1e-12);
+    }
+
+    #[test]
+    fn events_complete_and_positions_valid() {
+        let exec = run(RoutePolicy::Random(0.5), &ScheduleConfig::default(), 8);
+        assert_eq!(exec.events.len(), 5);
+        assert_eq!(exec.n_subtasks, 5);
+        let mut nodes: Vec<usize> = exec.events.iter().map(|e| e.node).collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, vec![0, 1, 2, 3, 4]);
+        for e in &exec.events {
+            assert!(e.position <= 2);
+            assert!(e.finish > e.start);
+            assert!((0.0..=1.0).contains(&e.tau));
+        }
+    }
+
+    #[test]
+    fn hybridflow_policy_runs_and_adapts() {
+        let sp = crate::config::simparams::SimParams::default();
+        let exec = run(RoutePolicy::hybridflow(&sp), &ScheduleConfig::default(), 9);
+        // Threshold trace exists and starts at tau0.
+        assert_eq!(exec.events.len(), 5);
+        let first_tau = exec.events.iter().min_by(|a, b| a.start.partial_cmp(&b.start).unwrap()).unwrap().tau;
+        assert!((first_tau - sp.tau0).abs() < 0.3);
+    }
+
+    #[test]
+    fn more_edge_workers_reduce_makespan() {
+        let base = ScheduleConfig::default();
+        let wide = ScheduleConfig { edge_workers: 4, ..Default::default() };
+        let a = run(RoutePolicy::AllEdge, &base, 10);
+        let b = run(RoutePolicy::AllEdge, &wide, 10);
+        assert!(b.latency <= a.latency + 1e-9);
+        assert!(b.latency < a.latency - 1e-9, "parallel edge should help on diamond");
+    }
+}

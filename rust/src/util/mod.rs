@@ -1,0 +1,8 @@
+//! Substrate utilities hand-rolled for the offline environment:
+//! JSON, PRNG + distributions, CLI parsing, thread pool, statistics.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,231 @@
+//! Fixed-size worker thread pool (`tokio` is not available offline).
+//!
+//! The scheduler uses this for *real* concurrent subtask dispatch (edge-LM
+//! PJRT forwards, cloud-call simulation) while the virtual clock handles
+//! latency accounting. Also provides `parallel_map` for data-parallel
+//! experiment sweeps.
+//!
+//! Design notes:
+//! * Work items are boxed `FnOnce` closures over an `mpsc` channel guarded
+//!   by a mutex (multi-consumer).
+//! * Panics in jobs are caught and surfaced to the submitter instead of
+//!   poisoning the pool.
+//! * `Drop` joins all workers, so pools are safe to create per-scope.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: Sender<Message>,
+    shared_rx: Arc<Mutex<Receiver<Message>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Message>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&shared_rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hybridflow-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Message::Run(job)) => {
+                                // Job panics are contained per-job; results
+                                // channels observe them as disconnects.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Ok(Message::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx, shared_rx, workers }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn with_default_size() -> ThreadPool {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ThreadPool::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Message::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Submit a job returning a value; the handle's `join` blocks for it.
+    pub fn submit<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.execute(move || {
+            // Receiver may be dropped; ignore send failure.
+            let _ = tx.send(f());
+        });
+        TaskHandle { rx }
+    }
+
+    /// Apply `f` to every item on the pool, preserving input order.
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<TaskHandle<U>> = items
+            .into_iter()
+            .map(|item| {
+                let f = Arc::clone(&f);
+                self.submit(move || f(item))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("pool job panicked")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Drain any remaining messages so senders don't block (bounded use).
+        if let Ok(rx) = self.shared_rx.lock() {
+            while rx.try_recv().is_ok() {}
+        }
+    }
+}
+
+/// Handle to a submitted job's result.
+pub struct TaskHandle<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> TaskHandle<T> {
+    /// Block until the job completes. `None` if the job panicked.
+    pub fn join(self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// One-off convenience: parallel map on a temporary pool.
+pub fn parallel_map<T, U, F>(threads: usize, items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send + 'static,
+    U: Send + 'static,
+    F: Fn(T) -> U + Send + Sync + 'static,
+{
+    ThreadPool::new(threads).map(items, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_returns_values() {
+        let pool = ThreadPool::new(2);
+        let h1 = pool.submit(|| 21 * 2);
+        let h2 = pool.submit(|| "ok".to_string());
+        assert_eq!(h1.join(), Some(42));
+        assert_eq!(h2.join(), Some("ok".to_string()));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let items: Vec<usize> = (0..200).collect();
+        let out = pool.map(items, |i| i * i);
+        assert_eq!(out, (0..200).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_runs_concurrently() {
+        // With 4 workers, 8 sleeps of 30ms should take ~60ms, not ~240ms.
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        pool.map((0..8).collect::<Vec<_>>(), |_| {
+            std::thread::sleep(Duration::from_millis(30));
+        });
+        let elapsed = t0.elapsed();
+        assert!(elapsed < Duration::from_millis(200), "elapsed {elapsed:?}");
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_pool() {
+        let pool = ThreadPool::new(2);
+        let bad = pool.submit(|| panic!("boom"));
+        assert_eq!(bad.join(), None::<()>);
+        let good = pool.submit(|| 7);
+        assert_eq!(good.join(), Some(7));
+    }
+
+    #[test]
+    fn parallel_map_helper() {
+        let out = parallel_map(3, vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn try_join_polls() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(|| {
+            std::thread::sleep(Duration::from_millis(50));
+            5
+        });
+        assert_eq!(h.try_join(), None);
+        std::thread::sleep(Duration::from_millis(120));
+        assert_eq!(h.try_join(), Some(5));
+    }
+}

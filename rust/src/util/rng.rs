@@ -1,0 +1,369 @@
+//! Deterministic PRNG + distributions (the `rand` crate family is not
+//! available offline).
+//!
+//! Core generator is xoshiro256++ seeded through SplitMix64 — fast, small,
+//! and adequate for simulation workloads. Distributions cover everything the
+//! HybridFlow substrate samples: uniform, normal (Box–Muller), lognormal,
+//! exponential, Beta (via Marsaglia–Tsang Gamma), Bernoulli, categorical,
+//! integer ranges, choice/shuffle.
+//!
+//! All experiment code takes an explicit seed so every table/figure is
+//! exactly reproducible.
+
+/// xoshiro256++ PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from the last Box–Muller draw.
+    spare_normal: Option<f64>,
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    (x << k) | (x >> (64 - k))
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97f4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seeded construction; any u64 seed is fine (SplitMix64 whitens it).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent child stream (for per-query / per-worker rngs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97f4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0, 1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Panics if n == 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n64 = n as u64;
+        // Rejection sampling on the biased tail to keep exact uniformity.
+        let zone = u64::MAX - (u64::MAX % n64);
+        loop {
+            let x = self.next_u64();
+            if x < zone {
+                return (x % n64) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi) (like `rng.integers` in numpy).
+    pub fn int_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty int_range");
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli(p).
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller with caching.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal(mu, sigma).
+    pub fn normal_ms(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Lognormal: exp(Normal(mu, sigma)) — numpy's parameterization.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_ms(mu, sigma).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang; valid for all k > 0.
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        assert!(k > 0.0, "gamma shape must be positive");
+        if k < 1.0 {
+            // Boost: Gamma(k) = Gamma(k+1) * U^(1/k).
+            let g = self.gamma(k + 1.0);
+            let u = self.f64().max(1e-300);
+            return g * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Beta(a, b) in (0, 1).
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical needs positive total weight");
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Uniformly pick one element.
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len())]
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample k distinct indices from 0..n (k <= n), sorted ascending.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut v = self.permutation(n);
+        v.truncate(k);
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_std(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+        (m, var.sqrt())
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..20000).map(|_| r.f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let (m, s) = mean_std(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+        assert!((s - (1.0f64 / 12.0).sqrt()).abs() < 0.01, "std {s}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7);
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..30000).map(|_| r.normal()).collect();
+        let (m, s) = mean_std(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((s - 1.0).abs() < 0.02, "std {s}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Rng::new(4);
+        let mu = 4.2;
+        let mut xs: Vec<f64> = (0..20000).map(|_| r.lognormal(mu, 0.4)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[xs.len() / 2];
+        assert!((median.ln() - mu).abs() < 0.03, "median ln {}", median.ln());
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..30000).map(|_| r.exponential(2.0)).collect();
+        let (m, _) = mean_std(&xs);
+        assert!((m - 0.5).abs() < 0.02, "mean {m}");
+    }
+
+    #[test]
+    fn gamma_mean_var() {
+        let mut r = Rng::new(6);
+        for &k in &[0.5, 1.0, 2.0, 7.5] {
+            let xs: Vec<f64> = (0..30000).map(|_| r.gamma(k)).collect();
+            let (m, s) = mean_std(&xs);
+            assert!((m - k).abs() < 0.12 * k.max(1.0), "k={k} mean {m}");
+            assert!((s * s - k).abs() < 0.25 * k.max(1.0), "k={k} var {}", s * s);
+        }
+    }
+
+    #[test]
+    fn beta_moments() {
+        let mut r = Rng::new(7);
+        let (a, b) = (2.0, 2.6);
+        let xs: Vec<f64> = (0..30000).map(|_| r.beta(a, b)).collect();
+        assert!(xs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        let (m, _) = mean_std(&xs);
+        let expect = a / (a + b);
+        assert!((m - expect).abs() < 0.01, "mean {m} expect {expect}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::new(8);
+        let hits = (0..20000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 20000.0;
+        assert!((rate - 0.3).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn categorical_follows_weights() {
+        let mut r = Rng::new(9);
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..30000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        let total: usize = counts.iter().sum();
+        for i in 0..3 {
+            let got = counts[i] as f64 / total as f64;
+            let want = w[i] / 10.0;
+            assert!((got - want).abs() < 0.02, "i={i} got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(10);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut r = Rng::new(11);
+        for _ in 0..100 {
+            let s = r.sample_indices(10, 4);
+            assert_eq!(s.len(), 4);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&i| i < 10));
+        }
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = Rng::new(12);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Workload substrate: synthetic benchmark query generators calibrated to
+//! the paper's four evaluation sets, plus the latent per-subtask quantities
+//! the execution simulator consumes.
+//!
+//! Substitution note (DESIGN.md section 3): GPQA / MMLU-Pro / AIME24 /
+//! LiveBench-Reasoning are proprietary-ish datasets evaluated with real LLM
+//! endpoints in the paper. Here each benchmark is a calibrated generative
+//! model over (domain, difficulty, token counts); single-model reference
+//! accuracies land near Table 1's Direct/CoT rows (see `eval::calibrate`).
+
+pub mod profiling;
+pub mod trace;
+
+use crate::config::simparams::{benchmark_params, BenchmarkParams, SimParams, DOMAINS};
+use crate::dag::{Role, TaskDag};
+use crate::util::rng::Rng;
+
+/// The paper's four evaluation benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    Gpqa,
+    MmluPro,
+    Aime24,
+    LiveBench,
+}
+
+impl Benchmark {
+    pub const ALL: [Benchmark; 4] =
+        [Benchmark::Gpqa, Benchmark::MmluPro, Benchmark::Aime24, Benchmark::LiveBench];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::Gpqa => "gpqa",
+            Benchmark::MmluPro => "mmlu_pro",
+            Benchmark::Aime24 => "aime24",
+            Benchmark::LiveBench => "livebench",
+        }
+    }
+
+    /// Pretty name used in table headers.
+    pub fn display(&self) -> &'static str {
+        match self {
+            Benchmark::Gpqa => "GPQA",
+            Benchmark::MmluPro => "MMLU-Pro",
+            Benchmark::Aime24 => "AIME24",
+            Benchmark::LiveBench => "LiveBench-Reasoning",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        match s.to_ascii_lowercase().as_str() {
+            "gpqa" => Some(Benchmark::Gpqa),
+            "mmlu_pro" | "mmlupro" | "mmlu-pro" => Some(Benchmark::MmluPro),
+            "aime24" | "aime" => Some(Benchmark::Aime24),
+            "livebench" | "livebench-reasoning" => Some(Benchmark::LiveBench),
+            _ => None,
+        }
+    }
+
+    pub fn params(&self) -> BenchmarkParams {
+        benchmark_params(self.name()).expect("benchmark in zoo")
+    }
+}
+
+/// One synthetic query: the latent ground truth the simulator knows and the
+/// router must not see directly.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: u64,
+    pub benchmark: Benchmark,
+    /// Domain index into [`DOMAINS`].
+    pub domain: usize,
+    /// Latent difficulty in [0, 1].
+    pub difficulty: f64,
+    /// Input (prompt) tokens.
+    pub query_tokens: f64,
+    /// Output-token multiplier of the benchmark.
+    pub tok_mult: f64,
+}
+
+impl Query {
+    pub fn domain_name(&self) -> &'static str {
+        DOMAINS[self.domain]
+    }
+}
+
+/// Generate the benchmark's evaluation set (paper-sized by default).
+pub fn generate_queries(bench: Benchmark, n: usize, seed: u64) -> Vec<Query> {
+    let p = bench.params();
+    let mut rng = Rng::new(seed ^ 0x9d5a_b1c3_0f77_e214);
+    (0..n)
+        .map(|i| {
+            let difficulty = rng.beta(p.beta.0, p.beta.1);
+            let query_tokens = rng.lognormal(p.query_tokens.0, p.query_tokens.1);
+            Query {
+                id: i as u64,
+                benchmark: bench,
+                domain: p.domain,
+                difficulty,
+                query_tokens,
+                tok_mult: p.tok_mult,
+            }
+        })
+        .collect()
+}
+
+/// Paper-sized evaluation set.
+pub fn paper_queries(bench: Benchmark, seed: u64) -> Vec<Query> {
+    generate_queries(bench, bench.params().n_queries, seed)
+}
+
+/// Latent ground truth for one subtask of a decomposed query.
+#[derive(Debug, Clone, Copy)]
+pub struct SubtaskLatent {
+    /// Latent difficulty `d_i = d_q * phi_i`.
+    pub difficulty: f64,
+    /// Criticality `w_i` (GENERATE uses `generate_crit`).
+    pub criticality: f64,
+    /// Output tokens the *edge* model would generate (cloud multiplies by
+    /// `cloud_verbosity`).
+    pub out_tokens: f64,
+}
+
+/// Sample the latent quantities for every node of a decomposition.
+///
+/// Deterministic given `(query, dag shape, rng seed)` — the scheduler and
+/// profiler rely on replaying the same latents across counterfactuals.
+pub fn sample_latents(dag: &TaskDag, query: &Query, sp: &SimParams, rng: &mut Rng) -> Vec<SubtaskLatent> {
+    let depths = dag.depths().unwrap_or_else(|| vec![0; dag.len()]);
+    let max_depth = depths.iter().copied().max().unwrap_or(0).max(1);
+    dag.nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| {
+            let phi = rng.uniform(sp.phi.0, sp.phi.1);
+            let difficulty = (query.difficulty * phi).min(1.0);
+            let pos = depths[i] as f64 / max_depth as f64;
+            let criticality = if node.role == Role::Generate {
+                sp.generate_crit
+            } else {
+                sample_criticality_at(sp, pos, rng)
+            };
+            let (mu, sigma) = sp.role_tokens[node.role.index()];
+            let out_tokens = rng.lognormal(mu, sigma) * query.tok_mult;
+            SubtaskLatent { difficulty, criticality, out_tokens }
+        })
+        .collect()
+}
+
+/// Sample a non-GENERATE subtask's criticality at topological position
+/// `pos` in [0, 1]: sparse pivotal mixture whose pivotal probability decays
+/// with depth (see `CRIT_*` in the python mirror).
+pub fn sample_criticality_at(sp: &SimParams, pos: f64, rng: &mut Rng) -> f64 {
+    let p = sp.crit_p * (1.0 - sp.crit_pos_decay * pos.clamp(0.0, 1.0));
+    if rng.bernoulli(p) {
+        sp.crit_base + (1.0 - sp.crit_base) * rng.beta(sp.crit_high_beta.0, sp.crit_high_beta.1)
+    } else {
+        sp.crit_base
+    }
+}
+
+/// Position-agnostic criticality draw (mid-position default), used by
+/// baselines whose latent decompositions have no explicit DAG depth.
+pub fn sample_criticality(sp: &SimParams, rng: &mut Rng) -> f64 {
+    sample_criticality_at(sp, 0.5, rng)
+}
+
+/// Latent for a *direct* (non-decomposed) execution of the whole query.
+pub fn direct_latent(query: &Query, sp: &SimParams, cloud: bool, cot: bool, rng: &mut Rng) -> SubtaskLatent {
+    let (mu, sigma) = sp.direct_tokens[if cloud { 1 } else { 0 }];
+    let mut out_tokens = rng.lognormal(mu, sigma) * query.tok_mult;
+    if cot {
+        out_tokens *= sp.cot_token_mult;
+    }
+    SubtaskLatent { difficulty: query.difficulty, criticality: 1.0, out_tokens }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Subtask;
+
+    #[test]
+    fn benchmark_roundtrip() {
+        for b in Benchmark::ALL {
+            assert_eq!(Benchmark::parse(b.name()), Some(b));
+        }
+        assert_eq!(Benchmark::parse("GPQA"), Some(Benchmark::Gpqa));
+        assert!(Benchmark::parse("unknown").is_none());
+    }
+
+    #[test]
+    fn queries_deterministic_and_in_range() {
+        let a = generate_queries(Benchmark::Gpqa, 50, 7);
+        let b = generate_queries(Benchmark::Gpqa, 50, 7);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.difficulty, y.difficulty);
+            assert!((0.0..=1.0).contains(&x.difficulty));
+            assert!(x.query_tokens > 0.0);
+        }
+        let c = generate_queries(Benchmark::Gpqa, 50, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.difficulty != y.difficulty));
+    }
+
+    #[test]
+    fn benchmark_difficulty_ordering() {
+        // AIME24 is the hardest set, MMLU-Pro the easiest (by Beta means).
+        let mean = |b: Benchmark| {
+            let qs = generate_queries(b, 2000, 3);
+            qs.iter().map(|q| q.difficulty).sum::<f64>() / qs.len() as f64
+        };
+        let aime = mean(Benchmark::Aime24);
+        let gpqa = mean(Benchmark::Gpqa);
+        let mmlu = mean(Benchmark::MmluPro);
+        assert!(aime > gpqa && gpqa > mmlu, "aime {aime} gpqa {gpqa} mmlu {mmlu}");
+    }
+
+    #[test]
+    fn paper_sizes() {
+        assert_eq!(paper_queries(Benchmark::Aime24, 0).len(), 30);
+        assert_eq!(paper_queries(Benchmark::Gpqa, 0).len(), 195);
+    }
+
+    #[test]
+    fn latents_match_dag_shape() {
+        let sp = SimParams::default();
+        let dag = TaskDag::new(vec![
+            Subtask::new(0, Role::Explain, "r", vec![]),
+            Subtask::new(1, Role::Analyze, "a", vec![0]),
+            Subtask::new(2, Role::Generate, "g", vec![1]),
+        ]);
+        let q = generate_queries(Benchmark::Gpqa, 1, 0).pop().unwrap();
+        let mut rng = Rng::new(1);
+        let lat = sample_latents(&dag, &q, &sp, &mut rng);
+        assert_eq!(lat.len(), 3);
+        for l in &lat {
+            assert!(l.difficulty <= q.difficulty + 1e-12);
+            assert!((0.0..=1.0).contains(&l.criticality));
+            assert!(l.out_tokens > 0.0);
+        }
+        // GENERATE node gets the configured criticality.
+        assert_eq!(lat[2].criticality, sp.generate_crit);
+    }
+
+    #[test]
+    fn direct_latent_cot_inflates_tokens() {
+        let sp = SimParams::default();
+        let q = generate_queries(Benchmark::Gpqa, 1, 0).pop().unwrap();
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let plain = direct_latent(&q, &sp, true, false, &mut r1);
+        let cot = direct_latent(&q, &sp, true, true, &mut r2);
+        assert!((cot.out_tokens / plain.out_tokens - sp.cot_token_mult).abs() < 1e-9);
+        assert_eq!(plain.criticality, 1.0);
+    }
+}

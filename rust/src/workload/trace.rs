@@ -1,0 +1,197 @@
+//! Query-trace record / replay (JSONL).
+//!
+//! Serving systems are evaluated on traces; this module serializes
+//! workloads and execution outcomes so runs can be archived, diffed, and
+//! replayed bit-exactly (`hybridflow serve --trace-out` / examples). The
+//! trace format is line-delimited JSON, one query per line.
+
+use crate::metrics::QueryOutcome;
+use crate::util::json::Json;
+use crate::workload::{Benchmark, Query};
+
+/// One recorded query + outcome.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub query: Query,
+    pub outcome: Option<QueryOutcome>,
+}
+
+impl TraceRecord {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::Num(self.query.id as f64)),
+            ("benchmark", Json::Str(self.query.benchmark.name().into())),
+            ("domain", Json::Num(self.query.domain as f64)),
+            ("difficulty", Json::Num(self.query.difficulty)),
+            ("query_tokens", Json::Num(self.query.query_tokens)),
+            ("tok_mult", Json::Num(self.query.tok_mult)),
+        ];
+        if let Some(o) = &self.outcome {
+            fields.push(("correct", Json::Bool(o.correct)));
+            fields.push(("latency", Json::Num(o.latency)));
+            fields.push(("api_cost", Json::Num(o.api_cost)));
+            fields.push(("offload_rate", Json::Num(o.offload_rate)));
+            fields.push(("n_subtasks", Json::Num(o.n_subtasks as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TraceRecord> {
+        let get_num = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("trace record missing '{k}'"))
+        };
+        let bench_name = j
+            .get("benchmark")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("trace record missing 'benchmark'"))?;
+        let benchmark = Benchmark::parse(bench_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench_name}'"))?;
+        let query = Query {
+            id: get_num("id")? as u64,
+            benchmark,
+            domain: get_num("domain")? as usize,
+            difficulty: get_num("difficulty")?,
+            query_tokens: get_num("query_tokens")?,
+            tok_mult: get_num("tok_mult")?,
+        };
+        let outcome = match j.get("correct") {
+            Some(Json::Bool(correct)) => Some(QueryOutcome {
+                correct: *correct,
+                latency: get_num("latency")?,
+                api_cost: get_num("api_cost")?,
+                offload_rate: get_num("offload_rate")?,
+                n_subtasks: get_num("n_subtasks")? as usize,
+            }),
+            _ => None,
+        };
+        Ok(TraceRecord { query, outcome })
+    }
+}
+
+/// Serialize records as JSONL text.
+pub fn write_jsonl(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse JSONL text into records (skips blank lines; errors on bad lines).
+pub fn read_jsonl(text: &str) -> anyhow::Result<Vec<TraceRecord>> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line {}: {e}", ln + 1))?;
+        out.push(TraceRecord::from_json(&j).map_err(|e| anyhow::anyhow!("trace line {}: {e}", ln + 1))?);
+    }
+    Ok(out)
+}
+
+/// Extract just the queries for replay.
+pub fn queries_of(records: &[TraceRecord]) -> Vec<Query> {
+    records.iter().map(|r| r.query.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generate_queries;
+
+    fn sample_records() -> Vec<TraceRecord> {
+        generate_queries(Benchmark::Gpqa, 5, 1)
+            .into_iter()
+            .enumerate()
+            .map(|(i, query)| TraceRecord {
+                query,
+                outcome: (i % 2 == 0).then(|| QueryOutcome {
+                    correct: i == 0,
+                    latency: 12.5 + i as f64,
+                    api_cost: 0.002 * i as f64,
+                    offload_rate: 0.4,
+                    n_subtasks: 4,
+                }),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn jsonl_roundtrip_exact() {
+        let records = sample_records();
+        let text = write_jsonl(&records);
+        let back = read_jsonl(&text).unwrap();
+        assert_eq!(back.len(), records.len());
+        for (a, b) in records.iter().zip(&back) {
+            assert_eq!(a.query.id, b.query.id);
+            assert_eq!(a.query.difficulty, b.query.difficulty);
+            assert_eq!(a.query.benchmark, b.query.benchmark);
+            match (&a.outcome, &b.outcome) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.correct, y.correct);
+                    assert_eq!(x.latency, y.latency);
+                    assert_eq!(x.n_subtasks, y.n_subtasks);
+                }
+                (None, None) => {}
+                _ => panic!("outcome presence mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn replay_reproduces_results() {
+        // Record a run, replay the queries, verify identical outcomes.
+        use crate::config::simparams::SimParams;
+        use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
+        use crate::planner::synthetic::SyntheticPlanner;
+        use crate::router::{MirrorPredictor, RoutePolicy};
+        use crate::util::rng::Rng;
+        use std::sync::Arc;
+
+        let sp = SimParams::default();
+        let mut cfg = PipelineConfig::paper_default(&sp);
+        cfg.policy = RoutePolicy::hybridflow(&sp);
+        let pipeline = HybridFlowPipeline::with_predictor(
+            crate::models::SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            Arc::new(MirrorPredictor::synthetic_for_tests()),
+            cfg,
+        );
+        let queries = generate_queries(Benchmark::MmluPro, 10, 3);
+        let run = |qs: &[crate::workload::Query]| -> Vec<QueryOutcome> {
+            qs.iter()
+                .map(|q| {
+                    let mut rng = Rng::new(q.id ^ 0xFEED);
+                    pipeline.run_query(q, &mut rng)
+                })
+                .collect()
+        };
+        let outcomes = run(&queries);
+        let records: Vec<TraceRecord> = queries
+            .iter()
+            .zip(&outcomes)
+            .map(|(q, o)| TraceRecord { query: q.clone(), outcome: Some(*o) })
+            .collect();
+        let text = write_jsonl(&records);
+
+        // Replay from the serialized trace.
+        let replayed = read_jsonl(&text).unwrap();
+        let outcomes2 = run(&queries_of(&replayed));
+        for (a, b) in outcomes.iter().zip(&outcomes2) {
+            assert_eq!(a.correct, b.correct);
+            assert_eq!(a.latency, b.latency);
+            assert_eq!(a.api_cost, b.api_cost);
+        }
+    }
+
+    #[test]
+    fn bad_lines_error_with_location() {
+        let err = read_jsonl("{\"id\": 1}\nnot json\n").unwrap_err();
+        assert!(err.to_string().contains("line 1") || err.to_string().contains("line 2"));
+    }
+}

@@ -1,0 +1,199 @@
+//! Artifact-dependent integration tests: require `make artifacts` to have
+//! produced `artifacts/` (the Makefile's `test-rust` target guarantees it).
+//!
+//! Covers: python<->rust simparams drift, PJRT round trip, PJRT-vs-mirror
+//! numeric parity, batched scoring consistency, edge-LM burn, and the full
+//! pipeline + serving loop with the PJRT predictor on the request path.
+
+use hybridflow::config::simparams::{verify_zoo_against_json, SimParams, FEAT_DIM};
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::SyntheticPlanner;
+use hybridflow::router::predictor::UtilityPredictor;
+use hybridflow::router::MirrorPredictor;
+use hybridflow::runtime::RouterService;
+use hybridflow::util::json::Json;
+use hybridflow::util::rng::Rng;
+use hybridflow::workload::{generate_queries, Benchmark};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts() -> PathBuf {
+    let dir = hybridflow::config::default_artifacts_dir();
+    assert!(
+        dir.join("router.hlo.txt").exists(),
+        "artifacts missing - run `make artifacts` first (dir: {})",
+        dir.display()
+    );
+    dir
+}
+
+fn rand_feats(n: usize, seed: u64) -> Vec<[f32; FEAT_DIM]> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut f = [0.0f32; FEAT_DIM];
+            for v in f.iter_mut() {
+                *v = rng.f64() as f32;
+            }
+            f
+        })
+        .collect()
+}
+
+#[test]
+fn simparams_json_matches_rust_defaults() {
+    let dir = artifacts();
+    let sp = SimParams::load(&dir).expect("simparams drift between python and rust mirrors");
+    assert_eq!(sp, SimParams::default());
+    let j = Json::parse_file(&dir.join("simparams.json")).unwrap();
+    verify_zoo_against_json(&j).expect("model/benchmark zoo drift");
+}
+
+#[test]
+fn manifest_describes_all_artifacts() {
+    let dir = artifacts();
+    let manifest = Json::parse_file(&dir.join("manifest.json")).unwrap();
+    let arts = manifest.get("artifacts").and_then(Json::as_obj).unwrap();
+    for name in ["router.hlo.txt", "router_b1.hlo.txt", "router_b8.hlo.txt",
+                 "router_b32.hlo.txt", "edge_lm.hlo.txt"] {
+        assert!(arts.contains_key(name), "manifest missing {name}");
+        assert!(dir.join(name).exists(), "artifact file missing {name}");
+    }
+    // Router input shapes match the compiled-in feature layout.
+    let b8 = &arts["router_b8.hlo.txt"];
+    let inputs = b8.get("inputs").and_then(Json::as_arr).unwrap();
+    assert_eq!(inputs[0].f64_array().unwrap(), vec![8.0, FEAT_DIM as f64]);
+    // Router val quality gate: the artifact ships with a usefully-trained net.
+    let r2 = manifest.path(&["router_metrics", "val_r2"]).and_then(Json::as_f64).unwrap();
+    assert!(r2 > 0.5, "router val R2 too low: {r2}");
+}
+
+#[test]
+fn hlo_text_has_full_constants() {
+    // Regression guard for the print_large_constants bug: the router HLO
+    // must not contain elided constants, which the old parser reads as 0s.
+    let dir = artifacts();
+    for name in ["router_b1.hlo.txt", "edge_lm.hlo.txt"] {
+        let text = std::fs::read_to_string(dir.join(name)).unwrap();
+        assert!(
+            !text.contains("constant({...})"),
+            "{name} contains elided constants - weights would be stripped"
+        );
+    }
+}
+
+#[test]
+fn pjrt_matches_mirror_numerically() {
+    let dir = artifacts();
+    let svc = RouterService::start(&dir).expect("PJRT start");
+    let mirror = MirrorPredictor::from_meta_file(&dir.join("router_meta.json")).unwrap();
+    for (n, seed) in [(1usize, 1u64), (5, 2), (8, 3), (20, 4), (32, 5), (50, 6)] {
+        let feats = rand_feats(n, seed);
+        for c_used in [0.0, 0.4, 1.2] {
+            let a = svc.score(&feats, c_used).unwrap();
+            let b = mirror.predict(&feats, c_used);
+            assert_eq!(a.len(), n);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert!(
+                    (x - y).abs() < 2e-3,
+                    "n={n} c={c_used} row {i}: pjrt {x} mirror {y}"
+                );
+                assert!((0.0..=1.0).contains(x));
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_batching_is_consistent() {
+    // Padding/batch selection must not change per-row results.
+    let dir = artifacts();
+    let svc = RouterService::start(&dir).unwrap();
+    let feats = rand_feats(32, 7);
+    let full = svc.score(&feats, 0.3).unwrap();
+    for i in [0usize, 3, 17, 31] {
+        let single = svc.score(&feats[i..i + 1], 0.3).unwrap();
+        assert!((full[i] - single[0]).abs() < 1e-5, "row {i}");
+    }
+}
+
+#[test]
+fn edge_lm_burn_runs() {
+    let dir = artifacts();
+    let svc = RouterService::start(&dir).unwrap();
+    assert!(svc.has_edge_lm());
+    let c1 = svc.edge_burn(1).unwrap();
+    let c2 = svc.edge_burn(3).unwrap();
+    assert!(c1.is_finite() && c2.is_finite());
+    // Deterministic input -> identical checksum.
+    assert_eq!(c1, c2);
+}
+
+#[test]
+fn full_pipeline_over_pjrt_predictor() {
+    let dir = artifacts();
+    let svc = Arc::new(RouterService::start(&dir).unwrap());
+    let sp = SimParams::default();
+    let pipeline = HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        Arc::clone(&svc) as Arc<dyn UtilityPredictor>,
+        PipelineConfig::paper_default(&sp),
+    );
+    let mut rng = Rng::new(0);
+    let mut offloads = 0.0;
+    let qs = generate_queries(Benchmark::Gpqa, 30, 0);
+    for q in &qs {
+        let out = pipeline.run_query(q, &mut rng);
+        assert!(out.latency > 0.0);
+        offloads += out.offload_rate;
+    }
+    // The trained router must actually route (not all-edge / all-cloud).
+    let mean_off = offloads / qs.len() as f64;
+    assert!((0.05..=0.95).contains(&mean_off), "offload {mean_off}");
+}
+
+#[test]
+fn concurrent_serving_over_pjrt() {
+    let dir = artifacts();
+    let svc = Arc::new(RouterService::start(&dir).unwrap());
+    let sp = SimParams::default();
+    let pipeline = Arc::new(HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        Arc::clone(&svc) as Arc<dyn UtilityPredictor>,
+        PipelineConfig::paper_default(&sp),
+    ));
+    let qs = generate_queries(Benchmark::Gpqa, 40, 1);
+    let report = hybridflow::server::serve(pipeline, qs, 6, 42);
+    assert_eq!(report.n_queries, 40);
+    assert!(report.throughput_qps > 1.0);
+    assert!(report.accuracy_pct > 10.0);
+}
+
+#[test]
+fn mirror_and_pjrt_agree_on_real_pipeline_features() {
+    // Parity on *actual* packed features (not just random vectors).
+    let dir = artifacts();
+    let svc = RouterService::start(&dir).unwrap();
+    let mirror = MirrorPredictor::from_meta_file(&dir.join("router_meta.json")).unwrap();
+    let sp = SimParams::default();
+    let planner = SyntheticPlanner::paper_main();
+    let mut rng = Rng::new(3);
+    use hybridflow::embed::FeatureContext;
+    use hybridflow::planner::Planner;
+    for q in generate_queries(Benchmark::Aime24, 10, 3) {
+        let plan = planner.plan(&q, 7, &mut rng);
+        let latents = hybridflow::workload::sample_latents(&plan.dag, &q, &sp, &mut rng);
+        let ctx = FeatureContext::new(&plan.dag, &q);
+        let feats: Vec<_> = (0..plan.dag.len())
+            .map(|i| ctx.features(&plan.dag, i, &latents[i], &sp, &mut rng))
+            .collect();
+        let a = svc.score(&feats, 0.2).unwrap();
+        let b = mirror.predict(&feats, 0.2);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-3, "pjrt {x} mirror {y}");
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Cross-module integration tests (artifact-light: uses the trained-router
+//! mirror when present, synthetic predictor otherwise).
+//!
+//! Covers: full-pipeline behavior orderings, failure injection (malformed
+//! plans, budget exhaustion, degenerate queries), concurrency determinism,
+//! and property tests over the pipeline-level invariants.
+
+use hybridflow::baselines::{Cot, Direct, Dot, HybridLlm, Method};
+use hybridflow::config::simparams::SimParams;
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::{PlannerProfile, SyntheticPlanner};
+use hybridflow::planner::{PlanText, Planner};
+use hybridflow::router::threshold::Threshold;
+use hybridflow::router::{MirrorPredictor, RoutePolicy};
+use hybridflow::scheduler::ScheduleConfig;
+use hybridflow::testing::forall;
+use hybridflow::util::rng::Rng;
+use hybridflow::workload::{generate_queries, Benchmark, Query};
+use std::sync::Arc;
+
+fn predictor() -> Arc<MirrorPredictor> {
+    let dir = hybridflow::config::default_artifacts_dir();
+    MirrorPredictor::from_meta_file(&dir.join("router_meta.json"))
+        .map(Arc::new)
+        .unwrap_or_else(|_| Arc::new(MirrorPredictor::synthetic_for_tests()))
+}
+
+fn pipeline_with(policy: RoutePolicy) -> HybridFlowPipeline {
+    let sp = SimParams::default();
+    let mut cfg = PipelineConfig::paper_default(&sp);
+    cfg.policy = policy;
+    HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        predictor(),
+        cfg,
+    )
+}
+
+fn mean_of<F: FnMut(&Query, &mut Rng) -> f64>(
+    bench: Benchmark,
+    n: usize,
+    seed: u64,
+    mut f: F,
+) -> f64 {
+    let qs = generate_queries(bench, n, seed);
+    let mut rng = Rng::new(seed ^ 0x5151);
+    qs.iter().map(|q| f(q, &mut rng)).sum::<f64>() / n as f64
+}
+
+// ---------------------------------------------------------------------------
+// Headline orderings (the paper's qualitative claims).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hybridflow_beats_random_and_cloud_on_utility() {
+    let sp = SimParams::default();
+    let n = 400;
+    let edge_acc = mean_of(Benchmark::Gpqa, n, 1, |q, rng| {
+        f64::from(Cot::new(SimExecutor::paper_pair(), false).run(q, rng).correct)
+    }) * 100.0;
+    let edge_lat = mean_of(Benchmark::Gpqa, n, 1, |q, rng| {
+        Cot::new(SimExecutor::paper_pair(), false).run(q, rng).latency
+    });
+
+    let utility = |policy: RoutePolicy| {
+        let p = pipeline_with(policy);
+        let qs = generate_queries(Benchmark::Gpqa, n, 2);
+        let mut rng = Rng::new(99);
+        let outs: Vec<_> = qs.iter().map(|q| p.run_query(q, &mut rng)).collect();
+        let acc = outs.iter().filter(|o| o.correct).count() as f64 / n as f64 * 100.0;
+        let lat = outs.iter().map(|o| o.latency).sum::<f64>() / n as f64;
+        let api = outs.iter().map(|o| o.api_cost).sum::<f64>() / n as f64;
+        hybridflow::router::utility::unified_utility(&sp, acc, edge_acc, lat, edge_lat, api)
+            .unwrap_or(0.0)
+    };
+
+    let hf = utility(RoutePolicy::hybridflow(&sp));
+    let random = utility(RoutePolicy::Random(0.45));
+    let cloud = utility(RoutePolicy::AllCloud);
+    assert!(hf > random + 0.05, "hf {hf} random {random}");
+    assert!(hf > cloud + 0.05, "hf {hf} cloud {cloud}");
+}
+
+#[test]
+fn dag_parallelism_beats_chain_latency() {
+    let sp = SimParams::default();
+    let dag = pipeline_with(RoutePolicy::hybridflow(&sp));
+    let mut chain = pipeline_with(RoutePolicy::hybridflow(&sp));
+    chain.config.schedule = ScheduleConfig { chain_mode: true, ..Default::default() };
+    let n = 300;
+    let lat_dag = mean_of(Benchmark::Gpqa, n, 3, |q, rng| dag.run_query(q, rng).latency);
+    let lat_chain = mean_of(Benchmark::Gpqa, n, 3, |q, rng| chain.run_query(q, rng).latency);
+    assert!(lat_dag < lat_chain, "dag {lat_dag} chain {lat_chain}");
+}
+
+#[test]
+fn hybridflow_cheaper_than_cloud_with_competitive_accuracy() {
+    let sp = SimParams::default();
+    let hf = pipeline_with(RoutePolicy::hybridflow(&sp));
+    let cloud = pipeline_with(RoutePolicy::AllCloud);
+    let n = 400;
+    let qs = generate_queries(Benchmark::Gpqa, n, 4);
+    let mut r1 = Rng::new(11);
+    let mut r2 = Rng::new(11);
+    let hf_outs: Vec<_> = qs.iter().map(|q| hf.run_query(q, &mut r1)).collect();
+    let cl_outs: Vec<_> = qs.iter().map(|q| cloud.run_query(q, &mut r2)).collect();
+    let hf_acc = hf_outs.iter().filter(|o| o.correct).count() as f64 / n as f64;
+    let cl_acc = cl_outs.iter().filter(|o| o.correct).count() as f64 / n as f64;
+    let hf_api: f64 = hf_outs.iter().map(|o| o.api_cost).sum();
+    let cl_api: f64 = cl_outs.iter().map(|o| o.api_cost).sum();
+    assert!(hf_api < cl_api * 0.65, "api {hf_api} vs cloud {cl_api}");
+    assert!(hf_acc > cl_acc - 0.08, "acc {hf_acc} vs cloud {cl_acc}");
+    assert!(hf_acc > 0.35); // far above edge-only
+}
+
+#[test]
+fn hybrid_baselines_sit_between_edge_and_cloud() {
+    let n = 400;
+    for bench in [Benchmark::Gpqa, Benchmark::MmluPro] {
+        let acc = |m: &dyn Method, seed: u64| {
+            mean_of(bench, n, seed, |q, rng| f64::from(m.run(q, rng).correct)) * 100.0
+        };
+        let edge = acc(&Cot::new(SimExecutor::paper_pair(), false), 5);
+        let cloud = acc(&Cot::new(SimExecutor::paper_pair(), true), 5);
+        let dot = acc(&Dot::paper_default(SimExecutor::paper_pair()), 5);
+        let hllm = acc(&HybridLlm::paper_default(SimExecutor::paper_pair()), 5);
+        assert!(dot > edge && dot < cloud + 3.0, "{bench:?} dot {dot} in ({edge}, {cloud})");
+        assert!(hllm > edge - 3.0 && hllm < cloud + 3.0, "{bench:?} hllm {hllm}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection.
+// ---------------------------------------------------------------------------
+
+/// Planner that always emits garbage: the pipeline must survive on the
+/// chain fallback path for every query.
+#[test]
+fn survives_total_planner_failure() {
+    struct BrokenPlanner;
+    impl Planner for BrokenPlanner {
+        fn plan_text(&self, _q: &Query, _rng: &mut Rng) -> PlanText {
+            PlanText { xml: "<<<not xml>>>".into(), planning_latency: 1.0, plan_tokens: 5.0 }
+        }
+    }
+    let q = &generate_queries(Benchmark::Gpqa, 1, 0)[0];
+    let mut rng = Rng::new(0);
+    let plan = BrokenPlanner.plan(q, 7, &mut rng);
+    assert_eq!(plan.outcome, hybridflow::dag::RepairOutcome::Fallback);
+    assert!(hybridflow::dag::validate(&plan.dag, 7).is_valid());
+}
+
+/// Degenerate queries (difficulty 0 and 1, tiny/huge prompts) must not panic.
+#[test]
+fn degenerate_queries_run() {
+    let sp = SimParams::default();
+    let p = pipeline_with(RoutePolicy::hybridflow(&sp));
+    let mut rng = Rng::new(0);
+    for difficulty in [0.0, 1.0] {
+        for tokens in [1.0, 5000.0] {
+            let q = Query {
+                id: 0,
+                benchmark: Benchmark::Gpqa,
+                domain: 1,
+                difficulty,
+                query_tokens: tokens,
+                tok_mult: 1.0,
+            };
+            let out = p.run_query(&q, &mut rng);
+            assert!(out.latency.is_finite() && out.latency > 0.0);
+        }
+    }
+}
+
+/// Budget exhaustion: with an absurdly tight latency/API budget the Eq-27
+/// router must converge to (almost) pure edge execution.
+#[test]
+fn budget_exhaustion_forces_edge() {
+    let tight = Threshold::ResourcePressure(hybridflow::router::threshold::ResourcePressure {
+        tau0: 0.5,
+        k_max: 1e-6,
+        l_max: 1e-3,
+    });
+    let p = pipeline_with(RoutePolicy::Learned { threshold: tight, calibrate: false });
+    let off = mean_of(Benchmark::Gpqa, 100, 6, |q, rng| p.run_query(q, rng).offload_rate);
+    assert!(off < 0.05, "offload under exhausted budget: {off}");
+}
+
+/// Predictors pinned at 0 (never offload) and 1 (always offload) must still
+/// produce valid executions — routing-layer robustness to a broken model.
+#[test]
+fn extreme_predictors_are_safe() {
+    struct Const(f64);
+    impl hybridflow::router::predictor::UtilityPredictor for Const {
+        fn predict(&self, feats: &[hybridflow::embed::Features], _c: f64) -> Vec<f64> {
+            vec![self.0; feats.len()]
+        }
+        fn backend(&self) -> &'static str {
+            "const"
+        }
+    }
+    let sp = SimParams::default();
+    for v in [0.0, 1.0] {
+        let p = HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            Arc::new(Const(v)),
+            PipelineConfig::paper_default(&sp),
+        );
+        let out = mean_of(Benchmark::Gpqa, 50, 7, |q, rng| p.run_query(q, rng).offload_rate);
+        if v == 0.0 {
+            assert_eq!(out, 0.0);
+        } else {
+            assert!(out > 0.9);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Properties over the pipeline.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pipeline_invariants() {
+    let sp = SimParams::default();
+    let p = pipeline_with(RoutePolicy::hybridflow(&sp));
+    forall("pipeline invariants", 60, move |g| {
+        let bench = *g.rng.choice(&Benchmark::ALL);
+        let seed = g.rng.next_u64() % 1000;
+        let q = &generate_queries(bench, 1, seed)[0];
+        let mut rng = Rng::new(seed);
+        let (exec, _) = p.run_query_traced(q, &mut rng);
+        // Invariants: events complete; budget consistent with API spend;
+        // offload rate consistent with events; time monotone per event.
+        let cloud_events = exec.events.iter().filter(|e| e.cloud).count();
+        let api_from_events: f64 = exec.events.iter().map(|e| e.api_cost).sum();
+        exec.latency > 0.0
+            && exec.events.len() == exec.n_subtasks
+            && (exec.api_cost - api_from_events).abs() < 1e-9
+            && (exec.offload_rate - cloud_events as f64 / exec.n_subtasks as f64).abs() < 1e-9
+            && exec.events.iter().all(|e| e.finish >= e.start)
+    });
+}
+
+#[test]
+fn prop_planner_output_always_executable() {
+    forall("planner plans always executable", 100, |g| {
+        let profile = match g.usize_in(0..4) {
+            0 => PlannerProfile::paper_main(),
+            1 => PlannerProfile::base_llama(),
+            2 => PlannerProfile::sft_llama(),
+            _ => PlannerProfile::frontier_reference(),
+        };
+        let planner = SyntheticPlanner::new(profile);
+        let bench = *g.rng.choice(&Benchmark::ALL);
+        let q = &generate_queries(bench, 1, g.rng.next_u64() % 500)[0];
+        let mut rng = Rng::new(g.rng.next_u64());
+        let plan = planner.plan(q, 7, &mut rng);
+        hybridflow::dag::validate(&plan.dag, 7).is_valid() && plan.dag.len() >= 2
+    });
+}
+
+#[test]
+fn concurrent_serving_is_deterministic() {
+    let sp = SimParams::default();
+    let qs = generate_queries(Benchmark::MmluPro, 80, 9);
+    let report1 = hybridflow::server::serve(
+        Arc::new(pipeline_with(RoutePolicy::hybridflow(&sp))),
+        qs.clone(),
+        2,
+        1234,
+    );
+    let report2 = hybridflow::server::serve(
+        Arc::new(pipeline_with(RoutePolicy::hybridflow(&sp))),
+        qs,
+        7,
+        1234,
+    );
+    assert_eq!(report1.accuracy_pct, report2.accuracy_pct);
+    assert_eq!(report1.total_api_cost, report2.total_api_cost);
+}
+
+#[test]
+fn direct_cheaper_than_cot_both_sides() {
+    let n = 300;
+    for cloud in [false, true] {
+        let d = mean_of(Benchmark::Gpqa, n, 10, |q, rng| {
+            Direct::new(SimExecutor::paper_pair(), cloud).run(q, rng).latency
+        });
+        let c = mean_of(Benchmark::Gpqa, n, 10, |q, rng| {
+            Cot::new(SimExecutor::paper_pair(), cloud).run(q, rng).latency
+        });
+        assert!(d < c, "cloud={cloud}: direct {d} cot {c}");
+    }
+}

@@ -1,0 +1,256 @@
+//! Substrate- and coordinator-level property tests (the proptest-style
+//! deep-invariant suite; complements the per-module unit properties).
+
+use hybridflow::budget::BudgetState;
+use hybridflow::config::simparams::SimParams;
+use hybridflow::dag::{
+    emit_plan, parse_plan, validate, validate_and_repair, Role, Subtask, TaskDag,
+};
+use hybridflow::router::knapsack;
+use hybridflow::testing::{forall, Gen};
+use hybridflow::util::json::Json;
+use hybridflow::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// JSON substrate.
+// ---------------------------------------------------------------------------
+
+fn arbitrary_json(g: &mut Gen, depth: usize) -> Json {
+    match if depth == 0 { g.usize_in(0..4) } else { g.usize_in(0..6) } {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num((g.f64_in(-1e6..1e6) * 1e3).round() / 1e3),
+        3 => Json::Str(g.string(0..12)),
+        4 => Json::Arr((0..g.size(4)).map(|_| arbitrary_json(g, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..g.size(4))
+                .map(|i| (format!("k{i}_{}", g.string(0..4)), arbitrary_json(g, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_identity() {
+    forall("parse(write(v)) == v", 400, |g| {
+        let v = arbitrary_json(g, 3);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        compact == v && pretty == v
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_mutations() {
+    forall("parser total on mutated inputs", 400, |g| {
+        let v = arbitrary_json(g, 3);
+        let mut text = v.to_string().into_bytes();
+        if !text.is_empty() {
+            // Flip a few bytes; parser must return Ok or Err, never panic.
+            for _ in 0..g.usize_in(1..4) {
+                let i = g.rng.below(text.len());
+                text[i] = (g.rng.next_u64() % 256) as u8;
+            }
+        }
+        if let Ok(s) = String::from_utf8(text) {
+            let _ = Json::parse(&s);
+        }
+        true
+    });
+}
+
+// ---------------------------------------------------------------------------
+// DAG repair & XML.
+// ---------------------------------------------------------------------------
+
+fn arbitrary_dag(g: &mut Gen) -> TaskDag {
+    let n = g.usize_in(1..11);
+    let nodes = (0..n)
+        .map(|i| {
+            let role = match g.usize_in(0..3) {
+                0 => Role::Explain,
+                1 => Role::Analyze,
+                _ => Role::Generate,
+            };
+            // Arbitrary (possibly invalid) deps: self-loops, forward edges,
+            // out-of-range, duplicates.
+            let ndeps = g.size(4);
+            let deps: Vec<usize> = (0..ndeps).map(|_| g.rng.below(n + 2)).collect();
+            let mut t = Subtask::new(i, role, &format!("step {i}"), deps.clone());
+            t.edge_conf = deps.iter().map(|_| g.unit_f64()).collect();
+            if g.bool() {
+                t.req = vec![format!("sym{}", g.rng.below(4))];
+            }
+            if g.bool() {
+                t.prod = vec![format!("sym{}", g.rng.below(4))];
+            }
+            t
+        })
+        .collect();
+    TaskDag::new(nodes)
+}
+
+#[test]
+fn prop_repair_always_yields_valid_dag() {
+    forall("repair(any graph) is valid", 500, |g| {
+        let dag = arbitrary_dag(g);
+        let (out, _) = validate_and_repair(&dag, 7);
+        validate(&out, 7).is_valid() && out.len() <= 7 && out.len() >= 2
+    });
+}
+
+#[test]
+fn prop_repair_is_idempotent() {
+    forall("repair(repair(g)) == repair(g)", 200, |g| {
+        let dag = arbitrary_dag(g);
+        let (once, _) = validate_and_repair(&dag, 7);
+        let (twice, outcome) = validate_and_repair(&once, 7);
+        outcome == hybridflow::dag::RepairOutcome::Valid && twice == once
+    });
+}
+
+#[test]
+fn prop_xml_roundtrip_preserves_structure() {
+    forall("parse(emit(valid dag)) == dag structure", 300, |g| {
+        let dag = arbitrary_dag(g);
+        let (valid, _) = validate_and_repair(&dag, 7);
+        let xml = emit_plan(&valid);
+        let back = parse_plan(&xml).expect("emitted plan must parse");
+        back.len() == valid.len()
+            && back
+                .nodes
+                .iter()
+                .zip(&valid.nodes)
+                .all(|(a, b)| a.deps == b.deps && a.role == b.role)
+    });
+}
+
+#[test]
+fn prop_topo_order_respects_all_edges() {
+    forall("topo sound", 300, |g| {
+        let dag = arbitrary_dag(g);
+        let (valid, _) = validate_and_repair(&dag, 7);
+        let order = valid.topo_order().expect("valid dag is acyclic");
+        let pos: Vec<usize> =
+            (0..valid.len()).map(|i| order.iter().position(|&x| x == i).unwrap()).collect();
+        valid
+            .nodes
+            .iter()
+            .all(|node| node.deps.iter().all(|&d| pos[d] < pos[node.id]))
+    });
+}
+
+#[test]
+fn prop_compression_ratio_bounds() {
+    // R_comp in [0, (n-1)/n] (paper Eq. 28's stated extremes).
+    forall("R_comp bounds", 300, |g| {
+        let dag = arbitrary_dag(g);
+        let (valid, _) = validate_and_repair(&dag, 7);
+        let n = valid.len() as f64;
+        let r = valid.compression_ratio().unwrap();
+        (0.0..=(n - 1.0) / n + 1e-12).contains(&r)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler makespan bounds.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_makespan_within_theoretical_bounds() {
+    use hybridflow::models::SimExecutor;
+    use hybridflow::router::{MirrorPredictor, RoutePolicy, RouterState};
+    use hybridflow::scheduler::{execute_query, ScheduleConfig};
+    use hybridflow::workload::{generate_queries, sample_latents, Benchmark};
+
+    let executor = SimExecutor::paper_pair();
+    let predictor = MirrorPredictor::synthetic_for_tests();
+    forall("critical path <= makespan <= planning + sum", 150, |g| {
+        let dag = arbitrary_dag(g);
+        let (valid, _) = validate_and_repair(&dag, 7);
+        let q = &generate_queries(Benchmark::Gpqa, 1, g.rng.next_u64() % 999)[0];
+        let mut rng = Rng::new(g.rng.next_u64());
+        let latents = sample_latents(&valid, q, &executor.sp, &mut rng);
+        let planning = g.f64_in(0.5..3.0);
+        let mut router = RouterState::new(RoutePolicy::Random(g.unit_f64()));
+        let exec = execute_query(
+            &valid, &latents, q, &executor, &predictor, &mut router, planning,
+            &ScheduleConfig::default(), &mut rng,
+        );
+        let total: f64 = exec.events.iter().map(|e| e.finish - e.start).sum();
+        let longest = exec.events.iter().map(|e| e.finish - e.start).fold(0.0, f64::max);
+        exec.latency >= planning + longest - 1e-9 && exec.latency <= planning + total + 1e-9
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Knapsack / budget.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_knapsack_exact_dominates_and_respects_capacity() {
+    forall("exact >= greedy, both feasible", 200, |g| {
+        let n = g.usize_in(1..10);
+        let v: Vec<f64> = (0..n).map(|_| g.unit_f64()).collect();
+        let w: Vec<f64> = (0..n).map(|_| g.f64_in(0.01..0.4)).collect();
+        let cap = g.f64_in(0.0..1.2);
+        let (ve, pe) = knapsack::solve_exact(&v, &w, cap);
+        let (vg, _) = knapsack::solve_greedy_ratio(&v, &w, cap);
+        let we: f64 = pe.iter().zip(&w).filter(|(p, _)| **p).map(|(_, x)| x).sum();
+        ve + 1e-12 >= vg && we <= cap + 1e-9
+    });
+}
+
+#[test]
+fn prop_budget_accumulation_monotone_and_bounded() {
+    let sp = SimParams::default();
+    forall("budget monotone", 300, |g| {
+        let mut b = BudgetState::new();
+        let mut last_c = 0.0;
+        for _ in 0..g.usize_in(0..30) {
+            if g.bool() {
+                b.record_cloud(&sp, g.f64_in(0.0..20.0), g.f64_in(0.0..0.05));
+            } else {
+                b.record_edge();
+            }
+            if b.c_used < last_c - 1e-12 {
+                return false;
+            }
+            last_c = b.c_used;
+        }
+        // Each cloud record adds at most 1.0 of normalized cost.
+        b.c_used <= b.n_offloaded as f64 + 1e-9 && b.offload_rate() <= 1.0
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Exposure metric.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_exposure_bounded_and_consistent() {
+    use hybridflow::metrics::exposure::Exposure;
+    use hybridflow::models::SimExecutor;
+    use hybridflow::router::{MirrorPredictor, RoutePolicy, RouterState};
+    use hybridflow::scheduler::{execute_query, ScheduleConfig};
+    use hybridflow::workload::{generate_queries, sample_latents, Benchmark};
+
+    let executor = SimExecutor::paper_pair();
+    let predictor = MirrorPredictor::synthetic_for_tests();
+    forall("0 <= E_bar <= 1; cloud calls == offloads", 100, |g| {
+        let dag = arbitrary_dag(g);
+        let (valid, _) = validate_and_repair(&dag, 7);
+        let q = &generate_queries(Benchmark::MmluPro, 1, g.rng.next_u64() % 999)[0];
+        let mut rng = Rng::new(g.rng.next_u64());
+        let latents = sample_latents(&valid, q, &executor.sp, &mut rng);
+        let mut router = RouterState::new(RoutePolicy::Random(g.unit_f64()));
+        let exec = execute_query(
+            &valid, &latents, q, &executor, &predictor, &mut router, 1.0,
+            &ScheduleConfig::default(), &mut rng,
+        );
+        let e = Exposure::from_events(&exec.events);
+        let nb = e.normalized();
+        (nb.is_nan() || (0.0..=1.0).contains(&nb))
+            && e.n_cloud_calls == exec.budget.n_offloaded
+    });
+}
