@@ -1,0 +1,21 @@
+# Convenience targets. `make verify` is the tier-1 gate (build + tests,
+# golden-trace test included, + advisory fmt check).
+
+.PHONY: verify build test fmt artifacts
+
+verify:
+	./scripts/verify.sh
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt
+
+# Lower the python-authored router/edge-LM computations to HLO text for
+# the PJRT runtime (requires the python environment; see python/compile).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts

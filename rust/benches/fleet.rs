@@ -1,0 +1,22 @@
+//! Bench target sweeping the fleet simulator across arrival rates
+//! (queueing delay, tail sojourn, offload, and budget pressure vs load).
+//! Scale via env: BENCH_SCALE (default 1.0), BENCH_SEEDS (default 3,
+//! first seed used).
+
+fn main() {
+    let ctx = hybridflow::eval::ExpContext::from_bench_env();
+    let t0 = std::time::Instant::now();
+    match hybridflow::eval::run_experiment("fleet_serve", &ctx) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!(
+        "[bench fleet] {:.1}s (scale {}, {} seeds)",
+        t0.elapsed().as_secs_f64(),
+        ctx.scale,
+        ctx.seeds.len()
+    );
+}

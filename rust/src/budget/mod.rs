@@ -1,6 +1,13 @@
-//! Per-query budget accounting: cumulative normalized cost `C_used(t)`
-//! (Eq. 1/24), raw API and latency consumption for the adaptive threshold
-//! of Eq. 27, and snapshots for trace events.
+//! Budget accounting at three scopes:
+//! * per-query [`BudgetState`] — cumulative normalized cost `C_used(t)`
+//!   (Eq. 1/24), raw API and latency consumption for the adaptive threshold
+//!   of Eq. 27, and snapshots for trace events;
+//! * per-tenant [`TenantPool`] — a dollar allotment plus the tenant's
+//!   aggregated `BudgetState` across all of its in-flight queries (the
+//!   fleet simulator routes against this state, so Eq. 8's `C_used(t)` is
+//!   fleet-level rather than query-local);
+//! * fleet-wide [`GlobalBudget`] — the shared dollar ceiling that tenant
+//!   pools draw from.
 
 use crate::config::simparams::SimParams;
 
@@ -64,6 +71,83 @@ impl Default for BudgetState {
     }
 }
 
+/// One tenant's share of the fleet budget: a cloud-dollar allotment plus
+/// the aggregated resource state of every query the tenant has run.
+///
+/// The spend check is a pre-decision gate (`k_used < k_cap`), so a single
+/// cloud call may overshoot the cap by at most its own cost — the same
+/// semantics as per-call API metering.
+#[derive(Debug, Clone)]
+pub struct TenantPool {
+    pub name: String,
+    /// Cloud-dollar allotment (`f64::INFINITY` = uncapped).
+    pub k_cap: f64,
+    /// Aggregated budget state across the tenant's queries.
+    pub state: BudgetState,
+}
+
+impl TenantPool {
+    pub fn new(name: &str, k_cap: f64) -> TenantPool {
+        TenantPool { name: name.to_string(), k_cap, state: BudgetState::new() }
+    }
+
+    pub fn unlimited(name: &str) -> TenantPool {
+        TenantPool::new(name, f64::INFINITY)
+    }
+
+    /// Whether another cloud call may start (pre-decision gate).
+    pub fn can_spend(&self) -> bool {
+        self.state.k_used < self.k_cap
+    }
+
+    pub fn remaining(&self) -> f64 {
+        (self.k_cap - self.state.k_used).max(0.0)
+    }
+}
+
+/// Fleet-wide dollar ceiling that tenant pools draw from.
+#[derive(Debug, Clone)]
+pub struct GlobalBudget {
+    pub k_cap: f64,
+    pub k_spent: f64,
+}
+
+impl GlobalBudget {
+    pub fn new(k_cap: f64) -> GlobalBudget {
+        GlobalBudget { k_cap, k_spent: 0.0 }
+    }
+
+    pub fn unlimited() -> GlobalBudget {
+        GlobalBudget::new(f64::INFINITY)
+    }
+
+    pub fn can_spend(&self) -> bool {
+        self.k_spent < self.k_cap
+    }
+
+    pub fn record(&mut self, dk: f64) {
+        self.k_spent += dk;
+    }
+
+    pub fn remaining(&self) -> f64 {
+        (self.k_cap - self.k_spent).max(0.0)
+    }
+}
+
+/// Carve a global dollar budget into equal per-tenant pools (the simplest
+/// hierarchical allotment; callers can also build pools by hand for
+/// weighted shares).
+pub fn split_evenly(global_k_cap: f64, names: &[&str]) -> Vec<TenantPool> {
+    let n = names.len().max(1) as f64;
+    names
+        .iter()
+        .map(|name| {
+            let share = if global_k_cap.is_finite() { global_k_cap / n } else { f64::INFINITY };
+            TenantPool::new(name, share)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +193,44 @@ mod tests {
     #[test]
     fn empty_offload_rate_zero() {
         assert_eq!(BudgetState::new().offload_rate(), 0.0);
+    }
+
+    #[test]
+    fn tenant_pool_gates_on_cap() {
+        let sp = SimParams::default();
+        let mut t = TenantPool::new("acme", 0.01);
+        assert!(t.can_spend());
+        assert_eq!(t.remaining(), 0.01);
+        t.state.record_cloud(&sp, 1.0, 0.008);
+        assert!(t.can_spend());
+        t.state.record_cloud(&sp, 1.0, 0.005); // overshoot allowed once
+        assert!(!t.can_spend());
+        assert_eq!(t.remaining(), 0.0);
+        assert!(TenantPool::unlimited("free").can_spend());
+    }
+
+    #[test]
+    fn global_budget_accumulates() {
+        let mut g = GlobalBudget::new(0.02);
+        assert!(g.can_spend());
+        g.record(0.015);
+        assert!(g.can_spend());
+        assert!((g.remaining() - 0.005).abs() < 1e-12);
+        g.record(0.01);
+        assert!(!g.can_spend());
+        assert_eq!(g.remaining(), 0.0);
+        assert!(GlobalBudget::unlimited().can_spend());
+    }
+
+    #[test]
+    fn split_evenly_partitions_global() {
+        let pools = split_evenly(0.06, &["a", "b", "c"]);
+        assert_eq!(pools.len(), 3);
+        for p in &pools {
+            assert!((p.k_cap - 0.02).abs() < 1e-12);
+            assert_eq!(p.state.n_decided, 0);
+        }
+        let unlimited = split_evenly(f64::INFINITY, &["x"]);
+        assert!(unlimited[0].k_cap.is_infinite());
     }
 }

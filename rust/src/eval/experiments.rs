@@ -26,9 +26,9 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 /// All registered experiment ids.
-pub const EXPERIMENT_IDS: [&str; 12] = [
+pub const EXPERIMENT_IDS: [&str; 13] = [
     "calibrate", "table1", "table2", "table3", "table5", "table6_fig4", "fig3", "table7",
-    "table8", "fig5", "d1_exposure", "ablations",
+    "table8", "fig5", "d1_exposure", "ablations", "fleet_serve",
 ];
 
 /// Shared experiment context.
@@ -769,6 +769,83 @@ pub fn ablations(ctx: &ExpContext) -> String {
     out
 }
 
+/// Fleet serving: queueing delay, tail sojourn, offload rate, and budget
+/// pressure as the open-loop arrival rate sweeps from idle to saturated.
+///
+/// Three tenants share an 8-edge-worker / 16-cloud-call fleet; two tenants
+/// draw finite dollar pools from a shared global budget, so the sweep also
+/// shows cap-forced edge execution once spend runs dry. Contention is the
+/// new axis the per-query tables cannot express: the same router, executor,
+/// and workload, but fleet-level `C_used(t)` and shared worker pools.
+pub fn fleet_serve(ctx: &ExpContext) -> String {
+    use crate::budget::TenantPool;
+    use crate::scheduler::fleet::FleetConfig;
+    use crate::server::serve_fleet;
+    use crate::workload::trace::ArrivalProcess;
+
+    let sp = SimParams::default();
+    let bench = Benchmark::Gpqa;
+    let n = ((120.0 * ctx.scale).round() as usize).max(20);
+    let seed = *ctx.seeds.first().unwrap_or(&11);
+
+    let mut t = Table::new(
+        "Fleet serving: contention sweep (GPQA, 3 tenants, 8 edge / 16 cloud workers)",
+        &[
+            "Arrival (q/s)", "Admit p99 (s)", "Queue p99 (s)", "Sojourn p50 (s)",
+            "Sojourn p99 (s)", "Offload (%)", "Forced-edge", "C_API ($)", "Edge util (%)",
+        ],
+    );
+    for &rate in &[0.1f64, 0.25, 0.5, 1.0, 2.0] {
+        let mut pcfg = PipelineConfig::paper_default(&sp);
+        pcfg.policy = RoutePolicy::hybridflow(&sp);
+        pcfg.schedule.edge_workers = 8;
+        pcfg.schedule.cloud_workers = 16;
+        let pipeline = HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            ctx.predictor(),
+            pcfg,
+        );
+        let tenants = vec![
+            TenantPool::unlimited("anchor"),
+            TenantPool::new("metered", 0.05),
+            TenantPool::new("capped", 0.005),
+        ];
+        let cfg = FleetConfig {
+            admission_limit: 64,
+            global_k_cap: f64::INFINITY,
+            record_trace: false,
+        };
+        let report = serve_fleet(
+            &pipeline,
+            &cfg,
+            tenants,
+            bench,
+            n,
+            &ArrivalProcess::Poisson { rate },
+            seed,
+        );
+        t.row(vec![
+            format!("{rate:.2}"),
+            format!("{:.2}", report.admission_delay.p99),
+            format!("{:.2}", report.queue_wait.p99),
+            format!("{:.2}", report.sojourn.p50),
+            format!("{:.2}", report.sojourn.p99),
+            format!("{:.1}", report.offload_rate * 100.0),
+            report.forced_edge.to_string(),
+            format!("{:.4}", report.total_api_cost),
+            format!("{:.1}", report.edge_utilization * 100.0),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "\nExpected shape: queueing delay and p99 sojourn explode past the edge-pool\n\
+         saturation point while offload rises (the router sees fleet-level pressure);\n\
+         the capped tenant accumulates forced-to-edge decisions at every rate.\n",
+    );
+    out
+}
+
 /// Run an experiment by id.
 pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<String> {
     Ok(match id {
@@ -784,6 +861,7 @@ pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<String> {
         "fig5" => fig5(ctx),
         "d1_exposure" => d1_exposure(ctx),
         "ablations" => ablations(ctx),
+        "fleet_serve" => fleet_serve(ctx),
         other => anyhow::bail!(
             "unknown experiment '{other}'; available: {}",
             EXPERIMENT_IDS.join(", ")
@@ -823,5 +901,14 @@ mod tests {
         let out = table7(&tiny_ctx());
         assert!(out.contains("SFT"));
         assert!(out.contains("R_comp"));
+    }
+
+    #[test]
+    fn fleet_serve_runs_tiny() {
+        let out = fleet_serve(&tiny_ctx());
+        assert!(out.contains("Fleet serving"));
+        assert!(out.contains("Sojourn p99"));
+        // One row per swept arrival rate.
+        assert!(out.lines().filter(|l| l.starts_with("| 0.") || l.starts_with("| 1.") || l.starts_with("| 2.")).count() >= 5);
     }
 }

@@ -18,8 +18,17 @@
 //!   `matmul+bias+activation` Pallas kernel behind every dense layer.
 //!
 //! The runtime module loads the AOT artifacts through the PJRT CPU client
-//! (`xla` crate) and serves routing decisions **on the request path** —
-//! python is never invoked after `make artifacts`.
+//! (`xla` crate, behind the `pjrt` cargo feature) and serves routing
+//! decisions **on the request path** — python is never invoked after
+//! `make artifacts`.
+//!
+//! Beyond the paper's per-query semantics, `scheduler::fleet` simulates a
+//! whole serving fleet on the same virtual clock: N concurrent queries
+//! contending for a shared edge-worker pool and a bounded cloud-API pool,
+//! with hierarchical tenant-to-global dollar budgets, admission queueing,
+//! and open-loop arrivals (`workload::trace::ArrivalProcess`). The
+//! single-query scheduler is the fleet's N=1 special case; see the
+//! "Fleet simulation" section of README.md.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.

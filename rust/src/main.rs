@@ -29,7 +29,7 @@ const COMMANDS: [(&str, &str); 6] = [
     ("run", "run N queries end-to-end and print outcomes"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
-    ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations>"),
+    ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve>"),
     ("check", "verify artifacts, PJRT round trip, and mirror parity"),
 ];
 

@@ -8,11 +8,16 @@
 //! The `xla` wrapper types hold raw pointers (not `Send`), so
 //! [`PjrtEngine`] must stay on one thread — the multithreaded coordinator
 //! talks to it through [`super::service::RouterService`].
+//!
+//! Build gating: the `xla` crate is an external native dependency that the
+//! offline build cannot fetch, so the real engine is compiled only with
+//! `--features pjrt`. The default build ships a stub whose `load` fails
+//! fast; every consumer (CLI `check`, serving examples, artifact tests)
+//! already handles that error path and falls back to the pure-rust
+//! [`crate::router::MirrorPredictor`].
 
-use crate::config::simparams::FEAT_DIM;
 use crate::embed::Features;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 /// Router batch sizes emitted by `aot.py` (smallest-fitting is chosen).
 pub const ROUTER_BATCHES: [usize; 3] = [1, 8, 32];
@@ -21,146 +26,229 @@ pub const ROUTER_BATCHES: [usize; 3] = [1, 8, 32];
 pub const EDGE_LM_T: usize = 32;
 pub const EDGE_LM_D: usize = 64;
 
-/// One-thread PJRT engine over the artifact set.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    /// batch size -> compiled router executable.
-    routers: HashMap<usize, xla::PjRtLoadedExecutable>,
-    edge_lm: Option<xla::PjRtLoadedExecutable>,
-    /// Reused edge-LM input activations.
-    edge_lm_input: Vec<f32>,
-    pub artifacts_dir: PathBuf,
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtEngine;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::PjrtEngine;
+
+/// Smallest compiled batch size that fits `n` rows (falls back to the
+/// largest and chunks when `n` exceeds it).
+fn pick_batch_size(n: usize) -> usize {
+    for b in ROUTER_BATCHES {
+        if n <= b {
+            return b;
+        }
+    }
+    *ROUTER_BATCHES.last().unwrap()
 }
 
-impl PjrtEngine {
-    /// Load and compile every artifact under `artifacts_dir`.
-    pub fn load(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
-        let mut routers = HashMap::new();
-        for b in ROUTER_BATCHES {
-            let path = artifacts_dir.join(format!("router_b{b}.hlo.txt"));
-            routers.insert(b, compile_hlo(&client, &path)?);
+/// Stub engine for builds without the `xla` dependency: construction fails
+/// fast with an actionable message, so `RouterService::start` surfaces the
+/// same error a missing artifact would.
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use super::*;
+    use std::path::PathBuf;
+
+    pub struct PjrtEngine {
+        pub artifacts_dir: PathBuf,
+    }
+
+    impl PjrtEngine {
+        pub fn load(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
+            let _ = artifacts_dir;
+            anyhow::bail!(
+                "PJRT backend not compiled in (build with `--features pjrt` and the `xla` \
+                 crate available); use the pure-rust mirror predictor instead"
+            )
         }
-        let edge_path = artifacts_dir.join("edge_lm.hlo.txt");
-        let edge_lm =
-            if edge_path.exists() { Some(compile_hlo(&client, &edge_path)?) } else { None };
-        // Deterministic pseudo-activations for the burn input.
-        let edge_lm_input: Vec<f32> = (0..EDGE_LM_T * EDGE_LM_D)
-            .map(|i| ((i as f32 * 0.37).sin()) * 0.5)
-            .collect();
-        Ok(PjrtEngine {
-            client,
-            routers,
-            edge_lm,
-            edge_lm_input,
-            artifacts_dir: artifacts_dir.to_path_buf(),
-        })
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn pick_batch(&self, n: usize) -> usize {
+            pick_batch_size(n)
+        }
+
+        pub fn score(&self, _feats: &[Features], _c_used: f64) -> anyhow::Result<Vec<f64>> {
+            anyhow::bail!("PJRT backend not compiled in")
+        }
+
+        pub fn edge_lm_burn(&self, _chunks: usize) -> anyhow::Result<f32> {
+            anyhow::bail!("PJRT backend not compiled in")
+        }
+
+        pub fn has_edge_lm(&self) -> bool {
+            false
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+    use crate::config::simparams::FEAT_DIM;
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+
+    /// One-thread PJRT engine over the artifact set.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
+        /// batch size -> compiled router executable.
+        routers: HashMap<usize, xla::PjRtLoadedExecutable>,
+        edge_lm: Option<xla::PjRtLoadedExecutable>,
+        /// Reused edge-LM input activations.
+        edge_lm_input: Vec<f32>,
+        pub artifacts_dir: PathBuf,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Smallest compiled batch size that fits `n` rows (falls back to the
-    /// largest and chunks when `n` exceeds it).
-    pub fn pick_batch(&self, n: usize) -> usize {
-        for b in ROUTER_BATCHES {
-            if n <= b {
-                return b;
+    impl PjrtEngine {
+        /// Load and compile every artifact under `artifacts_dir`.
+        pub fn load(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+            let mut routers = HashMap::new();
+            for b in ROUTER_BATCHES {
+                let path = artifacts_dir.join(format!("router_b{b}.hlo.txt"));
+                routers.insert(b, compile_hlo(&client, &path)?);
             }
+            let edge_path = artifacts_dir.join("edge_lm.hlo.txt");
+            let edge_lm =
+                if edge_path.exists() { Some(compile_hlo(&client, &edge_path)?) } else { None };
+            // Deterministic pseudo-activations for the burn input.
+            let edge_lm_input: Vec<f32> = (0..EDGE_LM_T * EDGE_LM_D)
+                .map(|i| ((i as f32 * 0.37).sin()) * 0.5)
+                .collect();
+            Ok(PjrtEngine {
+                client,
+                routers,
+                edge_lm,
+                edge_lm_input,
+                artifacts_dir: artifacts_dir.to_path_buf(),
+            })
         }
-        *ROUTER_BATCHES.last().unwrap()
-    }
 
-    /// Score a frontier: `u_hat` per feature row, shared `c_used` (Eq. 8).
-    ///
-    /// Rows are padded to the compiled batch; results sliced back. Inputs
-    /// larger than the biggest batch are processed in chunks.
-    pub fn score(&self, feats: &[Features], c_used: f64) -> anyhow::Result<Vec<f64>> {
-        let mut out = Vec::with_capacity(feats.len());
-        let max_b = *ROUTER_BATCHES.last().unwrap();
-        let mut start = 0;
-        while start < feats.len() {
-            let end = (start + max_b).min(feats.len());
-            out.extend(self.score_chunk(&feats[start..end], c_used)?);
-            start = end;
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(out)
-    }
 
-    fn score_chunk(&self, feats: &[Features], c_used: f64) -> anyhow::Result<Vec<f64>> {
-        let n = feats.len();
-        let b = self.pick_batch(n);
-        let exe = self.routers.get(&b).expect("batch executable");
-
-        let mut flat = vec![0.0f32; b * FEAT_DIM];
-        for (i, f) in feats.iter().enumerate() {
-            flat[i * FEAT_DIM..(i + 1) * FEAT_DIM].copy_from_slice(f);
+        /// Smallest compiled batch size that fits `n` rows (falls back to the
+        /// largest and chunks when `n` exceeds it).
+        pub fn pick_batch(&self, n: usize) -> usize {
+            pick_batch_size(n)
         }
-        let feats_lit = xla::Literal::vec1(&flat)
-            .reshape(&[b as i64, FEAT_DIM as i64])
-            .map_err(|e| anyhow::anyhow!("reshape feats: {e:?}"))?;
-        let c = vec![c_used as f32; b];
-        let c_lit = xla::Literal::vec1(&c)
-            .reshape(&[b as i64, 1])
-            .map_err(|e| anyhow::anyhow!("reshape c_used: {e:?}"))?;
 
-        let result = exe
-            .execute::<xla::Literal>(&[feats_lit, c_lit])
-            .map_err(|e| anyhow::anyhow!("router execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("router output sync: {e:?}"))?;
-        let tuple = result.to_tuple1().map_err(|e| anyhow::anyhow!("router tuple: {e:?}"))?;
-        let vals: Vec<f32> =
-            tuple.to_vec().map_err(|e| anyhow::anyhow!("router to_vec: {e:?}"))?;
-        anyhow::ensure!(vals.len() == b, "router output len {} != batch {b}", vals.len());
-        Ok(vals[..n].iter().map(|&v| v as f64).collect())
-    }
+        /// Score a frontier: `u_hat` per feature row, shared `c_used` (Eq. 8).
+        ///
+        /// Rows are padded to the compiled batch; results sliced back. Inputs
+        /// larger than the biggest batch are processed in chunks.
+        pub fn score(&self, feats: &[Features], c_used: f64) -> anyhow::Result<Vec<f64>> {
+            let mut out = Vec::with_capacity(feats.len());
+            let max_b = *ROUTER_BATCHES.last().unwrap();
+            let mut start = 0;
+            while start < feats.len() {
+                let end = (start + max_b).min(feats.len());
+                out.extend(self.score_chunk(&feats[start..end], c_used)?);
+                start = end;
+            }
+            Ok(out)
+        }
 
-    /// Run `chunks` edge-LM forward passes (the simulated edge executor's
-    /// compute). Returns the checksum of the last logits (keeps the work
-    /// observable and un-optimizable).
-    pub fn edge_lm_burn(&self, chunks: usize) -> anyhow::Result<f32> {
-        let Some(exe) = &self.edge_lm else {
-            anyhow::bail!("edge_lm artifact not loaded");
-        };
-        let mut checksum = 0.0f32;
-        for _ in 0..chunks.max(1) {
-            let x = xla::Literal::vec1(&self.edge_lm_input)
-                .reshape(&[EDGE_LM_T as i64, EDGE_LM_D as i64])
-                .map_err(|e| anyhow::anyhow!("edge_lm reshape: {e:?}"))?;
+        fn score_chunk(&self, feats: &[Features], c_used: f64) -> anyhow::Result<Vec<f64>> {
+            let n = feats.len();
+            let b = self.pick_batch(n);
+            let exe = self.routers.get(&b).expect("batch executable");
+
+            let mut flat = vec![0.0f32; b * FEAT_DIM];
+            for (i, f) in feats.iter().enumerate() {
+                flat[i * FEAT_DIM..(i + 1) * FEAT_DIM].copy_from_slice(f);
+            }
+            let feats_lit = xla::Literal::vec1(&flat)
+                .reshape(&[b as i64, FEAT_DIM as i64])
+                .map_err(|e| anyhow::anyhow!("reshape feats: {e:?}"))?;
+            let c = vec![c_used as f32; b];
+            let c_lit = xla::Literal::vec1(&c)
+                .reshape(&[b as i64, 1])
+                .map_err(|e| anyhow::anyhow!("reshape c_used: {e:?}"))?;
+
             let result = exe
-                .execute::<xla::Literal>(&[x])
-                .map_err(|e| anyhow::anyhow!("edge_lm execute: {e:?}"))?[0][0]
+                .execute::<xla::Literal>(&[feats_lit, c_lit])
+                .map_err(|e| anyhow::anyhow!("router execute: {e:?}"))?[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow::anyhow!("edge_lm sync: {e:?}"))?;
-            let logits: Vec<f32> = result
-                .to_tuple1()
-                .map_err(|e| anyhow::anyhow!("edge_lm tuple: {e:?}"))?
-                .to_vec()
-                .map_err(|e| anyhow::anyhow!("edge_lm to_vec: {e:?}"))?;
-            checksum = logits.iter().take(8).sum();
+                .map_err(|e| anyhow::anyhow!("router output sync: {e:?}"))?;
+            let tuple = result.to_tuple1().map_err(|e| anyhow::anyhow!("router tuple: {e:?}"))?;
+            let vals: Vec<f32> =
+                tuple.to_vec().map_err(|e| anyhow::anyhow!("router to_vec: {e:?}"))?;
+            anyhow::ensure!(vals.len() == b, "router output len {} != batch {b}", vals.len());
+            Ok(vals[..n].iter().map(|&v| v as f64).collect())
         }
-        Ok(checksum)
+
+        /// Run `chunks` edge-LM forward passes (the simulated edge executor's
+        /// compute). Returns the checksum of the last logits (keeps the work
+        /// observable and un-optimizable).
+        pub fn edge_lm_burn(&self, chunks: usize) -> anyhow::Result<f32> {
+            let Some(exe) = &self.edge_lm else {
+                anyhow::bail!("edge_lm artifact not loaded");
+            };
+            let mut checksum = 0.0f32;
+            for _ in 0..chunks.max(1) {
+                let x = xla::Literal::vec1(&self.edge_lm_input)
+                    .reshape(&[EDGE_LM_T as i64, EDGE_LM_D as i64])
+                    .map_err(|e| anyhow::anyhow!("edge_lm reshape: {e:?}"))?;
+                let result = exe
+                    .execute::<xla::Literal>(&[x])
+                    .map_err(|e| anyhow::anyhow!("edge_lm execute: {e:?}"))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("edge_lm sync: {e:?}"))?;
+                let logits: Vec<f32> = result
+                    .to_tuple1()
+                    .map_err(|e| anyhow::anyhow!("edge_lm tuple: {e:?}"))?
+                    .to_vec()
+                    .map_err(|e| anyhow::anyhow!("edge_lm to_vec: {e:?}"))?;
+                checksum = logits.iter().take(8).sum();
+            }
+            Ok(checksum)
+        }
+
+        pub fn has_edge_lm(&self) -> bool {
+            self.edge_lm.is_some()
+        }
     }
 
-    pub fn has_edge_lm(&self) -> bool {
-        self.edge_lm.is_some()
+    fn compile_hlo(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} missing - run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
     }
 }
 
-fn compile_hlo(
-    client: &xla::PjRtClient,
-    path: &Path,
-) -> anyhow::Result<xla::PjRtLoadedExecutable> {
-    anyhow::ensure!(
-        path.exists(),
-        "artifact {} missing - run `make artifacts` first",
-        path.display()
-    );
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_actionable_error() {
+        let err = PjrtEngine::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn batch_selection_shared_by_both_backends() {
+        assert_eq!(pick_batch_size(1), 1);
+        assert_eq!(pick_batch_size(5), 8);
+        assert_eq!(pick_batch_size(8), 8);
+        assert_eq!(pick_batch_size(9), 32);
+        assert_eq!(pick_batch_size(100), 32);
+    }
 }

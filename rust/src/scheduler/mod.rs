@@ -14,12 +14,19 @@
 //! The virtual clock measures `C_time` exactly as the paper does: planner
 //! decomposition latency + DAG makespan under these constraints. Wall-clock
 //! coordinator overhead is measured separately (`server` module + benches).
+//!
+//! Cross-query contention lives in [`fleet`]: the same per-group decision
+//! core ([`run_group`]) drives both this single-query scheduler (private
+//! worker pools, query-local budget) and the fleet simulator (shared
+//! pools, tenant-level budgets, admission queueing). `execute_query` is
+//! therefore exactly the fleet's N=1 special case.
 
 pub mod events;
+pub mod fleet;
 
-use crate::budget::BudgetState;
+use crate::budget::{BudgetState, GlobalBudget, TenantPool};
 use crate::dag::TaskDag;
-use crate::embed::FeatureContext;
+use crate::embed::{FeatureContext, Features};
 use crate::models::SimExecutor;
 use crate::router::predictor::UtilityPredictor;
 use crate::router::RouterState;
@@ -87,6 +94,214 @@ impl PartialOrd for Finish {
     }
 }
 
+/// Mutable per-query execution accumulators shared by the single-query
+/// scheduler and the fleet simulator.
+pub(crate) struct QueryExecState {
+    pub out_tokens: Vec<f64>,
+    pub correct: Vec<bool>,
+    pub api_total: f64,
+    pub events: Vec<TraceEvent>,
+    /// Query-local budget (reported in [`QueryExecution`]; also the routing
+    /// budget in single-query mode).
+    pub budget: BudgetState,
+}
+
+impl QueryExecState {
+    pub(crate) fn new(n: usize) -> QueryExecState {
+        QueryExecState {
+            out_tokens: vec![0.0; n],
+            correct: vec![false; n],
+            api_total: 0.0,
+            events: Vec::with_capacity(n),
+            budget: BudgetState::new(),
+        }
+    }
+}
+
+/// Immutable per-query context for group decisions.
+pub(crate) struct GroupCtx<'a> {
+    pub dag: &'a TaskDag,
+    pub latents: &'a [SubtaskLatent],
+    pub query: &'a Query,
+    pub executor: &'a SimExecutor,
+    pub predictor: &'a dyn UtilityPredictor,
+    pub ctx: &'a FeatureContext,
+    pub depths: &'a [usize],
+    pub max_depth: usize,
+}
+
+/// Fleet-mode routing context: the tenant pool whose *aggregated* state the
+/// router sees (fleet-level `C_used(t)` in Eq. 8's sense), the global
+/// dollar ceiling it draws from, and the counter of decisions forced back
+/// to the edge because a pool was exhausted.
+pub(crate) struct FleetRouteCtx<'a> {
+    pub tenant: &'a mut TenantPool,
+    pub global: &'a mut GlobalBudget,
+    pub forced_edge: &'a mut usize,
+}
+
+/// Decide and execute one ready group (Algorithm 1's inner loop).
+///
+/// This is the shared decision core: `execute_query` calls it with
+/// `fleet = None` (routing budget = the query's own `st.budget`, private
+/// worker pools), the fleet simulator with `fleet = Some(..)` (routing
+/// budget = the tenant's aggregated state, shared pools, cap overrides).
+/// The RNG consumption sequence is identical in both modes, which is what
+/// makes the fleet's single-query case reproduce `execute_query` exactly.
+///
+/// `plan_done` is the virtual time planning finished (the origin for the
+/// budget's latency frontier). Executed nodes are appended to `finished`
+/// as `(node, start, finish)`; the caller schedules their completion.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_group(
+    g: &GroupCtx<'_>,
+    now: f64,
+    group: &[usize],
+    plan_done: f64,
+    st: &mut QueryExecState,
+    router: &mut RouterState,
+    rng: &mut Rng,
+    edge_free: &mut [f64],
+    cloud_free: &mut [f64],
+    mut chain_clock: Option<&mut f64>,
+    mut fleet: Option<&mut FleetRouteCtx<'_>>,
+    finished: &mut Vec<(usize, f64, f64)>,
+) {
+    st.budget.advance_latency(now - plan_done);
+    if let Some(f) = fleet.as_deref_mut() {
+        f.tenant.state.advance_latency(now - plan_done);
+    }
+
+    // Score the whole group in one predictor call (batched-frontier path);
+    // decisions still apply sequentially so budget/threshold dynamics are
+    // unchanged.
+    let group_feats: Vec<Features> = group
+        .iter()
+        .map(|&i| g.ctx.features(g.dag, i, &g.latents[i], &g.executor.sp, rng))
+        .collect();
+    let c_used = match fleet.as_deref_mut() {
+        Some(f) => f.tenant.state.c_used,
+        None => st.budget.c_used,
+    };
+    let group_u = g.predictor.predict(&group_feats, c_used);
+
+    for (gi, &node) in group.iter().enumerate() {
+        let u_hat = group_u[gi];
+        let position = g.depths[node] as f64 / g.max_depth as f64;
+        let oracle_ratio = {
+            let dq = g.executor.true_dq(g.query.domain, g.latents, node);
+            // True normalized cost (mean latency form).
+            let in_tok = g.query.query_tokens
+                + g.dag.nodes[node].deps.iter().map(|&d| st.out_tokens[d]).sum::<f64>();
+            let cloud_out = g.latents[node].out_tokens * g.executor.sp.cloud_verbosity;
+            let dl = (g.executor.cloud.latency_mean(in_tok, cloud_out)
+                - g.executor.edge.latency_mean(in_tok, g.latents[node].out_tokens))
+                .max(0.0);
+            let dk = g.executor.cloud.api_cost(in_tok, cloud_out);
+            let c = BudgetState::normalized_cost(&g.executor.sp, dl, dk);
+            Some(dq / (c + g.executor.sp.eps_utility))
+        };
+        let budget_at_decision;
+        let decided_cloud;
+        match fleet.as_deref_mut() {
+            Some(f) => {
+                budget_at_decision = f.tenant.state.clone();
+                decided_cloud = router.decide(
+                    &g.executor.sp,
+                    u_hat,
+                    position,
+                    &f.tenant.state,
+                    oracle_ratio,
+                    rng,
+                );
+            }
+            None => {
+                budget_at_decision = st.budget.clone();
+                decided_cloud =
+                    router.decide(&g.executor.sp, u_hat, position, &st.budget, oracle_ratio, rng);
+            }
+        }
+        // Pool exhaustion (fleet mode only): a tenant or global dollar cap
+        // that has run dry forces the subtask back to the edge.
+        let mut to_cloud = decided_cloud;
+        if to_cloud {
+            if let Some(f) = fleet.as_deref_mut() {
+                if !(f.tenant.can_spend() && f.global.can_spend()) {
+                    to_cloud = false;
+                    *f.forced_edge += 1;
+                }
+            }
+        }
+        let tau = *router.tau_trace.last().unwrap_or(&0.0);
+
+        // --- Execution ----------------------------------------------------
+        let in_tok = g.query.query_tokens
+            + g.dag.nodes[node].deps.iter().map(|&d| st.out_tokens[d]).sum::<f64>();
+        let rec =
+            g.executor.execute_subtask(g.query.domain, &g.latents[node], in_tok, to_cloud, rng);
+        st.out_tokens[node] = rec.out_tokens;
+        st.correct[node] = rec.correct;
+        st.api_total += rec.api_cost;
+
+        let (start, finish_t) = if let Some(clock) = chain_clock.as_deref_mut() {
+            let s = *clock;
+            *clock += rec.latency;
+            (s, *clock)
+        } else if to_cloud {
+            let w = argmin(cloud_free);
+            let s = cloud_free[w].max(now);
+            cloud_free[w] = s + rec.latency;
+            (s, s + rec.latency)
+        } else {
+            let w = argmin(edge_free);
+            let s = edge_free[w].max(now);
+            edge_free[w] = s + rec.latency;
+            (s, s + rec.latency)
+        };
+
+        // --- Budget + bandit feedback -------------------------------------
+        if to_cloud {
+            let edge_equiv = g.executor.edge.latency_mean(in_tok, g.latents[node].out_tokens);
+            let dl = (rec.latency - edge_equiv).max(0.0);
+            st.budget.record_cloud(&g.executor.sp, dl, rec.api_cost);
+            if let Some(f) = fleet.as_deref_mut() {
+                f.tenant.state.record_cloud(&g.executor.sp, dl, rec.api_cost);
+                f.global.record(rec.api_cost);
+            }
+            let realized_dq =
+                g.executor.true_dq(g.query.domain, g.latents, node) + rng.normal_ms(0.0, 0.02);
+            let realized_c = BudgetState::normalized_cost(&g.executor.sp, dl, rec.api_cost);
+            router.observe_offloaded(
+                &g.executor.sp,
+                u_hat,
+                position,
+                &budget_at_decision,
+                realized_dq,
+                realized_c,
+            );
+        } else {
+            st.budget.record_edge();
+            if let Some(f) = fleet.as_deref_mut() {
+                f.tenant.state.record_edge();
+            }
+        }
+
+        st.events.push(TraceEvent {
+            node,
+            position: g.depths[node],
+            cloud: to_cloud,
+            tau,
+            u_hat,
+            start,
+            finish: finish_t,
+            api_cost: rec.api_cost,
+            correct: rec.correct,
+            in_tokens: rec.in_tokens,
+        });
+        finished.push((node, start, finish_t));
+    }
+}
+
 /// Execute one decomposed query under the routing policy.
 ///
 /// `latents` must align with `dag.nodes`. The predictor scores features
@@ -112,13 +327,9 @@ pub fn execute_query(
     let max_depth = depths.iter().copied().max().unwrap_or(0).max(1);
     let children = dag.children();
 
-    let mut budget = BudgetState::new();
+    let mut st = QueryExecState::new(n);
     let mut indeg: Vec<usize> = dag.in_degrees();
     let mut done = vec![false; n];
-    let mut correct = vec![false; n];
-    let mut out_tokens = vec![0.0f64; n];
-    let mut api_total = 0.0;
-    let mut events: Vec<TraceEvent> = Vec::with_capacity(n);
 
     // Worker availability.
     let mut edge_free: Vec<f64> = vec![planning_latency; cfg.edge_workers.max(1)];
@@ -138,6 +349,18 @@ pub fn execute_query(
     let mut chain_cursor = 0usize;
     let mut chain_clock = planning_latency;
 
+    let gctx = GroupCtx {
+        dag,
+        latents,
+        query,
+        executor,
+        predictor,
+        ctx: &ctx,
+        depths: &depths,
+        max_depth,
+    };
+
+    let mut finished: Vec<(usize, f64, f64)> = Vec::new();
     let mut completed = 0usize;
     while completed < n {
         // Pick the next decision point: a *group* of nodes ready at the
@@ -177,100 +400,31 @@ pub fn execute_query(
             }
         };
 
-        budget.advance_latency(now - planning_latency);
-
-        // --- Routing decisions (Algorithm 1's inner loop) -----------------
-        let group_feats: Vec<_> = group
-            .iter()
-            .map(|&i| ctx.features(dag, i, &latents[i], &executor.sp, rng))
-            .collect();
-        let group_u = predictor.predict(&group_feats, budget.c_used);
-
-        for (gi, &node) in group.iter().enumerate() {
-        let u_hat = group_u[gi];
-        let position = depths[node] as f64 / max_depth as f64;
-        let oracle_ratio = {
-            let dq = executor.true_dq(query.domain, latents, node);
-            // True normalized cost (mean latency form).
-            let in_tok = query.query_tokens
-                + dag.nodes[node].deps.iter().map(|&d| out_tokens[d]).sum::<f64>();
-            let cloud_out = latents[node].out_tokens * executor.sp.cloud_verbosity;
-            let dl = (executor.cloud.latency_mean(in_tok, cloud_out)
-                - executor.edge.latency_mean(in_tok, latents[node].out_tokens))
-                .max(0.0);
-            let dk = executor.cloud.api_cost(in_tok, cloud_out);
-            let c = BudgetState::normalized_cost(&executor.sp, dl, dk);
-            Some(dq / (c + executor.sp.eps_utility))
-        };
-        let budget_at_decision = budget.clone();
-        let to_cloud =
-            router.decide(&executor.sp, u_hat, position, &budget, oracle_ratio, rng);
-        let tau = *router.tau_trace.last().unwrap_or(&0.0);
-
-        // --- Execution ----------------------------------------------------
-        let in_tok = query.query_tokens
-            + dag.nodes[node].deps.iter().map(|&d| out_tokens[d]).sum::<f64>();
-        let rec = executor.execute_subtask(query.domain, &latents[node], in_tok, to_cloud, rng);
-        out_tokens[node] = rec.out_tokens;
-        correct[node] = rec.correct;
-        api_total += rec.api_cost;
-
-        let (start, finish_t) = if cfg.chain_mode {
-            let s = chain_clock;
-            chain_clock += rec.latency;
-            (s, chain_clock)
-        } else if to_cloud {
-            let w = argmin(&cloud_free);
-            let s = cloud_free[w].max(now);
-            cloud_free[w] = s + rec.latency;
-            (s, s + rec.latency)
-        } else {
-            let w = argmin(&edge_free);
-            let s = edge_free[w].max(now);
-            edge_free[w] = s + rec.latency;
-            (s, s + rec.latency)
-        };
-
-        // --- Budget + bandit feedback -------------------------------------
-        if to_cloud {
-            let edge_equiv = executor.edge.latency_mean(in_tok, latents[node].out_tokens);
-            let dl = (rec.latency - edge_equiv).max(0.0);
-            budget.record_cloud(&executor.sp, dl, rec.api_cost);
-            let realized_dq = executor.true_dq(query.domain, latents, node)
-                + rng.normal_ms(0.0, 0.02);
-            let realized_c = BudgetState::normalized_cost(&executor.sp, dl, rec.api_cost);
-            router.observe_offloaded(
-                &executor.sp,
-                u_hat,
-                position,
-                &budget_at_decision,
-                realized_dq,
-                realized_c,
-            );
-        } else {
-            budget.record_edge();
+        // Decide + execute the group through the shared core (also used by
+        // the fleet simulator; `fleet = None` keeps query-local routing).
+        finished.clear();
+        run_group(
+            &gctx,
+            now,
+            &group,
+            planning_latency,
+            &mut st,
+            router,
+            rng,
+            &mut edge_free,
+            &mut cloud_free,
+            if cfg.chain_mode { Some(&mut chain_clock) } else { None },
+            None,
+            &mut finished,
+        );
+        for &(node, _start, finish_t) in &finished {
+            if cfg.chain_mode {
+                done[node] = true;
+                completed += 1;
+            } else {
+                pending.push(Finish { time: finish_t, node });
+            }
         }
-
-        events.push(TraceEvent {
-            node,
-            position: depths[node],
-            cloud: to_cloud,
-            tau,
-            u_hat,
-            start,
-            finish: finish_t,
-            api_cost: rec.api_cost,
-            correct: rec.correct,
-            in_tokens: rec.in_tokens,
-        });
-
-        if cfg.chain_mode {
-            done[node] = true;
-            completed += 1;
-        } else {
-            pending.push(Finish { time: finish_t, node });
-        }
-        } // end group loop
 
         if !cfg.chain_mode {
             // Drain any pending nodes that finish before the next ready one
@@ -293,18 +447,18 @@ pub fn execute_query(
         }
     }
 
-    let makespan = events.iter().map(|e| e.finish).fold(planning_latency, f64::max);
-    budget.advance_latency(makespan - planning_latency);
-    let final_correct = executor.final_answer_correct(latents, &correct, rng);
+    let makespan = st.events.iter().map(|e| e.finish).fold(planning_latency, f64::max);
+    st.budget.advance_latency(makespan - planning_latency);
+    let final_correct = executor.final_answer_correct(latents, &st.correct, rng);
 
     QueryExecution {
         correct: final_correct,
         latency: makespan,
-        api_cost: api_total,
-        offload_rate: budget.offload_rate(),
+        api_cost: st.api_total,
+        offload_rate: st.budget.offload_rate(),
         n_subtasks: n,
-        events,
-        budget,
+        events: st.events,
+        budget: st.budget,
     }
 }
 

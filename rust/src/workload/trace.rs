@@ -1,13 +1,74 @@
-//! Query-trace record / replay (JSONL).
+//! Query-trace record / replay (JSONL) and open-loop arrival processes.
 //!
 //! Serving systems are evaluated on traces; this module serializes
 //! workloads and execution outcomes so runs can be archived, diffed, and
 //! replayed bit-exactly (`hybridflow serve --trace-out` / examples). The
 //! trace format is line-delimited JSON, one query per line.
+//!
+//! [`ArrivalProcess`] generates the arrival timestamps the fleet simulator
+//! consumes: Poisson (open-loop, the serving-paper standard), periodic, or
+//! a recorded offset trace.
 
 use crate::metrics::QueryOutcome;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::workload::{Benchmark, Query};
+
+/// Open-loop arrival-time generator for fleet workloads. All variants are
+/// deterministic given `(self, n, seed)`.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals at `rate` queries per virtual second (i.i.d.
+    /// exponential inter-arrival gaps).
+    Poisson { rate: f64 },
+    /// Fixed inter-arrival `gap` seconds (arrival i at `i * gap`).
+    Periodic { gap: f64 },
+    /// Explicit absolute arrival offsets (sorted ascending before use, so
+    /// the nondecreasing contract holds for any input order). When fewer
+    /// than `n` offsets are given, the tail continues past the last offset
+    /// at the trace's mean gap (1.0s for traces shorter than two entries).
+    Trace(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    /// Sample `n` nondecreasing arrival times starting near 0.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                assert!(*rate > 0.0, "poisson rate must be positive");
+                let mut rng = Rng::new(seed ^ 0xA11C_0FFE_E5C0_FFEE);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exponential(*rate);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Periodic { gap } => {
+                assert!(*gap >= 0.0, "periodic gap must be non-negative");
+                (0..n).map(|i| i as f64 * gap).collect()
+            }
+            ArrivalProcess::Trace(times) => {
+                let mut sorted = times.clone();
+                sorted.sort_by(f64::total_cmp);
+                let mean_gap = if sorted.len() >= 2 {
+                    (sorted[sorted.len() - 1] - sorted[0]) / (sorted.len() - 1) as f64
+                } else {
+                    1.0
+                };
+                let last = sorted.last().copied().unwrap_or(0.0);
+                let mut out: Vec<f64> = sorted.into_iter().take(n).collect();
+                let mut t = last;
+                while out.len() < n {
+                    t += mean_gap;
+                    out.push(t);
+                }
+                out
+            }
+        }
+    }
+}
 
 /// One recorded query + outcome.
 #[derive(Debug, Clone)]
@@ -193,5 +254,39 @@ mod tests {
     fn bad_lines_error_with_location() {
         let err = read_jsonl("{\"id\": 1}\nnot json\n").unwrap_err();
         assert!(err.to_string().contains("line 1") || err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn poisson_arrivals_deterministic_and_calibrated() {
+        let p = ArrivalProcess::Poisson { rate: 2.0 };
+        let a = p.sample(4000, 7);
+        let b = p.sample(4000, 7);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // Mean inter-arrival gap ~ 1/rate.
+        let mean_gap = a[a.len() - 1] / a.len() as f64;
+        assert!((mean_gap - 0.5).abs() < 0.05, "mean gap {mean_gap}");
+        let c = p.sample(100, 8);
+        assert_ne!(a[..100], c[..]);
+    }
+
+    #[test]
+    fn periodic_arrivals_exact() {
+        let a = ArrivalProcess::Periodic { gap: 1.5 }.sample(4, 0);
+        assert_eq!(a, vec![0.0, 1.5, 3.0, 4.5]);
+    }
+
+    #[test]
+    fn trace_arrivals_extend_past_end() {
+        let a = ArrivalProcess::Trace(vec![0.0, 1.0, 4.0]).sample(5, 0);
+        assert_eq!(a.len(), 5);
+        assert_eq!(&a[..3], &[0.0, 1.0, 4.0]);
+        // Mean gap of the recorded trace is 2.0.
+        assert!((a[3] - 6.0).abs() < 1e-12 && (a[4] - 8.0).abs() < 1e-12);
+        let empty = ArrivalProcess::Trace(vec![]).sample(3, 0);
+        assert_eq!(empty, vec![1.0, 2.0, 3.0]);
+        // Unsorted input is sorted first, keeping the output nondecreasing.
+        let unsorted = ArrivalProcess::Trace(vec![10.0, 0.0]).sample(3, 0);
+        assert_eq!(unsorted, vec![0.0, 10.0, 20.0]);
     }
 }

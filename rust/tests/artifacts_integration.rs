@@ -4,6 +4,13 @@
 //! Covers: python<->rust simparams drift, PJRT round trip, PJRT-vs-mirror
 //! numeric parity, batched scoring consistency, edge-LM burn, and the full
 //! pipeline + serving loop with the PJRT predictor on the request path.
+//!
+//! Gating: when `artifacts/*.hlo.txt` are absent these tests SKIP (with a
+//! note) instead of failing hard, so a fresh checkout passes tier-1
+//! without the python build step. Set `HYBRIDFLOW_ARTIFACTS=1` to turn a
+//! missing artifact set into a hard failure (CI that runs `make artifacts`
+//! first). PJRT-dependent tests additionally skip unless the crate was
+//! built with `--features pjrt`.
 
 use hybridflow::config::simparams::{verify_zoo_against_json, SimParams, FEAT_DIM};
 use hybridflow::models::SimExecutor;
@@ -18,14 +25,40 @@ use hybridflow::workload::{generate_queries, Benchmark};
 use std::path::PathBuf;
 use std::sync::Arc;
 
-fn artifacts() -> PathBuf {
+/// Locate artifacts, or `None` to skip the calling test. With
+/// `HYBRIDFLOW_ARTIFACTS=1` a missing artifact set fails instead.
+fn artifacts() -> Option<PathBuf> {
     let dir = hybridflow::config::default_artifacts_dir();
+    if dir.join("router.hlo.txt").exists() {
+        return Some(dir);
+    }
+    let required = std::env::var("HYBRIDFLOW_ARTIFACTS")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false);
     assert!(
-        dir.join("router.hlo.txt").exists(),
-        "artifacts missing - run `make artifacts` first (dir: {})",
+        !required,
+        "HYBRIDFLOW_ARTIFACTS is set but artifacts are missing - run `make artifacts` \
+         first (dir: {})",
         dir.display()
     );
-    dir
+    eprintln!(
+        "[artifacts_integration] SKIP: artifacts absent (dir: {}); run `make artifacts` \
+         or set HYBRIDFLOW_ARTIFACTS=1 to require them",
+        dir.display()
+    );
+    None
+}
+
+/// PJRT tests additionally need the `pjrt` build feature (the default
+/// offline build ships a stub engine).
+fn pjrt_artifacts() -> Option<PathBuf> {
+    let dir = artifacts()?;
+    if cfg!(feature = "pjrt") {
+        Some(dir)
+    } else {
+        eprintln!("[artifacts_integration] SKIP: built without `--features pjrt`");
+        None
+    }
 }
 
 fn rand_feats(n: usize, seed: u64) -> Vec<[f32; FEAT_DIM]> {
@@ -43,7 +76,7 @@ fn rand_feats(n: usize, seed: u64) -> Vec<[f32; FEAT_DIM]> {
 
 #[test]
 fn simparams_json_matches_rust_defaults() {
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let sp = SimParams::load(&dir).expect("simparams drift between python and rust mirrors");
     assert_eq!(sp, SimParams::default());
     let j = Json::parse_file(&dir.join("simparams.json")).unwrap();
@@ -52,7 +85,7 @@ fn simparams_json_matches_rust_defaults() {
 
 #[test]
 fn manifest_describes_all_artifacts() {
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let manifest = Json::parse_file(&dir.join("manifest.json")).unwrap();
     let arts = manifest.get("artifacts").and_then(Json::as_obj).unwrap();
     for name in ["router.hlo.txt", "router_b1.hlo.txt", "router_b8.hlo.txt",
@@ -73,7 +106,7 @@ fn manifest_describes_all_artifacts() {
 fn hlo_text_has_full_constants() {
     // Regression guard for the print_large_constants bug: the router HLO
     // must not contain elided constants, which the old parser reads as 0s.
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     for name in ["router_b1.hlo.txt", "edge_lm.hlo.txt"] {
         let text = std::fs::read_to_string(dir.join(name)).unwrap();
         assert!(
@@ -85,7 +118,7 @@ fn hlo_text_has_full_constants() {
 
 #[test]
 fn pjrt_matches_mirror_numerically() {
-    let dir = artifacts();
+    let Some(dir) = pjrt_artifacts() else { return };
     let svc = RouterService::start(&dir).expect("PJRT start");
     let mirror = MirrorPredictor::from_meta_file(&dir.join("router_meta.json")).unwrap();
     for (n, seed) in [(1usize, 1u64), (5, 2), (8, 3), (20, 4), (32, 5), (50, 6)] {
@@ -108,7 +141,7 @@ fn pjrt_matches_mirror_numerically() {
 #[test]
 fn pjrt_batching_is_consistent() {
     // Padding/batch selection must not change per-row results.
-    let dir = artifacts();
+    let Some(dir) = pjrt_artifacts() else { return };
     let svc = RouterService::start(&dir).unwrap();
     let feats = rand_feats(32, 7);
     let full = svc.score(&feats, 0.3).unwrap();
@@ -120,7 +153,7 @@ fn pjrt_batching_is_consistent() {
 
 #[test]
 fn edge_lm_burn_runs() {
-    let dir = artifacts();
+    let Some(dir) = pjrt_artifacts() else { return };
     let svc = RouterService::start(&dir).unwrap();
     assert!(svc.has_edge_lm());
     let c1 = svc.edge_burn(1).unwrap();
@@ -132,7 +165,7 @@ fn edge_lm_burn_runs() {
 
 #[test]
 fn full_pipeline_over_pjrt_predictor() {
-    let dir = artifacts();
+    let Some(dir) = pjrt_artifacts() else { return };
     let svc = Arc::new(RouterService::start(&dir).unwrap());
     let sp = SimParams::default();
     let pipeline = HybridFlowPipeline::with_predictor(
@@ -156,7 +189,7 @@ fn full_pipeline_over_pjrt_predictor() {
 
 #[test]
 fn concurrent_serving_over_pjrt() {
-    let dir = artifacts();
+    let Some(dir) = pjrt_artifacts() else { return };
     let svc = Arc::new(RouterService::start(&dir).unwrap());
     let sp = SimParams::default();
     let pipeline = Arc::new(HybridFlowPipeline::with_predictor(
@@ -175,7 +208,7 @@ fn concurrent_serving_over_pjrt() {
 #[test]
 fn mirror_and_pjrt_agree_on_real_pipeline_features() {
     // Parity on *actual* packed features (not just random vectors).
-    let dir = artifacts();
+    let Some(dir) = pjrt_artifacts() else { return };
     let svc = RouterService::start(&dir).unwrap();
     let mirror = MirrorPredictor::from_meta_file(&dir.join("router_meta.json")).unwrap();
     let sp = SimParams::default();

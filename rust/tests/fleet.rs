@@ -1,0 +1,342 @@
+//! Fleet-simulator integration suite:
+//!
+//! * **equivalence** — a fleet with one tenant, one query, and unlimited
+//!   pools reproduces `run_query_traced` *exactly* (same RNG stream, same
+//!   event order), across policies, schedules, and seeds;
+//! * **golden trace** — a fixed-seed 3-tenant workload serializes to a
+//!   byte-stable event trace pinned by a checked-in golden file;
+//! * **properties** (`testing::forall`) — virtual-clock monotonicity,
+//!   shared-pool occupancy bounds, and tenant-spend caps hold across
+//!   randomized fleets.
+
+use hybridflow::budget::TenantPool;
+use hybridflow::config::simparams::SimParams;
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::SyntheticPlanner;
+use hybridflow::router::{MirrorPredictor, RoutePolicy};
+use hybridflow::scheduler::fleet::{run_fleet, FleetArrival, FleetConfig, FleetReport};
+use hybridflow::scheduler::ScheduleConfig;
+use hybridflow::testing::forall;
+use hybridflow::util::rng::Rng;
+use hybridflow::workload::{generate_queries, Benchmark};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn pipeline_with(policy: RoutePolicy, schedule: ScheduleConfig) -> HybridFlowPipeline {
+    let sp = SimParams::default();
+    let mut cfg = PipelineConfig::paper_default(&sp);
+    cfg.policy = policy;
+    cfg.schedule = schedule;
+    HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        Arc::new(MirrorPredictor::synthetic_for_tests()),
+        cfg,
+    )
+}
+
+fn single_tenant() -> Vec<TenantPool> {
+    vec![TenantPool::unlimited("solo")]
+}
+
+/// The per-query RNG seed formula used by `run_fleet` for job index `i`.
+fn job_seed(seed: u64, i: u64) -> u64 {
+    seed ^ i.wrapping_mul(0x9E3779B97f4A7C15)
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: fleet(N=1) == run_query.
+// ---------------------------------------------------------------------------
+
+fn assert_exec_equal(
+    fleet: &hybridflow::scheduler::QueryExecution,
+    solo: &hybridflow::scheduler::QueryExecution,
+    label: &str,
+) {
+    assert_eq!(fleet.correct, solo.correct, "{label}: correct");
+    assert_eq!(fleet.latency, solo.latency, "{label}: latency");
+    assert_eq!(fleet.api_cost, solo.api_cost, "{label}: api_cost");
+    assert_eq!(fleet.offload_rate, solo.offload_rate, "{label}: offload_rate");
+    assert_eq!(fleet.n_subtasks, solo.n_subtasks, "{label}: n_subtasks");
+    assert_eq!(fleet.budget.c_used, solo.budget.c_used, "{label}: c_used");
+    assert_eq!(fleet.budget.k_used, solo.budget.k_used, "{label}: k_used");
+    assert_eq!(fleet.budget.l_used, solo.budget.l_used, "{label}: l_used");
+    assert_eq!(fleet.events.len(), solo.events.len(), "{label}: event count");
+    for (i, (a, b)) in fleet.events.iter().zip(&solo.events).enumerate() {
+        assert_eq!(a.node, b.node, "{label}: event {i} node");
+        assert_eq!(a.cloud, b.cloud, "{label}: event {i} side");
+        assert_eq!(a.tau, b.tau, "{label}: event {i} tau");
+        assert_eq!(a.u_hat, b.u_hat, "{label}: event {i} u_hat");
+        assert_eq!(a.start, b.start, "{label}: event {i} start");
+        assert_eq!(a.finish, b.finish, "{label}: event {i} finish");
+        assert_eq!(a.api_cost, b.api_cost, "{label}: event {i} api_cost");
+        assert_eq!(a.in_tokens, b.in_tokens, "{label}: event {i} in_tokens");
+    }
+}
+
+#[test]
+fn fleet_single_query_reproduces_run_query_exactly() {
+    let sp = SimParams::default();
+    let policies: Vec<(&str, RoutePolicy)> = vec![
+        ("hybridflow", RoutePolicy::hybridflow(&sp)),
+        ("eq27", RoutePolicy::hybridflow_eq27(&sp)),
+        ("calibrated", RoutePolicy::hybridflow_calibrated(&sp)),
+        ("all_cloud", RoutePolicy::AllCloud),
+        ("all_edge", RoutePolicy::AllEdge),
+        ("random", RoutePolicy::Random(0.5)),
+        ("fixed", RoutePolicy::FixedThreshold(0.4)),
+        ("oracle", RoutePolicy::Oracle),
+    ];
+    let schedules: Vec<(&str, ScheduleConfig)> = vec![
+        ("default", ScheduleConfig::default()),
+        ("chain", ScheduleConfig { chain_mode: true, ..Default::default() }),
+        ("unbatched", ScheduleConfig { batch_frontier: false, ..Default::default() }),
+        ("narrow", ScheduleConfig { edge_workers: 2, cloud_workers: 2, ..Default::default() }),
+    ];
+    for (pname, policy) in &policies {
+        for (sname, schedule) in &schedules {
+            for seed in [3u64, 17, 404] {
+                let label = format!("{pname}/{sname}/seed{seed}");
+                let pipeline = pipeline_with(policy.clone(), schedule.clone());
+                let query = generate_queries(Benchmark::Gpqa, 1, seed).pop().unwrap();
+
+                // Reference: the per-query scheduler, on the exact RNG the
+                // fleet will fork for job 0.
+                let mut rng = Rng::new(job_seed(seed, 0));
+                let (solo, _) = pipeline.run_query_traced(&query, &mut rng);
+
+                let report = run_fleet(
+                    &pipeline,
+                    &FleetConfig::default(),
+                    single_tenant(),
+                    vec![FleetArrival { time: 0.0, tenant: 0, query }],
+                    seed,
+                );
+                assert_eq!(report.results.len(), 1);
+                let r = &report.results[0];
+                assert_eq!(r.forced_edge, 0, "{label}: unlimited pools never force edge");
+                assert_exec_equal(&r.exec, &solo, &label);
+                // Tenant aggregate == the single query's budget.
+                assert_eq!(report.tenants[0].state.c_used, solo.budget.c_used, "{label}");
+                assert_eq!(report.tenants[0].state.k_used, solo.budget.k_used, "{label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn widely_spaced_first_query_unaffected_by_successors() {
+    // With a huge arrival gap the first query runs uncontended, so it must
+    // still match the per-query scheduler bit-for-bit even though a second
+    // query exists in the fleet.
+    let sp = SimParams::default();
+    let pipeline = pipeline_with(RoutePolicy::hybridflow(&sp), ScheduleConfig::default());
+    let seed = 29u64;
+    let queries = generate_queries(Benchmark::MmluPro, 2, seed);
+
+    let mut rng = Rng::new(job_seed(seed, 0));
+    let (solo, _) = pipeline.run_query_traced(&queries[0], &mut rng);
+
+    let arrivals = vec![
+        FleetArrival { time: 0.0, tenant: 0, query: queries[0].clone() },
+        FleetArrival { time: 1e9, tenant: 0, query: queries[1].clone() },
+    ];
+    let report =
+        run_fleet(&pipeline, &FleetConfig::default(), single_tenant(), arrivals, seed);
+    assert_exec_equal(&report.results[0].exec, &solo, "first-of-two");
+    // The second query completed too (no deadlock across the gap).
+    assert!(report.results[1].completed_at > 1e9);
+}
+
+// ---------------------------------------------------------------------------
+// Golden trace.
+// ---------------------------------------------------------------------------
+
+fn golden_workload() -> FleetReport {
+    let sp = SimParams::default();
+    let mut schedule = ScheduleConfig::default();
+    schedule.edge_workers = 4;
+    schedule.cloud_workers = 8;
+    let pipeline = pipeline_with(RoutePolicy::hybridflow(&sp), schedule);
+    let tenants = vec![
+        TenantPool::unlimited("anchor"),
+        TenantPool::new("metered", 0.02),
+        TenantPool::new("capped", 0.001),
+    ];
+    let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, 12, 1234)
+        .into_iter()
+        .enumerate()
+        .map(|(i, query)| FleetArrival { time: i as f64 * 1.5, tenant: i % 3, query })
+        .collect();
+    run_fleet(&pipeline, &FleetConfig::default(), tenants, arrivals, 1234)
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/fleet_trace.txt")
+}
+
+/// Byte-stable golden trace for a fixed-seed 3-tenant fleet.
+///
+/// Regenerate (after an intentional engine change) with:
+/// `rm rust/tests/golden/fleet_trace.txt && cargo test --test fleet golden_trace`
+/// — the test bootstraps the file when absent (verifying two independent
+/// runs agree first) and strictly compares when present.
+#[test]
+fn golden_trace_three_tenant_fleet() {
+    let first = golden_workload().trace_text();
+    let second = golden_workload().trace_text();
+    assert_eq!(first, second, "fleet trace is not deterministic within-process");
+    assert!(first.lines().count() > 50, "golden workload too small to pin behavior");
+
+    let path = golden_path();
+    if path.exists() {
+        let pinned = std::fs::read_to_string(&path).expect("read golden file");
+        assert_eq!(
+            first, pinned,
+            "fleet trace diverged from {} — if the change is intentional, delete the file \
+             and rerun this test to regenerate",
+            path.display()
+        );
+    } else {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).expect("create golden dir");
+        }
+        std::fs::write(&path, &first).expect("write golden file");
+        eprintln!("[golden_trace] bootstrapped {}", path.display());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Properties.
+// ---------------------------------------------------------------------------
+
+/// Max concurrent intervals, treating the end as exclusive (a worker freed
+/// at `t` may start a new task at `t`).
+fn max_overlap(mut intervals: Vec<(f64, f64)>) -> usize {
+    let mut points: Vec<(f64, i32)> = Vec::with_capacity(intervals.len() * 2);
+    for (s, f) in intervals.drain(..) {
+        points.push((s, 1));
+        points.push((f, -1));
+    }
+    // At equal times, process releases before acquires.
+    points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut cur = 0i32;
+    let mut best = 0i32;
+    for (_, d) in points {
+        cur += d;
+        best = best.max(cur);
+    }
+    best.max(0) as usize
+}
+
+#[test]
+fn prop_fleet_pool_occupancy_and_clock() {
+    let sp = SimParams::default();
+    forall("edge/cloud occupancy within pool bounds; clock monotone", 25, move |g| {
+        let edge_workers = g.usize_in(1..4);
+        let cloud_workers = g.usize_in(1..5);
+        let n = g.usize_in(2..9);
+        let gap = g.f64_in(0.0..3.0);
+        let policy = match g.usize_in(0..3) {
+            0 => RoutePolicy::hybridflow(&sp),
+            1 => RoutePolicy::Random(g.unit_f64()),
+            _ => RoutePolicy::AllCloud,
+        };
+        let schedule = ScheduleConfig {
+            edge_workers,
+            cloud_workers,
+            batch_frontier: g.bool(),
+            chain_mode: false,
+        };
+        let pipeline = pipeline_with(policy, schedule);
+        let seed = g.rng.next_u64() % 10_000;
+        let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, n, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(i, query)| FleetArrival { time: i as f64 * gap, tenant: 0, query })
+            .collect();
+        let cfg = FleetConfig { record_trace: false, ..Default::default() };
+        let report = run_fleet(&pipeline, &cfg, single_tenant(), arrivals, seed);
+
+        let mut edge_iv = Vec::new();
+        let mut cloud_iv = Vec::new();
+        for r in &report.results {
+            for e in &r.exec.events {
+                if e.cloud {
+                    cloud_iv.push((e.start, e.finish));
+                } else {
+                    edge_iv.push((e.start, e.finish));
+                }
+            }
+        }
+        report.clock_monotone
+            && max_overlap(edge_iv) <= edge_workers
+            && max_overlap(cloud_iv) <= cloud_workers
+            && report.results.iter().all(|r| {
+                r.admitted >= r.arrival - 1e-9 && r.completed_at >= r.plan_done - 1e-9
+            })
+    });
+}
+
+#[test]
+fn prop_tenant_spend_never_exceeds_pool_by_more_than_one_call() {
+    forall("tenant spend bounded by cap + one call", 25, move |g| {
+        let cap_a = g.f64_in(0.0..0.01);
+        let cap_b = g.f64_in(0.0..0.002);
+        let n = g.usize_in(4..10);
+        // All-cloud pressure maximizes spend against the caps.
+        let pipeline = pipeline_with(RoutePolicy::AllCloud, ScheduleConfig::default());
+        let seed = g.rng.next_u64() % 10_000;
+        let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, n, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(i, query)| FleetArrival { time: i as f64 * 2.0, tenant: i % 2, query })
+            .collect();
+        let tenants = vec![TenantPool::new("a", cap_a), TenantPool::new("b", cap_b)];
+        let cfg = FleetConfig { record_trace: false, ..Default::default() };
+        let report = run_fleet(&pipeline, &cfg, tenants, arrivals, seed);
+
+        let max_call = report
+            .results
+            .iter()
+            .flat_map(|r| r.exec.events.iter())
+            .map(|e| e.api_cost)
+            .fold(0.0f64, f64::max);
+        let tenant_sum: f64 = report.tenants.iter().map(|t| t.state.k_used).sum();
+        report
+            .tenants
+            .iter()
+            .all(|t| t.state.k_used <= t.k_cap + max_call + 1e-12)
+            && (report.global.k_spent - tenant_sum).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_trace_times_nondecreasing() {
+    let sp = SimParams::default();
+    forall("recorded trace is chronologically ordered", 15, move |g| {
+        let n = g.usize_in(2..7);
+        let pipeline =
+            pipeline_with(RoutePolicy::hybridflow(&sp), ScheduleConfig::default());
+        let seed = g.rng.next_u64() % 10_000;
+        let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::LiveBench, n, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(i, query)| {
+                FleetArrival { time: g.f64_in(0.0..5.0) + i as f64 * 0.5, tenant: 0, query }
+            })
+            .collect();
+        let report =
+            run_fleet(&pipeline, &FleetConfig::default(), single_tenant(), arrivals, seed);
+        let times: Vec<f64> = report
+            .trace
+            .iter()
+            .map(|line| {
+                let t = line.strip_prefix("t=").and_then(|r| r.split(' ').next()).unwrap();
+                t.parse::<f64>().unwrap()
+            })
+            .collect();
+        !times.is_empty() && times.windows(2).all(|w| w[0] <= w[1] + 1e-9)
+    });
+}

@@ -1,0 +1,124 @@
+//! Vendored minimal subset of the `anyhow` error-handling API.
+//!
+//! The build environment has no registry access, so the crate is vendored
+//! in-tree. Only the surface the repository actually uses is provided:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//! `Error` intentionally does **not** implement `std::error::Error` — just
+//! like the real crate — so the blanket `From<E: std::error::Error>`
+//! conversion used by `?` stays coherent.
+
+use std::fmt;
+
+/// A string-backed error value. The source chain of the converted error is
+/// flattened into the message at conversion time.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut msg = err.to_string();
+        let mut source = err.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    fn fails(flag: bool) -> super::Result<u32> {
+        super::ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    fn bails() -> super::Result<()> {
+        super::bail!("always fails with code {}", 3);
+    }
+
+    #[test]
+    fn display_and_macros() {
+        let e = super::anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        assert_eq!(fails(true).unwrap(), 7);
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+        assert!(bails().unwrap_err().to_string().contains("code 3"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> super::Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}
