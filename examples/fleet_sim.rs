@@ -53,8 +53,8 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = FleetConfig {
         admission_limit: admission,
-        global_k_cap: f64::INFINITY,
         record_trace: true,
+        ..Default::default()
     };
     let tenants = || -> Vec<TenantPool> {
         (0..n_tenants).map(|i| TenantPool::new(&format!("tenant-{i}"), tenant_cap)).collect()

@@ -8,30 +8,30 @@
 //! CoT its accuracy lift over Direct at higher token cost.
 
 use super::{sample_chain_len, Method};
+use crate::engine::Backend;
 use crate::metrics::QueryOutcome;
-use crate::models::SimExecutor;
 use crate::util::rng::Rng;
 use crate::workload::{direct_latent, Query, SubtaskLatent};
 
 pub struct Cot {
-    pub executor: SimExecutor,
+    pub executor: Box<dyn Backend>,
     pub cloud: bool,
 }
 
 impl Cot {
-    pub fn new(executor: SimExecutor, cloud: bool) -> Cot {
-        Cot { executor, cloud }
+    pub fn new(executor: impl Backend + 'static, cloud: bool) -> Cot {
+        Cot { executor: Box::new(executor), cloud }
     }
 
     /// Latent chain accuracy draw on a single model.
     pub(crate) fn chain_correct(
-        executor: &SimExecutor,
+        executor: &dyn Backend,
         query: &Query,
         cloud: bool,
         n: usize,
         rng: &mut Rng,
     ) -> bool {
-        let sp = &executor.sp;
+        let sp = executor.sp();
         let profile = executor.profile(cloud);
         let mut latents = Vec::with_capacity(n);
         let mut success = Vec::with_capacity(n);
@@ -62,7 +62,7 @@ impl Method for Cot {
 
     fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
         // Cost/latency: one call with CoT-inflated output tokens.
-        let latent = direct_latent(query, &self.executor.sp, self.cloud, true, rng);
+        let latent = direct_latent(query, self.executor.sp(), self.cloud, true, rng);
         let rec = self.executor.execute_direct(
             query.domain,
             &latent,
@@ -73,7 +73,7 @@ impl Method for Cot {
         // Accuracy: the latent chain aggregation (overrides the single
         // Bernoulli in `rec`).
         let n = sample_chain_len(rng);
-        let correct = Self::chain_correct(&self.executor, query, self.cloud, n, rng);
+        let correct = Self::chain_correct(self.executor.as_ref(), query, self.cloud, n, rng);
         QueryOutcome {
             correct,
             latency: rec.latency,
@@ -87,6 +87,7 @@ impl Method for Cot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::SimExecutor;
     use crate::workload::{generate_queries, Benchmark};
 
     fn acc(m: &dyn Method, bench: Benchmark, n: usize, seed: u64) -> f64 {

@@ -2,19 +2,19 @@
 //! The shaded reference rows of Tables 1–2.
 
 use super::Method;
+use crate::engine::Backend;
 use crate::metrics::QueryOutcome;
-use crate::models::SimExecutor;
 use crate::util::rng::Rng;
 use crate::workload::{direct_latent, Query};
 
 pub struct Direct {
-    pub executor: SimExecutor,
+    pub executor: Box<dyn Backend>,
     pub cloud: bool,
 }
 
 impl Direct {
-    pub fn new(executor: SimExecutor, cloud: bool) -> Direct {
-        Direct { executor, cloud }
+    pub fn new(executor: impl Backend + 'static, cloud: bool) -> Direct {
+        Direct { executor: Box::new(executor), cloud }
     }
 }
 
@@ -28,7 +28,7 @@ impl Method for Direct {
     }
 
     fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
-        let latent = direct_latent(query, &self.executor.sp, self.cloud, false, rng);
+        let latent = direct_latent(query, self.executor.sp(), self.cloud, false, rng);
         let rec = self.executor.execute_direct(
             query.domain,
             &latent,
@@ -49,6 +49,7 @@ impl Method for Direct {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::SimExecutor;
     use crate::workload::{generate_queries, Benchmark};
 
     #[test]

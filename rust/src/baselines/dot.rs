@@ -9,14 +9,14 @@
 //! budget adaptation.
 
 use super::Method;
+use crate::engine::Backend;
 use crate::metrics::QueryOutcome;
-use crate::models::SimExecutor;
 use crate::planner::{synthetic::SyntheticPlanner, Planner};
 use crate::util::rng::Rng;
 use crate::workload::{sample_latents, Query};
 
 pub struct Dot {
-    pub executor: SimExecutor,
+    pub executor: Box<dyn Backend>,
     pub planner: SyntheticPlanner,
     /// Offload a subtask when its estimated difficulty exceeds this.
     pub threshold: f64,
@@ -24,9 +24,9 @@ pub struct Dot {
 }
 
 impl Dot {
-    pub fn paper_default(executor: SimExecutor) -> Dot {
+    pub fn paper_default(executor: impl Backend + 'static) -> Dot {
         Dot {
-            executor,
+            executor: Box::new(executor),
             planner: SyntheticPlanner::paper_main(),
             threshold: 0.52,
             estimator_noise: 0.08,
@@ -42,13 +42,13 @@ impl Method for Dot {
     fn model_label(&self) -> String {
         format!(
             "{}&{}",
-            self.executor.edge.kind.label(),
-            self.executor.cloud.kind.label()
+            self.executor.profile(false).kind.label(),
+            self.executor.profile(true).kind.label()
         )
     }
 
     fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
-        let sp = &self.executor.sp;
+        let sp = self.executor.sp();
         let plan = self.planner.plan(query, sp.nmax, rng);
         let dag = &plan.dag;
         let latents = sample_latents(dag, query, sp, rng);
@@ -90,6 +90,7 @@ impl Method for Dot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::SimExecutor;
     use crate::workload::{generate_queries, Benchmark};
 
     fn run_many(n: usize, seed: u64) -> Vec<QueryOutcome> {

@@ -7,13 +7,13 @@
 //! wastes cloud budget on queries where only one step is hard.
 
 use super::{sample_chain_len, Cot, Method};
+use crate::engine::Backend;
 use crate::metrics::QueryOutcome;
-use crate::models::SimExecutor;
 use crate::util::rng::Rng;
 use crate::workload::{direct_latent, Query};
 
 pub struct HybridLlm {
-    pub executor: SimExecutor,
+    pub executor: Box<dyn Backend>,
     /// Route to cloud when the estimated difficulty exceeds this.
     pub threshold: f64,
     /// Noise of the difficulty estimator.
@@ -23,8 +23,13 @@ pub struct HybridLlm {
 }
 
 impl HybridLlm {
-    pub fn paper_default(executor: SimExecutor) -> HybridLlm {
-        HybridLlm { executor, threshold: 0.58, estimator_noise: 0.10, router_overhead: 0.08 }
+    pub fn paper_default(executor: impl Backend + 'static) -> HybridLlm {
+        HybridLlm {
+            executor: Box::new(executor),
+            threshold: 0.58,
+            estimator_noise: 0.10,
+            router_overhead: 0.08,
+        }
     }
 }
 
@@ -36,8 +41,8 @@ impl Method for HybridLlm {
     fn model_label(&self) -> String {
         format!(
             "{}&{}",
-            self.executor.edge.kind.label(),
-            self.executor.cloud.kind.label()
+            self.executor.profile(false).kind.label(),
+            self.executor.profile(true).kind.label()
         )
     }
 
@@ -46,7 +51,7 @@ impl Method for HybridLlm {
         let cloud = d_hat > self.threshold;
 
         // Chosen model answers with CoT (cost/latency = one inflated call).
-        let latent = direct_latent(query, &self.executor.sp, cloud, true, rng);
+        let latent = direct_latent(query, self.executor.sp(), cloud, true, rng);
         let rec = self.executor.execute_direct(
             query.domain,
             &latent,
@@ -55,7 +60,7 @@ impl Method for HybridLlm {
             rng,
         );
         let n = sample_chain_len(rng);
-        let correct = Cot::chain_correct(&self.executor, query, cloud, n, rng);
+        let correct = Cot::chain_correct(self.executor.as_ref(), query, cloud, n, rng);
 
         QueryOutcome {
             correct,
@@ -70,6 +75,7 @@ impl Method for HybridLlm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::SimExecutor;
     use crate::workload::{generate_queries, Benchmark};
 
     fn stats(bench: Benchmark, n: usize, seed: u64) -> (f64, f64, f64) {

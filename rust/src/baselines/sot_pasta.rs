@@ -17,8 +17,8 @@
 //! GPQA) while cloud SoT is faster than cloud CoT.
 
 use super::Method;
+use crate::engine::Backend;
 use crate::metrics::QueryOutcome;
-use crate::models::SimExecutor;
 use crate::util::rng::Rng;
 use crate::workload::{Query, SubtaskLatent};
 
@@ -42,12 +42,12 @@ struct ParallelCfg {
 
 fn run_parallel(
     cfg: &ParallelCfg,
-    executor: &SimExecutor,
+    executor: &dyn Backend,
     cloud: bool,
     query: &Query,
     rng: &mut Rng,
 ) -> QueryOutcome {
-    let sp = &executor.sp;
+    let sp = executor.sp();
     let profile = executor.profile(cloud);
     let n_branches = rng.int_range(cfg.branches.0, cfg.branches.1 + 1);
     let retention = cfg.retention[query.domain];
@@ -102,13 +102,13 @@ fn run_parallel(
 }
 
 pub struct Sot {
-    pub executor: SimExecutor,
+    pub executor: Box<dyn Backend>,
     pub cloud: bool,
 }
 
 impl Sot {
-    pub fn new(executor: SimExecutor, cloud: bool) -> Sot {
-        Sot { executor, cloud }
+    pub fn new(executor: impl Backend + 'static, cloud: bool) -> Sot {
+        Sot { executor: Box::new(executor), cloud }
     }
 
     fn cfg() -> ParallelCfg {
@@ -132,18 +132,18 @@ impl Method for Sot {
     }
 
     fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
-        run_parallel(&Self::cfg(), &self.executor, self.cloud, query, rng)
+        run_parallel(&Self::cfg(), self.executor.as_ref(), self.cloud, query, rng)
     }
 }
 
 pub struct Pasta {
-    pub executor: SimExecutor,
+    pub executor: Box<dyn Backend>,
     pub cloud: bool,
 }
 
 impl Pasta {
-    pub fn new(executor: SimExecutor, cloud: bool) -> Pasta {
-        Pasta { executor, cloud }
+    pub fn new(executor: impl Backend + 'static, cloud: bool) -> Pasta {
+        Pasta { executor: Box::new(executor), cloud }
     }
 
     fn cfg() -> ParallelCfg {
@@ -167,7 +167,7 @@ impl Method for Pasta {
     }
 
     fn run(&self, query: &Query, rng: &mut Rng) -> QueryOutcome {
-        run_parallel(&Self::cfg(), &self.executor, self.cloud, query, rng)
+        run_parallel(&Self::cfg(), self.executor.as_ref(), self.cloud, query, rng)
     }
 }
 
@@ -175,6 +175,7 @@ impl Method for Pasta {
 mod tests {
     use super::*;
     use crate::baselines::Cot;
+    use crate::models::SimExecutor;
     use crate::workload::{generate_queries, Benchmark};
 
     fn acc(m: &dyn Method, bench: Benchmark, n: usize, seed: u64) -> f64 {

@@ -51,6 +51,23 @@ impl BudgetState {
         self.n_decided += 1;
     }
 
+    /// Record speculative (hedged) cloud spend without counting a routing
+    /// decision: the decision's offload/decided counters are attributed to
+    /// the winning replica, but the speculative call's dollars and
+    /// normalized cost burn from the moment it is dispatched.
+    pub fn record_hedge_spend(&mut self, c: f64, dk: f64) {
+        self.c_used += c;
+        self.k_used += dk;
+    }
+
+    /// Refund the unconsumed part of a cancelled speculative call.
+    /// Saturating at zero: a refund can never drive spend negative, even
+    /// if accounting scopes disagree transiently.
+    pub fn refund(&mut self, c: f64, dk: f64) {
+        self.c_used = (self.c_used - c).max(0.0);
+        self.k_used = (self.k_used - dk).max(0.0);
+    }
+
     /// Advance the attributed latency frontier (virtual clock time).
     pub fn advance_latency(&mut self, t: f64) {
         self.l_used = self.l_used.max(t);
@@ -129,6 +146,11 @@ impl GlobalBudget {
         self.k_spent += dk;
     }
 
+    /// Refund a cancelled speculative call (saturating at zero).
+    pub fn refund(&mut self, dk: f64) {
+        self.k_spent = (self.k_spent - dk).max(0.0);
+    }
+
     pub fn remaining(&self) -> f64 {
         (self.k_cap - self.k_spent).max(0.0)
     }
@@ -193,6 +215,35 @@ mod tests {
     #[test]
     fn empty_offload_rate_zero() {
         assert_eq!(BudgetState::new().offload_rate(), 0.0);
+    }
+
+    #[test]
+    fn hedge_spend_and_refund_roundtrip() {
+        let mut b = BudgetState::new();
+        b.record_hedge_spend(0.3, 0.004);
+        assert_eq!(b.n_decided, 0, "speculative spend is not a decision");
+        assert_eq!(b.n_offloaded, 0);
+        assert!((b.c_used - 0.3).abs() < 1e-12);
+        assert!((b.k_used - 0.004).abs() < 1e-12);
+        // Partial refund leaves the consumed share.
+        b.refund(0.1, 0.001);
+        assert!((b.c_used - 0.2).abs() < 1e-12);
+        assert!((b.k_used - 0.003).abs() < 1e-12);
+        // Over-refund saturates at zero instead of going negative.
+        b.refund(10.0, 10.0);
+        assert_eq!(b.c_used, 0.0);
+        assert_eq!(b.k_used, 0.0);
+    }
+
+    #[test]
+    fn global_refund_saturates() {
+        let mut g = GlobalBudget::new(0.02);
+        g.record(0.01);
+        g.refund(0.004);
+        assert!((g.k_spent - 0.006).abs() < 1e-12);
+        g.refund(1.0);
+        assert_eq!(g.k_spent, 0.0);
+        assert!(g.can_spend());
     }
 
     #[test]

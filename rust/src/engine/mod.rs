@@ -1,0 +1,511 @@
+//! Pluggable execution backends — the `Backend` seam of the engine.
+//!
+//! Everything above the model layer (scheduler, fleet simulator, baselines,
+//! pipeline, profiling) consumes endpoints exclusively through [`Backend`]:
+//! the simulation/normalization parameters, the per-side [`ModelProfile`]s,
+//! and per-call [`ExecRecord`]s. That surface is all a *real* serving
+//! backend could expose too, which is what makes the seam load-bearing:
+//!
+//! * [`crate::models::SimExecutor`] is the canonical implementation (the
+//!   paper's calibrated simulation substrate);
+//! * [`ReplayBackend`] re-serves a recorded `ExecRecord` tape
+//!   deterministically — trace-driven evaluation, and the structural
+//!   template for an HTTP or PJRT-served endpoint behind the `pjrt`
+//!   feature (implement `Backend`, return real records);
+//! * [`RecordingBackend`] wraps any backend and captures the tape.
+//!
+//! Determinism contract: a backend may consume the *caller's* RNG stream
+//! (as `SimExecutor` does) or none of it (as `ReplayBackend` does), but it
+//! must never consume a data-dependent amount based on hidden state — the
+//! scheduler's reproducibility guarantees (fleet golden trace,
+//! fleet(N=1) == `execute_query`) rely on call-for-call stream alignment.
+//! Any backend-internal randomness must come from streams forked per call
+//! site (see the hedged-dispatch paths in `scheduler`), never from the
+//! shared query stream.
+
+use crate::config::simparams::SimParams;
+use crate::models::{ExecRecord, ModelProfile, SimExecutor};
+use crate::util::rng::Rng;
+use crate::workload::SubtaskLatent;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// An execution endpoint pair (edge + cloud) the engine can drive.
+pub trait Backend: Send + Sync {
+    /// Short diagnostics label ("sim", "replay", ...).
+    fn name(&self) -> &'static str;
+
+    /// Simulation / normalization parameters shared with routing + budget.
+    fn sp(&self) -> &SimParams;
+
+    /// Serving profile of one side (`false` = edge, `true` = cloud).
+    fn profile(&self, cloud: bool) -> &ModelProfile;
+
+    /// Execute one decomposed subtask on the chosen side. `in_tokens` must
+    /// include the query prompt plus dependency outputs.
+    fn execute_subtask(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord;
+
+    /// Execute the whole query as a single (direct or CoT) call.
+    fn execute_direct(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord;
+
+    /// Final-answer correctness draw: `P(correct) = prod_i (1 - w_i (1 - s_i))`.
+    /// Default implementation is the aggregation model shared by every
+    /// backend (it depends only on latents, not on endpoint behavior).
+    fn final_answer_correct(
+        &self,
+        latents: &[SubtaskLatent],
+        subtask_correct: &[bool],
+        rng: &mut Rng,
+    ) -> bool {
+        let mut p = 1.0;
+        for (l, &ok) in latents.iter().zip(subtask_correct) {
+            if !ok {
+                p *= 1.0 - l.criticality;
+            }
+        }
+        rng.bernoulli(p)
+    }
+
+    /// Expected accuracy gain of offloading subtask `i` with the rest of
+    /// the pipeline mixed (profiling ground truth; oracle policy input).
+    /// Default derives it from the two profiles, which is exact for any
+    /// backend whose correctness model is the shared `p_solve` sigmoid.
+    fn true_dq(&self, domain: usize, latents: &[SubtaskLatent], i: usize) -> f64 {
+        let sp = self.sp();
+        let (edge, cloud) = (self.profile(false), self.profile(true));
+        let p_e = edge.p_solve(domain, latents[i].difficulty, sp);
+        let p_c = cloud.p_solve(domain, latents[i].difficulty, sp);
+        let mut pipeline = 1.0;
+        for (j, l) in latents.iter().enumerate() {
+            if j != i {
+                let p_avg = 0.5
+                    * (edge.p_solve(domain, l.difficulty, sp)
+                        + cloud.p_solve(domain, l.difficulty, sp));
+                pipeline *= 1.0 - l.criticality * (1.0 - p_avg);
+            }
+        }
+        (p_c - p_e) * latents[i].criticality * pipeline
+    }
+}
+
+impl Backend for SimExecutor {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn sp(&self) -> &SimParams {
+        &self.sp
+    }
+
+    fn profile(&self, cloud: bool) -> &ModelProfile {
+        SimExecutor::profile(self, cloud)
+    }
+
+    fn execute_subtask(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        SimExecutor::execute_subtask(self, domain, latent, in_tokens, cloud, rng)
+    }
+
+    fn execute_direct(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        SimExecutor::execute_direct(self, domain, latent, in_tokens, cloud, rng)
+    }
+
+    fn final_answer_correct(
+        &self,
+        latents: &[SubtaskLatent],
+        subtask_correct: &[bool],
+        rng: &mut Rng,
+    ) -> bool {
+        SimExecutor::final_answer_correct(self, latents, subtask_correct, rng)
+    }
+
+    fn true_dq(&self, domain: usize, latents: &[SubtaskLatent], i: usize) -> f64 {
+        SimExecutor::true_dq(self, domain, latents, i)
+    }
+}
+
+/// Wraps any backend and captures every `(cloud, ExecRecord)` in call
+/// order, so a run can be re-served later by [`ReplayBackend`].
+pub struct RecordingBackend<B: Backend> {
+    inner: B,
+    log: Mutex<Vec<(bool, ExecRecord)>>,
+    finals: Mutex<Vec<bool>>,
+}
+
+impl<B: Backend> RecordingBackend<B> {
+    pub fn new(inner: B) -> RecordingBackend<B> {
+        RecordingBackend { inner, log: Mutex::new(Vec::new()), finals: Mutex::new(Vec::new()) }
+    }
+
+    /// Snapshot of the recorded per-call tape (call order preserved).
+    pub fn records(&self) -> Vec<(bool, ExecRecord)> {
+        self.log.lock().expect("record log poisoned").clone()
+    }
+
+    /// Snapshot of the recorded final-answer draws (call order preserved).
+    pub fn final_draws(&self) -> Vec<bool> {
+        self.finals.lock().expect("finals log poisoned").clone()
+    }
+
+    /// Freeze the tapes into a replay backend with the same profiles.
+    pub fn into_replay(self) -> ReplayBackend {
+        let records = self.records();
+        let finals = self.final_draws();
+        ReplayBackend::new(
+            self.inner.sp().clone(),
+            self.inner.profile(false).clone(),
+            self.inner.profile(true).clone(),
+            records,
+            finals,
+        )
+    }
+}
+
+impl<B: Backend> Backend for RecordingBackend<B> {
+    fn name(&self) -> &'static str {
+        "recording"
+    }
+
+    fn sp(&self) -> &SimParams {
+        self.inner.sp()
+    }
+
+    fn profile(&self, cloud: bool) -> &ModelProfile {
+        self.inner.profile(cloud)
+    }
+
+    fn execute_subtask(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        let rec = self.inner.execute_subtask(domain, latent, in_tokens, cloud, rng);
+        self.log.lock().expect("record log poisoned").push((cloud, rec));
+        rec
+    }
+
+    fn execute_direct(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        let rec = self.inner.execute_direct(domain, latent, in_tokens, cloud, rng);
+        self.log.lock().expect("record log poisoned").push((cloud, rec));
+        rec
+    }
+
+    fn final_answer_correct(
+        &self,
+        latents: &[SubtaskLatent],
+        subtask_correct: &[bool],
+        rng: &mut Rng,
+    ) -> bool {
+        // Delegate (the inner backend may override the aggregation model)
+        // and record the draw so replay can reproduce it without RNG.
+        let v = self.inner.final_answer_correct(latents, subtask_correct, rng);
+        self.finals.lock().expect("finals log poisoned").push(v);
+        v
+    }
+
+    fn true_dq(&self, domain: usize, latents: &[SubtaskLatent], i: usize) -> f64 {
+        self.inner.true_dq(domain, latents, i)
+    }
+}
+
+/// Deterministic backend that serves a recorded `ExecRecord` tape.
+///
+/// Records are kept in one FIFO per side, so edge and cloud calls may
+/// interleave differently on replay (e.g. a different scheduler
+/// configuration) as long as each side's call sequence is preserved.
+/// Replay consumes **no RNG at all** — the tape is the randomness — which
+/// also makes it the reference shape for future network-backed endpoints:
+/// anything observable must fit in an `ExecRecord`.
+pub struct ReplayBackend {
+    sp: SimParams,
+    edge: ModelProfile,
+    cloud: ModelProfile,
+    /// `[edge tape, cloud tape]`.
+    tapes: [Mutex<VecDeque<ExecRecord>>; 2],
+    /// Recorded final-answer draws, served FIFO.
+    finals: Mutex<VecDeque<bool>>,
+}
+
+impl ReplayBackend {
+    pub fn new(
+        sp: SimParams,
+        edge: ModelProfile,
+        cloud: ModelProfile,
+        records: Vec<(bool, ExecRecord)>,
+        finals: Vec<bool>,
+    ) -> ReplayBackend {
+        let mut edge_tape = VecDeque::new();
+        let mut cloud_tape = VecDeque::new();
+        for (cloud_side, rec) in records {
+            if cloud_side {
+                cloud_tape.push_back(rec);
+            } else {
+                edge_tape.push_back(rec);
+            }
+        }
+        ReplayBackend {
+            sp,
+            edge,
+            cloud,
+            tapes: [Mutex::new(edge_tape), Mutex::new(cloud_tape)],
+            finals: Mutex::new(finals.into()),
+        }
+    }
+
+    /// Records still queued (both sides, excluding final-answer draws).
+    pub fn remaining(&self) -> usize {
+        self.tapes.iter().map(|t| t.lock().expect("tape poisoned").len()).sum()
+    }
+
+    fn pop(&self, cloud: bool) -> ExecRecord {
+        self.tapes[usize::from(cloud)]
+            .lock()
+            .expect("tape poisoned")
+            .pop_front()
+            .unwrap_or_else(|| {
+                panic!(
+                    "replay tape exhausted on the {} side (workload diverged from recording)",
+                    if cloud { "cloud" } else { "edge" }
+                )
+            })
+    }
+}
+
+impl Backend for ReplayBackend {
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+
+    fn sp(&self) -> &SimParams {
+        &self.sp
+    }
+
+    fn profile(&self, cloud: bool) -> &ModelProfile {
+        if cloud {
+            &self.cloud
+        } else {
+            &self.edge
+        }
+    }
+
+    fn execute_subtask(
+        &self,
+        _domain: usize,
+        _latent: &SubtaskLatent,
+        _in_tokens: f64,
+        cloud: bool,
+        _rng: &mut Rng,
+    ) -> ExecRecord {
+        self.pop(cloud)
+    }
+
+    fn execute_direct(
+        &self,
+        _domain: usize,
+        _latent: &SubtaskLatent,
+        _in_tokens: f64,
+        cloud: bool,
+        _rng: &mut Rng,
+    ) -> ExecRecord {
+        self.pop(cloud)
+    }
+
+    fn final_answer_correct(
+        &self,
+        _latents: &[SubtaskLatent],
+        _subtask_correct: &[bool],
+        _rng: &mut Rng,
+    ) -> bool {
+        // Served from the tape, not re-drawn: replay reproduces the
+        // recorded run's accuracy verdicts exactly and consumes no RNG.
+        self.finals
+            .lock()
+            .expect("finals tape poisoned")
+            .pop_front()
+            .unwrap_or_else(|| {
+                panic!("replay tape exhausted for final-answer draws (workload diverged)")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn latent(d: f64, w: f64, toks: f64) -> SubtaskLatent {
+        SubtaskLatent { difficulty: d, criticality: w, out_tokens: toks }
+    }
+
+    #[test]
+    fn sim_backend_matches_inherent_calls() {
+        let ex = SimExecutor::paper_pair();
+        let via_trait: &dyn Backend = &ex;
+        let l = latent(0.5, 0.5, 100.0);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = via_trait.execute_subtask(1, &l, 200.0, true, &mut r1);
+        let b = SimExecutor::execute_subtask(&ex, 1, &l, 200.0, true, &mut r2);
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.api_cost, b.api_cost);
+        assert_eq!(a.correct, b.correct);
+        assert_eq!(a.out_tokens, b.out_tokens);
+        assert_eq!(via_trait.true_dq(1, &[l], 0), ex.true_dq(1, &[l], 0));
+        assert_eq!(via_trait.sp().tau0, ex.sp.tau0);
+        assert_eq!(via_trait.profile(true).kind, ex.cloud.kind);
+    }
+
+    #[test]
+    fn default_true_dq_matches_sim_formula() {
+        // The trait's default derivation must agree with SimExecutor's
+        // closed form (both are the App. C profiling ground truth).
+        struct Thin(SimExecutor);
+        impl Backend for Thin {
+            fn name(&self) -> &'static str {
+                "thin"
+            }
+            fn sp(&self) -> &SimParams {
+                &self.0.sp
+            }
+            fn profile(&self, cloud: bool) -> &ModelProfile {
+                self.0.profile(cloud)
+            }
+            fn execute_subtask(
+                &self,
+                domain: usize,
+                latent: &SubtaskLatent,
+                in_tokens: f64,
+                cloud: bool,
+                rng: &mut Rng,
+            ) -> ExecRecord {
+                self.0.execute_subtask(domain, latent, in_tokens, cloud, rng)
+            }
+            fn execute_direct(
+                &self,
+                domain: usize,
+                latent: &SubtaskLatent,
+                in_tokens: f64,
+                cloud: bool,
+                rng: &mut Rng,
+            ) -> ExecRecord {
+                self.0.execute_direct(domain, latent, in_tokens, cloud, rng)
+            }
+            // final_answer_correct / true_dq: trait defaults.
+        }
+        let thin = Thin(SimExecutor::paper_pair());
+        let lat = vec![latent(0.4, 0.4, 80.0), latent(0.6, 0.6, 120.0), latent(0.55, 0.7, 100.0)];
+        for i in 0..3 {
+            let a = thin.true_dq(1, &lat, i);
+            let b = thin.0.true_dq(1, &lat, i);
+            assert!((a - b).abs() < 1e-15, "node {i}: {a} vs {b}");
+        }
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        for mask in [[true, true, true], [true, false, true], [false, false, false]] {
+            let a = thin.final_answer_correct(&lat, &mask, &mut r1);
+            let b = thin.0.final_answer_correct(&lat, &mask, &mut r2);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn record_then_replay_serves_identical_records() {
+        let rec_backend = RecordingBackend::new(SimExecutor::paper_pair());
+        let l = latent(0.5, 0.5, 100.0);
+        let mut rng = Rng::new(11);
+        let mut originals = Vec::new();
+        for i in 0..6 {
+            let cloud = i % 2 == 0;
+            originals.push((cloud, rec_backend.execute_subtask(1, &l, 150.0, cloud, &mut rng)));
+        }
+        let final_draw = rec_backend.final_answer_correct(&[l], &[true], &mut rng);
+        assert_eq!(rec_backend.records().len(), 6);
+        assert_eq!(rec_backend.final_draws(), vec![final_draw]);
+
+        let replay = rec_backend.into_replay();
+        assert_eq!(replay.remaining(), 6);
+        // Replay ignores the rng entirely; a fresh stream must not matter.
+        let mut other_rng = Rng::new(999);
+        for (cloud, orig) in &originals {
+            let got = replay.execute_subtask(1, &l, 150.0, *cloud, &mut other_rng);
+            assert_eq!(got.latency, orig.latency);
+            assert_eq!(got.api_cost, orig.api_cost);
+            assert_eq!(got.correct, orig.correct);
+            assert_eq!(got.out_tokens, orig.out_tokens);
+        }
+        // The final-answer draw replays from the tape too (no RNG).
+        assert_eq!(replay.final_answer_correct(&[l], &[true], &mut other_rng), final_draw);
+        assert_eq!(replay.remaining(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay tape exhausted")]
+    fn replay_panics_on_exhausted_tape() {
+        let ex = SimExecutor::paper_pair();
+        let replay =
+            ReplayBackend::new(ex.sp.clone(), ex.edge.clone(), ex.cloud.clone(), vec![], vec![]);
+        let mut rng = Rng::new(0);
+        replay.execute_subtask(0, &latent(0.5, 0.5, 50.0), 100.0, false, &mut rng);
+    }
+
+    #[test]
+    fn replay_sides_are_independent_fifos() {
+        let ex = SimExecutor::paper_pair();
+        let mk = |lat: f64, cost: f64| ExecRecord {
+            correct: true,
+            latency: lat,
+            api_cost: cost,
+            in_tokens: 10.0,
+            out_tokens: 20.0,
+        };
+        let replay = ReplayBackend::new(
+            ex.sp.clone(),
+            ex.edge.clone(),
+            ex.cloud.clone(),
+            vec![(false, mk(1.0, 0.0)), (true, mk(2.0, 0.5)), (false, mk(3.0, 0.0))],
+            vec![],
+        );
+        let l = latent(0.5, 0.5, 50.0);
+        let mut rng = Rng::new(0);
+        // Cloud first, even though it was recorded second: per-side FIFO.
+        assert_eq!(replay.execute_subtask(0, &l, 1.0, true, &mut rng).latency, 2.0);
+        assert_eq!(replay.execute_subtask(0, &l, 1.0, false, &mut rng).latency, 1.0);
+        assert_eq!(replay.execute_direct(0, &l, 1.0, false, &mut rng).latency, 3.0);
+    }
+}

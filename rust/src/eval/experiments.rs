@@ -10,6 +10,7 @@ use crate::baselines::{Cot, Direct, Dot, HybridLlm, Method, Pasta, Sot};
 use crate::bench::Table;
 use crate::config::simparams::SimParams;
 use crate::dag::RepairOutcome;
+use crate::engine::Backend;
 use crate::metrics::{MethodMetrics, QueryOutcome, SeedStats};
 use crate::models::SimExecutor;
 use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
@@ -26,9 +27,9 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 /// All registered experiment ids.
-pub const EXPERIMENT_IDS: [&str; 13] = [
+pub const EXPERIMENT_IDS: [&str; 14] = [
     "calibrate", "table1", "table2", "table3", "table5", "table6_fig4", "fig3", "table7",
-    "table8", "fig5", "d1_exposure", "ablations", "fleet_serve",
+    "table8", "fig5", "d1_exposure", "ablations", "fleet_serve", "fleet_mixed_policy",
 ];
 
 /// Shared experiment context.
@@ -115,8 +116,8 @@ impl Method for HybridFlowMethod {
     fn model_label(&self) -> String {
         format!(
             "{}&{}",
-            self.pipeline.executor.edge.kind.label(),
-            self.pipeline.executor.cloud.kind.label()
+            self.pipeline.executor.profile(false).kind.label(),
+            self.pipeline.executor.profile(true).kind.label()
         )
     }
 
@@ -813,8 +814,8 @@ pub fn fleet_serve(ctx: &ExpContext) -> String {
         ];
         let cfg = FleetConfig {
             admission_limit: 64,
-            global_k_cap: f64::INFINITY,
             record_trace: false,
+            ..Default::default()
         };
         let report = serve_fleet(
             &pipeline,
@@ -846,6 +847,177 @@ pub fn fleet_serve(ctx: &ExpContext) -> String {
     out
 }
 
+/// Knobs of the canonical mixed-policy scenario (see
+/// [`mixed_policy_scenario`]).
+#[derive(Debug, Clone)]
+pub struct MixedPolicyScenario {
+    pub edge_workers: usize,
+    pub cloud_workers: usize,
+    pub hedge: bool,
+    pub hedge_threshold: f64,
+    pub record_trace: bool,
+}
+
+impl Default for MixedPolicyScenario {
+    fn default() -> Self {
+        MixedPolicyScenario {
+            edge_workers: 4,
+            cloud_workers: 16,
+            hedge: false,
+            hedge_threshold: 0.55,
+            record_trace: false,
+        }
+    }
+}
+
+/// Canonical 3-tenant mixed-policy fleet, shared by the
+/// `fleet_mixed_policy` experiment and `examples/fleet_mixed_policy.rs`
+/// so the documented runnable scenario and the experiment table cannot
+/// drift apart. Heterogeneous tenants: the learned router (pipeline
+/// default), a conservative fixed threshold (strands pivotal work on the
+/// edge — hedging's best case), and a hard edge pin with a small dollar
+/// pool that only hedged speculation can spend from.
+pub fn mixed_policy_scenario(
+    predictor: Arc<dyn crate::router::UtilityPredictor>,
+    knobs: &MixedPolicyScenario,
+) -> (
+    HybridFlowPipeline,
+    Vec<crate::budget::TenantPool>,
+    crate::scheduler::fleet::FleetConfig,
+) {
+    use crate::budget::TenantPool;
+    use crate::scheduler::fleet::FleetConfig;
+
+    let sp = SimParams::default();
+    let mut pcfg = PipelineConfig::paper_default(&sp);
+    pcfg.policy = RoutePolicy::hybridflow(&sp);
+    pcfg.schedule.edge_workers = knobs.edge_workers;
+    pcfg.schedule.cloud_workers = knobs.cloud_workers;
+    pcfg.schedule.hedge = knobs.hedge;
+    pcfg.schedule.hedge_threshold = knobs.hedge_threshold;
+    let pipeline = HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        predictor,
+        pcfg,
+    );
+    let tenants = vec![
+        TenantPool::unlimited("learned"),
+        TenantPool::unlimited("fixed-0.65"),
+        TenantPool::new("edge-pinned", 0.02),
+    ];
+    let cfg = FleetConfig {
+        admission_limit: 64,
+        record_trace: knobs.record_trace,
+        tenant_policies: vec![
+            None, // pipeline default (learned)
+            Some(RoutePolicy::FixedThreshold(0.65)),
+            Some(RoutePolicy::AllEdge),
+        ],
+        ..Default::default()
+    };
+    (pipeline, tenants, cfg)
+}
+
+/// Mixed-policy fleet + hedged speculative dispatch.
+///
+/// Exercises the two engine seams together: three tenants run *different*
+/// routers in one fleet (per-tenant policy overrides in `FleetConfig`),
+/// and the same workload is served twice — hedging off, then on. With
+/// hedging, edge-routed pivotal subtasks dispatch speculative cloud
+/// replicas; first finish wins, losers are cancelled with budget refunds.
+/// The comparison to read: hedging should cut the sojourn tail (p95/p99)
+/// at essentially unchanged accuracy, paying only the consumed share of
+/// cancelled speculative calls.
+pub fn fleet_mixed_policy(ctx: &ExpContext) -> String {
+    use crate::scheduler::fleet::FleetReport;
+    use crate::server::serve_fleet;
+    use crate::workload::trace::ArrivalProcess;
+
+    let bench = Benchmark::Gpqa;
+    let n = ((90.0 * ctx.scale).round() as usize).max(18);
+    let seed = *ctx.seeds.first().unwrap_or(&11);
+
+    let run = |hedge: bool| -> FleetReport {
+        let knobs = MixedPolicyScenario { hedge, ..Default::default() };
+        let (pipeline, tenants, cfg) = mixed_policy_scenario(ctx.predictor(), &knobs);
+        serve_fleet(
+            &pipeline,
+            &cfg,
+            tenants,
+            bench,
+            n,
+            &ArrivalProcess::Poisson { rate: 0.6 },
+            seed,
+        )
+    };
+
+    let off = run(false);
+    let on = run(true);
+
+    let acc = |r: &FleetReport| {
+        r.results.iter().filter(|q| q.exec.correct).count() as f64
+            / r.results.len().max(1) as f64
+            * 100.0
+    };
+
+    let mut t = Table::new(
+        "Mixed-policy fleet: hedged speculative dispatch off vs on (GPQA, 3 tenants)",
+        &[
+            "Hedge", "Sojourn p50 (s)", "Sojourn p95 (s)", "Sojourn p99 (s)", "Acc (%)",
+            "Offload (%)", "C_API ($)", "Cancelled", "Refund ($)",
+        ],
+    );
+    for (label, r) in [("off", &off), ("on", &on)] {
+        t.row(vec![
+            label.into(),
+            format!("{:.2}", r.sojourn.p50),
+            format!("{:.2}", r.sojourn.p95),
+            format!("{:.2}", r.sojourn.p99),
+            format!("{:.2}", acc(r)),
+            format!("{:.1}", r.offload_rate * 100.0),
+            format!("{:.4}", r.total_api_cost),
+            r.hedge_cancelled.to_string(),
+            format!("{:.4}", r.hedge_refund),
+        ]);
+    }
+
+    let mut per_tenant = Table::new(
+        "Per-tenant routing under overrides (hedge on)",
+        &["Tenant", "Policy", "Decided", "Offload (%)", "Spend ($)"],
+    );
+    let policies = ["HybridFlow (default)", "Fixed(tau0=0.65)", "AllEdge"];
+    for (tp, policy) in on.tenants.iter().zip(policies) {
+        per_tenant.row(vec![
+            tp.name.clone(),
+            policy.into(),
+            tp.state.n_decided.to_string(),
+            format!("{:.1}", tp.state.offload_rate() * 100.0),
+            format!("{:.4}", tp.state.k_used),
+        ]);
+    }
+
+    let mut out = t.render();
+    out.push('\n');
+    out.push_str(&per_tenant.render());
+    let dp95 = off.sojourn.p95 - on.sojourn.p95;
+    out.push_str(&format!(
+        "\nhedging moved sojourn p95 by {:+.2}s ({} -> {:.2}s) and accuracy by {:+.2} pts \
+         ({} speculative losers cancelled, ${:.4} refunded of ${:.4} billed).\n\
+         Expected shape: p95/p99 drop (pivotal subtasks stop queueing on the edge pool),\n\
+         accuracy holds or rises slightly (cloud winners are drawn from the stronger model),\n\
+         and the API bill rises only by the consumed share of cancelled replicas.\n",
+        -dp95,
+        format!("{:.2}s", off.sojourn.p95),
+        on.sojourn.p95,
+        acc(&on) - acc(&off),
+        on.hedge_cancelled,
+        on.hedge_refund,
+        on.total_api_cost + on.hedge_refund,
+    ));
+    out
+}
+
 /// Run an experiment by id.
 pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<String> {
     Ok(match id {
@@ -862,6 +1034,7 @@ pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<String> {
         "d1_exposure" => d1_exposure(ctx),
         "ablations" => ablations(ctx),
         "fleet_serve" => fleet_serve(ctx),
+        "fleet_mixed_policy" => fleet_mixed_policy(ctx),
         other => anyhow::bail!(
             "unknown experiment '{other}'; available: {}",
             EXPERIMENT_IDS.join(", ")
@@ -901,6 +1074,59 @@ mod tests {
         let out = table7(&tiny_ctx());
         assert!(out.contains("SFT"));
         assert!(out.contains("R_comp"));
+    }
+
+    #[test]
+    fn fleet_mixed_policy_runs_tiny() {
+        let out = fleet_mixed_policy(&tiny_ctx());
+        assert!(out.contains("Mixed-policy fleet"));
+        assert!(out.contains("Per-tenant routing"));
+        // Both hedge rows rendered, and the edge-pinned tenant stayed off
+        // the cloud for its routed decisions.
+        assert!(out.contains("| off"));
+        assert!(out.contains("| on"));
+        assert!(out.contains("edge-pinned"));
+    }
+
+    #[test]
+    fn mixed_policy_scenario_hedging_engages() {
+        // Structural pin of the acceptance scenario: with hedging on, the
+        // canonical mixed-policy fleet actually speculates (losers are
+        // cancelled, refunds are non-negative, tail stats are finite) and
+        // per-tenant overrides hold. The p95-improvement claim itself is
+        // read from the experiment table — at test scale (tens of queries)
+        // the tail quantile is too noisy to pin as a strict inequality
+        // without making the suite flaky.
+        use crate::server::serve_fleet;
+        use crate::workload::trace::ArrivalProcess;
+
+        let run = |hedge: bool| {
+            let knobs = MixedPolicyScenario { hedge, ..Default::default() };
+            let (pipeline, tenants, cfg) = mixed_policy_scenario(
+                std::sync::Arc::new(crate::router::MirrorPredictor::synthetic_for_tests()),
+                &knobs,
+            );
+            serve_fleet(
+                &pipeline,
+                &cfg,
+                tenants,
+                Benchmark::Gpqa,
+                24,
+                &ArrivalProcess::Poisson { rate: 0.6 },
+                11,
+            )
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.hedge_cancelled, 0);
+        assert!(on.hedge_cancelled > 0, "hedging never engaged in the canonical scenario");
+        assert!(on.hedge_refund >= 0.0);
+        assert!(on.sojourn.p95.is_finite() && off.sojourn.p95.is_finite());
+        // Without hedging the edge-pinned tenant never touches the cloud;
+        // with hedging its only cloud activity is speculation (winners
+        // count as offloads, cancelled losers as refunds).
+        assert_eq!(off.tenants[2].state.n_offloaded, 0);
+        assert_eq!(off.tenants[2].state.k_used, 0.0);
     }
 
     #[test]

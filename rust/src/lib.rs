@@ -44,6 +44,7 @@ pub mod planner;
 pub mod runtime;
 
 pub mod budget;
+pub mod engine;
 pub mod models;
 pub mod router;
 pub mod scheduler;
@@ -59,6 +60,7 @@ pub mod server;
 pub mod prelude {
     pub use crate::config::simparams::SimParams;
     pub use crate::dag::{Role, Subtask, TaskDag};
+    pub use crate::engine::{Backend, ReplayBackend};
     pub use crate::metrics::QueryOutcome;
     pub use crate::models::{ModelKind, ModelProfile};
     pub use crate::pipeline::{HybridFlowPipeline, PipelineConfig};

@@ -29,7 +29,7 @@ const COMMANDS: [(&str, &str); 6] = [
     ("run", "run N queries end-to-end and print outcomes"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
-    ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve>"),
+    ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy>"),
     ("check", "verify artifacts, PJRT round trip, and mirror parity"),
 ];
 
@@ -85,6 +85,12 @@ fn build_pipeline(args: &Args) -> anyhow::Result<HybridFlowPipeline> {
     }
     if args.flag("chain") {
         cfg.schedule.chain_mode = true;
+    }
+    if args.flag("hedge") {
+        cfg.schedule.hedge = true;
+        if let Some(thr) = args.get_f64("hedge-threshold")? {
+            cfg.schedule.hedge_threshold = thr;
+        }
     }
     if args.flag("calibrated") {
         cfg.policy = RoutePolicy::hybridflow_calibrated(&sp);

@@ -31,10 +31,15 @@ impl Exposure {
     /// Compute from an execution trace: `tok(x_i)` is the call's input
     /// tokens (prompt + dependency answers), exactly the transmitted
     /// payload of Eq. 29.
+    ///
+    /// A *hedged* node transmitted its payload to the cloud regardless of
+    /// which replica won (the speculative cloud call was dispatched and
+    /// carried `x_i` before any cancellation), so exposure counts it as a
+    /// cloud transmission even when `ev.cloud` records an edge winner.
     pub fn from_events(events: &[TraceEvent]) -> Exposure {
         let mut e = Exposure::default();
         for ev in events {
-            if ev.cloud {
+            if ev.cloud || ev.hedged {
                 e.e_cloud += ev.in_tokens;
                 e.n_cloud_calls += 1;
             } else {
@@ -75,6 +80,7 @@ mod tests {
             api_cost: 0.0,
             correct: true,
             in_tokens,
+            hedged: false,
         }
     }
 

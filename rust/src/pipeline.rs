@@ -5,6 +5,7 @@
 //! is a comparison pipeline over the same substrate.
 
 use crate::dag::RepairOutcome;
+use crate::engine::Backend;
 use crate::metrics::QueryOutcome;
 use crate::models::SimExecutor;
 use crate::planner::synthetic::SyntheticPlanner;
@@ -40,9 +41,11 @@ impl PipelineConfig {
     }
 }
 
-/// The assembled HybridFlow system.
+/// The assembled HybridFlow system. Model endpoints are consumed through
+/// the [`Backend`] seam, so the same pipeline drives the calibrated
+/// simulator, a recorded-trace replay, or any future network backend.
 pub struct HybridFlowPipeline {
-    pub executor: SimExecutor,
+    pub executor: Arc<dyn Backend>,
     pub planner: SyntheticPlanner,
     pub predictor: Arc<dyn UtilityPredictor>,
     pub config: PipelineConfig,
@@ -57,28 +60,35 @@ impl HybridFlowPipeline {
     pub fn from_artifacts(artifacts_dir: &Path, config: PipelineConfig) -> anyhow::Result<Self> {
         let predictor =
             MirrorPredictor::from_meta_file(&artifacts_dir.join("router_meta.json"))?;
-        Ok(HybridFlowPipeline {
-            executor: SimExecutor::paper_pair(),
-            planner: SyntheticPlanner::paper_main(),
-            predictor: Arc::new(predictor),
+        Ok(HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            Arc::new(predictor),
             config,
-            router_state: Mutex::new(None),
-        })
+        ))
     }
 
+    /// Assemble from any backend (taken by value and boxed behind the
+    /// trait; pass `SimExecutor::paper_pair()` for the paper substrate).
     pub fn with_predictor(
-        executor: SimExecutor,
+        executor: impl Backend + 'static,
         planner: SyntheticPlanner,
         predictor: Arc<dyn UtilityPredictor>,
         config: PipelineConfig,
     ) -> Self {
-        HybridFlowPipeline { executor, planner, predictor, config, router_state: Mutex::new(None) }
+        HybridFlowPipeline {
+            executor: Arc::new(executor),
+            planner,
+            predictor,
+            config,
+            router_state: Mutex::new(None),
+        }
     }
 
     /// Run one query end-to-end. Returns the full execution trace.
     pub fn run_query_traced(&self, query: &Query, rng: &mut Rng) -> (QueryExecution, RepairOutcome) {
         let plan = self.planner.plan(query, self.config.n_max, rng);
-        let latents = sample_latents(&plan.dag, query, &self.executor.sp, rng);
+        let latents = sample_latents(&plan.dag, query, self.executor.sp(), rng);
         let mut router = if self.config.persist_router {
             let mut guard = self.router_state.lock().expect("router state poisoned");
             guard.take().unwrap_or_else(|| RouterState::new(self.config.policy.clone()))
@@ -90,7 +100,7 @@ impl HybridFlowPipeline {
             &plan.dag,
             &latents,
             query,
-            &self.executor,
+            self.executor.as_ref(),
             self.predictor.as_ref(),
             &mut router,
             plan.planning_latency,

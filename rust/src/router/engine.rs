@@ -1,0 +1,297 @@
+//! The `Router` seam: every routing policy is a [`Router`] implementation
+//! behind one `route(ctx) -> Decision` surface, so the scheduler dispatches
+//! through `dyn Router` and never matches on policy variants.
+//!
+//! [`crate::router::RoutePolicy`] stays the *declarative* layer — a
+//! cloneable config that [`RoutePolicy::build`](crate::router::RoutePolicy::build)
+//! resolves into a live router. This split is what lets `FleetConfig` carry
+//! per-tenant policy overrides (heterogeneous tenants in one fleet) and
+//! lets new policies ship without touching the scheduler.
+//!
+//! Determinism contract: `route` must consume the caller's RNG exactly as
+//! many times as the policy semantics require (`Random` draws one
+//! Bernoulli; every other built-in draws nothing), because the scheduler's
+//! reproducibility guarantees depend on call-for-call stream alignment.
+
+use super::bandit::LinUcb;
+use super::threshold::Threshold;
+use crate::budget::BudgetState;
+use crate::config::simparams::SimParams;
+use crate::util::rng::Rng;
+
+/// Everything a router may observe at one decision point (Eq. 8's online
+/// information set): the predicted utility, the subtask's normalized DAG
+/// position, and whichever budget scope the caller routes against
+/// (query-local in single-query mode, tenant-aggregated in fleet mode).
+pub struct RouteCtx<'a> {
+    pub sp: &'a SimParams,
+    /// Predicted utility `u_hat` from the predictor.
+    pub u_hat: f64,
+    /// Topological position in [0, 1].
+    pub position: f64,
+    pub budget: &'a BudgetState,
+    /// True benefit/cost ratio — supplied for the offline Oracle only.
+    pub oracle_ratio: Option<f64>,
+}
+
+/// One routing decision.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    /// Offload to the cloud endpoint?
+    pub cloud: bool,
+    /// Threshold in force at decision time (Figure 3's line series).
+    pub tau: f64,
+}
+
+/// A live routing policy. Implementations carry their own per-query state
+/// (threshold dynamics, bandit head) and reset it in [`Router::begin_query`].
+pub trait Router: Send {
+    /// Row label for tables/diagnostics.
+    fn label(&self) -> String;
+
+    /// Decide one ready subtask.
+    fn route(&mut self, ctx: &RouteCtx<'_>, rng: &mut Rng) -> Decision;
+
+    /// Realized-outcome feedback for offloaded subtasks (the partial-
+    /// feedback regime of Eq. 14). Default: ignore.
+    fn observe_offloaded(
+        &mut self,
+        _sp: &SimParams,
+        _u_hat: f64,
+        _position: f64,
+        _budget_at_decision: &BudgetState,
+        _realized_dq: f64,
+        _realized_c: f64,
+    ) {
+    }
+
+    /// Start a new query; with `persist = false` all per-query state resets
+    /// (the paper's evaluation protocol). Default: stateless.
+    fn begin_query(&mut self, _persist: bool) {}
+
+    /// Bandit observations consumed so far (0 for non-calibrated routers).
+    fn bandit_updates(&self) -> usize {
+        0
+    }
+}
+
+/// Everything on the edge model.
+pub struct AllEdgeRouter;
+
+impl Router for AllEdgeRouter {
+    fn label(&self) -> String {
+        "Edge".into()
+    }
+
+    fn route(&mut self, _ctx: &RouteCtx<'_>, _rng: &mut Rng) -> Decision {
+        Decision { cloud: false, tau: 1.0 }
+    }
+}
+
+/// Everything on the cloud model.
+pub struct AllCloudRouter;
+
+impl Router for AllCloudRouter {
+    fn label(&self) -> String {
+        "Cloud".into()
+    }
+
+    fn route(&mut self, _ctx: &RouteCtx<'_>, _rng: &mut Rng) -> Decision {
+        Decision { cloud: true, tau: 0.0 }
+    }
+}
+
+/// Offload i.i.d. with probability `p` (Table 3's Random).
+pub struct RandomRouter {
+    pub p: f64,
+}
+
+impl Router for RandomRouter {
+    fn label(&self) -> String {
+        format!("Random({:.2})", self.p)
+    }
+
+    fn route(&mut self, _ctx: &RouteCtx<'_>, rng: &mut Rng) -> Decision {
+        Decision { cloud: rng.bernoulli(self.p), tau: 1.0 - self.p }
+    }
+}
+
+/// Learned utility vs. a fixed threshold tau0 (Table 6 sweep).
+pub struct FixedThresholdRouter {
+    pub tau0: f64,
+}
+
+impl Router for FixedThresholdRouter {
+    fn label(&self) -> String {
+        format!("Fixed(tau0={})", self.tau0)
+    }
+
+    fn route(&mut self, ctx: &RouteCtx<'_>, _rng: &mut Rng) -> Decision {
+        Decision { cloud: ctx.u_hat > self.tau0, tau: self.tau0 }
+    }
+}
+
+/// Full HybridFlow: learned utility + adaptive threshold, with an optional
+/// LinUCB calibration head updated from partial feedback.
+pub struct LearnedRouter {
+    pub threshold: Threshold,
+    pub calibrate: bool,
+    pub bandit: LinUcb,
+}
+
+impl Router for LearnedRouter {
+    fn label(&self) -> String {
+        if self.calibrate {
+            "HybridFlow+LinUCB".into()
+        } else {
+            "HybridFlow".into()
+        }
+    }
+
+    fn route(&mut self, ctx: &RouteCtx<'_>, _rng: &mut Rng) -> Decision {
+        let tau = self.threshold.tau(ctx.budget);
+        let u_bar = if self.calibrate {
+            let x = LinUcb::context(ctx.sp, ctx.u_hat, ctx.budget, ctx.position);
+            self.bandit.calibrated(&x)
+        } else {
+            ctx.u_hat
+        };
+        let cloud = u_bar > tau;
+        self.threshold.update(ctx.budget);
+        Decision { cloud, tau }
+    }
+
+    fn observe_offloaded(
+        &mut self,
+        sp: &SimParams,
+        u_hat: f64,
+        position: f64,
+        budget_at_decision: &BudgetState,
+        realized_dq: f64,
+        realized_c: f64,
+    ) {
+        if !self.calibrate {
+            return;
+        }
+        let lambda = self.threshold.tau(budget_at_decision); // tau as shadow price
+        let reward = (realized_dq - lambda * realized_c) / (realized_c + sp.eps_utility);
+        let x = LinUcb::context(sp, u_hat, budget_at_decision, position);
+        self.bandit.update(&x, reward.clamp(-1.0, 1.0));
+    }
+
+    fn begin_query(&mut self, persist: bool) {
+        if !persist {
+            self.threshold.reset();
+            self.bandit = LinUcb::paper_default();
+        }
+    }
+
+    fn bandit_updates(&self) -> usize {
+        self.bandit.n_updates
+    }
+}
+
+/// Offline knapsack oracle on the true (dq, c) ratio — evaluation upper
+/// bound, not implementable online (App. B.5).
+pub struct OracleRouter;
+
+impl Router for OracleRouter {
+    fn label(&self) -> String {
+        "Oracle".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx<'_>, _rng: &mut Rng) -> Decision {
+        // Threshold at the budget-clearing shadow price; the price rises to
+        // infinity once the budget is exhausted (certainty-equivalent rule).
+        let lambda = if ctx.budget.c_used >= ctx.sp.c_max { f64::INFINITY } else { 0.35 };
+        Decision { cloud: ctx.oracle_ratio.map_or(false, |r| r > lambda), tau: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(sp: &'a SimParams, budget: &'a BudgetState, u_hat: f64) -> RouteCtx<'a> {
+        RouteCtx { sp, u_hat, position: 0.5, budget, oracle_ratio: None }
+    }
+
+    #[test]
+    fn constant_routers() {
+        let sp = SimParams::default();
+        let b = BudgetState::new();
+        let mut rng = Rng::new(0);
+        assert!(!AllEdgeRouter.route(&ctx(&sp, &b, 0.99), &mut rng).cloud);
+        assert!(AllCloudRouter.route(&ctx(&sp, &b, 0.01), &mut rng).cloud);
+        assert_eq!(AllEdgeRouter.route(&ctx(&sp, &b, 0.5), &mut rng).tau, 1.0);
+        assert_eq!(AllCloudRouter.route(&ctx(&sp, &b, 0.5), &mut rng).tau, 0.0);
+    }
+
+    #[test]
+    fn random_consumes_exactly_one_draw() {
+        // Stream alignment contract: Random draws once per route() call.
+        let sp = SimParams::default();
+        let b = BudgetState::new();
+        let mut r = RandomRouter { p: 0.5 };
+        let mut rng_a = Rng::new(42);
+        let mut rng_b = Rng::new(42);
+        r.route(&ctx(&sp, &b, 0.5), &mut rng_a);
+        let _ = rng_b.bernoulli(0.5);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn fixed_threshold_is_strict() {
+        let sp = SimParams::default();
+        let b = BudgetState::new();
+        let mut rng = Rng::new(1);
+        let mut r = FixedThresholdRouter { tau0: 0.5 };
+        assert!(r.route(&ctx(&sp, &b, 0.7), &mut rng).cloud);
+        assert!(!r.route(&ctx(&sp, &b, 0.5), &mut rng).cloud); // strict >
+        assert!(!r.route(&ctx(&sp, &b, 0.3), &mut rng).cloud);
+    }
+
+    #[test]
+    fn learned_updates_threshold_after_deciding() {
+        let sp = SimParams::default();
+        let mut rng = Rng::new(2);
+        let mut r = LearnedRouter {
+            threshold: Threshold::dual(&sp),
+            calibrate: false,
+            bandit: LinUcb::paper_default(),
+        };
+        // Overspent budget: dual variable rises across calls, so tau at the
+        // second decision exceeds tau at the first.
+        let mut burnt = BudgetState::new();
+        burnt.c_used = sp.c_max + 1.0;
+        let d1 = r.route(&ctx(&sp, &burnt, 0.5), &mut rng);
+        let d2 = r.route(&ctx(&sp, &burnt, 0.5), &mut rng);
+        assert!(d2.tau > d1.tau, "tau1 {} tau2 {}", d1.tau, d2.tau);
+        r.begin_query(false);
+        let d3 = r.route(&ctx(&sp, &BudgetState::new(), 0.5), &mut rng);
+        assert!((d3.tau - sp.tau0).abs() < 1e-12, "reset restores tau0");
+    }
+
+    #[test]
+    fn oracle_gates_on_ratio_and_budget() {
+        let sp = SimParams::default();
+        let b = BudgetState::new();
+        let mut rng = Rng::new(3);
+        let mut r = OracleRouter;
+        let hit = RouteCtx { sp: &sp, u_hat: 0.0, position: 0.0, budget: &b, oracle_ratio: Some(5.0) };
+        let miss =
+            RouteCtx { sp: &sp, u_hat: 1.0, position: 0.0, budget: &b, oracle_ratio: Some(0.01) };
+        assert!(r.route(&hit, &mut rng).cloud);
+        assert!(!r.route(&miss, &mut rng).cloud);
+        let mut burnt = BudgetState::new();
+        burnt.c_used = sp.c_max + 0.1;
+        let gated = RouteCtx {
+            sp: &sp,
+            u_hat: 1.0,
+            position: 0.0,
+            budget: &burnt,
+            oracle_ratio: Some(100.0),
+        };
+        assert!(!r.route(&gated, &mut rng).cloud);
+    }
+}

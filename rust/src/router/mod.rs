@@ -3,6 +3,7 @@
 //! policy zoo for ablations.
 
 pub mod bandit;
+pub mod engine;
 pub mod knapsack;
 pub mod policy;
 pub mod predictor;
@@ -10,6 +11,7 @@ pub mod threshold;
 pub mod utility;
 
 pub use bandit::LinUcb;
+pub use engine::{Decision, RouteCtx, Router};
 pub use policy::{RoutePolicy, RouterState};
 pub use predictor::{MirrorPredictor, UtilityPredictor};
 pub use threshold::Threshold;

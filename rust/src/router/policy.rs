@@ -1,14 +1,24 @@
-//! Routing policies: the learned HybridFlow router plus every ablation
-//! baseline of Table 3 (Edge, Cloud, Random, Fixed threshold) and the
-//! offline knapsack oracle used as an upper bound.
+//! Declarative routing policies and the per-query router state.
+//!
+//! [`RoutePolicy`] is pure configuration: the learned HybridFlow router
+//! plus every ablation baseline of Table 3 (Edge, Cloud, Random, Fixed
+//! threshold) and the offline knapsack oracle. [`RoutePolicy::build`]
+//! resolves it into a live [`Router`] implementation (see
+//! [`super::engine`]); the scheduler only ever talks to the trait, so
+//! policies are swappable per tenant and extensible without scheduler
+//! edits.
 
 use super::bandit::LinUcb;
+use super::engine::{
+    AllCloudRouter, AllEdgeRouter, FixedThresholdRouter, LearnedRouter, OracleRouter,
+    RandomRouter, RouteCtx, Router,
+};
 use super::threshold::Threshold;
 use crate::budget::BudgetState;
 use crate::config::simparams::SimParams;
 use crate::util::rng::Rng;
 
-/// Declarative policy selection (resolved by the scheduler into decisions).
+/// Declarative policy selection (resolved into a [`Router`] by `build`).
 #[derive(Debug, Clone)]
 pub enum RoutePolicy {
     /// Everything on the edge model.
@@ -48,6 +58,24 @@ impl RoutePolicy {
         RoutePolicy::Learned { threshold: Threshold::paper_default(sp), calibrate: true }
     }
 
+    /// Resolve the declarative config into a live router (the Router seam).
+    pub fn build(&self) -> Box<dyn Router> {
+        match self {
+            RoutePolicy::AllEdge => Box::new(AllEdgeRouter),
+            RoutePolicy::AllCloud => Box::new(AllCloudRouter),
+            RoutePolicy::Random(p) => Box::new(RandomRouter { p: *p }),
+            RoutePolicy::FixedThreshold(t) => Box::new(FixedThresholdRouter { tau0: *t }),
+            RoutePolicy::Learned { threshold, calibrate } => Box::new(LearnedRouter {
+                threshold: threshold.clone(),
+                calibrate: *calibrate,
+                bandit: LinUcb::paper_default(),
+            }),
+            RoutePolicy::Oracle => Box::new(OracleRouter),
+        }
+    }
+
+    /// Row label, matching the corresponding [`Router::label`] exactly
+    /// (pinned by a test) without constructing the router.
     pub fn label(&self) -> String {
         match self {
             RoutePolicy::AllEdge => "Edge".into(),
@@ -66,17 +94,21 @@ impl RoutePolicy {
     }
 }
 
-/// Mutable per-query routing state (threshold dynamics + bandit head).
+/// Mutable per-query routing state: the live router built from the
+/// declarative policy, plus the decision-time threshold trace
+/// (Figure 3's line series).
 pub struct RouterState {
+    /// The declarative config this state was built from (introspection /
+    /// re-instantiation; behavior lives entirely in `router`).
     pub policy: RoutePolicy,
-    pub bandit: LinUcb,
-    /// Trace of thresholds at each decision (Figure 3's line series).
+    router: Box<dyn Router>,
     pub tau_trace: Vec<f64>,
 }
 
 impl RouterState {
     pub fn new(policy: RoutePolicy) -> RouterState {
-        RouterState { policy, bandit: LinUcb::paper_default(), tau_trace: Vec::new() }
+        let router = policy.build();
+        RouterState { policy, router, tau_trace: Vec::new() }
     }
 
     /// Decide one ready subtask. `u_hat` from the predictor; `position` in
@@ -90,49 +122,13 @@ impl RouterState {
         oracle_ratio: Option<f64>,
         rng: &mut Rng,
     ) -> bool {
-        let decision = match &mut self.policy {
-            RoutePolicy::AllEdge => {
-                self.tau_trace.push(1.0);
-                false
-            }
-            RoutePolicy::AllCloud => {
-                self.tau_trace.push(0.0);
-                true
-            }
-            RoutePolicy::Random(p) => {
-                self.tau_trace.push(1.0 - *p);
-                rng.bernoulli(*p)
-            }
-            RoutePolicy::FixedThreshold(t) => {
-                self.tau_trace.push(*t);
-                u_hat > *t
-            }
-            RoutePolicy::Learned { threshold, calibrate } => {
-                let tau = threshold.tau(budget);
-                self.tau_trace.push(tau);
-                let u_bar = if *calibrate {
-                    let x = LinUcb::context(sp, u_hat, budget, position);
-                    self.bandit.calibrated(&x)
-                } else {
-                    u_hat
-                };
-                let r = u_bar > tau;
-                threshold.update(budget);
-                r
-            }
-            RoutePolicy::Oracle => {
-                // Threshold at the budget-clearing shadow price; the caller
-                // supplies the true benefit-cost ratio. Price rises as the
-                // budget depletes (simple certainty-equivalent rule).
-                let lambda = if budget.c_used >= sp.c_max { f64::INFINITY } else { 0.35 };
-                self.tau_trace.push(0.0);
-                oracle_ratio.map_or(false, |r| r > lambda)
-            }
-        };
-        decision
+        let decision =
+            self.router.route(&RouteCtx { sp, u_hat, position, budget, oracle_ratio }, rng);
+        self.tau_trace.push(decision.tau);
+        decision.cloud
     }
 
-    /// Feed realized outcome back to the bandit (offloaded subtasks only —
+    /// Feed realized outcome back to the router (offloaded subtasks only —
     /// partial feedback, Eq. 14's `R = dq - lambda * c`).
     pub fn observe_offloaded(
         &mut self,
@@ -143,13 +139,14 @@ impl RouterState {
         realized_dq: f64,
         realized_c: f64,
     ) {
-        if let RoutePolicy::Learned { calibrate: true, threshold } = &self.policy {
-            let lambda = threshold.tau(budget_at_decision); // tau as shadow price
-            let reward = (realized_dq - lambda * realized_c)
-                / (realized_c + sp.eps_utility);
-            let x = LinUcb::context(sp, u_hat, budget_at_decision, position);
-            self.bandit.update(&x, reward.clamp(-1.0, 1.0));
-        }
+        self.router.observe_offloaded(
+            sp,
+            u_hat,
+            position,
+            budget_at_decision,
+            realized_dq,
+            realized_c,
+        );
     }
 
     pub fn reset_for_query(&mut self) {
@@ -161,13 +158,13 @@ impl RouterState {
     /// learned across the query stream); with `persist=false` both reset
     /// (paper's per-query evaluation protocol).
     pub fn begin_query(&mut self, persist: bool) {
-        if !persist {
-            if let RoutePolicy::Learned { threshold, .. } = &mut self.policy {
-                threshold.reset();
-            }
-            self.bandit = LinUcb::paper_default();
-        }
+        self.router.begin_query(persist);
         self.tau_trace.clear();
+    }
+
+    /// Bandit observations consumed (0 unless the calibrated head is on).
+    pub fn bandit_updates(&self) -> usize {
+        self.router.bandit_updates()
     }
 }
 
@@ -264,9 +261,27 @@ mod tests {
         let b = BudgetState::new();
         let mut plain = RouterState::new(RoutePolicy::hybridflow(&s));
         plain.observe_offloaded(&s, 0.5, 0.2, &b, 0.3, 0.2);
-        assert_eq!(plain.bandit.n_updates, 0);
+        assert_eq!(plain.bandit_updates(), 0);
         let mut cal = RouterState::new(RoutePolicy::hybridflow_calibrated(&s));
         cal.observe_offloaded(&s, 0.5, 0.2, &b, 0.3, 0.2);
-        assert_eq!(cal.bandit.n_updates, 1);
+        assert_eq!(cal.bandit_updates(), 1);
+    }
+
+    #[test]
+    fn build_produces_matching_labels() {
+        let s = sp();
+        let cases: Vec<(RoutePolicy, &str)> = vec![
+            (RoutePolicy::AllEdge, "Edge"),
+            (RoutePolicy::AllCloud, "Cloud"),
+            (RoutePolicy::Random(0.25), "Random(0.25)"),
+            (RoutePolicy::FixedThreshold(0.5), "Fixed(tau0=0.5)"),
+            (RoutePolicy::hybridflow(&s), "HybridFlow"),
+            (RoutePolicy::hybridflow_calibrated(&s), "HybridFlow+LinUCB"),
+            (RoutePolicy::Oracle, "Oracle"),
+        ];
+        for (policy, want) in cases {
+            assert_eq!(policy.label(), want);
+            assert_eq!(policy.build().label(), want, "config/router label drift");
+        }
     }
 }

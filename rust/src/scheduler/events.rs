@@ -1,6 +1,53 @@
 //! Execution trace events — the raw material for Figure 3 (edge/cloud
 //! distribution by subtask position + adaptive threshold line) and for
-//! debugging scheduling decisions.
+//! debugging scheduling decisions — plus [`EventKey`], the single heap
+//! ordering shared by every scheduler event queue.
+
+use std::cmp::Ordering;
+
+/// Shared min-heap key for every scheduler event queue: the single-query
+/// ready/pending heaps and the fleet's tagged event heap all order on
+/// `(time, pri, q, node)` through this one `Ord` impl, so there is exactly
+/// one tie-break rule in the engine — control events (pri 0) before
+/// ready-frontier markers (pri 1) before subtask finishes (pri 2), then
+/// queue index, then node index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct EventKey {
+    pub time: f64,
+    pub pri: u8,
+    pub q: usize,
+    pub node: usize,
+}
+
+impl EventKey {
+    /// Single-query key: no queue or priority dimension, so the ordering
+    /// degenerates to the classic `(time, node)` min-heap.
+    pub fn ready(time: f64, node: usize) -> EventKey {
+        EventKey { time, pri: 0, q: 0, node }
+    }
+}
+
+impl Eq for EventKey {}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on (time, pri, q, node): reversed operand order because
+        // BinaryHeap is a max-heap.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.pri.cmp(&self.pri))
+            .then_with(|| other.q.cmp(&self.q))
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
 
 /// One subtask's routing + execution record.
 #[derive(Debug, Clone)]
@@ -8,6 +55,8 @@ pub struct TraceEvent {
     pub node: usize,
     /// Topological depth (Figure 3's "subtask position" axis).
     pub position: usize,
+    /// Side whose result was used. For a hedged dispatch this is the
+    /// winning replica.
     pub cloud: bool,
     /// Threshold in force at decision time.
     pub tau: f64,
@@ -16,11 +65,17 @@ pub struct TraceEvent {
     /// Virtual-clock start/finish (seconds, includes planning offset).
     pub start: f64,
     pub finish: f64,
+    /// Dollars billed at dispatch time. For a hedged dispatch whose cloud
+    /// replica lost, this is the *full* speculative call cost; the
+    /// unconsumed remainder is refunded later by the `Cancel` event, so
+    /// net totals can be below the sum of event costs.
     pub api_cost: f64,
     pub correct: bool,
     /// Input tokens of the call (query prompt + dependency outputs) — the
     /// transmitted payload `tok(x_i)` of the App. D.1 exposure proxy.
     pub in_tokens: f64,
+    /// Whether this node was speculatively dispatched to both sides.
+    pub hedged: bool,
 }
 
 /// Position histogram used by Figure 3: per position, (edge count, cloud
@@ -82,7 +137,42 @@ mod tests {
             api_cost: 0.0,
             correct: true,
             in_tokens: 100.0,
+            hedged: false,
         }
+    }
+
+    #[test]
+    fn event_key_orders_time_then_pri_then_q_then_node() {
+        use std::collections::BinaryHeap;
+        let mut heap = BinaryHeap::new();
+        heap.push(EventKey { time: 2.0, pri: 0, q: 0, node: 0 });
+        heap.push(EventKey { time: 1.0, pri: 2, q: 0, node: 1 });
+        heap.push(EventKey { time: 1.0, pri: 1, q: 1, node: 0 });
+        heap.push(EventKey { time: 1.0, pri: 1, q: 0, node: 5 });
+        heap.push(EventKey { time: 1.0, pri: 1, q: 0, node: 2 });
+        let order: Vec<(f64, u8, usize, usize)> = std::iter::from_fn(|| heap.pop())
+            .map(|k| (k.time, k.pri, k.q, k.node))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                (1.0, 1, 0, 2), // same time: lowest pri, then q, then node
+                (1.0, 1, 0, 5),
+                (1.0, 1, 1, 0),
+                (1.0, 2, 0, 1),
+                (2.0, 0, 0, 0), // later time loses regardless of pri
+            ]
+        );
+    }
+
+    #[test]
+    fn ready_key_degenerates_to_time_node_order() {
+        let a = EventKey::ready(1.0, 3);
+        let b = EventKey::ready(1.0, 4);
+        let c = EventKey::ready(0.5, 9);
+        // Min-heap semantics: larger in `Ord` pops first from BinaryHeap.
+        assert!(a > b, "lower node pops first at equal time");
+        assert!(c > a, "earlier time pops first");
     }
 
     #[test]

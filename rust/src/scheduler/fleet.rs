@@ -7,10 +7,11 @@
 //! pool contention, and budget exhaustion invisible. This module extends
 //! the same event-driven virtual clock to a whole serving fleet:
 //!
-//! * a single tagged event heap orders **arrivals**, **planner
-//!   completions**, **ready-frontier markers**, and **subtask finishes**
-//!   across all queries (ties resolve ready-before-finish, matching the
-//!   single-query scheduler);
+//! * a single tagged event heap (keyed by [`super::events::EventKey`])
+//!   orders **arrivals**, **planner completions**, **ready-frontier
+//!   markers**, **subtask finishes**, and **hedge cancellations** across
+//!   all queries (ties resolve control-before-marker-before-finish,
+//!   matching the single-query scheduler);
 //! * worker pools are shared: a subtask decided at `t` starts at
 //!   `max(t, earliest_free_worker)`, so fleet load shows up as per-subtask
 //!   queueing delay;
@@ -18,8 +19,17 @@
 //!   (fleet-level `C_used(t)` in Eq. 8's sense) instead of the query-local
 //!   one, and a tenant or global dollar pool that has run dry forces
 //!   subtasks back to the edge;
+//! * **per-tenant policy overrides** ([`FleetConfig::tenant_policies`]):
+//!   heterogeneous tenants run different routers in one fleet — each
+//!   query's router is built from its tenant's policy (falling back to the
+//!   pipeline's default);
 //! * an admission limit bounds in-service queries; excess arrivals wait in
 //!   FIFO order and their admission delay is reported.
+//!
+//! With `schedule.hedge` on, edge-routed pivotal subtasks dispatch
+//! speculatively to both pools; the losing replica's `Cancel` event
+//! releases its worker slot and refunds the unconsumed cloud spend to the
+//! tenant and global pools (see [`super::CancelTicket`]).
 //!
 //! Determinism: every query gets an RNG forked from `(seed, job index)` —
 //! never from arrival interleaving — and all state lives in vectors and
@@ -34,14 +44,16 @@
 //! held until the chain's virtual makespan, so admission limits see them
 //! as in-service. Pool-utilization metrics read 0 for chain fleets.
 
-use super::{run_group, Finish, FleetRouteCtx, GroupCtx, QueryExecState};
-use super::{QueryExecution, RouterState};
+use super::events::EventKey;
+use super::{apply_cancel, run_group, CancelTicket, Dispatch, FleetRouteCtx, GroupCtx};
+use super::{QueryExecState, QueryExecution, RouterState};
 use crate::budget::{GlobalBudget, TenantPool};
 use crate::embed::FeatureContext;
-use crate::models::SimExecutor;
+use crate::engine::Backend;
 use crate::pipeline::HybridFlowPipeline;
 use crate::planner::synthetic::SyntheticPlanner;
 use crate::planner::Planner;
+use crate::router::RoutePolicy;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::{sample_latents, Query};
@@ -49,7 +61,7 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
 /// Fleet-level knobs (per-query scheduling semantics come from the
-/// pipeline's [`ScheduleConfig`]).
+/// pipeline's [`ScheduleConfig`](super::ScheduleConfig)).
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
     /// Maximum queries in service at once; 0 = unlimited. Arrivals beyond
@@ -59,11 +71,20 @@ pub struct FleetConfig {
     pub global_k_cap: f64,
     /// Record the human-readable event trace (golden-trace tests, debug).
     pub record_trace: bool,
+    /// Per-tenant routing-policy overrides, indexed like the tenant list.
+    /// `None` (or an index beyond the vector) falls back to the pipeline's
+    /// default policy, so an empty vector reproduces a homogeneous fleet.
+    pub tenant_policies: Vec<Option<RoutePolicy>>,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { admission_limit: 0, global_k_cap: f64::INFINITY, record_trace: true }
+        FleetConfig {
+            admission_limit: 0,
+            global_k_cap: f64::INFINITY,
+            record_trace: true,
+            tenant_policies: Vec::new(),
+        }
     }
 }
 
@@ -114,6 +135,10 @@ pub struct FleetReport {
     pub offload_rate: f64,
     pub total_api_cost: f64,
     pub forced_edge: usize,
+    /// Hedged replicas cancelled (losing side of speculative dispatch).
+    pub hedge_cancelled: usize,
+    /// Dollars refunded for the unconsumed share of cancelled replicas.
+    pub hedge_refund: f64,
     pub edge_utilization: f64,
     pub cloud_utilization: f64,
     /// True unless the event heap ever popped times out of order.
@@ -132,11 +157,11 @@ impl FleetReport {
     }
 
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "fleet: {} queries over {:.1}s virtual ({:.3} q/s)\n\
              admission delay: mean {:.2}s  p99 {:.2}s\n\
              subtask queue wait: mean {:.2}s  p99 {:.2}s\n\
-             sojourn: p50 {:.2}s  p99 {:.2}s  max {:.2}s\n\
+             sojourn: p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  max {:.2}s\n\
              offload {:.1}%  C_API ${:.4}  forced-to-edge {}\n\
              utilization: edge {:.1}%  cloud {:.1}%",
             self.results.len(),
@@ -147,6 +172,7 @@ impl FleetReport {
             self.queue_wait.mean,
             self.queue_wait.p99,
             self.sojourn.p50,
+            self.sojourn.p95,
             self.sojourn.p99,
             self.sojourn.max,
             self.offload_rate * 100.0,
@@ -154,14 +180,23 @@ impl FleetReport {
             self.forced_edge,
             self.edge_utilization * 100.0,
             self.cloud_utilization * 100.0,
-        )
+        );
+        if self.hedge_cancelled > 0 {
+            out.push_str(&format!(
+                "\nhedge: {} losers cancelled, ${:.4} refunded",
+                self.hedge_cancelled, self.hedge_refund
+            ));
+        }
+        out
     }
 }
 
-// Event-kind priorities: at equal times, control events (arrival/planner)
-// run first, then ready-frontier markers, then subtask finishes — the
-// marker-before-finish order reproduces the single-query scheduler's
-// "ready first" tie-break.
+// Event-kind priorities: at equal times, control events (arrival/planner/
+// cancel) run first, then ready-frontier markers, then subtask finishes —
+// the marker-before-finish order reproduces the single-query scheduler's
+// "ready first" tie-break, and cancel-before-marker makes freed workers
+// and refunds visible to decisions at the same instant (exactly like the
+// single-query scheduler's pre-decision cancel flush).
 const PRI_CTRL: u8 = 0;
 const PRI_MARKER: u8 = 1;
 const PRI_DONE: u8 = 2;
@@ -172,6 +207,8 @@ enum EvKind {
     PlanDone,
     Marker,
     Done,
+    /// Cancellation of a hedged dispatch's losing replica.
+    Cancel,
     /// Completion of a chain-mode query: its subtasks executed
     /// synchronously at PlanDone, but the service slot is held until the
     /// chain's virtual makespan.
@@ -180,10 +217,7 @@ enum EvKind {
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct Ev {
-    time: f64,
-    pri: u8,
-    q: usize,
-    node: usize,
+    key: EventKey,
     kind: EvKind,
 }
 
@@ -191,14 +225,8 @@ impl Eq for Ev {}
 
 impl Ord for Ev {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap on (time, pri, q, node).
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.pri.cmp(&self.pri))
-            .then_with(|| other.q.cmp(&self.q))
-            .then_with(|| other.node.cmp(&self.node))
+        // Single shared ordering rule: scheduler::events::EventKey.
+        self.key.cmp(&other.key)
     }
 }
 
@@ -219,8 +247,10 @@ struct PlanState {
     children: Vec<Vec<usize>>,
     indeg: Vec<usize>,
     done: Vec<bool>,
-    ready: BinaryHeap<Finish>,
+    ready: BinaryHeap<EventKey>,
     st: QueryExecState,
+    /// Outstanding hedge-cancel tickets, indexed by node.
+    cancel_tickets: Vec<Option<CancelTicket>>,
     completed: usize,
 }
 
@@ -242,6 +272,12 @@ struct RunStats {
     admission_delays: Vec<f64>,
     queue_waits: Vec<f64>,
     sojourns: Vec<f64>,
+    hedge_cancelled: usize,
+    hedge_refund: f64,
+    /// Worker-busy seconds consumed by hedged losing replicas before their
+    /// cancellation, per side (edge, cloud) — counted into utilization so
+    /// the report reflects real pool occupancy, not just winner events.
+    hedge_loser_busy: [f64; 2],
     clock_monotone: bool,
 }
 
@@ -251,7 +287,7 @@ fn admit_query(
     now: f64,
     q: &mut QueryRun,
     planner: &SyntheticPlanner,
-    executor: &SimExecutor,
+    executor: &dyn Backend,
     n_max: usize,
     heap: &mut BinaryHeap<Ev>,
     stats: &mut RunStats,
@@ -263,7 +299,7 @@ fn admit_query(
     // Same call order as `HybridFlowPipeline::run_query_traced`: plan, then
     // latents, both on the query's own RNG stream.
     let plan = planner.plan(&q.query, n_max, &mut q.rng);
-    let latents = sample_latents(&plan.dag, &q.query, &executor.sp, &mut q.rng);
+    let latents = sample_latents(&plan.dag, &q.query, executor.sp(), &mut q.rng);
     let n = plan.dag.len();
     let fctx = FeatureContext::new(&plan.dag, &q.query);
     let depths = plan.dag.depths().unwrap_or_else(|| vec![0; n]);
@@ -282,9 +318,13 @@ fn admit_query(
         done: vec![false; n],
         ready: BinaryHeap::new(),
         st: QueryExecState::new(n),
+        cancel_tickets: (0..n).map(|_| None).collect(),
         completed: 0,
     });
-    heap.push(Ev { time: q.plan_done, pri: PRI_CTRL, q: qi, node: 0, kind: EvKind::PlanDone });
+    heap.push(Ev {
+        key: EventKey { time: q.plan_done, pri: PRI_CTRL, q: qi, node: 0 },
+        kind: EvKind::PlanDone,
+    });
     if record_trace {
         trace.push(format!(
             "t={:.6} tenant={} q={} admit wait={:.6}",
@@ -300,13 +340,17 @@ fn finalize_query(
     qi: usize,
     q: &mut QueryRun,
     tenant: &mut TenantPool,
-    executor: &SimExecutor,
+    executor: &dyn Backend,
     stats: &mut RunStats,
     trace: &mut Vec<String>,
     record_trace: bool,
 ) {
     let makespan_abs = {
         let ps = q.plan.as_mut().expect("finalize before planning");
+        debug_assert!(
+            ps.cancel_tickets.iter().all(Option::is_none),
+            "outstanding hedge cancels at finalize"
+        );
         let makespan_abs =
             ps.st.events.iter().map(|e| e.finish).fold(q.plan_done, f64::max);
         ps.st.budget.advance_latency(makespan_abs - q.plan_done);
@@ -346,7 +390,8 @@ fn finalize_query(
 /// query is exactly `pipeline.run_query_traced` with the job's RNG).
 /// `tenants` are the hierarchical dollar pools (see
 /// [`crate::budget::split_evenly`]); `arrivals` reference tenants by
-/// index. Router state is per-query (the paper's evaluation protocol);
+/// index. `cfg.tenant_policies` may override the routing policy per
+/// tenant. Router state is per-query (the paper's evaluation protocol);
 /// `persist_router` is ignored in fleet mode.
 pub fn run_fleet(
     pipeline: &HybridFlowPipeline,
@@ -358,9 +403,10 @@ pub fn run_fleet(
     let schedule = pipeline.config.schedule.clone();
     let n_max = pipeline.config.n_max;
     let planner = &pipeline.planner;
-    let executor = &pipeline.executor;
+    let executor: &dyn Backend = pipeline.executor.as_ref();
     let predictor = pipeline.predictor.as_ref();
     let record_trace = cfg.record_trace;
+    let hedge = schedule.hedge_gate();
 
     let mut tenants = tenants;
     assert!(!tenants.is_empty(), "fleet needs at least one tenant pool");
@@ -378,7 +424,14 @@ pub fn run_fleet(
             // Seed by job index, not arrival interleaving, so results are
             // exactly reproducible (same scheme as `server::serve`).
             let rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97f4A7C15));
-            let mut router = RouterState::new(pipeline.config.policy.clone());
+            // Per-tenant policy override (heterogeneous fleets); absent or
+            // None falls back to the pipeline default.
+            let policy = cfg
+                .tenant_policies
+                .get(a.tenant)
+                .and_then(|p| p.clone())
+                .unwrap_or_else(|| pipeline.config.policy.clone());
+            let mut router = RouterState::new(policy);
             router.begin_query(false);
             QueryRun {
                 tenant: a.tenant,
@@ -398,42 +451,52 @@ pub fn run_fleet(
 
     let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
     for (i, q) in queries.iter().enumerate() {
-        heap.push(Ev { time: q.arrival, pri: PRI_CTRL, q: i, node: 0, kind: EvKind::Arrival });
+        heap.push(Ev {
+            key: EventKey { time: q.arrival, pri: PRI_CTRL, q: i, node: 0 },
+            kind: EvKind::Arrival,
+        });
     }
 
     let mut stats = RunStats {
         admission_delays: Vec::new(),
         queue_waits: Vec::new(),
         sojourns: Vec::new(),
+        hedge_cancelled: 0,
+        hedge_refund: 0.0,
+        hedge_loser_busy: [0.0, 0.0],
         clock_monotone: true,
     };
     let mut trace: Vec<String> = Vec::new();
     let mut waitq: VecDeque<usize> = VecDeque::new();
     let mut active = 0usize;
-    let mut finished: Vec<(usize, f64, f64)> = Vec::new();
+    let mut dispatched: Vec<Dispatch> = Vec::new();
     let mut last_time = f64::NEG_INFINITY;
 
     while let Some(ev) = heap.pop() {
-        if ev.time < last_time - 1e-9 {
+        if ev.key.time < last_time - 1e-9 {
             stats.clock_monotone = false;
-            debug_assert!(false, "virtual clock moved backwards: {} < {}", ev.time, last_time);
+            debug_assert!(
+                false,
+                "virtual clock moved backwards: {} < {}",
+                ev.key.time, last_time
+            );
         }
-        last_time = last_time.max(ev.time);
+        last_time = last_time.max(ev.key.time);
 
         match ev.kind {
             EvKind::Arrival => {
-                let qi = ev.q;
+                let qi = ev.key.q;
                 if record_trace {
                     trace.push(format!(
                         "t={:.6} tenant={} q={} arrive",
-                        ev.time, queries[qi].tenant, qi
+                        ev.key.time, queries[qi].tenant, qi
                     ));
                 }
                 if cfg.admission_limit == 0 || active < cfg.admission_limit {
                     active += 1;
                     admit_query(
                         qi,
-                        ev.time,
+                        ev.key.time,
                         &mut queries[qi],
                         planner,
                         executor,
@@ -449,7 +512,7 @@ pub fn run_fleet(
             }
 
             EvKind::PlanDone => {
-                let qi = ev.q;
+                let qi = ev.key.q;
                 {
                     let q = &mut queries[qi];
                     let ti = q.tenant;
@@ -457,7 +520,7 @@ pub fn run_fleet(
                     if record_trace {
                         trace.push(format!(
                             "t={:.6} tenant={} q={} plan nodes={}",
-                            ev.time,
+                            ev.key.time,
                             ti,
                             qi,
                             ps.dag.len()
@@ -487,7 +550,7 @@ pub fn run_fleet(
                                 global: &mut global,
                                 forced_edge: &mut q.forced_edge,
                             };
-                            finished.clear();
+                            dispatched.clear();
                             run_group(
                                 &gctx,
                                 now,
@@ -500,17 +563,18 @@ pub fn run_fleet(
                                 &mut cloud_free,
                                 Some(&mut chain_clock),
                                 Some(&mut route),
-                                &mut finished,
+                                hedge,
+                                &mut dispatched,
                             );
                             // Chain subtasks bypass the pools: zero wait by
                             // construction (keeps the queue-wait summary
                             // well-defined for chain fleets).
-                            for _ in &finished {
+                            for _ in &dispatched {
                                 stats.queue_waits.push(0.0);
                             }
                             if record_trace {
-                                let tail = ps.st.events.len() - finished.len();
-                                for (k, &(node, start, fin)) in finished.iter().enumerate() {
+                                let tail = ps.st.events.len() - dispatched.len();
+                                for (k, d) in dispatched.iter().enumerate() {
                                     let side = if ps.st.events[tail + k].cloud {
                                         "cloud"
                                     } else {
@@ -518,7 +582,7 @@ pub fn run_fleet(
                                     };
                                     trace.push(format!(
                                         "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}",
-                                        now, ti, qi, node, side, start, fin, 0.0
+                                        now, ti, qi, d.node, side, d.start, d.finish, 0.0
                                     ));
                                 }
                             }
@@ -531,10 +595,12 @@ pub fn run_fleet(
                         // makespan; finalization happens at that instant so
                         // admission limits see the query as in-service.
                         heap.push(Ev {
-                            time: chain_clock,
-                            pri: PRI_DONE,
-                            q: qi,
-                            node: 0,
+                            key: EventKey {
+                                time: chain_clock,
+                                pri: PRI_DONE,
+                                q: qi,
+                                node: 0,
+                            },
                             kind: EvKind::ChainDone,
                         });
                     } else {
@@ -542,12 +608,14 @@ pub fn run_fleet(
                         let n = ps.dag.len();
                         for i in 0..n {
                             if ps.indeg[i] == 0 {
-                                ps.ready.push(Finish { time: q.plan_done, node: i });
+                                ps.ready.push(EventKey::ready(q.plan_done, i));
                                 heap.push(Ev {
-                                    time: q.plan_done,
-                                    pri: PRI_MARKER,
-                                    q: qi,
-                                    node: i,
+                                    key: EventKey {
+                                        time: q.plan_done,
+                                        pri: PRI_MARKER,
+                                        q: qi,
+                                        node: i,
+                                    },
                                     kind: EvKind::Marker,
                                 });
                             }
@@ -557,7 +625,7 @@ pub fn run_fleet(
             }
 
             EvKind::ChainDone => {
-                let qi = ev.q;
+                let qi = ev.key.q;
                 let ti = queries[qi].tenant;
                 finalize_query(
                     qi,
@@ -571,7 +639,7 @@ pub fn run_fleet(
                 if let Some(next) = waitq.pop_front() {
                     admit_query(
                         next,
-                        ev.time,
+                        ev.key.time,
                         &mut queries[next],
                         planner,
                         executor,
@@ -586,8 +654,50 @@ pub fn run_fleet(
                 }
             }
 
+            EvKind::Cancel => {
+                let qi = ev.key.q;
+                let q = &mut queries[qi];
+                let ti = q.tenant;
+                if let Some(ps) = q.plan.as_mut() {
+                    if let Some(ticket) = ps.cancel_tickets[ev.key.node].take() {
+                        let mut route = FleetRouteCtx {
+                            tenant: &mut tenants[ti],
+                            global: &mut global,
+                            forced_edge: &mut q.forced_edge,
+                        };
+                        apply_cancel(
+                            &ticket,
+                            ev.key.time,
+                            &mut ps.st,
+                            &mut edge_free,
+                            &mut cloud_free,
+                            Some(&mut route),
+                        );
+                        stats.hedge_cancelled += 1;
+                        stats.hedge_refund += ticket.refund_k;
+                        // The loser occupied its worker from start until
+                        // the cancel instant (zero if cancelled pre-start).
+                        let release =
+                            ev.key.time.clamp(ticket.start, ticket.reserved_until);
+                        stats.hedge_loser_busy[usize::from(ticket.cloud)] +=
+                            release - ticket.start;
+                        if record_trace {
+                            trace.push(format!(
+                                "t={:.6} tenant={} q={} cancel node={} side={} refund={:.6}",
+                                ev.key.time,
+                                ti,
+                                qi,
+                                ticket.node,
+                                if ticket.cloud { "cloud" } else { "edge" },
+                                ticket.refund_k
+                            ));
+                        }
+                    }
+                }
+            }
+
             EvKind::Marker => {
-                let qi = ev.q;
+                let qi = ev.key.q;
                 let q = &mut queries[qi];
                 let ti = q.tenant;
                 let ps = match q.plan.as_mut() {
@@ -600,7 +710,7 @@ pub fn run_fleet(
                     Some(f) => f.time,
                     None => continue,
                 };
-                if first_time > ev.time + 1e-12 {
+                if first_time > ev.key.time + 1e-12 {
                     continue;
                 }
                 let f0 = ps.ready.pop().unwrap();
@@ -630,7 +740,7 @@ pub fn run_fleet(
                     global: &mut global,
                     forced_edge: &mut q.forced_edge,
                 };
-                finished.clear();
+                dispatched.clear();
                 run_group(
                     &gctx,
                     now,
@@ -643,50 +753,68 @@ pub fn run_fleet(
                     &mut cloud_free,
                     None,
                     Some(&mut route),
-                    &mut finished,
+                    hedge,
+                    &mut dispatched,
                 );
-                for &(node, start, fin) in &finished {
-                    stats.queue_waits.push(start - now);
-                    heap.push(Ev { time: fin, pri: PRI_DONE, q: qi, node, kind: EvKind::Done });
+                for d in &dispatched {
+                    stats.queue_waits.push(d.start - now);
+                    heap.push(Ev {
+                        key: EventKey { time: d.finish, pri: PRI_DONE, q: qi, node: d.node },
+                        kind: EvKind::Done,
+                    });
+                    if let Some(ticket) = &d.cancel {
+                        ps.cancel_tickets[d.node] = Some(ticket.clone());
+                        heap.push(Ev {
+                            key: EventKey {
+                                time: d.finish,
+                                pri: PRI_CTRL,
+                                q: qi,
+                                node: d.node,
+                            },
+                            kind: EvKind::Cancel,
+                        });
+                    }
                 }
                 if record_trace {
-                    let tail = ps.st.events.len() - finished.len();
-                    for (k, &(node, start, fin)) in finished.iter().enumerate() {
+                    let tail = ps.st.events.len() - dispatched.len();
+                    for (k, d) in dispatched.iter().enumerate() {
                         let side = if ps.st.events[tail + k].cloud { "cloud" } else { "edge" };
                         trace.push(format!(
                             "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}",
                             now,
                             ti,
                             qi,
-                            node,
+                            d.node,
                             side,
-                            start,
-                            fin,
-                            start - now
+                            d.start,
+                            d.finish,
+                            d.start - now
                         ));
                     }
                 }
             }
 
             EvKind::Done => {
-                let qi = ev.q;
+                let qi = ev.key.q;
                 let mut completed_query = false;
                 {
                     let q = &mut queries[qi];
                     let ti = q.tenant;
                     let ps = q.plan.as_mut().expect("plan state exists");
-                    let node = ev.node;
+                    let node = ev.key.node;
                     if !ps.done[node] {
                         ps.done[node] = true;
                         for &c in &ps.children[node] {
                             ps.indeg[c] -= 1;
                             if ps.indeg[c] == 0 {
-                                ps.ready.push(Finish { time: ev.time, node: c });
+                                ps.ready.push(EventKey::ready(ev.key.time, c));
                                 heap.push(Ev {
-                                    time: ev.time,
-                                    pri: PRI_MARKER,
-                                    q: qi,
-                                    node: c,
+                                    key: EventKey {
+                                        time: ev.key.time,
+                                        pri: PRI_MARKER,
+                                        q: qi,
+                                        node: c,
+                                    },
                                     kind: EvKind::Marker,
                                 });
                             }
@@ -696,7 +824,7 @@ pub fn run_fleet(
                     if record_trace {
                         trace.push(format!(
                             "t={:.6} tenant={} q={} done node={}",
-                            ev.time, ti, qi, node
+                            ev.key.time, ti, qi, node
                         ));
                     }
                     if ps.completed == ps.dag.len() {
@@ -717,7 +845,7 @@ pub fn run_fleet(
                     if let Some(next) = waitq.pop_front() {
                         admit_query(
                             next,
-                            ev.time,
+                            ev.key.time,
                             &mut queries[next],
                             planner,
                             executor,
@@ -757,7 +885,9 @@ pub fn run_fleet(
     let n_decided: usize = tenants.iter().map(|t| t.state.n_decided).sum();
     let n_offloaded: usize = tenants.iter().map(|t| t.state.n_offloaded).sum();
     let forced_edge: usize = results.iter().map(|r| r.forced_edge).sum();
-    let (mut edge_busy, mut cloud_busy) = (0.0f64, 0.0f64);
+    // Winner events plus the consumed share of hedged losing replicas.
+    let (mut edge_busy, mut cloud_busy) =
+        (stats.hedge_loser_busy[0], stats.hedge_loser_busy[1]);
     // Chain-mode queries bypass the shared pools, so their events are not
     // pool busy time; utilization reads 0 for the chain ablation.
     if !schedule.chain_mode {
@@ -784,6 +914,8 @@ pub fn run_fleet(
         },
         total_api_cost: global.k_spent,
         forced_edge,
+        hedge_cancelled: stats.hedge_cancelled,
+        hedge_refund: stats.hedge_refund,
         edge_utilization: edge_busy / (span * edge_free.len() as f64),
         cloud_utilization: cloud_busy / (span * cloud_free.len() as f64),
         clock_monotone: stats.clock_monotone,
@@ -800,6 +932,7 @@ mod tests {
     use super::*;
     use crate::budget::TenantPool;
     use crate::config::simparams::SimParams;
+    use crate::models::SimExecutor;
     use crate::pipeline::PipelineConfig;
     use crate::router::{MirrorPredictor, RoutePolicy};
     use crate::workload::{generate_queries, Benchmark};
@@ -837,6 +970,7 @@ mod tests {
         assert!(report.horizon > 0.0);
         assert!(report.throughput_qps > 0.0);
         assert!((0.0..=1.0).contains(&report.offload_rate));
+        assert_eq!(report.hedge_cancelled, 0, "hedging is off by default");
         for r in &report.results {
             assert!(r.completed_at >= r.plan_done && r.plan_done >= r.admitted);
             assert!(r.admitted >= r.arrival);
@@ -988,5 +1122,97 @@ mod tests {
             .map(|e| e.api_cost)
             .fold(0.0f64, f64::max);
         assert!(report.global.k_spent <= 1e-6 + max_call + 1e-12);
+    }
+
+    #[test]
+    fn per_tenant_policies_route_differently() {
+        // One fleet, two tenants, opposite policies: the override layer
+        // must steer every decision per tenant.
+        let sp = SimParams::default();
+        let p = pipeline(RoutePolicy::hybridflow(&sp)); // default, unused by overrides
+        let cfg = FleetConfig {
+            tenant_policies: vec![Some(RoutePolicy::AllEdge), Some(RoutePolicy::AllCloud)],
+            ..Default::default()
+        };
+        let tenants = vec![TenantPool::unlimited("edge"), TenantPool::unlimited("cloud")];
+        let report = run_fleet(&p, &cfg, tenants, arrivals(8, 2.0, 2, 31), 9);
+        assert_eq!(report.tenants[0].state.n_offloaded, 0, "all-edge tenant offloaded");
+        assert!(report.tenants[0].state.n_decided > 0);
+        assert_eq!(
+            report.tenants[1].state.n_offloaded, report.tenants[1].state.n_decided,
+            "all-cloud tenant kept something on edge"
+        );
+        assert_eq!(report.tenants[0].state.k_used, 0.0);
+        assert!(report.tenants[1].state.k_used > 0.0);
+    }
+
+    #[test]
+    fn missing_override_falls_back_to_pipeline_policy() {
+        // Tenant 1 has no override entry: it must behave like the pipeline
+        // default (AllCloud here), while tenant 0 is pinned to AllEdge.
+        let p = pipeline(RoutePolicy::AllCloud);
+        let cfg = FleetConfig {
+            tenant_policies: vec![Some(RoutePolicy::AllEdge)],
+            ..Default::default()
+        };
+        let tenants = vec![TenantPool::unlimited("pinned"), TenantPool::unlimited("default")];
+        let report = run_fleet(&p, &cfg, tenants, arrivals(6, 2.0, 2, 33), 12);
+        assert_eq!(report.tenants[0].state.n_offloaded, 0);
+        assert_eq!(
+            report.tenants[1].state.n_offloaded,
+            report.tenants[1].state.n_decided
+        );
+    }
+
+    #[test]
+    fn hedged_fleet_cancels_and_refunds() {
+        // Edge-pinned policy + hedge-everything: speculative cloud replicas
+        // fire for every subtask; losers must be cancelled with refunds and
+        // all dollar scopes must stay consistent.
+        let mut p = pipeline(RoutePolicy::AllEdge);
+        p.config.schedule.hedge = true;
+        p.config.schedule.hedge_threshold = f64::NEG_INFINITY;
+        let report = run_fleet(
+            &p,
+            &FleetConfig::default(),
+            vec![TenantPool::unlimited("t")],
+            arrivals(8, 1.0, 1, 41),
+            7,
+        );
+        assert!(report.hedge_cancelled > 0, "no hedged losers cancelled");
+        assert!(report.hedge_refund >= 0.0);
+        let tenant_sum: f64 = report.tenants.iter().map(|t| t.state.k_used).sum();
+        assert!(
+            (report.global.k_spent - tenant_sum).abs() < 1e-9,
+            "global {} vs tenants {}",
+            report.global.k_spent,
+            tenant_sum
+        );
+        assert!(report.global.k_spent >= 0.0);
+        assert!(report.render().contains("hedge:"));
+        // Cancel lines appear in the trace (hedge-on only).
+        assert!(report.trace.iter().any(|l| l.contains(" cancel node=")));
+    }
+
+    #[test]
+    fn hedged_fleet_is_deterministic() {
+        let make = || {
+            let mut p = pipeline(RoutePolicy::AllEdge);
+            p.config.schedule.hedge = true;
+            p.config.schedule.hedge_threshold = 0.2;
+            run_fleet(
+                &p,
+                &FleetConfig::default(),
+                vec![TenantPool::unlimited("t")],
+                arrivals(8, 0.5, 1, 43),
+                23,
+            )
+        };
+        let a = make();
+        let b = make();
+        assert_eq!(a.trace_text(), b.trace_text());
+        assert_eq!(a.total_api_cost, b.total_api_cost);
+        assert_eq!(a.hedge_cancelled, b.hedge_cancelled);
+        assert_eq!(a.hedge_refund, b.hedge_refund);
     }
 }

@@ -93,6 +93,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -107,6 +108,7 @@ impl Summary {
                 max: f64::NAN,
                 p50: f64::NAN,
                 p90: f64::NAN,
+                p95: f64::NAN,
                 p99: f64::NAN,
             };
         }
@@ -124,6 +126,7 @@ impl Summary {
             max: sorted[sorted.len() - 1],
             p50: percentile_sorted(&sorted, 50.0),
             p90: percentile_sorted(&sorted, 90.0),
+            p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
         }
     }
@@ -236,8 +239,10 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert!((s.p50 - 2.0).abs() < 1e-12);
+        assert!(s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         let empty = Summary::of(&[]);
         assert!(empty.mean.is_nan());
+        assert!(empty.p95.is_nan());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use crate::budget::BudgetState;
 use crate::dag::TaskDag;
 use crate::embed::FeatureContext;
+use crate::engine::Backend;
 use crate::models::SimExecutor;
 use crate::planner::{Planner, synthetic::SyntheticPlanner};
 use crate::util::json::Json;
@@ -43,14 +44,16 @@ impl ProfileRecord {
     }
 }
 
-/// Profile a set of queries: returns per-subtask records.
+/// Profile a set of queries: returns per-subtask records. Paired
+/// edge/cloud targets come through the [`Backend`] seam, so any endpoint
+/// pair (simulated or replayed) can be profiled.
 pub fn profile_queries(
     queries: &[Query],
-    executor: &SimExecutor,
+    executor: &dyn Backend,
     planner: &SyntheticPlanner,
     seed: u64,
 ) -> Vec<ProfileRecord> {
-    let sp = &executor.sp;
+    let sp = executor.sp();
     let mut rng = Rng::new(seed);
     let mut records = Vec::new();
 
@@ -70,10 +73,10 @@ pub fn profile_queries(
                 + dag.nodes[i].deps.iter().map(|&d| out_tokens[d]).sum::<f64>();
             let dq = executor.true_dq(q.domain, &latents, i);
             let cloud_out = latents[i].out_tokens * sp.cloud_verbosity;
-            let dl = (executor.cloud.latency_mean(in_tok, cloud_out)
-                - executor.edge.latency_mean(in_tok, latents[i].out_tokens))
+            let dl = (executor.profile(true).latency_mean(in_tok, cloud_out)
+                - executor.profile(false).latency_mean(in_tok, latents[i].out_tokens))
                 .max(0.0);
-            let dk = executor.cloud.api_cost(in_tok, cloud_out);
+            let dk = executor.profile(true).api_cost(in_tok, cloud_out);
             let c = BudgetState::normalized_cost(sp, dl, dk);
             let target = (dq / (c + sp.eps_utility)).clamp(0.0, 1.0);
 

@@ -93,6 +93,9 @@ fn fleet_single_query_reproduces_run_query_exactly() {
         ("chain", ScheduleConfig { chain_mode: true, ..Default::default() }),
         ("unbatched", ScheduleConfig { batch_frontier: false, ..Default::default() }),
         ("narrow", ScheduleConfig { edge_workers: 2, cloud_workers: 2, ..Default::default() }),
+        // Speculative dual dispatch: the cancel/refund machinery must also
+        // reduce to the single-query scheduler at N=1.
+        ("hedged", ScheduleConfig { hedge: true, hedge_threshold: 0.3, ..Default::default() }),
     ];
     for (pname, policy) in &policies {
         for (sname, schedule) in &schedules {
@@ -153,11 +156,11 @@ fn widely_spaced_first_query_unaffected_by_successors() {
 // Golden trace.
 // ---------------------------------------------------------------------------
 
-fn golden_workload() -> FleetReport {
+/// The pinned golden fleet, parameterized over per-query scheduling so
+/// regression tests can vary knobs (e.g. touched-but-off hedge fields)
+/// against the one canonical workload definition.
+fn golden_workload_with(schedule: ScheduleConfig) -> FleetReport {
     let sp = SimParams::default();
-    let mut schedule = ScheduleConfig::default();
-    schedule.edge_workers = 4;
-    schedule.cloud_workers = 8;
     let pipeline = pipeline_with(RoutePolicy::hybridflow(&sp), schedule);
     let tenants = vec![
         TenantPool::unlimited("anchor"),
@@ -170,6 +173,14 @@ fn golden_workload() -> FleetReport {
         .map(|(i, query)| FleetArrival { time: i as f64 * 1.5, tenant: i % 3, query })
         .collect();
     run_fleet(&pipeline, &FleetConfig::default(), tenants, arrivals, 1234)
+}
+
+fn golden_schedule() -> ScheduleConfig {
+    ScheduleConfig { edge_workers: 4, cloud_workers: 8, ..Default::default() }
+}
+
+fn golden_workload() -> FleetReport {
+    golden_workload_with(golden_schedule())
 }
 
 fn golden_path() -> PathBuf {
@@ -204,6 +215,33 @@ fn golden_trace_three_tenant_fleet() {
         }
         std::fs::write(&path, &first).expect("write golden file");
         eprintln!("[golden_trace] bootstrapped {}", path.display());
+    }
+}
+
+/// Satellite regression: with hedging off, the refactored engine (Backend
+/// + Router seams, shared event ordering, cancel machinery) must reproduce
+/// the pre-refactor fleet trace byte-for-byte. We run the exact golden
+/// workload through a pipeline whose hedge knobs were touched and turned
+/// back off, and require byte-identity with the default-config trace and
+/// with the pinned golden file when present.
+#[test]
+fn hedge_off_reproduces_golden_trace() {
+    let base = golden_workload().trace_text();
+
+    let mut schedule = golden_schedule();
+    schedule.hedge = false; // explicit off
+    schedule.hedge_threshold = 0.123; // knob touched: must be inert
+    let touched = golden_workload_with(schedule).trace_text();
+
+    assert_eq!(touched, base, "hedge=off must be byte-identical to the default engine");
+    let path = golden_path();
+    if path.exists() {
+        let pinned = std::fs::read_to_string(&path).expect("read golden file");
+        assert_eq!(
+            touched, pinned,
+            "hedge=off trace diverged from the pinned golden file {}",
+            path.display()
+        );
     }
 }
 
@@ -248,6 +286,7 @@ fn prop_fleet_pool_occupancy_and_clock() {
             cloud_workers,
             batch_frontier: g.bool(),
             chain_mode: false,
+            ..Default::default()
         };
         let pipeline = pipeline_with(policy, schedule);
         let seed = g.rng.next_u64() % 10_000;
@@ -309,6 +348,59 @@ fn prop_tenant_spend_never_exceeds_pool_by_more_than_one_call() {
             .iter()
             .all(|t| t.state.k_used <= t.k_cap + max_call + 1e-12)
             && (report.global.k_spent - tenant_sum).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_hedged_refunds_keep_spend_bounded_and_consistent() {
+    // Satellite property: cancelled hedged calls never leave a tenant pool
+    // above its cap by more than one call's billed cost, refunds never
+    // drive any dollar scope negative, and the global ledger always equals
+    // the tenant sum (spend and refunds are recorded symmetrically).
+    let sp = SimParams::default();
+    forall("hedged spend within [0, cap + one call]; global == tenant sum", 25, move |g| {
+        let cap_a = g.f64_in(0.0..0.01);
+        let cap_b = g.f64_in(0.0..0.002);
+        let n = g.usize_in(4..10);
+        let policy = match g.usize_in(0..3) {
+            0 => RoutePolicy::AllEdge,
+            1 => RoutePolicy::FixedThreshold(g.f64_in(0.3..0.9)),
+            _ => RoutePolicy::hybridflow(&sp),
+        };
+        let schedule = ScheduleConfig {
+            hedge: true,
+            hedge_threshold: g.f64_in(0.0..0.7),
+            edge_workers: g.usize_in(1..3),
+            ..Default::default()
+        };
+        let pipeline = pipeline_with(policy, schedule);
+        let seed = g.rng.next_u64() % 10_000;
+        let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, n, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(i, query)| FleetArrival { time: i as f64 * 1.0, tenant: i % 2, query })
+            .collect();
+        let tenants = vec![TenantPool::new("a", cap_a), TenantPool::new("b", cap_b)];
+        let cfg = FleetConfig { record_trace: false, ..Default::default() };
+        let report = run_fleet(&pipeline, &cfg, tenants, arrivals, seed);
+
+        // Events record the dispatch-time bill (full speculative cost), so
+        // the max event bill bounds any single call's overshoot.
+        let max_call = report
+            .results
+            .iter()
+            .flat_map(|r| r.exec.events.iter())
+            .map(|e| e.api_cost)
+            .fold(0.0f64, f64::max);
+        let tenant_sum: f64 = report.tenants.iter().map(|t| t.state.k_used).sum();
+        report
+            .tenants
+            .iter()
+            .all(|t| t.state.k_used >= 0.0 && t.state.k_used <= t.k_cap + max_call + 1e-12)
+            && report.tenants.iter().all(|t| t.state.c_used >= 0.0)
+            && report.global.k_spent >= 0.0
+            && (report.global.k_spent - tenant_sum).abs() < 1e-9
+            && report.hedge_refund >= 0.0
     });
 }
 

@@ -295,3 +295,61 @@ fn direct_cheaper_than_cot_both_sides() {
         assert!(d < c, "cloud={cloud}: direct {d} cot {c}");
     }
 }
+
+#[test]
+fn replay_backend_reproduces_recorded_schedule() {
+    // Record a full scheduled execution through the Backend seam, then
+    // re-serve the tape with ReplayBackend: the schedule (starts, finishes,
+    // makespan), costs, and per-subtask correctness must reproduce exactly,
+    // even though replay consumes no RNG.
+    use hybridflow::engine::{Backend, RecordingBackend};
+    use hybridflow::router::RouterState;
+    use hybridflow::scheduler::execute_query;
+    use hybridflow::workload::sample_latents;
+
+    let recorder = RecordingBackend::new(SimExecutor::paper_pair());
+    let planner = SyntheticPlanner::paper_main();
+    let q = generate_queries(Benchmark::Gpqa, 1, 5).pop().unwrap();
+    let mut rng = Rng::new(77);
+    let plan = planner.plan(&q, 7, &mut rng);
+    let latents = sample_latents(&plan.dag, &q, recorder.sp(), &mut rng);
+    let pred = MirrorPredictor::synthetic_for_tests();
+
+    let run = |backend: &dyn Backend| {
+        let mut router = RouterState::new(RoutePolicy::AllCloud);
+        let mut rng = Rng::new(9);
+        execute_query(
+            &plan.dag,
+            &latents,
+            &q,
+            backend,
+            &pred,
+            &mut router,
+            2.0,
+            &ScheduleConfig::default(),
+            &mut rng,
+        )
+    };
+
+    let original = run(&recorder);
+    assert_eq!(recorder.records().len(), plan.dag.len());
+    let replay = recorder.into_replay();
+    let replayed = run(&replay);
+    assert_eq!(replay.remaining(), 0, "replay must consume the whole tape");
+
+    // Accuracy verdict replays from the tape (not re-drawn from the RNG
+    // stream, which sits at a different position during replay).
+    assert_eq!(original.correct, replayed.correct);
+    assert_eq!(original.latency, replayed.latency);
+    assert_eq!(original.api_cost, replayed.api_cost);
+    assert_eq!(original.offload_rate, replayed.offload_rate);
+    assert_eq!(original.events.len(), replayed.events.len());
+    for (a, b) in original.events.iter().zip(&replayed.events) {
+        assert_eq!(a.node, b.node);
+        assert_eq!(a.start, b.start);
+        assert_eq!(a.finish, b.finish);
+        assert_eq!(a.api_cost, b.api_cost);
+        assert_eq!(a.correct, b.correct);
+        assert_eq!(a.cloud, b.cloud);
+    }
+}

@@ -158,6 +158,7 @@ fn prop_compression_ratio_bounds() {
 
 #[test]
 fn prop_makespan_within_theoretical_bounds() {
+    use hybridflow::engine::Backend;
     use hybridflow::models::SimExecutor;
     use hybridflow::router::{MirrorPredictor, RoutePolicy, RouterState};
     use hybridflow::scheduler::{execute_query, ScheduleConfig};
@@ -170,7 +171,7 @@ fn prop_makespan_within_theoretical_bounds() {
         let (valid, _) = validate_and_repair(&dag, 7);
         let q = &generate_queries(Benchmark::Gpqa, 1, g.rng.next_u64() % 999)[0];
         let mut rng = Rng::new(g.rng.next_u64());
-        let latents = sample_latents(&valid, q, &executor.sp, &mut rng);
+        let latents = sample_latents(&valid, q, executor.sp(), &mut rng);
         let planning = g.f64_in(0.5..3.0);
         let mut router = RouterState::new(RoutePolicy::Random(g.unit_f64()));
         let exec = execute_query(
@@ -230,6 +231,7 @@ fn prop_budget_accumulation_monotone_and_bounded() {
 #[test]
 fn prop_exposure_bounded_and_consistent() {
     use hybridflow::metrics::exposure::Exposure;
+    use hybridflow::engine::Backend;
     use hybridflow::models::SimExecutor;
     use hybridflow::router::{MirrorPredictor, RoutePolicy, RouterState};
     use hybridflow::scheduler::{execute_query, ScheduleConfig};
@@ -242,7 +244,7 @@ fn prop_exposure_bounded_and_consistent() {
         let (valid, _) = validate_and_repair(&dag, 7);
         let q = &generate_queries(Benchmark::MmluPro, 1, g.rng.next_u64() % 999)[0];
         let mut rng = Rng::new(g.rng.next_u64());
-        let latents = sample_latents(&valid, q, &executor.sp, &mut rng);
+        let latents = sample_latents(&valid, q, executor.sp(), &mut rng);
         let mut router = RouterState::new(RoutePolicy::Random(g.unit_f64()));
         let exec = execute_query(
             &valid, &latents, q, &executor, &predictor, &mut router, 1.0,

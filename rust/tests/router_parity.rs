@@ -1,0 +1,237 @@
+//! Router-seam parity suite (PR 2 satellite).
+//!
+//! The scheduler used to resolve `RoutePolicy` with an inline enum match;
+//! it now dispatches through `dyn Router`. Two guarantees are pinned here:
+//!
+//! 1. **Decision-for-decision parity** — `ReferenceRouter` below is a
+//!    verbatim transcription of the pre-refactor enum match (the spec).
+//!    For every policy variant, the trait path must produce the identical
+//!    decision and threshold at every step of a long synthetic decision
+//!    stream, including bandit feedback and RNG draws.
+//! 2. **End-to-end offload-rate table** — full `QueryExecution` runs on a
+//!    fixed seed grid must land on the analytically-known offload rates
+//!    per policy (exact for the degenerate policies, banded for the
+//!    stochastic/adaptive ones).
+
+use hybridflow::budget::BudgetState;
+use hybridflow::config::simparams::SimParams;
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::SyntheticPlanner;
+use hybridflow::router::{LinUcb, MirrorPredictor, RoutePolicy, RouterState, Threshold};
+use hybridflow::util::rng::Rng;
+use hybridflow::workload::{generate_queries, Benchmark};
+use std::sync::Arc;
+
+/// Verbatim pre-refactor router: the enum match exactly as it stood before
+/// the `Router` trait existed. Kept in the test as the behavioral spec.
+struct ReferenceRouter {
+    policy: RoutePolicy,
+    bandit: LinUcb,
+    tau_trace: Vec<f64>,
+}
+
+impl ReferenceRouter {
+    fn new(policy: RoutePolicy) -> ReferenceRouter {
+        ReferenceRouter { policy, bandit: LinUcb::paper_default(), tau_trace: Vec::new() }
+    }
+
+    fn decide(
+        &mut self,
+        sp: &SimParams,
+        u_hat: f64,
+        position: f64,
+        budget: &BudgetState,
+        oracle_ratio: Option<f64>,
+        rng: &mut Rng,
+    ) -> bool {
+        match &mut self.policy {
+            RoutePolicy::AllEdge => {
+                self.tau_trace.push(1.0);
+                false
+            }
+            RoutePolicy::AllCloud => {
+                self.tau_trace.push(0.0);
+                true
+            }
+            RoutePolicy::Random(p) => {
+                self.tau_trace.push(1.0 - *p);
+                rng.bernoulli(*p)
+            }
+            RoutePolicy::FixedThreshold(t) => {
+                self.tau_trace.push(*t);
+                u_hat > *t
+            }
+            RoutePolicy::Learned { threshold, calibrate } => {
+                let tau = threshold.tau(budget);
+                self.tau_trace.push(tau);
+                let u_bar = if *calibrate {
+                    let x = LinUcb::context(sp, u_hat, budget, position);
+                    self.bandit.calibrated(&x)
+                } else {
+                    u_hat
+                };
+                let r = u_bar > tau;
+                threshold.update(budget);
+                r
+            }
+            RoutePolicy::Oracle => {
+                let lambda = if budget.c_used >= sp.c_max { f64::INFINITY } else { 0.35 };
+                self.tau_trace.push(0.0);
+                oracle_ratio.map_or(false, |r| r > lambda)
+            }
+        }
+    }
+
+    fn observe_offloaded(
+        &mut self,
+        sp: &SimParams,
+        u_hat: f64,
+        position: f64,
+        budget_at_decision: &BudgetState,
+        realized_dq: f64,
+        realized_c: f64,
+    ) {
+        if let RoutePolicy::Learned { calibrate: true, threshold } = &self.policy {
+            let lambda = threshold.tau(budget_at_decision);
+            let reward =
+                (realized_dq - lambda * realized_c) / (realized_c + sp.eps_utility);
+            let x = LinUcb::context(sp, u_hat, budget_at_decision, position);
+            self.bandit.update(&x, reward.clamp(-1.0, 1.0));
+        }
+    }
+}
+
+fn policy_grid(sp: &SimParams) -> Vec<(&'static str, RoutePolicy)> {
+    vec![
+        ("all_edge", RoutePolicy::AllEdge),
+        ("all_cloud", RoutePolicy::AllCloud),
+        ("random", RoutePolicy::Random(0.37)),
+        ("fixed", RoutePolicy::FixedThreshold(0.5)),
+        ("fixed_tau", RoutePolicy::Learned { threshold: Threshold::Fixed(0.5), calibrate: false }),
+        ("hybridflow", RoutePolicy::hybridflow(sp)),
+        ("eq27", RoutePolicy::hybridflow_eq27(sp)),
+        ("calibrated", RoutePolicy::hybridflow_calibrated(sp)),
+        ("oracle", RoutePolicy::Oracle),
+    ]
+}
+
+#[test]
+fn trait_router_matches_reference_enum_decision_for_decision() {
+    let sp = SimParams::default();
+    for (name, policy) in policy_grid(&sp) {
+        for seed in [7u64, 99, 4242] {
+            let mut new_router = RouterState::new(policy.clone());
+            let mut ref_router = ReferenceRouter::new(policy.clone());
+            // Identical RNG streams: one for each path, same seed.
+            let mut rng_new = Rng::new(seed);
+            let mut rng_ref = Rng::new(seed);
+            // Shared synthetic decision stream (inputs + budget evolution).
+            let mut stream = Rng::new(seed ^ 0xDEC1DE);
+            let mut budget = BudgetState::new();
+            for step in 0..300 {
+                let u_hat = stream.f64();
+                let position = stream.f64();
+                let ratio = stream.f64() * 2.0;
+                let a = new_router.decide(
+                    &sp, u_hat, position, &budget, Some(ratio), &mut rng_new,
+                );
+                let b = ref_router.decide(
+                    &sp, u_hat, position, &budget, Some(ratio), &mut rng_ref,
+                );
+                assert_eq!(a, b, "{name}/seed{seed} step {step}: decision diverged");
+                assert_eq!(
+                    new_router.tau_trace.last(),
+                    ref_router.tau_trace.last(),
+                    "{name}/seed{seed} step {step}: tau diverged"
+                );
+                // Evolve the budget identically on both paths and feed the
+                // partial-feedback channel on offloads.
+                let snapshot = budget.clone();
+                if a {
+                    let dl = stream.f64() * 3.0;
+                    let dk = stream.f64() * 0.002;
+                    budget.record_cloud(&sp, dl, dk);
+                    let dq = stream.f64() * 0.2;
+                    let c = BudgetState::normalized_cost(&sp, dl, dk);
+                    new_router.observe_offloaded(&sp, u_hat, position, &snapshot, dq, c);
+                    ref_router.observe_offloaded(&sp, u_hat, position, &snapshot, dq, c);
+                } else {
+                    budget.record_edge();
+                }
+                if step % 17 == 0 {
+                    budget.advance_latency(step as f64 * 0.1);
+                }
+            }
+            // The RNG streams must have advanced in lockstep (no extra or
+            // missing draws on either path).
+            assert_eq!(
+                rng_new.next_u64(),
+                rng_ref.next_u64(),
+                "{name}/seed{seed}: RNG streams out of sync"
+            );
+            assert_eq!(new_router.tau_trace.len(), ref_router.tau_trace.len());
+            assert_eq!(new_router.bandit_updates(), ref_router.bandit.n_updates);
+        }
+    }
+}
+
+fn mean_offload(policy: RoutePolicy, seeds: &[u64], n: usize) -> f64 {
+    let sp = SimParams::default();
+    let mut cfg = PipelineConfig::paper_default(&sp);
+    cfg.policy = policy;
+    let pipeline = HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        Arc::new(MirrorPredictor::synthetic_for_tests()),
+        cfg,
+    );
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for &seed in seeds {
+        let mut rng = Rng::new(seed ^ 0x0FF);
+        for q in generate_queries(Benchmark::Gpqa, n, seed) {
+            total += pipeline.run_query(&q, &mut rng).offload_rate;
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+#[test]
+fn offload_rate_table_on_fixed_seed_grid() {
+    let seeds = [11u64, 22, 33];
+    let n = 60;
+    // (policy, expected offload rate, tolerance). The degenerate policies
+    // are analytic and must be exact; Random matches its parameter to
+    // sampling noise.
+    let table: Vec<(RoutePolicy, f64, f64)> = vec![
+        (RoutePolicy::AllEdge, 0.0, 0.0),
+        (RoutePolicy::AllCloud, 1.0, 0.0),
+        // u_hat can never exceed +inf / always exceeds -inf: strict-`>`
+        // threshold semantics pin both ends regardless of predictor range.
+        (RoutePolicy::FixedThreshold(f64::INFINITY), 0.0, 0.0),
+        (RoutePolicy::FixedThreshold(f64::NEG_INFINITY), 1.0, 0.0),
+        (RoutePolicy::Random(0.5), 0.5, 0.08),
+        (RoutePolicy::Random(0.2), 0.2, 0.08),
+    ];
+    for (policy, expect, tol) in table {
+        let label = policy.label();
+        let rate = mean_offload(policy, &seeds, n);
+        assert!(
+            (rate - expect).abs() <= tol + 1e-12,
+            "{label}: offload {rate} expected {expect} +/- {tol}"
+        );
+    }
+    // Adaptive policies: partial offloading strictly inside (0, 1) on this
+    // grid (the paper's ~40% regime).
+    let sp = SimParams::default();
+    for policy in [RoutePolicy::hybridflow(&sp), RoutePolicy::Oracle] {
+        let label = policy.label();
+        let rate = mean_offload(policy, &seeds, n);
+        assert!(
+            rate > 0.0 && rate < 1.0,
+            "{label}: expected partial offloading, got {rate}"
+        );
+    }
+}

@@ -13,6 +13,23 @@ echo "== cargo test -q =="
 # equivalence, and the fleet property suite.
 cargo test -q
 
+echo "== example smoke runs =="
+# Tiny-N runs of the fleet examples so regressions in runnable drivers
+# (not just the library) fail fast. These are part of verification.
+cargo run --release --example fleet_sim -- --n 6 --rate 2.0 --tenants 2
+cargo run --release --example fleet_mixed_policy -- --n 6 --rate 1.0
+
+echo "== cargo clippy --no-default-features (advisory) =="
+# Lints are reported but do not fail verification (the seed predates
+# clippy enforcement).
+if cargo clippy --version >/dev/null 2>&1; then
+    if ! cargo clippy --no-default-features; then
+        echo "WARNING: cargo clippy reported issues (advisory only)"
+    fi
+else
+    echo "clippy unavailable; skipping lint check"
+fi
+
 echo "== cargo fmt --check (advisory) =="
 # The seed predates rustfmt enforcement, so formatting drift is reported
 # but does not fail verification.
