@@ -1,0 +1,133 @@
+//! Result-cache fleet driver: a Zipf-popularity workload (a few prototype
+//! queries dominate the arrival stream) served with the cross-query
+//! subtask cache swept across capacities, showing hit rate climbing,
+//! transmitted cloud tokens falling, and the sojourn distribution
+//! tightening — then a determinism check (two cached runs must produce
+//! byte-identical event traces).
+//!
+//! The scenario itself (tenants, worker pools, shared cache tier) is the
+//! canonical one from `eval::experiments::fleet_cache_scenario`, so this
+//! driver and the `fleet_cache` experiment can never drift apart.
+//!
+//! ```sh
+//! cargo run --release --example fleet_cache -- \
+//!     [--benchmark gpqa] [--n 60] [--rate 0.5] \
+//!     [--zipf 1.1] [--distinct 8] [--policy lru] [--seed 11]
+//! ```
+
+use hybridflow::cache::CachePolicyKind;
+use hybridflow::eval::experiments::{
+    fleet_cache_scenario, fleet_cloud_tokens, FleetCacheScenario,
+};
+use hybridflow::router::{MirrorPredictor, UtilityPredictor};
+use hybridflow::scheduler::fleet::FleetReport;
+use hybridflow::server::serve_fleet_zipf;
+use hybridflow::util::cli::Args;
+use hybridflow::workload::trace::{ArrivalProcess, ZipfMix};
+use hybridflow::workload::Benchmark;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let bench = Benchmark::parse(args.get_or("benchmark", "gpqa"))
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark"))?;
+    let n = args.get_usize_or("n", 60)?;
+    let rate = args.get_f64_or("rate", 0.5)?;
+    let zipf_exponent = args.get_f64_or("zipf", 1.1)?;
+    let distinct = args.get_usize_or("distinct", 8)?.max(1);
+    let policy = CachePolicyKind::parse(args.get_or("policy", "lru"))
+        .ok_or_else(|| anyhow::anyhow!("unknown cache policy (lru|lfu|ttl[:secs])"))?;
+    let seed = args.get_u64_or("seed", 11)?;
+
+    let artifacts = hybridflow::config::default_artifacts_dir();
+    let predictor: Arc<dyn UtilityPredictor> =
+        match MirrorPredictor::from_meta_file(&artifacts.join("router_meta.json")) {
+            Ok(p) => Arc::new(p),
+            Err(_) => Arc::new(MirrorPredictor::synthetic_for_tests()),
+        };
+
+    let zipf = ZipfMix::new(zipf_exponent, distinct);
+    let run = |capacity: usize| -> FleetReport {
+        let knobs = FleetCacheScenario {
+            capacity,
+            policy,
+            zipf_exponent,
+            zipf_distinct: distinct,
+            record_trace: true,
+            ..Default::default()
+        };
+        let (pipeline, tenants, cfg) = fleet_cache_scenario(Arc::clone(&predictor), &knobs);
+        serve_fleet_zipf(
+            &pipeline,
+            &cfg,
+            tenants,
+            bench,
+            n,
+            &ArrivalProcess::Poisson { rate },
+            &zipf,
+            seed,
+        )
+    };
+
+    println!(
+        "fleet_cache: {n} x {} queries, {distinct} zipf(s={zipf_exponent}) prototypes, \
+         poisson {rate} q/s, policy {}, seed {seed}\n",
+        bench.display(),
+        policy.label(),
+    );
+
+    let acc = |r: &FleetReport| {
+        r.results.iter().filter(|q| q.exec.correct).count() as f64
+            / r.results.len().max(1) as f64
+            * 100.0
+    };
+
+    println!(
+        "{:>8}  {:>9}  {:>12}  {:>12}  {:>10}  {:>8}  {:>8}  {:>7}",
+        "capacity", "hit rate", "cloud toks", "toks saved", "C_API", "p50", "p95", "acc"
+    );
+    let mut cached_run: Option<FleetReport> = None;
+    for capacity in [0usize, 16, 64, 256] {
+        let report = run(capacity);
+        let (hit_rate, saved) = report
+            .cache
+            .as_ref()
+            .map_or((0.0, 0.0), |c| (c.hit_rate() * 100.0, c.tokens_saved));
+        println!(
+            "{:>8}  {:>8.1}%  {:>12.0}  {:>12.0}  {:>10.4}  {:>7.2}s  {:>7.2}s  {:>6.2}%",
+            if capacity == 0 { "off".into() } else { capacity.to_string() },
+            hit_rate,
+            fleet_cloud_tokens(&report),
+            saved,
+            report.total_api_cost,
+            report.sojourn.p50,
+            report.sojourn.p95,
+            acc(&report),
+        );
+        if capacity == 256 {
+            cached_run = Some(report);
+        }
+    }
+
+    // Determinism: a repeat of the largest cached run must reproduce its
+    // event trace byte-for-byte (the cache resets cold at each run start).
+    let reference = cached_run.expect("capacity sweep ran");
+    let again = run(256);
+    anyhow::ensure!(
+        again.trace_text() == reference.trace_text(),
+        "determinism violated: cached run is not reproducible"
+    );
+    let stats = reference.cache.as_ref().expect("cache stats");
+    println!(
+        "\ncache @256: hit rate {:.1}% ({}/{} lookups, {} shared-tier), \
+         {} evicted, {} expired",
+        stats.hit_rate() * 100.0,
+        stats.hits,
+        stats.lookups,
+        stats.shared_hits,
+        stats.evictions,
+        stats.expirations,
+    );
+    println!("determinism verified: cached rerun produced an identical event trace");
+    Ok(())
+}

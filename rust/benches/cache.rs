@@ -1,0 +1,98 @@
+//! Microbench: fingerprint computation + cache lookup on a 10k-entry
+//! cache (hit and miss paths, per policy), plus the insert/evict cycle at
+//! capacity. Fingerprints and lookups are the per-decision hot path and
+//! should stay O(100ns)-ish; insert-at-capacity pays an O(capacity)
+//! victim scan by design (only when a partition is full) — this bench
+//! tracks both so a regression in either is visible.
+//!
+//! Scale via env: CACHE_BENCH_ITERS (default 1_000_000).
+
+use hybridflow::cache::{CachePolicyKind, CachedResult, Fingerprint, SubtaskCache};
+use hybridflow::dag::Role;
+use hybridflow::models::ExecRecord;
+use hybridflow::workload::{generate_queries, Benchmark, SubtaskLatent};
+use std::time::Instant;
+
+const ENTRIES: usize = 10_000;
+
+fn iters() -> usize {
+    std::env::var("CACHE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000)
+}
+
+fn rec(i: u64) -> ExecRecord {
+    ExecRecord {
+        correct: i % 2 == 0,
+        latency: 1.0 + (i % 97) as f64 * 0.01,
+        api_cost: 0.001,
+        in_tokens: 200.0,
+        out_tokens: 120.0,
+    }
+}
+
+fn bench<F: FnMut(usize) -> u64>(name: &str, n: usize, mut f: F) {
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for i in 0..n {
+        sink = sink.wrapping_add(f(i));
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{name:<44} {n:>9} iters  {:>8.1} ns/op  (sink {sink:x})",
+        dt.as_nanos() as f64 / n as f64
+    );
+}
+
+fn main() {
+    let n = iters();
+    println!("[bench cache] {ENTRIES}-entry cache, {n} iterations per case\n");
+
+    // --- Fingerprint computation ------------------------------------------
+    let queries = generate_queries(Benchmark::Gpqa, 64, 7);
+    bench("fingerprint: of_node", n, |i| {
+        let q = &queries[i % queries.len()];
+        Fingerprint::of_node(q, i % 7, Role::Analyze, i % 2 == 0).0
+    });
+    let latent = SubtaskLatent { difficulty: 0.5, criticality: 0.4, out_tokens: 120.0 };
+    bench("fingerprint: of_call", n, |i| {
+        Fingerprint::of_call(i % 4, &latent, 200.0 + (i % 13) as f64, i % 2 == 0, false).0
+    });
+
+    // --- Lookup on a full 10k-entry cache ---------------------------------
+    for kind in [CachePolicyKind::Lru, CachePolicyKind::Lfu, CachePolicyKind::Ttl(1e12)] {
+        let cache = SubtaskCache::new(ENTRIES, kind);
+        for i in 0..ENTRIES as u64 {
+            cache.insert(0, Fingerprint(i), CachedResult { cloud: true, rec: rec(i) }, i as f64, i as f64);
+        }
+        assert_eq!(cache.len(0), ENTRIES);
+        let label_hit = format!("lookup hit  ({})", kind.label());
+        bench(&label_hit, n, |i| {
+            let key = Fingerprint((i % ENTRIES) as u64);
+            u64::from(cache.lookup(0, key, 1e9).is_some())
+        });
+        let label_miss = format!("lookup miss ({})", kind.label());
+        bench(&label_miss, n, |i| {
+            let key = Fingerprint((ENTRIES + i) as u64);
+            u64::from(cache.lookup(0, key, 1e9).is_none())
+        });
+    }
+
+    // --- Insert at capacity (every insert evicts) --------------------------
+    let churn_iters = (n / 50).max(1_000);
+    for kind in [CachePolicyKind::Lru, CachePolicyKind::Lfu] {
+        let cache = SubtaskCache::new(ENTRIES, kind);
+        for i in 0..ENTRIES as u64 {
+            cache.insert(0, Fingerprint(i), CachedResult { cloud: false, rec: rec(i) }, i as f64, i as f64);
+        }
+        let label = format!("insert+evict at cap ({})", kind.label());
+        bench(&label, churn_iters, |i| {
+            let key = Fingerprint((ENTRIES + i) as u64);
+            cache.insert(0, key, CachedResult { cloud: false, rec: rec(i as u64) }, 1e6 + i as f64, 1e6 + i as f64);
+            key.0
+        });
+        let s = cache.stats();
+        println!("    -> {} evictions, {} entries", s.evictions, cache.len(0));
+    }
+}

@@ -1,0 +1,207 @@
+//! [`CachedBackend`]: a result-caching [`Backend`] wrapper.
+//!
+//! Wraps any inner backend (simulation, replay, recording, a future
+//! network endpoint) and memoizes execution results under the exact-match
+//! call fingerprint ([`Fingerprint::of_call`]). A hit replays the stored
+//! [`ExecRecord`] with **zero RNG consumption** — the caller's stream is
+//! untouched, exactly like [`crate::engine::ReplayBackend`] — so a
+//! cache-heavy workload spends neither simulated model time nor random
+//! draws on repeated calls.
+//!
+//! The backend has no view of the virtual clock (the [`Backend`] surface
+//! carries none), so recency/TTL run on a logical per-call tick: one unit
+//! per `execute_*` invocation. A TTL policy therefore expresses "expire
+//! after N calls" at this layer, vs "expire after N virtual seconds" in
+//! the scheduler integration.
+
+use super::{CachePolicyKind, CacheStats, CachedResult, Fingerprint, SubtaskCache};
+use crate::config::simparams::SimParams;
+use crate::engine::Backend;
+use crate::models::{ExecRecord, ModelProfile};
+use crate::util::rng::Rng;
+use crate::workload::SubtaskLatent;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A [`Backend`] that serves repeated calls from a [`SubtaskCache`].
+pub struct CachedBackend<B: Backend> {
+    inner: B,
+    cache: SubtaskCache,
+    /// Logical clock: one tick per execute call (recency/TTL unit).
+    tick: AtomicU64,
+}
+
+impl<B: Backend> CachedBackend<B> {
+    pub fn new(inner: B, capacity: usize, kind: CachePolicyKind) -> CachedBackend<B> {
+        CachedBackend { inner, cache: SubtaskCache::new(capacity, kind), tick: AtomicU64::new(0) }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn cache(&self) -> &SubtaskCache {
+        &self.cache
+    }
+
+    pub fn into_inner(self) -> B {
+        self.inner
+    }
+
+    fn next_tick(&self) -> f64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) as f64
+    }
+
+    fn cached_exec(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        direct: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        let fp = Fingerprint::of_call(domain, latent, in_tokens, cloud, direct);
+        let now = self.next_tick();
+        if let Some(hit) = self.cache.lookup(0, fp, now) {
+            // Zero RNG consumption: the stored record IS the outcome.
+            return hit.rec;
+        }
+        let rec = if direct {
+            self.inner.execute_direct(domain, latent, in_tokens, cloud, rng)
+        } else {
+            self.inner.execute_subtask(domain, latent, in_tokens, cloud, rng)
+        };
+        // A backend call blocks until completion, so the result is
+        // available from its own tick onward (ready_at == now).
+        self.cache.insert(0, fp, CachedResult { cloud, rec }, now, now);
+        rec
+    }
+}
+
+impl<B: Backend> Backend for CachedBackend<B> {
+    fn name(&self) -> &'static str {
+        "cached"
+    }
+
+    fn sp(&self) -> &SimParams {
+        self.inner.sp()
+    }
+
+    fn profile(&self, cloud: bool) -> &ModelProfile {
+        self.inner.profile(cloud)
+    }
+
+    fn execute_subtask(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        self.cached_exec(domain, latent, in_tokens, cloud, false, rng)
+    }
+
+    fn execute_direct(
+        &self,
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        rng: &mut Rng,
+    ) -> ExecRecord {
+        self.cached_exec(domain, latent, in_tokens, cloud, true, rng)
+    }
+
+    fn final_answer_correct(
+        &self,
+        latents: &[SubtaskLatent],
+        subtask_correct: &[bool],
+        rng: &mut Rng,
+    ) -> bool {
+        // Never cached: the aggregation draw is query-level randomness.
+        self.inner.final_answer_correct(latents, subtask_correct, rng)
+    }
+
+    fn true_dq(&self, domain: usize, latents: &[SubtaskLatent], i: usize) -> f64 {
+        self.inner.true_dq(domain, latents, i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::SimExecutor;
+
+    fn latent(d: f64, w: f64, toks: f64) -> SubtaskLatent {
+        SubtaskLatent { difficulty: d, criticality: w, out_tokens: toks }
+    }
+
+    #[test]
+    fn repeated_call_hits_and_replays_bit_identically() {
+        let b = CachedBackend::new(SimExecutor::paper_pair(), 64, CachePolicyKind::Lru);
+        let l = latent(0.5, 0.5, 100.0);
+        let mut rng = Rng::new(7);
+        let first = b.execute_subtask(1, &l, 200.0, true, &mut rng);
+        let again = b.execute_subtask(1, &l, 200.0, true, &mut rng);
+        assert_eq!(first.latency.to_bits(), again.latency.to_bits());
+        assert_eq!(first.api_cost.to_bits(), again.api_cost.to_bits());
+        assert_eq!(first.out_tokens.to_bits(), again.out_tokens.to_bits());
+        assert_eq!(first.correct, again.correct);
+        let s = b.stats();
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.insertions, 1);
+    }
+
+    #[test]
+    fn hit_consumes_zero_rng() {
+        let b = CachedBackend::new(SimExecutor::paper_pair(), 64, CachePolicyKind::Lru);
+        let l = latent(0.4, 0.6, 80.0);
+        let mut warm = Rng::new(3);
+        b.execute_subtask(2, &l, 150.0, true, &mut warm);
+        // Two clones of one stream: one serves a hit, the other is idle.
+        let mut rng_a = Rng::new(99);
+        let mut rng_b = Rng::new(99);
+        let _ = b.execute_subtask(2, &l, 150.0, true, &mut rng_a);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "hit must not touch the stream");
+    }
+
+    #[test]
+    fn sides_and_direct_calls_are_keyed_apart() {
+        let b = CachedBackend::new(SimExecutor::paper_pair(), 64, CachePolicyKind::Lru);
+        let l = latent(0.5, 0.5, 100.0);
+        let mut rng = Rng::new(11);
+        b.execute_subtask(1, &l, 200.0, false, &mut rng);
+        b.execute_subtask(1, &l, 200.0, true, &mut rng);
+        b.execute_direct(1, &l, 200.0, true, &mut rng);
+        let s = b.stats();
+        assert_eq!(s.hits, 0, "edge/cloud/direct are distinct keys");
+        assert_eq!(s.insertions, 3);
+    }
+
+    #[test]
+    fn delegates_profiles_and_dq() {
+        let inner = SimExecutor::paper_pair();
+        let sp_tau0 = inner.sp.tau0;
+        let b = CachedBackend::new(inner, 8, CachePolicyKind::Lfu);
+        assert_eq!(b.name(), "cached");
+        assert_eq!(b.sp().tau0, sp_tau0);
+        let lat = vec![latent(0.4, 0.4, 80.0), latent(0.6, 0.6, 120.0)];
+        let via: &dyn Backend = &b;
+        let dq = via.true_dq(1, &lat, 0);
+        assert!(dq > 0.0 && dq < 1.0);
+        assert!(via.profile(true).kind.is_cloud());
+    }
+
+    #[test]
+    fn final_answer_always_delegates_with_rng() {
+        let b = CachedBackend::new(SimExecutor::paper_pair(), 8, CachePolicyKind::Lru);
+        let lat = vec![latent(0.5, 0.7, 100.0)];
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = b.final_answer_correct(&lat, &[false], &mut r1);
+        let c = SimExecutor::paper_pair().final_answer_correct(&lat, &[false], &mut r2);
+        assert_eq!(a, c);
+    }
+}

@@ -1,0 +1,790 @@
+//! Cross-query subtask result cache.
+//!
+//! At fleet scale many queries decompose into overlapping subtasks, yet
+//! every dispatch pays full edge/cloud cost — the Eq. 8 utility model
+//! never sees a "free" option. This module adds that option: a
+//! deterministic, caller-clock-driven [`SubtaskCache`] keyed by a
+//! canonical [`Fingerprint`] (normalized node signature + executing
+//! side), with pluggable eviction ([`CachePolicy`]: LRU / LFU / TTL under
+//! a per-partition size cap), per-tenant partitions, and an optional
+//! shared global tier for the whole fleet.
+//!
+//! Three integration layers consume it:
+//!
+//! 1. [`CachedBackend`] — an [`crate::engine::Backend`] wrapper over any
+//!    inner backend; hits replay the stored [`ExecRecord`] with **zero
+//!    RNG consumption** (cf. CE-CoLLM-style cloud context caching).
+//! 2. Cache-aware routing — the scheduler probes the cache at each
+//!    decision point (`ScheduleConfig::cache`); hits short-circuit to a
+//!    near-zero-latency completion path in both event loops without
+//!    occupying a worker or spending tenant/global budget
+//!    (`RouteCtx::cached` is the router-visible hook).
+//! 3. Workload diversity — `workload::trace::ZipfMix` repeats popular
+//!    queries so fleet traces actually exercise the cache; the
+//!    `fleet_cache` experiment sweeps capacity vs hit rate, cloud tokens,
+//!    and latency.
+//!
+//! Determinism contract: the cache consumes **no RNG** anywhere — all
+//! state transitions are functions of (key, stored record, caller clock)
+//! — and iteration orders are total (`BTreeMap` keyed on the fingerprint,
+//! sequence-number tie-breaks), so a fixed workload reproduces the same
+//! hit/miss/eviction sequence byte-for-byte. A disabled cache
+//! (`capacity == 0`, or none attached) leaves every execution path
+//! untouched; the fleet golden-trace regression pins this.
+
+pub mod backend;
+pub mod policy;
+
+pub use backend::CachedBackend;
+pub use policy::{CachePolicy, CachePolicyKind, EntryMeta, LfuPolicy, LruPolicy, TtlPolicy};
+
+use crate::dag::Role;
+use crate::models::ExecRecord;
+use crate::workload::{Query, SubtaskLatent};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Mutex;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Canonical 64-bit subtask fingerprint (FNV-1a over the normalized
+/// signature). Two executions share a fingerprint iff they are
+/// interchangeable under the cache's keying scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64);
+
+fn mix_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn mix_u64(h: u64, word: u64) -> u64 {
+    mix_bytes(h, &word.to_le_bytes())
+}
+
+impl Fingerprint {
+    /// Router-level node signature: query *content* (benchmark, domain,
+    /// difficulty, prompt tokens, token multiplier — the query id is
+    /// deliberately excluded so identical repeated queries normalize to
+    /// one key), the node's topological index and role, and the executing
+    /// side. Realized token counts and latent draws are excluded so
+    /// repeats of the same query hit despite per-job sampling jitter.
+    pub fn of_node(query: &Query, node: usize, role: Role, cloud: bool) -> Fingerprint {
+        let mut h = FNV_OFFSET;
+        h = mix_bytes(h, query.benchmark.name().as_bytes());
+        h = mix_u64(h, query.domain as u64);
+        h = mix_u64(h, query.difficulty.to_bits());
+        h = mix_u64(h, query.query_tokens.to_bits());
+        h = mix_u64(h, query.tok_mult.to_bits());
+        h = mix_u64(h, node as u64);
+        h = mix_u64(h, role.index() as u64);
+        h = mix_bytes(h, &[u8::from(cloud)]);
+        Fingerprint(h)
+    }
+
+    /// Backend-level call signature ([`CachedBackend`]): exact-match over
+    /// the observable call arguments — domain, latent bits, input tokens,
+    /// side, and whether the call was direct (whole-query) or a subtask.
+    pub fn of_call(
+        domain: usize,
+        latent: &SubtaskLatent,
+        in_tokens: f64,
+        cloud: bool,
+        direct: bool,
+    ) -> Fingerprint {
+        let mut h = FNV_OFFSET;
+        h = mix_u64(h, domain as u64);
+        h = mix_u64(h, latent.difficulty.to_bits());
+        h = mix_u64(h, latent.criticality.to_bits());
+        h = mix_u64(h, latent.out_tokens.to_bits());
+        h = mix_u64(h, in_tokens.to_bits());
+        h = mix_bytes(h, &[u8::from(cloud), u8::from(direct)]);
+        Fingerprint(h)
+    }
+}
+
+/// A cached execution outcome: the record plus the side that produced it
+/// (stats and trace events report the original side; hits themselves run
+/// on neither pool).
+#[derive(Debug, Clone, Copy)]
+pub struct CachedResult {
+    pub cloud: bool,
+    pub rec: ExecRecord,
+}
+
+/// Cumulative cache counters (one snapshot per run; see
+/// [`SubtaskCache::stats`]). All rates guard the zero-lookup case so
+/// empty-trace fleets report 0.0, never NaN.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    /// Decision-point probes (one per probed subtask/call, regardless of
+    /// how many side-keys the probe tried).
+    pub lookups: u64,
+    pub hits: u64,
+    /// Subset of `hits` served from the shared global tier.
+    pub shared_hits: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub expirations: u64,
+    /// Cloud tokens whose transmission a hit avoided — the transmitted
+    /// payload `tok(x_i)` (input tokens), the same App. D.1 proxy as
+    /// `metrics::exposure` and `fleet_cloud_tokens`, so saved and
+    /// transmitted columns are directly comparable.
+    pub tokens_saved: f64,
+    /// Cloud dollars a hit avoided (budget that was never spent).
+    pub dollars_saved: f64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.lookups.saturating_sub(self.hits)
+    }
+
+    /// Canonical one-line rendering of the counters, shared by
+    /// `FleetReport::render`, `ServeReport::render`, and
+    /// [`SubtaskCache::render_stats`] so the reports cannot drift apart.
+    pub fn render_line(&self) -> String {
+        format!(
+            "cache: hit rate {:.1}% ({}/{} lookups, {} shared), {:.0} cloud tokens saved, \
+             ${:.4} budget avoided, {} evicted, {} expired",
+            self.hit_rate() * 100.0,
+            self.hits,
+            self.lookups,
+            self.shared_hits,
+            self.tokens_saved,
+            self.dollars_saved,
+            self.evictions,
+            self.expirations,
+        )
+    }
+}
+
+struct Entry {
+    result: CachedResult,
+    /// Caller-clock instant the producing execution finishes. Within the
+    /// same session epoch, probes before this instant miss: the fleet's
+    /// virtual clock must never serve a result before it exists.
+    ready_at: f64,
+    /// Session epoch the entry was inserted in (see
+    /// [`SubtaskCache::begin_session`]). Entries from earlier epochs are
+    /// unconditionally available — their producing run already completed
+    /// in wall order, even though the caller's clock restarted.
+    epoch: u64,
+    meta: EntryMeta,
+}
+
+#[derive(Default)]
+struct Partition {
+    /// Keyed on the raw fingerprint: BTreeMap gives the deterministic
+    /// candidate order the eviction policies rely on.
+    entries: BTreeMap<u64, Entry>,
+    seq: u64,
+    /// Monotone operation stamp feeding LRU/LFU recency (exact under any
+    /// caller clock, including per-query restarting ones).
+    op: u64,
+}
+
+impl Partition {
+    /// Probe one key at session `epoch`; updates recency metadata on a
+    /// hit, drops expired entries, and treats same-epoch entries whose
+    /// producing execution has not finished yet (`now < ready_at`) as
+    /// misses. Returns the hit and whether an expiration occurred.
+    fn probe(
+        &mut self,
+        fp: Fingerprint,
+        now: f64,
+        epoch: u64,
+        policy: &dyn CachePolicy,
+    ) -> (Option<CachedResult>, bool) {
+        let stale = match self.entries.get(&fp.0) {
+            None => return (None, false),
+            Some(e) => {
+                if e.epoch == epoch && now + 1e-9 < e.ready_at {
+                    // Result not available yet on this clock: miss, but
+                    // the entry stays (it becomes valid at ready_at).
+                    return (None, false);
+                }
+                policy.expired(&e.meta, now)
+            }
+        };
+        if stale {
+            self.entries.remove(&fp.0);
+            return (None, true);
+        }
+        self.op += 1;
+        let op = self.op;
+        let e = self.entries.get_mut(&fp.0).expect("entry checked present");
+        e.meta.hits += 1;
+        e.meta.last_used = op;
+        (Some(e.result), false)
+    }
+
+    /// Insert (or refresh) a key, evicting per policy when full. Returns
+    /// `(evictions, expirations, inserted)`.
+    #[allow(clippy::too_many_arguments)]
+    fn insert(
+        &mut self,
+        fp: Fingerprint,
+        result: CachedResult,
+        now: f64,
+        ready_at: f64,
+        epoch: u64,
+        capacity: usize,
+        policy: &dyn CachePolicy,
+    ) -> (u64, u64, bool) {
+        if capacity == 0 {
+            return (0, 0, false);
+        }
+        self.op += 1;
+        let op = self.op;
+        if let Some(e) = self.entries.get_mut(&fp.0) {
+            // Refresh: keep the first-stored result (hit bit-identity to
+            // the first execution), bump recency.
+            e.meta.last_used = op;
+            return (0, 0, false);
+        }
+        let mut expired = 0u64;
+        let mut evicted = 0u64;
+        if self.entries.len() >= capacity && policy.has_expiry() {
+            // Purge stale entries first; they are free victims. Skipped
+            // entirely for LRU/LFU, whose entries never expire.
+            let stale: Vec<u64> = self
+                .entries
+                .iter()
+                .filter(|(_, e)| policy.expired(&e.meta, now))
+                .map(|(&k, _)| k)
+                .collect();
+            expired = stale.len() as u64;
+            for k in stale {
+                self.entries.remove(&k);
+            }
+        }
+        // Victim selection is an O(capacity) scan, paid only on inserts
+        // into a *full* partition (lookups stay O(log n)); see ROADMAP
+        // "persistent cache spill / eviction index" for the O(log n)
+        // index if profiles ever show this on the hot path.
+        while self.entries.len() >= capacity {
+            let victim = policy
+                .victim(&mut self.entries.iter().map(|(&k, e)| (k, e.meta)))
+                .expect("non-empty partition must yield an eviction victim");
+            self.entries.remove(&victim);
+            evicted += 1;
+        }
+        self.seq += 1;
+        self.entries.insert(
+            fp.0,
+            Entry {
+                result,
+                ready_at,
+                epoch,
+                meta: EntryMeta { inserted: now, last_used: op, hits: 0, seq: self.seq },
+            },
+        );
+        (evicted, expired, true)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    tenants: Vec<Partition>,
+    shared: Partition,
+    stats: CacheStats,
+    /// Current session epoch (bumped by [`SubtaskCache::begin_session`]).
+    epoch: u64,
+}
+
+impl Inner {
+    fn tenant(&mut self, idx: usize) -> &mut Partition {
+        if self.tenants.len() <= idx {
+            self.tenants.resize_with(idx + 1, Partition::default);
+        }
+        &mut self.tenants[idx]
+    }
+}
+
+fn credit_savings(stats: &mut CacheStats, r: &CachedResult) {
+    if r.cloud {
+        // Transmission proxy = input tokens (Eq. 30's tok(x_i)), matching
+        // the exposure metric so saved vs transmitted columns reconcile.
+        stats.tokens_saved += r.rec.in_tokens;
+        stats.dollars_saved += r.rec.api_cost;
+    }
+}
+
+/// Deterministic cross-query subtask result cache: per-tenant partitions
+/// (auto-vivified by tenant index) plus an optional shared global tier,
+/// each holding at most `capacity` entries under the configured eviction
+/// policy. `capacity == 0` disables the cache entirely (every path is a
+/// no-op), which is what the CLI's `--cache 0` maps to.
+///
+/// All methods take `&self` (internal mutex) so one `Arc<SubtaskCache>`
+/// can be shared through `ScheduleConfig`; the virtual-clock event loops
+/// are single-threaded, so fleet runs stay byte-reproducible.
+pub struct SubtaskCache {
+    capacity: usize,
+    kind: CachePolicyKind,
+    policy: Box<dyn CachePolicy>,
+    shared_tier: bool,
+    hit_latency: f64,
+    inner: Mutex<Inner>,
+}
+
+impl SubtaskCache {
+    /// Virtual seconds a cache hit takes on the sim clock (coordinator
+    /// table lookup — near-zero, but strictly positive so event ordering
+    /// and `finish > start` invariants hold).
+    pub const DEFAULT_HIT_LATENCY: f64 = 1e-3;
+
+    pub fn new(capacity: usize, kind: CachePolicyKind) -> SubtaskCache {
+        SubtaskCache {
+            capacity,
+            kind,
+            policy: kind.build(),
+            shared_tier: false,
+            hit_latency: Self::DEFAULT_HIT_LATENCY,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Enable the fleet-wide shared tier: inserts replicate into a global
+    /// partition that lookups fall back to when the tenant partition
+    /// misses (tenant isolation is the default; this opts out of it).
+    pub fn with_shared_tier(mut self) -> SubtaskCache {
+        self.shared_tier = true;
+        self
+    }
+
+    /// Override the virtual-clock latency of a hit. Floored at a strictly
+    /// positive value: `finish > start` must hold for cached events, and
+    /// zero-duration completions would interleave with same-instant
+    /// control events in heap orders the engine never exercises.
+    pub fn with_hit_latency(mut self, latency: f64) -> SubtaskCache {
+        self.hit_latency = latency.max(1e-9);
+        self
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn hit_latency(&self) -> f64 {
+        self.hit_latency
+    }
+
+    pub fn has_shared_tier(&self) -> bool {
+        self.shared_tier
+    }
+
+    pub fn policy_label(&self) -> String {
+        self.kind.label()
+    }
+
+    /// Drop every entry and zero the counters (each fleet run starts
+    /// cold; see `scheduler::fleet::run_fleet`).
+    pub fn reset(&self) {
+        *self.inner.lock().expect("cache poisoned") = Inner::default();
+    }
+
+    /// Start a new session epoch. Callers whose clock *restarts* (the
+    /// single-query scheduler: every `execute_query` begins its virtual
+    /// clock near zero) bump the epoch per run so earlier runs' entries
+    /// are unconditionally available, while same-epoch entries stay gated
+    /// on their `ready_at` instant. The fleet runs one global clock and
+    /// never bumps mid-run.
+    pub fn begin_session(&self) {
+        self.inner.lock().expect("cache poisoned").epoch += 1;
+    }
+
+    /// Probe one key in one tenant partition (falling back to the shared
+    /// tier). Counts one lookup.
+    pub fn lookup(&self, tenant: usize, fp: Fingerprint, now: f64) -> Option<CachedResult> {
+        self.lookup_any(tenant, &[fp], now)
+    }
+
+    /// Probe several alternative keys (e.g. the edge- and cloud-side
+    /// fingerprints of one subtask) as **one** decision-point lookup:
+    /// exactly one lookup is counted however many keys are tried, and the
+    /// first hit wins. Order: all keys against the tenant partition, then
+    /// all keys against the shared tier.
+    pub fn lookup_any(
+        &self,
+        tenant: usize,
+        fps: &[Fingerprint],
+        now: f64,
+    ) -> Option<CachedResult> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut g = self.inner.lock().expect("cache poisoned");
+        let epoch = g.epoch;
+        g.stats.lookups += 1;
+        for &fp in fps {
+            let (hit, expired) = g.tenant(tenant).probe(fp, now, epoch, self.policy.as_ref());
+            if expired {
+                g.stats.expirations += 1;
+            }
+            if let Some(r) = hit {
+                g.stats.hits += 1;
+                credit_savings(&mut g.stats, &r);
+                return Some(r);
+            }
+        }
+        if self.shared_tier {
+            for &fp in fps {
+                let (hit, expired) = g.shared.probe(fp, now, epoch, self.policy.as_ref());
+                if expired {
+                    g.stats.expirations += 1;
+                }
+                if let Some(r) = hit {
+                    g.stats.hits += 1;
+                    g.stats.shared_hits += 1;
+                    credit_savings(&mut g.stats, &r);
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+
+    /// Store one result under `fp` in the tenant partition (and the
+    /// shared tier when enabled). `now` is the insert instant (recency /
+    /// TTL origin); `ready_at` is when the producing execution *finishes*
+    /// on the caller's clock — same-epoch probes before that instant miss
+    /// (a result must not be served before it exists). Existing entries
+    /// are never overwritten — a hit stays bit-identical to the *first*
+    /// execution.
+    pub fn insert(
+        &self,
+        tenant: usize,
+        fp: Fingerprint,
+        result: CachedResult,
+        now: f64,
+        ready_at: f64,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let mut g = self.inner.lock().expect("cache poisoned");
+        let epoch = g.epoch;
+        let cap = self.capacity;
+        let (ev, ex, ins) =
+            g.tenant(tenant).insert(fp, result, now, ready_at, epoch, cap, self.policy.as_ref());
+        g.stats.evictions += ev;
+        g.stats.expirations += ex;
+        g.stats.insertions += u64::from(ins);
+        if self.shared_tier {
+            let (ev, ex, _) =
+                g.shared.insert(fp, result, now, ready_at, epoch, cap, self.policy.as_ref());
+            g.stats.evictions += ev;
+            g.stats.expirations += ex;
+        }
+    }
+
+    /// Entries currently held by one tenant partition.
+    pub fn len(&self, tenant: usize) -> usize {
+        let g = self.inner.lock().expect("cache poisoned");
+        g.tenants.get(tenant).map_or(0, |p| p.entries.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_entries() == 0
+    }
+
+    /// Entries in the shared global tier.
+    pub fn shared_len(&self) -> usize {
+        self.inner.lock().expect("cache poisoned").shared.entries.len()
+    }
+
+    /// Entries across every partition (tenants + shared tier).
+    pub fn total_entries(&self) -> usize {
+        let g = self.inner.lock().expect("cache poisoned");
+        g.tenants.iter().map(|p| p.entries.len()).sum::<usize>() + g.shared.entries.len()
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().expect("cache poisoned").stats.clone()
+    }
+
+    /// One-line render of the counters with this cache's configuration
+    /// prefix (CLI); the counter half is [`CacheStats::render_line`].
+    pub fn render_stats(&self) -> String {
+        format!(
+            "[{} cap {}{}] {}",
+            self.policy_label(),
+            self.capacity,
+            if self.shared_tier { ", shared tier" } else { "" },
+            self.stats().render_line(),
+        )
+    }
+}
+
+// Manual Debug: the boxed policy is not derivable, and `ScheduleConfig`
+// (which embeds an `Option<Arc<SubtaskCache>>`) derives Debug.
+impl fmt::Debug for SubtaskCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SubtaskCache")
+            .field("capacity", &self.capacity)
+            .field("policy", &self.policy_label())
+            .field("shared_tier", &self.shared_tier)
+            .field("entries", &self.total_entries())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_queries, Benchmark};
+
+    fn rec(latency: f64, cost: f64, out: f64) -> ExecRecord {
+        ExecRecord { correct: true, latency, api_cost: cost, in_tokens: 40.0, out_tokens: out }
+    }
+
+    fn cloud_result(cost: f64) -> CachedResult {
+        CachedResult { cloud: true, rec: rec(2.0, cost, 90.0) }
+    }
+
+    /// Insert immediately available at `t` (ready_at == insert instant).
+    fn put(c: &SubtaskCache, tenant: usize, fp: Fingerprint, r: CachedResult, t: f64) {
+        c.insert(tenant, fp, r, t, t);
+    }
+
+    #[test]
+    fn node_fingerprint_normalizes_query_id_and_splits_sides() {
+        let qs = generate_queries(Benchmark::Gpqa, 2, 5);
+        let mut twin = qs[0].clone();
+        twin.id = 999; // same content, different id
+        let a = Fingerprint::of_node(&qs[0], 2, Role::Analyze, false);
+        assert_eq!(a, Fingerprint::of_node(&twin, 2, Role::Analyze, false));
+        assert_ne!(a, Fingerprint::of_node(&qs[0], 2, Role::Analyze, true), "side splits");
+        assert_ne!(a, Fingerprint::of_node(&qs[0], 3, Role::Analyze, false), "index splits");
+        assert_ne!(a, Fingerprint::of_node(&qs[0], 2, Role::Generate, false), "role splits");
+        assert_ne!(a, Fingerprint::of_node(&qs[1], 2, Role::Analyze, false), "content splits");
+    }
+
+    #[test]
+    fn call_fingerprint_is_exact_match() {
+        let l = SubtaskLatent { difficulty: 0.5, criticality: 0.4, out_tokens: 80.0 };
+        let a = Fingerprint::of_call(1, &l, 120.0, true, false);
+        assert_eq!(a, Fingerprint::of_call(1, &l, 120.0, true, false));
+        assert_ne!(a, Fingerprint::of_call(1, &l, 120.0, false, false));
+        assert_ne!(a, Fingerprint::of_call(1, &l, 120.0, true, true));
+        assert_ne!(a, Fingerprint::of_call(2, &l, 120.0, true, false));
+        let l2 = SubtaskLatent { difficulty: 0.5000001, ..l };
+        assert_ne!(a, Fingerprint::of_call(1, &l2, 120.0, true, false));
+    }
+
+    #[test]
+    fn lookup_hit_is_bit_identical_to_first_insert() {
+        let c = SubtaskCache::new(8, CachePolicyKind::Lru);
+        let fp = Fingerprint(42);
+        let first = CachedResult {
+            cloud: true,
+            rec: ExecRecord {
+                correct: false,
+                latency: 1.234567891234,
+                api_cost: 0.00123456789,
+                in_tokens: 333.3,
+                out_tokens: 777.7,
+            },
+        };
+        put(&c, 0, fp, first, 1.0);
+        // A second insert under the same key must NOT overwrite.
+        put(&c, 0, fp, cloud_result(9.9), 2.0);
+        let got = c.lookup(0, fp, 3.0).expect("hit");
+        assert_eq!(got.rec.latency.to_bits(), first.rec.latency.to_bits());
+        assert_eq!(got.rec.api_cost.to_bits(), first.rec.api_cost.to_bits());
+        assert_eq!(got.rec.in_tokens.to_bits(), first.rec.in_tokens.to_bits());
+        assert_eq!(got.rec.out_tokens.to_bits(), first.rec.out_tokens.to_bits());
+        assert_eq!(got.rec.correct, first.rec.correct);
+        assert_eq!(got.cloud, first.cloud);
+    }
+
+    #[test]
+    fn capacity_enforced_with_lru_eviction() {
+        let c = SubtaskCache::new(2, CachePolicyKind::Lru);
+        put(&c, 0, Fingerprint(1), cloud_result(0.1), 1.0);
+        put(&c, 0, Fingerprint(2), cloud_result(0.2), 2.0);
+        // Touch key 1 so key 2 becomes the LRU victim.
+        assert!(c.lookup(0, Fingerprint(1), 3.0).is_some());
+        put(&c, 0, Fingerprint(3), cloud_result(0.3), 4.0);
+        assert_eq!(c.len(0), 2);
+        assert!(c.lookup(0, Fingerprint(1), 5.0).is_some());
+        assert!(c.lookup(0, Fingerprint(2), 5.0).is_none(), "LRU victim evicted");
+        assert!(c.lookup(0, Fingerprint(3), 5.0).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn lfu_keeps_hot_entries() {
+        let c = SubtaskCache::new(2, CachePolicyKind::Lfu);
+        put(&c, 0, Fingerprint(1), cloud_result(0.1), 1.0);
+        put(&c, 0, Fingerprint(2), cloud_result(0.2), 2.0);
+        for t in 0..3 {
+            assert!(c.lookup(0, Fingerprint(1), 3.0 + t as f64).is_some());
+        }
+        put(&c, 0, Fingerprint(3), cloud_result(0.3), 10.0);
+        assert!(c.lookup(0, Fingerprint(1), 11.0).is_some(), "hot entry survives");
+        assert!(c.lookup(0, Fingerprint(2), 11.0).is_none(), "cold entry evicted");
+    }
+
+    #[test]
+    fn ttl_expires_on_lookup() {
+        let c = SubtaskCache::new(8, CachePolicyKind::Ttl(5.0));
+        put(&c, 0, Fingerprint(1), cloud_result(0.1), 0.0);
+        assert!(c.lookup(0, Fingerprint(1), 4.9).is_some());
+        assert!(c.lookup(0, Fingerprint(1), 5.1).is_none(), "expired");
+        assert_eq!(c.stats().expirations, 1);
+        assert_eq!(c.len(0), 0);
+    }
+
+    #[test]
+    fn same_session_entries_unavailable_before_ready_at() {
+        // Temporal fidelity on one virtual clock (the fleet): an entry
+        // inserted at dispatch time must not be servable before the
+        // producing execution's finish instant.
+        let c = SubtaskCache::new(8, CachePolicyKind::Lru);
+        c.insert(0, Fingerprint(1), cloud_result(0.1), 0.0, 20.0);
+        assert!(c.lookup(0, Fingerprint(1), 5.0).is_none(), "result does not exist yet");
+        assert!(c.lookup(0, Fingerprint(1), 19.9).is_none());
+        assert!(c.lookup(0, Fingerprint(1), 20.0).is_some(), "available from finish");
+        let s = c.stats();
+        assert_eq!(s.lookups, 3);
+        assert_eq!(s.hits, 1, "pre-finish probes are misses");
+        // The not-yet-ready probes did not drop the entry.
+        assert_eq!(c.len(0), 1);
+    }
+
+    #[test]
+    fn new_session_makes_prior_entries_available_despite_clock_restart() {
+        // The single-query scheduler restarts its virtual clock per query;
+        // begin_session marks earlier entries as completed-in-wall-order,
+        // so a probe at t=2.0 may hit an entry that finished at t=25.0 of
+        // the *previous* query's clock.
+        let c = SubtaskCache::new(8, CachePolicyKind::Lru);
+        c.insert(0, Fingerprint(1), cloud_result(0.1), 10.0, 25.0);
+        assert!(c.lookup(0, Fingerprint(1), 2.0).is_none(), "same session, pre-finish");
+        c.begin_session();
+        assert!(
+            c.lookup(0, Fingerprint(1), 2.0).is_some(),
+            "prior-session entry is unconditionally available"
+        );
+    }
+
+    #[test]
+    fn tenant_partitions_isolate_unless_shared() {
+        let isolated = SubtaskCache::new(8, CachePolicyKind::Lru);
+        put(&isolated, 0, Fingerprint(7), cloud_result(0.5), 1.0);
+        assert!(isolated.lookup(0, Fingerprint(7), 2.0).is_some());
+        assert!(isolated.lookup(1, Fingerprint(7), 2.0).is_none(), "tenant isolation");
+        assert_eq!(isolated.shared_len(), 0);
+
+        let shared = SubtaskCache::new(8, CachePolicyKind::Lru).with_shared_tier();
+        put(&shared, 0, Fingerprint(7), cloud_result(0.5), 1.0);
+        let hit = shared.lookup(1, Fingerprint(7), 2.0);
+        assert!(hit.is_some(), "shared tier crosses tenants");
+        assert_eq!(shared.stats().shared_hits, 1);
+        assert_eq!(shared.shared_len(), 1);
+    }
+
+    #[test]
+    fn lookup_any_counts_one_lookup_for_multi_key_probes() {
+        let c = SubtaskCache::new(8, CachePolicyKind::Lru);
+        put(&c, 0, Fingerprint(2), cloud_result(0.2), 1.0);
+        // Miss on key 1, hit on key 2: one lookup, one hit.
+        let hit = c.lookup_any(0, &[Fingerprint(1), Fingerprint(2)], 2.0);
+        assert!(hit.is_some());
+        let miss = c.lookup_any(0, &[Fingerprint(8), Fingerprint(9)], 3.0);
+        assert!(miss.is_none());
+        let s = c.stats();
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses(), 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn savings_credit_cloud_results_only() {
+        let c = SubtaskCache::new(8, CachePolicyKind::Lru);
+        put(&c, 0, Fingerprint(1), CachedResult { cloud: false, rec: rec(1.0, 0.0, 50.0) }, 0.0);
+        put(&c, 0, Fingerprint(2), cloud_result(0.25), 0.0);
+        c.lookup(0, Fingerprint(1), 1.0);
+        let s = c.stats();
+        assert_eq!(s.tokens_saved, 0.0, "edge hits save no cloud tokens");
+        assert_eq!(s.dollars_saved, 0.0);
+        c.lookup(0, Fingerprint(2), 2.0);
+        let s = c.stats();
+        // Transmission proxy: input tokens only (same rule as exposure).
+        assert!((s.tokens_saved - 40.0).abs() < 1e-12);
+        assert!((s.dollars_saved - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_capacity_cache_is_fully_inert() {
+        let c = SubtaskCache::new(0, CachePolicyKind::Lru);
+        assert!(!c.enabled());
+        put(&c, 0, Fingerprint(1), cloud_result(0.1), 0.0);
+        assert!(c.lookup(0, Fingerprint(1), 1.0).is_none());
+        let s = c.stats();
+        assert_eq!(s.lookups, 0, "disabled cache counts nothing");
+        assert_eq!(s.insertions, 0);
+        assert_eq!(c.total_entries(), 0);
+    }
+
+    #[test]
+    fn reset_clears_entries_and_counters() {
+        let c = SubtaskCache::new(8, CachePolicyKind::Lru).with_shared_tier();
+        put(&c, 0, Fingerprint(1), cloud_result(0.1), 0.0);
+        c.lookup(0, Fingerprint(1), 1.0);
+        assert!(c.total_entries() > 0);
+        c.reset();
+        assert_eq!(c.total_entries(), 0);
+        let s = c.stats();
+        assert_eq!(s.lookups, 0);
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.insertions, 0);
+    }
+
+    #[test]
+    fn empty_stats_report_zero_not_nan() {
+        let s = CacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.misses(), 0);
+        let c = SubtaskCache::new(4, CachePolicyKind::Lru);
+        assert!(c.render_stats().contains("hit rate 0.0%"));
+        assert!(!c.render_stats().contains("NaN"));
+    }
+
+    #[test]
+    fn hit_latency_floored_strictly_positive() {
+        let c = SubtaskCache::new(4, CachePolicyKind::Lru).with_hit_latency(0.0);
+        assert!(c.hit_latency() > 0.0, "finish > start must hold for cached events");
+        let c = SubtaskCache::new(4, CachePolicyKind::Lru).with_hit_latency(-1.0);
+        assert!(c.hit_latency() > 0.0);
+    }
+
+    #[test]
+    fn render_and_debug_are_informative() {
+        let c = SubtaskCache::new(4, CachePolicyKind::Ttl(60.0)).with_shared_tier();
+        let dbg = format!("{c:?}");
+        assert!(dbg.contains("SubtaskCache"));
+        assert!(dbg.contains("ttl"));
+        assert!(c.render_stats().contains("shared tier"));
+    }
+}

@@ -1,0 +1,234 @@
+//! Pluggable eviction policies for [`super::SubtaskCache`].
+//!
+//! A policy never owns entry state: every cached entry carries an
+//! [`EntryMeta`] (insert time, last-use time, hit count, insertion
+//! sequence number) maintained by the cache itself, and the policy is a
+//! *stateless selector* over that metadata — it decides which entries have
+//! expired and which entry to evict when a partition is full. Keeping the
+//! policy stateless makes one boxed policy safely shareable across every
+//! tenant partition and the shared tier, and keeps victim selection
+//! deterministic: candidates are iterated in fingerprint order and every
+//! comparison falls back to the insertion sequence number as the final
+//! tie-break.
+//!
+//! All times are the caller's clock — the virtual sim clock in the
+//! scheduler integration, a logical call counter in
+//! [`super::CachedBackend`] — so TTLs are expressed in whichever unit the
+//! caller advances.
+
+/// Bookkeeping the cache maintains per entry; the raw material policies
+/// select on.
+#[derive(Debug, Clone, Copy)]
+pub struct EntryMeta {
+    /// Caller-clock value when the entry was first inserted (the TTL
+    /// input; in the fleet this is virtual seconds).
+    pub inserted: f64,
+    /// Monotone per-partition *operation* stamp of the most recent hit or
+    /// insert — the LRU/LFU recency input. An operation counter (rather
+    /// than the caller clock) keeps recency exact even when the caller's
+    /// clock restarts, as the single-query CLI loop's per-query virtual
+    /// clock does.
+    pub last_used: u64,
+    /// Lookup hits served by this entry.
+    pub hits: u64,
+    /// Monotone insertion sequence within the partition (final tie-break).
+    pub seq: u64,
+}
+
+/// An eviction policy: expiry predicate + victim selector.
+pub trait CachePolicy: Send + Sync {
+    /// Short label ("lru", "lfu", ...).
+    fn name(&self) -> &'static str;
+
+    /// Whether an entry is stale at clock `now` (TTL policies). Expired
+    /// entries are dropped on lookup (counted as misses) and purged before
+    /// any eviction. Default: entries never expire.
+    fn expired(&self, _meta: &EntryMeta, _now: f64) -> bool {
+        false
+    }
+
+    /// Whether `expired` can ever return true. Policies without expiry
+    /// (LRU/LFU) return false so the cache skips the full-partition stale
+    /// purge on the insert-at-capacity path. Default: no expiry.
+    fn has_expiry(&self) -> bool {
+        false
+    }
+
+    /// Pick the eviction victim among `(fingerprint, meta)` candidates.
+    /// Candidates arrive in ascending fingerprint order; implementations
+    /// must be deterministic (tie-break on `meta.seq`). Returns `None`
+    /// only for an empty candidate set.
+    fn victim(&self, candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>) -> Option<u64>;
+}
+
+/// Evict the least-recently-used entry.
+pub struct LruPolicy;
+
+impl CachePolicy for LruPolicy {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn victim(&self, candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>) -> Option<u64> {
+        candidates
+            .min_by_key(|&(_, m)| (m.last_used, m.seq))
+            .map(|(k, _)| k)
+    }
+}
+
+/// Evict the least-frequently-used entry (ties: least recent, then oldest
+/// insertion).
+pub struct LfuPolicy;
+
+impl CachePolicy for LfuPolicy {
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+
+    fn victim(&self, candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>) -> Option<u64> {
+        candidates
+            .min_by_key(|&(_, m)| (m.hits, m.last_used, m.seq))
+            .map(|(k, _)| k)
+    }
+}
+
+/// Entries expire `ttl` clock units after insertion; eviction (when the
+/// partition is full of fresh entries) drops the oldest insertion.
+///
+/// TTL ages on the *caller's* clock domain: one global virtual clock in
+/// the fleet (ages are real virtual seconds), a logical call tick in
+/// `CachedBackend` (ages are call counts). In the single-query CLI loop
+/// the virtual clock restarts per query, so ages only accumulate within
+/// a query — use LRU/LFU there, or the fleet path for true time-based
+/// expiry.
+pub struct TtlPolicy {
+    pub ttl: f64,
+}
+
+impl CachePolicy for TtlPolicy {
+    fn name(&self) -> &'static str {
+        "ttl"
+    }
+
+    fn expired(&self, meta: &EntryMeta, now: f64) -> bool {
+        now - meta.inserted > self.ttl
+    }
+
+    fn has_expiry(&self) -> bool {
+        true
+    }
+
+    fn victim(&self, candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>) -> Option<u64> {
+        candidates
+            .min_by(|a, b| a.1.inserted.total_cmp(&b.1.inserted).then(a.1.seq.cmp(&b.1.seq)))
+            .map(|(k, _)| k)
+    }
+}
+
+/// Declarative policy selection (CLI / config layer), resolved by
+/// [`CachePolicyKind::build`]. The size cap itself is a cache-level knob
+/// ([`super::SubtaskCache::new`]'s `capacity`) that applies under every
+/// policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CachePolicyKind {
+    Lru,
+    Lfu,
+    /// TTL in caller clock units (virtual seconds in the scheduler).
+    Ttl(f64),
+}
+
+impl CachePolicyKind {
+    /// Default TTL horizon when `--cache-policy ttl` gives no duration.
+    pub const DEFAULT_TTL: f64 = 300.0;
+
+    /// Parse `lru | lfu | ttl | ttl:<seconds>`.
+    pub fn parse(s: &str) -> Option<CachePolicyKind> {
+        let lower = s.trim().to_ascii_lowercase();
+        match lower.as_str() {
+            "lru" => Some(CachePolicyKind::Lru),
+            "lfu" => Some(CachePolicyKind::Lfu),
+            "ttl" => Some(CachePolicyKind::Ttl(Self::DEFAULT_TTL)),
+            other => {
+                let secs = other.strip_prefix("ttl:")?.parse::<f64>().ok()?;
+                (secs > 0.0).then_some(CachePolicyKind::Ttl(secs))
+            }
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn CachePolicy> {
+        match self {
+            CachePolicyKind::Lru => Box::new(LruPolicy),
+            CachePolicyKind::Lfu => Box::new(LfuPolicy),
+            CachePolicyKind::Ttl(ttl) => Box::new(TtlPolicy { ttl: *ttl }),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CachePolicyKind::Lru => "lru".into(),
+            CachePolicyKind::Lfu => "lfu".into(),
+            CachePolicyKind::Ttl(ttl) => format!("ttl({ttl})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(inserted: f64, last_used: u64, hits: u64, seq: u64) -> EntryMeta {
+        EntryMeta { inserted, last_used, hits, seq }
+    }
+
+    #[test]
+    fn lru_picks_least_recent_with_seq_tiebreak() {
+        let entries = vec![
+            (1u64, meta(0.0, 5, 3, 0)),
+            (2u64, meta(0.0, 2, 9, 1)),
+            (3u64, meta(0.0, 2, 1, 2)),
+        ];
+        let v = LruPolicy.victim(&mut entries.clone().into_iter());
+        assert_eq!(v, Some(2), "earliest last_used wins; seq breaks the op-2 tie");
+        let empty: Vec<(u64, EntryMeta)> = Vec::new();
+        assert_eq!(LruPolicy.victim(&mut empty.into_iter()), None);
+    }
+
+    #[test]
+    fn lfu_picks_fewest_hits() {
+        let entries = vec![
+            (1u64, meta(0.0, 9, 2, 0)),
+            (2u64, meta(0.0, 1, 7, 1)),
+            (3u64, meta(0.0, 8, 2, 2)),
+        ];
+        // hits tie between 1 and 3: the least-recent of the tied set (op
+        // stamp 8 vs 9) is evicted, so 3 goes.
+        let v = LfuPolicy.victim(&mut entries.into_iter());
+        assert_eq!(v, Some(3));
+    }
+
+    #[test]
+    fn ttl_expires_and_evicts_oldest() {
+        let p = TtlPolicy { ttl: 10.0 };
+        assert!(!p.expired(&meta(0.0, 0, 0, 0), 10.0));
+        assert!(p.expired(&meta(0.0, 0, 0, 0), 10.1));
+        let entries = vec![(1u64, meta(4.0, 9, 0, 0)), (2u64, meta(1.0, 9, 5, 1))];
+        assert_eq!(p.victim(&mut entries.into_iter()), Some(2));
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(CachePolicyKind::parse("lru"), Some(CachePolicyKind::Lru));
+        assert_eq!(CachePolicyKind::parse("LFU"), Some(CachePolicyKind::Lfu));
+        assert_eq!(
+            CachePolicyKind::parse("ttl"),
+            Some(CachePolicyKind::Ttl(CachePolicyKind::DEFAULT_TTL))
+        );
+        assert_eq!(CachePolicyKind::parse("ttl:45"), Some(CachePolicyKind::Ttl(45.0)));
+        assert_eq!(CachePolicyKind::parse("ttl:-1"), None);
+        assert_eq!(CachePolicyKind::parse("arc"), None);
+        for kind in [CachePolicyKind::Lru, CachePolicyKind::Lfu, CachePolicyKind::Ttl(9.0)] {
+            let built = kind.build();
+            assert!(kind.label().starts_with(built.name()));
+        }
+    }
+}

@@ -27,9 +27,10 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 /// All registered experiment ids.
-pub const EXPERIMENT_IDS: [&str; 14] = [
+pub const EXPERIMENT_IDS: [&str; 15] = [
     "calibrate", "table1", "table2", "table3", "table5", "table6_fig4", "fig3", "table7",
     "table8", "fig5", "d1_exposure", "ablations", "fleet_serve", "fleet_mixed_policy",
+    "fleet_cache",
 ];
 
 /// Shared experiment context.
@@ -1018,6 +1019,208 @@ pub fn fleet_mixed_policy(ctx: &ExpContext) -> String {
     out
 }
 
+/// Knobs of the canonical cached-Zipf fleet scenario (see
+/// [`fleet_cache_scenario`]).
+#[derive(Debug, Clone)]
+pub struct FleetCacheScenario {
+    /// Result-cache capacity per partition; 0 disables the cache.
+    pub capacity: usize,
+    pub policy: crate::cache::CachePolicyKind,
+    /// Fleet-wide shared tier on top of per-tenant partitions.
+    pub shared_tier: bool,
+    pub edge_workers: usize,
+    pub cloud_workers: usize,
+    /// Zipf popularity skew and prototype-pool size of the workload.
+    pub zipf_exponent: f64,
+    pub zipf_distinct: usize,
+    pub record_trace: bool,
+}
+
+impl Default for FleetCacheScenario {
+    fn default() -> Self {
+        FleetCacheScenario {
+            capacity: 256,
+            policy: crate::cache::CachePolicyKind::Lru,
+            shared_tier: true,
+            edge_workers: 4,
+            cloud_workers: 16,
+            zipf_exponent: 1.1,
+            zipf_distinct: 8,
+            record_trace: false,
+        }
+    }
+}
+
+/// Canonical cached-Zipf fleet, shared by the `fleet_cache` experiment
+/// and `examples/fleet_cache.rs` so the documented runnable scenario and
+/// the experiment table cannot drift apart: two unlimited tenants under
+/// the learned router, a Zipf-repeated workload, and a result cache with
+/// per-tenant partitions plus the shared global tier.
+pub fn fleet_cache_scenario(
+    predictor: Arc<dyn crate::router::UtilityPredictor>,
+    knobs: &FleetCacheScenario,
+) -> (
+    HybridFlowPipeline,
+    Vec<crate::budget::TenantPool>,
+    crate::scheduler::fleet::FleetConfig,
+) {
+    use crate::budget::TenantPool;
+    use crate::cache::SubtaskCache;
+    use crate::scheduler::fleet::FleetConfig;
+
+    let sp = SimParams::default();
+    let mut pcfg = PipelineConfig::paper_default(&sp);
+    pcfg.policy = RoutePolicy::hybridflow(&sp);
+    pcfg.schedule.edge_workers = knobs.edge_workers;
+    pcfg.schedule.cloud_workers = knobs.cloud_workers;
+    if knobs.capacity > 0 {
+        let cache = SubtaskCache::new(knobs.capacity, knobs.policy);
+        let cache = if knobs.shared_tier { cache.with_shared_tier() } else { cache };
+        pcfg.schedule.cache = Some(Arc::new(cache));
+    }
+    let pipeline = HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        predictor,
+        pcfg,
+    );
+    let tenants = vec![TenantPool::unlimited("a"), TenantPool::unlimited("b")];
+    let cfg = FleetConfig {
+        admission_limit: 64,
+        record_trace: knobs.record_trace,
+        ..Default::default()
+    };
+    (pipeline, tenants, cfg)
+}
+
+/// Cloud tokens actually transmitted over a fleet run (the App. D.1
+/// payload proxy, same rule as `metrics::exposure`): input tokens of
+/// every event that dispatched a cloud call — cloud winners *and* hedged
+/// edge-wins, whose speculative cloud replica carried the payload before
+/// cancellation. Cache hits transmit nothing.
+pub fn fleet_cloud_tokens(report: &crate::scheduler::fleet::FleetReport) -> f64 {
+    report
+        .results
+        .iter()
+        .flat_map(|r| r.exec.events.iter())
+        .filter(|e| (e.cloud || e.hedged) && !e.cached)
+        .map(|e| e.in_tokens)
+        .sum()
+}
+
+/// Cross-query result cache on a Zipf-popularity fleet: sweep cache
+/// capacity against hit rate, transmitted cloud tokens, API spend, and
+/// sojourn p50/p95. Capacity 0 is the cache-off baseline; every other row
+/// serves the identical workload, so token/latency deltas are pure cache
+/// effect. A second mini-table compares eviction policies at one
+/// capacity.
+pub fn fleet_cache(ctx: &ExpContext) -> String {
+    use crate::cache::CachePolicyKind;
+    use crate::scheduler::fleet::FleetReport;
+    use crate::server::serve_fleet_zipf;
+    use crate::workload::trace::{ArrivalProcess, ZipfMix};
+
+    let bench = Benchmark::Gpqa;
+    let n = ((120.0 * ctx.scale).round() as usize).max(24);
+    let seed = *ctx.seeds.first().unwrap_or(&11);
+    let zipf_distinct = (n / 10).max(4);
+
+    let run = |capacity: usize, policy: CachePolicyKind| -> FleetReport {
+        let knobs = FleetCacheScenario {
+            capacity,
+            policy,
+            zipf_distinct,
+            ..Default::default()
+        };
+        let (pipeline, tenants, cfg) = fleet_cache_scenario(ctx.predictor(), &knobs);
+        let zipf = ZipfMix::new(knobs.zipf_exponent, knobs.zipf_distinct);
+        serve_fleet_zipf(
+            &pipeline,
+            &cfg,
+            tenants,
+            bench,
+            n,
+            &ArrivalProcess::Poisson { rate: 0.5 },
+            &zipf,
+            seed,
+        )
+    };
+
+    let acc = |r: &FleetReport| {
+        r.results.iter().filter(|q| q.exec.correct).count() as f64
+            / r.results.len().max(1) as f64
+            * 100.0
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "Result cache on a Zipf fleet (GPQA, {n} queries, {zipf_distinct} prototypes, \
+             s=1.1, LRU, shared tier)"
+        ),
+        &[
+            "Capacity", "Hit rate (%)", "Cloud tokens", "Tokens saved", "C_API ($)",
+            "Sojourn p50 (s)", "Sojourn p95 (s)", "Acc (%)",
+        ],
+    );
+    let mut baseline_tokens = None;
+    for capacity in [0usize, 16, 64, 256] {
+        let report = run(capacity, CachePolicyKind::Lru);
+        let tokens = fleet_cloud_tokens(&report);
+        if capacity == 0 {
+            baseline_tokens = Some(tokens);
+        }
+        let (hit_rate, saved) = report
+            .cache
+            .as_ref()
+            .map_or((0.0, 0.0), |c| (c.hit_rate() * 100.0, c.tokens_saved));
+        t.row(vec![
+            if capacity == 0 { "off".into() } else { capacity.to_string() },
+            format!("{hit_rate:.1}"),
+            format!("{tokens:.0}"),
+            format!("{saved:.0}"),
+            format!("{:.4}", report.total_api_cost),
+            format!("{:.2}", report.sojourn.p50),
+            format!("{:.2}", report.sojourn.p95),
+            format!("{:.2}", acc(&report)),
+        ]);
+    }
+
+    let mut pt = Table::new(
+        "Eviction policy at capacity 64 (same workload)",
+        &["Policy", "Hit rate (%)", "Evictions", "Expired", "Tokens saved", "C_API ($)"],
+    );
+    for policy in [
+        CachePolicyKind::Lru,
+        CachePolicyKind::Lfu,
+        CachePolicyKind::Ttl(120.0),
+    ] {
+        let report = run(64, policy);
+        let c = report.cache.clone().unwrap_or_default();
+        pt.row(vec![
+            policy.label(),
+            format!("{:.1}", c.hit_rate() * 100.0),
+            c.evictions.to_string(),
+            c.expirations.to_string(),
+            format!("{:.0}", c.tokens_saved),
+            format!("{:.4}", report.total_api_cost),
+        ]);
+    }
+
+    let mut out = t.render();
+    out.push('\n');
+    out.push_str(&pt.render());
+    if let Some(base) = baseline_tokens {
+        out.push_str(&format!(
+            "\ncache-off transmits {base:.0} cloud tokens; every cached row should transmit \
+             strictly fewer at comparable accuracy.\n\
+             Expected shape: hit rate and tokens saved grow with capacity until the working\n\
+             set (distinct prototypes x plan size x 2 sides) fits; p50 sojourn drops as hits\n\
+             complete at coordinator latency instead of model latency.\n",
+        ));
+    }
+    out
+}
+
 /// Run an experiment by id.
 pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<String> {
     Ok(match id {
@@ -1035,6 +1238,7 @@ pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<String> {
         "ablations" => ablations(ctx),
         "fleet_serve" => fleet_serve(ctx),
         "fleet_mixed_policy" => fleet_mixed_policy(ctx),
+        "fleet_cache" => fleet_cache(ctx),
         other => anyhow::bail!(
             "unknown experiment '{other}'; available: {}",
             EXPERIMENT_IDS.join(", ")
@@ -1127,6 +1331,61 @@ mod tests {
         // count as offloads, cancelled losers as refunds).
         assert_eq!(off.tenants[2].state.n_offloaded, 0);
         assert_eq!(off.tenants[2].state.k_used, 0.0);
+    }
+
+    #[test]
+    fn fleet_cache_runs_tiny() {
+        let out = fleet_cache(&tiny_ctx());
+        assert!(out.contains("Result cache on a Zipf fleet"));
+        assert!(out.contains("Eviction policy at capacity 64"));
+        assert!(out.contains("| off"), "cache-off baseline row present");
+        assert!(out.contains("| 256"), "capacity sweep rows present");
+    }
+
+    #[test]
+    fn fleet_cache_scenario_hits_and_cuts_cloud_tokens() {
+        // Acceptance pin: on a Zipf trace the cached fleet reports hit
+        // rate > 0.2 and transmits strictly fewer cloud tokens than the
+        // cache-off run of the identical workload.
+        use crate::server::serve_fleet_zipf;
+        use crate::workload::trace::{ArrivalProcess, ZipfMix};
+
+        let run = |capacity: usize| {
+            let knobs = FleetCacheScenario { capacity, zipf_distinct: 4, ..Default::default() };
+            let (pipeline, tenants, cfg) = fleet_cache_scenario(
+                std::sync::Arc::new(crate::router::MirrorPredictor::synthetic_for_tests()),
+                &knobs,
+            );
+            serve_fleet_zipf(
+                &pipeline,
+                &cfg,
+                tenants,
+                Benchmark::Gpqa,
+                40,
+                // Low rate: most repeats arrive after their prototype's
+                // first execution finished (entries are availability-
+                // gated on the virtual clock).
+                &ArrivalProcess::Poisson { rate: 0.1 },
+                &ZipfMix::new(1.2, 4),
+                11,
+            )
+        };
+        let off = run(0);
+        let on = run(256);
+        assert!(off.cache.is_none());
+        let stats = on.cache.as_ref().expect("cache stats");
+        assert!(
+            stats.hit_rate() > 0.2,
+            "hit rate {:.3} below the acceptance floor",
+            stats.hit_rate()
+        );
+        assert!(
+            fleet_cloud_tokens(&on) < fleet_cloud_tokens(&off),
+            "cached run must transmit strictly fewer cloud tokens ({} vs {})",
+            fleet_cloud_tokens(&on),
+            fleet_cloud_tokens(&off)
+        );
+        assert!(stats.tokens_saved > 0.0);
     }
 
     #[test]

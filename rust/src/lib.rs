@@ -44,6 +44,7 @@ pub mod planner;
 pub mod runtime;
 
 pub mod budget;
+pub mod cache;
 pub mod engine;
 pub mod models;
 pub mod router;
@@ -58,6 +59,7 @@ pub mod server;
 
 /// Commonly used items for examples and binaries.
 pub mod prelude {
+    pub use crate::cache::{CachePolicyKind, CachedBackend, SubtaskCache};
     pub use crate::config::simparams::SimParams;
     pub use crate::dag::{Role, Subtask, TaskDag};
     pub use crate::engine::{Backend, ReplayBackend};

@@ -8,6 +8,7 @@
 //!   exp      run a paper experiment (table1..table8, fig3, fig5, calibrate)
 //!   check    verify artifacts + PJRT round trip + mirror parity
 
+use hybridflow::cache::{CachePolicyKind, SubtaskCache};
 use hybridflow::config::simparams::SimParams;
 use hybridflow::dag::emit_plan;
 use hybridflow::eval::{run_experiment, ExpContext, EXPERIMENT_IDS};
@@ -29,7 +30,7 @@ const COMMANDS: [(&str, &str); 6] = [
     ("run", "run N queries end-to-end and print outcomes"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
-    ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy>"),
+    ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy|fleet_cache>"),
     ("check", "verify artifacts, PJRT round trip, and mirror parity"),
 ];
 
@@ -95,6 +96,17 @@ fn build_pipeline(args: &Args) -> anyhow::Result<HybridFlowPipeline> {
     if args.flag("calibrated") {
         cfg.policy = RoutePolicy::hybridflow_calibrated(&sp);
     }
+    // Cross-query result cache: `--cache <cap>` entries per partition
+    // (0 = disabled), eviction via `--cache-policy <lru|lfu|ttl[:secs]>`.
+    let cache_cap = args.get_usize_or("cache", 0)?;
+    if cache_cap > 0 {
+        let kind = match args.get("cache-policy") {
+            None => CachePolicyKind::Lru,
+            Some(s) => CachePolicyKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown cache policy '{s}' (lru|lfu|ttl[:secs])"))?,
+        };
+        cfg.schedule.cache = Some(Arc::new(SubtaskCache::new(cache_cap, kind)));
+    }
     Ok(HybridFlowPipeline::with_predictor(
         SimExecutor::paper_pair(),
         SyntheticPlanner::paper_main(),
@@ -147,6 +159,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         );
     }
     println!("\naccuracy: {}/{} = {:.1}%", correct, n, correct as f64 / n as f64 * 100.0);
+    // The cache persists across the whole run loop (that is the point:
+    // cross-query reuse), so these are session totals.
+    if let Some(c) = pipeline.config.schedule.cache.as_deref() {
+        println!("{}", c.render_stats());
+    }
     Ok(())
 }
 

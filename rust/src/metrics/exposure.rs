@@ -36,9 +36,14 @@ impl Exposure {
     /// which replica won (the speculative cloud call was dispatched and
     /// carried `x_i` before any cancellation), so exposure counts it as a
     /// cloud transmission even when `ev.cloud` records an edge winner.
+    /// A *cached* node transmitted nothing anywhere — the stored result
+    /// was served by the coordinator — so it contributes to neither side.
     pub fn from_events(events: &[TraceEvent]) -> Exposure {
         let mut e = Exposure::default();
         for ev in events {
+            if ev.cached {
+                continue;
+            }
             if ev.cloud || ev.hedged {
                 e.e_cloud += ev.in_tokens;
                 e.n_cloud_calls += 1;
@@ -81,7 +86,18 @@ mod tests {
             correct: true,
             in_tokens,
             hedged: false,
+            cached: false,
         }
+    }
+
+    #[test]
+    fn cached_events_transmit_nothing() {
+        let mut hit = ev(true, 500.0);
+        hit.cached = true;
+        let e = Exposure::from_events(&[hit, ev(true, 100.0), ev(false, 50.0)]);
+        assert_eq!(e.e_cloud, 100.0, "cached cloud-side hit is not a transmission");
+        assert_eq!(e.e_edge, 50.0);
+        assert_eq!(e.n_cloud_calls, 1);
     }
 
     #[test]

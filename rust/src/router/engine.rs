@@ -32,6 +32,13 @@ pub struct RouteCtx<'a> {
     pub budget: &'a BudgetState,
     /// True benefit/cost ratio — supplied for the offline Oracle only.
     pub oracle_ratio: Option<f64>,
+    /// Cache-lookup hook: `true` when the caller already holds a cached
+    /// result for this subtask, so the decision is advisory — the cached
+    /// record will be served at near-zero cost regardless of the returned
+    /// side. Stateful routers should not spend resource-consumption state
+    /// on cached decisions (the adaptive threshold does not step: a free
+    /// completion exerts no budget pressure).
+    pub cached: bool,
 }
 
 /// One routing decision.
@@ -157,7 +164,11 @@ impl Router for LearnedRouter {
             ctx.u_hat
         };
         let cloud = u_bar > tau;
-        self.threshold.update(ctx.budget);
+        // Cache-aware: a cached subtask completes for free, so it exerts
+        // no budget pressure and must not step the dual/threshold state.
+        if !ctx.cached {
+            self.threshold.update(ctx.budget);
+        }
         Decision { cloud, tau }
     }
 
@@ -213,7 +224,7 @@ mod tests {
     use super::*;
 
     fn ctx<'a>(sp: &'a SimParams, budget: &'a BudgetState, u_hat: f64) -> RouteCtx<'a> {
-        RouteCtx { sp, u_hat, position: 0.5, budget, oracle_ratio: None }
+        RouteCtx { sp, u_hat, position: 0.5, budget, oracle_ratio: None, cached: false }
     }
 
     #[test]
@@ -273,14 +284,58 @@ mod tests {
     }
 
     #[test]
+    fn cached_decisions_do_not_step_the_threshold() {
+        // Cache-aware hook: a cached (free) completion must leave the
+        // adaptive threshold exactly where it was, while a real decision
+        // under the same overspent budget steps it.
+        let sp = SimParams::default();
+        let mut rng = Rng::new(9);
+        let mut r = LearnedRouter {
+            threshold: Threshold::dual(&sp),
+            calibrate: false,
+            bandit: LinUcb::paper_default(),
+        };
+        let mut burnt = BudgetState::new();
+        burnt.c_used = sp.c_max + 1.0;
+        let cached_ctx = RouteCtx {
+            sp: &sp,
+            u_hat: 0.5,
+            position: 0.5,
+            budget: &burnt,
+            oracle_ratio: None,
+            cached: true,
+        };
+        let d1 = r.route(&cached_ctx, &mut rng);
+        let d2 = r.route(&cached_ctx, &mut rng);
+        assert_eq!(d1.tau, d2.tau, "cached decisions must not move tau");
+        let real = RouteCtx { cached: false, ..cached_ctx };
+        let d3 = r.route(&real, &mut rng);
+        let d4 = r.route(&real, &mut rng);
+        assert!(d4.tau > d3.tau, "real decisions under overspend step tau");
+    }
+
+    #[test]
     fn oracle_gates_on_ratio_and_budget() {
         let sp = SimParams::default();
         let b = BudgetState::new();
         let mut rng = Rng::new(3);
         let mut r = OracleRouter;
-        let hit = RouteCtx { sp: &sp, u_hat: 0.0, position: 0.0, budget: &b, oracle_ratio: Some(5.0) };
-        let miss =
-            RouteCtx { sp: &sp, u_hat: 1.0, position: 0.0, budget: &b, oracle_ratio: Some(0.01) };
+        let hit = RouteCtx {
+            sp: &sp,
+            u_hat: 0.0,
+            position: 0.0,
+            budget: &b,
+            oracle_ratio: Some(5.0),
+            cached: false,
+        };
+        let miss = RouteCtx {
+            sp: &sp,
+            u_hat: 1.0,
+            position: 0.0,
+            budget: &b,
+            oracle_ratio: Some(0.01),
+            cached: false,
+        };
         assert!(r.route(&hit, &mut rng).cloud);
         assert!(!r.route(&miss, &mut rng).cloud);
         let mut burnt = BudgetState::new();
@@ -291,6 +346,7 @@ mod tests {
             position: 0.0,
             budget: &burnt,
             oracle_ratio: Some(100.0),
+            cached: false,
         };
         assert!(!r.route(&gated, &mut rng).cloud);
     }

@@ -122,8 +122,29 @@ impl RouterState {
         oracle_ratio: Option<f64>,
         rng: &mut Rng,
     ) -> bool {
-        let decision =
-            self.router.route(&RouteCtx { sp, u_hat, position, budget, oracle_ratio }, rng);
+        self.decide_hinted(sp, u_hat, position, budget, oracle_ratio, false, rng)
+    }
+
+    /// [`decide`](Self::decide) with the cache-lookup hook: `cached = true`
+    /// tells the router the scheduler already holds a cached result for
+    /// this subtask, so the returned side is advisory (the cached record
+    /// will be served either way) and resource-consumption state must not
+    /// step — see [`RouteCtx::cached`]. The threshold trace still records
+    /// the decision-time tau for the trace event.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decide_hinted(
+        &mut self,
+        sp: &SimParams,
+        u_hat: f64,
+        position: f64,
+        budget: &BudgetState,
+        oracle_ratio: Option<f64>,
+        cached: bool,
+        rng: &mut Rng,
+    ) -> bool {
+        let decision = self
+            .router
+            .route(&RouteCtx { sp, u_hat, position, budget, oracle_ratio, cached }, rng);
         self.tau_trace.push(decision.tau);
         decision.cloud
     }

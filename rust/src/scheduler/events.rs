@@ -76,6 +76,10 @@ pub struct TraceEvent {
     pub in_tokens: f64,
     /// Whether this node was speculatively dispatched to both sides.
     pub hedged: bool,
+    /// Whether this node was served from the cross-query result cache
+    /// (no worker occupied, no budget spent; `cloud` then records the
+    /// side that produced the *original* cached record).
+    pub cached: bool,
 }
 
 /// Position histogram used by Figure 3: per position, (edge count, cloud
@@ -138,6 +142,7 @@ mod tests {
             correct: true,
             in_tokens: 100.0,
             hedged: false,
+            cached: false,
         }
     }
 

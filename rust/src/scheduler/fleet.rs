@@ -48,6 +48,7 @@ use super::events::EventKey;
 use super::{apply_cancel, run_group, CancelTicket, Dispatch, FleetRouteCtx, GroupCtx};
 use super::{QueryExecState, QueryExecution, RouterState};
 use crate::budget::{GlobalBudget, TenantPool};
+use crate::cache::CacheStats;
 use crate::embed::FeatureContext;
 use crate::engine::Backend;
 use crate::pipeline::HybridFlowPipeline;
@@ -139,6 +140,11 @@ pub struct FleetReport {
     pub hedge_cancelled: usize,
     /// Dollars refunded for the unconsumed share of cancelled replicas.
     pub hedge_refund: f64,
+    /// Cross-query result-cache counters for this run (`None` when no
+    /// enabled cache was attached): hit rate, cloud tokens saved, budget
+    /// avoided, evictions. The cache is reset at run start, so these are
+    /// exactly this run's numbers.
+    pub cache: Option<CacheStats>,
     pub edge_utilization: f64,
     pub cloud_utilization: f64,
     /// True unless the event heap ever popped times out of order.
@@ -186,6 +192,10 @@ impl FleetReport {
                 "\nhedge: {} losers cancelled, ${:.4} refunded",
                 self.hedge_cancelled, self.hedge_refund
             ));
+        }
+        if let Some(c) = &self.cache {
+            out.push('\n');
+            out.push_str(&c.render_line());
         }
         out
     }
@@ -407,6 +417,12 @@ pub fn run_fleet(
     let predictor = pipeline.predictor.as_ref();
     let record_trace = cfg.record_trace;
     let hedge = schedule.hedge_gate();
+    // Every fleet run starts with a cold cache so a fixed (workload, seed)
+    // pair reproduces the same hit/miss/eviction sequence byte-for-byte.
+    let cache = schedule.cache_gate();
+    if let Some(c) = cache {
+        c.reset();
+    }
 
     let mut tenants = tenants;
     assert!(!tenants.is_empty(), "fleet needs at least one tenant pool");
@@ -547,6 +563,7 @@ pub fn run_fleet(
                             };
                             let mut route = FleetRouteCtx {
                                 tenant: &mut tenants[ti],
+                                tenant_idx: ti,
                                 global: &mut global,
                                 forced_edge: &mut q.forced_edge,
                             };
@@ -564,6 +581,7 @@ pub fn run_fleet(
                                 Some(&mut chain_clock),
                                 Some(&mut route),
                                 hedge,
+                                cache,
                                 &mut dispatched,
                             );
                             // Chain subtasks bypass the pools: zero wait by
@@ -575,7 +593,10 @@ pub fn run_fleet(
                             if record_trace {
                                 let tail = ps.st.events.len() - dispatched.len();
                                 for (k, d) in dispatched.iter().enumerate() {
-                                    let side = if ps.st.events[tail + k].cloud {
+                                    let e = &ps.st.events[tail + k];
+                                    let side = if e.cached {
+                                        "cache"
+                                    } else if e.cloud {
                                         "cloud"
                                     } else {
                                         "edge"
@@ -662,6 +683,7 @@ pub fn run_fleet(
                     if let Some(ticket) = ps.cancel_tickets[ev.key.node].take() {
                         let mut route = FleetRouteCtx {
                             tenant: &mut tenants[ti],
+                            tenant_idx: ti,
                             global: &mut global,
                             forced_edge: &mut q.forced_edge,
                         };
@@ -737,6 +759,7 @@ pub fn run_fleet(
                 };
                 let mut route = FleetRouteCtx {
                     tenant: &mut tenants[ti],
+                    tenant_idx: ti,
                     global: &mut global,
                     forced_edge: &mut q.forced_edge,
                 };
@@ -754,6 +777,7 @@ pub fn run_fleet(
                     None,
                     Some(&mut route),
                     hedge,
+                    cache,
                     &mut dispatched,
                 );
                 for d in &dispatched {
@@ -778,7 +802,14 @@ pub fn run_fleet(
                 if record_trace {
                     let tail = ps.st.events.len() - dispatched.len();
                     for (k, d) in dispatched.iter().enumerate() {
-                        let side = if ps.st.events[tail + k].cloud { "cloud" } else { "edge" };
+                        let e = &ps.st.events[tail + k];
+                        let side = if e.cached {
+                            "cache"
+                        } else if e.cloud {
+                            "cloud"
+                        } else {
+                            "edge"
+                        };
                         trace.push(format!(
                             "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}",
                             now,
@@ -889,10 +920,14 @@ pub fn run_fleet(
     let (mut edge_busy, mut cloud_busy) =
         (stats.hedge_loser_busy[0], stats.hedge_loser_busy[1]);
     // Chain-mode queries bypass the shared pools, so their events are not
-    // pool busy time; utilization reads 0 for the chain ablation.
+    // pool busy time; utilization reads 0 for the chain ablation. Cached
+    // hits run on no worker at all, so they are never busy time either.
     if !schedule.chain_mode {
         for r in &results {
             for e in &r.exec.events {
+                if e.cached {
+                    continue;
+                }
                 if e.cloud {
                     cloud_busy += e.finish - e.start;
                 } else {
@@ -903,9 +938,9 @@ pub fn run_fleet(
     }
     let span = horizon.max(1e-9);
     FleetReport {
-        admission_delay: Summary::of(&stats.admission_delays),
-        queue_wait: Summary::of(&stats.queue_waits),
-        sojourn: Summary::of(&stats.sojourns),
+        admission_delay: Summary::of_or_zero(&stats.admission_delays),
+        queue_wait: Summary::of_or_zero(&stats.queue_waits),
+        sojourn: Summary::of_or_zero(&stats.sojourns),
         throughput_qps: results.len() as f64 / span,
         offload_rate: if n_decided == 0 {
             0.0
@@ -916,6 +951,7 @@ pub fn run_fleet(
         forced_edge,
         hedge_cancelled: stats.hedge_cancelled,
         hedge_refund: stats.hedge_refund,
+        cache: cache.map(|c| c.stats()),
         edge_utilization: edge_busy / (span * edge_free.len() as f64),
         cloud_utilization: cloud_busy / (span * cloud_free.len() as f64),
         clock_monotone: stats.clock_monotone,
@@ -926,6 +962,7 @@ pub fn run_fleet(
         trace,
     }
 }
+
 
 #[cfg(test)]
 mod tests {
@@ -1214,5 +1251,133 @@ mod tests {
         assert_eq!(a.total_api_cost, b.total_api_cost);
         assert_eq!(a.hedge_cancelled, b.hedge_cancelled);
         assert_eq!(a.hedge_refund, b.hedge_refund);
+    }
+
+    // --- Cross-query result cache -----------------------------------------
+
+    /// The same query content arriving `n` times, widely spaced (no
+    /// contention), on one tenant.
+    fn repeated_arrivals(n: usize, seed: u64) -> Vec<FleetArrival> {
+        let q = generate_queries(Benchmark::Gpqa, 1, seed).pop().unwrap();
+        (0..n)
+            .map(|i| FleetArrival { time: i as f64 * 100.0, tenant: 0, query: q.clone() })
+            .collect()
+    }
+
+    fn cached_pipeline(policy: RoutePolicy, capacity: usize) -> HybridFlowPipeline {
+        use crate::cache::{CachePolicyKind, SubtaskCache};
+        let mut p = pipeline(policy);
+        if capacity > 0 {
+            p.config.schedule.cache =
+                Some(Arc::new(SubtaskCache::new(capacity, CachePolicyKind::Lru)));
+        }
+        p
+    }
+
+    use crate::eval::experiments::fleet_cloud_tokens as cloud_tokens;
+
+    #[test]
+    fn repeated_queries_hit_cache_and_cut_cloud_spend() {
+        let run = |capacity: usize| {
+            let p = cached_pipeline(RoutePolicy::AllCloud, capacity);
+            run_fleet(
+                &p,
+                &FleetConfig::default(),
+                vec![TenantPool::unlimited("t")],
+                repeated_arrivals(6, 51),
+                9,
+            )
+        };
+        let off = run(0);
+        let on = run(256);
+        assert!(off.cache.is_none(), "no cache attached => no cache column");
+        let stats = on.cache.as_ref().expect("cache stats present");
+        assert!(stats.hits > 0, "repeated content must hit");
+        assert!(stats.hit_rate() > 0.2, "hit rate {} too low", stats.hit_rate());
+        assert!(stats.tokens_saved > 0.0);
+        assert!(stats.dollars_saved > 0.0);
+        assert!(
+            cloud_tokens(&on) < cloud_tokens(&off),
+            "cached run must transmit strictly fewer cloud tokens"
+        );
+        assert!(on.total_api_cost < off.total_api_cost, "hits spend no dollars");
+        // Cached events show up in the trace as side=cache.
+        assert!(on.trace.iter().any(|l| l.contains("side=cache")));
+        assert!(on.render().contains("cache: hit rate"));
+    }
+
+    #[test]
+    fn cached_fleet_is_deterministic_across_runs() {
+        // The cache is reset at run start, so back-to-back runs over one
+        // shared Arc'd cache must produce byte-identical traces.
+        let p = cached_pipeline(RoutePolicy::AllCloud, 128);
+        let make = || {
+            run_fleet(
+                &p,
+                &FleetConfig::default(),
+                vec![TenantPool::unlimited("t")],
+                repeated_arrivals(5, 77),
+                13,
+            )
+        };
+        let a = make();
+        let b = make();
+        assert_eq!(a.trace_text(), b.trace_text());
+        let (sa, sb) = (a.cache.unwrap(), b.cache.unwrap());
+        assert_eq!(sa.lookups, sb.lookups);
+        assert_eq!(sa.hits, sb.hits);
+        assert_eq!(sa.insertions, sb.insertions);
+    }
+
+    #[test]
+    fn tenant_partitions_isolate_in_fleet_unless_shared() {
+        use crate::cache::{CachePolicyKind, SubtaskCache};
+        // The same query alternates between two tenants. Isolated
+        // partitions force each tenant to warm its own cache; a shared
+        // tier lets tenant B hit tenant A's entries (shared_hits > 0).
+        let run = |shared: bool| {
+            let mut p = pipeline(RoutePolicy::AllCloud);
+            let cache = SubtaskCache::new(256, CachePolicyKind::Lru);
+            let cache = if shared { cache.with_shared_tier() } else { cache };
+            p.config.schedule.cache = Some(Arc::new(cache));
+            let q = generate_queries(Benchmark::Gpqa, 1, 61).pop().unwrap();
+            let arrivals: Vec<FleetArrival> = (0..6)
+                .map(|i| FleetArrival {
+                    time: i as f64 * 100.0,
+                    tenant: i % 2,
+                    query: q.clone(),
+                })
+                .collect();
+            run_fleet(
+                &p,
+                &FleetConfig::default(),
+                vec![TenantPool::unlimited("a"), TenantPool::unlimited("b")],
+                arrivals,
+                3,
+            )
+        };
+        let isolated = run(false);
+        let shared = run(true);
+        let iso_stats = isolated.cache.unwrap();
+        let sh_stats = shared.cache.unwrap();
+        assert_eq!(iso_stats.shared_hits, 0, "no shared tier => no shared hits");
+        assert!(sh_stats.shared_hits > 0, "shared tier must serve cross-tenant hits");
+        assert!(sh_stats.hits >= iso_stats.hits, "sharing can only add hits");
+    }
+
+    #[test]
+    fn empty_fleet_reports_zeros_not_nan() {
+        let sp = SimParams::default();
+        let p = pipeline(RoutePolicy::hybridflow(&sp));
+        let report =
+            run_fleet(&p, &FleetConfig::default(), vec![TenantPool::unlimited("t")], vec![], 1);
+        assert_eq!(report.results.len(), 0);
+        assert_eq!(report.offload_rate, 0.0);
+        assert_eq!(report.admission_delay.mean, 0.0);
+        assert_eq!(report.queue_wait.p99, 0.0);
+        assert_eq!(report.sojourn.p95, 0.0);
+        assert_eq!(report.admission_delay.n, 0, "still marked as an empty sample");
+        let rendered = report.render();
+        assert!(!rendered.contains("NaN"), "empty fleet must render zeros: {rendered}");
     }
 }

@@ -29,6 +29,15 @@
 //! cloud calls. With `hedge` off the engine is RNG-for-RNG identical to
 //! the non-speculative scheduler (the fleet golden trace pins this).
 //!
+//! **Cross-query result cache** (`ScheduleConfig::cache`): with a
+//! [`crate::cache::SubtaskCache`] attached, every decision point first
+//! probes the cache under the node's canonical fingerprint (both side
+//! keys, one lookup); a hit serves the stored record at the cache's
+//! near-zero hit latency without occupying a worker or spending any
+//! budget scope, and executed results are inserted for later queries.
+//! With no cache (or capacity 0) the engine is byte-identical to the
+//! uncached scheduler — the fleet golden trace pins this.
+//!
 //! The virtual clock measures `C_time` exactly as the paper does: planner
 //! decomposition latency + DAG makespan under these constraints. Wall-clock
 //! coordinator overhead is measured separately (`server` module + benches).
@@ -43,6 +52,7 @@ pub mod events;
 pub mod fleet;
 
 use crate::budget::{BudgetState, GlobalBudget, TenantPool};
+use crate::cache::{CachedResult, Fingerprint, SubtaskCache};
 use crate::dag::TaskDag;
 use crate::embed::{FeatureContext, Features};
 use crate::engine::Backend;
@@ -52,6 +62,7 @@ use crate::util::rng::Rng;
 use crate::workload::{Query, SubtaskLatent};
 use events::{EventKey, TraceEvent};
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 /// Scheduling configuration.
 #[derive(Debug, Clone)]
@@ -72,6 +83,14 @@ pub struct ScheduleConfig {
     /// Predicted-utility cutoff above which an edge-routed subtask counts
     /// as pivotal enough to hedge.
     pub hedge_threshold: f64,
+    /// Cross-query subtask result cache ([`crate::cache::SubtaskCache`]).
+    /// `None` (or an attached cache with capacity 0) leaves every
+    /// execution path untouched — RNG-for-RNG identical to the uncached
+    /// engine (the fleet golden trace pins this). With a cache attached,
+    /// decision points whose fingerprint hits short-circuit to a
+    /// near-zero-latency completion: no worker is occupied, no budget is
+    /// spent, and the stored record is served bit-identically.
+    pub cache: Option<Arc<SubtaskCache>>,
 }
 
 impl Default for ScheduleConfig {
@@ -83,6 +102,7 @@ impl Default for ScheduleConfig {
             batch_frontier: true,
             hedge: false,
             hedge_threshold: 0.55,
+            cache: None,
         }
     }
 }
@@ -96,6 +116,13 @@ impl ScheduleConfig {
         } else {
             None
         }
+    }
+
+    /// The live cache passed to [`run_group`]: `None` when no cache is
+    /// attached *or* the attached cache is disabled (capacity 0), so a
+    /// `--cache 0` configuration takes the exact uncached code path.
+    pub(crate) fn cache_gate(&self) -> Option<&SubtaskCache> {
+        self.cache.as_deref().filter(|c| c.enabled())
     }
 }
 
@@ -154,6 +181,9 @@ pub(crate) struct GroupCtx<'a> {
 /// to the edge because a pool was exhausted.
 pub(crate) struct FleetRouteCtx<'a> {
     pub tenant: &'a mut TenantPool,
+    /// Index of `tenant` in the fleet's pool list — the cache partition
+    /// this query's lookups and inserts are scoped to.
+    pub tenant_idx: usize,
     pub global: &'a mut GlobalBudget,
     pub forced_edge: &'a mut usize,
 }
@@ -230,6 +260,15 @@ pub(crate) fn apply_cancel(
 /// per hedged node), so the main stream's consumption with `hedge = None`
 /// is exactly the pre-hedging sequence.
 ///
+/// `cache` is the cross-query result cache gate (`None` = uncached engine,
+/// byte-identical to the pre-cache scheduler). A fingerprint hit
+/// short-circuits the whole decision: the stored record is served at the
+/// cache's near-zero hit latency on no worker, no tenant/global budget is
+/// spent, and the router is consulted only through the advisory
+/// `cached = true` hook (fresh tau for the trace event, no threshold
+/// step). Executed (non-hit) results are inserted under the node's
+/// fingerprint for later queries.
+///
 /// `plan_done` is the virtual time planning finished (the origin for the
 /// budget's latency frontier). Executed nodes are appended to `dispatched`;
 /// the caller schedules winner completions and loser cancellations.
@@ -247,6 +286,7 @@ pub(crate) fn run_group(
     mut chain_clock: Option<&mut f64>,
     mut fleet: Option<&mut FleetRouteCtx<'_>>,
     hedge: Option<f64>,
+    cache: Option<&SubtaskCache>,
     dispatched: &mut Vec<Dispatch>,
 ) {
     let sp = g.executor.sp();
@@ -271,6 +311,61 @@ pub(crate) fn run_group(
     for (gi, &node) in group.iter().enumerate() {
         let u_hat = group_u[gi];
         let position = g.depths[node] as f64 / g.max_depth as f64;
+
+        // --- Cross-query cache probe ---------------------------------------
+        // Probe both side-fingerprints as one decision-point lookup; a hit
+        // serves the stored record at near-zero latency on no worker and
+        // spends no budget at any scope. Cloud-side first: when both sides
+        // are cached, the stronger model's record wins, so a
+        // cloud-preferring tenant is never silently downgraded to an
+        // edge-quality answer another tenant warmed.
+        if let Some(c) = cache {
+            let tenant_part = fleet.as_deref().map_or(0, |f| f.tenant_idx);
+            let role = g.dag.nodes[node].role;
+            let probe = [
+                Fingerprint::of_node(g.query, node, role, true),
+                Fingerprint::of_node(g.query, node, role, false),
+            ];
+            if let Some(hit) = c.lookup_any(tenant_part, &probe, now) {
+                // Advisory cache-aware routing hook: the router sees the
+                // decision point (fresh tau for the trace) but must not
+                // step resource-consumption state (RouteCtx::cached).
+                let _ = match fleet.as_deref_mut() {
+                    Some(f) => router
+                        .decide_hinted(sp, u_hat, position, &f.tenant.state, None, true, rng),
+                    None => {
+                        router.decide_hinted(sp, u_hat, position, &st.budget, None, true, rng)
+                    }
+                };
+                let tau = *router.tau_trace.last().unwrap_or(&0.0);
+                let (start, finish_t) = if let Some(clock) = chain_clock.as_deref_mut() {
+                    let s = *clock;
+                    *clock += c.hit_latency();
+                    (s, *clock)
+                } else {
+                    (now, now + c.hit_latency())
+                };
+                st.out_tokens[node] = hit.rec.out_tokens;
+                st.correct[node] = hit.rec.correct;
+                st.events.push(TraceEvent {
+                    node,
+                    position: g.depths[node],
+                    cloud: hit.cloud,
+                    tau,
+                    u_hat,
+                    start,
+                    finish: finish_t,
+                    api_cost: 0.0,
+                    correct: hit.rec.correct,
+                    in_tokens: hit.rec.in_tokens,
+                    hedged: false,
+                    cached: true,
+                });
+                dispatched.push(Dispatch { node, start, finish: finish_t, cancel: None });
+                continue;
+            }
+        }
+
         let oracle_ratio = {
             let dq = g.executor.true_dq(g.query.domain, g.latents, node);
             // True normalized cost (mean latency form).
@@ -415,6 +510,20 @@ pub(crate) fn run_group(
 
             st.out_tokens[node] = rec.out_tokens;
             st.correct[node] = rec.correct;
+            // The winning replica's result is cacheable like any other
+            // execution; later fingerprint hits skip the whole hedge. The
+            // entry only becomes servable at the winner's finish instant.
+            if let Some(c) = cache {
+                let tenant_part = fleet.as_deref().map_or(0, |f| f.tenant_idx);
+                let role = g.dag.nodes[node].role;
+                c.insert(
+                    tenant_part,
+                    Fingerprint::of_node(g.query, node, role, cloud_wins),
+                    CachedResult { cloud: cloud_wins, rec },
+                    now,
+                    finish_t,
+                );
+            }
             st.events.push(TraceEvent {
                 node,
                 position: g.depths[node],
@@ -427,6 +536,7 @@ pub(crate) fn run_group(
                 correct: rec.correct,
                 in_tokens: in_tok,
                 hedged: true,
+                cached: false,
             });
             dispatched.push(Dispatch { node, start, finish: finish_t, cancel: Some(cancel) });
             continue;
@@ -483,6 +593,21 @@ pub(crate) fn run_group(
             }
         }
 
+        // Populate the cross-query cache with the realized result; it is
+        // servable to same-session probes only from its finish instant
+        // (a result must not be consumed before it exists).
+        if let Some(c) = cache {
+            let tenant_part = fleet.as_deref().map_or(0, |f| f.tenant_idx);
+            let role = g.dag.nodes[node].role;
+            c.insert(
+                tenant_part,
+                Fingerprint::of_node(g.query, node, role, to_cloud),
+                CachedResult { cloud: to_cloud, rec },
+                now,
+                finish_t,
+            );
+        }
+
         st.events.push(TraceEvent {
             node,
             position: g.depths[node],
@@ -495,6 +620,7 @@ pub(crate) fn run_group(
             correct: rec.correct,
             in_tokens: rec.in_tokens,
             hedged: false,
+            cached: false,
         });
         dispatched.push(Dispatch { node, start, finish: finish_t, cancel: None });
     }
@@ -548,6 +674,14 @@ pub fn execute_query(
     let mut chain_clock = planning_latency;
 
     let hedge = cfg.hedge_gate();
+    let cache = cfg.cache_gate();
+    if let Some(c) = cache {
+        // Each query is a fresh session on a *restarting* virtual clock:
+        // entries from earlier queries become unconditionally available,
+        // while this query's own inserts stay gated on their finish time.
+        // (The fleet runs one global clock and never bumps the epoch.)
+        c.begin_session();
+    }
 
     let gctx = GroupCtx {
         dag,
@@ -623,6 +757,7 @@ pub fn execute_query(
             if cfg.chain_mode { Some(&mut chain_clock) } else { None },
             None,
             hedge,
+            cache,
             &mut dispatched,
         );
         for d in &dispatched {
@@ -981,5 +1116,105 @@ mod tests {
         let exec = run(RoutePolicy::AllEdge, &cfg, 13);
         assert!(exec.events.iter().all(|e| !e.hedged));
         assert_eq!(exec.api_cost, 0.0);
+    }
+
+    // --- Cross-query result cache -----------------------------------------
+
+    #[test]
+    fn cache_absent_and_zero_capacity_are_identical() {
+        use crate::cache::{CachePolicyKind, SubtaskCache};
+        use std::sync::Arc;
+        // A capacity-0 cache must take the exact uncached code path: no
+        // RNG perturbation, no timing drift, no cached events.
+        let plain = ScheduleConfig::default();
+        let zeroed = ScheduleConfig {
+            cache: Some(Arc::new(SubtaskCache::new(0, CachePolicyKind::Lru))),
+            ..Default::default()
+        };
+        for seed in [3u64, 11, 42] {
+            let a = run(RoutePolicy::Random(0.5), &plain, seed);
+            let b = run(RoutePolicy::Random(0.5), &zeroed, seed);
+            assert_eq!(a.latency, b.latency);
+            assert_eq!(a.api_cost, b.api_cost);
+            assert_eq!(a.correct, b.correct);
+            for (x, y) in a.events.iter().zip(&b.events) {
+                assert_eq!(x.start, y.start);
+                assert_eq!(x.finish, y.finish);
+                assert_eq!(x.cloud, y.cloud);
+                assert!(!y.cached);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_query_hits_cache_and_skips_cost() {
+        use crate::cache::{CachePolicyKind, SubtaskCache};
+        use std::sync::Arc;
+        // Same query executed twice through one cache: the second run must
+        // serve every subtask from the cache — zero API cost, near-zero
+        // makespan, results replaying the first run's records.
+        let cache = Arc::new(SubtaskCache::new(64, CachePolicyKind::Lru));
+        let cfg = ScheduleConfig { cache: Some(Arc::clone(&cache)), ..Default::default() };
+        let (dag, q, lat, ex) = setup(21);
+        let pred = MirrorPredictor::synthetic_for_tests();
+        let run_once = |rng_seed: u64| {
+            let mut router = RouterState::new(RoutePolicy::AllCloud);
+            let mut rng = Rng::new(rng_seed);
+            execute_query(&dag, &lat, &q, &ex, &pred, &mut router, 2.0, &cfg, &mut rng)
+        };
+        let first = run_once(100);
+        assert!(first.events.iter().all(|e| !e.cached), "cold cache cannot hit");
+        assert!(first.api_cost > 0.0);
+
+        let second = run_once(200);
+        assert!(second.events.iter().all(|e| e.cached), "warm cache must hit every node");
+        assert_eq!(second.api_cost, 0.0, "hits spend nothing");
+        assert_eq!(second.budget.k_used, 0.0);
+        assert_eq!(second.budget.n_decided, 0, "hits are not routing decisions");
+        // Cached correctness replays the first execution bit-for-bit.
+        for (a, b) in first.events.iter().zip(&second.events) {
+            assert_eq!(a.correct, b.correct, "node {}", a.node);
+            assert_eq!(b.api_cost, 0.0);
+            assert!(b.finish > b.start, "hit latency strictly positive");
+        }
+        // Near-zero completion: all 5 hits finish within 5 hit-latencies.
+        let makespan = second.latency - 2.0;
+        assert!(
+            makespan <= 5.0 * cache.hit_latency() + 1e-9,
+            "cached makespan {makespan} too large"
+        );
+        assert!(makespan < first.latency - 2.0, "cache must beat real execution");
+        let stats = cache.stats();
+        assert!(stats.hits >= 5);
+        assert!(stats.tokens_saved > 0.0, "cloud-side hits save tokens");
+        assert!(stats.dollars_saved > 0.0);
+    }
+
+    #[test]
+    fn cache_hits_work_in_chain_mode() {
+        use crate::cache::{CachePolicyKind, SubtaskCache};
+        use std::sync::Arc;
+        let cache = Arc::new(SubtaskCache::new(64, CachePolicyKind::Lfu));
+        let cfg = ScheduleConfig {
+            chain_mode: true,
+            cache: Some(Arc::clone(&cache)),
+            ..Default::default()
+        };
+        let (dag, q, lat, ex) = setup(33);
+        let pred = MirrorPredictor::synthetic_for_tests();
+        let mut router = RouterState::new(RoutePolicy::AllEdge);
+        let mut rng = Rng::new(1);
+        let first = execute_query(&dag, &lat, &q, &ex, &pred, &mut router, 2.0, &cfg, &mut rng);
+        let mut router = RouterState::new(RoutePolicy::AllEdge);
+        let mut rng = Rng::new(2);
+        let second = execute_query(&dag, &lat, &q, &ex, &pred, &mut router, 2.0, &cfg, &mut rng);
+        assert!(second.events.iter().all(|e| e.cached));
+        // Chain clock advances by one hit latency per node.
+        assert!(
+            (second.latency - (2.0 + 5.0 * cache.hit_latency())).abs() < 1e-9,
+            "chain cached latency {}",
+            second.latency
+        );
+        assert!(second.latency < first.latency);
     }
 }

@@ -13,13 +13,14 @@
 
 pub mod telemetry;
 
+use crate::cache::CacheStats;
 use crate::metrics::QueryOutcome;
 use crate::pipeline::HybridFlowPipeline;
 use crate::scheduler::fleet::{run_fleet, FleetArrival, FleetConfig, FleetReport};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
-use crate::workload::trace::ArrivalProcess;
+use crate::workload::trace::{ArrivalProcess, ZipfMix};
 use crate::workload::{generate_queries, Benchmark, Query};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -39,11 +40,18 @@ pub struct ServeReport {
     pub accuracy_pct: f64,
     pub total_api_cost: f64,
     pub mean_offload_rate: f64,
+    /// Result-cache counters for this run (`None` when the pipeline has
+    /// no enabled cache attached). Note the wall-clock serving loop runs
+    /// queries on a thread pool, so the *hit pattern* depends on thread
+    /// interleaving — per-query outcomes stay seed-deterministic only
+    /// with the cache off; the virtual-clock fleet path
+    /// ([`serve_fleet`]) is the deterministic one.
+    pub cache: Option<CacheStats>,
 }
 
 impl ServeReport {
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "served {} queries in {:.2}s wall ({:.1} q/s)\n\
              coordinator wall latency: p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms\n\
              simulated C_time:         mean {:.2}s  p50 {:.2}s  p99 {:.2}s\n\
@@ -60,7 +68,12 @@ impl ServeReport {
             self.accuracy_pct,
             self.total_api_cost,
             self.mean_offload_rate * 100.0,
-        )
+        );
+        if let Some(c) = &self.cache {
+            out.push('\n');
+            out.push_str(&c.render_line());
+        }
+        out
     }
 }
 
@@ -74,6 +87,11 @@ pub fn serve(
     let n = queries.len();
     let pool = ThreadPool::new(workers);
     let counter = Arc::new(AtomicUsize::new(0));
+    // Each serve run starts with a cold cache so the report's cache
+    // counters are exactly this run's numbers.
+    if let Some(c) = pipeline.config.schedule.cache.as_deref() {
+        c.reset();
+    }
     let t0 = Instant::now();
 
     let results: Vec<(QueryOutcome, f64)> = pool.map(queries, {
@@ -101,11 +119,18 @@ pub fn serve(
         n_queries: n,
         wall_seconds: wall,
         throughput_qps: n as f64 / wall.max(1e-9),
-        wall_latency: Summary::of(&wall_lats),
-        sim_latency: Summary::of(&sim_lats),
+        wall_latency: Summary::of_or_zero(&wall_lats),
+        sim_latency: Summary::of_or_zero(&sim_lats),
         accuracy_pct: correct as f64 / n.max(1) as f64 * 100.0,
         total_api_cost: api,
         mean_offload_rate: off,
+        cache: pipeline
+            .config
+            .schedule
+            .cache
+            .as_deref()
+            .filter(|c| c.enabled())
+            .map(|c| c.stats()),
     }
 }
 
@@ -127,6 +152,36 @@ pub fn serve_fleet(
     let n_tenants = tenants.len().max(1);
     let times = process.sample(n, seed);
     let arrivals: Vec<FleetArrival> = generate_queries(bench, n, seed)
+        .into_iter()
+        .zip(times)
+        .enumerate()
+        .map(|(i, (query, time))| FleetArrival { time, tenant: i % n_tenants, query })
+        .collect();
+    run_fleet(pipeline, cfg, tenants, arrivals, seed)
+}
+
+/// [`serve_fleet`] with a Zipf-popularity repetition knob: the fresh
+/// query set is rewritten by `zipf` (see
+/// [`crate::workload::trace::ZipfMix`]) before arrival assignment, so
+/// popular prototypes repeat across the fleet — the workload shape that
+/// exercises the cross-query result cache. Deterministic in
+/// `(bench, n, zipf, seed)`.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_fleet_zipf(
+    pipeline: &HybridFlowPipeline,
+    cfg: &FleetConfig,
+    tenants: Vec<crate::budget::TenantPool>,
+    bench: Benchmark,
+    n: usize,
+    process: &ArrivalProcess,
+    zipf: &ZipfMix,
+    seed: u64,
+) -> FleetReport {
+    let n_tenants = tenants.len().max(1);
+    let times = process.sample(n, seed);
+    let base = generate_queries(bench, n, seed);
+    let arrivals: Vec<FleetArrival> = zipf
+        .apply(&base, seed)
         .into_iter()
         .zip(times)
         .enumerate()
@@ -177,6 +232,43 @@ mod tests {
         assert_eq!(a.n_queries, b.n_queries);
         assert_eq!(a.accuracy_pct, b.accuracy_pct);
         assert_eq!(a.total_api_cost, b.total_api_cost);
+    }
+
+    #[test]
+    fn serve_fleet_zipf_repeats_prototypes_and_feeds_cache() {
+        use crate::cache::{CachePolicyKind, SubtaskCache};
+        let sp = SimParams::default();
+        let mut cfg = PipelineConfig::paper_default(&sp);
+        cfg.policy = RoutePolicy::AllCloud;
+        cfg.schedule.cache =
+            Some(Arc::new(SubtaskCache::new(256, CachePolicyKind::Lru).with_shared_tier()));
+        let p = HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            Arc::new(MirrorPredictor::synthetic_for_tests()),
+            cfg,
+        );
+        let report = serve_fleet_zipf(
+            &p,
+            &FleetConfig { record_trace: false, ..Default::default() },
+            vec![TenantPool::unlimited("a"), TenantPool::unlimited("b")],
+            Benchmark::Gpqa,
+            24,
+            // Wide spacing: repeats arrive after their prototype's first
+            // execution has finished (entries are availability-gated).
+            &ArrivalProcess::Periodic { gap: 40.0 },
+            &ZipfMix::new(1.2, 4),
+            7,
+        );
+        assert_eq!(report.results.len(), 24);
+        // Only the 4 prototype ids appear.
+        let mut ids: Vec<u64> = report.results.iter().map(|r| r.query_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert!(ids.len() <= 4, "expected <=4 prototypes, saw {ids:?}");
+        let stats = report.cache.expect("cache stats");
+        assert!(stats.hits > 0, "zipf repetition must produce cache hits");
+        assert!(stats.hit_rate() > 0.2, "hit rate {}", stats.hit_rate());
     }
 
     #[test]

@@ -130,6 +130,27 @@ impl Summary {
             p99: percentile_sorted(&sorted, 99.0),
         }
     }
+
+    /// [`Summary::of`], except an empty sample reports zeros instead of
+    /// NaN (`n == 0` still marks it empty) — for reports that render the
+    /// raw values (empty fleets / serve runs must not print NaN).
+    pub fn of_or_zero(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            }
+        } else {
+            Summary::of(xs)
+        }
+    }
 }
 
 /// Linear-interpolated percentile of a pre-sorted slice; p in [0, 100].
@@ -243,6 +264,21 @@ mod tests {
         let empty = Summary::of(&[]);
         assert!(empty.mean.is_nan());
         assert!(empty.p95.is_nan());
+    }
+
+    #[test]
+    fn of_or_zero_zeros_empty_and_matches_of_otherwise() {
+        let empty = Summary::of_or_zero(&[]);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.mean, 0.0);
+        assert_eq!(empty.p50, 0.0);
+        assert_eq!(empty.p99, 0.0);
+        let xs = [3.0, 1.0, 2.0];
+        let a = Summary::of(&xs);
+        let b = Summary::of_or_zero(&xs);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.p95, b.p95);
+        assert_eq!(a.n, b.n);
     }
 
     #[test]

@@ -70,6 +70,47 @@ impl ArrivalProcess {
     }
 }
 
+/// Zipf-popularity repetition knob: rewrites a fresh query list so
+/// arrivals draw from a pool of `distinct` prototype queries with
+/// P(prototype of popularity rank r) ∝ 1 / (r + 1)^exponent. Real fleet
+/// traffic is heavy-tailed — a few prompts dominate — and this is the
+/// workload shape that makes the cross-query result cache
+/// ([`crate::cache::SubtaskCache`]) earn hits: repeated prototypes carry
+/// identical query *content* (ids included), so their subtask
+/// fingerprints collide by construction.
+///
+/// Deterministic in `(input queries, seed)`; `exponent = 0` degenerates
+/// to a uniform draw over the prototype pool.
+#[derive(Debug, Clone)]
+pub struct ZipfMix {
+    /// Skew `s` of the popularity law (serving-paper convention: ~0.9-1.2
+    /// for production LLM traffic).
+    pub exponent: f64,
+    /// Number of distinct prototype queries (clamped to the input size).
+    pub distinct: usize,
+}
+
+impl ZipfMix {
+    pub fn new(exponent: f64, distinct: usize) -> ZipfMix {
+        assert!(exponent >= 0.0, "zipf exponent must be non-negative");
+        ZipfMix { exponent, distinct: distinct.max(1) }
+    }
+
+    /// Replace each query with a Zipf-drawn prototype (the first
+    /// `distinct` entries of `queries`, in order of popularity). Output
+    /// length equals input length.
+    pub fn apply(&self, queries: &[Query], seed: u64) -> Vec<Query> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let d = self.distinct.min(queries.len());
+        let weights: Vec<f64> =
+            (0..d).map(|r| 1.0 / ((r + 1) as f64).powf(self.exponent)).collect();
+        let mut rng = Rng::new(seed ^ 0x21bf_5eed_21bf_5eed);
+        queries.iter().map(|_| queries[rng.categorical(&weights)].clone()).collect()
+    }
+}
+
 /// One recorded query + outcome.
 #[derive(Debug, Clone)]
 pub struct TraceRecord {
@@ -274,6 +315,40 @@ mod tests {
     fn periodic_arrivals_exact() {
         let a = ArrivalProcess::Periodic { gap: 1.5 }.sample(4, 0);
         assert_eq!(a, vec![0.0, 1.5, 3.0, 4.5]);
+    }
+
+    #[test]
+    fn zipf_mix_is_deterministic_and_skewed() {
+        let qs = generate_queries(Benchmark::Gpqa, 400, 9);
+        let mix = ZipfMix::new(1.1, 8);
+        let a = mix.apply(&qs, 5);
+        let b = mix.apply(&qs, 5);
+        assert_eq!(a.len(), 400);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id, "deterministic in (queries, seed)");
+        }
+        // Every output is one of the 8 prototypes, content included.
+        let proto_ids: Vec<u64> = qs[..8].iter().map(|q| q.id).collect();
+        assert!(a.iter().all(|q| proto_ids.contains(&q.id)));
+        // Popularity skew: rank 0 strictly more frequent than rank 7.
+        let count = |id: u64| a.iter().filter(|q| q.id == id).count();
+        assert!(count(proto_ids[0]) > count(proto_ids[7]));
+        assert!(count(proto_ids[0]) > 400 / 8, "head rank must beat uniform share");
+        // Different seed reshuffles the assignment.
+        let c = mix.apply(&qs, 6);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.id != y.id));
+    }
+
+    #[test]
+    fn zipf_mix_edge_cases() {
+        let qs = generate_queries(Benchmark::Gpqa, 5, 1);
+        // distinct larger than the pool clamps to the pool.
+        let wide = ZipfMix::new(1.0, 50).apply(&qs, 0);
+        assert_eq!(wide.len(), 5);
+        // distinct = 1 repeats the single prototype verbatim.
+        let single = ZipfMix::new(1.0, 1).apply(&qs, 0);
+        assert!(single.iter().all(|q| q.id == qs[0].id));
+        assert!(ZipfMix::new(1.0, 3).apply(&[], 0).is_empty());
     }
 
     #[test]

@@ -245,6 +245,65 @@ fn hedge_off_reproduces_golden_trace() {
     }
 }
 
+/// Satellite regression (PR 3): with the result cache disabled — either
+/// not attached, or attached with capacity 0 (the CLI's `--cache 0`) —
+/// the engine must reproduce the PR 2 fleet trace byte-for-byte. A
+/// capacity-0 cache must be *fully* inert: its probe path consumes no RNG
+/// and its insert path stores nothing.
+#[test]
+fn cache_off_reproduces_golden_trace() {
+    use hybridflow::cache::{CachePolicyKind, SubtaskCache};
+
+    let base = golden_workload().trace_text();
+
+    let mut schedule = golden_schedule();
+    schedule.cache = Some(Arc::new(SubtaskCache::new(0, CachePolicyKind::Lru)));
+    let zero_cap = golden_workload_with(schedule).trace_text();
+
+    assert_eq!(
+        zero_cap, base,
+        "--cache 0 must be byte-identical to the uncached engine"
+    );
+    let path = golden_path();
+    if path.exists() {
+        let pinned = std::fs::read_to_string(&path).expect("read golden file");
+        assert_eq!(
+            zero_cap, pinned,
+            "cache-off trace diverged from the pinned golden file {}",
+            path.display()
+        );
+    }
+}
+
+/// Single-query counterpart of the golden pin: `--cache 0` leaves
+/// `execute_query` outcomes bit-identical across a policy grid.
+#[test]
+fn cache_off_single_query_is_bit_identical() {
+    use hybridflow::cache::{CachePolicyKind, SubtaskCache};
+
+    let sp = SimParams::default();
+    for policy in [
+        RoutePolicy::hybridflow(&sp),
+        RoutePolicy::Random(0.5),
+        RoutePolicy::AllCloud,
+    ] {
+        for seed in [2u64, 71, 909] {
+            let plain = pipeline_with(policy.clone(), ScheduleConfig::default());
+            let mut zero_sched = ScheduleConfig::default();
+            zero_sched.cache = Some(Arc::new(SubtaskCache::new(0, CachePolicyKind::Lfu)));
+            let zeroed = pipeline_with(policy.clone(), zero_sched);
+            let query = generate_queries(Benchmark::Gpqa, 1, seed).pop().unwrap();
+            let mut r1 = Rng::new(job_seed(seed, 0));
+            let mut r2 = Rng::new(job_seed(seed, 0));
+            let (a, _) = plain.run_query_traced(&query, &mut r1);
+            let (b, _) = zeroed.run_query_traced(&query, &mut r2);
+            assert_exec_equal(&b, &a, &format!("{}/seed{seed}", policy.label()));
+            // The RNG streams advanced in lockstep too.
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Properties.
 // ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ echo "== example smoke runs =="
 # (not just the library) fail fast. These are part of verification.
 cargo run --release --example fleet_sim -- --n 6 --rate 2.0 --tenants 2
 cargo run --release --example fleet_mixed_policy -- --n 6 --rate 1.0
+cargo run --release --example fleet_cache -- --n 8 --rate 1.0 --distinct 3
 
 echo "== cargo clippy --no-default-features (advisory) =="
 # Lints are reported but do not fail verification (the seed predates
