@@ -1,5 +1,5 @@
 # Convenience targets. `make verify` is the tier-1 gate (build + tests,
-# golden-trace test included, + advisory fmt check).
+# golden-trace + scenario tests included, + enforced fmt check).
 
 .PHONY: verify build test fmt artifacts
 

@@ -1,13 +1,14 @@
-//! Result-cache fleet driver: a Zipf-popularity workload (a few prototype
-//! queries dominate the arrival stream) served with the cross-query
-//! subtask cache swept across capacities, showing hit rate climbing,
-//! transmitted cloud tokens falling, and the sojourn distribution
-//! tightening — then a determinism check (two cached runs must produce
-//! byte-identical event traces).
+//! Result-cache fleet driver on the declarative Scenario API: a
+//! Zipf-popularity workload (a few prototype queries dominate the arrival
+//! stream) served with the cross-query subtask cache swept across
+//! capacities, showing hit rate climbing, transmitted cloud tokens
+//! falling, and the sojourn distribution tightening — then a determinism
+//! check (two cached runs must produce byte-identical event traces).
 //!
-//! The scenario itself (tenants, worker pools, shared cache tier) is the
-//! canonical one from `eval::experiments::fleet_cache_scenario`, so this
-//! driver and the `fleet_cache` experiment can never drift apart.
+//! The scenario itself is `scenario::presets::fleet_cache` (shipped as
+//! `scenarios/fleet_cache.json`), the same spec the `fleet_cache`
+//! experiment runs, so this driver and the experiment table can never
+//! drift apart.
 //!
 //! ```sh
 //! cargo run --release --example fleet_cache -- \
@@ -16,14 +17,11 @@
 //! ```
 
 use hybridflow::cache::CachePolicyKind;
-use hybridflow::eval::experiments::{
-    fleet_cache_scenario, fleet_cloud_tokens, FleetCacheScenario,
-};
+use hybridflow::eval::experiments::fleet_cloud_tokens;
 use hybridflow::router::{MirrorPredictor, UtilityPredictor};
-use hybridflow::scheduler::fleet::FleetReport;
-use hybridflow::server::serve_fleet_zipf;
+use hybridflow::scenario::presets::{self, FleetCacheKnobs};
+use hybridflow::scenario::Report;
 use hybridflow::util::cli::Args;
-use hybridflow::workload::trace::{ArrivalProcess, ZipfMix};
 use hybridflow::workload::Benchmark;
 use std::sync::Arc;
 
@@ -46,9 +44,8 @@ fn main() -> anyhow::Result<()> {
             Err(_) => Arc::new(MirrorPredictor::synthetic_for_tests()),
         };
 
-    let zipf = ZipfMix::new(zipf_exponent, distinct);
-    let run = |capacity: usize| -> FleetReport {
-        let knobs = FleetCacheScenario {
+    let run = |capacity: usize| -> Report {
+        let knobs = FleetCacheKnobs {
             capacity,
             policy,
             zipf_exponent,
@@ -56,17 +53,9 @@ fn main() -> anyhow::Result<()> {
             record_trace: true,
             ..Default::default()
         };
-        let (pipeline, tenants, cfg) = fleet_cache_scenario(Arc::clone(&predictor), &knobs);
-        serve_fleet_zipf(
-            &pipeline,
-            &cfg,
-            tenants,
-            bench,
-            n,
-            &ArrivalProcess::Poisson { rate },
-            &zipf,
-            seed,
-        )
+        presets::fleet_cache(bench, n, rate, seed, &knobs)
+            .build(Arc::clone(&predictor))
+            .run()
     };
 
     println!(
@@ -76,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         policy.label(),
     );
 
-    let acc = |r: &FleetReport| {
+    let acc = |r: &Report| {
         r.results.iter().filter(|q| q.exec.correct).count() as f64
             / r.results.len().max(1) as f64
             * 100.0
@@ -86,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         "{:>8}  {:>9}  {:>12}  {:>12}  {:>10}  {:>8}  {:>8}  {:>7}",
         "capacity", "hit rate", "cloud toks", "toks saved", "C_API", "p50", "p95", "acc"
     );
-    let mut cached_run: Option<FleetReport> = None;
+    let mut cached_run: Option<Report> = None;
     for capacity in [0usize, 16, 64, 256] {
         let report = run(capacity);
         let (hit_rate, saved) = report

@@ -1,12 +1,13 @@
-//! Mixed-policy fleet driver: three tenants run *different* routing
-//! policies in one fleet (per-tenant overrides in `FleetConfig`), served
-//! twice — hedged speculative dispatch off, then on — to show the sojourn
-//! tail dropping while accuracy holds and cancelled speculative calls are
-//! refunded.
+//! Mixed-policy fleet driver on the declarative Scenario API: three
+//! tenants run *different* routing policies in one fleet (per-tenant
+//! overrides in the scenario topology), served twice — hedged speculative
+//! dispatch off, then on — to show the sojourn tail dropping while
+//! accuracy holds and cancelled speculative calls are refunded.
 //!
-//! The scenario itself (tenants, policy overrides, worker pools) is the
-//! canonical one from `eval::experiments::mixed_policy_scenario`, so this
-//! driver and the `fleet_mixed_policy` experiment can never drift apart.
+//! The scenario itself is `scenario::presets::mixed_policy` (shipped as
+//! `scenarios/fleet_mixed_policy.json`), the same spec the
+//! `fleet_mixed_policy` experiment runs, so this driver and the
+//! experiment table can never drift apart.
 //!
 //! ```sh
 //! cargo run --release --example fleet_mixed_policy -- \
@@ -15,12 +16,10 @@
 //!     [--hedge-threshold 0.55] [--seed 11]
 //! ```
 
-use hybridflow::eval::experiments::{mixed_policy_scenario, MixedPolicyScenario};
 use hybridflow::router::{MirrorPredictor, UtilityPredictor};
-use hybridflow::scheduler::fleet::FleetReport;
-use hybridflow::server::serve_fleet;
+use hybridflow::scenario::presets::{self, MixedPolicyKnobs};
+use hybridflow::scenario::Report;
 use hybridflow::util::cli::Args;
-use hybridflow::workload::trace::ArrivalProcess;
 use hybridflow::workload::Benchmark;
 use std::sync::Arc;
 
@@ -42,16 +41,17 @@ fn main() -> anyhow::Result<()> {
             Err(_) => Arc::new(MirrorPredictor::synthetic_for_tests()),
         };
 
-    let run = |hedge: bool| -> FleetReport {
-        let knobs = MixedPolicyScenario {
+    let run = |hedge: bool| -> Report {
+        let knobs = MixedPolicyKnobs {
             edge_workers,
             cloud_workers,
             hedge,
             hedge_threshold,
             record_trace: true,
         };
-        let (pipeline, tenants, cfg) = mixed_policy_scenario(Arc::clone(&predictor), &knobs);
-        serve_fleet(&pipeline, &cfg, tenants, bench, n, &ArrivalProcess::Poisson { rate }, seed)
+        presets::mixed_policy(bench, n, rate, seed, &knobs)
+            .build(Arc::clone(&predictor))
+            .run()
     };
 
     println!(
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
         bench.display()
     );
 
-    let acc = |r: &FleetReport| {
+    let acc = |r: &Report| {
         r.results.iter().filter(|q| q.exec.correct).count() as f64
             / r.results.len().max(1) as f64
             * 100.0

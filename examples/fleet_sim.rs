@@ -1,24 +1,23 @@
-//! Fleet simulation driver: a seeded multi-tenant workload on shared
-//! edge/cloud pools, run **twice** to prove end-to-end determinism (the
-//! two event traces must match byte-for-byte).
+//! Fleet simulation driver on the declarative Scenario API: a seeded
+//! multi-tenant workload on shared edge/cloud pools, run **twice** to
+//! prove end-to-end determinism (the two event traces must match
+//! byte-for-byte).
+//!
+//! The scenario is `scenario::presets::fleet_sim` — the same spec shipped
+//! as `scenarios/fleet_sim.json`; pass `--spec-out <file>` to write the
+//! exact spec this invocation ran, ready for
+//! `hybridflow run --scenario <file>`.
 //!
 //! ```sh
 //! cargo run --release --example fleet_sim -- \
 //!     [--benchmark gpqa] [--n 60] [--rate 0.5] [--tenants 3] \
 //!     [--edge-workers 8] [--cloud-workers 16] [--admission 64] \
-//!     [--tenant-cap 0.02] [--seed 11] [--trace]
+//!     [--tenant-cap 0.02] [--seed 11] [--trace] [--spec-out fleet.json]
 //! ```
 
-use hybridflow::budget::TenantPool;
-use hybridflow::config::simparams::SimParams;
-use hybridflow::models::SimExecutor;
-use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
-use hybridflow::planner::synthetic::SyntheticPlanner;
-use hybridflow::router::{MirrorPredictor, RoutePolicy};
-use hybridflow::scheduler::fleet::FleetConfig;
-use hybridflow::server::serve_fleet;
+use hybridflow::router::{MirrorPredictor, UtilityPredictor};
+use hybridflow::scenario::presets::{self, FleetSimKnobs};
 use hybridflow::util::cli::Args;
-use hybridflow::workload::trace::ArrivalProcess;
 use hybridflow::workload::Benchmark;
 use std::sync::Arc;
 
@@ -32,34 +31,30 @@ fn main() -> anyhow::Result<()> {
     let edge_workers = args.get_usize_or("edge-workers", 8)?;
     let cloud_workers = args.get_usize_or("cloud-workers", 16)?;
     let admission = args.get_usize_or("admission", 64)?;
-    let tenant_cap = args.get_f64_or("tenant-cap", f64::INFINITY)?;
+    let tenant_cap = args.get_f64("tenant-cap")?;
     let seed = args.get_u64_or("seed", 11)?;
 
-    let sp = SimParams::default();
-    let mut pcfg = PipelineConfig::paper_default(&sp);
-    pcfg.policy = RoutePolicy::hybridflow(&sp);
-    pcfg.schedule.edge_workers = edge_workers;
-    pcfg.schedule.cloud_workers = cloud_workers;
-    let artifacts = hybridflow::config::default_artifacts_dir();
-    let predictor = MirrorPredictor::from_meta_file(&artifacts.join("router_meta.json"))
-        .map(Arc::new)
-        .unwrap_or_else(|_| Arc::new(MirrorPredictor::synthetic_for_tests()));
-    let pipeline = HybridFlowPipeline::with_predictor(
-        SimExecutor::paper_pair(),
-        SyntheticPlanner::paper_main(),
-        predictor,
-        pcfg,
-    );
-
-    let cfg = FleetConfig {
+    let knobs = FleetSimKnobs {
+        n_tenants,
+        edge_workers,
+        cloud_workers,
         admission_limit: admission,
+        tenant_cap: tenant_cap.filter(|c| c.is_finite()),
         record_trace: true,
-        ..Default::default()
     };
-    let tenants = || -> Vec<TenantPool> {
-        (0..n_tenants).map(|i| TenantPool::new(&format!("tenant-{i}"), tenant_cap)).collect()
-    };
-    let process = ArrivalProcess::Poisson { rate };
+    let spec = presets::fleet_sim(bench, n, rate, seed, &knobs);
+    if let Some(path) = args.get("spec-out") {
+        std::fs::write(path, spec.render())?;
+        println!("scenario spec written to {path}");
+    }
+
+    let artifacts = hybridflow::config::default_artifacts_dir();
+    let predictor: Arc<dyn UtilityPredictor> =
+        match MirrorPredictor::from_meta_file(&artifacts.join("router_meta.json")) {
+            Ok(p) => Arc::new(p),
+            Err(_) => Arc::new(MirrorPredictor::synthetic_for_tests()),
+        };
+    let session = spec.build(predictor);
 
     println!(
         "fleet_sim: {n} x {} queries, {n_tenants} tenants, poisson {rate} q/s, \
@@ -67,10 +62,11 @@ fn main() -> anyhow::Result<()> {
         bench.display()
     );
 
-    // Run the identical workload twice; the virtual path must be exactly
-    // reproducible (seeded RNG, no wall-clock anywhere).
-    let first = serve_fleet(&pipeline, &cfg, tenants(), bench, n, &process, seed);
-    let second = serve_fleet(&pipeline, &cfg, tenants(), bench, n, &process, seed);
+    // Run the identical scenario twice; the virtual path must be exactly
+    // reproducible (seeded RNG, cold tenant pools per run, no wall-clock
+    // anywhere).
+    let first = session.run();
+    let second = session.run();
 
     println!("{}\n", first.render());
     for t in &first.tenants {

@@ -3,13 +3,14 @@
 //! A policy never owns entry state: every cached entry carries an
 //! [`EntryMeta`] (insert time, last-use time, hit count, insertion
 //! sequence number) maintained by the cache itself, and the policy is a
-//! *stateless selector* over that metadata — it decides which entries have
-//! expired and which entry to evict when a partition is full. Keeping the
-//! policy stateless makes one boxed policy safely shareable across every
-//! tenant partition and the shared tier, and keeps victim selection
-//! deterministic: candidates are iterated in fingerprint order and every
-//! comparison falls back to the insertion sequence number as the final
-//! tie-break.
+//! *stateless selector* over that metadata — it decides which entries
+//! have expired and assigns each entry a total-order eviction
+//! [`rank`](CachePolicy::rank). The cache maintains a `BTreeSet` index on
+//! `(rank, fingerprint)` per partition, so the eviction victim (the
+//! minimum) is found in O(log n) instead of the historical O(capacity)
+//! scan — see the `insert+evict` cases of `benches/cache.rs`. Victim
+//! selection stays deterministic because every rank embeds the insertion
+//! sequence number, which is unique within a partition.
 //!
 //! All times are the caller's clock — the virtual sim clock in the
 //! scheduler integration, a logical call counter in
@@ -35,30 +36,63 @@ pub struct EntryMeta {
     pub seq: u64,
 }
 
-/// An eviction policy: expiry predicate + victim selector.
+/// Total-order eviction key (see [`CachePolicy::rank`]): the entry with
+/// the smallest rank is the eviction victim.
+pub type EvictionRank = [u64; 3];
+
+/// Map an `f64` clock value onto `u64`s whose unsigned ordering matches
+/// `f64::total_cmp` (standard sign-flip trick), so clock-ranked policies
+/// (TTL) can participate in the integer eviction index.
+pub fn ordered_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b & (1 << 63) != 0 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// An eviction policy: expiry predicate + eviction-order key.
 pub trait CachePolicy: Send + Sync {
     /// Short label ("lru", "lfu", ...).
     fn name(&self) -> &'static str;
 
     /// Whether an entry is stale at clock `now` (TTL policies). Expired
     /// entries are dropped on lookup (counted as misses) and purged before
-    /// any eviction. Default: entries never expire.
+    /// any eviction. Implementations must be monotone in `meta.inserted`
+    /// (an older insertion can never outlive a newer one), which lets the
+    /// cache purge stale entries from the front of an insertion-ordered
+    /// index. Default: entries never expire.
     fn expired(&self, _meta: &EntryMeta, _now: f64) -> bool {
         false
     }
 
     /// Whether `expired` can ever return true. Policies without expiry
-    /// (LRU/LFU) return false so the cache skips the full-partition stale
-    /// purge on the insert-at-capacity path. Default: no expiry.
+    /// (LRU/LFU) return false so the cache skips the stale purge on the
+    /// insert-at-capacity path. Default: no expiry.
     fn has_expiry(&self) -> bool {
         false
     }
 
-    /// Pick the eviction victim among `(fingerprint, meta)` candidates.
-    /// Candidates arrive in ascending fingerprint order; implementations
-    /// must be deterministic (tie-break on `meta.seq`). Returns `None`
-    /// only for an empty candidate set.
-    fn victim(&self, candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>) -> Option<u64>;
+    /// The entry's eviction rank: among live entries, the one with the
+    /// smallest `(rank, fingerprint)` is evicted first. Must embed
+    /// `meta.seq` (unique within a partition) so ranks are distinct and
+    /// victim selection is deterministic. The cache keeps a sorted index
+    /// on this key, so eviction is O(log n); the rank must therefore be a
+    /// pure function of `meta` (it is recomputed whenever the cache
+    /// updates an entry's metadata).
+    fn rank(&self, meta: &EntryMeta) -> EvictionRank;
+}
+
+/// Deterministic victim among `(fingerprint, meta)` candidates: smallest
+/// `(rank, fingerprint)`. This is the linear-scan reference semantics of
+/// the cache's O(log n) eviction index (tests and benches compare against
+/// it; the cache itself uses the index).
+pub fn select_victim(
+    policy: &dyn CachePolicy,
+    candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>,
+) -> Option<u64> {
+    candidates.min_by_key(|&(k, m)| (policy.rank(&m), k)).map(|(k, _)| k)
 }
 
 /// Evict the least-recently-used entry.
@@ -69,10 +103,8 @@ impl CachePolicy for LruPolicy {
         "lru"
     }
 
-    fn victim(&self, candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>) -> Option<u64> {
-        candidates
-            .min_by_key(|&(_, m)| (m.last_used, m.seq))
-            .map(|(k, _)| k)
+    fn rank(&self, meta: &EntryMeta) -> EvictionRank {
+        [meta.last_used, meta.seq, 0]
     }
 }
 
@@ -85,10 +117,8 @@ impl CachePolicy for LfuPolicy {
         "lfu"
     }
 
-    fn victim(&self, candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>) -> Option<u64> {
-        candidates
-            .min_by_key(|&(_, m)| (m.hits, m.last_used, m.seq))
-            .map(|(k, _)| k)
+    fn rank(&self, meta: &EntryMeta) -> EvictionRank {
+        [meta.hits, meta.last_used, meta.seq]
     }
 }
 
@@ -118,10 +148,8 @@ impl CachePolicy for TtlPolicy {
         true
     }
 
-    fn victim(&self, candidates: &mut dyn Iterator<Item = (u64, EntryMeta)>) -> Option<u64> {
-        candidates
-            .min_by(|a, b| a.1.inserted.total_cmp(&b.1.inserted).then(a.1.seq.cmp(&b.1.seq)))
-            .map(|(k, _)| k)
+    fn rank(&self, meta: &EntryMeta) -> EvictionRank {
+        [ordered_bits(meta.inserted), meta.seq, 0]
     }
 }
 
@@ -170,6 +198,17 @@ impl CachePolicyKind {
             CachePolicyKind::Ttl(ttl) => format!("ttl({ttl})"),
         }
     }
+
+    /// Canonical [`parse`](Self::parse)-compatible string form
+    /// (`lru | lfu | ttl:<secs>`), used by scenario-spec serialization so
+    /// policies round-trip through JSON.
+    pub fn spec_label(&self) -> String {
+        match self {
+            CachePolicyKind::Lru => "lru".into(),
+            CachePolicyKind::Lfu => "lfu".into(),
+            CachePolicyKind::Ttl(ttl) => format!("ttl:{ttl}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -187,10 +226,10 @@ mod tests {
             (2u64, meta(0.0, 2, 9, 1)),
             (3u64, meta(0.0, 2, 1, 2)),
         ];
-        let v = LruPolicy.victim(&mut entries.clone().into_iter());
+        let v = select_victim(&LruPolicy, &mut entries.clone().into_iter());
         assert_eq!(v, Some(2), "earliest last_used wins; seq breaks the op-2 tie");
         let empty: Vec<(u64, EntryMeta)> = Vec::new();
-        assert_eq!(LruPolicy.victim(&mut empty.into_iter()), None);
+        assert_eq!(select_victim(&LruPolicy, &mut empty.into_iter()), None);
     }
 
     #[test]
@@ -202,7 +241,7 @@ mod tests {
         ];
         // hits tie between 1 and 3: the least-recent of the tied set (op
         // stamp 8 vs 9) is evicted, so 3 goes.
-        let v = LfuPolicy.victim(&mut entries.into_iter());
+        let v = select_victim(&LfuPolicy, &mut entries.into_iter());
         assert_eq!(v, Some(3));
     }
 
@@ -212,7 +251,32 @@ mod tests {
         assert!(!p.expired(&meta(0.0, 0, 0, 0), 10.0));
         assert!(p.expired(&meta(0.0, 0, 0, 0), 10.1));
         let entries = vec![(1u64, meta(4.0, 9, 0, 0)), (2u64, meta(1.0, 9, 5, 1))];
-        assert_eq!(p.victim(&mut entries.into_iter()), Some(2));
+        assert_eq!(select_victim(&p, &mut entries.into_iter()), Some(2));
+    }
+
+    #[test]
+    fn ranks_are_unique_and_policy_ordered() {
+        // Ranks embed seq, so two distinct entries never tie — the
+        // eviction index needs strict total order.
+        let a = meta(1.0, 4, 2, 0);
+        let b = meta(1.0, 4, 2, 1);
+        for p in [&LruPolicy as &dyn CachePolicy, &LfuPolicy, &TtlPolicy { ttl: 5.0 }] {
+            assert_ne!(p.rank(&a), p.rank(&b), "{} rank must embed seq", p.name());
+        }
+    }
+
+    #[test]
+    fn ordered_bits_matches_total_cmp() {
+        let xs = [-10.0f64, -1.5, -0.0, 0.0, 1e-9, 1.0, 1e9];
+        for &x in &xs {
+            for &y in &xs {
+                assert_eq!(
+                    ordered_bits(x).cmp(&ordered_bits(y)),
+                    x.total_cmp(&y),
+                    "{x} vs {y}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -229,6 +293,8 @@ mod tests {
         for kind in [CachePolicyKind::Lru, CachePolicyKind::Lfu, CachePolicyKind::Ttl(9.0)] {
             let built = kind.build();
             assert!(kind.label().starts_with(built.name()));
+            // spec_label is the parse-compatible canonical form.
+            assert_eq!(CachePolicyKind::parse(&kind.spec_label()), Some(kind));
         }
     }
 }

@@ -779,13 +779,12 @@ pub fn ablations(ctx: &ExpContext) -> String {
 /// shows cap-forced edge execution once spend runs dry. Contention is the
 /// new axis the per-query tables cannot express: the same router, executor,
 /// and workload, but fleet-level `C_used(t)` and shared worker pools.
+///
+/// Declarative: each swept rate is `scenario::presets::fleet_serve` with
+/// that rate — the same spec shape `scenarios/*.json` files use.
 pub fn fleet_serve(ctx: &ExpContext) -> String {
-    use crate::budget::TenantPool;
-    use crate::scheduler::fleet::FleetConfig;
-    use crate::server::serve_fleet;
-    use crate::workload::trace::ArrivalProcess;
+    use crate::scenario::presets;
 
-    let sp = SimParams::default();
     let bench = Benchmark::Gpqa;
     let n = ((120.0 * ctx.scale).round() as usize).max(20);
     let seed = *ctx.seeds.first().unwrap_or(&11);
@@ -798,35 +797,8 @@ pub fn fleet_serve(ctx: &ExpContext) -> String {
         ],
     );
     for &rate in &[0.1f64, 0.25, 0.5, 1.0, 2.0] {
-        let mut pcfg = PipelineConfig::paper_default(&sp);
-        pcfg.policy = RoutePolicy::hybridflow(&sp);
-        pcfg.schedule.edge_workers = 8;
-        pcfg.schedule.cloud_workers = 16;
-        let pipeline = HybridFlowPipeline::with_predictor(
-            SimExecutor::paper_pair(),
-            SyntheticPlanner::paper_main(),
-            ctx.predictor(),
-            pcfg,
-        );
-        let tenants = vec![
-            TenantPool::unlimited("anchor"),
-            TenantPool::new("metered", 0.05),
-            TenantPool::new("capped", 0.005),
-        ];
-        let cfg = FleetConfig {
-            admission_limit: 64,
-            record_trace: false,
-            ..Default::default()
-        };
-        let report = serve_fleet(
-            &pipeline,
-            &cfg,
-            tenants,
-            bench,
-            n,
-            &ArrivalProcess::Poisson { rate },
-            seed,
-        );
+        let spec = presets::fleet_serve(bench, n, rate, seed);
+        let report = spec.build(ctx.predictor()).run();
         t.row(vec![
             format!("{rate:.2}"),
             format!("{:.2}", report.admission_delay.p99),
@@ -848,109 +820,31 @@ pub fn fleet_serve(ctx: &ExpContext) -> String {
     out
 }
 
-/// Knobs of the canonical mixed-policy scenario (see
-/// [`mixed_policy_scenario`]).
-#[derive(Debug, Clone)]
-pub struct MixedPolicyScenario {
-    pub edge_workers: usize,
-    pub cloud_workers: usize,
-    pub hedge: bool,
-    pub hedge_threshold: f64,
-    pub record_trace: bool,
-}
-
-impl Default for MixedPolicyScenario {
-    fn default() -> Self {
-        MixedPolicyScenario {
-            edge_workers: 4,
-            cloud_workers: 16,
-            hedge: false,
-            hedge_threshold: 0.55,
-            record_trace: false,
-        }
-    }
-}
-
-/// Canonical 3-tenant mixed-policy fleet, shared by the
-/// `fleet_mixed_policy` experiment and `examples/fleet_mixed_policy.rs`
-/// so the documented runnable scenario and the experiment table cannot
-/// drift apart. Heterogeneous tenants: the learned router (pipeline
-/// default), a conservative fixed threshold (strands pivotal work on the
-/// edge — hedging's best case), and a hard edge pin with a small dollar
-/// pool that only hedged speculation can spend from.
-pub fn mixed_policy_scenario(
-    predictor: Arc<dyn crate::router::UtilityPredictor>,
-    knobs: &MixedPolicyScenario,
-) -> (
-    HybridFlowPipeline,
-    Vec<crate::budget::TenantPool>,
-    crate::scheduler::fleet::FleetConfig,
-) {
-    use crate::budget::TenantPool;
-    use crate::scheduler::fleet::FleetConfig;
-
-    let sp = SimParams::default();
-    let mut pcfg = PipelineConfig::paper_default(&sp);
-    pcfg.policy = RoutePolicy::hybridflow(&sp);
-    pcfg.schedule.edge_workers = knobs.edge_workers;
-    pcfg.schedule.cloud_workers = knobs.cloud_workers;
-    pcfg.schedule.hedge = knobs.hedge;
-    pcfg.schedule.hedge_threshold = knobs.hedge_threshold;
-    let pipeline = HybridFlowPipeline::with_predictor(
-        SimExecutor::paper_pair(),
-        SyntheticPlanner::paper_main(),
-        predictor,
-        pcfg,
-    );
-    let tenants = vec![
-        TenantPool::unlimited("learned"),
-        TenantPool::unlimited("fixed-0.65"),
-        TenantPool::new("edge-pinned", 0.02),
-    ];
-    let cfg = FleetConfig {
-        admission_limit: 64,
-        record_trace: knobs.record_trace,
-        tenant_policies: vec![
-            None, // pipeline default (learned)
-            Some(RoutePolicy::FixedThreshold(0.65)),
-            Some(RoutePolicy::AllEdge),
-        ],
-        ..Default::default()
-    };
-    (pipeline, tenants, cfg)
-}
-
 /// Mixed-policy fleet + hedged speculative dispatch.
 ///
 /// Exercises the two engine seams together: three tenants run *different*
-/// routers in one fleet (per-tenant policy overrides in `FleetConfig`),
-/// and the same workload is served twice — hedging off, then on. With
-/// hedging, edge-routed pivotal subtasks dispatch speculative cloud
-/// replicas; first finish wins, losers are cancelled with budget refunds.
-/// The comparison to read: hedging should cut the sojourn tail (p95/p99)
-/// at essentially unchanged accuracy, paying only the consumed share of
-/// cancelled speculative calls.
+/// routers in one fleet (per-tenant policy overrides in the scenario
+/// topology), and the same workload is served twice — hedging off, then
+/// on. With hedging, edge-routed pivotal subtasks dispatch speculative
+/// cloud replicas; first finish wins, losers are cancelled with budget
+/// refunds. The comparison to read: hedging should cut the sojourn tail
+/// (p95/p99) at essentially unchanged accuracy, paying only the consumed
+/// share of cancelled speculative calls.
+///
+/// The scenario itself is `scenario::presets::mixed_policy` — the same
+/// spec `examples/fleet_mixed_policy.rs` runs and
+/// `scenarios/fleet_mixed_policy.json` ships.
 pub fn fleet_mixed_policy(ctx: &ExpContext) -> String {
-    use crate::scheduler::fleet::FleetReport;
-    use crate::server::serve_fleet;
-    use crate::workload::trace::ArrivalProcess;
+    use crate::scenario::presets::{self, MixedPolicyKnobs};
+    use crate::scenario::Report as FleetReport;
 
     let bench = Benchmark::Gpqa;
     let n = ((90.0 * ctx.scale).round() as usize).max(18);
     let seed = *ctx.seeds.first().unwrap_or(&11);
 
     let run = |hedge: bool| -> FleetReport {
-        let knobs = MixedPolicyScenario { hedge, ..Default::default() };
-        let (pipeline, tenants, cfg) = mixed_policy_scenario(ctx.predictor(), &knobs);
-        serve_fleet(
-            &pipeline,
-            &cfg,
-            tenants,
-            bench,
-            n,
-            &ArrivalProcess::Poisson { rate: 0.6 },
-            seed,
-        )
+        let knobs = MixedPolicyKnobs { hedge, ..Default::default() };
+        presets::mixed_policy(bench, n, 0.6, seed, &knobs).build(ctx.predictor()).run()
     };
 
     let off = run(false);
@@ -1019,80 +913,6 @@ pub fn fleet_mixed_policy(ctx: &ExpContext) -> String {
     out
 }
 
-/// Knobs of the canonical cached-Zipf fleet scenario (see
-/// [`fleet_cache_scenario`]).
-#[derive(Debug, Clone)]
-pub struct FleetCacheScenario {
-    /// Result-cache capacity per partition; 0 disables the cache.
-    pub capacity: usize,
-    pub policy: crate::cache::CachePolicyKind,
-    /// Fleet-wide shared tier on top of per-tenant partitions.
-    pub shared_tier: bool,
-    pub edge_workers: usize,
-    pub cloud_workers: usize,
-    /// Zipf popularity skew and prototype-pool size of the workload.
-    pub zipf_exponent: f64,
-    pub zipf_distinct: usize,
-    pub record_trace: bool,
-}
-
-impl Default for FleetCacheScenario {
-    fn default() -> Self {
-        FleetCacheScenario {
-            capacity: 256,
-            policy: crate::cache::CachePolicyKind::Lru,
-            shared_tier: true,
-            edge_workers: 4,
-            cloud_workers: 16,
-            zipf_exponent: 1.1,
-            zipf_distinct: 8,
-            record_trace: false,
-        }
-    }
-}
-
-/// Canonical cached-Zipf fleet, shared by the `fleet_cache` experiment
-/// and `examples/fleet_cache.rs` so the documented runnable scenario and
-/// the experiment table cannot drift apart: two unlimited tenants under
-/// the learned router, a Zipf-repeated workload, and a result cache with
-/// per-tenant partitions plus the shared global tier.
-pub fn fleet_cache_scenario(
-    predictor: Arc<dyn crate::router::UtilityPredictor>,
-    knobs: &FleetCacheScenario,
-) -> (
-    HybridFlowPipeline,
-    Vec<crate::budget::TenantPool>,
-    crate::scheduler::fleet::FleetConfig,
-) {
-    use crate::budget::TenantPool;
-    use crate::cache::SubtaskCache;
-    use crate::scheduler::fleet::FleetConfig;
-
-    let sp = SimParams::default();
-    let mut pcfg = PipelineConfig::paper_default(&sp);
-    pcfg.policy = RoutePolicy::hybridflow(&sp);
-    pcfg.schedule.edge_workers = knobs.edge_workers;
-    pcfg.schedule.cloud_workers = knobs.cloud_workers;
-    if knobs.capacity > 0 {
-        let cache = SubtaskCache::new(knobs.capacity, knobs.policy);
-        let cache = if knobs.shared_tier { cache.with_shared_tier() } else { cache };
-        pcfg.schedule.cache = Some(Arc::new(cache));
-    }
-    let pipeline = HybridFlowPipeline::with_predictor(
-        SimExecutor::paper_pair(),
-        SyntheticPlanner::paper_main(),
-        predictor,
-        pcfg,
-    );
-    let tenants = vec![TenantPool::unlimited("a"), TenantPool::unlimited("b")];
-    let cfg = FleetConfig {
-        admission_limit: 64,
-        record_trace: knobs.record_trace,
-        ..Default::default()
-    };
-    (pipeline, tenants, cfg)
-}
-
 /// Cloud tokens actually transmitted over a fleet run (the App. D.1
 /// payload proxy, same rule as `metrics::exposure`): input tokens of
 /// every event that dispatched a cloud call — cloud winners *and* hedged
@@ -1114,11 +934,14 @@ pub fn fleet_cloud_tokens(report: &crate::scheduler::fleet::FleetReport) -> f64 
 /// serves the identical workload, so token/latency deltas are pure cache
 /// effect. A second mini-table compares eviction policies at one
 /// capacity.
+///
+/// The scenario itself is `scenario::presets::fleet_cache` — the same
+/// spec `examples/fleet_cache.rs` runs and `scenarios/fleet_cache.json`
+/// ships.
 pub fn fleet_cache(ctx: &ExpContext) -> String {
     use crate::cache::CachePolicyKind;
-    use crate::scheduler::fleet::FleetReport;
-    use crate::server::serve_fleet_zipf;
-    use crate::workload::trace::{ArrivalProcess, ZipfMix};
+    use crate::scenario::presets::{self, FleetCacheKnobs};
+    use crate::scenario::Report as FleetReport;
 
     let bench = Benchmark::Gpqa;
     let n = ((120.0 * ctx.scale).round() as usize).max(24);
@@ -1126,24 +949,8 @@ pub fn fleet_cache(ctx: &ExpContext) -> String {
     let zipf_distinct = (n / 10).max(4);
 
     let run = |capacity: usize, policy: CachePolicyKind| -> FleetReport {
-        let knobs = FleetCacheScenario {
-            capacity,
-            policy,
-            zipf_distinct,
-            ..Default::default()
-        };
-        let (pipeline, tenants, cfg) = fleet_cache_scenario(ctx.predictor(), &knobs);
-        let zipf = ZipfMix::new(knobs.zipf_exponent, knobs.zipf_distinct);
-        serve_fleet_zipf(
-            &pipeline,
-            &cfg,
-            tenants,
-            bench,
-            n,
-            &ArrivalProcess::Poisson { rate: 0.5 },
-            &zipf,
-            seed,
-        )
+        let knobs = FleetCacheKnobs { capacity, policy, zipf_distinct, ..Default::default() };
+        presets::fleet_cache(bench, n, 0.5, seed, &knobs).build(ctx.predictor()).run()
     };
 
     let acc = |r: &FleetReport| {
@@ -1301,24 +1108,15 @@ mod tests {
         // read from the experiment table — at test scale (tens of queries)
         // the tail quantile is too noisy to pin as a strict inequality
         // without making the suite flaky.
-        use crate::server::serve_fleet;
-        use crate::workload::trace::ArrivalProcess;
+        use crate::scenario::presets::{self, MixedPolicyKnobs};
 
         let run = |hedge: bool| {
-            let knobs = MixedPolicyScenario { hedge, ..Default::default() };
-            let (pipeline, tenants, cfg) = mixed_policy_scenario(
-                std::sync::Arc::new(crate::router::MirrorPredictor::synthetic_for_tests()),
-                &knobs,
-            );
-            serve_fleet(
-                &pipeline,
-                &cfg,
-                tenants,
-                Benchmark::Gpqa,
-                24,
-                &ArrivalProcess::Poisson { rate: 0.6 },
-                11,
-            )
+            let knobs = MixedPolicyKnobs { hedge, ..Default::default() };
+            presets::mixed_policy(Benchmark::Gpqa, 24, 0.6, 11, &knobs)
+                .build(std::sync::Arc::new(
+                    crate::router::MirrorPredictor::synthetic_for_tests(),
+                ))
+                .run()
         };
         let off = run(false);
         let on = run(true);
@@ -1347,28 +1145,23 @@ mod tests {
         // Acceptance pin: on a Zipf trace the cached fleet reports hit
         // rate > 0.2 and transmits strictly fewer cloud tokens than the
         // cache-off run of the identical workload.
-        use crate::server::serve_fleet_zipf;
-        use crate::workload::trace::{ArrivalProcess, ZipfMix};
+        use crate::scenario::presets::{self, FleetCacheKnobs};
 
         let run = |capacity: usize| {
-            let knobs = FleetCacheScenario { capacity, zipf_distinct: 4, ..Default::default() };
-            let (pipeline, tenants, cfg) = fleet_cache_scenario(
-                std::sync::Arc::new(crate::router::MirrorPredictor::synthetic_for_tests()),
-                &knobs,
-            );
-            serve_fleet_zipf(
-                &pipeline,
-                &cfg,
-                tenants,
-                Benchmark::Gpqa,
-                40,
-                // Low rate: most repeats arrive after their prototype's
-                // first execution finished (entries are availability-
-                // gated on the virtual clock).
-                &ArrivalProcess::Poisson { rate: 0.1 },
-                &ZipfMix::new(1.2, 4),
-                11,
-            )
+            let knobs = FleetCacheKnobs {
+                capacity,
+                zipf_exponent: 1.2,
+                zipf_distinct: 4,
+                ..Default::default()
+            };
+            // Low rate: most repeats arrive after their prototype's first
+            // execution finished (entries are availability-gated on the
+            // virtual clock).
+            presets::fleet_cache(Benchmark::Gpqa, 40, 0.1, 11, &knobs)
+                .build(std::sync::Arc::new(
+                    crate::router::MirrorPredictor::synthetic_for_tests(),
+                ))
+                .run()
         };
         let off = run(0);
         let on = run(256);

@@ -22,13 +22,17 @@
 //! decisions **on the request path** — python is never invoked after
 //! `make artifacts`.
 //!
-//! Beyond the paper's per-query semantics, `scheduler::fleet` simulates a
-//! whole serving fleet on the same virtual clock: N concurrent queries
-//! contending for a shared edge-worker pool and a bounded cloud-API pool,
-//! with hierarchical tenant-to-global dollar budgets, admission queueing,
-//! and open-loop arrivals (`workload::trace::ArrivalProcess`). The
-//! single-query scheduler is the fleet's N=1 special case; see the
-//! "Fleet simulation" section of README.md.
+//! Beyond the paper's per-query semantics, the unified simulation kernel
+//! (`sim::Kernel`) runs whole serving fleets on the same virtual clock:
+//! N concurrent queries contending for a shared edge-worker pool and a
+//! bounded cloud-API pool, with hierarchical tenant-to-global dollar
+//! budgets, admission queueing, and open-loop arrivals
+//! (`workload::trace::ArrivalProcess`). The single-query scheduler is the
+//! kernel's N=1 special case. Experiments are described declaratively:
+//! `scenario::ScenarioSpec` is a JSON-serializable description of
+//! topology, workload, and engine options that `build()`s into a runnable
+//! `Session` (see the "Scenario API" section of README.md and the shipped
+//! `scenarios/*.json` files).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -49,12 +53,15 @@ pub mod engine;
 pub mod models;
 pub mod router;
 pub mod scheduler;
+pub mod sim;
 pub mod workload;
 
 pub mod baselines;
 pub mod eval;
 pub mod metrics;
 pub mod pipeline;
+pub mod report;
+pub mod scenario;
 pub mod server;
 
 /// Commonly used items for examples and binaries.
@@ -67,6 +74,7 @@ pub mod prelude {
     pub use crate::models::{ModelKind, ModelProfile};
     pub use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
     pub use crate::router::policy::RoutePolicy;
+    pub use crate::scenario::{ScenarioSpec, Session};
     pub use crate::util::json::Json;
     pub use crate::util::rng::Rng;
     pub use crate::workload::{Benchmark, Query};

@@ -2,11 +2,15 @@
 //!
 //! Commands:
 //!   plan     decompose one synthetic query and print the XML plan + DAG
-//!   run      run queries through the full pipeline, print outcomes
+//!   run      run queries through the full pipeline, print outcomes;
+//!            `--scenario <file.json>` executes a declarative scenario
 //!   serve    concurrent serving loop, report throughput/latency
 //!   profile  regenerate the App. C profiling dataset (JSONL)
 //!   exp      run a paper experiment (table1..table8, fig3, fig5, calibrate)
 //!   check    verify artifacts + PJRT round trip + mirror parity
+//!
+//! Unknown options and malformed values print the usage block and exit
+//! non-zero (`validate_command_args`).
 
 use hybridflow::cache::{CachePolicyKind, SubtaskCache};
 use hybridflow::config::simparams::SimParams;
@@ -18,6 +22,7 @@ use hybridflow::planner::synthetic::SyntheticPlanner;
 use hybridflow::planner::Planner;
 use hybridflow::router::{MirrorPredictor, RoutePolicy, UtilityPredictor};
 use hybridflow::runtime::RouterService;
+use hybridflow::scenario::ScenarioSpec;
 use hybridflow::server::serve;
 use hybridflow::util::cli::{usage, Args};
 use hybridflow::util::rng::Rng;
@@ -27,32 +32,119 @@ use std::sync::Arc;
 
 const COMMANDS: [(&str, &str); 6] = [
     ("plan", "decompose a synthetic query and print plan + repaired DAG"),
-    ("run", "run N queries end-to-end and print outcomes"),
+    ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario)"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
     ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy|fleet_cache>"),
     ("check", "verify artifacts, PJRT round trip, and mirror parity"),
 ];
 
+/// Options/flags shared by every pipeline-building command.
+const PIPELINE_OPTS: &[&str] = &[
+    "artifacts", "benchmark", "seed", "pjrt", "fixed-tau", "chain", "hedge",
+    "hedge-threshold", "calibrated", "cache", "cache-policy",
+];
+
+/// Per-command extra options (appended to [`PIPELINE_OPTS`] where the
+/// command builds a pipeline).
+fn allowed_options(cmd: &str) -> Vec<&'static str> {
+    let mut allowed: Vec<&'static str> = match cmd {
+        "plan" => return vec!["artifacts", "benchmark", "seed"],
+        "profile" => return vec!["n", "seed", "out"],
+        "check" => return vec!["artifacts"],
+        "exp" => return vec!["artifacts", "id", "quick", "scale", "seeds", "out"],
+        "run" => vec!["n", "scenario"],
+        "serve" => vec!["n", "workers", "trace-in", "trace-out", "metrics"],
+        _ => vec![],
+    };
+    allowed.extend_from_slice(PIPELINE_OPTS);
+    allowed
+}
+
+/// Reject unknown options/flags and malformed values *before* a command
+/// runs, so typos fail fast with the usage block instead of being
+/// silently ignored (or panicking deep inside a run).
+/// Options that would silently lose to a `--scenario` spec (the spec
+/// defines the whole run: workload, seed, and every engine knob).
+const SCENARIO_CONFLICTS: &[&str] = &[
+    "benchmark", "n", "seed", "fixed-tau", "chain", "hedge", "hedge-threshold",
+    "calibrated", "cache", "cache-policy",
+];
+
+fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    args.validate_known(&allowed_options(cmd))?;
+    if cmd == "run" && args.get("scenario").is_some() {
+        let conflicting: Vec<&str> = SCENARIO_CONFLICTS
+            .iter()
+            .copied()
+            .filter(|k| args.get(k).is_some() || args.flag(k))
+            .collect();
+        anyhow::ensure!(
+            conflicting.is_empty(),
+            "--scenario defines the whole run (workload, seed, engine knobs); \
+             drop the conflicting option(s) or edit the spec file: --{}",
+            conflicting.join(", --")
+        );
+    }
+    // Typed-value sanity (parse errors surface here, not mid-run).
+    for key in ["n", "workers", "cache", "seeds"] {
+        let _ = args.get_usize(key)?;
+    }
+    let _ = args.get_u64_or("seed", 0)?;
+    for key in ["fixed-tau", "scale"] {
+        let _ = args.get_f64(key)?;
+    }
+    if let Some(thr) = args.get_f64("hedge-threshold")? {
+        anyhow::ensure!(
+            thr.is_finite() && thr >= 0.0,
+            "--hedge-threshold expects a finite non-negative utility cutoff, got {thr}"
+        );
+    }
+    if let Some(s) = args.get("cache-policy") {
+        anyhow::ensure!(
+            CachePolicyKind::parse(s).is_some(),
+            "unknown cache policy '{s}' (lru|lfu|ttl[:secs])"
+        );
+    }
+    Ok(())
+}
+
 fn main() {
     let args = Args::from_env();
     let code = match args.subcommand.as_deref() {
-        Some("plan") => cmd_plan(&args),
-        Some("run") => cmd_run(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("profile") => cmd_profile(&args),
-        Some("exp") => cmd_exp(&args),
-        Some("check") => cmd_check(&args),
-        _ => {
-            eprint!("{}", usage("hybridflow", &COMMANDS));
-            Err(anyhow::anyhow!("missing or unknown command"))
+        Some(cmd @ ("plan" | "run" | "serve" | "profile" | "exp" | "check")) => {
+            // Argument problems (unknown options, malformed values) print
+            // the usage block; runtime failures inside a command print
+            // just the error, so the cause is not buried under help text.
+            match validate_command_args(cmd, &args) {
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    eprint!("{}", usage("hybridflow", &COMMANDS));
+                    1
+                }
+                Ok(()) => {
+                    let out = match cmd {
+                        "plan" => cmd_plan(&args),
+                        "run" => cmd_run(&args),
+                        "serve" => cmd_serve(&args),
+                        "profile" => cmd_profile(&args),
+                        "exp" => cmd_exp(&args),
+                        "check" => cmd_check(&args),
+                        _ => unreachable!("dispatch covers every command"),
+                    };
+                    out.map(|_| 0).unwrap_or_else(|e| {
+                        eprintln!("error: {e}");
+                        1
+                    })
+                }
+            }
         }
-    }
-    .map(|_| 0)
-    .unwrap_or_else(|e| {
-        eprintln!("error: {e}");
-        1
-    });
+        _ => {
+            eprintln!("error: missing or unknown command");
+            eprint!("{}", usage("hybridflow", &COMMANDS));
+            1
+        }
+    };
     std::process::exit(code);
 }
 
@@ -137,7 +229,57 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Predictor for scenario runs: like [`predictor`], but a missing trained
+/// artifact falls back to the synthetic mirror (with a loud note) instead
+/// of failing — scenario files must be runnable on a fresh checkout, the
+/// same contract the example binaries and `eval` experiments honor.
+/// `--pjrt` stays a hard requirement (an explicit runtime request).
+fn scenario_predictor(args: &Args) -> anyhow::Result<Arc<dyn UtilityPredictor>> {
+    if args.flag("pjrt") {
+        return predictor(args);
+    }
+    let dir = artifacts_dir(args);
+    match MirrorPredictor::from_meta_file(&dir.join("router_meta.json")) {
+        Ok(p) => Ok(Arc::new(p)),
+        Err(e) => {
+            eprintln!("[scenario] WARNING: trained router unavailable ({e}); using synthetic predictor");
+            Ok(Arc::new(MirrorPredictor::synthetic_for_tests()))
+        }
+    }
+}
+
+/// `run --scenario <file.json>`: execute a declarative fleet scenario.
+fn cmd_run_scenario(args: &Args, path: &str) -> anyhow::Result<()> {
+    let spec = ScenarioSpec::from_file(std::path::Path::new(path))?;
+    println!(
+        "scenario '{}' from {path}: {} x {} queries, {} tenants, seed {}",
+        spec.name,
+        spec.workload.n,
+        spec.workload.benchmark.display(),
+        spec.topology.tenants.len(),
+        spec.seed,
+    );
+    let session = spec.build(scenario_predictor(args)?);
+    let report = session.run();
+    println!("{}", report.render());
+    for t in &report.tenants {
+        println!(
+            "  tenant {:<12} decided {:>4}  offload {:>5.1}%  spend ${:.4} (cap {})",
+            t.name,
+            t.state.n_decided,
+            t.state.offload_rate() * 100.0,
+            t.state.k_used,
+            if t.k_cap.is_finite() { format!("${:.4}", t.k_cap) } else { "unlimited".into() },
+        );
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.get("scenario") {
+        let path = path.to_string();
+        return cmd_run_scenario(args, &path);
+    }
     let bench = bench_arg(args)?;
     let n = args.get_usize_or("n", 10)?;
     let seed = args.get_u64_or("seed", 0)?;
@@ -313,4 +455,72 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
     }
     println!("all checks passed");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().skip(1).map(String::from))
+    }
+
+    #[test]
+    fn known_options_pass_validation() {
+        let a = parse("hybridflow run --n 10 --seed 3 --cache 64 --cache-policy ttl:30 --hedge --hedge-threshold 0.6");
+        assert!(validate_command_args("run", &a).is_ok());
+        let a = parse("hybridflow serve --n 100 --workers 8 --metrics");
+        assert!(validate_command_args("serve", &a).is_ok());
+        let a = parse("hybridflow run --scenario scenarios/fleet_sim.json");
+        assert!(validate_command_args("run", &a).is_ok());
+        // Predictor-selection options compose with a scenario file.
+        let a = parse("hybridflow run --scenario s.json --artifacts ./artifacts --pjrt");
+        assert!(validate_command_args("run", &a).is_ok());
+    }
+
+    #[test]
+    fn scenario_rejects_conflicting_engine_flags() {
+        // A spec defines seed/workload/engine; co-passing those options
+        // must error instead of being silently ignored.
+        for flags in ["--seed 42", "--hedge", "--cache 64", "--n 10", "--benchmark gpqa"] {
+            let a = parse(&format!("hybridflow run --scenario s.json {flags}"));
+            let err = validate_command_args("run", &a).unwrap_err().to_string();
+            assert!(err.contains("--scenario defines the whole run"), "{flags}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_options_are_rejected() {
+        let a = parse("hybridflow run --bogus 1");
+        let err = validate_command_args("run", &a).unwrap_err().to_string();
+        assert!(err.contains("unknown option --bogus"), "{err}");
+        // Flags count too.
+        let a = parse("hybridflow serve --turbo");
+        assert!(validate_command_args("serve", &a).is_err());
+        // Options valid for one command are not silently accepted by another.
+        let a = parse("hybridflow plan --workers 8");
+        assert!(validate_command_args("plan", &a).is_err());
+    }
+
+    #[test]
+    fn malformed_values_are_rejected() {
+        let a = parse("hybridflow run --cache-policy ttl:abc");
+        let err = validate_command_args("run", &a).unwrap_err().to_string();
+        assert!(err.contains("cache policy"), "{err}");
+        let a = parse("hybridflow run --hedge --hedge-threshold=-0.5");
+        assert!(validate_command_args("run", &a).is_err(), "negative threshold");
+        let a = parse("hybridflow run --hedge-threshold nan");
+        assert!(validate_command_args("run", &a).is_err(), "non-finite threshold");
+        let a = parse("hybridflow run --n twelve");
+        assert!(validate_command_args("run", &a).is_err(), "non-integer n");
+        let a = parse("hybridflow serve --workers -3");
+        assert!(validate_command_args("serve", &a).is_err(), "negative workers");
+    }
+
+    #[test]
+    fn every_command_has_an_allowlist() {
+        for (cmd, _) in COMMANDS {
+            assert!(!allowed_options(cmd).is_empty(), "{cmd} has no allowlist");
+        }
+    }
 }

@@ -1,0 +1,100 @@
+//! Shared rendering for engine run reports.
+//!
+//! Both report types the unified kernel feeds — the virtual-clock
+//! [`FleetReport`](crate::sim::FleetReport) and the wall-clock
+//! [`ServeReport`](crate::server::ServeReport) — used to carry their own
+//! copies of the hedge and cache summary lines. [`ReportRenderer`] is the
+//! one place those sections are formatted, so the two reports (and any
+//! future ones) cannot drift apart: a report renders its headline and
+//! mode-specific lines, then appends the shared hedge/cache sections.
+
+use crate::cache::CacheStats;
+use crate::util::stats::Summary;
+
+/// Line-oriented report builder with the shared sections every engine
+/// report appends in the same order: mode-specific lines first, then the
+/// hedge summary (only when speculation cancelled anything), then the
+/// result-cache counters (only when a cache was attached).
+pub struct ReportRenderer {
+    out: String,
+}
+
+impl ReportRenderer {
+    pub fn new(headline: String) -> ReportRenderer {
+        ReportRenderer { out: headline }
+    }
+
+    /// Append one report line.
+    pub fn line(&mut self, s: String) -> &mut Self {
+        self.out.push('\n');
+        self.out.push_str(&s);
+        self
+    }
+
+    /// Shared hedge section: losers cancelled + dollars refunded. Silent
+    /// when no speculative replica was cancelled, so hedge-off reports are
+    /// byte-identical to pre-hedging ones.
+    pub fn hedge(&mut self, cancelled: usize, refund: f64) -> &mut Self {
+        if cancelled > 0 {
+            self.line(format!(
+                "hedge: {cancelled} losers cancelled, ${refund:.4} refunded"
+            ));
+        }
+        self
+    }
+
+    /// Shared result-cache section ([`CacheStats::render_line`]). Silent
+    /// when no cache was attached to the run.
+    pub fn cache(&mut self, stats: Option<&CacheStats>) -> &mut Self {
+        if let Some(c) = stats {
+            self.line(c.render_line());
+        }
+        self
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Canonical `p50 / p95 / p99 / max` rendering of a latency summary in
+/// seconds (sojourn-style lines).
+pub fn quantiles_s(label: &str, s: &Summary) -> String {
+    format!(
+        "{label}: p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  max {:.2}s",
+        s.p50, s.p95, s.p99, s.max
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renderer_appends_sections_in_order() {
+        let mut r = ReportRenderer::new("head".into());
+        r.line("body".into());
+        r.hedge(0, 0.0); // silent
+        r.hedge(3, 0.125);
+        r.cache(None); // silent
+        let got = r.finish();
+        assert_eq!(got, "head\nbody\nhedge: 3 losers cancelled, $0.1250 refunded");
+    }
+
+    #[test]
+    fn cache_section_uses_shared_line() {
+        let stats = CacheStats { lookups: 4, hits: 2, ..Default::default() };
+        let mut r = ReportRenderer::new("x".into());
+        r.cache(Some(&stats));
+        let got = r.finish();
+        assert!(got.contains("cache: hit rate 50.0%"), "{got}");
+    }
+
+    #[test]
+    fn quantile_line_formats_seconds() {
+        let s = Summary::of_or_zero(&[1.0, 2.0, 3.0, 4.0]);
+        let line = quantiles_s("sojourn", &s);
+        assert!(line.starts_with("sojourn: p50 "));
+        assert!(line.contains("max 4.00s"));
+    }
+}

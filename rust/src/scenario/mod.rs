@@ -1,0 +1,781 @@
+//! Declarative Scenario API: JSON experiment descriptions resolved into
+//! runnable sessions over the unified simulation kernel.
+//!
+//! The engine used to expose five divergent hand-wired entrypoints
+//! (`execute_query`, `run_fleet`, `serve`, `serve_fleet`,
+//! `serve_fleet_zipf`); defining a new serving scenario meant writing
+//! Rust. [`ScenarioSpec`] replaces that with data: a serde-free,
+//! JSON-serializable (via [`crate::util::json`]) description of
+//!
+//! * **topology** — worker pools, admission limit, tenants with dollar
+//!   caps and optional per-tenant routing-policy overrides, global dollar
+//!   ceiling ([`TopologySpec`]);
+//! * **workload** — benchmark, query count, arrival process, optional
+//!   Zipf popularity mix ([`WorkloadSpec`]);
+//! * **engine** — default routing policy, chain mode, frontier batching,
+//!   hedged dispatch, result cache ([`EngineSpec`]).
+//!
+//! [`ScenarioSpec::build`] resolves the spec against a utility predictor
+//! into a [`Session`]; [`Session::run`] executes it on the kernel and
+//! returns a [`Report`]. Everything is deterministic in the spec (the
+//! seed is part of it), and `Session::run` clones the tenant pools per
+//! run, so re-running a session reproduces the event trace byte-for-byte.
+//!
+//! Canonical specs for the repo's standing experiments live in
+//! [`presets`] and are shipped as `scenarios/*.json`; the CLI runs any
+//! spec file via `hybridflow run --scenario <file.json>`.
+//!
+//! Serialization contract: [`ScenarioSpec::render`] emits canonical JSON
+//! (sorted keys, pretty-printed) and `parse(render(parse(text)))` is a
+//! fixpoint — pinned for every shipped spec by `rust/tests/scenario.rs`.
+
+pub mod presets;
+
+use crate::budget::TenantPool;
+use crate::cache::{CachePolicyKind, SubtaskCache};
+use crate::config::simparams::SimParams;
+use crate::models::SimExecutor;
+use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
+use crate::planner::synthetic::SyntheticPlanner;
+use crate::router::{RoutePolicy, UtilityPredictor};
+use crate::sim::{run_fleet, FleetArrival, FleetConfig, FleetReport};
+use crate::util::json::Json;
+use crate::workload::trace::{ArrivalProcess, ZipfMix};
+use crate::workload::{generate_queries, Benchmark};
+use std::sync::Arc;
+
+/// The report a scenario session produces (the kernel's aggregate run
+/// outcome: per-query results, tenant pools, latency summaries, cache and
+/// hedge counters, and the byte-stable event trace).
+pub type Report = FleetReport;
+
+/// Declarative routing-policy selection for scenario files. This is the
+/// string-level mirror of [`RoutePolicy`] (custom threshold schedules
+/// stay a Rust-level concern): `hybridflow`, `hybridflow_eq27`,
+/// `hybridflow_calibrated`, `all_edge`, `all_cloud`, `oracle`,
+/// `random:<p>`, `fixed:<tau>`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    HybridFlow,
+    HybridFlowEq27,
+    HybridFlowCalibrated,
+    AllEdge,
+    AllCloud,
+    Oracle,
+    Random(f64),
+    Fixed(f64),
+}
+
+impl PolicySpec {
+    pub fn parse(s: &str) -> Option<PolicySpec> {
+        let lower = s.trim().to_ascii_lowercase();
+        match lower.as_str() {
+            "hybridflow" => Some(PolicySpec::HybridFlow),
+            "hybridflow_eq27" => Some(PolicySpec::HybridFlowEq27),
+            "hybridflow_calibrated" => Some(PolicySpec::HybridFlowCalibrated),
+            "all_edge" | "edge" => Some(PolicySpec::AllEdge),
+            "all_cloud" | "cloud" => Some(PolicySpec::AllCloud),
+            "oracle" => Some(PolicySpec::Oracle),
+            other => {
+                if let Some(p) = other.strip_prefix("random:") {
+                    let p = p.parse::<f64>().ok()?;
+                    return (0.0..=1.0).contains(&p).then_some(PolicySpec::Random(p));
+                }
+                if let Some(t) = other.strip_prefix("fixed:") {
+                    let t = t.parse::<f64>().ok()?;
+                    return t.is_finite().then_some(PolicySpec::Fixed(t));
+                }
+                None
+            }
+        }
+    }
+
+    /// Canonical string form (parse-render fixpoint).
+    pub fn render(&self) -> String {
+        match self {
+            PolicySpec::HybridFlow => "hybridflow".into(),
+            PolicySpec::HybridFlowEq27 => "hybridflow_eq27".into(),
+            PolicySpec::HybridFlowCalibrated => "hybridflow_calibrated".into(),
+            PolicySpec::AllEdge => "all_edge".into(),
+            PolicySpec::AllCloud => "all_cloud".into(),
+            PolicySpec::Oracle => "oracle".into(),
+            PolicySpec::Random(p) => format!("random:{p}"),
+            PolicySpec::Fixed(t) => format!("fixed:{t}"),
+        }
+    }
+
+    /// Resolve into the engine's policy configuration.
+    pub fn build(&self, sp: &SimParams) -> RoutePolicy {
+        match self {
+            PolicySpec::HybridFlow => RoutePolicy::hybridflow(sp),
+            PolicySpec::HybridFlowEq27 => RoutePolicy::hybridflow_eq27(sp),
+            PolicySpec::HybridFlowCalibrated => RoutePolicy::hybridflow_calibrated(sp),
+            PolicySpec::AllEdge => RoutePolicy::AllEdge,
+            PolicySpec::AllCloud => RoutePolicy::AllCloud,
+            PolicySpec::Oracle => RoutePolicy::Oracle,
+            PolicySpec::Random(p) => RoutePolicy::Random(*p),
+            PolicySpec::Fixed(t) => RoutePolicy::FixedThreshold(*t),
+        }
+    }
+}
+
+/// One tenant of the scenario topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Cloud-dollar allotment; `None` = unlimited (JSON `null`).
+    pub k_cap: Option<f64>,
+    /// Routing-policy override; `None` falls back to the engine default.
+    pub policy: Option<PolicySpec>,
+}
+
+impl TenantSpec {
+    pub fn unlimited(name: &str) -> TenantSpec {
+        TenantSpec { name: name.into(), k_cap: None, policy: None }
+    }
+
+    pub fn capped(name: &str, k_cap: f64) -> TenantSpec {
+        TenantSpec { name: name.into(), k_cap: Some(k_cap), policy: None }
+    }
+
+    pub fn with_policy(mut self, policy: PolicySpec) -> TenantSpec {
+        self.policy = Some(policy);
+        self
+    }
+}
+
+/// Worker pools, admission, and the tenant list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologySpec {
+    pub edge_workers: usize,
+    pub cloud_workers: usize,
+    /// Maximum queries in service at once; 0 = unlimited.
+    pub admission_limit: usize,
+    /// Fleet-wide dollar ceiling; `None` = unlimited (JSON `null`).
+    pub global_k_cap: Option<f64>,
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// Benchmark, size, arrival process, and optional Zipf repetition of the
+/// query stream. Arrivals are assigned to tenants round-robin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub benchmark: Benchmark,
+    pub n: usize,
+    pub arrival: ArrivalProcess,
+    pub zipf: Option<ZipfMix>,
+}
+
+impl WorkloadSpec {
+    /// Materialize the arrival list: `n` queries from the benchmark
+    /// generator (Zipf-rewritten when configured), timestamps from the
+    /// arrival process, tenants round-robin. Deterministic in
+    /// `(self, n_tenants, seed)` — the exact construction the historical
+    /// `serve_fleet` / `serve_fleet_zipf` entrypoints used, so scenario
+    /// runs are byte-identical to the hand-wired experiments.
+    pub fn arrivals(&self, n_tenants: usize, seed: u64) -> Vec<FleetArrival> {
+        let n_tenants = n_tenants.max(1);
+        let times = self.arrival.sample(self.n, seed);
+        let base = generate_queries(self.benchmark, self.n, seed);
+        let queries = match &self.zipf {
+            Some(z) => z.apply(&base, seed),
+            None => base,
+        };
+        queries
+            .into_iter()
+            .zip(times)
+            .enumerate()
+            .map(|(i, (query, time))| FleetArrival { time, tenant: i % n_tenants, query })
+            .collect()
+    }
+}
+
+/// Cross-query result-cache configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheSpec {
+    /// Entries per partition; 0 disables the cache.
+    pub capacity: usize,
+    pub policy: CachePolicyKind,
+    /// Fleet-wide shared tier on top of per-tenant partitions.
+    pub shared_tier: bool,
+}
+
+/// Engine options: default routing policy plus every scheduling knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineSpec {
+    /// Default routing policy (tenants may override per
+    /// [`TenantSpec::policy`]).
+    pub policy: PolicySpec,
+    pub chain_mode: bool,
+    pub batch_frontier: bool,
+    pub hedge: bool,
+    pub hedge_threshold: f64,
+    /// Planner subtask cap (Def. C.2 rule 5).
+    pub n_max: usize,
+    pub record_trace: bool,
+    pub cache: Option<CacheSpec>,
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        let sp = SimParams::default();
+        EngineSpec {
+            policy: PolicySpec::HybridFlow,
+            chain_mode: false,
+            batch_frontier: true,
+            hedge: false,
+            hedge_threshold: 0.55,
+            n_max: sp.nmax,
+            record_trace: true,
+            cache: None,
+        }
+    }
+}
+
+/// A complete declarative scenario: everything a run needs except the
+/// utility predictor (a loaded artifact, injected at
+/// [`ScenarioSpec::build`] time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Run seed. JSON numbers are f64, so seeds above 2^53 do not
+    /// round-trip exactly through spec files; keep file-borne seeds in
+    /// the exactly-representable range (every shipped spec does).
+    pub seed: u64,
+    pub topology: TopologySpec,
+    pub workload: WorkloadSpec,
+    pub engine: EngineSpec,
+}
+
+impl ScenarioSpec {
+    // ------------------------------------------------------------------
+    // JSON (de)serialization — util/json, serde-free.
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let tenants: Vec<Json> = self
+            .topology
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::Str(t.name.clone())),
+                    ("k_cap", opt_num(t.k_cap)),
+                    (
+                        "policy",
+                        t.policy.as_ref().map_or(Json::Null, |p| Json::Str(p.render())),
+                    ),
+                ])
+            })
+            .collect();
+        let arrival = match &self.workload.arrival {
+            ArrivalProcess::Poisson { rate } => Json::obj(vec![
+                ("process", Json::Str("poisson".into())),
+                ("rate", Json::Num(*rate)),
+            ]),
+            ArrivalProcess::Periodic { gap } => Json::obj(vec![
+                ("process", Json::Str("periodic".into())),
+                ("gap", Json::Num(*gap)),
+            ]),
+            ArrivalProcess::Trace(times) => Json::obj(vec![
+                ("process", Json::Str("trace".into())),
+                ("times", Json::from_f64_slice(times)),
+            ]),
+        };
+        let zipf = self.workload.zipf.as_ref().map_or(Json::Null, |z| {
+            Json::obj(vec![
+                ("exponent", Json::Num(z.exponent)),
+                ("distinct", Json::Num(z.distinct as f64)),
+            ])
+        });
+        let cache = self.engine.cache.as_ref().map_or(Json::Null, |c| {
+            Json::obj(vec![
+                ("capacity", Json::Num(c.capacity as f64)),
+                ("policy", Json::Str(c.policy.spec_label())),
+                ("shared_tier", Json::Bool(c.shared_tier)),
+            ])
+        });
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "topology",
+                Json::obj(vec![
+                    ("edge_workers", Json::Num(self.topology.edge_workers as f64)),
+                    ("cloud_workers", Json::Num(self.topology.cloud_workers as f64)),
+                    ("admission_limit", Json::Num(self.topology.admission_limit as f64)),
+                    ("global_k_cap", opt_num(self.topology.global_k_cap)),
+                    ("tenants", Json::Arr(tenants)),
+                ]),
+            ),
+            (
+                "workload",
+                Json::obj(vec![
+                    ("benchmark", Json::Str(self.workload.benchmark.name().into())),
+                    ("n", Json::Num(self.workload.n as f64)),
+                    ("arrival", arrival),
+                    ("zipf", zipf),
+                ]),
+            ),
+            (
+                "engine",
+                Json::obj(vec![
+                    ("policy", Json::Str(self.engine.policy.render())),
+                    ("chain_mode", Json::Bool(self.engine.chain_mode)),
+                    ("batch_frontier", Json::Bool(self.engine.batch_frontier)),
+                    ("hedge", Json::Bool(self.engine.hedge)),
+                    ("hedge_threshold", Json::Num(self.engine.hedge_threshold)),
+                    ("n_max", Json::Num(self.engine.n_max as f64)),
+                    ("record_trace", Json::Bool(self.engine.record_trace)),
+                    ("cache", cache),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ScenarioSpec> {
+        let name = req_str(j, "name")?.to_string();
+        let seed = req_count(j, "seed")? as u64;
+
+        let topo = j.get("topology").ok_or_else(|| missing("topology"))?;
+        let tenants = topo
+            .get("tenants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| missing("topology.tenants"))?
+            .iter()
+            .map(|t| {
+                let policy = match t.get("policy") {
+                    None | Some(Json::Null) => None,
+                    Some(Json::Str(s)) => Some(
+                        PolicySpec::parse(s)
+                            .ok_or_else(|| anyhow::anyhow!("unknown tenant policy '{s}'"))?,
+                    ),
+                    Some(other) => anyhow::bail!("tenant policy must be a string, got {other:?}"),
+                };
+                Ok(TenantSpec {
+                    name: req_str(t, "name")?.to_string(),
+                    k_cap: opt_num_field(t, "k_cap")?,
+                    policy,
+                })
+            })
+            .collect::<anyhow::Result<Vec<TenantSpec>>>()?;
+        anyhow::ensure!(!tenants.is_empty(), "scenario needs at least one tenant");
+        let topology = TopologySpec {
+            edge_workers: req_count(topo, "edge_workers")?,
+            cloud_workers: req_count(topo, "cloud_workers")?,
+            admission_limit: count_or(topo, "admission_limit", 0)?,
+            global_k_cap: opt_num_field(topo, "global_k_cap")?,
+            tenants,
+        };
+
+        let wl = j.get("workload").ok_or_else(|| missing("workload"))?;
+        let bench_name = req_str(wl, "benchmark")?;
+        let benchmark = Benchmark::parse(bench_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench_name}'"))?;
+        let arr = wl.get("arrival").ok_or_else(|| missing("workload.arrival"))?;
+        let arrival = match req_str(arr, "process")? {
+            "poisson" => {
+                let rate = req_num(arr, "rate")?;
+                anyhow::ensure!(rate > 0.0, "poisson rate must be positive");
+                ArrivalProcess::Poisson { rate }
+            }
+            "periodic" => {
+                let gap = req_num(arr, "gap")?;
+                anyhow::ensure!(gap >= 0.0, "periodic gap must be non-negative");
+                ArrivalProcess::Periodic { gap }
+            }
+            "trace" => {
+                let times = arr
+                    .get("times")
+                    .and_then(Json::f64_array)
+                    .ok_or_else(|| missing("workload.arrival.times"))?;
+                ArrivalProcess::Trace(times)
+            }
+            other => anyhow::bail!("unknown arrival process '{other}' (poisson|periodic|trace)"),
+        };
+        let zipf = match wl.get("zipf") {
+            None | Some(Json::Null) => None,
+            Some(z) => {
+                let exponent = req_num(z, "exponent")?;
+                anyhow::ensure!(exponent >= 0.0, "zipf exponent must be non-negative");
+                Some(ZipfMix::new(exponent, req_count(z, "distinct")?))
+            }
+        };
+        let workload = WorkloadSpec { benchmark, n: req_count(wl, "n")?, arrival, zipf };
+
+        let eng = j.get("engine").ok_or_else(|| missing("engine"))?;
+        let policy_name = req_str(eng, "policy")?;
+        let policy = PolicySpec::parse(policy_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown engine policy '{policy_name}'"))?;
+        let cache = match eng.get("cache") {
+            None | Some(Json::Null) => None,
+            Some(c) => {
+                let label = req_str(c, "policy")?;
+                let kind = CachePolicyKind::parse(label).ok_or_else(|| {
+                    anyhow::anyhow!("unknown cache policy '{label}' (lru|lfu|ttl[:secs])")
+                })?;
+                Some(CacheSpec {
+                    capacity: req_count(c, "capacity")?,
+                    policy: kind,
+                    shared_tier: bool_or(c, "shared_tier", false)?,
+                })
+            }
+        };
+        let defaults = EngineSpec::default();
+        let engine = EngineSpec {
+            policy,
+            chain_mode: bool_or(eng, "chain_mode", false)?,
+            batch_frontier: bool_or(eng, "batch_frontier", defaults.batch_frontier)?,
+            hedge: bool_or(eng, "hedge", false)?,
+            hedge_threshold: num_or(eng, "hedge_threshold", defaults.hedge_threshold)?,
+            n_max: count_or(eng, "n_max", defaults.n_max)?,
+            record_trace: bool_or(eng, "record_trace", defaults.record_trace)?,
+            cache,
+        };
+        anyhow::ensure!(
+            !engine.hedge || (engine.hedge_threshold.is_finite() && engine.hedge_threshold >= 0.0),
+            "hedge_threshold must be a finite non-negative utility cutoff when hedging is enabled"
+        );
+
+        Ok(ScenarioSpec { name, seed, topology, workload, engine })
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn parse(text: &str) -> anyhow::Result<ScenarioSpec> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("scenario json: {e}"))?;
+        ScenarioSpec::from_json(&j)
+    }
+
+    /// Load a spec from a `.json` file.
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<ScenarioSpec> {
+        ScenarioSpec::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Canonical pretty-printed JSON (sorted keys, trailing newline) —
+    /// what the shipped `scenarios/*.json` files contain.
+    pub fn render(&self) -> String {
+        let mut s = self.to_json().to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    // ------------------------------------------------------------------
+    // Resolution.
+    // ------------------------------------------------------------------
+
+    /// Resolve the declarative spec into a runnable [`Session`] over the
+    /// paper-calibrated simulation substrate, injecting the utility
+    /// predictor (trained mirror, PJRT service, or synthetic fallback).
+    pub fn build(&self, predictor: Arc<dyn UtilityPredictor>) -> Session {
+        let sp = SimParams::default();
+        let mut pcfg = PipelineConfig::paper_default(&sp);
+        pcfg.policy = self.engine.policy.build(&sp);
+        pcfg.n_max = self.engine.n_max;
+        pcfg.schedule.chain_mode = self.engine.chain_mode;
+        pcfg.schedule.batch_frontier = self.engine.batch_frontier;
+        pcfg.schedule.hedge = self.engine.hedge;
+        pcfg.schedule.hedge_threshold = self.engine.hedge_threshold;
+        pcfg.schedule.edge_workers = self.topology.edge_workers;
+        pcfg.schedule.cloud_workers = self.topology.cloud_workers;
+        if let Some(c) = &self.engine.cache {
+            if c.capacity > 0 {
+                let cache = SubtaskCache::new(c.capacity, c.policy);
+                let cache = if c.shared_tier { cache.with_shared_tier() } else { cache };
+                pcfg.schedule.cache = Some(Arc::new(cache));
+            }
+        }
+        let pipeline = HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            predictor,
+            pcfg,
+        );
+        let tenants: Vec<TenantPool> = self
+            .topology
+            .tenants
+            .iter()
+            .map(|t| TenantPool::new(&t.name, t.k_cap.unwrap_or(f64::INFINITY)))
+            .collect();
+        let fleet = FleetConfig {
+            admission_limit: self.topology.admission_limit,
+            global_k_cap: self.topology.global_k_cap.unwrap_or(f64::INFINITY),
+            record_trace: self.engine.record_trace,
+            tenant_policies: self
+                .topology
+                .tenants
+                .iter()
+                .map(|t| t.policy.as_ref().map(|p| p.build(&sp)))
+                .collect(),
+        };
+        Session { spec: self.clone(), pipeline, tenants, fleet }
+    }
+}
+
+fn missing(field: &str) -> anyhow::Error {
+    anyhow::anyhow!("scenario spec missing '{field}'")
+}
+
+fn req_num(j: &Json, k: &str) -> anyhow::Result<f64> {
+    j.get(k).and_then(Json::as_f64).ok_or_else(|| missing(k))
+}
+
+/// Non-negative integer field. Negative or fractional values are schema
+/// errors — a bare `as usize` cast would saturate `-1` to 0 (silently
+/// flipping semantics, e.g. `admission_limit: -1` reading as
+/// *unlimited*) and truncate `6.7` to 6 (silently running a different
+/// experiment than written).
+fn req_count(j: &Json, k: &str) -> anyhow::Result<usize> {
+    let v = req_num(j, k)?;
+    anyhow::ensure!(
+        v >= 0.0 && v.fract() == 0.0,
+        "'{k}' must be a non-negative integer, got {v}"
+    );
+    Ok(v as usize)
+}
+
+fn count_or(j: &Json, k: &str, default: usize) -> anyhow::Result<usize> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(default),
+        Some(_) => req_count(j, k),
+    }
+}
+
+fn req_str<'a>(j: &'a Json, k: &str) -> anyhow::Result<&'a str> {
+    j.get(k).and_then(Json::as_str).ok_or_else(|| missing(k))
+}
+
+fn num_or(j: &Json, k: &str, default: f64) -> anyhow::Result<f64> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| anyhow::anyhow!("'{k}' must be a number")),
+    }
+}
+
+fn bool_or(j: &Json, k: &str, default: bool) -> anyhow::Result<bool> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| anyhow::anyhow!("'{k}' must be a boolean")),
+    }
+}
+
+/// `None` ⇄ JSON `null` (unlimited caps).
+fn opt_num(v: Option<f64>) -> Json {
+    v.map_or(Json::Null, Json::Num)
+}
+
+/// Optional dollar cap: `null`/absent = unlimited; negative caps are
+/// schema errors (they would silently read as "already exhausted").
+fn opt_num_field(j: &Json, k: &str) -> anyhow::Result<Option<f64>> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let v = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'{k}' must be a number or null"))?;
+            anyhow::ensure!(v >= 0.0, "'{k}' must be non-negative, got {v}");
+            Ok(Some(v))
+        }
+    }
+}
+
+/// A resolved, runnable scenario: the assembled pipeline, tenant pools,
+/// and fleet configuration. [`Session::run`] executes the workload on the
+/// unified kernel; each run starts from cold tenant pools (and a cold
+/// cache), so repeated runs reproduce the event trace byte-for-byte.
+pub struct Session {
+    pub spec: ScenarioSpec,
+    pub pipeline: HybridFlowPipeline,
+    pub tenants: Vec<TenantPool>,
+    pub fleet: FleetConfig,
+}
+
+impl Session {
+    /// Execute the scenario end-to-end and return the kernel's report.
+    pub fn run(&self) -> Report {
+        let arrivals = self.spec.workload.arrivals(self.tenants.len(), self.spec.seed);
+        run_fleet(&self.pipeline, &self.fleet, self.tenants.clone(), arrivals, self.spec.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::MirrorPredictor;
+    use crate::server::{serve_fleet, serve_fleet_zipf};
+
+    fn predictor() -> Arc<MirrorPredictor> {
+        Arc::new(MirrorPredictor::synthetic_for_tests())
+    }
+
+    fn small_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "unit".into(),
+            seed: 7,
+            topology: TopologySpec {
+                edge_workers: 2,
+                cloud_workers: 4,
+                admission_limit: 0,
+                global_k_cap: None,
+                tenants: vec![
+                    TenantSpec::unlimited("a"),
+                    TenantSpec::capped("b", 0.01).with_policy(PolicySpec::AllEdge),
+                ],
+            },
+            workload: WorkloadSpec {
+                benchmark: Benchmark::Gpqa,
+                n: 6,
+                arrival: ArrivalProcess::Periodic { gap: 2.0 },
+                zipf: None,
+            },
+            engine: EngineSpec::default(),
+        }
+    }
+
+    #[test]
+    fn policy_spec_roundtrip() {
+        let cases = [
+            PolicySpec::HybridFlow,
+            PolicySpec::HybridFlowEq27,
+            PolicySpec::HybridFlowCalibrated,
+            PolicySpec::AllEdge,
+            PolicySpec::AllCloud,
+            PolicySpec::Oracle,
+            PolicySpec::Random(0.37),
+            PolicySpec::Fixed(0.65),
+        ];
+        for p in cases {
+            assert_eq!(PolicySpec::parse(&p.render()), Some(p.clone()), "{}", p.render());
+        }
+        assert!(PolicySpec::parse("random:1.5").is_none(), "probability out of range");
+        assert!(PolicySpec::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn spec_json_roundtrip_is_fixpoint() {
+        let spec = small_spec();
+        let text = spec.render();
+        let back = ScenarioSpec::parse(&text).expect("parse rendered spec");
+        assert_eq!(back, spec, "value round trip");
+        assert_eq!(back.render(), text, "render fixpoint");
+    }
+
+    #[test]
+    fn spec_with_zipf_and_cache_roundtrips() {
+        let mut spec = small_spec();
+        spec.workload.zipf = Some(ZipfMix::new(1.1, 4));
+        spec.engine.cache = Some(CacheSpec {
+            capacity: 64,
+            policy: CachePolicyKind::Ttl(120.0),
+            shared_tier: true,
+        });
+        spec.topology.global_k_cap = Some(0.5);
+        let back = ScenarioSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(ScenarioSpec::parse("not json").is_err());
+        assert!(ScenarioSpec::parse("{}").is_err(), "missing fields");
+        // Unknown policy string.
+        let mut j = small_spec().to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(eng)) = o.get_mut("engine") {
+                eng.insert("policy".into(), Json::Str("warp".into()));
+            }
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err());
+        // Empty tenant list.
+        let mut j = small_spec().to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(t)) = o.get_mut("topology") {
+                t.insert("tenants".into(), Json::Arr(vec![]));
+            }
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_negative_counts_and_caps() {
+        // Negative integers must error, not saturate to 0 (a cast-to-0
+        // admission_limit would silently mean *unlimited*); fractional
+        // counts must error, not truncate to a different experiment.
+        for bad in [-1.0, 6.7] {
+            for (section, field) in [
+                ("topology", "admission_limit"),
+                ("topology", "edge_workers"),
+                ("workload", "n"),
+            ] {
+                let mut j = small_spec().to_json();
+                if let Json::Obj(o) = &mut j {
+                    if let Some(Json::Obj(s)) = o.get_mut(section) {
+                        s.insert(field.into(), Json::Num(bad));
+                    }
+                }
+                let err = ScenarioSpec::from_json(&j).unwrap_err().to_string();
+                assert!(err.contains(field), "{section}.{field}={bad}: {err}");
+            }
+        }
+        // Negative dollar caps would read as "already exhausted".
+        let mut j = small_spec().to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(t)) = o.get_mut("topology") {
+                t.insert("global_k_cap".into(), Json::Num(-0.5));
+            }
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn session_run_is_deterministic() {
+        let session = small_spec().build(predictor());
+        let a = session.run();
+        let b = session.run();
+        assert_eq!(a.results.len(), 6);
+        assert_eq!(a.trace_text(), b.trace_text(), "reruns must be byte-identical");
+        // Tenant policy override held: the all-edge tenant never offloads.
+        assert_eq!(a.tenants[1].state.n_offloaded, 0);
+        assert!(a.tenants[1].state.n_decided > 0);
+    }
+
+    #[test]
+    fn session_matches_serve_fleet_byte_for_byte() {
+        // The scenario layer must reproduce the historical hand-wired
+        // entrypoint exactly: same arrivals, same kernel, same trace.
+        let spec = small_spec();
+        let session = spec.build(predictor());
+        let via_scenario = session.run();
+        let via_server = serve_fleet(
+            &session.pipeline,
+            &session.fleet,
+            session.tenants.clone(),
+            spec.workload.benchmark,
+            spec.workload.n,
+            &spec.workload.arrival,
+            spec.seed,
+        );
+        assert_eq!(via_scenario.trace_text(), via_server.trace_text());
+        assert_eq!(via_scenario.total_api_cost, via_server.total_api_cost);
+    }
+
+    #[test]
+    fn session_matches_serve_fleet_zipf_byte_for_byte() {
+        let mut spec = small_spec();
+        spec.workload.zipf = Some(ZipfMix::new(1.2, 3));
+        spec.engine.cache =
+            Some(CacheSpec { capacity: 128, policy: CachePolicyKind::Lru, shared_tier: true });
+        let session = spec.build(predictor());
+        let via_scenario = session.run();
+        let via_server = serve_fleet_zipf(
+            &session.pipeline,
+            &session.fleet,
+            session.tenants.clone(),
+            spec.workload.benchmark,
+            spec.workload.n,
+            &spec.workload.arrival,
+            spec.workload.zipf.as_ref().unwrap(),
+            spec.seed,
+        );
+        assert_eq!(via_scenario.trace_text(), via_server.trace_text());
+    }
+}

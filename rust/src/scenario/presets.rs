@@ -1,0 +1,294 @@
+//! Canonical scenario specs for the repo's standing experiments.
+//!
+//! Each constructor here is the **single source of truth** for one
+//! documented scenario: the `eval` experiment, the runnable example, and
+//! the shipped `scenarios/*.json` file are all derived from it, so the
+//! three can never drift apart (`rust/tests/scenario.rs` pins the JSON
+//! files against these constructors, and the experiment tables run the
+//! exact sessions they build).
+
+use super::{
+    CacheSpec, EngineSpec, PolicySpec, ScenarioSpec, TenantSpec, TopologySpec, WorkloadSpec,
+};
+use crate::cache::CachePolicyKind;
+use crate::workload::trace::{ArrivalProcess, ZipfMix};
+use crate::workload::Benchmark;
+
+/// Knobs of the plain fleet-simulation scenario (shared edge/cloud pools,
+/// homogeneous policy, optional per-tenant dollar caps).
+#[derive(Debug, Clone)]
+pub struct FleetSimKnobs {
+    pub n_tenants: usize,
+    pub edge_workers: usize,
+    pub cloud_workers: usize,
+    pub admission_limit: usize,
+    /// Per-tenant dollar cap; `None` = unlimited.
+    pub tenant_cap: Option<f64>,
+    pub record_trace: bool,
+}
+
+impl Default for FleetSimKnobs {
+    fn default() -> Self {
+        FleetSimKnobs {
+            n_tenants: 3,
+            edge_workers: 8,
+            cloud_workers: 16,
+            admission_limit: 64,
+            tenant_cap: None,
+            record_trace: true,
+        }
+    }
+}
+
+/// The `fleet_sim` scenario: a Poisson multi-tenant workload on shared
+/// pools under the learned router — the canonical determinism demo
+/// (`examples/fleet_sim.rs` runs it twice and compares traces).
+pub fn fleet_sim(
+    bench: Benchmark,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    knobs: &FleetSimKnobs,
+) -> ScenarioSpec {
+    let tenants = (0..knobs.n_tenants.max(1))
+        .map(|i| {
+            let name = format!("tenant-{i}");
+            match knobs.tenant_cap {
+                Some(cap) if cap.is_finite() => TenantSpec::capped(&name, cap),
+                _ => TenantSpec::unlimited(&name),
+            }
+        })
+        .collect();
+    ScenarioSpec {
+        name: "fleet_sim".into(),
+        seed,
+        topology: TopologySpec {
+            edge_workers: knobs.edge_workers,
+            cloud_workers: knobs.cloud_workers,
+            admission_limit: knobs.admission_limit,
+            global_k_cap: None,
+            tenants,
+        },
+        workload: WorkloadSpec {
+            benchmark: bench,
+            n,
+            arrival: ArrivalProcess::Poisson { rate },
+            zipf: None,
+        },
+        engine: EngineSpec { record_trace: knobs.record_trace, ..Default::default() },
+    }
+}
+
+/// The `fleet_serve` contention-sweep scenario: three tenants (one
+/// unlimited anchor, two metered) on an 8-edge / 16-cloud fleet; the
+/// experiment sweeps the Poisson rate from idle to saturated.
+pub fn fleet_serve(bench: Benchmark, n: usize, rate: f64, seed: u64) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "fleet_serve".into(),
+        seed,
+        topology: TopologySpec {
+            edge_workers: 8,
+            cloud_workers: 16,
+            admission_limit: 64,
+            global_k_cap: None,
+            tenants: vec![
+                TenantSpec::unlimited("anchor"),
+                TenantSpec::capped("metered", 0.05),
+                TenantSpec::capped("capped", 0.005),
+            ],
+        },
+        workload: WorkloadSpec {
+            benchmark: bench,
+            n,
+            arrival: ArrivalProcess::Poisson { rate },
+            zipf: None,
+        },
+        engine: EngineSpec { record_trace: false, ..Default::default() },
+    }
+}
+
+/// Knobs of the canonical mixed-policy scenario (see [`mixed_policy`]).
+#[derive(Debug, Clone)]
+pub struct MixedPolicyKnobs {
+    pub edge_workers: usize,
+    pub cloud_workers: usize,
+    pub hedge: bool,
+    pub hedge_threshold: f64,
+    pub record_trace: bool,
+}
+
+impl Default for MixedPolicyKnobs {
+    fn default() -> Self {
+        MixedPolicyKnobs {
+            edge_workers: 4,
+            cloud_workers: 16,
+            hedge: false,
+            hedge_threshold: 0.55,
+            record_trace: false,
+        }
+    }
+}
+
+/// Canonical 3-tenant mixed-policy fleet, shared by the
+/// `fleet_mixed_policy` experiment and `examples/fleet_mixed_policy.rs`.
+/// Heterogeneous tenants: the learned router (engine default), a
+/// conservative fixed threshold (strands pivotal work on the edge —
+/// hedging's best case), and a hard edge pin with a small dollar pool
+/// that only hedged speculation can spend from.
+pub fn mixed_policy(
+    bench: Benchmark,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    knobs: &MixedPolicyKnobs,
+) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "fleet_mixed_policy".into(),
+        seed,
+        topology: TopologySpec {
+            edge_workers: knobs.edge_workers,
+            cloud_workers: knobs.cloud_workers,
+            admission_limit: 64,
+            global_k_cap: None,
+            tenants: vec![
+                TenantSpec::unlimited("learned"),
+                TenantSpec::unlimited("fixed-0.65").with_policy(PolicySpec::Fixed(0.65)),
+                TenantSpec::capped("edge-pinned", 0.02).with_policy(PolicySpec::AllEdge),
+            ],
+        },
+        workload: WorkloadSpec {
+            benchmark: bench,
+            n,
+            arrival: ArrivalProcess::Poisson { rate },
+            zipf: None,
+        },
+        engine: EngineSpec {
+            hedge: knobs.hedge,
+            hedge_threshold: knobs.hedge_threshold,
+            record_trace: knobs.record_trace,
+            ..Default::default()
+        },
+    }
+}
+
+/// Knobs of the canonical cached-Zipf fleet scenario (see
+/// [`fleet_cache`]).
+#[derive(Debug, Clone)]
+pub struct FleetCacheKnobs {
+    /// Result-cache capacity per partition; 0 disables the cache.
+    pub capacity: usize,
+    pub policy: CachePolicyKind,
+    /// Fleet-wide shared tier on top of per-tenant partitions.
+    pub shared_tier: bool,
+    pub edge_workers: usize,
+    pub cloud_workers: usize,
+    /// Zipf popularity skew and prototype-pool size of the workload.
+    pub zipf_exponent: f64,
+    pub zipf_distinct: usize,
+    pub record_trace: bool,
+}
+
+impl Default for FleetCacheKnobs {
+    fn default() -> Self {
+        FleetCacheKnobs {
+            capacity: 256,
+            policy: CachePolicyKind::Lru,
+            shared_tier: true,
+            edge_workers: 4,
+            cloud_workers: 16,
+            zipf_exponent: 1.1,
+            zipf_distinct: 8,
+            record_trace: false,
+        }
+    }
+}
+
+/// Canonical cached-Zipf fleet, shared by the `fleet_cache` experiment
+/// and `examples/fleet_cache.rs`: two unlimited tenants under the learned
+/// router, a Zipf-repeated workload, and a result cache with per-tenant
+/// partitions plus the shared global tier.
+pub fn fleet_cache(
+    bench: Benchmark,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    knobs: &FleetCacheKnobs,
+) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "fleet_cache".into(),
+        seed,
+        topology: TopologySpec {
+            edge_workers: knobs.edge_workers,
+            cloud_workers: knobs.cloud_workers,
+            admission_limit: 64,
+            global_k_cap: None,
+            tenants: vec![TenantSpec::unlimited("a"), TenantSpec::unlimited("b")],
+        },
+        workload: WorkloadSpec {
+            benchmark: bench,
+            n,
+            arrival: ArrivalProcess::Poisson { rate },
+            zipf: Some(ZipfMix::new(knobs.zipf_exponent, knobs.zipf_distinct)),
+        },
+        engine: EngineSpec {
+            record_trace: knobs.record_trace,
+            cache: (knobs.capacity > 0).then(|| CacheSpec {
+                capacity: knobs.capacity,
+                policy: knobs.policy,
+                shared_tier: knobs.shared_tier,
+            }),
+            ..Default::default()
+        },
+    }
+}
+
+/// The golden-trace fleet (`rust/tests/golden/fleet_trace.txt`) as a
+/// scenario: 12 GPQA queries, periodic 1.5s arrivals, three tenants with
+/// the pinned dollar caps, 4 edge / 8 cloud workers, seed 1234. Running
+/// this spec through a session must reproduce the pinned trace
+/// byte-for-byte (pinned by `rust/tests/scenario.rs`).
+pub fn golden_fleet() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "golden_fleet".into(),
+        seed: 1234,
+        topology: TopologySpec {
+            edge_workers: 4,
+            cloud_workers: 8,
+            admission_limit: 0,
+            global_k_cap: None,
+            tenants: vec![
+                TenantSpec::unlimited("anchor"),
+                TenantSpec::capped("metered", 0.02),
+                TenantSpec::capped("capped", 0.001),
+            ],
+        },
+        workload: WorkloadSpec {
+            benchmark: Benchmark::Gpqa,
+            n: 12,
+            arrival: ArrivalProcess::Periodic { gap: 1.5 },
+            zipf: None,
+        },
+        engine: EngineSpec::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioSpec;
+
+    #[test]
+    fn presets_roundtrip_through_json() {
+        let specs = [
+            fleet_sim(Benchmark::Gpqa, 60, 0.5, 11, &FleetSimKnobs::default()),
+            fleet_serve(Benchmark::Gpqa, 120, 0.5, 11),
+            mixed_policy(Benchmark::Gpqa, 90, 0.6, 11, &MixedPolicyKnobs::default()),
+            fleet_cache(Benchmark::Gpqa, 120, 0.5, 11, &FleetCacheKnobs::default()),
+            golden_fleet(),
+        ];
+        for spec in specs {
+            let back = ScenarioSpec::parse(&spec.render()).expect("preset parses");
+            assert_eq!(back, spec, "{} round trip", spec.name);
+        }
+    }
+}

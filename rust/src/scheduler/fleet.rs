@@ -1,972 +1,24 @@
-//! Fleet-scale multi-tenant simulator: N concurrent queries contending for
-//! one shared edge-worker pool, one bounded cloud-API pool, and per-tenant
-//! dollar budgets drawn from a global ceiling.
+//! Fleet-scale multi-tenant simulation — compatibility surface.
 //!
-//! The per-query scheduler ([`super::execute_query`]) simulates each query
-//! against *private* resources, which makes cross-query queueing delay,
-//! pool contention, and budget exhaustion invisible. This module extends
-//! the same event-driven virtual clock to a whole serving fleet:
+//! The fleet event loop now lives in the unified simulation kernel
+//! ([`crate::sim::Kernel`]); this module re-exports the fleet-facing
+//! types and the [`run_fleet`] entrypoint under their historical paths so
+//! downstream code (`server`, `eval`, examples, benches, tests) keeps
+//! compiling unchanged. New code should prefer the declarative
+//! [`crate::scenario`] API, which resolves a JSON `ScenarioSpec` into a
+//! runnable session over the same kernel.
 //!
-//! * a single tagged event heap (keyed by [`super::events::EventKey`])
-//!   orders **arrivals**, **planner completions**, **ready-frontier
-//!   markers**, **subtask finishes**, and **hedge cancellations** across
-//!   all queries (ties resolve control-before-marker-before-finish,
-//!   matching the single-query scheduler);
-//! * worker pools are shared: a subtask decided at `t` starts at
-//!   `max(t, earliest_free_worker)`, so fleet load shows up as per-subtask
-//!   queueing delay;
-//! * routing decisions see the **tenant's aggregated** [`BudgetState`]
-//!   (fleet-level `C_used(t)` in Eq. 8's sense) instead of the query-local
-//!   one, and a tenant or global dollar pool that has run dry forces
-//!   subtasks back to the edge;
-//! * **per-tenant policy overrides** ([`FleetConfig::tenant_policies`]):
-//!   heterogeneous tenants run different routers in one fleet — each
-//!   query's router is built from its tenant's policy (falling back to the
-//!   pipeline's default);
-//! * an admission limit bounds in-service queries; excess arrivals wait in
-//!   FIFO order and their admission delay is reported.
-//!
-//! With `schedule.hedge` on, edge-routed pivotal subtasks dispatch
-//! speculatively to both pools; the losing replica's `Cancel` event
-//! releases its worker slot and refunds the unconsumed cloud spend to the
-//! tenant and global pools (see [`super::CancelTicket`]).
-//!
-//! Determinism: every query gets an RNG forked from `(seed, job index)` —
-//! never from arrival interleaving — and all state lives in vectors and
-//! binary heaps with total orderings, so a fixed `(workload, seed)` pair
-//! reproduces the event trace byte-for-byte. With one tenant, one query,
-//! and unlimited pools, the engine reproduces `execute_query` exactly
-//! (same RNG stream, same event order — see `rust/tests/fleet.rs`).
-//!
-//! `chain_mode` queries execute strictly sequentially on the virtual clock
-//! without occupying shared pools, mirroring the single-query ablation
-//! semantics (Table 3's HybridFlow-Chain); their admission slot is still
-//! held until the chain's virtual makespan, so admission limits see them
-//! as in-service. Pool-utilization metrics read 0 for chain fleets.
+//! The integration tests below pin the kernel's fleet-mode semantics:
+//! determinism, contention, admission limits, budget caps, per-tenant
+//! policy overrides, hedged cancellation/refunds, and the result cache.
 
-use super::events::EventKey;
-use super::{apply_cancel, run_group, CancelTicket, Dispatch, FleetRouteCtx, GroupCtx};
-use super::{QueryExecState, QueryExecution, RouterState};
-use crate::budget::{GlobalBudget, TenantPool};
-use crate::cache::CacheStats;
-use crate::embed::FeatureContext;
-use crate::engine::Backend;
-use crate::pipeline::HybridFlowPipeline;
-use crate::planner::synthetic::SyntheticPlanner;
-use crate::planner::Planner;
-use crate::router::RoutePolicy;
-use crate::util::rng::Rng;
-use crate::util::stats::Summary;
-use crate::workload::{sample_latents, Query};
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
-
-/// Fleet-level knobs (per-query scheduling semantics come from the
-/// pipeline's [`ScheduleConfig`](super::ScheduleConfig)).
-#[derive(Debug, Clone)]
-pub struct FleetConfig {
-    /// Maximum queries in service at once; 0 = unlimited. Arrivals beyond
-    /// the limit queue FIFO and are admitted as earlier queries complete.
-    pub admission_limit: usize,
-    /// Fleet-wide cloud-dollar ceiling shared by every tenant pool.
-    pub global_k_cap: f64,
-    /// Record the human-readable event trace (golden-trace tests, debug).
-    pub record_trace: bool,
-    /// Per-tenant routing-policy overrides, indexed like the tenant list.
-    /// `None` (or an index beyond the vector) falls back to the pipeline's
-    /// default policy, so an empty vector reproduces a homogeneous fleet.
-    pub tenant_policies: Vec<Option<RoutePolicy>>,
-}
-
-impl Default for FleetConfig {
-    fn default() -> Self {
-        FleetConfig {
-            admission_limit: 0,
-            global_k_cap: f64::INFINITY,
-            record_trace: true,
-            tenant_policies: Vec::new(),
-        }
-    }
-}
-
-/// One query arriving at the fleet.
-#[derive(Debug, Clone)]
-pub struct FleetArrival {
-    pub time: f64,
-    /// Index into the tenant pool list.
-    pub tenant: usize,
-    pub query: Query,
-}
-
-/// Per-query outcome with fleet timing attached.
-#[derive(Debug, Clone)]
-pub struct FleetQueryResult {
-    pub tenant: usize,
-    pub query_id: u64,
-    pub arrival: f64,
-    pub admitted: f64,
-    pub plan_done: f64,
-    pub completed_at: f64,
-    /// Decisions overridden to edge because a dollar pool was exhausted.
-    pub forced_edge: usize,
-    /// `latency` is the sojourn time (arrival to completion, planning and
-    /// admission queueing included); for an uncontended single query this
-    /// equals `execute_query`'s latency exactly.
-    pub exec: QueryExecution,
-}
-
-/// Aggregate outcome of one fleet run.
-#[derive(Debug, Clone)]
-pub struct FleetReport {
-    /// Per-query results in job (arrival-list) order.
-    pub results: Vec<FleetQueryResult>,
-    /// Final tenant pools (aggregated budget state, spend vs cap).
-    pub tenants: Vec<TenantPool>,
-    pub global: GlobalBudget,
-    /// Virtual time of the last completion.
-    pub horizon: f64,
-    /// Queries per virtual second over the horizon.
-    pub throughput_qps: f64,
-    /// Admission-queue delay per query (seconds).
-    pub admission_delay: Summary,
-    /// Per-subtask wait between routing decision and worker start.
-    pub queue_wait: Summary,
-    /// Arrival-to-completion time per query.
-    pub sojourn: Summary,
-    pub offload_rate: f64,
-    pub total_api_cost: f64,
-    pub forced_edge: usize,
-    /// Hedged replicas cancelled (losing side of speculative dispatch).
-    pub hedge_cancelled: usize,
-    /// Dollars refunded for the unconsumed share of cancelled replicas.
-    pub hedge_refund: f64,
-    /// Cross-query result-cache counters for this run (`None` when no
-    /// enabled cache was attached): hit rate, cloud tokens saved, budget
-    /// avoided, evictions. The cache is reset at run start, so these are
-    /// exactly this run's numbers.
-    pub cache: Option<CacheStats>,
-    pub edge_utilization: f64,
-    pub cloud_utilization: f64,
-    /// True unless the event heap ever popped times out of order.
-    pub clock_monotone: bool,
-    /// Human-readable event log (empty unless `record_trace`).
-    pub trace: Vec<String>,
-}
-
-impl FleetReport {
-    /// The serialized event trace (golden-file format): one event per
-    /// line, newline-terminated.
-    pub fn trace_text(&self) -> String {
-        let mut out = self.trace.join("\n");
-        out.push('\n');
-        out
-    }
-
-    pub fn render(&self) -> String {
-        let mut out = format!(
-            "fleet: {} queries over {:.1}s virtual ({:.3} q/s)\n\
-             admission delay: mean {:.2}s  p99 {:.2}s\n\
-             subtask queue wait: mean {:.2}s  p99 {:.2}s\n\
-             sojourn: p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  max {:.2}s\n\
-             offload {:.1}%  C_API ${:.4}  forced-to-edge {}\n\
-             utilization: edge {:.1}%  cloud {:.1}%",
-            self.results.len(),
-            self.horizon,
-            self.throughput_qps,
-            self.admission_delay.mean,
-            self.admission_delay.p99,
-            self.queue_wait.mean,
-            self.queue_wait.p99,
-            self.sojourn.p50,
-            self.sojourn.p95,
-            self.sojourn.p99,
-            self.sojourn.max,
-            self.offload_rate * 100.0,
-            self.total_api_cost,
-            self.forced_edge,
-            self.edge_utilization * 100.0,
-            self.cloud_utilization * 100.0,
-        );
-        if self.hedge_cancelled > 0 {
-            out.push_str(&format!(
-                "\nhedge: {} losers cancelled, ${:.4} refunded",
-                self.hedge_cancelled, self.hedge_refund
-            ));
-        }
-        if let Some(c) = &self.cache {
-            out.push('\n');
-            out.push_str(&c.render_line());
-        }
-        out
-    }
-}
-
-// Event-kind priorities: at equal times, control events (arrival/planner/
-// cancel) run first, then ready-frontier markers, then subtask finishes —
-// the marker-before-finish order reproduces the single-query scheduler's
-// "ready first" tie-break, and cancel-before-marker makes freed workers
-// and refunds visible to decisions at the same instant (exactly like the
-// single-query scheduler's pre-decision cancel flush).
-const PRI_CTRL: u8 = 0;
-const PRI_MARKER: u8 = 1;
-const PRI_DONE: u8 = 2;
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum EvKind {
-    Arrival,
-    PlanDone,
-    Marker,
-    Done,
-    /// Cancellation of a hedged dispatch's losing replica.
-    Cancel,
-    /// Completion of a chain-mode query: its subtasks executed
-    /// synchronously at PlanDone, but the service slot is held until the
-    /// chain's virtual makespan.
-    ChainDone,
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct Ev {
-    key: EventKey,
-    kind: EvKind,
-}
-
-impl Eq for Ev {}
-
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Single shared ordering rule: scheduler::events::EventKey.
-        self.key.cmp(&other.key)
-    }
-}
-
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-/// Scheduling state built at admission (planning done lazily so queued
-/// queries consume planner latency when they actually start).
-struct PlanState {
-    dag: crate::dag::TaskDag,
-    latents: Vec<crate::workload::SubtaskLatent>,
-    fctx: FeatureContext,
-    depths: Vec<usize>,
-    max_depth: usize,
-    children: Vec<Vec<usize>>,
-    indeg: Vec<usize>,
-    done: Vec<bool>,
-    ready: BinaryHeap<EventKey>,
-    st: QueryExecState,
-    /// Outstanding hedge-cancel tickets, indexed by node.
-    cancel_tickets: Vec<Option<CancelTicket>>,
-    completed: usize,
-}
-
-struct QueryRun {
-    tenant: usize,
-    query: Query,
-    arrival: f64,
-    admitted: f64,
-    plan_done: f64,
-    rng: Rng,
-    router: RouterState,
-    forced_edge: usize,
-    plan: Option<PlanState>,
-    outcome: Option<QueryExecution>,
-    completed_at: f64,
-}
-
-struct RunStats {
-    admission_delays: Vec<f64>,
-    queue_waits: Vec<f64>,
-    sojourns: Vec<f64>,
-    hedge_cancelled: usize,
-    hedge_refund: f64,
-    /// Worker-busy seconds consumed by hedged losing replicas before their
-    /// cancellation, per side (edge, cloud) — counted into utilization so
-    /// the report reflects real pool occupancy, not just winner events.
-    hedge_loser_busy: [f64; 2],
-    clock_monotone: bool,
-}
-
-#[allow(clippy::too_many_arguments)]
-fn admit_query(
-    qi: usize,
-    now: f64,
-    q: &mut QueryRun,
-    planner: &SyntheticPlanner,
-    executor: &dyn Backend,
-    n_max: usize,
-    heap: &mut BinaryHeap<Ev>,
-    stats: &mut RunStats,
-    trace: &mut Vec<String>,
-    record_trace: bool,
-) {
-    q.admitted = now;
-    stats.admission_delays.push(now - q.arrival);
-    // Same call order as `HybridFlowPipeline::run_query_traced`: plan, then
-    // latents, both on the query's own RNG stream.
-    let plan = planner.plan(&q.query, n_max, &mut q.rng);
-    let latents = sample_latents(&plan.dag, &q.query, executor.sp(), &mut q.rng);
-    let n = plan.dag.len();
-    let fctx = FeatureContext::new(&plan.dag, &q.query);
-    let depths = plan.dag.depths().unwrap_or_else(|| vec![0; n]);
-    let max_depth = depths.iter().copied().max().unwrap_or(0).max(1);
-    let children = plan.dag.children();
-    let indeg = plan.dag.in_degrees();
-    q.plan_done = now + plan.planning_latency;
-    q.plan = Some(PlanState {
-        dag: plan.dag,
-        latents,
-        fctx,
-        depths,
-        max_depth,
-        children,
-        indeg,
-        done: vec![false; n],
-        ready: BinaryHeap::new(),
-        st: QueryExecState::new(n),
-        cancel_tickets: (0..n).map(|_| None).collect(),
-        completed: 0,
-    });
-    heap.push(Ev {
-        key: EventKey { time: q.plan_done, pri: PRI_CTRL, q: qi, node: 0 },
-        kind: EvKind::PlanDone,
-    });
-    if record_trace {
-        trace.push(format!(
-            "t={:.6} tenant={} q={} admit wait={:.6}",
-            now,
-            q.tenant,
-            qi,
-            now - q.arrival
-        ));
-    }
-}
-
-fn finalize_query(
-    qi: usize,
-    q: &mut QueryRun,
-    tenant: &mut TenantPool,
-    executor: &dyn Backend,
-    stats: &mut RunStats,
-    trace: &mut Vec<String>,
-    record_trace: bool,
-) {
-    let makespan_abs = {
-        let ps = q.plan.as_mut().expect("finalize before planning");
-        debug_assert!(
-            ps.cancel_tickets.iter().all(Option::is_none),
-            "outstanding hedge cancels at finalize"
-        );
-        let makespan_abs =
-            ps.st.events.iter().map(|e| e.finish).fold(q.plan_done, f64::max);
-        ps.st.budget.advance_latency(makespan_abs - q.plan_done);
-        tenant.state.advance_latency(makespan_abs - q.plan_done);
-        makespan_abs
-    };
-    let final_correct = {
-        let ps = q.plan.as_ref().expect("plan state");
-        executor.final_answer_correct(&ps.latents, &ps.st.correct, &mut q.rng)
-    };
-    let ps = q.plan.take().expect("plan state");
-    let exec = QueryExecution {
-        correct: final_correct,
-        latency: makespan_abs - q.arrival,
-        api_cost: ps.st.api_total,
-        offload_rate: ps.st.budget.offload_rate(),
-        n_subtasks: ps.dag.len(),
-        events: ps.st.events,
-        budget: ps.st.budget,
-    };
-    stats.sojourns.push(makespan_abs - q.arrival);
-    if record_trace {
-        trace.push(format!(
-            "t={:.6} tenant={} q={} complete correct={} latency={:.6} api={:.6} offload={:.6}",
-            makespan_abs, q.tenant, qi, exec.correct, exec.latency, exec.api_cost,
-            exec.offload_rate
-        ));
-    }
-    q.completed_at = makespan_abs;
-    q.outcome = Some(exec);
-}
-
-/// Run a multi-tenant fleet workload against shared resources.
-///
-/// Planner, executor, predictor, routing policy, and per-query scheduling
-/// semantics all come from `pipeline` (so a fleet with one tenant and one
-/// query is exactly `pipeline.run_query_traced` with the job's RNG).
-/// `tenants` are the hierarchical dollar pools (see
-/// [`crate::budget::split_evenly`]); `arrivals` reference tenants by
-/// index. `cfg.tenant_policies` may override the routing policy per
-/// tenant. Router state is per-query (the paper's evaluation protocol);
-/// `persist_router` is ignored in fleet mode.
-pub fn run_fleet(
-    pipeline: &HybridFlowPipeline,
-    cfg: &FleetConfig,
-    tenants: Vec<TenantPool>,
-    arrivals: Vec<FleetArrival>,
-    seed: u64,
-) -> FleetReport {
-    let schedule = pipeline.config.schedule.clone();
-    let n_max = pipeline.config.n_max;
-    let planner = &pipeline.planner;
-    let executor: &dyn Backend = pipeline.executor.as_ref();
-    let predictor = pipeline.predictor.as_ref();
-    let record_trace = cfg.record_trace;
-    let hedge = schedule.hedge_gate();
-    // Every fleet run starts with a cold cache so a fixed (workload, seed)
-    // pair reproduces the same hit/miss/eviction sequence byte-for-byte.
-    let cache = schedule.cache_gate();
-    if let Some(c) = cache {
-        c.reset();
-    }
-
-    let mut tenants = tenants;
-    assert!(!tenants.is_empty(), "fleet needs at least one tenant pool");
-    let mut global = GlobalBudget::new(cfg.global_k_cap);
-
-    // Shared worker pools: next-free virtual time per worker.
-    let mut edge_free: Vec<f64> = vec![0.0; schedule.edge_workers.max(1)];
-    let mut cloud_free: Vec<f64> = vec![0.0; schedule.cloud_workers.max(1)];
-
-    let mut queries: Vec<QueryRun> = arrivals
-        .into_iter()
-        .enumerate()
-        .map(|(i, a)| {
-            assert!(a.tenant < tenants.len(), "arrival references unknown tenant {}", a.tenant);
-            // Seed by job index, not arrival interleaving, so results are
-            // exactly reproducible (same scheme as `server::serve`).
-            let rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97f4A7C15));
-            // Per-tenant policy override (heterogeneous fleets); absent or
-            // None falls back to the pipeline default.
-            let policy = cfg
-                .tenant_policies
-                .get(a.tenant)
-                .and_then(|p| p.clone())
-                .unwrap_or_else(|| pipeline.config.policy.clone());
-            let mut router = RouterState::new(policy);
-            router.begin_query(false);
-            QueryRun {
-                tenant: a.tenant,
-                query: a.query,
-                arrival: a.time,
-                admitted: f64::NAN,
-                plan_done: f64::NAN,
-                rng,
-                router,
-                forced_edge: 0,
-                plan: None,
-                outcome: None,
-                completed_at: f64::NAN,
-            }
-        })
-        .collect();
-
-    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
-    for (i, q) in queries.iter().enumerate() {
-        heap.push(Ev {
-            key: EventKey { time: q.arrival, pri: PRI_CTRL, q: i, node: 0 },
-            kind: EvKind::Arrival,
-        });
-    }
-
-    let mut stats = RunStats {
-        admission_delays: Vec::new(),
-        queue_waits: Vec::new(),
-        sojourns: Vec::new(),
-        hedge_cancelled: 0,
-        hedge_refund: 0.0,
-        hedge_loser_busy: [0.0, 0.0],
-        clock_monotone: true,
-    };
-    let mut trace: Vec<String> = Vec::new();
-    let mut waitq: VecDeque<usize> = VecDeque::new();
-    let mut active = 0usize;
-    let mut dispatched: Vec<Dispatch> = Vec::new();
-    let mut last_time = f64::NEG_INFINITY;
-
-    while let Some(ev) = heap.pop() {
-        if ev.key.time < last_time - 1e-9 {
-            stats.clock_monotone = false;
-            debug_assert!(
-                false,
-                "virtual clock moved backwards: {} < {}",
-                ev.key.time, last_time
-            );
-        }
-        last_time = last_time.max(ev.key.time);
-
-        match ev.kind {
-            EvKind::Arrival => {
-                let qi = ev.key.q;
-                if record_trace {
-                    trace.push(format!(
-                        "t={:.6} tenant={} q={} arrive",
-                        ev.key.time, queries[qi].tenant, qi
-                    ));
-                }
-                if cfg.admission_limit == 0 || active < cfg.admission_limit {
-                    active += 1;
-                    admit_query(
-                        qi,
-                        ev.key.time,
-                        &mut queries[qi],
-                        planner,
-                        executor,
-                        n_max,
-                        &mut heap,
-                        &mut stats,
-                        &mut trace,
-                        record_trace,
-                    );
-                } else {
-                    waitq.push_back(qi);
-                }
-            }
-
-            EvKind::PlanDone => {
-                let qi = ev.key.q;
-                {
-                    let q = &mut queries[qi];
-                    let ti = q.tenant;
-                    let ps = q.plan.as_mut().expect("plan state exists after admission");
-                    if record_trace {
-                        trace.push(format!(
-                            "t={:.6} tenant={} q={} plan nodes={}",
-                            ev.key.time,
-                            ti,
-                            qi,
-                            ps.dag.len()
-                        ));
-                    }
-                    let chain_order =
-                        if schedule.chain_mode { ps.dag.topo_order() } else { None };
-                    if let Some(order) = chain_order {
-                        // Chain ablation: the whole query runs sequentially
-                        // on the virtual clock, bypassing shared pools
-                        // (single-query semantics preserved exactly).
-                        let mut chain_clock = q.plan_done;
-                        for &node in &order {
-                            let now = chain_clock;
-                            let gctx = GroupCtx {
-                                dag: &ps.dag,
-                                latents: &ps.latents,
-                                query: &q.query,
-                                executor,
-                                predictor,
-                                ctx: &ps.fctx,
-                                depths: &ps.depths,
-                                max_depth: ps.max_depth,
-                            };
-                            let mut route = FleetRouteCtx {
-                                tenant: &mut tenants[ti],
-                                tenant_idx: ti,
-                                global: &mut global,
-                                forced_edge: &mut q.forced_edge,
-                            };
-                            dispatched.clear();
-                            run_group(
-                                &gctx,
-                                now,
-                                &[node],
-                                q.plan_done,
-                                &mut ps.st,
-                                &mut q.router,
-                                &mut q.rng,
-                                &mut edge_free,
-                                &mut cloud_free,
-                                Some(&mut chain_clock),
-                                Some(&mut route),
-                                hedge,
-                                cache,
-                                &mut dispatched,
-                            );
-                            // Chain subtasks bypass the pools: zero wait by
-                            // construction (keeps the queue-wait summary
-                            // well-defined for chain fleets).
-                            for _ in &dispatched {
-                                stats.queue_waits.push(0.0);
-                            }
-                            if record_trace {
-                                let tail = ps.st.events.len() - dispatched.len();
-                                for (k, d) in dispatched.iter().enumerate() {
-                                    let e = &ps.st.events[tail + k];
-                                    let side = if e.cached {
-                                        "cache"
-                                    } else if e.cloud {
-                                        "cloud"
-                                    } else {
-                                        "edge"
-                                    };
-                                    trace.push(format!(
-                                        "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}",
-                                        now, ti, qi, d.node, side, d.start, d.finish, 0.0
-                                    ));
-                                }
-                            }
-                        }
-                        for d in ps.done.iter_mut() {
-                            *d = true;
-                        }
-                        ps.completed = ps.dag.len();
-                        // Hold the service slot until the chain's virtual
-                        // makespan; finalization happens at that instant so
-                        // admission limits see the query as in-service.
-                        heap.push(Ev {
-                            key: EventKey {
-                                time: chain_clock,
-                                pri: PRI_DONE,
-                                q: qi,
-                                node: 0,
-                            },
-                            kind: EvKind::ChainDone,
-                        });
-                    } else {
-                        // Dependency-triggered path: seed the ready frontier.
-                        let n = ps.dag.len();
-                        for i in 0..n {
-                            if ps.indeg[i] == 0 {
-                                ps.ready.push(EventKey::ready(q.plan_done, i));
-                                heap.push(Ev {
-                                    key: EventKey {
-                                        time: q.plan_done,
-                                        pri: PRI_MARKER,
-                                        q: qi,
-                                        node: i,
-                                    },
-                                    kind: EvKind::Marker,
-                                });
-                            }
-                        }
-                    }
-                }
-            }
-
-            EvKind::ChainDone => {
-                let qi = ev.key.q;
-                let ti = queries[qi].tenant;
-                finalize_query(
-                    qi,
-                    &mut queries[qi],
-                    &mut tenants[ti],
-                    executor,
-                    &mut stats,
-                    &mut trace,
-                    record_trace,
-                );
-                if let Some(next) = waitq.pop_front() {
-                    admit_query(
-                        next,
-                        ev.key.time,
-                        &mut queries[next],
-                        planner,
-                        executor,
-                        n_max,
-                        &mut heap,
-                        &mut stats,
-                        &mut trace,
-                        record_trace,
-                    );
-                } else {
-                    active -= 1;
-                }
-            }
-
-            EvKind::Cancel => {
-                let qi = ev.key.q;
-                let q = &mut queries[qi];
-                let ti = q.tenant;
-                if let Some(ps) = q.plan.as_mut() {
-                    if let Some(ticket) = ps.cancel_tickets[ev.key.node].take() {
-                        let mut route = FleetRouteCtx {
-                            tenant: &mut tenants[ti],
-                            tenant_idx: ti,
-                            global: &mut global,
-                            forced_edge: &mut q.forced_edge,
-                        };
-                        apply_cancel(
-                            &ticket,
-                            ev.key.time,
-                            &mut ps.st,
-                            &mut edge_free,
-                            &mut cloud_free,
-                            Some(&mut route),
-                        );
-                        stats.hedge_cancelled += 1;
-                        stats.hedge_refund += ticket.refund_k;
-                        // The loser occupied its worker from start until
-                        // the cancel instant (zero if cancelled pre-start).
-                        let release =
-                            ev.key.time.clamp(ticket.start, ticket.reserved_until);
-                        stats.hedge_loser_busy[usize::from(ticket.cloud)] +=
-                            release - ticket.start;
-                        if record_trace {
-                            trace.push(format!(
-                                "t={:.6} tenant={} q={} cancel node={} side={} refund={:.6}",
-                                ev.key.time,
-                                ti,
-                                qi,
-                                ticket.node,
-                                if ticket.cloud { "cloud" } else { "edge" },
-                                ticket.refund_k
-                            ));
-                        }
-                    }
-                }
-            }
-
-            EvKind::Marker => {
-                let qi = ev.key.q;
-                let q = &mut queries[qi];
-                let ti = q.tenant;
-                let ps = match q.plan.as_mut() {
-                    Some(p) => p,
-                    None => continue, // query already finalized
-                };
-                // Stale marker: its ready entry was consumed by an earlier
-                // group at the same instant.
-                let first_time = match ps.ready.peek() {
-                    Some(f) => f.time,
-                    None => continue,
-                };
-                if first_time > ev.key.time + 1e-12 {
-                    continue;
-                }
-                let f0 = ps.ready.pop().unwrap();
-                let mut group = vec![f0.node];
-                if schedule.batch_frontier {
-                    while let Some(peek) = ps.ready.peek() {
-                        if peek.time <= f0.time + 1e-12 {
-                            group.push(ps.ready.pop().unwrap().node);
-                        } else {
-                            break;
-                        }
-                    }
-                }
-                let now = f0.time;
-                let gctx = GroupCtx {
-                    dag: &ps.dag,
-                    latents: &ps.latents,
-                    query: &q.query,
-                    executor,
-                    predictor,
-                    ctx: &ps.fctx,
-                    depths: &ps.depths,
-                    max_depth: ps.max_depth,
-                };
-                let mut route = FleetRouteCtx {
-                    tenant: &mut tenants[ti],
-                    tenant_idx: ti,
-                    global: &mut global,
-                    forced_edge: &mut q.forced_edge,
-                };
-                dispatched.clear();
-                run_group(
-                    &gctx,
-                    now,
-                    &group,
-                    q.plan_done,
-                    &mut ps.st,
-                    &mut q.router,
-                    &mut q.rng,
-                    &mut edge_free,
-                    &mut cloud_free,
-                    None,
-                    Some(&mut route),
-                    hedge,
-                    cache,
-                    &mut dispatched,
-                );
-                for d in &dispatched {
-                    stats.queue_waits.push(d.start - now);
-                    heap.push(Ev {
-                        key: EventKey { time: d.finish, pri: PRI_DONE, q: qi, node: d.node },
-                        kind: EvKind::Done,
-                    });
-                    if let Some(ticket) = &d.cancel {
-                        ps.cancel_tickets[d.node] = Some(ticket.clone());
-                        heap.push(Ev {
-                            key: EventKey {
-                                time: d.finish,
-                                pri: PRI_CTRL,
-                                q: qi,
-                                node: d.node,
-                            },
-                            kind: EvKind::Cancel,
-                        });
-                    }
-                }
-                if record_trace {
-                    let tail = ps.st.events.len() - dispatched.len();
-                    for (k, d) in dispatched.iter().enumerate() {
-                        let e = &ps.st.events[tail + k];
-                        let side = if e.cached {
-                            "cache"
-                        } else if e.cloud {
-                            "cloud"
-                        } else {
-                            "edge"
-                        };
-                        trace.push(format!(
-                            "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}",
-                            now,
-                            ti,
-                            qi,
-                            d.node,
-                            side,
-                            d.start,
-                            d.finish,
-                            d.start - now
-                        ));
-                    }
-                }
-            }
-
-            EvKind::Done => {
-                let qi = ev.key.q;
-                let mut completed_query = false;
-                {
-                    let q = &mut queries[qi];
-                    let ti = q.tenant;
-                    let ps = q.plan.as_mut().expect("plan state exists");
-                    let node = ev.key.node;
-                    if !ps.done[node] {
-                        ps.done[node] = true;
-                        for &c in &ps.children[node] {
-                            ps.indeg[c] -= 1;
-                            if ps.indeg[c] == 0 {
-                                ps.ready.push(EventKey::ready(ev.key.time, c));
-                                heap.push(Ev {
-                                    key: EventKey {
-                                        time: ev.key.time,
-                                        pri: PRI_MARKER,
-                                        q: qi,
-                                        node: c,
-                                    },
-                                    kind: EvKind::Marker,
-                                });
-                            }
-                        }
-                    }
-                    ps.completed += 1;
-                    if record_trace {
-                        trace.push(format!(
-                            "t={:.6} tenant={} q={} done node={}",
-                            ev.key.time, ti, qi, node
-                        ));
-                    }
-                    if ps.completed == ps.dag.len() {
-                        completed_query = true;
-                    }
-                }
-                if completed_query {
-                    let ti = queries[qi].tenant;
-                    finalize_query(
-                        qi,
-                        &mut queries[qi],
-                        &mut tenants[ti],
-                        executor,
-                        &mut stats,
-                        &mut trace,
-                        record_trace,
-                    );
-                    if let Some(next) = waitq.pop_front() {
-                        admit_query(
-                            next,
-                            ev.key.time,
-                            &mut queries[next],
-                            planner,
-                            executor,
-                            n_max,
-                            &mut heap,
-                            &mut stats,
-                            &mut trace,
-                            record_trace,
-                        );
-                    } else {
-                        active -= 1;
-                    }
-                }
-            }
-        }
-    }
-
-    // ---- Report assembly --------------------------------------------------
-    let results: Vec<FleetQueryResult> = queries
-        .into_iter()
-        .enumerate()
-        .map(|(qi, q)| FleetQueryResult {
-            tenant: q.tenant,
-            query_id: q.query.id,
-            arrival: q.arrival,
-            admitted: q.admitted,
-            plan_done: q.plan_done,
-            completed_at: q.completed_at,
-            forced_edge: q.forced_edge,
-            exec: q
-                .outcome
-                .unwrap_or_else(|| panic!("fleet query {qi} never completed (engine invariant)")),
-        })
-        .collect();
-
-    let horizon = results.iter().map(|r| r.completed_at).fold(0.0f64, f64::max);
-    let n_decided: usize = tenants.iter().map(|t| t.state.n_decided).sum();
-    let n_offloaded: usize = tenants.iter().map(|t| t.state.n_offloaded).sum();
-    let forced_edge: usize = results.iter().map(|r| r.forced_edge).sum();
-    // Winner events plus the consumed share of hedged losing replicas.
-    let (mut edge_busy, mut cloud_busy) =
-        (stats.hedge_loser_busy[0], stats.hedge_loser_busy[1]);
-    // Chain-mode queries bypass the shared pools, so their events are not
-    // pool busy time; utilization reads 0 for the chain ablation. Cached
-    // hits run on no worker at all, so they are never busy time either.
-    if !schedule.chain_mode {
-        for r in &results {
-            for e in &r.exec.events {
-                if e.cached {
-                    continue;
-                }
-                if e.cloud {
-                    cloud_busy += e.finish - e.start;
-                } else {
-                    edge_busy += e.finish - e.start;
-                }
-            }
-        }
-    }
-    let span = horizon.max(1e-9);
-    FleetReport {
-        admission_delay: Summary::of_or_zero(&stats.admission_delays),
-        queue_wait: Summary::of_or_zero(&stats.queue_waits),
-        sojourn: Summary::of_or_zero(&stats.sojourns),
-        throughput_qps: results.len() as f64 / span,
-        offload_rate: if n_decided == 0 {
-            0.0
-        } else {
-            n_offloaded as f64 / n_decided as f64
-        },
-        total_api_cost: global.k_spent,
-        forced_edge,
-        hedge_cancelled: stats.hedge_cancelled,
-        hedge_refund: stats.hedge_refund,
-        cache: cache.map(|c| c.stats()),
-        edge_utilization: edge_busy / (span * edge_free.len() as f64),
-        cloud_utilization: cloud_busy / (span * cloud_free.len() as f64),
-        clock_monotone: stats.clock_monotone,
-        horizon,
-        results,
-        tenants,
-        global,
-        trace,
-    }
-}
-
+pub use crate::sim::{run_fleet, FleetArrival, FleetConfig, FleetQueryResult, FleetReport};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::HybridFlowPipeline;
+    use crate::planner::synthetic::SyntheticPlanner;
     use crate::budget::TenantPool;
     use crate::config::simparams::SimParams;
     use crate::models::SimExecutor;

@@ -42,11 +42,13 @@
 //! decomposition latency + DAG makespan under these constraints. Wall-clock
 //! coordinator overhead is measured separately (`server` module + benches).
 //!
-//! Cross-query contention lives in [`fleet`]: the same per-group decision
-//! core ([`run_group`]) drives both this single-query scheduler (private
-//! worker pools, query-local budget) and the fleet simulator (shared
-//! pools, tenant-level budgets, admission queueing). `execute_query` is
-//! therefore exactly the fleet's N=1 special case.
+//! There is exactly **one** event loop in the engine: the unified
+//! [`crate::sim::Kernel`]. This module owns the per-group decision core
+//! ([`run_group`]) the kernel calls at every decision point, and
+//! [`execute_query`] — the paper's per-query semantics — is literally the
+//! kernel with one tenant and one pre-planned arrival under a query-local
+//! budget scope. Fleet mode (shared pools, tenant/global dollar scopes,
+//! admission queueing) is the same kernel via [`crate::sim::run_fleet`].
 
 pub mod events;
 pub mod fleet;
@@ -57,11 +59,10 @@ use crate::dag::TaskDag;
 use crate::embed::{FeatureContext, Features};
 use crate::engine::Backend;
 use crate::router::predictor::UtilityPredictor;
-use crate::router::RouterState;
+use crate::router::{RoutePolicy, RouterState};
 use crate::util::rng::Rng;
 use crate::workload::{Query, SubtaskLatent};
-use events::{EventKey, TraceEvent};
-use std::collections::BinaryHeap;
+use events::TraceEvent;
 use std::sync::Arc;
 
 /// Scheduling configuration.
@@ -247,12 +248,14 @@ pub(crate) fn apply_cancel(
 
 /// Decide and execute one ready group (Algorithm 1's inner loop).
 ///
-/// This is the shared decision core: `execute_query` calls it with
-/// `fleet = None` (routing budget = the query's own `st.budget`, private
-/// worker pools), the fleet simulator with `fleet = Some(..)` (routing
-/// budget = the tenant's aggregated state, shared pools, cap overrides).
-/// The RNG consumption sequence is identical in both modes, which is what
-/// makes the fleet's single-query case reproduce `execute_query` exactly.
+/// This is the shared decision core the unified kernel
+/// ([`crate::sim::Kernel`]) calls at every decision point: in query-local
+/// scope with `fleet = None` (routing budget = the query's own
+/// `st.budget`, the `execute_query` semantics), in fleet scope with
+/// `fleet = Some(..)` (routing budget = the tenant's aggregated state,
+/// shared pools, cap overrides). The RNG consumption sequence is
+/// identical in both modes, which is what makes the kernel's
+/// single-query case reproduce `execute_query` exactly.
 ///
 /// `hedge` is `Some(threshold)` to enable speculative dual dispatch for
 /// edge-routed subtasks with `u_hat > threshold`. Hedged replicas draw
@@ -632,6 +635,14 @@ pub(crate) fn run_group(
 /// packed by [`FeatureContext`]; the router state carries threshold/bandit
 /// dynamics across the query (call `reset_for_query` between queries for
 /// per-query dual state).
+///
+/// This is the unified kernel's N=1 special case: one pre-planned job
+/// arriving at t=0 under a **query-local** budget scope (the router sees
+/// the query's own [`BudgetState`], worker pools are private to the run,
+/// and no tenant/global dollar pool exists to force-edge a decision). The
+/// caller's RNG and router state flow through the kernel and come back
+/// advanced, so call-for-call stream alignment with the pre-unification
+/// scheduler holds (pinned by the single-query bit-identity grid).
 #[allow(clippy::too_many_arguments)]
 pub fn execute_query(
     dag: &TaskDag,
@@ -644,210 +655,43 @@ pub fn execute_query(
     cfg: &ScheduleConfig,
     rng: &mut Rng,
 ) -> QueryExecution {
+    use crate::sim::{CacheSessions, Job, Kernel, KernelSpec, Preplanned};
+
     assert_eq!(dag.len(), latents.len(), "latents must align with dag");
-    let n = dag.len();
-    let ctx = FeatureContext::new(dag, query);
-    let depths = dag.depths().unwrap_or_else(|| vec![0; n]);
-    let max_depth = depths.iter().copied().max().unwrap_or(0).max(1);
-    let children = dag.children();
-
-    let mut st = QueryExecState::new(n);
-    let mut indeg: Vec<usize> = dag.in_degrees();
-    let mut done = vec![false; n];
-
-    // Worker availability.
-    let mut edge_free: Vec<f64> = vec![planning_latency; cfg.edge_workers.max(1)];
-    let mut cloud_free: Vec<f64> = vec![planning_latency; cfg.cloud_workers.max(1)];
-
-    // Ready frontier: (ready_time, node). Processed in time order.
-    let mut ready: BinaryHeap<EventKey> = BinaryHeap::new();
-    let mut pending: BinaryHeap<EventKey> = BinaryHeap::new(); // running nodes
-    for i in 0..n {
-        if indeg[i] == 0 {
-            ready.push(EventKey::ready(planning_latency, i));
-        }
-    }
-
-    // Chain mode: strict sequential order regardless of DAG width.
-    let chain_order = if cfg.chain_mode { dag.topo_order() } else { None };
-    let mut chain_cursor = 0usize;
-    let mut chain_clock = planning_latency;
-
-    let hedge = cfg.hedge_gate();
-    let cache = cfg.cache_gate();
-    if let Some(c) = cache {
-        // Each query is a fresh session on a *restarting* virtual clock:
-        // entries from earlier queries become unconditionally available,
-        // while this query's own inserts stay gated on their finish time.
-        // (The fleet runs one global clock and never bumps the epoch.)
-        c.begin_session();
-    }
-
-    let gctx = GroupCtx {
-        dag,
-        latents,
-        query,
-        executor,
-        predictor,
-        ctx: &ctx,
-        depths: &depths,
-        max_depth,
-    };
-
-    let mut dispatched: Vec<Dispatch> = Vec::new();
-    // Outstanding hedge cancellations: (due time, ticket). Applied before
-    // any decision at or after their due time, so refunds and worker
-    // releases become visible exactly when the fleet's Cancel events would
-    // make them visible.
-    let mut cancels: Vec<(f64, CancelTicket)> = Vec::new();
-    let mut completed = 0usize;
-    while completed < n {
-        // Pick the next decision point: a *group* of nodes ready at the
-        // same instant. With `batch_frontier` the whole group is scored in
-        // one predictor call (one PJRT execute instead of k) — the §Perf
-        // batched-frontier optimization; decisions still apply
-        // sequentially so budget/threshold dynamics are unchanged.
-        let (now, group) = if let Some(order) = &chain_order {
-            // Sequential: next topo node, at the running chain clock.
-            let node = order[chain_cursor];
-            chain_cursor += 1;
-            (chain_clock, vec![node])
-        } else {
-            match ready.pop() {
-                Some(f) => {
-                    let mut group = vec![f.node];
-                    if cfg.batch_frontier {
-                        while let Some(peek) = ready.peek() {
-                            if peek.time <= f.time + 1e-12 {
-                                group.push(ready.pop().unwrap().node);
-                            } else {
-                                break;
-                            }
-                        }
-                    }
-                    (f.time, group)
-                }
-                None => {
-                    // Nothing ready: advance to the next running finish.
-                    let f = pending.pop().expect("deadlock: no ready, no pending");
-                    finish_node(
-                        f.node, f.time, &children, &mut indeg, &mut done, &mut ready,
-                    );
-                    completed += 1;
-                    continue;
-                }
-            }
-        };
-
-        apply_due_cancels(now, &mut cancels, &mut st, &mut edge_free, &mut cloud_free);
-
-        // Decide + execute the group through the shared core (also used by
-        // the fleet simulator; `fleet = None` keeps query-local routing).
-        dispatched.clear();
-        run_group(
-            &gctx,
-            now,
-            &group,
+    let job = Job {
+        tenant: 0,
+        query: query.clone(),
+        arrival: 0.0,
+        rng: rng.clone(),
+        // The kernel owns the router for the duration of the run; a cheap
+        // placeholder keeps the caller's binding valid until hand-back.
+        router: std::mem::replace(router, RouterState::new(RoutePolicy::AllEdge)),
+        preplanned: Some(Preplanned {
+            dag: dag.clone(),
+            latents: latents.to_vec(),
             planning_latency,
-            &mut st,
-            router,
-            rng,
-            &mut edge_free,
-            &mut cloud_free,
-            if cfg.chain_mode { Some(&mut chain_clock) } else { None },
-            None,
-            hedge,
-            cache,
-            &mut dispatched,
-        );
-        for d in &dispatched {
-            if let Some(ticket) = &d.cancel {
-                cancels.push((d.finish, ticket.clone()));
-            }
-            if cfg.chain_mode {
-                done[d.node] = true;
-                completed += 1;
-            } else {
-                pending.push(EventKey::ready(d.finish, d.node));
-            }
-        }
-
-        if !cfg.chain_mode {
-            // Drain any pending nodes that finish before the next ready one
-            // becomes available; their children may unlock.
-            loop {
-                let next_ready = ready.peek().map(|f| f.time);
-                let next_pending = pending.peek().map(|f| f.time);
-                match (next_ready, next_pending) {
-                    (_, None) => break,
-                    (Some(r), Some(p)) if r <= p => break,
-                    (_, Some(_)) => {
-                        let f = pending.pop().unwrap();
-                        finish_node(
-                            f.node, f.time, &children, &mut indeg, &mut done, &mut ready,
-                        );
-                        completed += 1;
-                    }
-                }
-            }
-        }
-    }
-
-    // Flush remaining cancellations (all due at or before the makespan).
-    apply_due_cancels(f64::INFINITY, &mut cancels, &mut st, &mut edge_free, &mut cloud_free);
-
-    let makespan = st.events.iter().map(|e| e.finish).fold(planning_latency, f64::max);
-    st.budget.advance_latency(makespan - planning_latency);
-    let final_correct = executor.final_answer_correct(latents, &st.correct, rng);
-
-    QueryExecution {
-        correct: final_correct,
-        latency: makespan,
-        api_cost: st.api_total,
-        offload_rate: st.budget.offload_rate(),
-        n_subtasks: n,
-        events: st.events,
-        budget: st.budget,
-    }
-}
-
-/// Apply every outstanding cancellation due at or before `now`.
-fn apply_due_cancels(
-    now: f64,
-    cancels: &mut Vec<(f64, CancelTicket)>,
-    st: &mut QueryExecState,
-    edge_free: &mut [f64],
-    cloud_free: &mut [f64],
-) {
-    let mut i = 0;
-    while i < cancels.len() {
-        if cancels[i].0 <= now + 1e-12 {
-            let (t, ticket) = cancels.swap_remove(i);
-            apply_cancel(&ticket, t, st, edge_free, cloud_free, None);
-        } else {
-            i += 1;
-        }
-    }
-}
-
-fn finish_node(
-    node: usize,
-    _time: f64,
-    children: &[Vec<usize>],
-    indeg: &mut [usize],
-    done: &mut [bool],
-    ready: &mut BinaryHeap<EventKey>,
-) {
-    if done[node] {
-        return;
-    }
-    done[node] = true;
-    for &c in &children[node] {
-        indeg[c] -= 1;
-        if indeg[c] == 0 {
-            ready.push(EventKey::ready(_time, c));
-        }
-    }
+        }),
+    };
+    let kernel = Kernel {
+        spec: KernelSpec {
+            planner: None, // pre-planned job: the planner is never consulted
+            executor,
+            predictor,
+            schedule: cfg,
+            n_max: 0, // unused without a planner
+            admission_limit: 0,
+            record_trace: false,
+            query_local: true,
+            global_k_cap: f64::INFINITY,
+            cache_sessions: CacheSessions::EpochPerRun,
+        },
+        tenants: Vec::new(),
+        jobs: vec![job],
+    };
+    let mut run = kernel.run();
+    *router = run.routers.pop().expect("kernel returns the job's router");
+    *rng = run.rngs.pop().expect("kernel returns the job's rng");
+    run.report.results.pop().expect("single job completed").exec
 }
 
 fn argmin(xs: &[f64]) -> usize {

@@ -8,20 +8,26 @@
 //! itself.)
 //!
 //! [`serve_fleet`] is the virtual-clock counterpart: an open-loop
-//! multi-tenant workload driven through the fleet simulator, where shared
-//! worker pools and tenant budgets make cross-query contention visible.
+//! multi-tenant workload driven through the unified simulation kernel,
+//! where shared worker pools and tenant budgets make cross-query
+//! contention visible. Both fleet entrypoints are thin shims over the
+//! declarative scenario layer ([`crate::scenario::WorkloadSpec`] builds
+//! the arrival list) — prefer a [`crate::scenario::ScenarioSpec`] for new
+//! experiments.
 
 pub mod telemetry;
 
 use crate::cache::CacheStats;
 use crate::metrics::QueryOutcome;
 use crate::pipeline::HybridFlowPipeline;
-use crate::scheduler::fleet::{run_fleet, FleetArrival, FleetConfig, FleetReport};
+use crate::report::ReportRenderer;
+use crate::scenario::WorkloadSpec;
+use crate::sim::{run_fleet, FleetConfig, FleetReport};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::trace::{ArrivalProcess, ZipfMix};
-use crate::workload::{generate_queries, Benchmark, Query};
+use crate::workload::{Benchmark, Query};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -51,29 +57,28 @@ pub struct ServeReport {
 
 impl ServeReport {
     pub fn render(&self) -> String {
-        let mut out = format!(
-            "served {} queries in {:.2}s wall ({:.1} q/s)\n\
-             coordinator wall latency: p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms\n\
-             simulated C_time:         mean {:.2}s  p50 {:.2}s  p99 {:.2}s\n\
-             accuracy {:.2}%  total C_API ${:.4}  offload {:.1}%",
-            self.n_queries,
-            self.wall_seconds,
-            self.throughput_qps,
+        let mut r = ReportRenderer::new(format!(
+            "served {} queries in {:.2}s wall ({:.1} q/s)",
+            self.n_queries, self.wall_seconds, self.throughput_qps,
+        ));
+        r.line(format!(
+            "coordinator wall latency: p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms",
             self.wall_latency.p50 * 1e3,
             self.wall_latency.p90 * 1e3,
             self.wall_latency.p99 * 1e3,
-            self.sim_latency.mean,
-            self.sim_latency.p50,
-            self.sim_latency.p99,
+        ));
+        r.line(format!(
+            "simulated C_time:         mean {:.2}s  p50 {:.2}s  p99 {:.2}s",
+            self.sim_latency.mean, self.sim_latency.p50, self.sim_latency.p99,
+        ));
+        r.line(format!(
+            "accuracy {:.2}%  total C_API ${:.4}  offload {:.1}%",
             self.accuracy_pct,
             self.total_api_cost,
             self.mean_offload_rate * 100.0,
-        );
-        if let Some(c) = &self.cache {
-            out.push('\n');
-            out.push_str(&c.render_line());
-        }
-        out
+        ));
+        r.cache(self.cache.as_ref());
+        r.finish()
     }
 }
 
@@ -134,12 +139,15 @@ pub fn serve(
     }
 }
 
-/// Serve an open-loop multi-tenant workload on the fleet simulator.
+/// Serve an open-loop multi-tenant workload on the unified kernel.
 ///
 /// Builds `n` queries from `bench`, assigns tenants round-robin over the
 /// provided pools, samples arrival times from `process`, and runs the
 /// whole thing through [`run_fleet`] under the pipeline's scheduling
-/// semantics. Everything is deterministic in `(bench, n, seed)`.
+/// semantics. Everything is deterministic in `(bench, n, seed)`. This is
+/// a compatibility shim over the declarative workload layer
+/// ([`WorkloadSpec::arrivals`] builds the exact same arrival list a
+/// scenario file would).
 pub fn serve_fleet(
     pipeline: &HybridFlowPipeline,
     cfg: &FleetConfig,
@@ -149,14 +157,8 @@ pub fn serve_fleet(
     process: &ArrivalProcess,
     seed: u64,
 ) -> FleetReport {
-    let n_tenants = tenants.len().max(1);
-    let times = process.sample(n, seed);
-    let arrivals: Vec<FleetArrival> = generate_queries(bench, n, seed)
-        .into_iter()
-        .zip(times)
-        .enumerate()
-        .map(|(i, (query, time))| FleetArrival { time, tenant: i % n_tenants, query })
-        .collect();
+    let workload = WorkloadSpec { benchmark: bench, n, arrival: process.clone(), zipf: None };
+    let arrivals = workload.arrivals(tenants.len(), seed);
     run_fleet(pipeline, cfg, tenants, arrivals, seed)
 }
 
@@ -177,16 +179,13 @@ pub fn serve_fleet_zipf(
     zipf: &ZipfMix,
     seed: u64,
 ) -> FleetReport {
-    let n_tenants = tenants.len().max(1);
-    let times = process.sample(n, seed);
-    let base = generate_queries(bench, n, seed);
-    let arrivals: Vec<FleetArrival> = zipf
-        .apply(&base, seed)
-        .into_iter()
-        .zip(times)
-        .enumerate()
-        .map(|(i, (query, time))| FleetArrival { time, tenant: i % n_tenants, query })
-        .collect();
+    let workload = WorkloadSpec {
+        benchmark: bench,
+        n,
+        arrival: process.clone(),
+        zipf: Some(zipf.clone()),
+    };
+    let arrivals = workload.arrivals(tenants.len(), seed);
     run_fleet(pipeline, cfg, tenants, arrivals, seed)
 }
 
@@ -199,6 +198,7 @@ mod tests {
     use crate::pipeline::PipelineConfig;
     use crate::planner::synthetic::SyntheticPlanner;
     use crate::router::{MirrorPredictor, RoutePolicy};
+    use crate::workload::generate_queries;
 
     fn pipeline() -> Arc<HybridFlowPipeline> {
         let sp = SimParams::default();

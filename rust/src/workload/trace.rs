@@ -16,7 +16,7 @@ use crate::workload::{Benchmark, Query};
 
 /// Open-loop arrival-time generator for fleet workloads. All variants are
 /// deterministic given `(self, n, seed)`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ArrivalProcess {
     /// Poisson arrivals at `rate` queries per virtual second (i.i.d.
     /// exponential inter-arrival gaps).
@@ -81,7 +81,7 @@ impl ArrivalProcess {
 ///
 /// Deterministic in `(input queries, seed)`; `exponent = 0` degenerates
 /// to a uniform draw over the prototype pool.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ZipfMix {
     /// Skew `s` of the popularity law (serving-paper convention: ~0.9-1.2
     /// for production LLM traffic).

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verification: release build + full test suite (which includes the
-# fleet golden-trace and equivalence tests), plus an advisory rustfmt
-# check. Run from the repo root: ./scripts/verify.sh
+# fleet golden-trace, kernel-equivalence, and scenario round-trip tests),
+# example + scenario smoke runs, and an enforced rustfmt check. Run from
+# the repo root: ./scripts/verify.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,6 +21,11 @@ cargo run --release --example fleet_sim -- --n 6 --rate 2.0 --tenants 2
 cargo run --release --example fleet_mixed_policy -- --n 6 --rate 1.0
 cargo run --release --example fleet_cache -- --n 8 --rate 1.0 --distinct 3
 
+echo "== scenario smoke run =="
+# End-to-end: a shipped JSON scenario through the CLI (parse -> build ->
+# kernel -> report). Part of verification.
+cargo run --release -- run --scenario scenarios/fleet_sim.json
+
 echo "== cargo clippy --no-default-features (advisory) =="
 # Lints are reported but do not fail verification (the seed predates
 # clippy enforcement).
@@ -31,13 +37,11 @@ else
     echo "clippy unavailable; skipping lint check"
 fi
 
-echo "== cargo fmt --check (advisory) =="
-# The seed predates rustfmt enforcement, so formatting drift is reported
-# but does not fail verification.
+echo "== cargo fmt --check (enforced) =="
+# Formatting is enforced as of PR 4. If this fails, run `cargo fmt` (or
+# `make fmt`) and commit the result.
 if cargo fmt --version >/dev/null 2>&1; then
-    if ! cargo fmt --check; then
-        echo "WARNING: cargo fmt --check reported drift (advisory only)"
-    fi
+    cargo fmt --check
 else
     echo "rustfmt unavailable; skipping format check"
 fi
