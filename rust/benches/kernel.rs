@@ -1,0 +1,271 @@
+//! Kernel hot-path benchmark: the engine's machine-readable perf
+//! trajectory (`BENCH_kernel.json`).
+//!
+//! Three sections, all emitted into one JSON artifact so this and every
+//! future perf PR is *measured* against a recorded baseline, not
+//! asserted:
+//!
+//! * `pool_microbench` — raw claim/release cost of the O(log W)
+//!   [`WorkerPool`] index vs the retained linear `argmin` reference, per
+//!   pool size. This isolates the dispatch primitive the overhaul
+//!   replaced.
+//! * `worker_sweep` — whole-kernel fleet runs across pool sizes 4 → 1024
+//!   (`ScheduleConfig::linear_pool_reference` re-enables the pre-PR
+//!   linear-scan baseline), reporting events/sec, queries/sec
+//!   and wall time for both modes plus their throughput ratio. Flat
+//!   indexed events/sec across W is the "no linear-in-W term" check.
+//! * `fleet_sweep` — fleet sizes 1k → 10k queries at a fixed pool,
+//!   pinning end-to-end kernel scaling in workload size.
+//!
+//! Scale via env: `BENCH_SCALE` (default 1.0; `scripts/verify.sh` smoke
+//! runs at 0.05), `BENCH_OUT` (default `BENCH_kernel.json`). After
+//! writing, the artifact is re-read and parsed with `util::json` — a
+//! malformed emission fails the bench (exit 1).
+
+use hybridflow::budget::TenantPool;
+use hybridflow::config::simparams::SimParams;
+use hybridflow::models::SimExecutor;
+use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
+use hybridflow::planner::synthetic::SyntheticPlanner;
+use hybridflow::router::{MirrorPredictor, RoutePolicy};
+use hybridflow::scheduler::fleet::{run_fleet, FleetArrival, FleetConfig};
+use hybridflow::scheduler::pool::WorkerPool;
+use hybridflow::scheduler::ScheduleConfig;
+use hybridflow::util::json::Json;
+use hybridflow::workload::{generate_queries, Benchmark};
+use std::hint::black_box;
+use std::time::Instant;
+
+fn scale() -> f64 {
+    std::env::var("BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(1.0)
+}
+
+// ---------------------------------------------------------------------------
+// Section 1: pool claim/release microbenchmark.
+// ---------------------------------------------------------------------------
+
+/// Scripted churn: claims with an advancing clock plus periodic releases,
+/// the same op mix the kernel's dispatch/cancel path issues.
+fn pool_ops(pool: &mut WorkerPool, ops: usize) -> f64 {
+    let mut now = 0.0f64;
+    let mut acc = 0.0f64;
+    let t0 = Instant::now();
+    for i in 0..ops {
+        now += 0.01;
+        let (w, start, finish) = pool.claim(now, 1.0 + (i % 7) as f64 * 0.25);
+        acc += start;
+        if i % 5 == 0 {
+            // Cancel-style release of the just-made reservation's tail.
+            pool.set_free(w, finish - 0.5);
+        }
+    }
+    black_box(acc);
+    t0.elapsed().as_secs_f64()
+}
+
+fn pool_microbench(workers: &[usize], ops: usize) -> Vec<Json> {
+    workers
+        .iter()
+        .map(|&w| {
+            let mut indexed = WorkerPool::new(w);
+            let mut linear = WorkerPool::linear_reference(w);
+            let t_idx = pool_ops(&mut indexed, ops);
+            let t_lin = pool_ops(&mut linear, ops);
+            let ns = |t: f64| t / ops as f64 * 1e9;
+            println!(
+                "pool  W={w:<5} indexed {:>8.1} ns/op   linear {:>8.1} ns/op   speedup {:.2}x",
+                ns(t_idx),
+                ns(t_lin),
+                t_lin / t_idx.max(1e-12),
+            );
+            Json::obj(vec![
+                ("workers", Json::Num(w as f64)),
+                ("ops", Json::Num(ops as f64)),
+                ("indexed_ns_per_op", Json::Num(ns(t_idx))),
+                ("linear_ns_per_op", Json::Num(ns(t_lin))),
+                ("speedup", Json::Num(t_lin / t_idx.max(1e-12))),
+            ])
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Section 2/3: whole-kernel fleet runs.
+// ---------------------------------------------------------------------------
+
+fn pipeline(workers: usize, linear_pools: bool) -> HybridFlowPipeline {
+    let sp = SimParams::default();
+    let mut cfg = PipelineConfig::paper_default(&sp);
+    // A cheap stochastic policy keeps both pools active without router
+    // state dominating the profile: the dispatch path is what we measure.
+    cfg.policy = RoutePolicy::Random(0.5);
+    cfg.schedule = ScheduleConfig {
+        edge_workers: workers,
+        cloud_workers: workers,
+        linear_pool_reference: linear_pools,
+        ..Default::default()
+    };
+    HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        std::sync::Arc::new(MirrorPredictor::synthetic_for_tests()),
+        cfg,
+    )
+}
+
+struct KernelRunStats {
+    wall_s: f64,
+    events: usize,
+    events_per_s: f64,
+    queries_per_s: f64,
+}
+
+impl KernelRunStats {
+    fn to_json(&self, queries: usize) -> Json {
+        Json::obj(vec![
+            ("queries", Json::Num(queries as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("events_per_s", Json::Num(self.events_per_s)),
+            ("queries_per_s", Json::Num(self.queries_per_s)),
+        ])
+    }
+}
+
+/// One kernel run: `n` queries arriving nearly at once onto `workers`-wide
+/// pools, so dispatch contends with a deep frontier (every claim walks a
+/// loaded pool). `linear_pools` selects the retained linear-scan
+/// reference (`ScheduleConfig::linear_pool_reference`) for the baseline
+/// measurement.
+fn run_kernel(workers: usize, n: usize, seed: u64, linear_pools: bool) -> KernelRunStats {
+    let p = pipeline(workers, linear_pools);
+    let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, query)| FleetArrival { time: i as f64 * 0.005, tenant: 0, query })
+        .collect();
+    let cfg = FleetConfig { record_trace: false, ..Default::default() };
+    let tenants = vec![TenantPool::unlimited("bench")];
+    let t0 = Instant::now();
+    let report = run_fleet(&p, &cfg, tenants, arrivals, seed);
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let events: usize = report.results.iter().map(|r| r.exec.events.len()).sum();
+    assert!(report.clock_monotone, "bench run violated clock monotonicity");
+    black_box(report.total_api_cost);
+    KernelRunStats {
+        wall_s,
+        events,
+        events_per_s: events as f64 / wall_s,
+        queries_per_s: n as f64 / wall_s,
+    }
+}
+
+fn main() {
+    let scale = scale();
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernel.json".to_string());
+    let workers = [4usize, 16, 64, 256, 512, 1024];
+    let ops = 100_000usize;
+    let n_worker_cell = ((1500.0 * scale).round() as usize).max(40);
+
+    println!("== kernel bench (scale {scale}) ==");
+    println!("-- pool claim/release microbench ({ops} ops) --");
+    let micro = pool_microbench(&workers, ops);
+
+    println!("-- whole-kernel worker sweep ({n_worker_cell} queries/cell) --");
+    let mut ratio_512 = None;
+    let worker_sweep: Vec<Json> = workers
+        .iter()
+        .map(|&w| {
+            // One fixed seed across the whole sweep: every cell serves the
+            // identical workload, so cross-W throughput differences are
+            // dispatch cost, not query-mix noise (the flatness metric
+            // depends on this).
+            let seed = 1000u64;
+            let indexed = run_kernel(w, n_worker_cell, seed, false);
+            let linear = run_kernel(w, n_worker_cell, seed, true);
+            let ratio = indexed.events_per_s / linear.events_per_s.max(1e-9);
+            if w == 512 {
+                ratio_512 = Some(ratio);
+            }
+            println!(
+                "kernel W={w:<5} indexed {:>10.0} ev/s   linear-baseline {:>10.0} ev/s   ratio {:.2}x",
+                indexed.events_per_s, linear.events_per_s, ratio,
+            );
+            Json::obj(vec![
+                ("workers", Json::Num(w as f64)),
+                ("indexed", indexed.to_json(n_worker_cell)),
+                ("linear_scan_baseline", linear.to_json(n_worker_cell)),
+                ("throughput_ratio", Json::Num(ratio)),
+            ])
+        })
+        .collect();
+
+    println!("-- fleet-size sweep (64-worker pools) --");
+    let fleet_sweep: Vec<Json> = [1000usize, 2500, 5000, 10000]
+        .iter()
+        .map(|&n| {
+            let n_eff = ((n as f64 * scale).round() as usize).max(50);
+            let stats = run_kernel(64, n_eff, 7, false);
+            println!(
+                "fleet n={n_eff:<6} {:>10.0} ev/s   {:>8.1} q/s   wall {:.2}s",
+                stats.events_per_s, stats.queries_per_s, stats.wall_s,
+            );
+            stats.to_json(n_eff)
+        })
+        .collect();
+
+    // Flatness check: the indexed kernel's events/sec from the smallest
+    // to the largest pool (a linear-in-W dispatch term would collapse the
+    // tail of this ratio toward zero).
+    let ev = |cell: &Json| {
+        cell.path(&["indexed", "events_per_s"]).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let flatness = ev(&worker_sweep[worker_sweep.len() - 1]) / ev(&worker_sweep[0]).max(1e-9);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("kernel".into())),
+        ("scale", Json::Num(scale)),
+        ("queries_per_worker_cell", Json::Num(n_worker_cell as f64)),
+        ("pool_microbench", Json::Arr(micro)),
+        ("worker_sweep", Json::Arr(worker_sweep)),
+        ("fleet_sweep", Json::Arr(fleet_sweep)),
+        ("indexed_flatness_1024_vs_4", Json::Num(flatness)),
+    ]);
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    if let Err(e) = std::fs::write(&out_path, &text) {
+        eprintln!("error: writing {out_path}: {e}");
+        std::process::exit(1);
+    }
+
+    // Self-validation: the emitted artifact must re-parse with util::json
+    // and carry every section (verify.sh relies on this check).
+    let reread = match std::fs::read_to_string(&out_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: re-reading {out_path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let parsed = match Json::parse(&reread) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("error: {out_path} does not parse with util::json: {e}");
+            std::process::exit(1);
+        }
+    };
+    for key in ["pool_microbench", "worker_sweep", "fleet_sweep"] {
+        if parsed.get(key).and_then(Json::as_arr).map_or(true, <[Json]>::is_empty) {
+            eprintln!("error: {out_path} is missing section '{key}'");
+            std::process::exit(1);
+        }
+    }
+    println!("{out_path} written and validated with util::json");
+    if let Some(r) = ratio_512 {
+        println!(
+            "512-worker kernel throughput vs pre-PR linear-scan baseline: {r:.2}x \
+             (indexed events/sec flatness 1024-vs-4 workers: {flatness:.2})"
+        );
+    }
+}

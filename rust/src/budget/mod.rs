@@ -12,7 +12,13 @@
 use crate::config::simparams::SimParams;
 
 /// Evolving resource state of one query's execution.
-#[derive(Debug, Clone)]
+///
+/// Plain-old-data (`Copy`): five machine words, no heap state. The
+/// scheduler's decision path takes a [`snapshot`](BudgetState::snapshot)
+/// of this state on every routing decision (the bandit's delayed feedback
+/// needs the budget as seen at decision time), so staying `Copy` keeps
+/// that per-decision capture a stack copy.
+#[derive(Debug, Clone, Copy)]
 pub struct BudgetState {
     /// Cumulative normalized cost `sum r_j c_j` (Eq. 8's second input).
     pub c_used: f64,
@@ -71,6 +77,12 @@ impl BudgetState {
     /// Advance the attributed latency frontier (virtual clock time).
     pub fn advance_latency(&mut self, t: f64) {
         self.l_used = self.l_used.max(t);
+    }
+
+    /// Cheap decision-time snapshot: a stack copy of this plain-old-data
+    /// state (the routing hot path captures one per decision).
+    pub fn snapshot(&self) -> BudgetState {
+        *self
     }
 
     pub fn offload_rate(&self) -> f64 {

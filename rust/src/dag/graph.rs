@@ -64,6 +64,40 @@ impl TaskDag {
         out
     }
 
+    /// Children adjacency in CSR (compressed sparse row) form: the flat
+    /// edge layout the kernel's finish-event loop walks. Two allocations
+    /// total (offsets + targets) instead of `children()`'s `n + 1` nested
+    /// vectors, with per-node child lists contiguous in memory. Children
+    /// of each node appear in ascending order — exactly the order
+    /// [`children`](Self::children) yields — so frontier updates are
+    /// order-identical between the two layouts. Out-of-range dep indices
+    /// are skipped, matching `children()`.
+    pub fn children_csr(&self) -> CsrChildren {
+        let n = self.nodes.len();
+        let mut offsets = vec![0u32; n + 1];
+        for node in &self.nodes {
+            for &d in &node.deps {
+                if d < n {
+                    offsets[d + 1] += 1;
+                }
+            }
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut next = offsets.clone();
+        let mut targets = vec![0u32; offsets[n] as usize];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &d in &node.deps {
+                if d < n {
+                    targets[next[d] as usize] = i as u32;
+                    next[d] += 1;
+                }
+            }
+        }
+        CsrChildren { offsets, targets }
+    }
+
     /// Out-degree of every node.
     pub fn out_degrees(&self) -> Vec<usize> {
         self.children().iter().map(Vec::len).collect()
@@ -191,6 +225,31 @@ impl TaskDag {
     }
 }
 
+/// Flattened children adjacency (see [`TaskDag::children_csr`]):
+/// `targets[offsets[i]..offsets[i + 1]]` are node `i`'s children in
+/// ascending order. `u32` indices halve the edge-array footprint — plans
+/// are bounded far below 2^32 nodes (`n_max` is single digits).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrChildren {
+    offsets: Vec<u32>,
+    targets: Vec<u32>,
+}
+
+impl CsrChildren {
+    /// Children of node `i` (ascending node indices).
+    pub fn children_of(&self, i: usize) -> &[u32] {
+        &self.targets[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.targets.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +316,40 @@ mod tests {
         assert_eq!(d.sinks(), vec![3]);
         assert_eq!(d.depths().unwrap(), vec![0, 1, 1, 2]);
         assert_eq!(d.generate_sink(), Some(3));
+    }
+
+    #[test]
+    fn csr_matches_nested_children() {
+        let mut cases = vec![
+            diamond(),
+            TaskDag::chain(&["a".into(), "b".into(), "c".into(), "d".into()]),
+            TaskDag::new(vec![]),
+            // Orphan + fan-in with an out-of-range dep (skipped by both).
+            TaskDag::new(vec![
+                Subtask::new(0, Role::Explain, "r", vec![]),
+                Subtask::new(1, Role::Analyze, "a", vec![0, 9]),
+                Subtask::new(2, Role::Analyze, "b", vec![0]),
+                Subtask::new(3, Role::Generate, "g", vec![2, 1]),
+            ]),
+        ];
+        // Wide fan-out: one root feeding many children.
+        let mut wide = vec![Subtask::new(0, Role::Explain, "r", vec![])];
+        for i in 1..30 {
+            wide.push(Subtask::new(i, Role::Analyze, "x", vec![0]));
+        }
+        cases.push(TaskDag::new(wide));
+
+        for dag in cases {
+            let nested = dag.children();
+            let csr = dag.children_csr();
+            assert_eq!(csr.n_nodes(), dag.len());
+            assert_eq!(csr.n_edges(), nested.iter().map(Vec::len).sum::<usize>());
+            for (i, kids) in nested.iter().enumerate() {
+                let flat: Vec<usize> =
+                    csr.children_of(i).iter().map(|&c| c as usize).collect();
+                assert_eq!(&flat, kids, "node {i}: CSR order must match children()");
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod repair;
 pub mod validate;
 pub mod xml;
 
-pub use graph::TaskDag;
+pub use graph::{CsrChildren, TaskDag};
 pub use node::{Role, Subtask};
 pub use repair::{validate_and_repair, RepairOutcome, R_MAX};
 pub use validate::{validate, ValidationReport, Violation};

@@ -780,14 +780,21 @@ pub fn ablations(ctx: &ExpContext) -> String {
 /// new axis the per-query tables cannot express: the same router, executor,
 /// and workload, but fleet-level `C_used(t)` and shared worker pools.
 ///
-/// Declarative: each swept rate is `scenario::presets::fleet_serve` with
-/// that rate — the same spec shape `scenarios/*.json` files use.
+/// Declarative: the whole rate grid is one
+/// `scenario::presets::fleet_serve_sweep` (each cell is the `fleet_serve`
+/// spec at one swept rate), fanned out across the thread pool by the
+/// sweep engine — per-cell results are byte-identical to running the
+/// cells serially.
 pub fn fleet_serve(ctx: &ExpContext) -> String {
     use crate::scenario::presets;
 
     let bench = Benchmark::Gpqa;
     let n = ((120.0 * ctx.scale).round() as usize).max(20);
     let seed = *ctx.seeds.first().unwrap_or(&11);
+
+    let sweep = presets::fleet_serve_sweep(bench, n, seed)
+        .run(ctx.predictor(), ctx.threads)
+        .expect("static fleet_serve rate grid resolves");
 
     let mut t = Table::new(
         "Fleet serving: contention sweep (GPQA, 3 tenants, 8 edge / 16 cloud workers)",
@@ -796,9 +803,9 @@ pub fn fleet_serve(ctx: &ExpContext) -> String {
             "Sojourn p99 (s)", "Offload (%)", "Forced-edge", "C_API ($)", "Edge util (%)",
         ],
     );
-    for &rate in &[0.1f64, 0.25, 0.5, 1.0, 2.0] {
-        let spec = presets::fleet_serve(bench, n, rate, seed);
-        let report = spec.build(ctx.predictor()).run();
+    for cell in &sweep.cells {
+        let rate = cell.values[0];
+        let report = &cell.report;
         t.row(vec![
             format!("{rate:.2}"),
             format!("{:.2}", report.admission_delay.p99),
@@ -937,7 +944,9 @@ pub fn fleet_cloud_tokens(report: &crate::scheduler::fleet::FleetReport) -> f64 
 ///
 /// The scenario itself is `scenario::presets::fleet_cache` — the same
 /// spec `examples/fleet_cache.rs` runs and `scenarios/fleet_cache.json`
-/// ships.
+/// ships; the capacity grid is `presets::fleet_cache_sweep` (shipped as
+/// `scenarios/fleet_cache_sweep.json`), run across the thread pool by the
+/// sweep engine with per-cell results byte-identical to serial execution.
 pub fn fleet_cache(ctx: &ExpContext) -> String {
     use crate::cache::CachePolicyKind;
     use crate::scenario::presets::{self, FleetCacheKnobs};
@@ -969,10 +978,17 @@ pub fn fleet_cache(ctx: &ExpContext) -> String {
             "Sojourn p50 (s)", "Sojourn p95 (s)", "Acc (%)",
         ],
     );
+    // The capacity grid as one declarative sweep across the thread pool
+    // (capacity 0 = the cache-off baseline cell).
+    let knobs = FleetCacheKnobs { zipf_distinct, ..Default::default() };
+    let sweep = presets::fleet_cache_sweep(bench, n, 0.5, seed, &knobs)
+        .run(ctx.predictor(), ctx.threads)
+        .expect("static fleet_cache capacity grid resolves");
     let mut baseline_tokens = None;
-    for capacity in [0usize, 16, 64, 256] {
-        let report = run(capacity, CachePolicyKind::Lru);
-        let tokens = fleet_cloud_tokens(&report);
+    for cell in &sweep.cells {
+        let capacity = cell.values[0] as usize;
+        let report = &cell.report;
+        let tokens = fleet_cloud_tokens(report);
         if capacity == 0 {
             baseline_tokens = Some(tokens);
         }
@@ -988,7 +1004,7 @@ pub fn fleet_cache(ctx: &ExpContext) -> String {
             format!("{:.4}", report.total_api_cost),
             format!("{:.2}", report.sojourn.p50),
             format!("{:.2}", report.sojourn.p95),
-            format!("{:.2}", acc(&report)),
+            format!("{:.2}", acc(report)),
         ]);
     }
 

@@ -74,7 +74,7 @@ pub mod prelude {
     pub use crate::models::{ModelKind, ModelProfile};
     pub use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
     pub use crate::router::policy::RoutePolicy;
-    pub use crate::scenario::{ScenarioSpec, Session};
+    pub use crate::scenario::{ScenarioSpec, Session, SweepSpec};
     pub use crate::util::json::Json;
     pub use crate::util::rng::Rng;
     pub use crate::workload::{Benchmark, Query};

@@ -22,9 +22,10 @@ use hybridflow::planner::synthetic::SyntheticPlanner;
 use hybridflow::planner::Planner;
 use hybridflow::router::{MirrorPredictor, RoutePolicy, UtilityPredictor};
 use hybridflow::runtime::RouterService;
-use hybridflow::scenario::ScenarioSpec;
+use hybridflow::scenario::{ScenarioSpec, SweepSpec};
 use hybridflow::server::serve;
 use hybridflow::util::cli::{usage, Args};
+use hybridflow::util::json::Json;
 use hybridflow::util::rng::Rng;
 use hybridflow::workload::{generate_queries, profiling, Benchmark};
 use std::path::PathBuf;
@@ -52,9 +53,9 @@ fn allowed_options(cmd: &str) -> Vec<&'static str> {
         "plan" => return vec!["artifacts", "benchmark", "seed"],
         "profile" => return vec!["n", "seed", "out"],
         "check" => return vec!["artifacts"],
-        "exp" => return vec!["artifacts", "id", "quick", "scale", "seeds", "out"],
-        "run" => vec!["n", "scenario"],
-        "serve" => vec!["n", "workers", "trace-in", "trace-out", "metrics"],
+        "exp" => return vec!["artifacts", "id", "quick", "scale", "seeds", "out", "json"],
+        "run" => vec!["n", "scenario", "json"],
+        "serve" => vec!["n", "workers", "trace-in", "trace-out", "metrics", "json"],
         _ => vec![],
     };
     allowed.extend_from_slice(PIPELINE_OPTS);
@@ -248,9 +249,44 @@ fn scenario_predictor(args: &Args) -> anyhow::Result<Arc<dyn UtilityPredictor>> 
     }
 }
 
+/// Write a machine-readable artifact for `--json <path>` (pretty-printed
+/// `util::json`, trailing newline).
+fn write_json(path: &str, j: &Json) -> anyhow::Result<()> {
+    let mut text = j.to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    println!("json written to {path}");
+    Ok(())
+}
+
+/// `run --scenario <file.json>` on a sweep file: resolve the grid, fan it
+/// out across the thread pool, print the tabulated cells.
+fn cmd_run_sweep(args: &Args, path: &str, j: &Json) -> anyhow::Result<()> {
+    let sweep = SweepSpec::from_json(j)?;
+    let n_cells: usize = sweep.axes.iter().map(|a| a.values.len()).product();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    println!(
+        "sweep '{}' from {path}: {} cells over {} axis(es), {} threads",
+        sweep.name,
+        n_cells,
+        sweep.axes.len(),
+        threads,
+    );
+    let report = sweep.run(scenario_predictor(args)?, threads)?;
+    println!("{}", report.table().render());
+    if let Some(out) = args.get("json") {
+        write_json(out, &report.to_json())?;
+    }
+    Ok(())
+}
+
 /// `run --scenario <file.json>`: execute a declarative fleet scenario.
 fn cmd_run_scenario(args: &Args, path: &str) -> anyhow::Result<()> {
-    let spec = ScenarioSpec::from_file(std::path::Path::new(path))?;
+    let parsed = Json::parse_file(std::path::Path::new(path))?;
+    if SweepSpec::is_sweep_json(&parsed) {
+        return cmd_run_sweep(args, path, &parsed);
+    }
+    let spec = ScenarioSpec::from_json(&parsed)?;
     println!(
         "scenario '{}' from {path}: {} x {} queries, {} tenants, seed {}",
         spec.name,
@@ -262,6 +298,9 @@ fn cmd_run_scenario(args: &Args, path: &str) -> anyhow::Result<()> {
     let session = spec.build(scenario_predictor(args)?);
     let report = session.run();
     println!("{}", report.render());
+    if let Some(out) = args.get("json") {
+        write_json(out, &report.to_json())?;
+    }
     for t in &report.tenants {
         println!(
             "  tenant {:<12} decided {:>4}  offload {:>5.1}%  spend ${:.4} (cap {})",
@@ -286,6 +325,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let pipeline = build_pipeline(args)?;
     let mut rng = Rng::new(seed);
     let mut correct = 0usize;
+    let mut rows: Vec<Json> = Vec::new();
     for q in generate_queries(bench, n, seed) {
         let out = pipeline.run_query(&q, &mut rng);
         correct += usize::from(out.correct);
@@ -299,12 +339,35 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             out.api_cost,
             if out.correct { "CORRECT" } else { "wrong" }
         );
+        if args.get("json").is_some() {
+            rows.push(Json::obj(vec![
+                ("id", Json::Num(q.id as f64)),
+                ("correct", Json::Bool(out.correct)),
+                ("latency", Json::Num(out.latency)),
+                ("api_cost", Json::Num(out.api_cost)),
+                ("offload_rate", Json::Num(out.offload_rate)),
+                ("n_subtasks", Json::Num(out.n_subtasks as f64)),
+            ]));
+        }
     }
     println!("\naccuracy: {}/{} = {:.1}%", correct, n, correct as f64 / n as f64 * 100.0);
     // The cache persists across the whole run loop (that is the point:
     // cross-query reuse), so these are session totals.
     if let Some(c) = pipeline.config.schedule.cache.as_deref() {
         println!("{}", c.render_stats());
+    }
+    if let Some(out) = args.get("json") {
+        write_json(
+            out,
+            &Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                (
+                    "accuracy_pct",
+                    Json::Num(correct as f64 / n.max(1) as f64 * 100.0),
+                ),
+                ("queries", Json::Arr(rows)),
+            ]),
+        )?;
     }
     Ok(())
 }
@@ -336,6 +399,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     let report = serve(Arc::clone(&pipeline), queries.clone(), workers, seed);
     println!("{}", report.render());
+    if let Some(out) = args.get("json") {
+        write_json(out, &report.to_json())?;
+    }
 
     // Optional trace recording (re-runs deterministically per query id).
     if let Some(path) = args.get("trace-out") {
@@ -412,6 +478,22 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("out") {
         std::fs::write(path, &out)?;
     }
+    if let Some(path) = args.get("json") {
+        // Experiments render text tables; the JSON wrapper carries the
+        // rendered artifact with its id so downstream tooling can archive
+        // runs uniformly with `run`/`serve` reports.
+        write_json(
+            path,
+            &Json::obj(vec![
+                ("id", Json::Str(id.clone())),
+                ("scale", Json::Num(ctx.scale)),
+                ("seeds", Json::from_f64_slice(
+                    &ctx.seeds.iter().map(|&s| s as f64).collect::<Vec<_>>(),
+                )),
+                ("rendered", Json::Str(out)),
+            ]),
+        )?;
+    }
     Ok(())
 }
 
@@ -476,6 +558,27 @@ mod tests {
         // Predictor-selection options compose with a scenario file.
         let a = parse("hybridflow run --scenario s.json --artifacts ./artifacts --pjrt");
         assert!(validate_command_args("run", &a).is_ok());
+    }
+
+    #[test]
+    fn json_out_is_accepted_everywhere_it_is_documented() {
+        // `--json <path>` dumps the machine-readable report; it composes
+        // with a scenario file (it describes the *output*, not the run,
+        // so it is not a SCENARIO_CONFLICTS member).
+        for cmd_line in [
+            "hybridflow run --n 5 --json out.json",
+            "hybridflow run --scenario scenarios/fleet_sim.json --json out.json",
+            "hybridflow run --scenario scenarios/fleet_cache_sweep.json --json out.json",
+            "hybridflow serve --n 10 --json out.json",
+            "hybridflow exp --id fleet_serve --json out.json",
+        ] {
+            let a = parse(cmd_line);
+            let cmd = cmd_line.split_whitespace().nth(1).unwrap();
+            assert!(validate_command_args(cmd, &a).is_ok(), "{cmd_line}");
+        }
+        // Commands that produce no report reject it like any unknown flag.
+        let a = parse("hybridflow plan --json out.json");
+        assert!(validate_command_args("plan", &a).is_err());
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::planner::synthetic::SyntheticPlanner;
 use crate::planner::Planner;
 use crate::router::predictor::UtilityPredictor;
 use crate::router::{MirrorPredictor, RoutePolicy, RouterState};
-use crate::scheduler::{execute_query, QueryExecution, ScheduleConfig};
+use crate::scheduler::{execute_query_arc, QueryExecution, ScheduleConfig};
 use crate::util::rng::Rng;
 use crate::workload::{sample_latents, Query};
 use std::path::Path;
@@ -96,10 +96,13 @@ impl HybridFlowPipeline {
             RouterState::new(self.config.policy.clone())
         };
         router.begin_query(self.config.persist_router);
-        let exec = execute_query(
-            &plan.dag,
-            &latents,
-            query,
+        // Zero-copy hand-off: the freshly planned DAG and latents move
+        // into the kernel job behind Arcs — no subtask text is cloned on
+        // the per-query hot path (Query itself is plain-old-data).
+        let exec = execute_query_arc(
+            Arc::new(plan.dag),
+            latents,
+            Arc::new(query.clone()),
             self.executor.as_ref(),
             self.predictor.as_ref(),
             &mut router,

@@ -9,6 +9,7 @@
 //! mode-specific lines, then appends the shared hedge/cache sections.
 
 use crate::cache::CacheStats;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Line-oriented report builder with the shared sections every engine
@@ -64,6 +65,45 @@ pub fn quantiles_s(label: &str, s: &Summary) -> String {
         "{label}: p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  max {:.2}s",
         s.p50, s.p95, s.p99, s.max
     )
+}
+
+// ---------------------------------------------------------------------------
+// Machine-readable report sections (util::json) — the shared vocabulary
+// every engine report's `to_json` composes (ROADMAP's "JSON-out of Report
+// for plotting"). NaN quantiles of empty summaries serialize as `null`
+// (the writer's convention for non-finite numbers).
+// ---------------------------------------------------------------------------
+
+/// A latency [`Summary`] as a JSON object (count, mean/std, min/max,
+/// p50/p90/p95/p99).
+pub fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("n", Json::Num(s.n as f64)),
+        ("mean", Json::Num(s.mean)),
+        ("std", Json::Num(s.std)),
+        ("min", Json::Num(s.min)),
+        ("max", Json::Num(s.max)),
+        ("p50", Json::Num(s.p50)),
+        ("p90", Json::Num(s.p90)),
+        ("p95", Json::Num(s.p95)),
+        ("p99", Json::Num(s.p99)),
+    ])
+}
+
+/// Result-cache counters as a JSON object (the same numbers
+/// [`CacheStats::render_line`] prints).
+pub fn cache_stats_json(c: &CacheStats) -> Json {
+    Json::obj(vec![
+        ("lookups", Json::Num(c.lookups as f64)),
+        ("hits", Json::Num(c.hits as f64)),
+        ("hit_rate", Json::Num(c.hit_rate())),
+        ("shared_hits", Json::Num(c.shared_hits as f64)),
+        ("insertions", Json::Num(c.insertions as f64)),
+        ("evictions", Json::Num(c.evictions as f64)),
+        ("expirations", Json::Num(c.expirations as f64)),
+        ("tokens_saved", Json::Num(c.tokens_saved)),
+        ("dollars_saved", Json::Num(c.dollars_saved)),
+    ])
 }
 
 #[cfg(test)]

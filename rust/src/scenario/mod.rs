@@ -30,6 +30,9 @@
 //! fixpoint — pinned for every shipped spec by `rust/tests/scenario.rs`.
 
 pub mod presets;
+pub mod sweep;
+
+pub use sweep::{SweepAxis, SweepCellResult, SweepField, SweepReport, SweepSpec};
 
 use crate::budget::TenantPool;
 use crate::cache::{CachePolicyKind, SubtaskCache};

@@ -8,7 +8,8 @@
 //! exact sessions they build).
 
 use super::{
-    CacheSpec, EngineSpec, PolicySpec, ScenarioSpec, TenantSpec, TopologySpec, WorkloadSpec,
+    CacheSpec, EngineSpec, PolicySpec, ScenarioSpec, SweepAxis, SweepField, SweepSpec,
+    TenantSpec, TopologySpec, WorkloadSpec,
 };
 use crate::cache::CachePolicyKind;
 use crate::workload::trace::{ArrivalProcess, ZipfMix};
@@ -242,6 +243,43 @@ pub fn fleet_cache(
     }
 }
 
+/// The `fleet_serve` contention grid as a declarative sweep: the
+/// [`fleet_serve`] scenario with the Poisson arrival rate swept from idle
+/// to saturated — the exact grid the `fleet_serve` experiment tabulates
+/// (each cell is `fleet_serve(bench, n, rate, seed)` for one swept rate).
+pub fn fleet_serve_sweep(bench: Benchmark, n: usize, seed: u64) -> SweepSpec {
+    SweepSpec {
+        name: "fleet_serve_sweep".into(),
+        base: fleet_serve(bench, n, 0.5, seed),
+        axes: vec![SweepAxis {
+            field: SweepField::ArrivalRate,
+            values: vec![0.1, 0.25, 0.5, 1.0, 2.0],
+        }],
+    }
+}
+
+/// The `fleet_cache` capacity grid as a declarative sweep: the cached-Zipf
+/// fleet of [`fleet_cache`] with the result-cache capacity swept from off
+/// (0 — the baseline cell) through the working set. Shipped as
+/// `scenarios/fleet_cache_sweep.json`; the `fleet_cache` experiment runs
+/// this grid across the thread pool.
+pub fn fleet_cache_sweep(
+    bench: Benchmark,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    knobs: &FleetCacheKnobs,
+) -> SweepSpec {
+    SweepSpec {
+        name: "fleet_cache_sweep".into(),
+        base: fleet_cache(bench, n, rate, seed, knobs),
+        axes: vec![SweepAxis {
+            field: SweepField::CacheCapacity,
+            values: vec![0.0, 16.0, 64.0, 256.0],
+        }],
+    }
+}
+
 /// The golden-trace fleet (`rust/tests/golden/fleet_trace.txt`) as a
 /// scenario: 12 GPQA queries, periodic 1.5s arrivals, three tenants with
 /// the pinned dollar caps, 4 edge / 8 cloud workers, seed 1234. Running
@@ -289,6 +327,20 @@ mod tests {
         for spec in specs {
             let back = ScenarioSpec::parse(&spec.render()).expect("preset parses");
             assert_eq!(back, spec, "{} round trip", spec.name);
+        }
+    }
+
+    #[test]
+    fn sweep_presets_roundtrip_through_json() {
+        let sweeps = [
+            fleet_serve_sweep(Benchmark::Gpqa, 120, 11),
+            fleet_cache_sweep(Benchmark::Gpqa, 120, 0.5, 11, &FleetCacheKnobs::default()),
+        ];
+        for sweep in sweeps {
+            let back = SweepSpec::parse(&sweep.render()).expect("sweep preset parses");
+            assert_eq!(back, sweep, "{} round trip", sweep.name);
+            // Every cell resolves to a valid scenario.
+            assert!(!sweep.cells().unwrap().is_empty());
         }
     }
 }

@@ -1,0 +1,587 @@
+//! Declarative scenario sweeps: vary one or more [`ScenarioSpec`] fields
+//! across value lists, fan the resulting session grid out over a
+//! [`ThreadPool`], and tabulate the per-cell reports.
+//!
+//! This is the ROADMAP's `sweep` construct: experiments like
+//! `fleet_serve`'s arrival-rate sweep and `fleet_cache`'s capacity sweep
+//! used to run every grid cell serially inside hand-written experiment
+//! code; a [`SweepSpec`] expresses the same grid as data (JSON-round-trip
+//! like the scenario layer itself) and runs it in parallel.
+//!
+//! Determinism contract: every cell is an independent, fully-specified
+//! [`ScenarioSpec`] (the seed is part of the spec, each session builds its
+//! own cache, and tenant pools are cloned per run), so parallel execution
+//! is **byte-identical** to running the same cells serially — thread
+//! count and interleaving cannot leak into any cell's result. Pinned by
+//! `rust/tests/scenario.rs`.
+//!
+//! JSON form (canonical render: sorted keys, pretty-printed, trailing
+//! newline — same contract as [`ScenarioSpec::render`]):
+//!
+//! ```json
+//! {
+//!   "base": { ...scenario spec... },
+//!   "name": "fleet_cache_sweep",
+//!   "sweep": [ { "field": "cache_capacity", "values": [0, 16, 64, 256] } ]
+//! }
+//! ```
+//!
+//! A file with `base` + `sweep` keys is a sweep; the CLI's
+//! `run --scenario` auto-detects it (see [`SweepSpec::is_sweep_json`]).
+
+use super::{CacheSpec, Report, ScenarioSpec};
+use crate::bench::Table;
+use crate::cache::CachePolicyKind;
+use crate::router::UtilityPredictor;
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+use crate::workload::trace::ArrivalProcess;
+use std::sync::Arc;
+
+/// Guard against accidental grid explosions (axes multiply).
+const MAX_CELLS: usize = 4096;
+
+/// A sweepable scalar field of [`ScenarioSpec`]. The string forms are the
+/// JSON `field` names (parse ⇄ render fixpoint, like [`super::PolicySpec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepField {
+    /// `workload.arrival` as a Poisson process at the swept rate.
+    ArrivalRate,
+    /// `engine.cache.capacity`; 0 removes the cache (cache-off baseline
+    /// cell). A base spec without a cache gets LRU + shared tier.
+    CacheCapacity,
+    EdgeWorkers,
+    CloudWorkers,
+    AdmissionLimit,
+    /// `workload.n` (query count).
+    QueryCount,
+    Seed,
+    HedgeThreshold,
+    /// `workload.zipf.exponent` (requires a Zipf mix in the base spec).
+    ZipfExponent,
+}
+
+impl SweepField {
+    pub const ALL: [SweepField; 9] = [
+        SweepField::ArrivalRate,
+        SweepField::CacheCapacity,
+        SweepField::EdgeWorkers,
+        SweepField::CloudWorkers,
+        SweepField::AdmissionLimit,
+        SweepField::QueryCount,
+        SweepField::Seed,
+        SweepField::HedgeThreshold,
+        SweepField::ZipfExponent,
+    ];
+
+    pub fn render(&self) -> &'static str {
+        match self {
+            SweepField::ArrivalRate => "arrival_rate",
+            SweepField::CacheCapacity => "cache_capacity",
+            SweepField::EdgeWorkers => "edge_workers",
+            SweepField::CloudWorkers => "cloud_workers",
+            SweepField::AdmissionLimit => "admission_limit",
+            SweepField::QueryCount => "n",
+            SweepField::Seed => "seed",
+            SweepField::HedgeThreshold => "hedge_threshold",
+            SweepField::ZipfExponent => "zipf_exponent",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SweepField> {
+        let lower = s.trim().to_ascii_lowercase();
+        SweepField::ALL.iter().copied().find(|f| f.render() == lower)
+    }
+
+    /// Non-negative integer value check shared by the count-like fields.
+    fn as_count(self, v: f64) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            v >= 0.0 && v.fract() == 0.0,
+            "sweep field '{}' needs a non-negative integer, got {v}",
+            self.render()
+        );
+        Ok(v as usize)
+    }
+
+    /// Apply one swept value to a spec.
+    pub fn apply(&self, spec: &mut ScenarioSpec, v: f64) -> anyhow::Result<()> {
+        match self {
+            SweepField::ArrivalRate => {
+                anyhow::ensure!(v > 0.0 && v.is_finite(), "arrival_rate must be positive");
+                spec.workload.arrival = ArrivalProcess::Poisson { rate: v };
+            }
+            SweepField::CacheCapacity => {
+                let cap = self.as_count(v)?;
+                if cap == 0 {
+                    spec.engine.cache = None;
+                } else {
+                    let mut c = spec.engine.cache.clone().unwrap_or(CacheSpec {
+                        capacity: cap,
+                        policy: CachePolicyKind::Lru,
+                        shared_tier: true,
+                    });
+                    c.capacity = cap;
+                    spec.engine.cache = Some(c);
+                }
+            }
+            SweepField::EdgeWorkers => spec.topology.edge_workers = self.as_count(v)?,
+            SweepField::CloudWorkers => spec.topology.cloud_workers = self.as_count(v)?,
+            SweepField::AdmissionLimit => spec.topology.admission_limit = self.as_count(v)?,
+            SweepField::QueryCount => spec.workload.n = self.as_count(v)?,
+            SweepField::Seed => spec.seed = self.as_count(v)? as u64,
+            SweepField::HedgeThreshold => {
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "hedge_threshold must be a finite non-negative cutoff"
+                );
+                spec.engine.hedge_threshold = v;
+            }
+            SweepField::ZipfExponent => {
+                anyhow::ensure!(v >= 0.0, "zipf_exponent must be non-negative");
+                let z = spec.workload.zipf.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("zipf_exponent sweep needs a zipf mix in the base spec")
+                })?;
+                z.exponent = v;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One sweep dimension: a field and the values it takes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepAxis {
+    pub field: SweepField,
+    pub values: Vec<f64>,
+}
+
+/// A declarative sweep: a base scenario plus one or more axes. The cell
+/// grid is the axes' cross product, first axis outermost (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub name: String,
+    pub base: ScenarioSpec,
+    pub axes: Vec<SweepAxis>,
+}
+
+/// One resolved grid cell: the axis values (aligned with
+/// [`SweepSpec::axes`]) and the fully-specified per-cell scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepCell {
+    pub values: Vec<f64>,
+    pub spec: ScenarioSpec,
+}
+
+impl SweepSpec {
+    // ------------------------------------------------------------------
+    // JSON (de)serialization — util/json, serde-free.
+    // ------------------------------------------------------------------
+
+    /// Whether a parsed JSON document is a sweep spec (vs a plain
+    /// scenario): both `base` and `sweep` keys present.
+    pub fn is_sweep_json(j: &Json) -> bool {
+        j.get("base").is_some() && j.get("sweep").is_some()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let axes: Vec<Json> = self
+            .axes
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("field", Json::Str(a.field.render().into())),
+                    ("values", Json::from_f64_slice(&a.values)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("base", self.base.to_json()),
+            ("sweep", Json::Arr(axes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SweepSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'name'"))?
+            .to_string();
+        let base = ScenarioSpec::from_json(
+            j.get("base").ok_or_else(|| anyhow::anyhow!("sweep spec missing 'base'"))?,
+        )?;
+        let axes = j
+            .get("sweep")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'sweep' axis list"))?
+            .iter()
+            .map(|a| {
+                let field_name = a
+                    .get("field")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("sweep axis missing 'field'"))?;
+                let field = SweepField::parse(field_name).ok_or_else(|| {
+                    anyhow::anyhow!("unknown sweep field '{field_name}'")
+                })?;
+                let values = a
+                    .get("values")
+                    .and_then(Json::f64_array)
+                    .ok_or_else(|| anyhow::anyhow!("sweep axis missing numeric 'values'"))?;
+                anyhow::ensure!(!values.is_empty(), "sweep axis '{field_name}' has no values");
+                Ok(SweepAxis { field, values })
+            })
+            .collect::<anyhow::Result<Vec<SweepAxis>>>()?;
+        anyhow::ensure!(!axes.is_empty(), "sweep spec needs at least one axis");
+        let spec = SweepSpec { name, base, axes };
+        spec.cells()?; // validate every cell resolves
+        Ok(spec)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<SweepSpec> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("sweep json: {e}"))?;
+        SweepSpec::from_json(&j)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<SweepSpec> {
+        SweepSpec::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Canonical pretty-printed JSON (sorted keys, trailing newline).
+    pub fn render(&self) -> String {
+        let mut s = self.to_json().to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    // ------------------------------------------------------------------
+    // Grid resolution + execution.
+    // ------------------------------------------------------------------
+
+    /// Materialize the cell grid: the cross product of all axes in
+    /// row-major order (first axis outermost), each cell a fully-applied
+    /// copy of the base spec. Per-cell seeds are deterministic because the
+    /// seed is part of the spec (and itself sweepable via the `seed`
+    /// axis).
+    pub fn cells(&self) -> anyhow::Result<Vec<SweepCell>> {
+        anyhow::ensure!(!self.axes.is_empty(), "sweep spec needs at least one axis");
+        for a in &self.axes {
+            anyhow::ensure!(
+                !a.values.is_empty(),
+                "sweep axis '{}' has no values",
+                a.field.render()
+            );
+        }
+        let total: usize = self.axes.iter().map(|a| a.values.len()).product();
+        anyhow::ensure!(
+            total <= MAX_CELLS,
+            "sweep grid has {total} cells (limit {MAX_CELLS})"
+        );
+        let mut cells = Vec::with_capacity(total);
+        let mut idx = vec![0usize; self.axes.len()];
+        loop {
+            let mut spec = self.base.clone();
+            let mut values = Vec::with_capacity(self.axes.len());
+            for (a, &i) in self.axes.iter().zip(&idx) {
+                let v = a.values[i];
+                a.field.apply(&mut spec, v)?;
+                values.push(v);
+            }
+            cells.push(SweepCell { values, spec });
+            // Odometer increment, last axis fastest.
+            let mut k = self.axes.len();
+            loop {
+                if k == 0 {
+                    return Ok(cells);
+                }
+                k -= 1;
+                idx[k] += 1;
+                if idx[k] < self.axes[k].values.len() {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+    }
+
+    /// Run every cell and tabulate. `threads <= 1` runs the grid serially
+    /// on the calling thread; otherwise cells fan out across a
+    /// [`ThreadPool`]. Results are in grid order either way, and each
+    /// cell's report is byte-identical across thread counts (see the
+    /// module docs' determinism contract).
+    pub fn run(
+        &self,
+        predictor: Arc<dyn UtilityPredictor>,
+        threads: usize,
+    ) -> anyhow::Result<SweepReport> {
+        // Materialize the grid once; cell specs move into the jobs (no
+        // re-clone per cell).
+        let (values, specs): (Vec<Vec<f64>>, Vec<ScenarioSpec>) =
+            self.cells()?.into_iter().map(|c| (c.values, c.spec)).unzip();
+        let reports: Vec<Report> = if threads <= 1 {
+            specs
+                .into_iter()
+                .map(|spec| spec.build(Arc::clone(&predictor)).run())
+                .collect()
+        } else {
+            let jobs: Vec<(ScenarioSpec, Arc<dyn UtilityPredictor>)> = specs
+                .into_iter()
+                .map(|spec| (spec, Arc::clone(&predictor)))
+                .collect();
+            ThreadPool::new(threads).map(jobs, |(spec, pred)| spec.build(pred).run())
+        };
+        Ok(SweepReport {
+            name: self.name.clone(),
+            fields: self.axes.iter().map(|a| a.field).collect(),
+            cells: values
+                .into_iter()
+                .zip(reports)
+                .map(|(values, report)| SweepCellResult { values, report })
+                .collect(),
+        })
+    }
+}
+
+/// One executed grid cell: axis values + the kernel's report.
+#[derive(Debug, Clone)]
+pub struct SweepCellResult {
+    pub values: Vec<f64>,
+    pub report: Report,
+}
+
+/// Tabulated outcome of a sweep run.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub name: String,
+    /// Axis fields, aligned with every cell's `values`.
+    pub fields: Vec<SweepField>,
+    /// Cells in grid order (first axis outermost).
+    pub cells: Vec<SweepCellResult>,
+}
+
+impl SweepReport {
+    /// Whether any cell ran with a result cache attached (adds the
+    /// hit-rate column).
+    fn any_cache(&self) -> bool {
+        self.cells.iter().any(|c| c.report.cache.is_some())
+    }
+
+    /// Render the sweep as a metrics table: one row per cell, axis values
+    /// first, then the headline serving metrics.
+    pub fn table(&self) -> Table {
+        let mut columns: Vec<String> =
+            self.fields.iter().map(|f| f.render().to_string()).collect();
+        let cached = self.any_cache();
+        for m in [
+            "Queries", "Sojourn p50 (s)", "Sojourn p95 (s)", "Sojourn p99 (s)",
+            "Offload (%)", "C_API ($)", "Forced-edge", "Edge util (%)",
+        ] {
+            columns.push(m.into());
+        }
+        if cached {
+            columns.push("Hit rate (%)".into());
+        }
+        let col_refs: Vec<&str> = columns.iter().map(String::as_str).collect();
+        let mut t = Table::new(&format!("sweep: {}", self.name), &col_refs);
+        for cell in &self.cells {
+            let r = &cell.report;
+            let mut row: Vec<String> = cell.values.iter().map(|v| format!("{v}")).collect();
+            row.push(r.results.len().to_string());
+            row.push(format!("{:.2}", r.sojourn.p50));
+            row.push(format!("{:.2}", r.sojourn.p95));
+            row.push(format!("{:.2}", r.sojourn.p99));
+            row.push(format!("{:.1}", r.offload_rate * 100.0));
+            row.push(format!("{:.4}", r.total_api_cost));
+            row.push(r.forced_edge.to_string());
+            row.push(format!("{:.1}", r.edge_utilization * 100.0));
+            if cached {
+                row.push(
+                    r.cache
+                        .as_ref()
+                        .map_or("-".into(), |c| format!("{:.1}", c.hit_rate() * 100.0)),
+                );
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    /// Machine-readable sweep table (`util::json`): axis fields + one
+    /// entry per cell with its values and the full report JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "fields",
+                Json::Arr(
+                    self.fields.iter().map(|f| Json::Str(f.render().into())).collect(),
+                ),
+            ),
+            (
+                "cells",
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("values", Json::from_f64_slice(&c.values)),
+                                ("report", c.report.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::MirrorPredictor;
+    use crate::scenario::{EngineSpec, TenantSpec, TopologySpec, WorkloadSpec};
+    use crate::workload::Benchmark;
+
+    fn base() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "unit".into(),
+            seed: 7,
+            topology: TopologySpec {
+                edge_workers: 2,
+                cloud_workers: 4,
+                admission_limit: 0,
+                global_k_cap: None,
+                tenants: vec![TenantSpec::unlimited("a")],
+            },
+            workload: WorkloadSpec {
+                benchmark: Benchmark::Gpqa,
+                n: 4,
+                arrival: ArrivalProcess::Periodic { gap: 2.0 },
+                zipf: None,
+            },
+            engine: EngineSpec { record_trace: false, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn field_names_roundtrip() {
+        for f in SweepField::ALL {
+            assert_eq!(SweepField::parse(f.render()), Some(f), "{}", f.render());
+        }
+        assert!(SweepField::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn cells_cross_product_row_major() {
+        let sweep = SweepSpec {
+            name: "grid".into(),
+            base: base(),
+            axes: vec![
+                SweepAxis { field: SweepField::EdgeWorkers, values: vec![1.0, 2.0] },
+                SweepAxis { field: SweepField::Seed, values: vec![5.0, 6.0, 7.0] },
+            ],
+        };
+        let cells = sweep.cells().unwrap();
+        assert_eq!(cells.len(), 6);
+        // First axis outermost, last axis fastest.
+        assert_eq!(cells[0].values, vec![1.0, 5.0]);
+        assert_eq!(cells[1].values, vec![1.0, 6.0]);
+        assert_eq!(cells[3].values, vec![2.0, 5.0]);
+        assert_eq!(cells[3].spec.topology.edge_workers, 2);
+        assert_eq!(cells[3].spec.seed, 5);
+        // Base untouched.
+        assert_eq!(sweep.base.topology.edge_workers, 2);
+    }
+
+    #[test]
+    fn cache_capacity_zero_removes_cache() {
+        let mut spec = base();
+        spec.engine.cache = Some(CacheSpec {
+            capacity: 256,
+            policy: CachePolicyKind::Lfu,
+            shared_tier: false,
+        });
+        SweepField::CacheCapacity.apply(&mut spec, 0.0).unwrap();
+        assert!(spec.engine.cache.is_none(), "capacity 0 is the cache-off baseline");
+        SweepField::CacheCapacity.apply(&mut spec, 64.0).unwrap();
+        let c = spec.engine.cache.as_ref().unwrap();
+        assert_eq!(c.capacity, 64);
+        assert_eq!(c.policy, CachePolicyKind::Lru, "absent base cache defaults to LRU");
+    }
+
+    #[test]
+    fn cache_capacity_preserves_base_policy() {
+        let mut spec = base();
+        spec.engine.cache = Some(CacheSpec {
+            capacity: 256,
+            policy: CachePolicyKind::Ttl(60.0),
+            shared_tier: false,
+        });
+        SweepField::CacheCapacity.apply(&mut spec, 16.0).unwrap();
+        let c = spec.engine.cache.as_ref().unwrap();
+        assert_eq!(c.capacity, 16);
+        assert_eq!(c.policy, CachePolicyKind::Ttl(60.0));
+        assert!(!c.shared_tier);
+    }
+
+    #[test]
+    fn rejects_bad_values_and_shapes() {
+        let mut spec = base();
+        assert!(SweepField::ArrivalRate.apply(&mut spec, 0.0).is_err());
+        assert!(SweepField::EdgeWorkers.apply(&mut spec, 1.5).is_err());
+        assert!(SweepField::EdgeWorkers.apply(&mut spec, -1.0).is_err());
+        assert!(
+            SweepField::ZipfExponent.apply(&mut spec, 1.1).is_err(),
+            "no zipf mix in the base spec"
+        );
+        let empty = SweepSpec { name: "x".into(), base: base(), axes: vec![] };
+        assert!(empty.cells().is_err());
+        // A natively-built axis with no values errors instead of panicking.
+        let hollow = SweepSpec {
+            name: "x".into(),
+            base: base(),
+            axes: vec![SweepAxis { field: SweepField::ArrivalRate, values: vec![] }],
+        };
+        assert!(hollow.cells().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_is_fixpoint() {
+        let sweep = SweepSpec {
+            name: "rt".into(),
+            base: base(),
+            axes: vec![
+                SweepAxis { field: SweepField::ArrivalRate, values: vec![0.25, 0.5, 1.0] },
+                SweepAxis { field: SweepField::CacheCapacity, values: vec![0.0, 64.0] },
+            ],
+        };
+        let text = sweep.render();
+        assert!(SweepSpec::is_sweep_json(&Json::parse(&text).unwrap()));
+        assert!(!SweepSpec::is_sweep_json(&base().to_json()));
+        let back = SweepSpec::parse(&text).expect("parse rendered sweep");
+        assert_eq!(back, sweep, "value round trip");
+        assert_eq!(back.render(), text, "render fixpoint");
+    }
+
+    #[test]
+    fn serial_run_produces_grid_ordered_cells() {
+        let sweep = SweepSpec {
+            name: "serial".into(),
+            base: base(),
+            axes: vec![SweepAxis {
+                field: SweepField::ArrivalRate,
+                values: vec![0.5, 2.0],
+            }],
+        };
+        let pred = Arc::new(MirrorPredictor::synthetic_for_tests());
+        let report = sweep.run(pred, 1).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.cells[0].values, vec![0.5]);
+        assert_eq!(report.cells[1].values, vec![2.0]);
+        for c in &report.cells {
+            assert_eq!(c.report.results.len(), 4);
+        }
+        let table = report.table().render();
+        assert!(table.contains("sweep: serial"), "{table}");
+        assert!(table.contains("arrival_rate"), "{table}");
+    }
+}

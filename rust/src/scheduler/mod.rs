@@ -52,6 +52,7 @@
 
 pub mod events;
 pub mod fleet;
+pub mod pool;
 
 use crate::budget::{BudgetState, GlobalBudget, TenantPool};
 use crate::cache::{CachedResult, Fingerprint, SubtaskCache};
@@ -63,6 +64,7 @@ use crate::router::{RoutePolicy, RouterState};
 use crate::util::rng::Rng;
 use crate::workload::{Query, SubtaskLatent};
 use events::TraceEvent;
+use pool::WorkerPool;
 use std::sync::Arc;
 
 /// Scheduling configuration.
@@ -92,6 +94,12 @@ pub struct ScheduleConfig {
     /// near-zero-latency completion: no worker is occupied, no budget is
     /// spent, and the stored record is served bit-identically.
     pub cache: Option<Arc<SubtaskCache>>,
+    /// Run the kernel's worker pools on the retained linear `argmin`
+    /// reference ([`pool::WorkerPool::linear_reference`]) instead of the
+    /// O(log W) ordered index. Byte-identical semantics, O(W) claims —
+    /// exists only so parity tests and `benches/kernel.rs` can measure
+    /// the index against the baseline it replaced. Leave `false`.
+    pub linear_pool_reference: bool,
 }
 
 impl Default for ScheduleConfig {
@@ -104,6 +112,7 @@ impl Default for ScheduleConfig {
             hedge: false,
             hedge_threshold: 0.55,
             cache: None,
+            linear_pool_reference: false,
         }
     }
 }
@@ -226,15 +235,15 @@ pub(crate) fn apply_cancel(
     t: &CancelTicket,
     cancel_time: f64,
     st: &mut QueryExecState,
-    edge_free: &mut [f64],
-    cloud_free: &mut [f64],
+    edge: &mut WorkerPool,
+    cloud: &mut WorkerPool,
     mut fleet: Option<&mut FleetRouteCtx<'_>>,
 ) {
-    let pool = if t.cloud { cloud_free } else { edge_free };
-    if pool[t.worker] == t.reserved_until {
+    let pool = if t.cloud { cloud } else { edge };
+    if pool.free_at(t.worker) == t.reserved_until {
         // Cancelled before start => released at the reserved start (the
         // replica never ran); mid-flight => released at the cancel instant.
-        pool[t.worker] = cancel_time.clamp(t.start, t.reserved_until);
+        pool.set_free(t.worker, cancel_time.clamp(t.start, t.reserved_until));
     }
     if t.refund_c > 0.0 || t.refund_k > 0.0 {
         st.budget.refund(t.refund_c, t.refund_k);
@@ -284,8 +293,8 @@ pub(crate) fn run_group(
     st: &mut QueryExecState,
     router: &mut RouterState,
     rng: &mut Rng,
-    edge_free: &mut [f64],
-    cloud_free: &mut [f64],
+    edge: &mut WorkerPool,
+    cloud: &mut WorkerPool,
     mut chain_clock: Option<&mut f64>,
     mut fleet: Option<&mut FleetRouteCtx<'_>>,
     hedge: Option<f64>,
@@ -382,16 +391,19 @@ pub(crate) fn run_group(
             let c = BudgetState::normalized_cost(sp, dl, dk);
             Some(dq / (c + sp.eps_utility))
         };
+        // The bandit's delayed feedback needs the budget *as seen at
+        // decision time*; `BudgetState` is plain-old-data (`Copy`), so the
+        // snapshot is a stack copy — no allocation, no Clone machinery.
         let budget_at_decision;
         let decided_cloud;
         match fleet.as_deref_mut() {
             Some(f) => {
-                budget_at_decision = f.tenant.state.clone();
+                budget_at_decision = f.tenant.state.snapshot();
                 decided_cloud =
                     router.decide(sp, u_hat, position, &f.tenant.state, oracle_ratio, rng);
             }
             None => {
-                budget_at_decision = st.budget.clone();
+                budget_at_decision = st.budget.snapshot();
                 decided_cloud =
                     router.decide(sp, u_hat, position, &st.budget, oracle_ratio, rng);
             }
@@ -438,14 +450,8 @@ pub(crate) fn run_group(
             let rec_c =
                 g.executor.execute_subtask(g.query.domain, &g.latents[node], in_tok, true, &mut hrng);
 
-            let we = argmin(edge_free);
-            let s_e = edge_free[we].max(now);
-            let f_e = s_e + rec_e.latency;
-            edge_free[we] = f_e;
-            let wc = argmin(cloud_free);
-            let s_c = cloud_free[wc].max(now);
-            let f_c = s_c + rec_c.latency;
-            cloud_free[wc] = f_c;
+            let (we, s_e, f_e) = edge.claim(now, rec_e.latency);
+            let (wc, s_c, f_c) = cloud.claim(now, rec_c.latency);
 
             let cloud_wins = f_c < f_e;
             let edge_equiv =
@@ -557,15 +563,11 @@ pub(crate) fn run_group(
             *clock += rec.latency;
             (s, *clock)
         } else if to_cloud {
-            let w = argmin(cloud_free);
-            let s = cloud_free[w].max(now);
-            cloud_free[w] = s + rec.latency;
-            (s, s + rec.latency)
+            let (_, s, f) = cloud.claim(now, rec.latency);
+            (s, f)
         } else {
-            let w = argmin(edge_free);
-            let s = edge_free[w].max(now);
-            edge_free[w] = s + rec.latency;
-            (s, s + rec.latency)
+            let (_, s, f) = edge.claim(now, rec.latency);
+            (s, f)
         };
 
         // --- Budget + bandit feedback -------------------------------------
@@ -643,6 +645,12 @@ pub(crate) fn run_group(
 /// caller's RNG and router state flow through the kernel and come back
 /// advanced, so call-for-call stream alignment with the pre-unification
 /// scheduler holds (pinned by the single-query bit-identity grid).
+///
+/// Borrow-based compatibility wrapper over [`execute_query_arc`]: it
+/// deep-copies the DAG (subtask text included) into the job. Hot callers
+/// that own their plan — the pipeline does — should call
+/// [`execute_query_arc`] instead, which moves the plan behind `Arc`s and
+/// clones no node text.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_query(
     dag: &TaskDag,
@@ -655,22 +663,47 @@ pub fn execute_query(
     cfg: &ScheduleConfig,
     rng: &mut Rng,
 ) -> QueryExecution {
+    execute_query_arc(
+        Arc::new(dag.clone()),
+        latents.to_vec(),
+        Arc::new(query.clone()),
+        executor,
+        predictor,
+        router,
+        planning_latency,
+        cfg,
+        rng,
+    )
+}
+
+/// Zero-copy form of [`execute_query`]: the caller hands over its plan
+/// (`dag`, `latents`) and query by value/`Arc`, so building the kernel
+/// job allocates nothing per query beyond the `Arc` headers — no
+/// `Query`/DAG-text deep copies on the per-query hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_query_arc(
+    dag: Arc<TaskDag>,
+    latents: Vec<SubtaskLatent>,
+    query: Arc<Query>,
+    executor: &dyn Backend,
+    predictor: &dyn UtilityPredictor,
+    router: &mut RouterState,
+    planning_latency: f64,
+    cfg: &ScheduleConfig,
+    rng: &mut Rng,
+) -> QueryExecution {
     use crate::sim::{CacheSessions, Job, Kernel, KernelSpec, Preplanned};
 
     assert_eq!(dag.len(), latents.len(), "latents must align with dag");
     let job = Job {
         tenant: 0,
-        query: query.clone(),
+        query,
         arrival: 0.0,
         rng: rng.clone(),
         // The kernel owns the router for the duration of the run; a cheap
         // placeholder keeps the caller's binding valid until hand-back.
         router: std::mem::replace(router, RouterState::new(RoutePolicy::AllEdge)),
-        preplanned: Some(Preplanned {
-            dag: dag.clone(),
-            latents: latents.to_vec(),
-            planning_latency,
-        }),
+        preplanned: Some(Preplanned { dag, latents, planning_latency }),
     };
     let kernel = Kernel {
         spec: KernelSpec {
@@ -692,16 +725,6 @@ pub fn execute_query(
     *router = run.routers.pop().expect("kernel returns the job's router");
     *rng = run.rngs.pop().expect("kernel returns the job's rng");
     run.report.results.pop().expect("single job completed").exec
-}
-
-fn argmin(xs: &[f64]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x < xs[best] {
-            best = i;
-        }
-    }
-    best
 }
 
 #[cfg(test)]

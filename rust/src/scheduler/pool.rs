@@ -1,0 +1,247 @@
+//! Shared worker pools with O(log W) claim/release.
+//!
+//! The kernel's innermost loop claims a worker on every dispatch (twice
+//! for a hedged dispatch — one replica per side). Historically that claim
+//! was an `argmin` scan over a `Vec<f64>` of per-worker next-free times:
+//! O(W) on every decision, which turns the dispatch path linear in pool
+//! size exactly where "as fast as the hardware allows" wants it flat.
+//!
+//! [`WorkerPool`] keeps the same `Vec<f64>` of next-free times as the
+//! source of truth and adds an ordered index — a `BTreeSet` of
+//! `(ordered_bits(free_time), worker)` pairs — so the earliest-free
+//! worker is the set's first element: O(log W) claim, O(log W) release.
+//! `ordered_bits` (shared with the cache's eviction index) maps `f64`
+//! onto `u64` preserving `total_cmp` order, so the integer index orders
+//! exactly like the floats.
+//!
+//! **Tie-break contract** (pinned by the golden fleet trace): among
+//! workers with equal next-free times, the *lowest worker index* wins —
+//! the same worker the historical `argmin` scan chose (first strict
+//! minimum). Equal `f64` times have equal `ordered_bits`, so the
+//! `(bits, worker)` key degenerates to worker order on ties. The one
+//! place bit order and `<` disagree is `-0.0` vs `0.0`, which cannot
+//! occur here: free times are `0.0` at construction and evolve through
+//! `max`/`+`/`clamp` over non-negative operands.
+//!
+//! [`WorkerPool::linear_reference`] retains the historical scan as a
+//! drop-in reference implementation: the scripted-churn parity tests
+//! below replay identical claim/release sequences against both and
+//! require identical worker choices, and `benches/kernel.rs` measures
+//! the indexed kernel against the linear-scan baseline it replaced
+//! (`BENCH_kernel.json`).
+
+use crate::cache::policy::ordered_bits;
+use std::collections::BTreeSet;
+
+/// A pool of virtual-clock workers: per-worker next-free times plus an
+/// ordered free-time index. See the module docs for the tie-break and
+/// complexity contract.
+#[derive(Debug, Clone)]
+pub struct WorkerPool {
+    /// Next-free virtual time per worker (the source of truth).
+    free: Vec<f64>,
+    /// Configured worker count *before* phantom padding — the utilization
+    /// denominator. A zero-worker side still carries one phantom slot so
+    /// the engine's claim path stays total, but reports no capacity.
+    configured: usize,
+    /// Ordered `(ordered_bits(free), worker)` index; `None` selects the
+    /// retained linear `argmin` reference semantics (parity tests, perf
+    /// baseline).
+    index: Option<BTreeSet<(u64, u32)>>,
+}
+
+impl WorkerPool {
+    /// Indexed pool of `configured` workers (padded to one phantom worker
+    /// when zero, matching the engine's historical `max(1)` padding).
+    pub fn new(configured: usize) -> WorkerPool {
+        let n = configured.max(1);
+        WorkerPool {
+            free: vec![0.0; n],
+            configured,
+            index: Some((0..n as u32).map(|w| (ordered_bits(0.0), w)).collect()),
+        }
+    }
+
+    /// The historical O(W) linear-scan pool, kept as the reference
+    /// implementation the indexed pool is verified and benchmarked
+    /// against. Byte-identical semantics, linear claim cost.
+    pub fn linear_reference(configured: usize) -> WorkerPool {
+        WorkerPool { free: vec![0.0; configured.max(1)], configured, index: None }
+    }
+
+    /// Effective pool size (phantom-padded, always >= 1).
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    /// Configured worker count before phantom padding — the utilization
+    /// denominator (0 means this side has no real capacity).
+    pub fn configured(&self) -> usize {
+        self.configured
+    }
+
+    /// Earliest-free worker: O(log W) via the index, O(W) in reference
+    /// mode. Ties break to the lowest worker index in both modes.
+    pub fn earliest(&self) -> usize {
+        match &self.index {
+            Some(ix) => {
+                ix.iter().next().expect("worker pool is never empty").1 as usize
+            }
+            None => argmin(&self.free),
+        }
+    }
+
+    /// Next-free time of one worker.
+    pub fn free_at(&self, w: usize) -> f64 {
+        self.free[w]
+    }
+
+    /// Reserve the earliest-free worker for a task of `latency` starting
+    /// no earlier than `now`. Returns `(worker, start, finish)` and
+    /// advances the worker's next-free time to `finish`.
+    pub fn claim(&mut self, now: f64, latency: f64) -> (usize, f64, f64) {
+        let w = self.earliest();
+        let start = self.free[w].max(now);
+        let finish = start + latency;
+        self.set_free(w, finish);
+        (w, start, finish)
+    }
+
+    /// Move one worker's next-free time (cancellation release path: a
+    /// hedged loser hands back the unconsumed tail of its reservation).
+    pub fn set_free(&mut self, w: usize, t: f64) {
+        if let Some(ix) = self.index.as_mut() {
+            let removed = ix.remove(&(ordered_bits(self.free[w]), w as u32));
+            debug_assert!(removed, "pool index out of sync for worker {w}");
+            ix.insert((ordered_bits(t), w as u32));
+        }
+        self.free[w] = t;
+    }
+}
+
+/// First index holding the strict minimum — the historical linear-scan
+/// worker selection (lowest index wins ties), retained as the reference
+/// semantics of [`WorkerPool::earliest`].
+pub fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        let mut pool = WorkerPool::new(4);
+        // All free at 0: indices claimed in order.
+        assert_eq!(pool.claim(0.0, 5.0).0, 0);
+        assert_eq!(pool.claim(0.0, 5.0).0, 1);
+        assert_eq!(pool.claim(0.0, 5.0).0, 2);
+        assert_eq!(pool.claim(0.0, 5.0).0, 3);
+        // All free at 5: wraps back to 0.
+        let (w, start, finish) = pool.claim(1.0, 2.0);
+        assert_eq!(w, 0);
+        assert_eq!(start, 5.0, "start waits for the worker, not `now`");
+        assert_eq!(finish, 7.0);
+    }
+
+    #[test]
+    fn claim_starts_at_now_when_idle() {
+        let mut pool = WorkerPool::new(2);
+        let (w, start, finish) = pool.claim(3.5, 1.0);
+        assert_eq!((w, start, finish), (0, 3.5, 4.5));
+        // Second worker still idle at 0 — earliest is now worker 1.
+        assert_eq!(pool.earliest(), 1);
+    }
+
+    #[test]
+    fn release_reorders_index() {
+        let mut pool = WorkerPool::new(3);
+        pool.claim(0.0, 10.0); // w0 busy till 10
+        pool.claim(0.0, 20.0); // w1 busy till 20
+        pool.claim(0.0, 30.0); // w2 busy till 30
+        assert_eq!(pool.earliest(), 0);
+        // Cancel releases w2 back to 5: it becomes the earliest.
+        pool.set_free(2, 5.0);
+        assert_eq!(pool.earliest(), 2);
+        assert_eq!(pool.free_at(2), 5.0);
+        let (w, start, _) = pool.claim(6.0, 1.0);
+        assert_eq!((w, start), (2, 6.0));
+    }
+
+    #[test]
+    fn zero_configured_pads_one_phantom_worker() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.len(), 1, "claim path stays total");
+        assert_eq!(pool.configured(), 0, "but the side reports no capacity");
+        let linear = WorkerPool::linear_reference(0);
+        assert_eq!(linear.len(), 1);
+        assert_eq!(linear.configured(), 0);
+    }
+
+    /// Scripted-churn parity (the PR 4 cache-evict-index pattern): replay
+    /// one randomized claim/release script against the indexed pool and
+    /// the retained linear `argmin` reference, and require the *same
+    /// worker* (and identical timing) at every step — including ties.
+    #[test]
+    fn indexed_pool_matches_linear_reference_under_churn() {
+        for seed in [1u64, 7, 42, 1234] {
+            for workers in [1usize, 2, 3, 8, 17] {
+                let mut rng = Rng::new(seed ^ workers as u64);
+                let mut fast = WorkerPool::new(workers);
+                let mut slow = WorkerPool::linear_reference(workers);
+                let mut now = 0.0f64;
+                // (worker, start, reserved_until) of claims eligible for a
+                // scripted cancel-style release.
+                let mut open: Vec<(usize, f64, f64)> = Vec::new();
+                for step in 0..600 {
+                    now += rng.uniform(0.0, 0.7);
+                    if !open.is_empty() && rng.bernoulli(0.25) {
+                        // Cancel-style release: hand back the unconsumed
+                        // tail of a past reservation (same guard as
+                        // `apply_cancel`: only if the reservation is still
+                        // the top of that worker's timeline).
+                        let k = (rng.next_u64() % open.len() as u64) as usize;
+                        let (w, start, reserved) = open.swap_remove(k);
+                        let release = now.clamp(start, reserved);
+                        if fast.free_at(w) == reserved {
+                            assert_eq!(slow.free_at(w), reserved, "step {step}");
+                            fast.set_free(w, release);
+                            slow.set_free(w, release);
+                        }
+                    } else {
+                        // Quantized latencies force frequent exact ties.
+                        let latency = (rng.uniform(0.0, 4.0) * 2.0).round() / 2.0;
+                        let a = fast.claim(now, latency);
+                        let b = slow.claim(now, latency);
+                        assert_eq!(a, b, "seed {seed} workers {workers} step {step}");
+                        open.push((a.0, a.1, a.2));
+                    }
+                    assert_eq!(fast.earliest(), slow.earliest(), "step {step}");
+                }
+                // Final per-worker timelines agree exactly.
+                for w in 0..fast.len() {
+                    assert_eq!(fast.free_at(w).to_bits(), slow.free_at(w).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_reference_picks_first_minimum() {
+        assert_eq!(argmin(&[3.0, 1.0, 1.0, 2.0]), 1);
+        assert_eq!(argmin(&[0.0]), 0);
+        assert_eq!(argmin(&[5.0, 4.0, 3.0]), 2);
+    }
+}

@@ -80,6 +80,25 @@ impl ServeReport {
         r.cache(self.cache.as_ref());
         r.finish()
     }
+
+    /// Machine-readable report (`util::json`) — the wall-clock
+    /// counterpart of [`FleetReport::to_json`], behind the CLI's
+    /// `serve --json` flag.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::report::{cache_stats_json, summary_json};
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("n_queries", Json::Num(self.n_queries as f64)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("throughput_qps", Json::Num(self.throughput_qps)),
+            ("wall_latency", summary_json(&self.wall_latency)),
+            ("sim_latency", summary_json(&self.sim_latency)),
+            ("accuracy_pct", Json::Num(self.accuracy_pct)),
+            ("total_api_cost", Json::Num(self.total_api_cost)),
+            ("mean_offload_rate", Json::Num(self.mean_offload_rate)),
+            ("cache", self.cache.as_ref().map_or(Json::Null, cache_stats_json)),
+        ])
+    }
 }
 
 /// Serve a batch of queries concurrently over `workers` threads.

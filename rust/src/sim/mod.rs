@@ -56,15 +56,18 @@ use crate::report::ReportRenderer;
 use crate::router::predictor::UtilityPredictor;
 use crate::router::{RoutePolicy, RouterState};
 use crate::scheduler::events::EventKey;
+use crate::scheduler::pool::WorkerPool;
 use crate::scheduler::{
     apply_cancel, run_group, CancelTicket, Dispatch, FleetRouteCtx, GroupCtx, QueryExecState,
     QueryExecution, ScheduleConfig,
 };
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::{sample_latents, Query, SubtaskLatent};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 /// Fleet-level knobs (per-query scheduling semantics come from the
 /// pipeline's [`ScheduleConfig`]).
@@ -198,6 +201,58 @@ impl FleetReport {
         r.cache(self.cache.as_ref());
         r.finish()
     }
+
+    /// Machine-readable report (`util::json`): aggregate serving metrics,
+    /// tenant ledgers, and cache counters — the plotting surface behind
+    /// the CLI's `--json` flag and the sweep engine's cell tables. The
+    /// per-event trace is deliberately omitted (use
+    /// [`trace_text`](Self::trace_text) for golden-file comparison).
+    pub fn to_json(&self) -> Json {
+        use crate::report::{cache_stats_json, summary_json};
+        let n = self.results.len();
+        let correct = self.results.iter().filter(|r| r.exec.correct).count();
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::Str(t.name.clone())),
+                    // Unlimited caps serialize as null (same convention
+                    // as scenario specs).
+                    (
+                        "k_cap",
+                        if t.k_cap.is_finite() { Json::Num(t.k_cap) } else { Json::Null },
+                    ),
+                    ("k_used", Json::Num(t.state.k_used)),
+                    ("c_used", Json::Num(t.state.c_used)),
+                    ("n_decided", Json::Num(t.state.n_decided as f64)),
+                    ("n_offloaded", Json::Num(t.state.n_offloaded as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("n_queries", Json::Num(n as f64)),
+            (
+                "accuracy_pct",
+                Json::Num(if n == 0 { 0.0 } else { correct as f64 / n as f64 * 100.0 }),
+            ),
+            ("horizon", Json::Num(self.horizon)),
+            ("throughput_qps", Json::Num(self.throughput_qps)),
+            ("admission_delay", summary_json(&self.admission_delay)),
+            ("queue_wait", summary_json(&self.queue_wait)),
+            ("sojourn", summary_json(&self.sojourn)),
+            ("offload_rate", Json::Num(self.offload_rate)),
+            ("total_api_cost", Json::Num(self.total_api_cost)),
+            ("forced_edge", Json::Num(self.forced_edge as f64)),
+            ("hedge_cancelled", Json::Num(self.hedge_cancelled as f64)),
+            ("hedge_refund", Json::Num(self.hedge_refund)),
+            ("edge_utilization", Json::Num(self.edge_utilization)),
+            ("cloud_utilization", Json::Num(self.cloud_utilization)),
+            ("clock_monotone", Json::Bool(self.clock_monotone)),
+            ("cache", self.cache.as_ref().map_or(Json::Null, cache_stats_json)),
+            ("tenants", Json::Arr(tenants)),
+        ])
+    }
 }
 
 // Event-kind priorities: at equal times, control events (arrival/planner/
@@ -262,7 +317,9 @@ pub(crate) enum CacheSessions {
 /// caller already ran the planner on the same RNG).
 pub(crate) struct Job {
     pub tenant: usize,
-    pub query: Query,
+    /// Shared, never deep-copied: job construction moves the caller's
+    /// query behind an `Arc` (zero-copy job contract).
+    pub query: Arc<Query>,
     pub arrival: f64,
     pub rng: Rng,
     pub router: RouterState,
@@ -270,9 +327,11 @@ pub(crate) struct Job {
 }
 
 /// Pre-planned decomposition for a [`Job`] (skips the admission-time
-/// planner call; `plan_done = arrival + planning_latency`).
+/// planner call; `plan_done = arrival + planning_latency`). The DAG is
+/// `Arc`-shared so handing a plan to the kernel never copies subtask
+/// text.
 pub(crate) struct Preplanned {
-    pub dag: crate::dag::TaskDag,
+    pub dag: Arc<crate::dag::TaskDag>,
     pub latents: Vec<SubtaskLatent>,
     pub planning_latency: f64,
 }
@@ -318,12 +377,14 @@ pub(crate) struct Kernel<'a> {
 /// Scheduling state built at admission (planning done lazily so queued
 /// queries consume planner latency when they actually start).
 struct PlanState {
-    dag: crate::dag::TaskDag,
+    dag: Arc<crate::dag::TaskDag>,
     latents: Vec<SubtaskLatent>,
     fctx: FeatureContext,
     depths: Vec<usize>,
     max_depth: usize,
-    children: Vec<Vec<usize>>,
+    /// Flattened children adjacency (CSR): built once at plan time, two
+    /// allocations instead of one vector per node.
+    children: crate::dag::CsrChildren,
     indeg: Vec<usize>,
     done: Vec<bool>,
     ready: BinaryHeap<EventKey>,
@@ -335,7 +396,7 @@ struct PlanState {
 
 struct QueryRun {
     tenant: usize,
-    query: Query,
+    query: Arc<Query>,
     arrival: f64,
     admitted: f64,
     plan_done: f64,
@@ -385,14 +446,14 @@ fn admit_query(
             let planner = planner.expect("kernel jobs without a planner must be pre-planned");
             let plan = planner.plan(&q.query, n_max, &mut q.rng);
             let latents = sample_latents(&plan.dag, &q.query, executor.sp(), &mut q.rng);
-            (plan.dag, latents, plan.planning_latency)
+            (Arc::new(plan.dag), latents, plan.planning_latency)
         }
     };
     let n = dag.len();
     let fctx = FeatureContext::new(&dag, &q.query);
     let depths = dag.depths().unwrap_or_else(|| vec![0; n]);
     let max_depth = depths.iter().copied().max().unwrap_or(0).max(1);
-    let children = dag.children();
+    let children = dag.children_csr();
     let indeg = dag.in_degrees();
     q.plan_done = now + planning_latency;
     q.plan = Some(PlanState {
@@ -499,9 +560,20 @@ impl<'a> Kernel<'a> {
         }
         let mut global = GlobalBudget::new(spec.global_k_cap);
 
-        // Shared worker pools: next-free virtual time per worker.
-        let mut edge_free: Vec<f64> = vec![0.0; schedule.edge_workers.max(1)];
-        let mut cloud_free: Vec<f64> = vec![0.0; schedule.cloud_workers.max(1)];
+        // Shared worker pools: ordered next-free index per side, O(log W)
+        // claim/release (see scheduler::pool).
+        // `ScheduleConfig::linear_pool_reference` selects the retained
+        // linear-scan reference — identical semantics, O(W) claims — so
+        // parity tests and `benches/kernel.rs` can measure the index
+        // against the baseline it replaced.
+        let (mut edge, mut cloud) = if schedule.linear_pool_reference {
+            (
+                WorkerPool::linear_reference(schedule.edge_workers),
+                WorkerPool::linear_reference(schedule.cloud_workers),
+            )
+        } else {
+            (WorkerPool::new(schedule.edge_workers), WorkerPool::new(schedule.cloud_workers))
+        };
 
         let mut queries: Vec<QueryRun> = jobs
             .into_iter()
@@ -636,8 +708,8 @@ impl<'a> Kernel<'a> {
                                     &mut ps.st,
                                     &mut q.router,
                                     &mut q.rng,
-                                    &mut edge_free,
-                                    &mut cloud_free,
+                                    &mut edge,
+                                    &mut cloud,
                                     Some(&mut chain_clock),
                                     route.as_mut(),
                                     hedge,
@@ -768,8 +840,8 @@ impl<'a> Kernel<'a> {
                                 &ticket,
                                 ev.key.time,
                                 &mut ps.st,
-                                &mut edge_free,
-                                &mut cloud_free,
+                                &mut edge,
+                                &mut cloud,
                                 route.as_mut(),
                             );
                             stats.hedge_cancelled += 1;
@@ -853,8 +925,8 @@ impl<'a> Kernel<'a> {
                         &mut ps.st,
                         &mut q.router,
                         &mut q.rng,
-                        &mut edge_free,
-                        &mut cloud_free,
+                        &mut edge,
+                        &mut cloud,
                         None,
                         route.as_mut(),
                         hedge,
@@ -916,7 +988,8 @@ impl<'a> Kernel<'a> {
                         let node = ev.key.node;
                         if !ps.done[node] {
                             ps.done[node] = true;
-                            for &c in &ps.children[node] {
+                            for &c in ps.children.children_of(node) {
+                                let c = c as usize;
                                 ps.indeg[c] -= 1;
                                 if ps.indeg[c] == 0 {
                                     ps.ready.push(EventKey::ready(ev.key.time, c));
@@ -1051,8 +1124,21 @@ impl<'a> Kernel<'a> {
             hedge_cancelled: stats.hedge_cancelled,
             hedge_refund: stats.hedge_refund,
             cache: cache.map(|c| c.stats()),
-            edge_utilization: edge_busy / (span * edge_free.len() as f64),
-            cloud_utilization: cloud_busy / (span * cloud_free.len() as f64),
+            // Utilization is busy time over *configured* capacity. A
+            // zero-worker side carries one phantom claim slot internally
+            // (the engine's historical `max(1)` padding) but has no real
+            // capacity, so it reports 0.0 instead of utilization against
+            // a phantom worker.
+            edge_utilization: if edge.configured() == 0 {
+                0.0
+            } else {
+                edge_busy / (span * edge.configured() as f64)
+            },
+            cloud_utilization: if cloud.configured() == 0 {
+                0.0
+            } else {
+                cloud_busy / (span * cloud.configured() as f64)
+            },
             clock_monotone: stats.clock_monotone,
             horizon,
             results,
@@ -1101,7 +1187,8 @@ pub fn run_fleet(
             router.begin_query(false);
             Job {
                 tenant: a.tenant,
-                query: a.query,
+                // Moved behind an Arc, never deep-copied again.
+                query: Arc::new(a.query),
                 arrival: a.time,
                 rng,
                 router,

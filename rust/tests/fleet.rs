@@ -304,6 +304,72 @@ fn cache_off_single_query_is_bit_identical() {
     }
 }
 
+/// Satellite regression (worker-pool overhaul): the kernel driven by the
+/// retained linear-scan reference pools
+/// (`ScheduleConfig::linear_pool_reference`) must reproduce the indexed
+/// kernel's golden workload byte-for-byte — the O(log W) index changes
+/// dispatch *cost*, never dispatch *choice*.
+#[test]
+fn linear_reference_pools_reproduce_golden_trace() {
+    let indexed = golden_workload().trace_text();
+    let mut schedule = golden_schedule();
+    schedule.linear_pool_reference = true;
+    let linear = golden_workload_with(schedule).trace_text();
+    assert_eq!(
+        linear, indexed,
+        "linear-scan reference pools must be byte-identical to the ordered index"
+    );
+    let path = golden_path();
+    if path.exists() {
+        let pinned = std::fs::read_to_string(&path).expect("read golden file");
+        assert_eq!(linear, pinned, "linear-reference trace diverged from the pinned golden");
+    }
+}
+
+/// Satellite regression (utilization denominators): a side configured
+/// with zero workers carries a phantom claim slot internally (the claim
+/// path must stay total) but has no real capacity — utilization must
+/// report 0.0 instead of busy time against the phantom worker.
+#[test]
+fn zero_worker_side_reports_zero_utilization() {
+    let schedule = ScheduleConfig { edge_workers: 0, cloud_workers: 4, ..Default::default() };
+    let pipeline = pipeline_with(RoutePolicy::AllEdge, schedule);
+    let seed = 77u64;
+    let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, 4, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, query)| FleetArrival { time: i as f64 * 1.0, tenant: 0, query })
+        .collect();
+    let cfg = FleetConfig { record_trace: false, ..Default::default() };
+    let report = run_fleet(&pipeline, &cfg, single_tenant(), arrivals, seed);
+    // All-edge work ran on the phantom slot: busy time exists, but the
+    // configured capacity is zero, so the side reports no utilization.
+    assert!(
+        report.results.iter().flat_map(|r| r.exec.events.iter()).all(|e| !e.cloud),
+        "all-edge policy keeps the cloud side idle"
+    );
+    assert!(
+        report.results.iter().any(|r| !r.exec.events.is_empty()),
+        "queries executed on the phantom slot"
+    );
+    assert_eq!(report.edge_utilization, 0.0, "no phantom-worker utilization");
+    assert_eq!(report.cloud_utilization, 0.0, "idle side stays at zero");
+
+    // Sanity: the same workload with one real edge worker reports busy
+    // time against that worker.
+    let pipeline = pipeline_with(
+        RoutePolicy::AllEdge,
+        ScheduleConfig { edge_workers: 1, ..Default::default() },
+    );
+    let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, 4, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, query)| FleetArrival { time: i as f64 * 1.0, tenant: 0, query })
+        .collect();
+    let report = run_fleet(&pipeline, &cfg, single_tenant(), arrivals, seed);
+    assert!(report.edge_utilization > 0.0, "configured workers report real utilization");
+}
+
 // ---------------------------------------------------------------------------
 // Properties.
 // ---------------------------------------------------------------------------

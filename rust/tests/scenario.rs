@@ -23,9 +23,10 @@ use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
 use hybridflow::planner::synthetic::SyntheticPlanner;
 use hybridflow::router::{MirrorPredictor, RoutePolicy, UtilityPredictor};
 use hybridflow::scenario::presets::{self, FleetCacheKnobs, FleetSimKnobs, MixedPolicyKnobs};
-use hybridflow::scenario::ScenarioSpec;
+use hybridflow::scenario::{ScenarioSpec, SweepSpec};
 use hybridflow::server::serve_fleet;
 use hybridflow::sim::FleetConfig;
+use hybridflow::util::json::Json;
 use hybridflow::workload::trace::ArrivalProcess;
 use hybridflow::workload::Benchmark;
 use std::path::PathBuf;
@@ -104,6 +105,144 @@ fn shipped_specs_match_their_presets() {
              with ScenarioSpec::render()"
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep specs: shipped file, fixpoint, preset pin, thread invariance.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shipped_sweep_spec_parses_roundtrips_and_matches_preset() {
+    let path = repo_root().join("scenarios/fleet_cache_sweep.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let parsed = Json::parse(&text).expect("sweep file is valid json");
+    assert!(SweepSpec::is_sweep_json(&parsed), "base + sweep keys present");
+    let sweep = SweepSpec::from_json(&parsed).expect("sweep file parses");
+
+    // parse → render → parse is the identity, and render is a fixpoint.
+    let rendered = sweep.render();
+    let back = SweepSpec::parse(&rendered).expect("reparse rendered sweep");
+    assert_eq!(back, sweep, "value round trip");
+    assert_eq!(back.render(), rendered, "render fixpoint");
+
+    // Pinned to the canonical preset (same knobs as the fleet_cache
+    // experiment's capacity grid at paper scale).
+    let preset = presets::fleet_cache_sweep(
+        Benchmark::Gpqa,
+        120,
+        0.5,
+        11,
+        &FleetCacheKnobs { zipf_distinct: 12, record_trace: false, ..Default::default() },
+    );
+    assert_eq!(
+        sweep, preset,
+        "fleet_cache_sweep.json drifted from scenario::presets::fleet_cache_sweep — \
+         regenerate the file with SweepSpec::render()"
+    );
+    // The grid is the documented capacity ladder with a cache-off baseline.
+    let cells = sweep.cells().expect("grid resolves");
+    assert_eq!(cells.len(), 4);
+    assert!(cells[0].spec.engine.cache.is_none(), "capacity 0 cell is cache-off");
+    assert_eq!(cells[3].spec.engine.cache.as_ref().unwrap().capacity, 256);
+}
+
+/// Acceptance pin: the `fleet_cache` capacity grid run across ThreadPool
+/// workers is byte-identical, cell for cell, to serial execution — thread
+/// count and interleaving cannot leak into any cell's result.
+#[test]
+fn sweep_parallel_is_byte_identical_to_serial() {
+    // Small grid with traces on, so the comparison is the strongest one
+    // the engine offers (the byte-stable event trace).
+    let mut sweep = presets::fleet_cache_sweep(
+        Benchmark::Gpqa,
+        24,
+        0.5,
+        11,
+        &FleetCacheKnobs { zipf_distinct: 4, record_trace: true, ..Default::default() },
+    );
+    sweep.axes[0].values = vec![0.0, 16.0, 64.0];
+
+    let serial = sweep.run(predictor(), 1).expect("serial run");
+    for threads in [2usize, 4, 8] {
+        let parallel = sweep.run(predictor(), threads).expect("parallel run");
+        assert_eq!(parallel.cells.len(), serial.cells.len());
+        for (i, (p, s)) in parallel.cells.iter().zip(&serial.cells).enumerate() {
+            assert_eq!(p.values, s.values, "cell {i} grid order");
+            assert_eq!(
+                p.report.trace_text(),
+                s.report.trace_text(),
+                "cell {i} trace must be byte-identical at {threads} threads"
+            );
+            assert_eq!(p.report.total_api_cost, s.report.total_api_cost, "cell {i}");
+            assert_eq!(
+                p.report.cache.as_ref().map(|c| (c.lookups, c.hits, c.evictions)),
+                s.report.cache.as_ref().map(|c| (c.lookups, c.hits, c.evictions)),
+                "cell {i} cache counters"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report JSON: round trip through util::json.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_report_json_roundtrips_through_util_json() {
+    let session = presets::fleet_cache(
+        Benchmark::Gpqa,
+        24,
+        0.5,
+        11,
+        &FleetCacheKnobs { zipf_distinct: 4, record_trace: false, ..Default::default() },
+    )
+    .build(predictor());
+    let report = session.run();
+    let j = report.to_json();
+    let text = j.to_string_pretty();
+    let back = Json::parse(&text).expect("report json parses");
+    assert_eq!(back, j, "pretty round trip is lossless");
+
+    // Spot-check the plotting surface against the report.
+    assert_eq!(back.get("n_queries").and_then(Json::as_usize), Some(report.results.len()));
+    assert_eq!(
+        back.get("total_api_cost").and_then(Json::as_f64),
+        Some(report.total_api_cost)
+    );
+    assert_eq!(
+        back.path(&["sojourn", "p95"]).and_then(Json::as_f64),
+        Some(report.sojourn.p95)
+    );
+    assert_eq!(
+        back.path(&["cache", "hits"]).and_then(Json::as_f64),
+        Some(report.cache.as_ref().unwrap().hits as f64)
+    );
+    assert_eq!(
+        back.path(&["tenants", "0", "name"]).and_then(Json::as_str),
+        Some(report.tenants[0].name.as_str())
+    );
+    // Unlimited tenant caps serialize as null, not infinity.
+    assert_eq!(back.path(&["tenants", "0", "k_cap"]), Some(&Json::Null));
+
+    // The sweep table wraps the same report JSON per cell.
+    let sweep = presets::fleet_serve_sweep(Benchmark::Gpqa, 12, 11);
+    let sr = sweep.run(predictor(), 2).expect("sweep runs");
+    let sj = sr.to_json();
+    let sweep_back = Json::parse(&sj.to_string_pretty()).expect("sweep json parses");
+    assert_eq!(sweep_back, sj);
+    assert_eq!(
+        sweep_back.path(&["fields", "0"]).and_then(Json::as_str),
+        Some("arrival_rate")
+    );
+    assert_eq!(
+        sweep_back.get("cells").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(5)
+    );
+    assert_eq!(
+        sweep_back.path(&["cells", "0", "report", "n_queries"]).and_then(Json::as_usize),
+        Some(12)
+    );
 }
 
 // ---------------------------------------------------------------------------

@@ -26,6 +26,19 @@ echo "== scenario smoke run =="
 # kernel -> report). Part of verification.
 cargo run --release -- run --scenario scenarios/fleet_sim.json
 
+echo "== sweep scenario smoke run =="
+# The shipped declarative sweep: parse -> grid -> parallel sessions ->
+# tabulated report, with the JSON-out surface exercised end to end.
+cargo run --release -- run --scenario scenarios/fleet_cache_sweep.json \
+    --json /tmp/hybridflow_sweep_smoke.json
+rm -f /tmp/hybridflow_sweep_smoke.json
+
+echo "== kernel perf bench (smoke, BENCH_SCALE=0.05) =="
+# Emits BENCH_kernel.json (worker-pool + fleet-size scaling, indexed vs
+# the retained linear-scan baseline) and self-validates that the artifact
+# parses with util::json — a malformed emission exits non-zero.
+BENCH_SCALE=0.05 cargo bench --bench kernel
+
 echo "== cargo clippy --no-default-features (advisory) =="
 # Lints are reported but do not fail verification (the seed predates
 # clippy enforcement).
