@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         };
         presets::fleet_cache(bench, n, rate, seed, &knobs)
             .build(Arc::clone(&predictor))
+            .expect("preset spec is valid")
             .run()
     };
 

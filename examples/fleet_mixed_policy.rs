@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
         };
         presets::mixed_policy(bench, n, rate, seed, &knobs)
             .build(Arc::clone(&predictor))
+            .expect("preset spec is valid")
             .run()
     };
 

@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
             Ok(p) => Arc::new(p),
             Err(_) => Arc::new(MirrorPredictor::synthetic_for_tests()),
         };
-    let session = spec.build(predictor);
+    let session = spec.build(predictor)?;
 
     println!(
         "fleet_sim: {n} x {} queries, {n_tenants} tenants, poisson {rate} q/s, \

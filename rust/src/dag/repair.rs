@@ -251,7 +251,7 @@ fn remove_weakest_cycle_edge(d: &mut TaskDag) {
     // paper's "fixed priority order" when confidences are absent/equal).
     let (a, b, _) = edges
         .into_iter()
-        .min_by(|x, y| x.2.partial_cmp(&y.2).unwrap().then(x.0.cmp(&y.0)).then(x.1.cmp(&y.1)))
+        .min_by(|x, y| x.2.total_cmp(&y.2).then(x.0.cmp(&y.0)).then(x.1.cmp(&y.1)))
         .expect("cycle must contain at least one edge");
     let node = &mut d.nodes[b];
     if let Some(k) = node.deps.iter().position(|&p| p == a) {

@@ -851,7 +851,10 @@ pub fn fleet_mixed_policy(ctx: &ExpContext) -> String {
 
     let run = |hedge: bool| -> FleetReport {
         let knobs = MixedPolicyKnobs { hedge, ..Default::default() };
-        presets::mixed_policy(bench, n, 0.6, seed, &knobs).build(ctx.predictor()).run()
+        presets::mixed_policy(bench, n, 0.6, seed, &knobs)
+            .build(ctx.predictor())
+            .expect("canonical preset spec is valid")
+            .run()
     };
 
     let off = run(false);
@@ -959,7 +962,10 @@ pub fn fleet_cache(ctx: &ExpContext) -> String {
 
     let run = |capacity: usize, policy: CachePolicyKind| -> FleetReport {
         let knobs = FleetCacheKnobs { capacity, policy, zipf_distinct, ..Default::default() };
-        presets::fleet_cache(bench, n, 0.5, seed, &knobs).build(ctx.predictor()).run()
+        presets::fleet_cache(bench, n, 0.5, seed, &knobs)
+            .build(ctx.predictor())
+            .expect("canonical preset spec is valid")
+            .run()
     };
 
     let acc = |r: &FleetReport| {
@@ -1132,6 +1138,7 @@ mod tests {
                 .build(std::sync::Arc::new(
                     crate::router::MirrorPredictor::synthetic_for_tests(),
                 ))
+                .expect("canonical preset spec is valid")
                 .run()
         };
         let off = run(false);
@@ -1177,6 +1184,7 @@ mod tests {
                 .build(std::sync::Arc::new(
                     crate::router::MirrorPredictor::synthetic_for_tests(),
                 ))
+                .expect("canonical preset spec is valid")
                 .run()
         };
         let off = run(0);

@@ -8,6 +8,7 @@
 //!   profile  regenerate the App. C profiling dataset (JSONL)
 //!   exp      run a paper experiment (table1..table8, fig3, fig5, calibrate)
 //!   check    verify artifacts + PJRT round trip + mirror parity
+//!   fuzz     random-but-valid scenario specs through the invariant harness
 //!
 //! Unknown options and malformed values print the usage block and exit
 //! non-zero (`validate_command_args`).
@@ -31,13 +32,14 @@ use hybridflow::workload::{generate_queries, profiling, Benchmark};
 use std::path::PathBuf;
 use std::sync::Arc;
 
-const COMMANDS: [(&str, &str); 6] = [
+const COMMANDS: [(&str, &str); 7] = [
     ("plan", "decompose a synthetic query and print plan + repaired DAG"),
     ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario)"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
     ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy|fleet_cache>"),
     ("check", "verify artifacts, PJRT round trip, and mirror parity"),
+    ("fuzz", "run random-but-valid scenario specs through the invariant harness: --cases <n> --seed <s> [--adversarial]"),
 ];
 
 /// Options/flags shared by every pipeline-building command.
@@ -52,6 +54,7 @@ fn allowed_options(cmd: &str) -> Vec<&'static str> {
     let mut allowed: Vec<&'static str> = match cmd {
         "plan" => return vec!["artifacts", "benchmark", "seed"],
         "profile" => return vec!["n", "seed", "out"],
+        "fuzz" => return vec!["cases", "seed", "adversarial"],
         "check" => return vec!["artifacts"],
         "exp" => return vec!["artifacts", "id", "quick", "scale", "seeds", "out", "json"],
         "run" => vec!["n", "scenario", "json"],
@@ -88,7 +91,7 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
         );
     }
     // Typed-value sanity (parse errors surface here, not mid-run).
-    for key in ["n", "workers", "cache", "seeds"] {
+    for key in ["n", "workers", "cache", "seeds", "cases"] {
         let _ = args.get_usize(key)?;
     }
     let _ = args.get_u64_or("seed", 0)?;
@@ -113,7 +116,7 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
 fn main() {
     let args = Args::from_env();
     let code = match args.subcommand.as_deref() {
-        Some(cmd @ ("plan" | "run" | "serve" | "profile" | "exp" | "check")) => {
+        Some(cmd @ ("plan" | "run" | "serve" | "profile" | "exp" | "check" | "fuzz")) => {
             // Argument problems (unknown options, malformed values) print
             // the usage block; runtime failures inside a command print
             // just the error, so the cause is not buried under help text.
@@ -131,6 +134,7 @@ fn main() {
                         "profile" => cmd_profile(&args),
                         "exp" => cmd_exp(&args),
                         "check" => cmd_check(&args),
+                        "fuzz" => cmd_fuzz(&args),
                         _ => unreachable!("dispatch covers every command"),
                     };
                     out.map(|_| 0).unwrap_or_else(|e| {
@@ -295,7 +299,7 @@ fn cmd_run_scenario(args: &Args, path: &str) -> anyhow::Result<()> {
         spec.topology.tenants.len(),
         spec.seed,
     );
-    let session = spec.build(scenario_predictor(args)?);
+    let session = spec.build(scenario_predictor(args)?)?;
     let report = session.run();
     println!("{}", report.render());
     if let Some(out) = args.get("json") {
@@ -539,6 +543,43 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `fuzz --cases N --seed S [--adversarial]`: generate N random-but-valid
+/// scenario specs and run each through the kernel under the invariant
+/// harness ([`hybridflow::testing::fuzz`]). Any violation prints the full
+/// spec JSON plus a one-line repro command and exits non-zero.
+fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
+    use hybridflow::testing::fuzz::{failure_report, run_case, spec_for_case};
+
+    let cases = args.get_usize_or("cases", 200)?;
+    let base_seed = args.get_u64_or("seed", 0)?;
+    let adversarial = args.flag("adversarial");
+    println!(
+        "fuzz: {cases} case(s) from base seed {base_seed} ({} generator)",
+        if adversarial { "adversarial" } else { "valid-surface" },
+    );
+    let t0 = std::time::Instant::now();
+    for case in 0..cases {
+        let spec = spec_for_case(base_seed, case, adversarial);
+        let violations = run_case(&spec);
+        if !violations.is_empty() {
+            eprintln!("{}", failure_report(&spec, base_seed, case, adversarial, &violations));
+            anyhow::bail!(
+                "invariant violation at case {case} (seed {base_seed}): {}",
+                violations[0]
+            );
+        }
+        if (case + 1) % 50 == 0 {
+            println!("  {} / {cases} cases clean", case + 1);
+        }
+    }
+    println!(
+        "fuzz: {cases} case(s) clean in {:.1}s (every spec built, ran twice \
+         byte-identically, and held all kernel invariants)",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -558,6 +599,11 @@ mod tests {
         // Predictor-selection options compose with a scenario file.
         let a = parse("hybridflow run --scenario s.json --artifacts ./artifacts --pjrt");
         assert!(validate_command_args("run", &a).is_ok());
+        let a = parse("hybridflow fuzz --cases 32 --seed 7 --adversarial");
+        assert!(validate_command_args("fuzz", &a).is_ok());
+        // --cases is typed: a malformed count fails fast, not mid-fuzz.
+        let a = parse("hybridflow fuzz --cases lots");
+        assert!(validate_command_args("fuzz", &a).is_err());
     }
 
     #[test]

@@ -57,7 +57,7 @@ pub fn solve_dp(values: &[f64], weights: &[f64], capacity: f64, resolution: f64)
         }
     }
     let best_w = (0..=cap_q)
-        .max_by(|&a, &b| dp[a].partial_cmp(&dp[b]).unwrap())
+        .max_by(|&a, &b| dp[a].total_cmp(&dp[b]))
         .unwrap_or(0);
     (dp[best_w], choice[best_w].clone())
 }
@@ -70,7 +70,9 @@ pub fn solve_greedy_ratio(values: &[f64], weights: &[f64], capacity: f64) -> (f6
     idx.sort_by(|&a, &b| {
         let ra = values[a] / weights[a].max(1e-12);
         let rb = values[b] / weights[b].max(1e-12);
-        rb.partial_cmp(&ra).unwrap()
+        // total_cmp: a NaN utility must not abort the solve (it sorts to
+        // the low-priority end of the descending ratio order).
+        rb.total_cmp(&ra)
     });
     let mut pick = vec![false; n];
     let mut used = 0.0;

@@ -435,12 +435,9 @@ impl ScenarioSpec {
             record_trace: bool_or(eng, "record_trace", defaults.record_trace)?,
             cache,
         };
-        anyhow::ensure!(
-            !engine.hedge || (engine.hedge_threshold.is_finite() && engine.hedge_threshold >= 0.0),
-            "hedge_threshold must be a finite non-negative utility cutoff when hedging is enabled"
-        );
-
-        Ok(ScenarioSpec { name, seed, topology, workload, engine })
+        let spec = ScenarioSpec { name, seed, topology, workload, engine };
+        spec.validate()?;
+        Ok(spec)
     }
 
     /// Parse a spec from JSON text.
@@ -463,13 +460,98 @@ impl ScenarioSpec {
     }
 
     // ------------------------------------------------------------------
-    // Resolution.
+    // Validation + resolution.
     // ------------------------------------------------------------------
+
+    /// Check every numeric knob against the engine's domain: finite and
+    /// in range. Runs at both construction boundaries — [`from_json`]
+    /// (file/CLI specs) and [`build`] (natively constructed specs, e.g.
+    /// the fuzz generator) — so no invalid spec reaches the kernel.
+    ///
+    /// Rejecting non-finite values also protects the serialization
+    /// contract: `render()` emits non-finite numbers as JSON `null`, so
+    /// a spec carrying an infinite cap or threshold would re-parse as a
+    /// *different* spec, breaking the parse-render fixpoint. (JSON text
+    /// like `1e400` overflows to f64 infinity at parse time, which is
+    /// exactly how such values used to sneak in.)
+    ///
+    /// [`from_json`]: ScenarioSpec::from_json
+    /// [`build`]: ScenarioSpec::build
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.topology.tenants.is_empty(),
+            "scenario needs at least one tenant"
+        );
+        for t in &self.topology.tenants {
+            if let Some(cap) = t.k_cap {
+                anyhow::ensure!(
+                    cap.is_finite() && cap >= 0.0,
+                    "tenant '{}' k_cap must be a finite non-negative dollar amount \
+                     (use null for unlimited), got {cap}",
+                    t.name
+                );
+            }
+            if let Some(p) = &t.policy {
+                validate_policy(p)
+                    .map_err(|e| anyhow::anyhow!("tenant '{}' policy: {e}", t.name))?;
+            }
+        }
+        if let Some(cap) = self.topology.global_k_cap {
+            anyhow::ensure!(
+                cap.is_finite() && cap >= 0.0,
+                "global_k_cap must be a finite non-negative dollar amount \
+                 (use null for unlimited), got {cap}"
+            );
+        }
+        anyhow::ensure!(
+            self.workload.n >= 1,
+            "workload must contain at least one query ('n' >= 1)"
+        );
+        match &self.workload.arrival {
+            ArrivalProcess::Poisson { rate } => anyhow::ensure!(
+                rate.is_finite() && *rate > 0.0,
+                "poisson rate must be a finite positive arrival rate, got {rate}"
+            ),
+            ArrivalProcess::Periodic { gap } => anyhow::ensure!(
+                gap.is_finite() && *gap >= 0.0,
+                "periodic gap must be a finite non-negative interval, got {gap}"
+            ),
+            ArrivalProcess::Trace(times) => {
+                for &t in times {
+                    anyhow::ensure!(
+                        t.is_finite() && t >= 0.0,
+                        "trace arrival offsets must be finite and non-negative, got {t}"
+                    );
+                }
+            }
+        }
+        if let Some(z) = &self.workload.zipf {
+            anyhow::ensure!(
+                z.exponent.is_finite() && z.exponent >= 0.0,
+                "zipf exponent must be finite and non-negative, got {}",
+                z.exponent
+            );
+            anyhow::ensure!(z.distinct >= 1, "zipf distinct must be at least 1");
+        }
+        validate_policy(&self.engine.policy)
+            .map_err(|e| anyhow::anyhow!("engine policy: {e}"))?;
+        // Checked even with hedging off: the knob still serializes, and a
+        // non-finite value would break the render fixpoint regardless.
+        anyhow::ensure!(
+            self.engine.hedge_threshold.is_finite() && self.engine.hedge_threshold >= 0.0,
+            "hedge_threshold must be a finite non-negative utility cutoff, got {}",
+            self.engine.hedge_threshold
+        );
+        anyhow::ensure!(self.engine.n_max >= 1, "n_max must be at least 1");
+        Ok(())
+    }
 
     /// Resolve the declarative spec into a runnable [`Session`] over the
     /// paper-calibrated simulation substrate, injecting the utility
     /// predictor (trained mirror, PJRT service, or synthetic fallback).
-    pub fn build(&self, predictor: Arc<dyn UtilityPredictor>) -> Session {
+    /// Fails if the spec does not pass [`ScenarioSpec::validate`].
+    pub fn build(&self, predictor: Arc<dyn UtilityPredictor>) -> anyhow::Result<Session> {
+        self.validate()?;
         let sp = SimParams::default();
         let mut pcfg = PipelineConfig::paper_default(&sp);
         pcfg.policy = self.engine.policy.build(&sp);
@@ -510,8 +592,24 @@ impl ScenarioSpec {
                 .map(|t| t.policy.as_ref().map(|p| p.build(&sp)))
                 .collect(),
         };
-        Session { spec: self.clone(), pipeline, tenants, fleet }
+        Ok(Session { spec: self.clone(), pipeline, tenants, fleet })
     }
+}
+
+/// Numeric-parameter policies carry values that must stay in domain.
+fn validate_policy(p: &PolicySpec) -> anyhow::Result<()> {
+    match p {
+        PolicySpec::Random(pr) => anyhow::ensure!(
+            pr.is_finite() && (0.0..=1.0).contains(pr),
+            "random offload probability must be in [0, 1], got {pr}"
+        ),
+        PolicySpec::Fixed(t) => anyhow::ensure!(
+            t.is_finite(),
+            "fixed threshold must be finite, got {t}"
+        ),
+        _ => {}
+    }
+    Ok(())
 }
 
 fn missing(field: &str) -> anyhow::Error {
@@ -522,18 +620,21 @@ fn req_num(j: &Json, k: &str) -> anyhow::Result<f64> {
     j.get(k).and_then(Json::as_f64).ok_or_else(|| missing(k))
 }
 
-/// Non-negative integer field. Negative or fractional values are schema
+/// Non-negative integer field, via the strict [`Json::as_integer`]
+/// accessor. Negative, fractional, or non-finite values are schema
 /// errors — a bare `as usize` cast would saturate `-1` to 0 (silently
 /// flipping semantics, e.g. `admission_limit: -1` reading as
-/// *unlimited*) and truncate `6.7` to 6 (silently running a different
-/// experiment than written).
+/// *unlimited*), truncate `6.7` to 6 (silently running a different
+/// experiment than written), and read `1e400` (f64 infinity after JSON
+/// parse) as a huge count.
 fn req_count(j: &Json, k: &str) -> anyhow::Result<usize> {
     let v = req_num(j, k)?;
-    anyhow::ensure!(
-        v >= 0.0 && v.fract() == 0.0,
-        "'{k}' must be a non-negative integer, got {v}"
-    );
-    Ok(v as usize)
+    let i = j
+        .get(k)
+        .and_then(Json::as_integer)
+        .filter(|&i| i >= 0)
+        .ok_or_else(|| anyhow::anyhow!("'{k}' must be a non-negative integer, got {v}"))?;
+    Ok(i as usize)
 }
 
 fn count_or(j: &Json, k: &str, default: usize) -> anyhow::Result<usize> {
@@ -730,8 +831,94 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_out_of_domain_knobs() {
+        // Non-finite values slip past range checks like `rate > 0.0`
+        // (infinity is "positive") and would render as JSON `null`,
+        // breaking the parse-render fixpoint — the validator is the
+        // single chokepoint for both the JSON and native build paths.
+        assert!(small_spec().validate().is_ok());
+
+        let mut s = small_spec();
+        s.workload.arrival = ArrivalProcess::Poisson { rate: f64::INFINITY };
+        assert!(s.validate().is_err(), "inf poisson rate");
+        assert!(s.build(predictor()).is_err(), "build must validate too");
+
+        let mut s = small_spec();
+        s.workload.arrival = ArrivalProcess::Trace(vec![1.0, f64::NAN]);
+        assert!(s.validate().is_err(), "NaN trace offset");
+
+        let mut s = small_spec();
+        s.workload.arrival = ArrivalProcess::Trace(vec![-2.0, 1.0]);
+        assert!(s.validate().is_err(), "negative trace offset");
+
+        let mut s = small_spec();
+        s.workload.n = 0;
+        assert!(s.validate().is_err(), "zero-query workload");
+
+        let mut s = small_spec();
+        s.workload.zipf = Some(ZipfMix::new(f64::INFINITY, 3));
+        assert!(s.validate().is_err(), "inf zipf exponent");
+
+        let mut s = small_spec();
+        s.engine.hedge_threshold = f64::INFINITY;
+        s.engine.hedge = false;
+        assert!(s.validate().is_err(), "inf hedge_threshold rejected even with hedge off");
+
+        let mut s = small_spec();
+        s.topology.tenants[0].k_cap = Some(f64::INFINITY);
+        assert!(s.validate().is_err(), "inf tenant cap (None is the unlimited spelling)");
+
+        let mut s = small_spec();
+        s.topology.global_k_cap = Some(f64::NAN);
+        assert!(s.validate().is_err(), "NaN global cap");
+
+        let mut s = small_spec();
+        s.engine.policy = PolicySpec::Fixed(f64::NAN);
+        assert!(s.validate().is_err(), "NaN fixed threshold");
+
+        let mut s = small_spec();
+        s.topology.tenants[1].policy = Some(PolicySpec::Random(f64::INFINITY));
+        assert!(s.validate().is_err(), "inf random probability in tenant override");
+    }
+
+    #[test]
+    fn parse_rejects_nonfinite_json_numbers() {
+        // JSON text like `1e400` parses to f64 infinity (Rust's f64
+        // parser overflows to inf, our Json layer keeps it); the
+        // validator must stop it at the parse boundary.
+        let with = |section: &str, field: &str, v: Json| {
+            let mut j = small_spec().to_json();
+            if let Json::Obj(o) = &mut j {
+                if let Some(Json::Obj(s)) = o.get_mut(section) {
+                    s.insert(field.into(), v);
+                }
+            }
+            j
+        };
+        let mut j = small_spec().to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(wl)) = o.get_mut("workload") {
+                if let Some(Json::Obj(arr)) = wl.get_mut("arrival") {
+                    arr.insert("rate".into(), Json::Num(f64::INFINITY));
+                    arr.insert("gap".into(), Json::Null);
+                    arr.insert("process".into(), Json::Str("poisson".into()));
+                }
+            }
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err(), "inf poisson rate via JSON");
+        let j = with("engine", "hedge_threshold", Json::Num(f64::INFINITY));
+        assert!(ScenarioSpec::from_json(&j).is_err(), "inf hedge_threshold via JSON");
+        let j = with("topology", "global_k_cap", Json::Num(f64::INFINITY));
+        assert!(ScenarioSpec::from_json(&j).is_err(), "inf global cap via JSON");
+        // Non-finite counts fail the strict-integer accessor.
+        let j = with("workload", "n", Json::Num(f64::INFINITY));
+        let err = ScenarioSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains('n'), "count error names the field: {err}");
+    }
+
+    #[test]
     fn session_run_is_deterministic() {
-        let session = small_spec().build(predictor());
+        let session = small_spec().build(predictor()).unwrap();
         let a = session.run();
         let b = session.run();
         assert_eq!(a.results.len(), 6);
@@ -746,7 +933,7 @@ mod tests {
         // The scenario layer must reproduce the historical hand-wired
         // entrypoint exactly: same arrivals, same kernel, same trace.
         let spec = small_spec();
-        let session = spec.build(predictor());
+        let session = spec.build(predictor()).unwrap();
         let via_scenario = session.run();
         let via_server = serve_fleet(
             &session.pipeline,
@@ -767,7 +954,7 @@ mod tests {
         spec.workload.zipf = Some(ZipfMix::new(1.2, 3));
         spec.engine.cache =
             Some(CacheSpec { capacity: 128, policy: CachePolicyKind::Lru, shared_tier: true });
-        let session = spec.build(predictor());
+        let session = spec.build(predictor()).unwrap();
         let via_scenario = session.run();
         let via_server = serve_fleet_zipf(
             &session.pipeline,

@@ -317,17 +317,23 @@ impl SweepSpec {
         // re-clone per cell).
         let (values, specs): (Vec<Vec<f64>>, Vec<ScenarioSpec>) =
             self.cells()?.into_iter().map(|c| (c.values, c.spec)).unzip();
+        // Validate the whole grid up front so a bad cell surfaces as an
+        // error here, not a panic inside a worker thread.
+        for spec in &specs {
+            spec.validate()?;
+        }
         let reports: Vec<Report> = if threads <= 1 {
             specs
                 .into_iter()
-                .map(|spec| spec.build(Arc::clone(&predictor)).run())
+                .map(|spec| spec.build(Arc::clone(&predictor)).expect("cell validated above").run())
                 .collect()
         } else {
             let jobs: Vec<(ScenarioSpec, Arc<dyn UtilityPredictor>)> = specs
                 .into_iter()
                 .map(|spec| (spec, Arc::clone(&predictor)))
                 .collect();
-            ThreadPool::new(threads).map(jobs, |(spec, pred)| spec.build(pred).run())
+            ThreadPool::new(threads)
+                .map(jobs, |(spec, pred)| spec.build(pred).expect("cell validated above").run())
         };
         Ok(SweepReport {
             name: self.name.clone(),

@@ -138,10 +138,10 @@ mod tests {
         let mut times: Vec<f64> = report.results.iter().map(|r| r.completed_at).collect();
         let sorted = {
             let mut s = times.clone();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s.sort_by(f64::total_cmp);
             s
         };
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(f64::total_cmp);
         assert_eq!(times, sorted);
     }
 
@@ -156,7 +156,7 @@ mod tests {
         // Service is strictly serialized: each admission waits for the
         // previous chain's full virtual makespan, not just its planning.
         let mut order: Vec<&FleetQueryResult> = report.results.iter().collect();
-        order.sort_by(|a, b| a.admitted.partial_cmp(&b.admitted).unwrap());
+        order.sort_by(|a, b| a.admitted.total_cmp(&b.admitted));
         for w in order.windows(2) {
             assert!(
                 w[1].admitted >= w[0].completed_at - 1e-9,

@@ -19,6 +19,8 @@
 //! generators shrink toward small values first by sampling sizes from a
 //! low-biased distribution, which keeps failing cases readable.
 
+pub mod fuzz;
+
 use crate::util::rng::Rng;
 use std::ops::Range;
 

@@ -52,6 +52,21 @@ impl Json {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// Strict integer accessor: `Some` only for finite numbers with no
+    /// fractional part inside the exactly-representable f64 range
+    /// (|n| <= 2^53). Unlike [`Json::as_i64`]/[`Json::as_usize`], which
+    /// truncate (`2.7` reads as `2`), this rejects fractional and
+    /// non-finite values — the accessor spec fields must use so that
+    /// `"edge_workers": 2.7` is a schema error, not a different run.
+    pub fn as_integer(&self) -> Option<i64> {
+        match self.as_f64() {
+            Some(n) if n.is_finite() && n.fract() == 0.0 && n.abs() <= 9_007_199_254_740_992.0 => {
+                Some(n as i64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None })
     }
@@ -541,6 +556,22 @@ mod tests {
         assert_eq!(v.f64_array().unwrap(), vec![1.0, 2.0, 3.5]);
         let bad = Json::parse("[1, \"x\"]").unwrap();
         assert!(bad.f64_array().is_none());
+    }
+
+    #[test]
+    fn as_integer_is_strict() {
+        assert_eq!(Json::Num(5.0).as_integer(), Some(5));
+        assert_eq!(Json::Num(-3.0).as_integer(), Some(-3));
+        assert_eq!(Json::Num(0.0).as_integer(), Some(0));
+        // Fractional values truncate under as_i64/as_usize but must be
+        // rejected by the strict accessor (regression: silent `2.7` -> 2).
+        assert_eq!(Json::Num(2.7).as_i64(), Some(2));
+        assert_eq!(Json::Num(2.7).as_integer(), None);
+        assert_eq!(Json::Num(f64::NAN).as_integer(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_integer(), None);
+        // Beyond 2^53 integers are no longer exactly representable.
+        assert_eq!(Json::Num(1e16).as_integer(), None);
+        assert_eq!(Json::Str("5".into()).as_integer(), None);
     }
 
     #[test]

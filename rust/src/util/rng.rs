@@ -275,7 +275,7 @@ mod tests {
         let mut r = Rng::new(4);
         let mu = 4.2;
         let mut xs: Vec<f64> = (0..20000).map(|_| r.lognormal(mu, 0.4)).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let median = xs[xs.len() / 2];
         assert!((median.ln() - mu).abs() < 0.03, "median ln {}", median.ln());
     }

@@ -116,8 +116,10 @@ impl Summary {
         for &x in xs {
             w.push(x);
         }
+        // total_cmp: a stray NaN sample must degrade the affected
+        // quantiles, not abort the whole report (NaN sorts last).
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n: xs.len(),
             mean: w.mean(),
@@ -169,7 +171,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     percentile_sorted(&sorted, p)
 }
 
@@ -279,6 +281,19 @@ mod tests {
         assert_eq!(a.mean, b.mean);
         assert_eq!(a.p95, b.p95);
         assert_eq!(a.n, b.n);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // Regression: `partial_cmp().unwrap()` used to panic here, taking
+        // the whole fleet report down with one corrupt latency sample.
+        // total_cmp sorts the NaN last, so finite quantiles stay usable.
+        let s = Summary::of(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN sorts above every finite value");
+        assert!((s.p50 - 2.0).abs() < 1e-12);
+        assert!((percentile(&[f64::NAN, 3.0], 0.0) - 3.0).abs() < 1e-12);
     }
 
     #[test]

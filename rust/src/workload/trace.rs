@@ -26,7 +26,12 @@ pub enum ArrivalProcess {
     /// Explicit absolute arrival offsets (sorted ascending before use, so
     /// the nondecreasing contract holds for any input order). When fewer
     /// than `n` offsets are given, the tail continues past the last offset
-    /// at the trace's mean gap (1.0s for traces shorter than two entries).
+    /// at the trace's mean gap. Degenerate traces keep the "starting near
+    /// 0" contract explicit: an **empty** trace starts at t=0.0 and
+    /// extends at a 1.0s gap; a **single-entry** trace extends at a 1.0s
+    /// gap (no recorded gap to average); a **constant** trace (all offsets
+    /// equal) has mean gap 0, so every extended arrival lands on the
+    /// repeated offset.
     Trace(Vec<f64>),
 }
 
@@ -57,9 +62,13 @@ impl ArrivalProcess {
                 } else {
                     1.0
                 };
-                let last = sorted.last().copied().unwrap_or(0.0);
                 let mut out: Vec<f64> = sorted.into_iter().take(n).collect();
-                let mut t = last;
+                if out.is_empty() && n > 0 {
+                    // Empty trace: start at 0.0 (the documented "starting
+                    // near 0" contract; extending from t=1.0 skipped it).
+                    out.push(0.0);
+                }
+                let mut t = out.last().copied().unwrap_or(0.0);
                 while out.len() < n {
                     t += mean_gap;
                     out.push(t);
@@ -358,10 +367,26 @@ mod tests {
         assert_eq!(&a[..3], &[0.0, 1.0, 4.0]);
         // Mean gap of the recorded trace is 2.0.
         assert!((a[3] - 6.0).abs() < 1e-12 && (a[4] - 8.0).abs() < 1e-12);
-        let empty = ArrivalProcess::Trace(vec![]).sample(3, 0);
-        assert_eq!(empty, vec![1.0, 2.0, 3.0]);
         // Unsorted input is sorted first, keeping the output nondecreasing.
         let unsorted = ArrivalProcess::Trace(vec![10.0, 0.0]).sample(3, 0);
         assert_eq!(unsorted, vec![0.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn trace_arrivals_degenerate_traces() {
+        // Empty trace: starts at 0.0 (regression — it used to extend from
+        // t=1.0, violating the documented "starting near 0" contract).
+        let empty = ArrivalProcess::Trace(vec![]).sample(3, 0);
+        assert_eq!(empty, vec![0.0, 1.0, 2.0]);
+        // Single-entry trace: no recorded gap, extends at 1.0s.
+        let single = ArrivalProcess::Trace(vec![5.0]).sample(3, 0);
+        assert_eq!(single, vec![5.0, 6.0, 7.0]);
+        // Constant trace: mean gap is 0, so every extended arrival lands
+        // on the repeated offset (a recorded burst stays a burst).
+        let constant = ArrivalProcess::Trace(vec![2.0, 2.0]).sample(4, 0);
+        assert_eq!(constant, vec![2.0, 2.0, 2.0, 2.0]);
+        // n smaller than the trace just truncates.
+        let truncated = ArrivalProcess::Trace(vec![0.0, 1.0, 2.0]).sample(2, 0);
+        assert_eq!(truncated, vec![0.0, 1.0]);
     }
 }

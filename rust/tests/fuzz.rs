@@ -1,0 +1,80 @@
+//! Bounded fuzz pass + regression-corpus replay.
+//!
+//! The corpus (`rust/tests/corpus/*.json`) is replayed first: every bug
+//! the fuzz harness ever flushed out is checked in as a minimized spec.
+//! `reject_*.json` files must fail `ScenarioSpec::parse` (validation
+//! regressions); `run_*.json` files must parse and hold every kernel
+//! invariant (crash/behavior regressions). Then a bounded randomized
+//! sweep runs fresh specs — case count via `HYBRIDFLOW_FUZZ_CASES`
+//! (default 64; CI keeps it small, `hybridflow fuzz` goes deep).
+//!
+//! A failing case prints the full spec JSON plus a one-line repro:
+//! `hybridflow fuzz --cases 1 --seed <base+case> [--adversarial]`.
+
+use hybridflow::scenario::ScenarioSpec;
+use hybridflow::testing::fuzz::{failure_report, run_case, spec_for_case};
+use std::path::PathBuf;
+
+fn cases() -> usize {
+    std::env::var("HYBRIDFLOW_FUZZ_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/corpus")
+}
+
+#[test]
+fn corpus_replays_clean() {
+    let dir = corpus_dir();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {}: {e}", dir.display()))
+        .map(|entry| entry.expect("corpus dir entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 8, "corpus unexpectedly small: {} file(s)", files.len());
+    for path in files {
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let text = std::fs::read_to_string(&path).expect("read corpus spec");
+        if name.starts_with("reject_") {
+            assert!(
+                ScenarioSpec::parse(&text).is_err(),
+                "{name}: spec must be rejected at parse (validation regression)"
+            );
+        } else if name.starts_with("run_") {
+            let spec = ScenarioSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("{name}: corpus spec must parse: {e}"));
+            let violations = run_case(&spec);
+            assert!(
+                violations.is_empty(),
+                "{name}: corpus spec violated invariants:\n  - {}",
+                violations.join("\n  - ")
+            );
+        } else {
+            panic!("corpus file '{name}' must be named reject_*.json or run_*.json");
+        }
+    }
+}
+
+#[test]
+fn random_specs_hold_all_invariants() {
+    let base = 0xF00D;
+    for case in 0..cases() {
+        let spec = spec_for_case(base, case, false);
+        let violations = run_case(&spec);
+        assert!(violations.is_empty(), "{}", failure_report(&spec, base, case, false, &violations));
+    }
+}
+
+#[test]
+fn adversarial_specs_hold_all_invariants() {
+    let base = 0xF00D;
+    for case in 0..cases() {
+        let spec = spec_for_case(base, case, true);
+        let violations = run_case(&spec);
+        assert!(violations.is_empty(), "{}", failure_report(&spec, base, case, true, &violations));
+    }
+}

@@ -197,7 +197,8 @@ fn fleet_report_json_roundtrips_through_util_json() {
         11,
         &FleetCacheKnobs { zipf_distinct: 4, record_trace: false, ..Default::default() },
     )
-    .build(predictor());
+    .build(predictor())
+    .expect("preset spec is valid");
     let report = session.run();
     let j = report.to_json();
     let text = j.to_string_pretty();
@@ -253,7 +254,7 @@ fn fleet_report_json_roundtrips_through_util_json() {
 /// pinned trace (`rust/tests/golden/fleet_trace.txt`) byte-for-byte.
 #[test]
 fn golden_trace_reproduces_through_scenario_session() {
-    let session = presets::golden_fleet().build(predictor());
+    let session = presets::golden_fleet().build(predictor()).expect("preset spec is valid");
     let first = session.run().trace_text();
     let second = session.run().trace_text();
     assert_eq!(first, second, "scenario session is not deterministic");
@@ -285,7 +286,7 @@ fn golden_trace_reproduces_through_scenario_session() {
 fn shipped_mixed_policy_spec_matches_handwired_construction() {
     let path = repo_root().join("scenarios/fleet_mixed_policy.json");
     let spec = ScenarioSpec::from_file(&path).expect("shipped spec parses");
-    let via_scenario = spec.build(predictor()).run();
+    let via_scenario = spec.build(predictor()).expect("shipped spec is valid").run();
 
     // Hand-wired: what PR 2/3 code had to write out by hand.
     let sp = SimParams::default();
@@ -342,7 +343,7 @@ fn shipped_fleet_cache_spec_runs_and_hits() {
     let path = repo_root().join("scenarios/fleet_cache.json");
     let spec = ScenarioSpec::from_file(&path).expect("shipped spec parses");
     assert_eq!(spec.engine.cache.as_ref().map(|c| c.policy), Some(CachePolicyKind::Lru));
-    let session = spec.build(predictor());
+    let session = spec.build(predictor()).expect("shipped spec is valid");
     let a = session.run();
     let b = session.run();
     assert_eq!(a.trace_text(), b.trace_text(), "cached scenario must be reproducible");

@@ -14,6 +14,15 @@ echo "== cargo test -q =="
 # equivalence, and the fleet property suite.
 cargo test -q
 
+echo "== bounded fuzz pass (invariant harness) =="
+# Random-but-valid scenario specs through the kernel under the invariant
+# checker, plus the adversarial boundary-value generator. The test-suite
+# pass above already replayed the regression corpus and ran
+# HYBRIDFLOW_FUZZ_CASES (default 64) randomized cases; this drives the
+# CLI surface end to end.
+cargo run --release -- fuzz --cases 32 --seed 0
+cargo run --release -- fuzz --cases 32 --seed 0 --adversarial
+
 echo "== example smoke runs =="
 # Tiny-N runs of the fleet examples so regressions in runnable drivers
 # (not just the library) fail fast. These are part of verification.
