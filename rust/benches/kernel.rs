@@ -16,6 +16,12 @@
 //!   indexed events/sec across W is the "no linear-in-W term" check.
 //! * `fleet_sweep` — fleet sizes 1k → 10k queries at a fixed pool,
 //!   pinning end-to-end kernel scaling in workload size.
+//! * `shard_scaling` — the same 100k-query fleet partitioned across 1, 2,
+//!   4, and 8 kernel shards (`run_fleet_sharded`, one OS thread per
+//!   shard), reporting events/sec and queries/sec per shard count plus
+//!   the 4-shard-vs-1 throughput ratio, and one million-query cell
+//!   (scaled by `BENCH_SCALE`) proving fleets far past the single-heap
+//!   comfort zone complete under the bench.
 //!
 //! Scale via env: `BENCH_SCALE` (default 1.0; `scripts/verify.sh` smoke
 //! runs at 0.05), `BENCH_OUT` (default `BENCH_kernel.json`). After
@@ -28,7 +34,7 @@ use hybridflow::models::SimExecutor;
 use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
 use hybridflow::planner::synthetic::SyntheticPlanner;
 use hybridflow::router::{MirrorPredictor, RoutePolicy};
-use hybridflow::scheduler::fleet::{run_fleet, FleetArrival, FleetConfig};
+use hybridflow::scheduler::fleet::{run_fleet, run_fleet_sharded, FleetArrival, FleetConfig};
 use hybridflow::scheduler::pool::WorkerPool;
 use hybridflow::scheduler::ScheduleConfig;
 use hybridflow::util::json::Json;
@@ -121,14 +127,18 @@ struct KernelRunStats {
 }
 
 impl KernelRunStats {
-    fn to_json(&self, queries: usize) -> Json {
-        Json::obj(vec![
+    fn fields(&self, queries: usize) -> Vec<(&'static str, Json)> {
+        vec![
             ("queries", Json::Num(queries as f64)),
             ("events", Json::Num(self.events as f64)),
             ("wall_s", Json::Num(self.wall_s)),
             ("events_per_s", Json::Num(self.events_per_s)),
             ("queries_per_s", Json::Num(self.queries_per_s)),
-        ])
+        ]
+    }
+
+    fn to_json(&self, queries: usize) -> Json {
+        Json::obj(self.fields(queries))
     }
 }
 
@@ -151,6 +161,35 @@ fn run_kernel(workers: usize, n: usize, seed: u64, linear_pools: bool) -> Kernel
     let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
     let events: usize = report.results.iter().map(|r| r.exec.events.len()).sum();
     assert!(report.clock_monotone, "bench run violated clock monotonicity");
+    black_box(report.total_api_cost);
+    KernelRunStats {
+        wall_s,
+        events,
+        events_per_s: events as f64 / wall_s,
+        queries_per_s: n as f64 / wall_s,
+    }
+}
+
+/// One sharded kernel run: the same near-simultaneous workload as
+/// [`run_kernel`], split across `shards` per-shard kernels on one OS
+/// thread each (up to the machine's parallelism). `shards = 1` is the
+/// sharded path's overhead baseline.
+fn run_sharded_kernel(workers: usize, n: usize, seed: u64, shards: usize) -> KernelRunStats {
+    let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, query)| FleetArrival { time: i as f64 * 0.005, tenant: 0, query })
+        .collect();
+    let cfg = FleetConfig { record_trace: false, ..Default::default() };
+    let tenants = vec![TenantPool::unlimited("bench")];
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let t0 = Instant::now();
+    let report =
+        run_fleet_sharded(move || pipeline(workers, false), &cfg, tenants, arrivals, seed, shards, threads);
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let events: usize = report.results.iter().map(|r| r.exec.events.len()).sum();
+    assert!(report.clock_monotone, "sharded bench run violated clock monotonicity");
+    assert_eq!(report.results.len(), n, "sharded merge dropped queries");
     black_box(report.total_api_cost);
     KernelRunStats {
         wall_s,
@@ -215,6 +254,40 @@ fn main() {
         })
         .collect();
 
+    println!("-- shard scaling (100k-query fleet, 64-worker pools per shard) --");
+    let n_shard_cell = ((100_000.0 * scale).round() as usize).max(1_000);
+    let mut shard_ev: Vec<(usize, f64)> = Vec::new();
+    let mut shard_scaling: Vec<Json> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&shards| {
+            let stats = run_sharded_kernel(64, n_shard_cell, 21, shards);
+            println!(
+                "shards={shards:<2} n={n_shard_cell:<7} {:>10.0} ev/s   {:>8.1} q/s   wall {:.2}s",
+                stats.events_per_s, stats.queries_per_s, stats.wall_s,
+            );
+            shard_ev.push((shards, stats.events_per_s));
+            let mut cell = vec![("shards", Json::Num(shards as f64))];
+            cell.extend(stats.fields(n_shard_cell));
+            Json::obj(cell)
+        })
+        .collect();
+    let ev_at = |target: usize| {
+        shard_ev.iter().find(|(s, _)| *s == target).map(|(_, e)| *e).unwrap_or(0.0)
+    };
+    let shard4_vs_1 = ev_at(4) / ev_at(1).max(1e-9);
+    // The million-query cell: far past the single-heap comfort zone, on 8
+    // shards. Scaled by BENCH_SCALE like every other cell so verify.sh's
+    // smoke run stays fast.
+    let n_million = ((1_000_000.0 * scale).round() as usize).max(5_000);
+    let big = run_sharded_kernel(64, n_million, 23, 8);
+    println!(
+        "shards=8  n={n_million:<7} {:>10.0} ev/s   {:>8.1} q/s   wall {:.2}s  (million-query cell)",
+        big.events_per_s, big.queries_per_s, big.wall_s,
+    );
+    let mut big_cell = vec![("shards", Json::Num(8.0)), ("million_query_cell", Json::Bool(true))];
+    big_cell.extend(big.fields(n_million));
+    shard_scaling.push(Json::obj(big_cell));
+
     // Flatness check: the indexed kernel's events/sec from the smallest
     // to the largest pool (a linear-in-W dispatch term would collapse the
     // tail of this ratio toward zero).
@@ -230,6 +303,8 @@ fn main() {
         ("pool_microbench", Json::Arr(micro)),
         ("worker_sweep", Json::Arr(worker_sweep)),
         ("fleet_sweep", Json::Arr(fleet_sweep)),
+        ("shard_scaling", Json::Arr(shard_scaling)),
+        ("shard_scaling_4_vs_1", Json::Num(shard4_vs_1)),
         ("indexed_flatness_1024_vs_4", Json::Num(flatness)),
     ]);
     let mut text = doc.to_string_pretty();
@@ -255,7 +330,7 @@ fn main() {
             std::process::exit(1);
         }
     };
-    for key in ["pool_microbench", "worker_sweep", "fleet_sweep"] {
+    for key in ["pool_microbench", "worker_sweep", "fleet_sweep", "shard_scaling"] {
         if parsed.get(key).and_then(Json::as_arr).map_or(true, <[Json]>::is_empty) {
             eprintln!("error: {out_path} is missing section '{key}'");
             std::process::exit(1);
@@ -268,4 +343,9 @@ fn main() {
              (indexed events/sec flatness 1024-vs-4 workers: {flatness:.2})"
         );
     }
+    println!(
+        "shard scaling: 4 shards vs 1 on the {n_shard_cell}-query fleet: {shard4_vs_1:.2}x \
+         events/s; {n_million}-query fleet completed on 8 shards in {:.2}s",
+        big.wall_s
+    );
 }

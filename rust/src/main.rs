@@ -34,7 +34,7 @@ use std::sync::Arc;
 
 const COMMANDS: [(&str, &str); 7] = [
     ("plan", "decompose a synthetic query and print plan + repaired DAG"),
-    ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario)"),
+    ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario; --shards N overrides its shard count)"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
     ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy|fleet_cache>"),
@@ -57,7 +57,7 @@ fn allowed_options(cmd: &str) -> Vec<&'static str> {
         "fuzz" => return vec!["cases", "seed", "adversarial"],
         "check" => return vec!["artifacts"],
         "exp" => return vec!["artifacts", "id", "quick", "scale", "seeds", "out", "json"],
-        "run" => vec!["n", "scenario", "json"],
+        "run" => vec!["n", "scenario", "json", "shards"],
         "serve" => vec!["n", "workers", "trace-in", "trace-out", "metrics", "json"],
         _ => vec![],
     };
@@ -70,6 +70,8 @@ fn allowed_options(cmd: &str) -> Vec<&'static str> {
 /// silently ignored (or panicking deep inside a run).
 /// Options that would silently lose to a `--scenario` spec (the spec
 /// defines the whole run: workload, seed, and every engine knob).
+/// `--shards` is deliberately absent: it is an explicit topology
+/// *override* applied on top of the spec, not a competing definition.
 const SCENARIO_CONFLICTS: &[&str] = &[
     "benchmark", "n", "seed", "fixed-tau", "chain", "hedge", "hedge-threshold",
     "calibrated", "cache", "cache-policy",
@@ -91,8 +93,20 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
         );
     }
     // Typed-value sanity (parse errors surface here, not mid-run).
-    for key in ["n", "workers", "cache", "seeds", "cases"] {
+    for key in ["n", "workers", "cache", "seeds", "cases", "shards"] {
         let _ = args.get_usize(key)?;
+    }
+    // `--shards` overrides the spec's `topology.shards`, so it only makes
+    // sense next to a scenario file, and zero shards is meaningless
+    // (negative/fractional values already fail the usize parse above).
+    if let Some(shards) = args.get_usize("shards")? {
+        anyhow::ensure!(shards >= 1, "--shards expects a positive shard count, got {shards}");
+        if cmd == "run" {
+            anyhow::ensure!(
+                args.get("scenario").is_some(),
+                "--shards overrides a scenario's topology; pass it with --scenario <file.json>"
+            );
+        }
     }
     let _ = args.get_u64_or("seed", 0)?;
     for key in ["fixed-tau", "scale"] {
@@ -266,7 +280,10 @@ fn write_json(path: &str, j: &Json) -> anyhow::Result<()> {
 /// `run --scenario <file.json>` on a sweep file: resolve the grid, fan it
 /// out across the thread pool, print the tabulated cells.
 fn cmd_run_sweep(args: &Args, path: &str, j: &Json) -> anyhow::Result<()> {
-    let sweep = SweepSpec::from_json(j)?;
+    let mut sweep = SweepSpec::from_json(j)?;
+    if let Some(shards) = args.get_usize("shards")? {
+        sweep.base.topology.shards = shards;
+    }
     let n_cells: usize = sweep.axes.iter().map(|a| a.values.len()).product();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     println!(
@@ -290,13 +307,17 @@ fn cmd_run_scenario(args: &Args, path: &str) -> anyhow::Result<()> {
     if SweepSpec::is_sweep_json(&parsed) {
         return cmd_run_sweep(args, path, &parsed);
     }
-    let spec = ScenarioSpec::from_json(&parsed)?;
+    let mut spec = ScenarioSpec::from_json(&parsed)?;
+    if let Some(shards) = args.get_usize("shards")? {
+        spec.topology.shards = shards;
+    }
     println!(
-        "scenario '{}' from {path}: {} x {} queries, {} tenants, seed {}",
+        "scenario '{}' from {path}: {} x {} queries, {} tenants, {} shard(s), seed {}",
         spec.name,
         spec.workload.n,
         spec.workload.benchmark.display(),
         spec.topology.tenants.len(),
+        spec.topology.shards,
         spec.seed,
     );
     let session = spec.build(scenario_predictor(args)?)?;
@@ -548,7 +569,7 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
 /// harness ([`hybridflow::testing::fuzz`]). Any violation prints the full
 /// spec JSON plus a one-line repro command and exits non-zero.
 fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
-    use hybridflow::testing::fuzz::{failure_report, run_case, spec_for_case};
+    use hybridflow::testing::fuzz::{failure_report, minimize, run_case, spec_for_case};
 
     let cases = args.get_usize_or("cases", 200)?;
     let base_seed = args.get_u64_or("seed", 0)?;
@@ -563,6 +584,15 @@ fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
         let violations = run_case(&spec);
         if !violations.is_empty() {
             eprintln!("{}", failure_report(&spec, base_seed, case, adversarial, &violations));
+            // Shrink the offender toward defaults while it still fails,
+            // so the corpus entry checks in minimized (PR 6 convention).
+            let min = minimize(&spec, |s| !run_case(s).is_empty());
+            if min != spec {
+                eprintln!(
+                    "minimized spec (still failing; check in under rust/tests/corpus/):\n{}",
+                    min.render()
+                );
+            }
             anyhow::bail!(
                 "invariant violation at case {case} (seed {base_seed}): {}",
                 violations[0]
@@ -601,6 +631,10 @@ mod tests {
         assert!(validate_command_args("run", &a).is_ok());
         let a = parse("hybridflow fuzz --cases 32 --seed 7 --adversarial");
         assert!(validate_command_args("fuzz", &a).is_ok());
+        // --shards composes with a scenario file (it is an override, not
+        // a competing run definition).
+        let a = parse("hybridflow run --scenario scenarios/fleet_sharded.json --shards 4");
+        assert!(validate_command_args("run", &a).is_ok());
         // --cases is typed: a malformed count fails fast, not mid-fuzz.
         let a = parse("hybridflow fuzz --cases lots");
         assert!(validate_command_args("fuzz", &a).is_err());
@@ -664,6 +698,20 @@ mod tests {
         assert!(validate_command_args("run", &a).is_err(), "non-integer n");
         let a = parse("hybridflow serve --workers -3");
         assert!(validate_command_args("serve", &a).is_err(), "negative workers");
+    }
+
+    #[test]
+    fn shards_override_is_validated() {
+        // Zero shards is meaningless; fractional and negative counts fail
+        // the usize parse.
+        for bad in ["0", "2.5", "-1", "four"] {
+            let a = parse(&format!("hybridflow run --scenario s.json --shards {bad}"));
+            assert!(validate_command_args("run", &a).is_err(), "--shards {bad}");
+        }
+        // The override needs a scenario to override.
+        let a = parse("hybridflow run --n 5 --shards 2");
+        let err = validate_command_args("run", &a).unwrap_err().to_string();
+        assert!(err.contains("--scenario"), "{err}");
     }
 
     #[test]

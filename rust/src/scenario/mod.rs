@@ -41,7 +41,7 @@ use crate::models::SimExecutor;
 use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
 use crate::planner::synthetic::SyntheticPlanner;
 use crate::router::{RoutePolicy, UtilityPredictor};
-use crate::sim::{run_fleet, FleetArrival, FleetConfig, FleetReport};
+use crate::sim::{run_fleet, run_fleet_sharded, FleetArrival, FleetConfig, FleetReport};
 use crate::util::json::Json;
 use crate::workload::trace::{ArrivalProcess, ZipfMix};
 use crate::workload::{generate_queries, Benchmark};
@@ -156,6 +156,12 @@ pub struct TopologySpec {
     pub admission_limit: usize,
     /// Fleet-wide dollar ceiling; `None` = unlimited (JSON `null`).
     pub global_k_cap: Option<f64>,
+    /// Independent fleet shards, each modeling its own worker pools,
+    /// cache, admission queue, and `1/shards` of every dollar cap (see
+    /// [`crate::sim::run_fleet_sharded`]). `1` (the default when the
+    /// field is absent) is the single-kernel fleet, byte-identical to the
+    /// pre-sharding engine.
+    pub shards: usize,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -308,6 +314,7 @@ impl ScenarioSpec {
                     ("cloud_workers", Json::Num(self.topology.cloud_workers as f64)),
                     ("admission_limit", Json::Num(self.topology.admission_limit as f64)),
                     ("global_k_cap", opt_num(self.topology.global_k_cap)),
+                    ("shards", Json::Num(self.topology.shards as f64)),
                     ("tenants", Json::Arr(tenants)),
                 ]),
             ),
@@ -368,6 +375,9 @@ impl ScenarioSpec {
             cloud_workers: req_count(topo, "cloud_workers")?,
             admission_limit: count_or(topo, "admission_limit", 0)?,
             global_k_cap: opt_num_field(topo, "global_k_cap")?,
+            // Absent in pre-sharding spec files: default to the single
+            // unsharded kernel.
+            shards: count_or(topo, "shards", 1)?,
             tenants,
         };
 
@@ -504,6 +514,10 @@ impl ScenarioSpec {
             );
         }
         anyhow::ensure!(
+            self.topology.shards >= 1,
+            "topology needs at least one shard ('shards' >= 1)"
+        );
+        anyhow::ensure!(
             self.workload.n >= 1,
             "workload must contain at least one query ('n' >= 1)"
         );
@@ -553,28 +567,7 @@ impl ScenarioSpec {
     pub fn build(&self, predictor: Arc<dyn UtilityPredictor>) -> anyhow::Result<Session> {
         self.validate()?;
         let sp = SimParams::default();
-        let mut pcfg = PipelineConfig::paper_default(&sp);
-        pcfg.policy = self.engine.policy.build(&sp);
-        pcfg.n_max = self.engine.n_max;
-        pcfg.schedule.chain_mode = self.engine.chain_mode;
-        pcfg.schedule.batch_frontier = self.engine.batch_frontier;
-        pcfg.schedule.hedge = self.engine.hedge;
-        pcfg.schedule.hedge_threshold = self.engine.hedge_threshold;
-        pcfg.schedule.edge_workers = self.topology.edge_workers;
-        pcfg.schedule.cloud_workers = self.topology.cloud_workers;
-        if let Some(c) = &self.engine.cache {
-            if c.capacity > 0 {
-                let cache = SubtaskCache::new(c.capacity, c.policy);
-                let cache = if c.shared_tier { cache.with_shared_tier() } else { cache };
-                pcfg.schedule.cache = Some(Arc::new(cache));
-            }
-        }
-        let pipeline = HybridFlowPipeline::with_predictor(
-            SimExecutor::paper_pair(),
-            SyntheticPlanner::paper_main(),
-            predictor,
-            pcfg,
-        );
+        let pipeline = build_pipeline(self, Arc::clone(&predictor));
         let tenants: Vec<TenantPool> = self
             .topology
             .tenants
@@ -592,8 +585,37 @@ impl ScenarioSpec {
                 .map(|t| t.policy.as_ref().map(|p| p.build(&sp)))
                 .collect(),
         };
-        Ok(Session { spec: self.clone(), pipeline, tenants, fleet })
+        Ok(Session { spec: self.clone(), pipeline, tenants, fleet, predictor })
     }
+}
+
+/// Assemble the pipeline a spec describes. Factored out of
+/// [`ScenarioSpec::build`] so sharded runs can stamp out one identical,
+/// independent pipeline (own cache, own router state) per shard.
+fn build_pipeline(spec: &ScenarioSpec, predictor: Arc<dyn UtilityPredictor>) -> HybridFlowPipeline {
+    let sp = SimParams::default();
+    let mut pcfg = PipelineConfig::paper_default(&sp);
+    pcfg.policy = spec.engine.policy.build(&sp);
+    pcfg.n_max = spec.engine.n_max;
+    pcfg.schedule.chain_mode = spec.engine.chain_mode;
+    pcfg.schedule.batch_frontier = spec.engine.batch_frontier;
+    pcfg.schedule.hedge = spec.engine.hedge;
+    pcfg.schedule.hedge_threshold = spec.engine.hedge_threshold;
+    pcfg.schedule.edge_workers = spec.topology.edge_workers;
+    pcfg.schedule.cloud_workers = spec.topology.cloud_workers;
+    if let Some(c) = &spec.engine.cache {
+        if c.capacity > 0 {
+            let cache = SubtaskCache::new(c.capacity, c.policy);
+            let cache = if c.shared_tier { cache.with_shared_tier() } else { cache };
+            pcfg.schedule.cache = Some(Arc::new(cache));
+        }
+    }
+    HybridFlowPipeline::with_predictor(
+        SimExecutor::paper_pair(),
+        SyntheticPlanner::paper_main(),
+        predictor,
+        pcfg,
+    )
 }
 
 /// Numeric-parameter policies carry values that must stay in domain.
@@ -691,13 +713,52 @@ pub struct Session {
     pub pipeline: HybridFlowPipeline,
     pub tenants: Vec<TenantPool>,
     pub fleet: FleetConfig,
+    /// Retained so sharded runs can build fresh per-shard pipelines that
+    /// share the predictor but nothing mutable.
+    predictor: Arc<dyn UtilityPredictor>,
 }
 
 impl Session {
     /// Execute the scenario end-to-end and return the kernel's report.
+    ///
+    /// Specs with `topology.shards > 1` fan out across one OS thread per
+    /// shard (capped at the machine's parallelism); the report and trace
+    /// bytes are independent of the thread count.
     pub fn run(&self) -> Report {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        self.run_with_threads(threads)
+    }
+
+    /// [`Session::run`] with an explicit worker-thread budget for the
+    /// shard fan-out. `shards = 1` specs take the unsharded kernel path
+    /// regardless of `threads`, preserving the golden-trace bytes.
+    pub fn run_with_threads(&self, threads: usize) -> Report {
+        if self.spec.topology.shards <= 1 {
+            let arrivals = self.spec.workload.arrivals(self.tenants.len(), self.spec.seed);
+            run_fleet(&self.pipeline, &self.fleet, self.tenants.clone(), arrivals, self.spec.seed)
+        } else {
+            self.run_sharded(self.spec.topology.shards, threads)
+        }
+    }
+
+    /// Run the scenario's workload across `shards` independent kernel
+    /// shards (see [`crate::sim::run_fleet_sharded`]), overriding the
+    /// spec's own `topology.shards`. Used by the CLI `--shards` flag and
+    /// the fuzz harness's shard/serial identity invariant.
+    pub fn run_sharded(&self, shards: usize, threads: usize) -> Report {
         let arrivals = self.spec.workload.arrivals(self.tenants.len(), self.spec.seed);
-        run_fleet(&self.pipeline, &self.fleet, self.tenants.clone(), arrivals, self.spec.seed)
+        let spec = self.spec.clone();
+        let predictor = Arc::clone(&self.predictor);
+        let make_pipeline = move || build_pipeline(&spec, Arc::clone(&predictor));
+        run_fleet_sharded(
+            make_pipeline,
+            &self.fleet,
+            self.tenants.clone(),
+            arrivals,
+            self.spec.seed,
+            shards,
+            threads,
+        )
     }
 }
 
@@ -720,6 +781,7 @@ mod tests {
                 cloud_workers: 4,
                 admission_limit: 0,
                 global_k_cap: None,
+                shards: 1,
                 tenants: vec![
                     TenantSpec::unlimited("a"),
                     TenantSpec::capped("b", 0.01).with_policy(PolicySpec::AllEdge),
@@ -967,5 +1029,76 @@ mod tests {
             spec.seed,
         );
         assert_eq!(via_scenario.trace_text(), via_server.trace_text());
+    }
+
+    #[test]
+    fn shards_field_roundtrips_and_defaults_to_one() {
+        let mut spec = small_spec();
+        spec.topology.shards = 4;
+        let back = ScenarioSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec, "shards survives the JSON round trip");
+        assert_eq!(back.render(), spec.render(), "render fixpoint with shards");
+        // Pre-sharding spec files carry no "shards" key: default is 1.
+        let mut j = small_spec().to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(t)) = o.get_mut("topology") {
+                t.remove("shards");
+            }
+        }
+        let parsed = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(parsed.topology.shards, 1, "absent shards reads as the unsharded kernel");
+    }
+
+    #[test]
+    fn validate_rejects_zero_shards() {
+        let mut s = small_spec();
+        s.topology.shards = 0;
+        assert!(s.validate().is_err(), "zero shards is meaningless");
+        let err = ScenarioSpec::parse(&{
+            let mut j = small_spec().to_json();
+            if let Json::Obj(o) = &mut j {
+                if let Some(Json::Obj(t)) = o.get_mut("topology") {
+                    t.insert("shards".into(), Json::Num(0.0));
+                }
+            }
+            j.to_string_pretty()
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("shards"), "parse error names the field: {err}");
+    }
+
+    #[test]
+    fn sharded_session_is_thread_count_invariant() {
+        let mut spec = small_spec();
+        spec.workload.n = 24;
+        spec.topology.shards = 3;
+        let session = spec.build(predictor()).unwrap();
+        let serial = session.run_with_threads(1);
+        for threads in [2, 4, 8] {
+            let parallel = session.run_with_threads(threads);
+            assert_eq!(
+                serial.trace_text(),
+                parallel.trace_text(),
+                "trace bytes at {threads} threads"
+            );
+            assert_eq!(
+                serial.to_json().to_string_pretty(),
+                parallel.to_json().to_string_pretty(),
+                "report bytes at {threads} threads"
+            );
+        }
+        assert_eq!(serial.results.len(), 24, "every query accounted for after the merge");
+    }
+
+    #[test]
+    fn run_sharded_at_one_shard_matches_plain_run() {
+        // The `--shards 1` override must land exactly on the unsharded
+        // kernel's bytes — same contract the golden fleet trace pins.
+        let session = small_spec().build(predictor()).unwrap();
+        let plain = session.run();
+        let sharded = session.run_sharded(1, 4);
+        assert_eq!(plain.trace_text(), sharded.trace_text());
+        assert_eq!(plain.to_json().to_string_pretty(), sharded.to_json().to_string_pretty());
     }
 }

@@ -68,6 +68,7 @@ pub fn fleet_sim(
             cloud_workers: knobs.cloud_workers,
             admission_limit: knobs.admission_limit,
             global_k_cap: None,
+            shards: 1,
             tenants,
         },
         workload: WorkloadSpec {
@@ -92,6 +93,7 @@ pub fn fleet_serve(bench: Benchmark, n: usize, rate: f64, seed: u64) -> Scenario
             cloud_workers: 16,
             admission_limit: 64,
             global_k_cap: None,
+            shards: 1,
             tenants: vec![
                 TenantSpec::unlimited("anchor"),
                 TenantSpec::capped("metered", 0.05),
@@ -151,6 +153,7 @@ pub fn mixed_policy(
             cloud_workers: knobs.cloud_workers,
             admission_limit: 64,
             global_k_cap: None,
+            shards: 1,
             tenants: vec![
                 TenantSpec::unlimited("learned"),
                 TenantSpec::unlimited("fixed-0.65").with_policy(PolicySpec::Fixed(0.65)),
@@ -223,6 +226,7 @@ pub fn fleet_cache(
             cloud_workers: knobs.cloud_workers,
             admission_limit: 64,
             global_k_cap: None,
+            shards: 1,
             tenants: vec![TenantSpec::unlimited("a"), TenantSpec::unlimited("b")],
         },
         workload: WorkloadSpec {
@@ -241,6 +245,21 @@ pub fn fleet_cache(
             ..Default::default()
         },
     }
+}
+
+/// The `fleet_sharded` scenario: the [`fleet_sim`] fleet partitioned
+/// across 4 kernel shards — the canonical sharded-determinism demo.
+/// Shipped as `scenarios/fleet_sharded.json`; `scripts/verify.sh` runs it
+/// at `--shards 1` and `--shards 4` and checks the reports differ (the
+/// override takes effect) while reruns stay byte-identical. Tracing is
+/// off: the point of sharding is throughput, and the per-query trace is
+/// already pinned by the golden fleet.
+pub fn fleet_sharded(bench: Benchmark, n: usize, rate: f64, seed: u64) -> ScenarioSpec {
+    let knobs = FleetSimKnobs { record_trace: false, ..Default::default() };
+    let mut spec = fleet_sim(bench, n, rate, seed, &knobs);
+    spec.name = "fleet_sharded".into();
+    spec.topology.shards = 4;
+    spec
 }
 
 /// The `fleet_serve` contention grid as a declarative sweep: the
@@ -294,6 +313,7 @@ pub fn golden_fleet() -> ScenarioSpec {
             cloud_workers: 8,
             admission_limit: 0,
             global_k_cap: None,
+            shards: 1,
             tenants: vec![
                 TenantSpec::unlimited("anchor"),
                 TenantSpec::capped("metered", 0.02),
@@ -322,6 +342,7 @@ mod tests {
             fleet_serve(Benchmark::Gpqa, 120, 0.5, 11),
             mixed_policy(Benchmark::Gpqa, 90, 0.6, 11, &MixedPolicyKnobs::default()),
             fleet_cache(Benchmark::Gpqa, 120, 0.5, 11, &FleetCacheKnobs::default()),
+            fleet_sharded(Benchmark::Gpqa, 240, 2.0, 11),
             golden_fleet(),
         ];
         for spec in specs {

@@ -59,10 +59,13 @@ pub enum SweepField {
     HedgeThreshold,
     /// `workload.zipf.exponent` (requires a Zipf mix in the base spec).
     ZipfExponent,
+    /// `topology.shards` (kernel shard count; must stay >= 1, enforced by
+    /// per-cell validation).
+    Shards,
 }
 
 impl SweepField {
-    pub const ALL: [SweepField; 9] = [
+    pub const ALL: [SweepField; 10] = [
         SweepField::ArrivalRate,
         SweepField::CacheCapacity,
         SweepField::EdgeWorkers,
@@ -72,6 +75,7 @@ impl SweepField {
         SweepField::Seed,
         SweepField::HedgeThreshold,
         SweepField::ZipfExponent,
+        SweepField::Shards,
     ];
 
     pub fn render(&self) -> &'static str {
@@ -85,6 +89,7 @@ impl SweepField {
             SweepField::Seed => "seed",
             SweepField::HedgeThreshold => "hedge_threshold",
             SweepField::ZipfExponent => "zipf_exponent",
+            SweepField::Shards => "shards",
         }
     }
 
@@ -142,6 +147,11 @@ impl SweepField {
                     anyhow::anyhow!("zipf_exponent sweep needs a zipf mix in the base spec")
                 })?;
                 z.exponent = v;
+            }
+            SweepField::Shards => {
+                let n = self.as_count(v)?;
+                anyhow::ensure!(n >= 1, "shards sweep needs at least one shard, got {v}");
+                spec.topology.shards = n;
             }
         }
         Ok(())
@@ -456,6 +466,7 @@ mod tests {
                 cloud_workers: 4,
                 admission_limit: 0,
                 global_k_cap: None,
+                shards: 1,
                 tenants: vec![TenantSpec::unlimited("a")],
             },
             workload: WorkloadSpec {
@@ -535,6 +546,10 @@ mod tests {
         assert!(SweepField::ArrivalRate.apply(&mut spec, 0.0).is_err());
         assert!(SweepField::EdgeWorkers.apply(&mut spec, 1.5).is_err());
         assert!(SweepField::EdgeWorkers.apply(&mut spec, -1.0).is_err());
+        assert!(SweepField::Shards.apply(&mut spec, 0.0).is_err(), "zero shards");
+        assert!(SweepField::Shards.apply(&mut spec, 2.5).is_err(), "fractional shards");
+        SweepField::Shards.apply(&mut spec, 4.0).unwrap();
+        assert_eq!(spec.topology.shards, 4);
         assert!(
             SweepField::ZipfExponent.apply(&mut spec, 1.1).is_err(),
             "no zipf mix in the base spec"

@@ -12,7 +12,9 @@
 //! determinism, contention, admission limits, budget caps, per-tenant
 //! policy overrides, hedged cancellation/refunds, and the result cache.
 
-pub use crate::sim::{run_fleet, FleetArrival, FleetConfig, FleetQueryResult, FleetReport};
+pub use crate::sim::{
+    run_fleet, run_fleet_sharded, FleetArrival, FleetConfig, FleetQueryResult, FleetReport,
+};
 
 #[cfg(test)]
 mod tests {

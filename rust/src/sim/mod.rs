@@ -69,6 +69,10 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 
+pub mod shard;
+
+pub use shard::run_fleet_sharded;
+
 /// Fleet-level knobs (per-query scheduling semantics come from the
 /// pipeline's [`ScheduleConfig`]).
 #[derive(Debug, Clone)]
@@ -359,11 +363,14 @@ pub(crate) struct KernelSpec<'a> {
 
 /// Everything a kernel run produces: the report plus each job's final
 /// router state and RNG (handed back to single-query callers so
-/// `execute_query`'s `&mut` contract holds across the kernel boundary).
+/// `execute_query`'s `&mut` contract holds across the kernel boundary)
+/// and the raw sample streams behind the report's summaries (consumed by
+/// the cross-shard merge).
 pub(crate) struct KernelRun {
     pub report: FleetReport,
     pub routers: Vec<RouterState>,
     pub rngs: Vec<Rng>,
+    pub stats: RunStats,
 }
 
 /// The unified simulation kernel: configuration + tenant pools + jobs,
@@ -409,17 +416,21 @@ struct QueryRun {
     completed_at: f64,
 }
 
-struct RunStats {
-    admission_delays: Vec<f64>,
-    queue_waits: Vec<f64>,
-    sojourns: Vec<f64>,
-    hedge_cancelled: usize,
-    hedge_refund: f64,
+/// Raw per-run sample streams behind the report's summaries, kept on
+/// [`KernelRun`] so the sharded merge ([`shard::run_fleet_sharded`]) can
+/// recompute fleet-level [`Summary`] values over the *concatenated*
+/// per-shard samples instead of trying to merge pre-digested quantiles.
+pub(crate) struct RunStats {
+    pub(crate) admission_delays: Vec<f64>,
+    pub(crate) queue_waits: Vec<f64>,
+    pub(crate) sojourns: Vec<f64>,
+    pub(crate) hedge_cancelled: usize,
+    pub(crate) hedge_refund: f64,
     /// Worker-busy seconds consumed by hedged losing replicas before their
     /// cancellation, per side (edge, cloud) — counted into utilization so
     /// the report reflects real pool occupancy, not just winner events.
-    hedge_loser_busy: [f64; 2],
-    clock_monotone: bool,
+    pub(crate) hedge_loser_busy: [f64; 2],
+    pub(crate) clock_monotone: bool,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1146,7 +1157,7 @@ impl<'a> Kernel<'a> {
             global,
             trace,
         };
-        KernelRun { report, routers, rngs }
+        KernelRun { report, routers, rngs, stats }
     }
 }
 
@@ -1167,35 +1178,62 @@ pub fn run_fleet(
     arrivals: Vec<FleetArrival>,
     seed: u64,
 ) -> FleetReport {
-    let schedule = pipeline.config.schedule.clone();
+    let n_tenants = tenants.len();
     let jobs: Vec<Job> = arrivals
         .into_iter()
         .enumerate()
-        .map(|(i, a)| {
-            assert!(a.tenant < tenants.len(), "arrival references unknown tenant {}", a.tenant);
-            // Seed by job index, not arrival interleaving, so results are
-            // exactly reproducible (same scheme as `server::serve`).
-            let rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97f4A7C15));
-            // Per-tenant policy override (heterogeneous fleets); absent or
-            // None falls back to the pipeline default.
-            let policy = cfg
-                .tenant_policies
-                .get(a.tenant)
-                .and_then(|p| p.clone())
-                .unwrap_or_else(|| pipeline.config.policy.clone());
-            let mut router = RouterState::new(policy);
-            router.begin_query(false);
-            Job {
-                tenant: a.tenant,
-                // Moved behind an Arc, never deep-copied again.
-                query: Arc::new(a.query),
-                arrival: a.time,
-                rng,
-                router,
-                preplanned: None,
-            }
-        })
+        .map(|(i, a)| fleet_job(pipeline, cfg, n_tenants, i, a, seed))
         .collect();
+    run_fleet_jobs(pipeline, cfg, tenants, jobs).report
+}
+
+/// Build one fleet [`Job`] from an arrival. `index` is the job's position
+/// in the *full* arrival list: the RNG stream is forked from
+/// `(seed, index)` — never from arrival interleaving or shard assignment —
+/// so a query's planned decomposition and sampled latents are identical no
+/// matter how the fleet is partitioned (the sharded-run invariant).
+pub(crate) fn fleet_job(
+    pipeline: &HybridFlowPipeline,
+    cfg: &FleetConfig,
+    n_tenants: usize,
+    index: usize,
+    a: FleetArrival,
+    seed: u64,
+) -> Job {
+    assert!(a.tenant < n_tenants, "arrival references unknown tenant {}", a.tenant);
+    // Seed by job index, not arrival interleaving, so results are
+    // exactly reproducible (same scheme as `server::serve`).
+    let rng = Rng::new(seed ^ (index as u64).wrapping_mul(0x9E3779B97f4A7C15));
+    // Per-tenant policy override (heterogeneous fleets); absent or
+    // None falls back to the pipeline default.
+    let policy = cfg
+        .tenant_policies
+        .get(a.tenant)
+        .and_then(|p| p.clone())
+        .unwrap_or_else(|| pipeline.config.policy.clone());
+    let mut router = RouterState::new(policy);
+    router.begin_query(false);
+    Job {
+        tenant: a.tenant,
+        // Moved behind an Arc, never deep-copied again.
+        query: Arc::new(a.query),
+        arrival: a.time,
+        rng,
+        router,
+        preplanned: None,
+    }
+}
+
+/// Run pre-built fleet jobs on the kernel (fleet scope, cold cache) and
+/// hand back the full [`KernelRun`] — the shared tail of [`run_fleet`]
+/// and the per-shard runs in [`shard::run_fleet_sharded`].
+pub(crate) fn run_fleet_jobs(
+    pipeline: &HybridFlowPipeline,
+    cfg: &FleetConfig,
+    tenants: Vec<TenantPool>,
+    jobs: Vec<Job>,
+) -> KernelRun {
+    let schedule = pipeline.config.schedule.clone();
     let kernel = Kernel {
         spec: KernelSpec {
             planner: Some(&pipeline.planner),
@@ -1212,5 +1250,5 @@ pub fn run_fleet(
         tenants,
         jobs,
     };
-    kernel.run().report
+    kernel.run()
 }

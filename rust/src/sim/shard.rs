@@ -1,0 +1,454 @@
+//! Sharded fleet execution: partition one fleet across per-shard
+//! [`Kernel`](super::Kernel) instances fanned over
+//! [`ThreadPool`](crate::util::pool::ThreadPool), then deterministically
+//! merge the per-shard runs back into a single [`FleetReport`] and trace.
+//!
+//! The single-heap kernel tops out around 10k-query sweeps: one
+//! `BinaryHeap` carries every in-flight event, and nothing runs
+//! concurrently. Sharding models the scale-out deployment instead — the
+//! fleet is split into `S` independent slices, each with its **own**
+//! worker pools, result cache, admission queue, and `1/S` of every
+//! dollar cap, exactly as a row of replicated serving cells would divide
+//! traffic (EdgeShard-style collaborative serving). Shards share nothing,
+//! so they run embarrassingly parallel and a 1M-query fleet becomes `S`
+//! tractable event loops.
+//!
+//! Determinism contract (pinned by `rust/tests/scenario.rs` and the fuzz
+//! invariants in `testing::fuzz`):
+//!
+//! * **Shard assignment** hashes the query id through the same PHI64
+//!   multiplicative mix the engine uses for seed forking —
+//!   `(id · PHI64) >> 32 mod S` — so the partition depends only on the
+//!   workload, never on threads or arrival interleaving. Arrival order is
+//!   preserved within each shard (stable partition).
+//! * **Per-query RNG streams** are forked from `(seed, global job
+//!   index)` via [`fleet_job`] — identical to the unsharded kernel — so a
+//!   query's decomposition and latents do not depend on the shard count;
+//!   only infrastructure effects (contention, budget pressure, cache
+//!   locality) do.
+//! * **The merge is a pure function** of the ordered per-shard outputs:
+//!   report bytes and trace bytes are independent of the worker-thread
+//!   count, and `shards = 1` reproduces the unsharded kernel — report and
+//!   golden fleet trace — byte for byte.
+//!
+//! The merged trace interleaves shard traces by virtual-clock timestamp
+//! with the shard index as tie-break, and rewrites each line's
+//! kernel-local `q=` index back to the fleet-global job index.
+
+use crate::budget::{GlobalBudget, TenantPool};
+use crate::cache::CacheStats;
+use crate::pipeline::HybridFlowPipeline;
+use crate::util::pool::ThreadPool;
+use crate::util::stats::Summary;
+use std::sync::Arc;
+
+use super::{fleet_job, run_fleet_jobs, FleetArrival, FleetConfig, FleetReport, Job, RunStats};
+
+/// Same multiplicative mix as the kernel's per-job seed fork.
+const PHI64: u64 = 0x9E3779B97f4A7C15;
+
+/// Deterministic shard assignment: hash of the query id, independent of
+/// arrival order, tenant, thread count, and seed.
+pub(crate) fn shard_of(query_id: u64, shards: usize) -> usize {
+    ((query_id.wrapping_mul(PHI64)) >> 32) as usize % shards.max(1)
+}
+
+/// Split a dollar cap evenly across shards (`inf` stays unlimited; at
+/// `shards = 1` the division is exact, preserving byte-identity).
+fn split_cap(cap: f64, shards: usize) -> f64 {
+    cap / shards as f64
+}
+
+/// Run a fleet partitioned across `shards` independent kernel instances
+/// on up to `threads` worker threads (`threads <= 1` runs the shards
+/// serially — byte-identical output either way).
+///
+/// `make_pipeline` builds one pipeline per shard, so per-shard state the
+/// pipeline owns (notably the result cache) is modeled per shard; it must
+/// be deterministic (build the same pipeline every call). Tenant and
+/// global dollar caps are split `1/shards` per shard and re-aggregated in
+/// the merged report under their original caps; the admission limit
+/// applies per shard.
+pub fn run_fleet_sharded<F>(
+    make_pipeline: F,
+    cfg: &FleetConfig,
+    tenants: Vec<TenantPool>,
+    arrivals: Vec<FleetArrival>,
+    seed: u64,
+    shards: usize,
+    threads: usize,
+) -> FleetReport
+where
+    F: Fn() -> HybridFlowPipeline + Send + Sync + 'static,
+{
+    let shards = shards.max(1);
+    let make_pipeline = Arc::new(make_pipeline);
+    // One probe pipeline for the schedule the merge needs (worker counts,
+    // chain mode); dropped before any shard runs.
+    let schedule = (*make_pipeline)().config.schedule.clone();
+
+    // Stable hash-of-query partition. `globals[s][j]` is the fleet-global
+    // job index of shard `s`'s `j`-th query (the q= rewrite map).
+    let n_total = arrivals.len();
+    let mut inputs: Vec<Vec<(usize, FleetArrival)>> = (0..shards).map(|_| Vec::new()).collect();
+    let mut globals: Vec<Vec<usize>> = (0..shards).map(|_| Vec::new()).collect();
+    for (i, a) in arrivals.into_iter().enumerate() {
+        let s = shard_of(a.query.id, shards);
+        globals[s].push(i);
+        inputs[s].push((i, a));
+    }
+
+    // Each shard models its slice of the infrastructure: split caps,
+    // per-shard admission, fresh tenant pools.
+    let shard_cfg = FleetConfig {
+        admission_limit: cfg.admission_limit,
+        global_k_cap: split_cap(cfg.global_k_cap, shards),
+        record_trace: cfg.record_trace,
+        tenant_policies: cfg.tenant_policies.clone(),
+    };
+    let shard_tenants: Vec<TenantPool> =
+        tenants.iter().map(|t| TenantPool::new(&t.name, split_cap(t.k_cap, shards))).collect();
+
+    let worker = {
+        let make_pipeline = Arc::clone(&make_pipeline);
+        let shard_cfg = shard_cfg.clone();
+        let shard_tenants = shard_tenants.clone();
+        move |items: Vec<(usize, FleetArrival)>| -> (FleetReport, RunStats) {
+            let pipeline = (*make_pipeline)();
+            let n_tenants = shard_tenants.len();
+            let jobs: Vec<Job> = items
+                .into_iter()
+                .map(|(gi, a)| fleet_job(&pipeline, &shard_cfg, n_tenants, gi, a, seed))
+                .collect();
+            let run = run_fleet_jobs(&pipeline, &shard_cfg, shard_tenants.clone(), jobs);
+            (run.report, run.stats)
+        }
+    };
+
+    // Shards are fully independent and `ThreadPool::map` preserves input
+    // order, so the outcome vector — and everything merged from it — is
+    // identical no matter how many threads execute it.
+    let outcomes: Vec<(FleetReport, RunStats)> = if threads <= 1 || shards == 1 {
+        inputs.into_iter().map(&worker).collect()
+    } else {
+        ThreadPool::new(threads.min(shards)).map(inputs, worker)
+    };
+
+    merge_shard_runs(outcomes, &globals, n_total, &tenants, cfg, &schedule, shards)
+}
+
+/// Deterministically reassemble per-shard kernel runs into one fleet
+/// report. Pure function of the ordered shard outputs; at `shards = 1`
+/// every aggregation below reduces to the unsharded kernel's own report
+/// assembly, bit for bit.
+fn merge_shard_runs(
+    outcomes: Vec<(FleetReport, RunStats)>,
+    globals: &[Vec<usize>],
+    n_total: usize,
+    tenants: &[TenantPool],
+    cfg: &FleetConfig,
+    schedule: &crate::scheduler::ScheduleConfig,
+    shards: usize,
+) -> FleetReport {
+    // Tenant ledgers: spends and decision counts sum across shards; the
+    // report carries the original (pre-split) caps. `l_used` is a max —
+    // it tracks the worst realized latency, not a consumable budget.
+    let mut merged_tenants: Vec<TenantPool> =
+        tenants.iter().map(|t| TenantPool::new(&t.name, t.k_cap)).collect();
+    for (report, _) in &outcomes {
+        for (mt, st) in merged_tenants.iter_mut().zip(&report.tenants) {
+            mt.state.k_used += st.state.k_used;
+            mt.state.c_used += st.state.c_used;
+            mt.state.l_used = mt.state.l_used.max(st.state.l_used);
+            mt.state.n_offloaded += st.state.n_offloaded;
+            mt.state.n_decided += st.state.n_decided;
+        }
+    }
+    let mut global = GlobalBudget::new(cfg.global_k_cap);
+    for (report, _) in &outcomes {
+        global.k_spent += report.global.k_spent;
+    }
+
+    // Fleet summaries over the concatenated raw samples (shard order):
+    // quantiles cannot be merged from per-shard digests.
+    let mut admission_delays = Vec::new();
+    let mut queue_waits = Vec::new();
+    let mut sojourns = Vec::new();
+    let mut hedge_cancelled = 0usize;
+    let mut hedge_refund = 0.0f64;
+    let (mut edge_busy, mut cloud_busy) = (0.0f64, 0.0f64);
+    let mut clock_monotone = true;
+    for (_, stats) in &outcomes {
+        admission_delays.extend_from_slice(&stats.admission_delays);
+        queue_waits.extend_from_slice(&stats.queue_waits);
+        sojourns.extend_from_slice(&stats.sojourns);
+        hedge_cancelled += stats.hedge_cancelled;
+        hedge_refund += stats.hedge_refund;
+        edge_busy += stats.hedge_loser_busy[0];
+        cloud_busy += stats.hedge_loser_busy[1];
+        clock_monotone &= stats.clock_monotone;
+    }
+
+    // Cache counters are per-shard caches of the same configuration:
+    // field-wise sums (None when no shard had a cache attached).
+    let mut cache: Option<CacheStats> = None;
+    for (report, _) in &outcomes {
+        if let Some(cs) = &report.cache {
+            let acc = cache.get_or_insert_with(CacheStats::default);
+            acc.lookups += cs.lookups;
+            acc.hits += cs.hits;
+            acc.shared_hits += cs.shared_hits;
+            acc.insertions += cs.insertions;
+            acc.evictions += cs.evictions;
+            acc.expirations += cs.expirations;
+            acc.tokens_saved += cs.tokens_saved;
+            acc.dollars_saved += cs.dollars_saved;
+        }
+    }
+
+    // Merged trace: k-way interleave by virtual-clock timestamp, shard
+    // index as tie-break, stable within each shard; kernel-local `q=`
+    // indices rewritten to fleet-global job indices.
+    let trace = if cfg.record_trace {
+        merge_traces(&outcomes, globals)
+    } else {
+        Vec::new()
+    };
+
+    // Scatter per-query results back to fleet-global job order.
+    let mut slots: Vec<Option<super::FleetQueryResult>> = (0..n_total).map(|_| None).collect();
+    for (s, (report, _)) in outcomes.into_iter().enumerate() {
+        for (j, r) in report.results.into_iter().enumerate() {
+            slots[globals[s][j]] = Some(r);
+        }
+    }
+    let results: Vec<super::FleetQueryResult> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("job {i} missing from every shard")))
+        .collect();
+
+    let horizon = results.iter().map(|r| r.completed_at).fold(0.0f64, f64::max);
+    let n_decided: usize = merged_tenants.iter().map(|t| t.state.n_decided).sum();
+    let n_offloaded: usize = merged_tenants.iter().map(|t| t.state.n_offloaded).sum();
+    let forced_edge: usize = results.iter().map(|r| r.forced_edge).sum();
+    // Same busy-time accounting as the kernel's report assembly; the
+    // configured capacity is `shards` pools per side.
+    if !schedule.chain_mode {
+        for r in &results {
+            for e in &r.exec.events {
+                if e.cached {
+                    continue;
+                }
+                if e.cloud {
+                    cloud_busy += e.finish - e.start;
+                } else {
+                    edge_busy += e.finish - e.start;
+                }
+            }
+        }
+    }
+    let span = horizon.max(1e-9);
+    FleetReport {
+        admission_delay: Summary::of_or_zero(&admission_delays),
+        queue_wait: Summary::of_or_zero(&queue_waits),
+        sojourn: Summary::of_or_zero(&sojourns),
+        throughput_qps: results.len() as f64 / span,
+        offload_rate: if n_decided == 0 { 0.0 } else { n_offloaded as f64 / n_decided as f64 },
+        total_api_cost: global.k_spent,
+        forced_edge,
+        hedge_cancelled,
+        hedge_refund,
+        cache,
+        edge_utilization: if schedule.edge_workers == 0 {
+            0.0
+        } else {
+            edge_busy / (span * (shards * schedule.edge_workers) as f64)
+        },
+        cloud_utilization: if schedule.cloud_workers == 0 {
+            0.0
+        } else {
+            cloud_busy / (span * (shards * schedule.cloud_workers) as f64)
+        },
+        clock_monotone,
+        horizon,
+        results,
+        tenants: merged_tenants,
+        global,
+        trace,
+    }
+}
+
+/// K-way merge of per-shard traces: each shard's trace is already
+/// non-decreasing in time (clock monotone), so repeatedly taking the
+/// earliest head — lowest shard index on ties — yields one globally
+/// time-ordered, deterministic interleaving.
+fn merge_traces(outcomes: &[(FleetReport, RunStats)], globals: &[Vec<usize>]) -> Vec<String> {
+    let total: usize = outcomes.iter().map(|(r, _)| r.trace.len()).sum();
+    let mut merged = Vec::with_capacity(total);
+    let mut cursors = vec![0usize; outcomes.len()];
+    loop {
+        let mut best: Option<(f64, usize)> = None;
+        for (s, (report, _)) in outcomes.iter().enumerate() {
+            if cursors[s] < report.trace.len() {
+                let t = trace_time(&report.trace[cursors[s]]);
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, s));
+                }
+            }
+        }
+        let Some((_, s)) = best else { break };
+        merged.push(rewrite_q(&outcomes[s].0.trace[cursors[s]], &globals[s]));
+        cursors[s] += 1;
+    }
+    merged
+}
+
+/// Parse the leading `t=<seconds>` field of a trace line.
+fn trace_time(line: &str) -> f64 {
+    debug_assert!(line.starts_with("t="), "malformed trace line: {line}");
+    let rest = line.get(2..).unwrap_or("");
+    let end = rest.find(' ').unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or(0.0)
+}
+
+/// Rewrite the single ` q=<idx>` token from the shard-local query index
+/// to the fleet-global job index. Identity when the map is the identity
+/// (the `shards = 1` byte-parity path).
+fn rewrite_q(line: &str, to_global: &[usize]) -> String {
+    let Some(pos) = line.find(" q=") else {
+        return line.to_string();
+    };
+    let start = pos + 3;
+    let end = line[start..].find(' ').map_or(line.len(), |k| start + k);
+    let Ok(local) = line[start..end].parse::<usize>() else {
+        return line.to_string();
+    };
+    let global = to_global.get(local).copied().unwrap_or(local);
+    format!("{}{}{}", &line[..start], global, &line[end..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::simparams::SimParams;
+    use crate::models::SimExecutor;
+    use crate::pipeline::PipelineConfig;
+    use crate::planner::synthetic::SyntheticPlanner;
+    use crate::router::{MirrorPredictor, RoutePolicy};
+    use crate::sim::run_fleet;
+    use crate::workload::{generate_queries, Benchmark};
+
+    fn make_pipeline() -> HybridFlowPipeline {
+        let sp = SimParams::default();
+        let cfg = PipelineConfig::paper_default(&sp);
+        HybridFlowPipeline::with_predictor(
+            SimExecutor::paper_pair(),
+            SyntheticPlanner::paper_main(),
+            Arc::new(MirrorPredictor::synthetic_for_tests()),
+            cfg,
+        )
+    }
+
+    fn arrivals(n: usize, gap: f64, tenants: usize, seed: u64) -> Vec<FleetArrival> {
+        generate_queries(Benchmark::Gpqa, n, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(i, query)| FleetArrival { time: i as f64 * gap, tenant: i % tenants, query })
+            .collect()
+    }
+
+    fn tenants() -> Vec<TenantPool> {
+        vec![TenantPool::unlimited("a"), TenantPool::new("b", 0.05)]
+    }
+
+    #[test]
+    fn shard_assignment_is_stable_and_in_range() {
+        for id in [0u64, 1, 2, 17, u64::MAX] {
+            for shards in [1usize, 2, 4, 8] {
+                let s = shard_of(id, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(id, shards), "stable");
+            }
+        }
+        assert_eq!(shard_of(42, 1), 0, "single shard takes everything");
+    }
+
+    #[test]
+    fn one_shard_is_byte_identical_to_unsharded() {
+        let cfg = FleetConfig::default();
+        let plain = run_fleet(&make_pipeline(), &cfg, tenants(), arrivals(12, 1.0, 2, 9), 33);
+        let sharded =
+            run_fleet_sharded(make_pipeline, &cfg, tenants(), arrivals(12, 1.0, 2, 9), 33, 1, 4);
+        assert_eq!(plain.trace_text(), sharded.trace_text(), "trace bytes");
+        assert_eq!(
+            plain.to_json().to_string_pretty(),
+            sharded.to_json().to_string_pretty(),
+            "report bytes"
+        );
+    }
+
+    #[test]
+    fn sharded_run_is_thread_count_invariant() {
+        let cfg = FleetConfig { global_k_cap: 0.08, ..Default::default() };
+        let runs: Vec<FleetReport> = [1usize, 2, 4, 8]
+            .into_iter()
+            .map(|threads| {
+                run_fleet_sharded(
+                    make_pipeline,
+                    &cfg,
+                    tenants(),
+                    arrivals(16, 0.5, 2, 5),
+                    7,
+                    4,
+                    threads,
+                )
+            })
+            .collect();
+        for r in &runs[1..] {
+            assert_eq!(runs[0].trace_text(), r.trace_text(), "trace bytes");
+            assert_eq!(
+                runs[0].to_json().to_string_pretty(),
+                r.to_json().to_string_pretty(),
+                "report bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_preserves_per_query_results_and_ledgers() {
+        let cfg = FleetConfig::default();
+        let arr = arrivals(20, 0.25, 2, 21);
+        let plain = run_fleet(&make_pipeline(), &cfg, tenants(), arr.clone(), 11);
+        let sharded = run_fleet_sharded(make_pipeline, &cfg, tenants(), arr, 11, 4, 2);
+        assert_eq!(sharded.results.len(), plain.results.len());
+        // Global arrival order is restored: result i is job i.
+        for (i, r) in sharded.results.iter().enumerate() {
+            assert_eq!(r.query_id, plain.results[i].query_id, "job {i} out of place");
+            assert_eq!(r.tenant, plain.results[i].tenant);
+            assert_eq!(r.arrival, plain.results[i].arrival);
+        }
+        // Ledger conservation across the merge.
+        let tenant_sum: f64 = sharded.tenants.iter().map(|t| t.state.k_used).sum();
+        assert!((sharded.global.k_spent - tenant_sum).abs() < 1e-9);
+        assert_eq!(sharded.total_api_cost, sharded.global.k_spent);
+        assert_eq!(sharded.tenants[1].k_cap, 0.05, "original caps restored");
+        assert!(sharded.clock_monotone);
+        // Trace is globally time-ordered after the k-way merge.
+        let times: Vec<f64> = sharded.trace.iter().map(|l| trace_time(l)).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "merged trace out of order");
+    }
+
+    #[test]
+    fn q_rewrite_maps_local_to_global() {
+        let line = "t=1.500000 tenant=0 q=2 exec node=1 side=edge start=1.500000 finish=2.000000 wait=0.000000";
+        let out = rewrite_q(line, &[5, 9, 14]);
+        assert_eq!(
+            out,
+            "t=1.500000 tenant=0 q=14 exec node=1 side=edge start=1.500000 finish=2.000000 wait=0.000000"
+        );
+        // Identity map reproduces the input bytes.
+        assert_eq!(rewrite_q(line, &[0, 1, 2]), line);
+        assert_eq!(trace_time(line), 1.5);
+    }
+}

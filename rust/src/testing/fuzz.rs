@@ -18,7 +18,15 @@
 //!   outcomes, and every reported number is finite;
 //! * re-running the identical session is byte-identical (trace and
 //!   report JSON);
+//! * sharded determinism: at forced shard counts 1 and 4 the report and
+//!   trace bytes are independent of the worker-thread count, and
+//!   `shards = 1` through the sharded merge path is byte-identical to
+//!   the unsharded kernel;
 //! * `parse(render(spec)) == spec` and `render` is a fixpoint.
+//!
+//! When a case fails, [`minimize`] greedily shrinks the offending spec
+//! toward defaults (re-checking the failure each step) so corpus entries
+//! land in `rust/tests/corpus/` already minimized.
 //!
 //! Wired in three places: the bounded test suite (`rust/tests/fuzz.rs`,
 //! case count via `HYBRIDFLOW_FUZZ_CASES`), the CLI
@@ -94,6 +102,9 @@ fn random_spec(g: &mut Gen) -> ScenarioSpec {
             cloud_workers: g.usize_in(0..9),
             admission_limit: g.usize_in(0..4),
             global_k_cap: if g.bool() { Some(g.f64_in(0.0..1.0)) } else { None },
+            // Sharding is fuzzed from day one: half the specs stay on the
+            // unsharded kernel, the rest split across 2 or 4 shards.
+            shards: *pick(g, &[1usize, 1, 2, 4]),
             tenants,
         },
         workload: WorkloadSpec {
@@ -137,7 +148,7 @@ fn random_spec(g: &mut Gen) -> ScenarioSpec {
 /// covered by the `reject_*` corpus and unit tests).
 fn adversarialize(g: &mut Gen, spec: &mut ScenarioSpec) {
     for _ in 0..g.usize_in(1..4) {
-        match g.usize_in(0..12) {
+        match g.usize_in(0..13) {
             0 => spec.topology.edge_workers = *pick(g, &[0usize, 1, 1024]),
             1 => spec.topology.cloud_workers = *pick(g, &[0usize, 1, 1024]),
             2 => spec.topology.admission_limit = g.usize_in(0..2),
@@ -176,6 +187,9 @@ fn adversarialize(g: &mut Gen, spec: &mut ScenarioSpec) {
             8 => spec.workload.zipf = Some(ZipfMix::new(*pick(g, &[0.0, 8.0]), 1)),
             9 => spec.engine.n_max = 1,
             10 => spec.topology.global_k_cap = Some(*pick(g, &[0.0, 1e-9, 1e9])),
+            // More shards than queries (or workers) is a legal topology:
+            // some shards simply receive no arrivals.
+            11 => spec.topology.shards = *pick(g, &[1usize, 2, 4, 8]),
             _ => spec.engine.chain_mode = true,
         }
     }
@@ -238,9 +252,70 @@ pub fn run_case(spec: &ScenarioSpec) -> Vec<String> {
             if a.to_json().to_string_pretty() != b.to_json().to_string_pretty() {
                 v.push("rerun report JSON is not byte-identical".into());
             }
+            check_sharding_identities(spec, &session, &a, &mut v);
         }
     }
     v
+}
+
+/// The sharding determinism contract, checked on every fuzzed spec:
+///
+/// * **thread-count byte-identity** — forcing the workload through 1 and
+///   4 kernel shards, the report JSON and trace must not depend on how
+///   many OS threads carried the shards (1 vs 4);
+/// * **shard/serial identity** — `shards = 1` through the sharded
+///   fan-out/merge path must be byte-identical to the plain unsharded
+///   kernel (and, when the spec itself says `shards = 1`, to the
+///   session's own primary run).
+fn check_sharding_identities(
+    spec: &ScenarioSpec,
+    session: &Session,
+    primary: &Report,
+    v: &mut Vec<String>,
+) {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut sv = Vec::new();
+        for shards in [1usize, 4] {
+            let serial = session.run_sharded(shards, 1);
+            let threaded = session.run_sharded(shards, 4);
+            if serial.trace_text() != threaded.trace_text() {
+                sv.push(format!("shards={shards}: trace differs between 1 and 4 worker threads"));
+            }
+            if serial.to_json().to_string_pretty() != threaded.to_json().to_string_pretty() {
+                sv.push(format!(
+                    "shards={shards}: report JSON differs between 1 and 4 worker threads"
+                ));
+            }
+            if shards == 1 {
+                let arrivals = spec.workload.arrivals(session.tenants.len(), spec.seed);
+                let plain = crate::sim::run_fleet(
+                    &session.pipeline,
+                    &session.fleet,
+                    session.tenants.clone(),
+                    arrivals,
+                    spec.seed,
+                );
+                if serial.trace_text() != plain.trace_text() {
+                    sv.push("shards=1 trace is not byte-identical to the unsharded kernel".into());
+                }
+                if serial.to_json().to_string_pretty() != plain.to_json().to_string_pretty() {
+                    sv.push(
+                        "shards=1 report JSON is not byte-identical to the unsharded kernel".into(),
+                    );
+                }
+                if spec.topology.shards == 1
+                    && serial.trace_text() != primary.trace_text()
+                {
+                    sv.push("shards=1 trace drifted from the session's primary run".into());
+                }
+            }
+        }
+        sv
+    }));
+    match outcome {
+        Ok(sv) => v.extend(sv),
+        Err(e) => v.push(format!("panicked during sharded runs: {}", panic_message(&e))),
+    }
 }
 
 fn panic_message(e: &Box<dyn std::any::Any + Send>) -> String {
@@ -277,7 +352,13 @@ fn check_finite(label: &str, x: f64, v: &mut Vec<String>) {
 }
 
 /// The single-run invariant set (see the module docs for the list).
+/// Bounds that scale with parallel infrastructure (pool occupancy, cap
+/// overshoot) widen with `spec.topology.shards`: each shard owns its own
+/// pools and budget gates, so a sharded fleet can legitimately hold
+/// `shards × workers` jobs in service and overshoot a cap by one call
+/// *per shard*.
 fn check_report(spec: &ScenarioSpec, session: &Session, r: &Report, v: &mut Vec<String>) {
+    let shards = spec.topology.shards.max(1);
     // -- clock ----------------------------------------------------------
     if !r.clock_monotone {
         v.push("event heap popped times out of order (clock_monotone = false)".into());
@@ -370,11 +451,13 @@ fn check_report(spec: &ScenarioSpec, session: &Session, r: &Report, v: &mut Vec<
         if t.state.k_used < -1e-12 {
             v.push(format!("tenant '{}' has negative spend {}", t.name, t.state.k_used));
         }
-        // Overshoot bounded by one call: the gate is checked before each
-        // bill, so spend can pass the cap by at most the priciest call.
-        if t.k_cap.is_finite() && t.state.k_used > t.k_cap + max_call + 1e-9 {
+        // Overshoot bounded by one call per shard: each shard's gate is
+        // checked before each bill, so spend can pass the cap by at most
+        // the priciest call on every shard.
+        let slack = max_call * shards as f64;
+        if t.k_cap.is_finite() && t.state.k_used > t.k_cap + slack + 1e-9 {
             v.push(format!(
-                "tenant '{}' spent {} against cap {} (max single call {max_call})",
+                "tenant '{}' spent {} against cap {} (max single call {max_call}, {shards} shard(s))",
                 t.name, t.state.k_used, t.k_cap
             ));
         }
@@ -386,9 +469,11 @@ fn check_report(spec: &ScenarioSpec, session: &Session, r: &Report, v: &mut Vec<
             r.global.k_spent
         ));
     }
-    if r.global.k_cap.is_finite() && r.global.k_spent > r.global.k_cap + max_call + 1e-9 {
+    if r.global.k_cap.is_finite()
+        && r.global.k_spent > r.global.k_cap + max_call * shards as f64 + 1e-9
+    {
         v.push(format!(
-            "global spend {} exceeds cap {} by more than one call",
+            "global spend {} exceeds cap {} by more than one call per shard",
             r.global.k_spent, r.global.k_cap
         ));
     }
@@ -420,9 +505,10 @@ fn check_report(spec: &ScenarioSpec, session: &Session, r: &Report, v: &mut Vec<
             }
         }
         // A zero-worker side still carries one phantom claim slot (the
-        // engine's historical `max(1)` padding), so bound against that.
-        let edge_cap = spec.topology.edge_workers.max(1);
-        let cloud_cap = spec.topology.cloud_workers.max(1);
+        // engine's historical `max(1)` padding) — per shard, since every
+        // shard models its own pools.
+        let edge_cap = spec.topology.edge_workers.max(1) * shards;
+        let cloud_cap = spec.topology.cloud_workers.max(1) * shards;
         let edge_peak = max_overlap(&edge_iv);
         let cloud_peak = max_overlap(&cloud_iv);
         if edge_peak > edge_cap {
@@ -460,6 +546,85 @@ fn check_report(spec: &ScenarioSpec, session: &Session, r: &Report, v: &mut Vec<
             ));
         }
     }
+}
+
+/// Greedily shrink a failing spec toward defaults while preserving the
+/// failure, so corpus entries check in minimized (the PR 6 convention for
+/// `rust/tests/corpus/`).
+///
+/// `fails` is the predicate to preserve — typically
+/// `|s| !run_case(s).is_empty()`. Each step proposes one single-field
+/// simplification (drop a tenant, clear a cap, halve the workload, reset
+/// an engine knob…); a candidate is kept only if it still validates *and*
+/// still fails. Steps loop to a fixpoint, so e.g. the workload halves all
+/// the way down while the failure survives. A spec that does not fail is
+/// returned unchanged.
+pub fn minimize<F: Fn(&ScenarioSpec) -> bool>(spec: &ScenarioSpec, fails: F) -> ScenarioSpec {
+    let mut cur = spec.clone();
+    if !fails(&cur) {
+        return cur;
+    }
+    loop {
+        let mut shrunk = false;
+        for cand in shrink_steps(&cur) {
+            if cand != cur && cand.validate().is_ok() && fails(&cand) {
+                cur = cand;
+                shrunk = true;
+                // Restart the step list from the new, smaller spec.
+                break;
+            }
+        }
+        if !shrunk {
+            return cur;
+        }
+    }
+}
+
+/// All single-step simplifications of `cur`, biggest wins first. Steps
+/// that would not change the spec are emitted anyway and filtered by the
+/// `cand != cur` check in [`minimize`].
+fn shrink_steps(cur: &ScenarioSpec) -> Vec<ScenarioSpec> {
+    let mut out: Vec<ScenarioSpec> = Vec::new();
+    {
+        let mut step = |f: &dyn Fn(&mut ScenarioSpec)| {
+            let mut c = cur.clone();
+            f(&mut c);
+            out.push(c);
+        };
+        // Workload size dominates run time: try the floor, then halving.
+        step(&|s| s.workload.n = 1);
+        step(&|s| s.workload.n /= 2);
+        // Drop tenants from the end (the validator keeps >= 1).
+        step(&|s| {
+            s.topology.tenants.pop();
+        });
+        // Simplify the arrival process and workload shape.
+        step(&|s| s.workload.arrival = ArrivalProcess::Periodic { gap: 1.0 });
+        step(&|s| s.workload.zipf = None);
+        // Engine knobs back to defaults, one at a time.
+        step(&|s| s.engine.cache = None);
+        step(&|s| s.engine.hedge = false);
+        step(&|s| s.engine.hedge_threshold = EngineSpec::default().hedge_threshold);
+        step(&|s| s.engine.chain_mode = false);
+        step(&|s| s.engine.batch_frontier = EngineSpec::default().batch_frontier);
+        step(&|s| s.engine.policy = PolicySpec::HybridFlow);
+        step(&|s| s.engine.n_max = EngineSpec::default().n_max);
+        // Per-tenant fields: clear each tenant's cap / policy override
+        // individually so a failure that needs one capped tenant keeps
+        // exactly that one.
+        for i in 0..cur.topology.tenants.len() {
+            step(&move |s: &mut ScenarioSpec| s.topology.tenants[i].k_cap = None);
+            step(&move |s: &mut ScenarioSpec| s.topology.tenants[i].policy = None);
+        }
+        // Topology toward the minimal fleet.
+        step(&|s| s.topology.edge_workers = 1);
+        step(&|s| s.topology.cloud_workers = 1);
+        step(&|s| s.topology.admission_limit = 0);
+        step(&|s| s.topology.global_k_cap = None);
+        step(&|s| s.topology.shards = 1);
+        step(&|s| s.seed = 0);
+    }
+    out
 }
 
 /// Human-readable failure report: the violations, the offending spec as
@@ -554,6 +719,47 @@ mod tests {
         assert!(report.contains("boom"));
         assert!(report.contains("\"topology\""), "spec JSON embedded");
         assert!(report.contains("fuzz --cases 1 --seed 7 --adversarial"), "{report}");
+    }
+
+    #[test]
+    fn minimizer_shrinks_toward_defaults_while_preserving_failure() {
+        // A busy adversarial spec, with hedging forced on so the
+        // "failure" predicate (`engine.hedge`) is live.
+        let mut spec = spec_for_case(9, 3, true);
+        spec.engine.hedge = true;
+        spec.topology.shards = 4;
+        let min = minimize(&spec, |s| s.engine.hedge);
+        assert!(min.engine.hedge, "the preserved failure survives");
+        assert!(min.validate().is_ok(), "minimized spec stays valid");
+        assert_eq!(min.workload.n, 1, "workload shrinks to the floor");
+        assert_eq!(min.topology.tenants.len(), 1, "tenants drop to one");
+        assert_eq!(min.topology.shards, 1, "shards reset to the unsharded kernel");
+        assert_eq!(min.workload.arrival, ArrivalProcess::Periodic { gap: 1.0 });
+        assert!(min.workload.zipf.is_none());
+        assert!(min.engine.cache.is_none());
+        assert!(min.topology.tenants[0].k_cap.is_none());
+        assert!(min.topology.tenants[0].policy.is_none());
+        assert_eq!(min.seed, 0);
+    }
+
+    #[test]
+    fn minimizer_returns_non_failing_spec_unchanged() {
+        let spec = spec_for_case(9, 3, false);
+        assert_eq!(minimize(&spec, |_| false), spec);
+    }
+
+    #[test]
+    fn minimizer_respects_a_field_coupled_predicate() {
+        // A predicate that needs a *specific* tenant's cap must keep that
+        // cap while everything else still shrinks.
+        let mut spec = spec_for_case(11, 2, false);
+        spec.topology.tenants[0].k_cap = Some(0.01);
+        let min = minimize(&spec, |s| {
+            s.topology.tenants.first().map_or(false, |t| t.k_cap == Some(0.01))
+        });
+        assert_eq!(min.topology.tenants.len(), 1);
+        assert_eq!(min.topology.tenants[0].k_cap, Some(0.01), "load-bearing cap survives");
+        assert_eq!(min.workload.n, 1);
     }
 
     #[test]

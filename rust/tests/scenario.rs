@@ -37,7 +37,7 @@ fn repo_root() -> PathBuf {
 }
 
 fn shipped_specs() -> Vec<PathBuf> {
-    ["fleet_sim", "fleet_mixed_policy", "fleet_cache"]
+    ["fleet_sim", "fleet_mixed_policy", "fleet_cache", "fleet_sharded"]
         .iter()
         .map(|name| repo_root().join("scenarios").join(format!("{name}.json")))
         .collect()
@@ -95,6 +95,7 @@ fn shipped_specs_match_their_presets() {
                 &FleetCacheKnobs { zipf_distinct: 12, record_trace: true, ..Default::default() },
             ),
         ),
+        ("fleet_sharded", presets::fleet_sharded(Benchmark::Gpqa, 240, 2.0, 11)),
     ];
     for (name, preset) in cases {
         let path = repo_root().join("scenarios").join(format!("{name}.json"));
@@ -275,6 +276,55 @@ fn golden_trace_reproduces_through_scenario_session() {
         // (fresh checkout pre-bootstrap) the deterministic double-run
         // above still pins scenario-level reproducibility.
         eprintln!("[scenario golden] {} not bootstrapped yet; skipped", path.display());
+    }
+}
+
+/// `shards = 1` is the unsharded kernel: the golden fleet pushed through
+/// the sharded entry point (even on a multi-thread pool) must reproduce
+/// the pinned golden trace byte-for-byte. This is the strongest parity
+/// statement the repo can make — the sharded path earns its speedup by
+/// partitioning, not by changing any per-query arithmetic.
+#[test]
+fn golden_trace_reproduces_through_sharded_path_at_one_shard() {
+    let session = presets::golden_fleet().build(predictor()).expect("preset spec is valid");
+    let sharded = session.run_sharded(1, 4).trace_text();
+    let plain = session.run().trace_text();
+    assert_eq!(sharded, plain, "run_sharded(1, _) must be byte-identical to the plain kernel");
+
+    let path = repo_root().join("rust/tests/golden/fleet_trace.txt");
+    if path.exists() {
+        let pinned = std::fs::read_to_string(&path).expect("read golden file");
+        assert_eq!(
+            sharded,
+            pinned,
+            "sharded(1) golden trace diverged from {} — compared, never regenerated",
+            path.display()
+        );
+    } else {
+        eprintln!("[sharded golden] {} not bootstrapped yet; skipped", path.display());
+    }
+}
+
+/// The shipped sharded scenario (4 shards, 240 queries) must produce a
+/// report whose bytes do not depend on how many pool threads execute the
+/// shards: 1, 2, 4, and 8 threads all merge to the same artifact.
+#[test]
+fn shipped_fleet_sharded_spec_is_thread_count_invariant() {
+    let path = repo_root().join("scenarios/fleet_sharded.json");
+    let spec = ScenarioSpec::from_file(&path).expect("shipped spec parses");
+    assert_eq!(spec.topology.shards, 4, "shipped sharded spec pins 4 shards");
+    let session = spec.build(predictor()).expect("shipped spec is valid");
+
+    let serial = session.run_with_threads(1);
+    assert_eq!(serial.results.len(), 240, "every query must survive the cross-shard merge");
+    let serial_json = serial.to_json().to_string_pretty();
+    for threads in [2usize, 4, 8] {
+        let run = session.run_with_threads(threads);
+        assert_eq!(
+            run.to_json().to_string_pretty(),
+            serial_json,
+            "report bytes changed between 1 and {threads} threads"
+        );
     }
 }
 

@@ -42,6 +42,25 @@ cargo run --release -- run --scenario scenarios/fleet_cache_sweep.json \
     --json /tmp/hybridflow_sweep_smoke.json
 rm -f /tmp/hybridflow_sweep_smoke.json
 
+echo "== sharded scenario smoke run =="
+# The shipped sharded fleet at --shards 1 vs --shards 4: the override
+# must change the report (per-shard pools/caps are real semantics), and
+# re-running --shards 4 must reproduce it byte-for-byte (the sharded
+# kernel's determinism contract; thread-count invariance is pinned by
+# the test suite and the fuzz invariants above).
+cargo run --release -- run --scenario scenarios/fleet_sharded.json \
+    --shards 1 --json /tmp/hybridflow_shard1.json
+cargo run --release -- run --scenario scenarios/fleet_sharded.json \
+    --shards 4 --json /tmp/hybridflow_shard4.json
+cargo run --release -- run --scenario scenarios/fleet_sharded.json \
+    --shards 4 --json /tmp/hybridflow_shard4_rerun.json
+if cmp -s /tmp/hybridflow_shard1.json /tmp/hybridflow_shard4.json; then
+    echo "error: --shards override had no effect (1-shard and 4-shard reports identical)"
+    exit 1
+fi
+diff /tmp/hybridflow_shard4.json /tmp/hybridflow_shard4_rerun.json
+rm -f /tmp/hybridflow_shard1.json /tmp/hybridflow_shard4.json /tmp/hybridflow_shard4_rerun.json
+
 echo "== kernel perf bench (smoke, BENCH_SCALE=0.05) =="
 # Emits BENCH_kernel.json (worker-pool + fleet-size scaling, indexed vs
 # the retained linear-scan baseline) and self-validates that the artifact
