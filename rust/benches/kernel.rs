@@ -16,6 +16,10 @@
 //!   indexed events/sec across W is the "no linear-in-W term" check.
 //! * `fleet_sweep` — fleet sizes 1k → 10k queries at a fixed pool,
 //!   pinning end-to-end kernel scaling in workload size.
+//! * `observe_overhead` — the identical fleet with the `obs::` recorders
+//!   (spans + metrics) off vs on, pinning the cost of full
+//!   instrumentation (observe-off takes the exact uninstrumented code
+//!   path, so its cell doubles as the PR 7 baseline).
 //! * `shard_scaling` — the same 100k-query fleet partitioned across 1, 2,
 //!   4, and 8 kernel shards (`run_fleet_sharded`, one OS thread per
 //!   shard), reporting events/sec and queries/sec per shard count plus
@@ -31,6 +35,7 @@
 use hybridflow::budget::TenantPool;
 use hybridflow::config::simparams::SimParams;
 use hybridflow::models::SimExecutor;
+use hybridflow::obs::ObserveConfig;
 use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
 use hybridflow::planner::synthetic::SyntheticPlanner;
 use hybridflow::router::{MirrorPredictor, RoutePolicy};
@@ -148,13 +153,25 @@ impl KernelRunStats {
 /// reference (`ScheduleConfig::linear_pool_reference`) for the baseline
 /// measurement.
 fn run_kernel(workers: usize, n: usize, seed: u64, linear_pools: bool) -> KernelRunStats {
+    let cfg = FleetConfig { record_trace: false, ..Default::default() };
+    run_kernel_cfg(workers, n, seed, linear_pools, cfg)
+}
+
+/// [`run_kernel`] with an explicit fleet config, so the observability
+/// section can switch the recorders on against the identical workload.
+fn run_kernel_cfg(
+    workers: usize,
+    n: usize,
+    seed: u64,
+    linear_pools: bool,
+    cfg: FleetConfig,
+) -> KernelRunStats {
     let p = pipeline(workers, linear_pools);
     let arrivals: Vec<FleetArrival> = generate_queries(Benchmark::Gpqa, n, seed)
         .into_iter()
         .enumerate()
         .map(|(i, query)| FleetArrival { time: i as f64 * 0.005, tenant: 0, query })
         .collect();
-    let cfg = FleetConfig { record_trace: false, ..Default::default() };
     let tenants = vec![TenantPool::unlimited("bench")];
     let t0 = Instant::now();
     let report = run_fleet(&p, &cfg, tenants, arrivals, seed);
@@ -254,6 +271,32 @@ fn main() {
         })
         .collect();
 
+    println!("-- observability overhead (64-worker pools) --");
+    let n_obs = ((5000.0 * scale).round() as usize).max(50);
+    let obs_off = run_kernel(64, n_obs, 13, false);
+    let obs_on = run_kernel_cfg(
+        64,
+        n_obs,
+        13,
+        false,
+        FleetConfig {
+            record_trace: false,
+            observe: Some(ObserveConfig::default()),
+            ..Default::default()
+        },
+    );
+    let obs_ratio = obs_off.events_per_s / obs_on.events_per_s.max(1e-9);
+    println!(
+        "observe n={n_obs:<6} off {:>10.0} ev/s   on {:>10.0} ev/s   off/on {:.2}x",
+        obs_off.events_per_s, obs_on.events_per_s, obs_ratio,
+    );
+    let observe_overhead = vec![Json::obj(vec![
+        ("queries", Json::Num(n_obs as f64)),
+        ("off", obs_off.to_json(n_obs)),
+        ("on", obs_on.to_json(n_obs)),
+        ("off_vs_on_events_ratio", Json::Num(obs_ratio)),
+    ])];
+
     println!("-- shard scaling (100k-query fleet, 64-worker pools per shard) --");
     let n_shard_cell = ((100_000.0 * scale).round() as usize).max(1_000);
     let mut shard_ev: Vec<(usize, f64)> = Vec::new();
@@ -303,6 +346,7 @@ fn main() {
         ("pool_microbench", Json::Arr(micro)),
         ("worker_sweep", Json::Arr(worker_sweep)),
         ("fleet_sweep", Json::Arr(fleet_sweep)),
+        ("observe_overhead", Json::Arr(observe_overhead)),
         ("shard_scaling", Json::Arr(shard_scaling)),
         ("shard_scaling_4_vs_1", Json::Num(shard4_vs_1)),
         ("indexed_flatness_1024_vs_4", Json::Num(flatness)),
@@ -330,7 +374,9 @@ fn main() {
             std::process::exit(1);
         }
     };
-    for key in ["pool_microbench", "worker_sweep", "fleet_sweep", "shard_scaling"] {
+    for key in
+        ["pool_microbench", "worker_sweep", "fleet_sweep", "observe_overhead", "shard_scaling"]
+    {
         if parsed.get(key).and_then(Json::as_arr).map_or(true, <[Json]>::is_empty) {
             eprintln!("error: {out_path} is missing section '{key}'");
             std::process::exit(1);

@@ -51,6 +51,7 @@ pub mod budget;
 pub mod cache;
 pub mod engine;
 pub mod models;
+pub mod obs;
 pub mod router;
 pub mod scheduler;
 pub mod sim;

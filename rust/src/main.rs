@@ -18,6 +18,7 @@ use hybridflow::config::simparams::SimParams;
 use hybridflow::dag::emit_plan;
 use hybridflow::eval::{run_experiment, ExpContext, EXPERIMENT_IDS};
 use hybridflow::models::SimExecutor;
+use hybridflow::obs::ObserveConfig;
 use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
 use hybridflow::planner::synthetic::SyntheticPlanner;
 use hybridflow::planner::Planner;
@@ -34,7 +35,7 @@ use std::sync::Arc;
 
 const COMMANDS: [(&str, &str); 7] = [
     ("plan", "decompose a synthetic query and print plan + repaired DAG"),
-    ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario; --shards N overrides its shard count)"),
+    ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario; --shards N overrides its shard count, --trace-out/--metrics-out/--metrics-interval export observability artifacts, --threads N caps the shard fan-out)"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
     ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy|fleet_cache>"),
@@ -57,7 +58,10 @@ fn allowed_options(cmd: &str) -> Vec<&'static str> {
         "fuzz" => return vec!["cases", "seed", "adversarial"],
         "check" => return vec!["artifacts"],
         "exp" => return vec!["artifacts", "id", "quick", "scale", "seeds", "out", "json"],
-        "run" => vec!["n", "scenario", "json", "shards"],
+        "run" => vec![
+            "n", "scenario", "json", "shards", "threads", "trace-out", "metrics-out",
+            "metrics-interval",
+        ],
         "serve" => vec!["n", "workers", "trace-in", "trace-out", "metrics", "json"],
         _ => vec![],
     };
@@ -93,8 +97,13 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
         );
     }
     // Typed-value sanity (parse errors surface here, not mid-run).
-    for key in ["n", "workers", "cache", "seeds", "cases", "shards"] {
+    for key in ["n", "workers", "cache", "seeds", "cases", "shards", "threads"] {
         let _ = args.get_usize(key)?;
+    }
+    // Artifact options take a file path; a bare `--trace-out` means the
+    // path was forgotten (or swallowed by a following `--option`).
+    for key in ["trace-out", "metrics-out", "json", "out"] {
+        anyhow::ensure!(!args.flag(key), "--{key} expects a file path");
     }
     // `--shards` overrides the spec's `topology.shards`, so it only makes
     // sense next to a scenario file, and zero shards is meaningless
@@ -107,6 +116,25 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 "--shards overrides a scenario's topology; pass it with --scenario <file.json>"
             );
         }
+    }
+    // The observability exports and the explicit thread budget configure a
+    // scenario run; on the plain `run` path they would be silently dead.
+    if cmd == "run" && args.get("scenario").is_none() {
+        for key in ["trace-out", "metrics-out", "metrics-interval", "threads"] {
+            anyhow::ensure!(
+                args.get(key).is_none(),
+                "--{key} configures a scenario run; pass it with --scenario <file.json>"
+            );
+        }
+    }
+    if let Some(threads) = args.get_usize("threads")? {
+        anyhow::ensure!(threads >= 1, "--threads expects a positive thread count, got {threads}");
+    }
+    if let Some(iv) = args.get_f64("metrics-interval")? {
+        anyhow::ensure!(
+            iv.is_finite() && iv > 0.0,
+            "--metrics-interval expects a finite positive number of virtual seconds, got {iv}"
+        );
     }
     let _ = args.get_u64_or("seed", 0)?;
     for key in ["fixed-tau", "scale"] {
@@ -280,12 +308,23 @@ fn write_json(path: &str, j: &Json) -> anyhow::Result<()> {
 /// `run --scenario <file.json>` on a sweep file: resolve the grid, fan it
 /// out across the thread pool, print the tabulated cells.
 fn cmd_run_sweep(args: &Args, path: &str, j: &Json) -> anyhow::Result<()> {
+    // A sweep aggregates many cells into one table; there is no single
+    // span stream or metrics series to export.
+    for key in ["trace-out", "metrics-out", "metrics-interval"] {
+        anyhow::ensure!(
+            args.get(key).is_none(),
+            "--{key} applies to a single scenario run, not a sweep"
+        );
+    }
     let mut sweep = SweepSpec::from_json(j)?;
     if let Some(shards) = args.get_usize("shards")? {
         sweep.base.topology.shards = shards;
     }
     let n_cells: usize = sweep.axes.iter().map(|a| a.values.len()).product();
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = match args.get_usize("threads")? {
+        Some(t) => t,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
     println!(
         "sweep '{}' from {path}: {} cells over {} axis(es), {} threads",
         sweep.name,
@@ -311,6 +350,26 @@ fn cmd_run_scenario(args: &Args, path: &str) -> anyhow::Result<()> {
     if let Some(shards) = args.get_usize("shards")? {
         spec.topology.shards = shards;
     }
+    // `--trace-out` / `--metrics-out` switch the matching recorder on (on
+    // top of whatever the spec's `observe` block enables), and
+    // `--metrics-interval` overrides the snapshot cadence; the values
+    // themselves were validated in `validate_command_args`.
+    let want_trace = args.get("trace-out").is_some();
+    let want_metrics = args.get("metrics-out").is_some();
+    let interval = args.get_f64("metrics-interval")?;
+    if want_trace || want_metrics || interval.is_some() {
+        let mut o = spec.engine.observe.clone().unwrap_or(ObserveConfig {
+            spans: false,
+            metrics: false,
+            ..Default::default()
+        });
+        o.spans |= want_trace;
+        o.metrics |= want_metrics || interval.is_some();
+        if let Some(iv) = interval {
+            o.metrics_interval = iv;
+        }
+        spec.engine.observe = Some(o);
+    }
     println!(
         "scenario '{}' from {path}: {} x {} queries, {} tenants, {} shard(s), seed {}",
         spec.name,
@@ -321,10 +380,23 @@ fn cmd_run_scenario(args: &Args, path: &str) -> anyhow::Result<()> {
         spec.seed,
     );
     let session = spec.build(scenario_predictor(args)?)?;
-    let report = session.run();
+    let report = match args.get_usize("threads")? {
+        Some(t) => session.run_with_threads(t),
+        None => session.run(),
+    };
     println!("{}", report.render());
     if let Some(out) = args.get("json") {
         write_json(out, &report.to_json())?;
+    }
+    if let Some(obs) = &report.obs {
+        if let Some(path) = args.get("trace-out") {
+            std::fs::write(path, obs.chrome_trace_text())?;
+            println!("trace written to {path} ({} spans)", obs.spans.len());
+        }
+        if let Some(path) = args.get("metrics-out") {
+            std::fs::write(path, obs.metrics_jsonl())?;
+            println!("metrics written to {path} ({} snapshots)", obs.snapshots.len());
+        }
     }
     for t in &report.tenants {
         println!(
@@ -712,6 +784,45 @@ mod tests {
         let a = parse("hybridflow run --n 5 --shards 2");
         let err = validate_command_args("run", &a).unwrap_err().to_string();
         assert!(err.contains("--scenario"), "{err}");
+    }
+
+    #[test]
+    fn observability_exports_are_validated() {
+        // The happy path: exports + cadence + thread budget on a scenario.
+        let a = parse(
+            "hybridflow run --scenario scenarios/fleet_sharded.json --trace-out t.json \
+             --metrics-out m.jsonl --metrics-interval 0.5 --threads 4",
+        );
+        assert!(validate_command_args("run", &a).is_ok());
+        // A bare `--trace-out` / `--metrics-out` forgot its file path.
+        for flag in ["--trace-out", "--metrics-out"] {
+            let a = parse(&format!("hybridflow run --scenario s.json {flag}"));
+            let err = validate_command_args("run", &a).unwrap_err().to_string();
+            assert!(err.contains("file path"), "{flag}: {err}");
+        }
+        // The exports configure a scenario run; plain `run` has no spans.
+        for opt in
+            ["--trace-out t.json", "--metrics-out m.jsonl", "--metrics-interval 2", "--threads 2"]
+        {
+            let a = parse(&format!("hybridflow run --n 5 {opt}"));
+            let err = validate_command_args("run", &a).unwrap_err().to_string();
+            assert!(err.contains("--scenario"), "{opt}: {err}");
+        }
+        // The snapshot cadence must be a positive finite virtual-second gap.
+        for bad in ["0", "-1", "nan", "inf"] {
+            let a = parse(&format!(
+                "hybridflow run --scenario s.json --metrics-out m.jsonl --metrics-interval {bad}"
+            ));
+            assert!(validate_command_args("run", &a).is_err(), "--metrics-interval {bad}");
+        }
+        // Zero threads cannot run anything.
+        let a = parse("hybridflow run --scenario s.json --threads 0");
+        assert!(validate_command_args("run", &a).is_err(), "--threads 0");
+        // Commands without a scenario path reject the exports outright.
+        let a = parse("hybridflow serve --n 10 --metrics-out m.jsonl");
+        assert!(validate_command_args("serve", &a).is_err());
+        let a = parse("hybridflow plan --trace-out t.json");
+        assert!(validate_command_args("plan", &a).is_err());
     }
 
     #[test]

@@ -87,6 +87,7 @@ mod tests {
             in_tokens,
             hedged: false,
             cached: false,
+            worker: 0,
         }
     }
 

@@ -1,0 +1,196 @@
+//! Shared metrics primitives: the repo's single log-spaced histogram
+//! implementation and the fleet metrics time-series snapshot.
+//!
+//! [`Histogram`] used to live in `server::telemetry`; it moved here so the
+//! wall-clock serving telemetry and the virtual-clock observability layer
+//! record into the exact same buckets (`server::telemetry` re-exports it,
+//! so the old path keeps working). [`MetricsSnapshot`] is one row of the
+//! kernel's time series: the queue/pool/budget/cache gauges sampled at a
+//! configurable virtual-clock interval, serialized one compact JSON object
+//! per line by [`metrics_jsonl`].
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram: buckets at 0.1ms * 2^k, k in 0..=N.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+pub const HIST_BUCKETS: usize = 20; // 0.1ms .. ~52s
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..=HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_micros: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(secs: f64) -> usize {
+        let ratio = (secs / 1e-4).max(1.0);
+        (ratio.log2().floor() as usize).min(HIST_BUCKETS)
+    }
+
+    pub fn record(&self, secs: f64) {
+        self.buckets[Self::bucket_index(secs)].fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return f64::NAN;
+        }
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1e-4 * 2f64.powi(k as i32 + 1);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One row of the kernel's metrics time series: the state of a shard's
+/// queues, pools, budgets, cache, and completed-query latency histogram at
+/// virtual time `t` (before any event at that instant is processed). The
+/// latency columns come from the shared [`Histogram`] and guard the
+/// zero-completion case to 0.0 so JSONL rows never carry `null`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Virtual-clock sample time.
+    pub t: f64,
+    /// Shard that observed this row (0 for the unsharded kernel).
+    pub shard: usize,
+    /// Subtasks ready to dispatch across all in-flight queries.
+    pub ready_depth: usize,
+    /// Arrivals waiting for an admission slot.
+    pub admission_backlog: usize,
+    /// Edge workers busy at `t` (next-free strictly after `t`).
+    pub edge_busy: usize,
+    /// Cloud workers busy at `t`.
+    pub cloud_busy: usize,
+    /// Cumulative fleet-wide cloud dollars spent.
+    pub global_spent: f64,
+    /// Cumulative per-tenant cloud dollars spent (spec order).
+    pub tenant_spent: Vec<f64>,
+    /// Cumulative result-cache probes (0 when no cache is attached).
+    pub cache_lookups: u64,
+    /// Cumulative result-cache hits.
+    pub cache_hits: u64,
+    /// Queries finished so far.
+    pub completed: u64,
+    /// Mean / p50 / p99 of completed-query sojourn, 0.0 until the first
+    /// completion.
+    pub latency_mean: f64,
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let hit_rate = if self.cache_lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.cache_lookups as f64
+        };
+        Json::obj(vec![
+            ("admission_backlog", Json::Num(self.admission_backlog as f64)),
+            ("cache_hit_rate", Json::Num(hit_rate)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_lookups", Json::Num(self.cache_lookups as f64)),
+            ("cloud_busy", Json::Num(self.cloud_busy as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("edge_busy", Json::Num(self.edge_busy as f64)),
+            ("global_spent", Json::Num(self.global_spent)),
+            ("latency_mean", Json::Num(self.latency_mean)),
+            ("latency_p50", Json::Num(self.latency_p50)),
+            ("latency_p99", Json::Num(self.latency_p99)),
+            ("ready_depth", Json::Num(self.ready_depth as f64)),
+            ("shard", Json::Num(self.shard as f64)),
+            ("t", Json::Num(self.t)),
+            ("tenant_spent", Json::from_f64_slice(&self.tenant_spent)),
+        ])
+    }
+}
+
+/// Serialize a snapshot series as JSONL: one compact, sorted-key JSON
+/// object per line, in series order. Byte-deterministic given the series.
+pub fn metrics_jsonl(snapshots: &[MetricsSnapshot]) -> String {
+    let mut out = String::new();
+    for s in snapshots {
+        out.push_str(&s.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(t: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            t,
+            shard: 0,
+            ready_depth: 3,
+            admission_backlog: 1,
+            edge_busy: 2,
+            cloud_busy: 4,
+            global_spent: 0.25,
+            tenant_spent: vec![0.1, 0.15],
+            cache_lookups: 0,
+            cache_hits: 0,
+            completed: 0,
+            latency_mean: 0.0,
+            latency_p50: 0.0,
+            latency_p99: 0.0,
+        }
+    }
+
+    #[test]
+    fn snapshot_json_guards_zero_lookups() {
+        let j = snap(2.0).to_json();
+        assert_eq!(j.get("cache_hit_rate").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.get("latency_mean").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.get("t").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn jsonl_is_one_parseable_object_per_line() {
+        let text = metrics_jsonl(&[snap(0.0), snap(1.0)]);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).expect("each line parses");
+            assert!(j.get("ready_depth").is_some());
+        }
+        assert!(text.ends_with('\n'));
+    }
+}

@@ -1,0 +1,418 @@
+//! Deterministic observability for the unified simulation kernel: span
+//! lifecycles on the virtual clock, a fleet metrics time series, and
+//! realized critical-path extraction.
+//!
+//! Everything here is **pure data recorded off the kernel's existing
+//! decisions** — enabling observability must never change a routing
+//! choice, an RNG draw, or an event ordering, so the observability-off
+//! run stays byte-identical to the uninstrumented kernel (pinned by the
+//! golden fleet trace) and the emitted artifacts are byte-identical
+//! across thread counts (spans are collected per shard and merged in
+//! shard order by the deterministic cross-shard merge).
+//!
+//! * [`ObserveConfig`] — the `observe` block of a scenario spec: which
+//!   recorders are on and the metrics sampling interval.
+//! * [`Span`] — one subtask's lifecycle (planned → queued → dispatched →
+//!   finished) with tenant/side/worker/token/dollar annotations, exported
+//!   as Chrome trace-event JSON ([`ObsData::chrome_trace`]) loadable in
+//!   Perfetto or `chrome://tracing`: one lane per worker per side per
+//!   shard, plus a cache lane for zero-duration hits.
+//! * [`MetricsSnapshot`] / [`metrics_jsonl`] — queue depth, admission
+//!   backlog, pool occupancy, budget spend, cache hit rate, and latency
+//!   quantiles sampled every `metrics_interval` virtual seconds.
+//! * [`QueryPath`] / [`CriticalPathSummary`] — each query's realized
+//!   critical path recovered from its completed spans (per-node slack,
+//!   path latency vs. makespan), aggregated into the fleet report.
+
+pub mod metrics;
+
+pub use metrics::{metrics_jsonl, Histogram, MetricsSnapshot, HIST_BUCKETS};
+
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+
+/// Hard cap on emitted metrics snapshots per shard, so a tiny interval on
+/// a long-horizon fleet cannot balloon a run's memory; the series simply
+/// stops once the cap is reached.
+pub const MAX_METRIC_SNAPSHOTS: usize = 10_000;
+
+/// The `observe` block of a scenario spec. Absent (`None` at the engine
+/// level) means fully off: the kernel takes the exact uninstrumented code
+/// path and the report carries no observability sections.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObserveConfig {
+    /// Record per-subtask spans (and derive critical paths from them).
+    pub spans: bool,
+    /// Sample the metrics time series.
+    pub metrics: bool,
+    /// Virtual-clock seconds between metrics snapshots.
+    pub metrics_interval: f64,
+}
+
+impl Default for ObserveConfig {
+    fn default() -> Self {
+        ObserveConfig { spans: true, metrics: true, metrics_interval: 1.0 }
+    }
+}
+
+/// Synthetic Chrome-trace lane ids: edge worker `w` maps to `1 + w`,
+/// cloud worker `w` to `CLOUD_LANE_BASE + w`, cache hits to
+/// [`CACHE_LANE`] — disjoint ranges so one `pid` (shard) holds every lane.
+pub const CLOUD_LANE_BASE: usize = 1_000_001;
+pub const CACHE_LANE: usize = 2_000_001;
+
+/// One subtask's recorded lifecycle on the virtual clock. `queued` is the
+/// instant the subtask's dependencies were satisfied and it was routed
+/// (the kernel routes at the head of the ready queue, so route and queue
+/// coincide); `dispatched` is when a worker started it; for a cache hit
+/// all three collapse onto the hit instant. A hedged subtask produces two
+/// spans — the winner and the `cancelled` loser replica on the opposite
+/// side, closed at its cancel event with the refunded dollars.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Global query index (rewritten from shard-local by the merge).
+    pub q: usize,
+    /// Subtask index within the query's DAG.
+    pub node: usize,
+    /// Shard that executed the span (0 for the unsharded kernel).
+    pub shard: usize,
+    pub tenant: usize,
+    /// Executed on the cloud side (false = edge).
+    pub cloud: bool,
+    /// Worker index within the side's pool (0 for cache hits and
+    /// chain-mode virtual execution).
+    pub worker: usize,
+    /// When the query's plan finished (every node's earliest possible
+    /// queue time).
+    pub planned: f64,
+    /// Dependencies satisfied + routed.
+    pub queued: f64,
+    /// Worker claim start.
+    pub dispatched: f64,
+    /// Worker claim end (for a cancelled loser: the cancel-release time).
+    pub finished: f64,
+    /// Transmitted input tokens.
+    pub tokens: f64,
+    /// Cloud dollars charged.
+    pub dollars: f64,
+    pub hedged: bool,
+    /// Hedge loser replica, cancelled before completion.
+    pub cancelled: bool,
+    /// Served from the result cache (zero-duration span on the cache
+    /// lane).
+    pub cached: bool,
+    /// Dollars refunded on cancellation.
+    pub refund: f64,
+}
+
+impl Span {
+    /// Chrome-trace lane id for this span within its shard (`tid`).
+    pub fn lane(&self) -> usize {
+        if self.cached {
+            CACHE_LANE
+        } else if self.cloud {
+            CLOUD_LANE_BASE + self.worker
+        } else {
+            1 + self.worker
+        }
+    }
+
+    /// Human lane label for the `thread_name` metadata event.
+    pub fn lane_name(tid: usize) -> String {
+        if tid == CACHE_LANE {
+            "cache".into()
+        } else if tid >= CLOUD_LANE_BASE {
+            format!("cloud-{}", tid - CLOUD_LANE_BASE)
+        } else {
+            format!("edge-{}", tid - 1)
+        }
+    }
+
+    /// This span as a Chrome trace-event *complete* event (`ph: "X"`,
+    /// timestamps in integer microseconds).
+    fn trace_event(&self) -> Json {
+        let ts = (self.dispatched * 1e6).round();
+        let dur = ((self.finished - self.dispatched) * 1e6).round().max(0.0);
+        let cat = if self.cached {
+            "cache"
+        } else if self.cloud {
+            "cloud"
+        } else {
+            "edge"
+        };
+        Json::obj(vec![
+            (
+                "args",
+                Json::obj(vec![
+                    ("cached", Json::Bool(self.cached)),
+                    ("cancelled", Json::Bool(self.cancelled)),
+                    ("dollars", Json::Num(self.dollars)),
+                    ("hedged", Json::Bool(self.hedged)),
+                    ("planned", Json::Num(self.planned)),
+                    ("queued", Json::Num(self.queued)),
+                    ("refund", Json::Num(self.refund)),
+                    ("tenant", Json::Num(self.tenant as f64)),
+                    ("tokens", Json::Num(self.tokens)),
+                ]),
+            ),
+            ("cat", Json::Str(cat.into())),
+            ("dur", Json::Num(dur)),
+            ("name", Json::Str(format!("q{}:n{}", self.q, self.node))),
+            ("ph", Json::Str("X".into())),
+            ("pid", Json::Num(self.shard as f64)),
+            ("tid", Json::Num(self.lane() as f64)),
+            ("ts", Json::Num(ts)),
+        ])
+    }
+}
+
+/// One query's realized critical path, recovered from its completed spans
+/// by walking back from the last-finishing node through its
+/// latest-finishing parent. `slacks[i]` is how long `nodes[i]` waited
+/// between becoming runnable (its predecessor's finish, or the plan
+/// instant for the entry node) and being dispatched, so
+/// `sum(slacks) ≈ makespan - path_latency`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryPath {
+    /// Global query index.
+    pub q: usize,
+    /// Critical-path node indices, entry to exit.
+    pub nodes: Vec<usize>,
+    /// Per-node wait (queueing + contention) along the path.
+    pub slacks: Vec<f64>,
+    /// Sum of service durations along the path.
+    pub path_latency: f64,
+    /// Last finish minus plan completion.
+    pub makespan: f64,
+}
+
+/// Fleet-level aggregate of per-query critical paths, surfaced in the
+/// report (`critical_path` JSON section + one render line).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriticalPathSummary {
+    pub queries: usize,
+    /// Mean critical-path length in nodes.
+    pub mean_len: f64,
+    pub mean_makespan: f64,
+    pub mean_path_latency: f64,
+    /// Mean total wait along the path (makespan minus busy time).
+    pub mean_slack: f64,
+    pub max_makespan: f64,
+}
+
+impl CriticalPathSummary {
+    /// Aggregate a path set; `None` when no query completed with spans.
+    /// Callers must pass paths in a canonical order (sorted by `q`) so
+    /// the floating-point sums are byte-stable across shard layouts.
+    pub fn from_paths(paths: &[QueryPath]) -> Option<CriticalPathSummary> {
+        if paths.is_empty() {
+            return None;
+        }
+        let n = paths.len() as f64;
+        let mut len = 0.0;
+        let mut makespan = 0.0;
+        let mut latency = 0.0;
+        let mut slack = 0.0;
+        let mut max_makespan = 0.0f64;
+        for p in paths {
+            len += p.nodes.len() as f64;
+            makespan += p.makespan;
+            latency += p.path_latency;
+            slack += p.makespan - p.path_latency;
+            max_makespan = max_makespan.max(p.makespan);
+        }
+        Some(CriticalPathSummary {
+            queries: paths.len(),
+            mean_len: len / n,
+            mean_makespan: makespan / n,
+            mean_path_latency: latency / n,
+            mean_slack: slack / n,
+            max_makespan,
+        })
+    }
+
+    pub fn render_line(&self) -> String {
+        format!(
+            "critical path: mean {:.1} nodes, busy {:.2}s of {:.2}s makespan \
+             (slack {:.2}s), max makespan {:.2}s over {} queries",
+            self.mean_len,
+            self.mean_path_latency,
+            self.mean_makespan,
+            self.mean_slack,
+            self.max_makespan,
+            self.queries
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_makespan", Json::Num(self.max_makespan)),
+            ("mean_len", Json::Num(self.mean_len)),
+            ("mean_makespan", Json::Num(self.mean_makespan)),
+            ("mean_path_latency", Json::Num(self.mean_path_latency)),
+            ("mean_slack", Json::Num(self.mean_slack)),
+            ("queries", Json::Num(self.queries as f64)),
+        ])
+    }
+}
+
+/// Everything the observability layer recorded during one run: spans,
+/// metrics snapshots, per-query critical paths, and the open-span leak
+/// counter (0 on a healthy run — every opened span closed exactly once).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObsData {
+    pub spans: Vec<Span>,
+    pub snapshots: Vec<MetricsSnapshot>,
+    /// Sorted by `q` (the merge re-sorts after rewriting shard-local
+    /// indices) so downstream aggregation is shard-layout invariant.
+    pub paths: Vec<QueryPath>,
+    /// Spans opened but never closed (hedge losers whose cancel event
+    /// never fired); the fuzz harness pins this to 0.
+    pub unclosed_spans: usize,
+}
+
+impl ObsData {
+    /// The span set as a Chrome trace-event JSON document:
+    /// `{"displayTimeUnit": .., "traceEvents": [..]}` with one
+    /// `thread_name` metadata event (`ph: "M"`) per populated lane
+    /// followed by the complete events (`ph: "X"`) sorted by dispatch
+    /// time. Load the rendered text in Perfetto or `chrome://tracing`.
+    pub fn chrome_trace(&self) -> Json {
+        let mut lanes: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for s in &self.spans {
+            lanes.insert((s.shard, s.lane()));
+        }
+        let mut events: Vec<Json> = Vec::with_capacity(lanes.len() + self.spans.len());
+        for (pid, tid) in &lanes {
+            events.push(Json::obj(vec![
+                ("args", Json::obj(vec![("name", Json::Str(Span::lane_name(*tid)))])),
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(*pid as f64)),
+                ("tid", Json::Num(*tid as f64)),
+            ]));
+        }
+        let mut spans: Vec<&Span> = self.spans.iter().collect();
+        spans.sort_by(|a, b| {
+            a.dispatched
+                .total_cmp(&b.dispatched)
+                .then(a.shard.cmp(&b.shard))
+                .then(a.q.cmp(&b.q))
+                .then(a.node.cmp(&b.node))
+                .then(a.cancelled.cmp(&b.cancelled))
+        });
+        for s in spans {
+            events.push(s.trace_event());
+        }
+        Json::obj(vec![
+            ("displayTimeUnit", Json::Str("ms".into())),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
+
+    /// Pretty-printed [`ObsData::chrome_trace`] text with a trailing
+    /// newline — the exact bytes `--trace-out` writes.
+    pub fn chrome_trace_text(&self) -> String {
+        let mut s = self.chrome_trace().to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    /// The metrics series as JSONL — the exact bytes `--metrics-out`
+    /// writes.
+    pub fn metrics_jsonl(&self) -> String {
+        metrics_jsonl(&self.snapshots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(q: usize, node: usize, cloud: bool, worker: usize, t0: f64) -> Span {
+        Span {
+            q,
+            node,
+            shard: 0,
+            tenant: q % 2,
+            cloud,
+            worker,
+            planned: t0 - 0.5,
+            queued: t0 - 0.25,
+            dispatched: t0,
+            finished: t0 + 1.0,
+            tokens: 120.0,
+            dollars: if cloud { 0.001 } else { 0.0 },
+            hedged: false,
+            cancelled: false,
+            cached: false,
+            refund: 0.0,
+        }
+    }
+
+    #[test]
+    fn lanes_are_disjoint_and_named() {
+        let edge = span(0, 0, false, 3, 1.0);
+        let cloud = span(0, 1, true, 3, 1.0);
+        let mut hit = span(0, 2, false, 7, 1.0);
+        hit.cached = true;
+        assert_eq!(edge.lane(), 4);
+        assert_eq!(cloud.lane(), CLOUD_LANE_BASE + 3);
+        assert_eq!(hit.lane(), CACHE_LANE);
+        assert_eq!(Span::lane_name(edge.lane()), "edge-3");
+        assert_eq!(Span::lane_name(cloud.lane()), "cloud-3");
+        assert_eq!(Span::lane_name(CACHE_LANE), "cache");
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_roundtrip() {
+        let data = ObsData {
+            spans: vec![span(1, 0, false, 0, 2.0), span(0, 0, true, 1, 1.0)],
+            ..Default::default()
+        };
+        let text = data.chrome_trace_text();
+        let j = Json::parse(&text).expect("trace parses");
+        let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(events.len(), 4, "2 lane metadata + 2 complete events");
+        // Metadata first, then X events sorted by ts.
+        assert_eq!(events[0].get("ph").and_then(Json::as_str), Some("M"));
+        assert_eq!(events[1].get("ph").and_then(Json::as_str), Some("M"));
+        assert_eq!(events[2].get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(events[2].get("ts").and_then(Json::as_f64), Some(1e6));
+        assert_eq!(events[2].get("dur").and_then(Json::as_f64), Some(1e6));
+        assert_eq!(events[2].get("name").and_then(Json::as_str), Some("q0:n0"));
+        assert_eq!(events[3].get("ts").and_then(Json::as_f64), Some(2e6));
+        // Canonical writer: parse -> pretty-print is a byte fixpoint.
+        let mut again = j.to_string_pretty();
+        again.push('\n');
+        assert_eq!(again, text, "trace text round-trips through util::json");
+    }
+
+    #[test]
+    fn critical_path_summary_aggregates() {
+        let paths = vec![
+            QueryPath {
+                q: 0,
+                nodes: vec![0, 2],
+                slacks: vec![0.0, 0.5],
+                path_latency: 2.0,
+                makespan: 2.5,
+            },
+            QueryPath {
+                q: 1,
+                nodes: vec![0, 1, 3],
+                slacks: vec![0.0, 0.0, 1.5],
+                path_latency: 3.0,
+                makespan: 4.5,
+            },
+        ];
+        let s = CriticalPathSummary::from_paths(&paths).unwrap();
+        assert_eq!(s.queries, 2);
+        assert!((s.mean_len - 2.5).abs() < 1e-12);
+        assert!((s.mean_makespan - 3.5).abs() < 1e-12);
+        assert!((s.mean_slack - 1.0).abs() < 1e-12);
+        assert_eq!(s.max_makespan, 4.5);
+        assert!(s.render_line().contains("over 2 queries"));
+        assert!(CriticalPathSummary::from_paths(&[]).is_none());
+    }
+}

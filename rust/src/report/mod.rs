@@ -9,6 +9,7 @@
 //! mode-specific lines, then appends the shared hedge/cache sections.
 
 use crate::cache::CacheStats;
+use crate::obs::CriticalPathSummary;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -49,6 +50,16 @@ impl ReportRenderer {
     pub fn cache(&mut self, stats: Option<&CacheStats>) -> &mut Self {
         if let Some(c) = stats {
             self.line(c.render_line());
+        }
+        self
+    }
+
+    /// Shared critical-path section ([`CriticalPathSummary::render_line`]).
+    /// Silent when observability was off, so uninstrumented reports are
+    /// byte-identical to pre-observability ones.
+    pub fn critical_path(&mut self, cp: Option<&CriticalPathSummary>) -> &mut Self {
+        if let Some(cp) = cp {
+            self.line(cp.render_line());
         }
         self
     }
@@ -119,6 +130,26 @@ mod tests {
         r.cache(None); // silent
         let got = r.finish();
         assert_eq!(got, "head\nbody\nhedge: 3 losers cancelled, $0.1250 refunded");
+    }
+
+    #[test]
+    fn critical_path_section_is_silent_when_absent() {
+        let mut r = ReportRenderer::new("head".into());
+        r.critical_path(None);
+        assert_eq!(r.finish(), "head", "no observability, no section");
+        let cp = CriticalPathSummary {
+            queries: 3,
+            mean_len: 2.0,
+            mean_makespan: 4.0,
+            mean_path_latency: 3.0,
+            mean_slack: 1.0,
+            max_makespan: 6.0,
+        };
+        let mut r = ReportRenderer::new("head".into());
+        r.critical_path(Some(&cp));
+        let got = r.finish();
+        assert!(got.contains("critical path:"), "{got}");
+        assert!(got.contains("over 3 queries"), "{got}");
     }
 
     #[test]

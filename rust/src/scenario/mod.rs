@@ -37,6 +37,7 @@ pub use sweep::{SweepAxis, SweepCellResult, SweepField, SweepReport, SweepSpec};
 use crate::budget::TenantPool;
 use crate::cache::{CachePolicyKind, SubtaskCache};
 use crate::config::simparams::SimParams;
+use crate::obs::ObserveConfig;
 use crate::models::SimExecutor;
 use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
 use crate::planner::synthetic::SyntheticPlanner;
@@ -223,6 +224,11 @@ pub struct EngineSpec {
     pub n_max: usize,
     pub record_trace: bool,
     pub cache: Option<CacheSpec>,
+    /// Structured observability (spans, metrics time series, critical
+    /// paths). `None` is fully off — the kernel takes the exact
+    /// uninstrumented code path and the key is omitted from the rendered
+    /// spec, so pre-observability spec files round-trip unchanged.
+    pub observe: Option<ObserveConfig>,
 }
 
 impl Default for EngineSpec {
@@ -237,6 +243,7 @@ impl Default for EngineSpec {
             n_max: sp.nmax,
             record_trace: true,
             cache: None,
+            observe: None,
         }
     }
 }
@@ -304,6 +311,28 @@ impl ScenarioSpec {
                 ("shared_tier", Json::Bool(c.shared_tier)),
             ])
         });
+        let mut engine = vec![
+            ("policy", Json::Str(self.engine.policy.render())),
+            ("chain_mode", Json::Bool(self.engine.chain_mode)),
+            ("batch_frontier", Json::Bool(self.engine.batch_frontier)),
+            ("hedge", Json::Bool(self.engine.hedge)),
+            ("hedge_threshold", Json::Num(self.engine.hedge_threshold)),
+            ("n_max", Json::Num(self.engine.n_max as f64)),
+            ("record_trace", Json::Bool(self.engine.record_trace)),
+            ("cache", cache),
+        ];
+        // Emitted only when present, so pre-observability spec files keep
+        // their exact rendered bytes (parse-render fixpoint).
+        if let Some(o) = &self.engine.observe {
+            engine.push((
+                "observe",
+                Json::obj(vec![
+                    ("spans", Json::Bool(o.spans)),
+                    ("metrics", Json::Bool(o.metrics)),
+                    ("metrics_interval", Json::Num(o.metrics_interval)),
+                ]),
+            ));
+        }
         Json::obj(vec![
             ("name", Json::Str(self.name.clone())),
             ("seed", Json::Num(self.seed as f64)),
@@ -327,19 +356,7 @@ impl ScenarioSpec {
                     ("zipf", zipf),
                 ]),
             ),
-            (
-                "engine",
-                Json::obj(vec![
-                    ("policy", Json::Str(self.engine.policy.render())),
-                    ("chain_mode", Json::Bool(self.engine.chain_mode)),
-                    ("batch_frontier", Json::Bool(self.engine.batch_frontier)),
-                    ("hedge", Json::Bool(self.engine.hedge)),
-                    ("hedge_threshold", Json::Num(self.engine.hedge_threshold)),
-                    ("n_max", Json::Num(self.engine.n_max as f64)),
-                    ("record_trace", Json::Bool(self.engine.record_trace)),
-                    ("cache", cache),
-                ]),
-            ),
+            ("engine", Json::obj(engine)),
         ])
     }
 
@@ -434,6 +451,17 @@ impl ScenarioSpec {
                 })
             }
         };
+        let observe = match eng.get("observe") {
+            None | Some(Json::Null) => None,
+            Some(o) => {
+                let d = ObserveConfig::default();
+                Some(ObserveConfig {
+                    spans: bool_or(o, "spans", d.spans)?,
+                    metrics: bool_or(o, "metrics", d.metrics)?,
+                    metrics_interval: num_or(o, "metrics_interval", d.metrics_interval)?,
+                })
+            }
+        };
         let defaults = EngineSpec::default();
         let engine = EngineSpec {
             policy,
@@ -444,6 +472,7 @@ impl ScenarioSpec {
             n_max: count_or(eng, "n_max", defaults.n_max)?,
             record_trace: bool_or(eng, "record_trace", defaults.record_trace)?,
             cache,
+            observe,
         };
         let spec = ScenarioSpec { name, seed, topology, workload, engine };
         spec.validate()?;
@@ -557,6 +586,14 @@ impl ScenarioSpec {
             self.engine.hedge_threshold
         );
         anyhow::ensure!(self.engine.n_max >= 1, "n_max must be at least 1");
+        if let Some(o) = &self.engine.observe {
+            anyhow::ensure!(
+                o.metrics_interval.is_finite() && o.metrics_interval > 0.0,
+                "observe.metrics_interval must be a finite positive number of \
+                 virtual seconds, got {}",
+                o.metrics_interval
+            );
+        }
         Ok(())
     }
 
@@ -584,6 +621,7 @@ impl ScenarioSpec {
                 .iter()
                 .map(|t| t.policy.as_ref().map(|p| p.build(&sp)))
                 .collect(),
+            observe: self.engine.observe.clone(),
         };
         Ok(Session { spec: self.clone(), pipeline, tenants, fleet, predictor })
     }
@@ -1066,6 +1104,73 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("shards"), "parse error names the field: {err}");
+    }
+
+    #[test]
+    fn observe_block_roundtrips_and_defaults_to_none() {
+        let mut spec = small_spec();
+        spec.engine.observe =
+            Some(ObserveConfig { spans: true, metrics: false, metrics_interval: 0.25 });
+        let back = ScenarioSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec, "observe survives the JSON round trip");
+        assert_eq!(back.render(), spec.render(), "render fixpoint with observe");
+        // Pre-observability spec files carry no "observe" key: fully off.
+        let plain = small_spec();
+        let parsed = ScenarioSpec::parse(&plain.render()).unwrap();
+        assert!(parsed.engine.observe.is_none(), "absent observe reads as off");
+        assert!(
+            !plain.render().contains("observe"),
+            "observe-off specs keep their pre-observability bytes"
+        );
+        // An explicit `null` is the same spelling as absent.
+        let mut j = small_spec().to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(eng)) = o.get_mut("engine") {
+                eng.insert("observe".into(), Json::Null);
+            }
+        }
+        assert!(ScenarioSpec::from_json(&j).unwrap().engine.observe.is_none());
+        // A bare `{}` block turns everything on at the default interval.
+        let mut j = small_spec().to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(eng)) = o.get_mut("engine") {
+                eng.insert("observe".into(), Json::obj(vec![]));
+            }
+        }
+        assert_eq!(
+            ScenarioSpec::from_json(&j).unwrap().engine.observe,
+            Some(ObserveConfig::default())
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_metrics_interval() {
+        for bad in [0.0, -1.0, f64::INFINITY, f64::NAN] {
+            let mut s = small_spec();
+            s.engine.observe = Some(ObserveConfig { metrics_interval: bad, ..Default::default() });
+            let err = s.validate().unwrap_err().to_string();
+            assert!(err.contains("metrics_interval"), "interval {bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn observed_session_matches_unobserved_trace() {
+        // Observability is read-only: turning it on must not perturb a
+        // single kernel decision, and turning it off must leave no
+        // artifact sections behind.
+        let plain_session = small_spec().build(predictor()).unwrap();
+        let plain = plain_session.run();
+        assert!(plain.obs.is_none() && plain.critical_path.is_none());
+        let mut spec = small_spec();
+        spec.engine.observe = Some(ObserveConfig::default());
+        let observed = spec.build(predictor()).unwrap().run();
+        assert_eq!(plain.trace_text(), observed.trace_text(), "kernel decisions unchanged");
+        let obs = observed.obs.expect("observed run carries artifacts");
+        assert!(!obs.spans.is_empty(), "spans recorded");
+        assert!(!obs.snapshots.is_empty(), "metrics sampled");
+        assert_eq!(obs.unclosed_spans, 0, "every opened span closed");
+        assert!(observed.critical_path.is_some(), "critical path surfaced");
+        assert!(observed.render().contains("critical path:"));
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::{
     TenantSpec, TopologySpec, WorkloadSpec,
 };
 use crate::cache::CachePolicyKind;
+use crate::obs::ObserveConfig;
 use crate::workload::trace::{ArrivalProcess, ZipfMix};
 use crate::workload::Benchmark;
 
@@ -26,6 +27,9 @@ pub struct FleetSimKnobs {
     /// Per-tenant dollar cap; `None` = unlimited.
     pub tenant_cap: Option<f64>,
     pub record_trace: bool,
+    /// Observability recorders (spans / metrics); `None` = fully off, the
+    /// preset keeps its pre-observability bytes.
+    pub observe: Option<ObserveConfig>,
 }
 
 impl Default for FleetSimKnobs {
@@ -37,6 +41,7 @@ impl Default for FleetSimKnobs {
             admission_limit: 64,
             tenant_cap: None,
             record_trace: true,
+            observe: None,
         }
     }
 }
@@ -77,7 +82,11 @@ pub fn fleet_sim(
             arrival: ArrivalProcess::Poisson { rate },
             zipf: None,
         },
-        engine: EngineSpec { record_trace: knobs.record_trace, ..Default::default() },
+        engine: EngineSpec {
+            record_trace: knobs.record_trace,
+            observe: knobs.observe.clone(),
+            ..Default::default()
+        },
     }
 }
 

@@ -80,6 +80,10 @@ pub struct TraceEvent {
     /// (no worker occupied, no budget spent; `cloud` then records the
     /// side that produced the *original* cached record).
     pub cached: bool,
+    /// Worker index of the winning replica within its side's pool (0 for
+    /// cache hits and chain-mode virtual execution, which occupy no pool
+    /// worker) — the observability layer's span lane.
+    pub worker: usize,
 }
 
 /// Position histogram used by Figure 3: per position, (edge count, cloud
@@ -143,6 +147,7 @@ mod tests {
             in_tokens: 100.0,
             hedged: false,
             cached: false,
+            worker: 0,
         }
     }
 

@@ -372,6 +372,7 @@ pub(crate) fn run_group(
                     in_tokens: hit.rec.in_tokens,
                     hedged: false,
                     cached: true,
+                    worker: 0,
                 });
                 dispatched.push(Dispatch { node, start, finish: finish_t, cancel: None });
                 continue;
@@ -546,6 +547,7 @@ pub(crate) fn run_group(
                 in_tokens: in_tok,
                 hedged: true,
                 cached: false,
+                worker: if cloud_wins { wc } else { we },
             });
             dispatched.push(Dispatch { node, start, finish: finish_t, cancel: Some(cancel) });
             continue;
@@ -558,16 +560,14 @@ pub(crate) fn run_group(
         st.correct[node] = rec.correct;
         st.api_total += rec.api_cost;
 
-        let (start, finish_t) = if let Some(clock) = chain_clock.as_deref_mut() {
+        let (worker, start, finish_t) = if let Some(clock) = chain_clock.as_deref_mut() {
             let s = *clock;
             *clock += rec.latency;
-            (s, *clock)
+            (0, s, *clock)
         } else if to_cloud {
-            let (_, s, f) = cloud.claim(now, rec.latency);
-            (s, f)
+            cloud.claim(now, rec.latency)
         } else {
-            let (_, s, f) = edge.claim(now, rec.latency);
-            (s, f)
+            edge.claim(now, rec.latency)
         };
 
         // --- Budget + bandit feedback -------------------------------------
@@ -626,6 +626,7 @@ pub(crate) fn run_group(
             in_tokens: rec.in_tokens,
             hedged: false,
             cached: false,
+            worker,
         });
         dispatched.push(Dispatch { node, start, finish: finish_t, cancel: None });
     }
@@ -717,6 +718,7 @@ pub fn execute_query_arc(
             query_local: true,
             global_k_cap: f64::INFINITY,
             cache_sessions: CacheSessions::EpochPerRun,
+            observe: None, // single-query mode is never observed
         },
         tenants: Vec::new(),
         jobs: vec![job],

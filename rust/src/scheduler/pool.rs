@@ -111,6 +111,14 @@ impl WorkerPool {
         (w, start, finish)
     }
 
+    /// Workers still busy at virtual time `t` (next-free strictly after
+    /// `t`), capped at the configured count so a zero-worker side's
+    /// phantom slot never reports occupancy. O(W) — called only on the
+    /// observability layer's metrics-snapshot path, never per dispatch.
+    pub fn busy_at(&self, t: f64) -> usize {
+        self.free.iter().filter(|&&f| f > t).count().min(self.configured)
+    }
+
     /// Move one worker's next-free time (cancellation release path: a
     /// hedged loser hands back the unconsumed tail of its reservation).
     pub fn set_free(&mut self, w: usize, t: f64) {
@@ -178,6 +186,21 @@ mod tests {
         assert_eq!(pool.free_at(2), 5.0);
         let (w, start, _) = pool.claim(6.0, 1.0);
         assert_eq!((w, start), (2, 6.0));
+    }
+
+    #[test]
+    fn busy_at_counts_strictly_later_free_times() {
+        let mut pool = WorkerPool::new(3);
+        assert_eq!(pool.busy_at(0.0), 0, "all idle at construction");
+        pool.claim(0.0, 10.0); // w0 busy till 10
+        pool.claim(0.0, 4.0); // w1 busy till 4
+        assert_eq!(pool.busy_at(2.0), 2);
+        assert_eq!(pool.busy_at(4.0), 1, "boundary: next-free == t is idle");
+        assert_eq!(pool.busy_at(10.0), 0);
+        // The phantom slot of a zero-worker side never reports occupancy.
+        let mut empty = WorkerPool::new(0);
+        empty.claim(0.0, 5.0);
+        assert_eq!(empty.busy_at(1.0), 0);
     }
 
     #[test]

@@ -6,70 +6,11 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Log-spaced latency histogram: buckets at 0.1ms * 2^k, k in 0..=N.
-pub struct Histogram {
-    buckets: Vec<AtomicU64>,
-    sum_micros: AtomicU64,
-    count: AtomicU64,
-}
-
-const HIST_BUCKETS: usize = 20; // 0.1ms .. ~52s
-
-impl Histogram {
-    pub fn new() -> Histogram {
-        Histogram {
-            buckets: (0..=HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            sum_micros: AtomicU64::new(0),
-            count: AtomicU64::new(0),
-        }
-    }
-
-    fn bucket_index(secs: f64) -> usize {
-        let ratio = (secs / 1e-4).max(1.0);
-        (ratio.log2().floor() as usize).min(HIST_BUCKETS)
-    }
-
-    pub fn record(&self, secs: f64) {
-        self.buckets[Self::bucket_index(secs)].fetch_add(1, Ordering::Relaxed);
-        self.sum_micros.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean_secs(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            return f64::NAN;
-        }
-        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
-    }
-
-    /// Approximate quantile from bucket boundaries (upper edge).
-    pub fn quantile(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return f64::NAN;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0u64;
-        for (k, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1e-4 * 2f64.powi(k as i32 + 1);
-            }
-        }
-        f64::INFINITY
-    }
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
+/// The shared log-spaced latency histogram (moved to [`crate::obs`] so the
+/// virtual-clock observability layer and this wall-clock telemetry record
+/// into identical buckets); re-exported here so existing
+/// `server::telemetry::Histogram` users keep compiling.
+pub use crate::obs::metrics::Histogram;
 
 /// Coordinator-wide telemetry.
 #[derive(Default)]

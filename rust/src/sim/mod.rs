@@ -49,6 +49,10 @@ use crate::budget::{GlobalBudget, TenantPool};
 use crate::cache::CacheStats;
 use crate::embed::FeatureContext;
 use crate::engine::Backend;
+use crate::obs::{
+    CriticalPathSummary, Histogram, MetricsSnapshot, ObsData, ObserveConfig, QueryPath, Span,
+    MAX_METRIC_SNAPSHOTS,
+};
 use crate::pipeline::HybridFlowPipeline;
 use crate::planner::synthetic::SyntheticPlanner;
 use crate::planner::Planner;
@@ -66,7 +70,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::{sample_latents, Query, SubtaskLatent};
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::sync::Arc;
 
 pub mod shard;
@@ -88,6 +92,11 @@ pub struct FleetConfig {
     /// `None` (or an index beyond the vector) falls back to the pipeline's
     /// default policy, so an empty vector reproduces a homogeneous fleet.
     pub tenant_policies: Vec<Option<RoutePolicy>>,
+    /// Structured observability (spans + metrics time series + critical
+    /// paths). `None` is fully off: the kernel takes the exact
+    /// uninstrumented code path (byte-identity pinned by the golden fleet
+    /// trace).
+    pub observe: Option<ObserveConfig>,
 }
 
 impl Default for FleetConfig {
@@ -97,6 +106,7 @@ impl Default for FleetConfig {
             global_k_cap: f64::INFINITY,
             record_trace: true,
             tenant_policies: Vec::new(),
+            observe: None,
         }
     }
 }
@@ -163,6 +173,14 @@ pub struct FleetReport {
     pub clock_monotone: bool,
     /// Human-readable event log (empty unless `record_trace`).
     pub trace: Vec<String>,
+    /// Structured observability artifacts (spans, metrics snapshots,
+    /// per-query critical paths) — `None` unless the run carried an
+    /// [`ObserveConfig`].
+    pub obs: Option<ObsData>,
+    /// Fleet-level critical-path aggregate, derived from `obs` paths
+    /// (`None` whenever `obs` is, so observe-off reports render and
+    /// serialize byte-identically to pre-observability ones).
+    pub critical_path: Option<CriticalPathSummary>,
 }
 
 impl FleetReport {
@@ -203,6 +221,7 @@ impl FleetReport {
         ));
         r.hedge(self.hedge_cancelled, self.hedge_refund);
         r.cache(self.cache.as_ref());
+        r.critical_path(self.critical_path.as_ref());
         r.finish()
     }
 
@@ -234,7 +253,7 @@ impl FleetReport {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut pairs = vec![
             ("n_queries", Json::Num(n as f64)),
             (
                 "accuracy_pct",
@@ -255,7 +274,13 @@ impl FleetReport {
             ("clock_monotone", Json::Bool(self.clock_monotone)),
             ("cache", self.cache.as_ref().map_or(Json::Null, cache_stats_json)),
             ("tenants", Json::Arr(tenants)),
-        ])
+        ];
+        // Emitted only when observability ran, so observe-off JSON stays
+        // byte-identical to the pre-observability report.
+        if let Some(cp) = &self.critical_path {
+            pairs.push(("critical_path", cp.to_json()));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -359,6 +384,8 @@ pub(crate) struct KernelSpec<'a> {
     pub query_local: bool,
     pub global_k_cap: f64,
     pub cache_sessions: CacheSessions,
+    /// Observability recorders; `None` takes the uninstrumented path.
+    pub observe: Option<ObserveConfig>,
 }
 
 /// Everything a kernel run produces: the report plus each job's final
@@ -433,6 +460,156 @@ pub(crate) struct RunStats {
     pub(crate) clock_monotone: bool,
 }
 
+/// Per-run observability state, allocated only when the kernel spec
+/// carries an [`ObserveConfig`]. Every touch point in the event loop sits
+/// behind `if let Some`, so the observe-off kernel executes the exact
+/// pre-observability instructions (byte-identity pinned by the golden
+/// fleet trace). Pure read-side recording: nothing here feeds back into
+/// routing, RNG draws, or event ordering.
+struct ObsState {
+    cfg: ObserveConfig,
+    spans: Vec<Span>,
+    /// Open hedge-loser spans awaiting their `Cancel` event:
+    /// `(query, node)` -> index into `spans`.
+    open: BTreeMap<(usize, usize), usize>,
+    snapshots: Vec<MetricsSnapshot>,
+    /// Next snapshot index; sample time is `next_snap * metrics_interval`
+    /// (multiplied, not accumulated, so long series don't drift).
+    next_snap: u64,
+    /// Live count of ready-queue entries across all in-flight queries.
+    ready_depth: usize,
+    /// Completed-query sojourns feeding the snapshot latency columns —
+    /// the shared [`Histogram`] the serving telemetry also uses.
+    sojourn: Histogram,
+    paths: Vec<QueryPath>,
+}
+
+impl ObsState {
+    fn new(cfg: ObserveConfig) -> ObsState {
+        ObsState {
+            cfg,
+            spans: Vec::new(),
+            open: BTreeMap::new(),
+            snapshots: Vec::new(),
+            next_snap: 0,
+            ready_depth: 0,
+            sojourn: Histogram::new(),
+            paths: Vec::new(),
+        }
+    }
+
+    /// Virtual time of the next due metrics snapshot, or `None` when the
+    /// metrics recorder is off or the per-shard cap is exhausted.
+    fn snapshot_due(&self) -> Option<f64> {
+        if !self.cfg.metrics || self.snapshots.len() >= MAX_METRIC_SNAPSHOTS {
+            return None;
+        }
+        Some(self.next_snap as f64 * self.cfg.metrics_interval)
+    }
+}
+
+/// Record one metrics-snapshot row at virtual time `t` (gauges read the
+/// kernel state *before* any event at `t` is processed).
+#[allow(clippy::too_many_arguments)]
+fn obs_snapshot(
+    o: &mut ObsState,
+    t: f64,
+    admission_backlog: usize,
+    edge: &WorkerPool,
+    cloud: &WorkerPool,
+    tenants: &[TenantPool],
+    global_spent: f64,
+    cache_lookups: u64,
+    cache_hits: u64,
+) {
+    let completed = o.sojourn.count();
+    let (latency_mean, latency_p50, latency_p99) = if completed == 0 {
+        (0.0, 0.0, 0.0)
+    } else {
+        (o.sojourn.mean_secs(), o.sojourn.quantile(0.5), o.sojourn.quantile(0.99))
+    };
+    o.snapshots.push(MetricsSnapshot {
+        t,
+        shard: 0,
+        ready_depth: o.ready_depth,
+        admission_backlog,
+        edge_busy: edge.busy_at(t),
+        cloud_busy: cloud.busy_at(t),
+        global_spent,
+        tenant_spent: tenants.iter().map(|tp| tp.state.k_used).collect(),
+        cache_lookups,
+        cache_hits,
+        completed,
+        latency_mean,
+        latency_p50,
+        latency_p99,
+    });
+    o.next_snap += 1;
+}
+
+/// Recover one completed query's realized critical path: walk back from
+/// the last-finishing node through the latest-finishing parent at each
+/// step (first maximum on ties — deterministic). `slacks[i]` is the gap
+/// between the node becoming runnable (latest parent finish, or the plan
+/// instant for the entry node) and its worker start. `None` for
+/// degenerate zero-node plans.
+fn critical_path_of(
+    qi: usize,
+    plan_done: f64,
+    ps: &PlanState,
+    makespan_abs: f64,
+) -> Option<QueryPath> {
+    let n = ps.dag.len();
+    if n == 0 || ps.st.events.len() < n {
+        return None;
+    }
+    let mut start = vec![0.0f64; n];
+    let mut finish = vec![0.0f64; n];
+    for e in &ps.st.events {
+        start[e.node] = e.start;
+        finish[e.node] = e.finish;
+    }
+    // Parent adjacency by inverting the children CSR.
+    let mut parents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for p in 0..n {
+        for &c in ps.children.children_of(p) {
+            parents[c as usize].push(p);
+        }
+    }
+    let mut exit = 0;
+    for i in 1..n {
+        if finish[i] > finish[exit] {
+            exit = i;
+        }
+    }
+    let mut rev = vec![exit];
+    let mut cur = exit;
+    while let Some(&first) = parents[cur].first() {
+        let mut best = first;
+        for &p in &parents[cur][1..] {
+            if finish[p] > finish[best] {
+                best = p;
+            }
+        }
+        rev.push(best);
+        cur = best;
+    }
+    rev.reverse();
+    let nodes = rev;
+    let mut slacks = Vec::with_capacity(nodes.len());
+    let mut path_latency = 0.0;
+    for (k, &i) in nodes.iter().enumerate() {
+        let ready_at = if k == 0 {
+            plan_done
+        } else {
+            parents[i].iter().map(|&p| finish[p]).fold(plan_done, f64::max)
+        };
+        slacks.push(start[i] - ready_at);
+        path_latency += finish[i] - start[i];
+    }
+    Some(QueryPath { q: qi, nodes, slacks, path_latency, makespan: makespan_abs - plan_done })
+}
+
 #[allow(clippy::too_many_arguments)]
 fn admit_query(
     qi: usize,
@@ -496,6 +673,7 @@ fn admit_query(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn finalize_query(
     qi: usize,
     q: &mut QueryRun,
@@ -504,6 +682,7 @@ fn finalize_query(
     stats: &mut RunStats,
     trace: &mut Vec<String>,
     record_trace: bool,
+    obs: Option<&mut ObsState>,
 ) {
     let makespan_abs = {
         let ps = q.plan.as_mut().expect("finalize before planning");
@@ -519,6 +698,17 @@ fn finalize_query(
         }
         makespan_abs
     };
+    if let Some(o) = obs {
+        if o.cfg.spans {
+            let ps = q.plan.as_ref().expect("plan state");
+            if let Some(path) = critical_path_of(qi, q.plan_done, ps, makespan_abs) {
+                o.paths.push(path);
+            }
+        }
+        if o.cfg.metrics {
+            o.sojourn.record(makespan_abs - q.arrival);
+        }
+    }
     let final_correct = {
         let ps = q.plan.as_ref().expect("plan state");
         executor.final_answer_correct(&ps.latents, &ps.st.correct, &mut q.rng)
@@ -626,6 +816,9 @@ impl<'a> Kernel<'a> {
         let mut active = 0usize;
         let mut dispatched: Vec<Dispatch> = Vec::new();
         let mut last_time = f64::NEG_INFINITY;
+        // Observability state: `None` keeps every obs touch point below a
+        // dead branch, so the observe-off loop is the uninstrumented loop.
+        let mut obs: Option<ObsState> = spec.observe.clone().map(ObsState::new);
 
         while let Some(ev) = heap.pop() {
             if ev.key.time < last_time - 1e-9 {
@@ -637,6 +830,31 @@ impl<'a> Kernel<'a> {
                 );
             }
             last_time = last_time.max(ev.key.time);
+
+            // Emit every metrics snapshot due at or before this event's
+            // instant, reading the state *before* the event applies.
+            if let Some(o) = obs.as_mut() {
+                while let Some(t) = o.snapshot_due() {
+                    if t > ev.key.time {
+                        break;
+                    }
+                    let (lookups, hits) = cache.map_or((0, 0), |c| {
+                        let s = c.stats();
+                        (s.lookups, s.hits)
+                    });
+                    obs_snapshot(
+                        o,
+                        t,
+                        waitq.len(),
+                        &edge,
+                        &cloud,
+                        &tenants,
+                        global.k_spent,
+                        lookups,
+                        hits,
+                    );
+                }
+            }
 
             match ev.kind {
                 EvKind::Arrival => {
@@ -750,6 +968,32 @@ impl<'a> Kernel<'a> {
                                         ));
                                     }
                                 }
+                                if let Some(o) = obs.as_mut() {
+                                    if o.cfg.spans {
+                                        let tail = ps.st.events.len() - dispatched.len();
+                                        for (k, d) in dispatched.iter().enumerate() {
+                                            let e = &ps.st.events[tail + k];
+                                            o.spans.push(Span {
+                                                q: qi,
+                                                node: d.node,
+                                                shard: 0,
+                                                tenant: ti,
+                                                cloud: e.cloud,
+                                                worker: e.worker,
+                                                planned: q.plan_done,
+                                                queued: now,
+                                                dispatched: d.start,
+                                                finished: d.finish,
+                                                tokens: e.in_tokens,
+                                                dollars: e.api_cost,
+                                                hedged: e.hedged,
+                                                cancelled: false,
+                                                cached: e.cached,
+                                                refund: 0.0,
+                                            });
+                                        }
+                                    }
+                                }
                             }
                             for d in ps.done.iter_mut() {
                                 *d = true;
@@ -773,6 +1017,9 @@ impl<'a> Kernel<'a> {
                             for i in 0..n {
                                 if ps.indeg[i] == 0 {
                                     ps.ready.push(EventKey::ready(q.plan_done, i));
+                                    if let Some(o) = obs.as_mut() {
+                                        o.ready_depth += 1;
+                                    }
                                     heap.push(Ev {
                                         key: EventKey {
                                             time: q.plan_done,
@@ -812,6 +1059,7 @@ impl<'a> Kernel<'a> {
                         &mut stats,
                         &mut trace,
                         record_trace,
+                        obs.as_mut(),
                     );
                     if let Some(next) = waitq.pop_front() {
                         admit_query(
@@ -863,6 +1111,12 @@ impl<'a> Kernel<'a> {
                                 ev.key.time.clamp(ticket.start, ticket.reserved_until);
                             stats.hedge_loser_busy[usize::from(ticket.cloud)] +=
                                 release - ticket.start;
+                            if let Some(o) = obs.as_mut() {
+                                if let Some(idx) = o.open.remove(&(qi, ev.key.node)) {
+                                    o.spans[idx].finished = release;
+                                    o.spans[idx].refund = ticket.refund_k;
+                                }
+                            }
                             if record_trace {
                                 trace.push(format!(
                                     "t={:.6} tenant={} q={} cancel node={} side={} refund={:.6}",
@@ -905,6 +1159,9 @@ impl<'a> Kernel<'a> {
                                 break;
                             }
                         }
+                    }
+                    if let Some(o) = obs.as_mut() {
+                        o.ready_depth -= group.len();
                     }
                     let now = f0.time;
                     let gctx = GroupCtx {
@@ -987,6 +1244,58 @@ impl<'a> Kernel<'a> {
                             ));
                         }
                     }
+                    if let Some(o) = obs.as_mut() {
+                        if o.cfg.spans {
+                            let tail = ps.st.events.len() - dispatched.len();
+                            for (k, d) in dispatched.iter().enumerate() {
+                                let e = &ps.st.events[tail + k];
+                                o.spans.push(Span {
+                                    q: qi,
+                                    node: d.node,
+                                    shard: 0,
+                                    tenant: ti,
+                                    cloud: e.cloud,
+                                    worker: e.worker,
+                                    planned: q.plan_done,
+                                    queued: now,
+                                    dispatched: d.start,
+                                    finished: d.finish,
+                                    tokens: e.in_tokens,
+                                    dollars: e.api_cost,
+                                    hedged: e.hedged,
+                                    cancelled: false,
+                                    cached: e.cached,
+                                    refund: 0.0,
+                                });
+                                if let Some(ticket) = &d.cancel {
+                                    // Losing replica of a hedged dispatch:
+                                    // opened now, closed (finish + refund)
+                                    // by its `Cancel` event. Its payload is
+                                    // accounted on the winner span.
+                                    let idx = o.spans.len();
+                                    o.spans.push(Span {
+                                        q: qi,
+                                        node: d.node,
+                                        shard: 0,
+                                        tenant: ti,
+                                        cloud: ticket.cloud,
+                                        worker: ticket.worker,
+                                        planned: q.plan_done,
+                                        queued: now,
+                                        dispatched: ticket.start,
+                                        finished: ticket.reserved_until,
+                                        tokens: 0.0,
+                                        dollars: 0.0,
+                                        hedged: true,
+                                        cancelled: true,
+                                        cached: false,
+                                        refund: 0.0,
+                                    });
+                                    o.open.insert((qi, d.node), idx);
+                                }
+                            }
+                        }
+                    }
                 }
 
                 EvKind::Done => {
@@ -1004,6 +1313,9 @@ impl<'a> Kernel<'a> {
                                 ps.indeg[c] -= 1;
                                 if ps.indeg[c] == 0 {
                                     ps.ready.push(EventKey::ready(ev.key.time, c));
+                                    if let Some(o) = obs.as_mut() {
+                                        o.ready_depth += 1;
+                                    }
                                     heap.push(Ev {
                                         key: EventKey {
                                             time: ev.key.time,
@@ -1037,6 +1349,7 @@ impl<'a> Kernel<'a> {
                             &mut stats,
                             &mut trace,
                             record_trace,
+                            obs.as_mut(),
                         );
                         if let Some(next) = waitq.pop_front() {
                             admit_query(
@@ -1084,6 +1397,30 @@ impl<'a> Kernel<'a> {
             .collect();
 
         let horizon = results.iter().map(|r| r.completed_at).fold(0.0f64, f64::max);
+        // Trailing metrics snapshots: the heap drained before the series
+        // reached the horizon (the last completions land between samples).
+        if let Some(o) = obs.as_mut() {
+            while let Some(t) = o.snapshot_due() {
+                if t > horizon {
+                    break;
+                }
+                let (lookups, hits) = cache.map_or((0, 0), |c| {
+                    let s = c.stats();
+                    (s.lookups, s.hits)
+                });
+                obs_snapshot(
+                    o,
+                    t,
+                    waitq.len(),
+                    &edge,
+                    &cloud,
+                    &tenants,
+                    global.k_spent,
+                    lookups,
+                    hits,
+                );
+            }
+        }
         let n_decided: usize = if spec.query_local {
             results.iter().map(|r| r.exec.budget.n_decided).sum()
         } else {
@@ -1116,6 +1453,26 @@ impl<'a> Kernel<'a> {
             }
         }
         let span = horizon.max(1e-9);
+        // Package the observability artifacts. Paths are sorted by query
+        // index so the summary's floating-point sums are byte-stable no
+        // matter the completion (or shard) order that produced them.
+        let (obs_data, critical_path) = match obs {
+            Some(mut o) => {
+                o.paths.sort_by_key(|p| p.q);
+                let cp = CriticalPathSummary::from_paths(&o.paths);
+                let unclosed_spans = o.open.len();
+                (
+                    Some(ObsData {
+                        spans: o.spans,
+                        snapshots: o.snapshots,
+                        paths: o.paths,
+                        unclosed_spans,
+                    }),
+                    cp,
+                )
+            }
+            None => (None, None),
+        };
         let report = FleetReport {
             admission_delay: Summary::of_or_zero(&stats.admission_delays),
             queue_wait: Summary::of_or_zero(&stats.queue_waits),
@@ -1156,6 +1513,8 @@ impl<'a> Kernel<'a> {
             tenants,
             global,
             trace,
+            obs: obs_data,
+            critical_path,
         };
         KernelRun { report, routers, rngs, stats }
     }
@@ -1246,6 +1605,7 @@ pub(crate) fn run_fleet_jobs(
             query_local: false,
             global_k_cap: cfg.global_k_cap,
             cache_sessions: CacheSessions::ResetCold,
+            observe: cfg.observe.clone(),
         },
         tenants,
         jobs,

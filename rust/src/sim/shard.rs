@@ -37,6 +37,7 @@
 
 use crate::budget::{GlobalBudget, TenantPool};
 use crate::cache::CacheStats;
+use crate::obs::{CriticalPathSummary, ObsData};
 use crate::pipeline::HybridFlowPipeline;
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Summary;
@@ -105,6 +106,7 @@ where
         global_k_cap: split_cap(cfg.global_k_cap, shards),
         record_trace: cfg.record_trace,
         tenant_policies: cfg.tenant_policies.clone(),
+        observe: cfg.observe.clone(),
     };
     let shard_tenants: Vec<TenantPool> =
         tenants.iter().map(|t| TenantPool::new(&t.name, split_cap(t.k_cap, shards))).collect();
@@ -215,13 +217,46 @@ fn merge_shard_runs(
         Vec::new()
     };
 
-    // Scatter per-query results back to fleet-global job order.
+    // Scatter per-query results back to fleet-global job order, folding
+    // each shard's observability artifacts in as it is consumed: spans
+    // concatenate in shard order with shard-local query indices rewritten
+    // to global job indices and the shard id stamped (one trace `pid` per
+    // shard); snapshots and paths are canonicalized below. At `shards = 1`
+    // every rewrite is the identity, reproducing the unsharded artifacts
+    // byte for byte.
     let mut slots: Vec<Option<super::FleetQueryResult>> = (0..n_total).map(|_| None).collect();
-    for (s, (report, _)) in outcomes.into_iter().enumerate() {
+    let mut obs: Option<ObsData> = None;
+    for (s, (mut report, _)) in outcomes.into_iter().enumerate() {
+        if let Some(mut o) = report.obs.take() {
+            let acc = obs.get_or_insert_with(ObsData::default);
+            for sp in &mut o.spans {
+                sp.q = globals[s][sp.q];
+                sp.shard = s;
+            }
+            for snap in &mut o.snapshots {
+                snap.shard = s;
+            }
+            for p in &mut o.paths {
+                p.q = globals[s][p.q];
+            }
+            acc.spans.append(&mut o.spans);
+            acc.snapshots.append(&mut o.snapshots);
+            acc.paths.append(&mut o.paths);
+            acc.unclosed_spans += o.unclosed_spans;
+        }
         for (j, r) in report.results.into_iter().enumerate() {
             slots[globals[s][j]] = Some(r);
         }
     }
+    // Canonical artifact order: snapshots by (time, shard), paths by
+    // global query index — the same order the unsharded kernel emits, so
+    // downstream aggregation (and the critical-path summary's f64 sums)
+    // is shard-layout invariant.
+    let critical_path = obs.as_mut().and_then(|o| {
+        o.snapshots.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.shard.cmp(&b.shard)));
+        o.paths.sort_by_key(|p| p.q);
+        CriticalPathSummary::from_paths(&o.paths)
+    });
     let results: Vec<super::FleetQueryResult> = slots
         .into_iter()
         .enumerate()
@@ -276,6 +311,8 @@ fn merge_shard_runs(
         tenants: merged_tenants,
         global,
         trace,
+        obs,
+        critical_path,
     }
 }
 

@@ -18,10 +18,17 @@
 //!   outcomes, and every reported number is finite;
 //! * re-running the identical session is byte-identical (trace and
 //!   report JSON);
-//! * sharded determinism: at forced shard counts 1 and 4 the report and
-//!   trace bytes are independent of the worker-thread count, and
-//!   `shards = 1` through the sharded merge path is byte-identical to
-//!   the unsharded kernel;
+//! * sharded determinism: at forced shard counts 1 and 4 the report,
+//!   trace, and observability-artifact bytes are independent of the
+//!   worker-thread count, and `shards = 1` through the sharded merge
+//!   path is byte-identical to the unsharded kernel;
+//! * observability is read-only: an observe-off twin of every observed
+//!   spec reproduces the trace and report byte-for-byte, every opened
+//!   span closes exactly once with
+//!   `planned <= queued <= dispatched <= finished`, worker lanes never
+//!   run overlapping spans (outside chain mode), and the metrics series
+//!   is monotone in virtual time and bounded by the per-shard snapshot
+//!   cap;
 //! * `parse(render(spec)) == spec` and `render` is a fixpoint.
 //!
 //! When a case fails, [`minimize`] greedily shrinks the offending spec
@@ -39,12 +46,14 @@
 //! `hybridflow fuzz --cases 1 --seed <S+i>`.
 
 use crate::cache::CachePolicyKind;
+use crate::obs::{ObserveConfig, MAX_METRIC_SNAPSHOTS};
 use crate::router::MirrorPredictor;
 use crate::scenario::{
     CacheSpec, EngineSpec, PolicySpec, Report, ScenarioSpec, Session, TenantSpec, TopologySpec,
     WorkloadSpec,
 };
 use crate::testing::Gen;
+use crate::util::json::Json;
 use crate::workload::trace::{ArrivalProcess, ZipfMix};
 use crate::workload::Benchmark;
 use std::sync::Arc;
@@ -138,6 +147,18 @@ fn random_spec(g: &mut Gen) -> ScenarioSpec {
                     shared_tier: g.bool(),
                 }),
             },
+            // Observability is fuzzed from day one: half the specs record
+            // spans and/or metrics; the other half stay fully off (and
+            // every observed case gets an observe-off twin in `run_case`).
+            observe: if g.bool() {
+                Some(ObserveConfig {
+                    spans: g.bool(),
+                    metrics: g.bool(),
+                    metrics_interval: g.f64_in(0.1..10.0),
+                })
+            } else {
+                None
+            },
         },
     }
 }
@@ -148,7 +169,7 @@ fn random_spec(g: &mut Gen) -> ScenarioSpec {
 /// covered by the `reject_*` corpus and unit tests).
 fn adversarialize(g: &mut Gen, spec: &mut ScenarioSpec) {
     for _ in 0..g.usize_in(1..4) {
-        match g.usize_in(0..13) {
+        match g.usize_in(0..15) {
             0 => spec.topology.edge_workers = *pick(g, &[0usize, 1, 1024]),
             1 => spec.topology.cloud_workers = *pick(g, &[0usize, 1, 1024]),
             2 => spec.topology.admission_limit = g.usize_in(0..2),
@@ -190,7 +211,19 @@ fn adversarialize(g: &mut Gen, spec: &mut ScenarioSpec) {
             // More shards than queries (or workers) is a legal topology:
             // some shards simply receive no arrivals.
             11 => spec.topology.shards = *pick(g, &[1usize, 2, 4, 8]),
-            _ => spec.engine.chain_mode = true,
+            12 => spec.engine.chain_mode = true,
+            13 => {
+                // Observability at an extreme cadence: a tiny interval
+                // floods the snapshot series (bounded per shard by
+                // MAX_METRIC_SNAPSHOTS), a huge one collapses it to the
+                // t = 0 row.
+                spec.engine.observe = Some(ObserveConfig {
+                    spans: true,
+                    metrics: true,
+                    metrics_interval: *pick(g, &[1e-4, 1e6]),
+                });
+            }
+            _ => spec.engine.observe = None,
         }
     }
 }
@@ -252,10 +285,124 @@ pub fn run_case(spec: &ScenarioSpec) -> Vec<String> {
             if a.to_json().to_string_pretty() != b.to_json().to_string_pretty() {
                 v.push("rerun report JSON is not byte-identical".into());
             }
+            if a.obs != b.obs {
+                v.push("rerun observability artifacts are not identical".into());
+            }
+            check_obs(spec, &a, &mut v);
             check_sharding_identities(spec, &session, &a, &mut v);
         }
     }
     v
+}
+
+/// The observability invariant set. Observability must be *read-only*:
+/// stripping the `observe` block from a spec reproduces the instrumented
+/// run's kernel decisions byte-for-byte, and the recorded artifacts must
+/// be internally consistent (spans closed and time-ordered, worker lanes
+/// exclusive, snapshot series monotone and bounded).
+fn check_obs(spec: &ScenarioSpec, r: &Report, v: &mut Vec<String>) {
+    let Some(cfg) = &spec.engine.observe else {
+        if r.obs.is_some() || r.critical_path.is_some() {
+            v.push("observe-off report carries observability artifacts".into());
+        }
+        return;
+    };
+
+    // -- observe-off twin: identical kernel decisions -------------------
+    let mut off_spec = spec.clone();
+    off_spec.engine.observe = None;
+    match off_spec.build(Arc::new(MirrorPredictor::synthetic_for_tests())) {
+        Err(e) => v.push(format!("observe-off twin failed to build: {e}")),
+        Ok(twin) => {
+            let off = twin.run();
+            if off.trace_text() != r.trace_text() {
+                v.push("enabling observability changed the event trace".into());
+            }
+            // The instrumented report may carry the extra `critical_path`
+            // key; everything else must match the twin byte-for-byte.
+            let mut on_json = r.to_json();
+            if let Json::Obj(o) = &mut on_json {
+                o.remove("critical_path");
+            }
+            if off.to_json().to_string_pretty() != on_json.to_string_pretty() {
+                v.push("enabling observability changed the report JSON".into());
+            }
+        }
+    }
+
+    let Some(obs) = &r.obs else {
+        v.push("observe-on report carries no artifacts".into());
+        return;
+    };
+
+    // -- span lifecycle -------------------------------------------------
+    if obs.unclosed_spans != 0 {
+        v.push(format!("{} span(s) opened but never closed", obs.unclosed_spans));
+    }
+    if !cfg.spans && !obs.spans.is_empty() {
+        v.push("spans recorded with the span recorder off".into());
+    }
+    for sp in &obs.spans {
+        if !(sp.planned <= sp.queued && sp.queued <= sp.dispatched && sp.dispatched <= sp.finished)
+        {
+            v.push(format!(
+                "span (q={}, node={}) violates planned <= queued <= dispatched <= finished: \
+                 [{}, {}, {}, {}]",
+                sp.q, sp.node, sp.planned, sp.queued, sp.dispatched, sp.finished
+            ));
+        }
+        if sp.q >= spec.workload.n {
+            v.push(format!("span names query {} in an n={} workload", sp.q, spec.workload.n));
+        }
+    }
+    // Worker lanes are exclusive: a worker serves (or holds a hedge
+    // reservation for) one job at a time. Chain-mode queries bypass the
+    // pools (no worker assignment), and cache hits occupy no worker, so
+    // both stay out of the overlap sweep.
+    if !spec.engine.chain_mode {
+        let mut lanes: std::collections::BTreeMap<(usize, usize), Vec<(f64, f64)>> =
+            std::collections::BTreeMap::new();
+        for sp in &obs.spans {
+            if !sp.cached {
+                lanes.entry((sp.shard, sp.lane())).or_default().push((sp.dispatched, sp.finished));
+            }
+        }
+        for ((shard, lane), iv) in &lanes {
+            if max_overlap(iv) > 1 {
+                v.push(format!("shard {shard} lane {lane} runs overlapping spans"));
+            }
+        }
+    }
+
+    // -- metrics series -------------------------------------------------
+    if !cfg.metrics && !obs.snapshots.is_empty() {
+        v.push("metrics snapshots recorded with the metrics recorder off".into());
+    }
+    if cfg.metrics && obs.snapshots.is_empty() {
+        v.push("metrics on but the snapshot series is empty".into());
+    }
+    let shards = spec.topology.shards.max(1);
+    if obs.snapshots.len() > MAX_METRIC_SNAPSHOTS * shards {
+        v.push(format!(
+            "{} snapshots exceed the {MAX_METRIC_SNAPSHOTS}-per-shard cap",
+            obs.snapshots.len()
+        ));
+    }
+    for w in obs.snapshots.windows(2) {
+        if w[1].t < w[0].t {
+            v.push(format!("snapshot times regress: {} after {}", w[1].t, w[0].t));
+            break;
+        }
+    }
+    for s in &obs.snapshots {
+        for (label, x) in [
+            ("snapshot.t", s.t),
+            ("snapshot.global_spent", s.global_spent),
+            ("snapshot.latency_mean", s.latency_mean),
+        ] {
+            check_finite(label, x, v);
+        }
+    }
 }
 
 /// The sharding determinism contract, checked on every fuzzed spec:
@@ -286,6 +433,20 @@ fn check_sharding_identities(
                     "shards={shards}: report JSON differs between 1 and 4 worker threads"
                 ));
             }
+            // The exported artifacts must be byte-identical across
+            // thread counts too (the report JSON does not embed them).
+            let trace_of = |r: &Report| r.obs.as_ref().map(|o| o.chrome_trace_text());
+            let metrics_of = |r: &Report| r.obs.as_ref().map(|o| o.metrics_jsonl());
+            if trace_of(&serial) != trace_of(&threaded) {
+                sv.push(format!(
+                    "shards={shards}: trace artifact differs between 1 and 4 worker threads"
+                ));
+            }
+            if metrics_of(&serial) != metrics_of(&threaded) {
+                sv.push(format!(
+                    "shards={shards}: metrics artifact differs between 1 and 4 worker threads"
+                ));
+            }
             if shards == 1 {
                 let arrivals = spec.workload.arrivals(session.tenants.len(), spec.seed);
                 let plain = crate::sim::run_fleet(
@@ -301,6 +462,11 @@ fn check_sharding_identities(
                 if serial.to_json().to_string_pretty() != plain.to_json().to_string_pretty() {
                     sv.push(
                         "shards=1 report JSON is not byte-identical to the unsharded kernel".into(),
+                    );
+                }
+                if serial.obs != plain.obs {
+                    sv.push(
+                        "shards=1 observability artifacts differ from the unsharded kernel".into(),
                     );
                 }
                 if spec.topology.shards == 1
@@ -609,6 +775,7 @@ fn shrink_steps(cur: &ScenarioSpec) -> Vec<ScenarioSpec> {
         step(&|s| s.engine.batch_frontier = EngineSpec::default().batch_frontier);
         step(&|s| s.engine.policy = PolicySpec::HybridFlow);
         step(&|s| s.engine.n_max = EngineSpec::default().n_max);
+        step(&|s| s.engine.observe = None);
         // Per-tenant fields: clear each tenant's cap / policy override
         // individually so a failure that needs one capped tenant keeps
         // exactly that one.
@@ -728,6 +895,7 @@ mod tests {
         let mut spec = spec_for_case(9, 3, true);
         spec.engine.hedge = true;
         spec.topology.shards = 4;
+        spec.engine.observe = Some(ObserveConfig::default());
         let min = minimize(&spec, |s| s.engine.hedge);
         assert!(min.engine.hedge, "the preserved failure survives");
         assert!(min.validate().is_ok(), "minimized spec stays valid");
@@ -737,6 +905,7 @@ mod tests {
         assert_eq!(min.workload.arrival, ArrivalProcess::Periodic { gap: 1.0 });
         assert!(min.workload.zipf.is_none());
         assert!(min.engine.cache.is_none());
+        assert!(min.engine.observe.is_none(), "observability resets to off");
         assert!(min.topology.tenants[0].k_cap.is_none());
         assert!(min.topology.tenants[0].policy.is_none());
         assert_eq!(min.seed, 0);

@@ -1,0 +1,230 @@
+//! Observability integration suite:
+//!
+//! * **golden artifacts** — the instrumented `fleet_sim` preset exports
+//!   byte-stable span (Chrome trace-event JSON) and metrics (JSONL)
+//!   artifacts, pinned per shard count by checked-in golden files and
+//!   required to be byte-identical across reruns and worker-thread
+//!   counts (pid is the shard id, so the shard-1 and shard-4 artifacts
+//!   legitimately differ from each other — each is pinned separately);
+//! * **format validity** — the trace parses with `util::json`, carries
+//!   `thread_name` metadata before time-sorted `ph: "X"` complete events
+//!   with integral `ts`/`dur`/`pid`/`tid`, and pretty-printing the parse
+//!   is a byte fixpoint; every metrics line is a standalone JSON row
+//!   with the full column set and non-decreasing `t`;
+//! * **read-only contract** — turning observability off reproduces the
+//!   default preset's trace and report byte-for-byte (only the
+//!   instrumented run carries the `critical_path` section);
+//! * **critical-path arithmetic** — per-query busy time plus slack
+//!   reconstructs the makespan, and the report summary equals its
+//!   recomputation from the path set.
+
+use hybridflow::obs::{ObserveConfig, CACHE_LANE, CLOUD_LANE_BASE};
+use hybridflow::router::MirrorPredictor;
+use hybridflow::scenario::presets::{self, FleetSimKnobs};
+use hybridflow::scenario::{ScenarioSpec, Session};
+use hybridflow::util::json::Json;
+use hybridflow::workload::Benchmark;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn observed_spec(shards: usize) -> ScenarioSpec {
+    let knobs = FleetSimKnobs {
+        observe: Some(ObserveConfig { spans: true, metrics: true, metrics_interval: 1.0 }),
+        ..Default::default()
+    };
+    let mut spec = presets::fleet_sim(Benchmark::Gpqa, 24, 0.8, 11, &knobs);
+    spec.topology.shards = shards;
+    spec
+}
+
+fn session(shards: usize) -> Session {
+    observed_spec(shards).build(Arc::new(MirrorPredictor::synthetic_for_tests())).unwrap()
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden").join(name)
+}
+
+/// Compare against the pinned golden file, bootstrapping it on first run
+/// (the `rust/tests/golden/fleet_trace.txt` convention). Regenerate after
+/// an intentional engine change by deleting the file and rerunning.
+fn pin(name: &str, bytes: &str) {
+    let path = golden_path(name);
+    if path.exists() {
+        let pinned = std::fs::read_to_string(&path).expect("read golden file");
+        assert_eq!(
+            bytes,
+            pinned,
+            "{} diverged — if the change is intentional, delete the file and rerun this test \
+             to regenerate",
+            path.display()
+        );
+    } else {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).expect("create golden dir");
+        }
+        std::fs::write(&path, bytes).expect("write golden file");
+        eprintln!("[obs golden] bootstrapped {}", path.display());
+    }
+}
+
+#[test]
+fn golden_artifacts_pinned_across_shards_and_threads() {
+    for shards in [1usize, 4] {
+        let s = session(shards);
+        let base = s.run_with_threads(1);
+        let obs = base.obs.as_ref().expect("observe on");
+        assert_eq!(obs.unclosed_spans, 0, "every opened span closed");
+        assert!(obs.spans.len() >= 24, "each query contributes at least one span");
+        let trace = obs.chrome_trace_text();
+        let metrics = obs.metrics_jsonl();
+        for threads in [1usize, 4] {
+            let r = s.run_with_threads(threads);
+            let o = r.obs.as_ref().expect("observe on");
+            assert_eq!(
+                o.chrome_trace_text(),
+                trace,
+                "shards={shards} threads={threads}: trace artifact bytes"
+            );
+            assert_eq!(
+                o.metrics_jsonl(),
+                metrics,
+                "shards={shards} threads={threads}: metrics artifact bytes"
+            );
+        }
+        pin(&format!("obs_fleet_trace_s{shards}.json"), &trace);
+        pin(&format!("obs_fleet_metrics_s{shards}.jsonl"), &metrics);
+    }
+}
+
+#[test]
+fn chrome_trace_is_valid_trace_event_json() {
+    let report = session(4).run_with_threads(2);
+    let text = report.obs.as_ref().unwrap().chrome_trace_text();
+    let j = Json::parse(&text).expect("trace-event document parses");
+    // Canonical JSON: parse → pretty-print is a byte fixpoint.
+    let mut rendered = j.to_string_pretty();
+    rendered.push('\n');
+    assert_eq!(rendered, text, "exported trace is canonical JSON");
+    assert_eq!(j.get("displayTimeUnit"), Some(&Json::Str("ms".into())));
+    let events = match j.get("traceEvents") {
+        Some(Json::Arr(events)) => events,
+        other => panic!("traceEvents must be an array, got {other:?}"),
+    };
+    let mut seen_x = false;
+    let mut last_ts = f64::NEG_INFINITY;
+    for e in events {
+        match e.get("ph") {
+            Some(Json::Str(ph)) if ph == "M" => {
+                assert!(!seen_x, "thread_name metadata precedes complete events");
+                assert_eq!(e.get("name"), Some(&Json::Str("thread_name".into())));
+                let label = match e.path(&["args", "name"]) {
+                    Some(Json::Str(s)) => s.clone(),
+                    other => panic!("lane label: {other:?}"),
+                };
+                assert!(
+                    label == "cache"
+                        || label.starts_with("edge-")
+                        || label.starts_with("cloud-"),
+                    "lane label {label}"
+                );
+            }
+            Some(Json::Str(ph)) if ph == "X" => {
+                seen_x = true;
+                for key in ["ts", "dur", "pid", "tid"] {
+                    match e.get(key) {
+                        Some(Json::Num(x)) => assert!(
+                            x.is_finite() && *x >= 0.0 && x.fract() == 0.0,
+                            "{key} must be a non-negative integer, got {x}"
+                        ),
+                        other => panic!("complete event lacks numeric {key}: {other:?}"),
+                    }
+                }
+                let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+                assert!(ts >= last_ts, "complete events sorted by dispatch time");
+                last_ts = ts;
+                let pid = e.get("pid").and_then(Json::as_f64).unwrap();
+                assert!(pid < 4.0, "pid is the shard id");
+                let tid = e.get("tid").and_then(Json::as_f64).unwrap() as usize;
+                assert!(
+                    tid == CACHE_LANE || (1..CLOUD_LANE_BASE + 1_000).contains(&tid),
+                    "tid {tid} outside the lane scheme"
+                );
+            }
+            other => panic!("unexpected ph: {other:?}"),
+        }
+    }
+    assert!(seen_x, "trace carries complete events");
+}
+
+#[test]
+fn metrics_jsonl_rows_parse_with_full_columns_and_monotone_time() {
+    let report = session(4).run_with_threads(4);
+    let text = report.obs.as_ref().unwrap().metrics_jsonl();
+    let mut last_t = f64::NEG_INFINITY;
+    let mut rows = 0usize;
+    for line in text.lines() {
+        let row = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL row {line}: {e}"));
+        let t = row.get("t").and_then(Json::as_f64).expect("t column");
+        assert!(t >= last_t, "snapshot times regress: {t} after {last_t}");
+        last_t = t;
+        for key in [
+            "admission_backlog", "cache_hit_rate", "cache_hits", "cache_lookups", "cloud_busy",
+            "completed", "edge_busy", "global_spent", "latency_mean", "latency_p50",
+            "latency_p99", "ready_depth", "shard",
+        ] {
+            let x = row.get(key).and_then(Json::as_f64);
+            assert!(matches!(x, Some(v) if v.is_finite()), "row lacks finite {key}: {line}");
+        }
+        let shard = row.get("shard").and_then(Json::as_f64).unwrap();
+        assert!(shard < 4.0, "shard column within the shard count");
+        rows += 1;
+    }
+    assert!(rows > 0, "metrics series is non-empty");
+}
+
+#[test]
+fn observe_off_is_byte_identical_to_default_preset() {
+    let on = session(1).run();
+    let off_spec = presets::fleet_sim(Benchmark::Gpqa, 24, 0.8, 11, &FleetSimKnobs::default());
+    let off = off_spec.build(Arc::new(MirrorPredictor::synthetic_for_tests())).unwrap().run();
+    assert!(off.obs.is_none(), "observe off leaves no artifacts");
+    assert!(off.critical_path.is_none());
+    assert_eq!(on.trace_text(), off.trace_text(), "observability is read-only");
+    let mut on_json = on.to_json();
+    if let Json::Obj(o) = &mut on_json {
+        o.remove("critical_path");
+    }
+    assert_eq!(
+        on_json.to_string_pretty(),
+        off.to_json().to_string_pretty(),
+        "reports agree up to the critical_path section"
+    );
+    assert!(on.critical_path.is_some(), "instrumented run surfaces the critical path");
+    assert!(on.render().contains("critical path:"));
+}
+
+#[test]
+fn critical_path_arithmetic_is_consistent() {
+    let report = session(1).run();
+    let obs = report.obs.as_ref().unwrap();
+    assert!(!obs.paths.is_empty());
+    for p in &obs.paths {
+        assert_eq!(p.nodes.len(), p.slacks.len(), "one slack per path node");
+        assert!(!p.nodes.is_empty());
+        assert!(p.path_latency >= 0.0 && p.makespan >= 0.0);
+        let slack: f64 = p.slacks.iter().sum();
+        assert!(
+            (p.path_latency + slack - p.makespan).abs() < 1e-6,
+            "q{}: busy {} + slack {slack} != makespan {}",
+            p.q,
+            p.path_latency,
+            p.makespan
+        );
+    }
+    let summary = report.critical_path.as_ref().unwrap();
+    let recomputed =
+        hybridflow::obs::CriticalPathSummary::from_paths(&obs.paths).expect("paths exist");
+    assert_eq!(summary, &recomputed, "report summary equals its recomputation");
+    assert_eq!(summary.queries, obs.paths.len());
+}

@@ -61,6 +61,40 @@ fi
 diff /tmp/hybridflow_shard4.json /tmp/hybridflow_shard4_rerun.json
 rm -f /tmp/hybridflow_shard1.json /tmp/hybridflow_shard4.json /tmp/hybridflow_shard4_rerun.json
 
+echo "== observability smoke run =="
+# The sharded fleet with the obs:: exports on: --trace-out / --metrics-out
+# must write parseable artifacts (Chrome trace-event JSON + metrics
+# JSONL), and re-running at a different worker-thread count must
+# reproduce both byte-for-byte (the artifact determinism contract; the
+# golden pins live in rust/tests/obs.rs).
+cargo run --release -- run --scenario scenarios/fleet_sharded.json \
+    --threads 1 --trace-out /tmp/hybridflow_obs_t1.json \
+    --metrics-out /tmp/hybridflow_obs_t1.jsonl --metrics-interval 0.5
+cargo run --release -- run --scenario scenarios/fleet_sharded.json \
+    --threads 4 --trace-out /tmp/hybridflow_obs_t4.json \
+    --metrics-out /tmp/hybridflow_obs_t4.jsonl --metrics-interval 0.5
+diff /tmp/hybridflow_obs_t1.json /tmp/hybridflow_obs_t4.json
+diff /tmp/hybridflow_obs_t1.jsonl /tmp/hybridflow_obs_t4.jsonl
+if command -v python3 >/dev/null 2>&1; then
+python3 - <<'EOF'
+import json
+with open("/tmp/hybridflow_obs_t1.json") as f:
+    trace = json.load(f)
+events = trace["traceEvents"]
+assert events, "trace carries no events"
+assert any(e["ph"] == "X" for e in events), "no complete events"
+with open("/tmp/hybridflow_obs_t1.jsonl") as f:
+    rows = [json.loads(line) for line in f if line.strip()]
+assert rows, "metrics series is empty"
+assert all("t" in r and "ready_depth" in r for r in rows), "metrics rows missing columns"
+print(f"observability artifacts OK: {len(events)} trace events, {len(rows)} metrics rows")
+EOF
+else
+    echo "python3 unavailable; structural validation is covered by rust/tests/obs.rs"
+fi
+rm -f /tmp/hybridflow_obs_t1.json /tmp/hybridflow_obs_t1.jsonl \
+    /tmp/hybridflow_obs_t4.json /tmp/hybridflow_obs_t4.jsonl
+
 echo "== kernel perf bench (smoke, BENCH_SCALE=0.05) =="
 # Emits BENCH_kernel.json (worker-pool + fleet-size scaling, indexed vs
 # the retained linear-scan baseline) and self-validates that the artifact
