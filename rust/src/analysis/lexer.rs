@@ -1,0 +1,458 @@
+//! Minimal Rust lexer for the determinism lint.
+//!
+//! Dependency-free (no `syn`): the lint rules only need a token stream
+//! with comments, strings, raw strings, char literals, and lifetimes
+//! handled correctly — so that a banned pattern mentioned inside a doc
+//! comment or a format string never produces a diagnostic. The lexer
+//! also extracts `// lint:allow(rule): reason` suppression directives
+//! from real comments (and only from comments, so a directive quoted in
+//! a string literal does not suppress anything).
+
+/// Token classification. Rules match on `(kind, text)` pairs; string and
+/// comment *contents* never become `Ident`/`Punct` tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// Numeric literal; `float` distinguishes `3.5` / `1e-9` / `2f64`
+    /// from integer literals (including `1usize`, whose suffix carries a
+    /// non-exponent `e`).
+    Number { float: bool },
+    /// String literal (regular, raw, byte, raw-byte). Text is the body.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// A `// lint:allow(rule): reason` directive found in a comment. An
+/// empty `rule` or `reason` marks a malformed directive; `lint` reports
+/// those as `bad_allow` findings so suppressions are always justified.
+#[derive(Debug, Clone)]
+pub struct AllowDirective {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Lexer output: the code token stream plus every allow directive.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub allows: Vec<AllowDirective>,
+}
+
+/// Multi-char punctuation the rules care about (`..` terminates a cast
+/// operand scan; `::` joins paths; arrows terminate statements). Longest
+/// match first.
+const MULTI_PUNCT: [&str; 5] = ["..=", "..", "::", "->", "=>"];
+
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (incl. doc comments). May carry an allow directive.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let body: String = chars[i..j].iter().collect();
+            if let Some(d) = parse_allow(&body, line) {
+                out.allows.push(d);
+            }
+            i = j;
+            continue;
+        }
+        // Block comment (nested, per Rust).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw / byte string starts: r"…", r#"…"#, b"…", br"…", br#"…"#.
+        if c == 'r' || c == 'b' {
+            if let Some((body, next, lines)) = try_string_prefix(&chars, i) {
+                out.tokens.push(Tok { kind: TokKind::Str, text: body, line });
+                line += lines;
+                i = next;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+                let (next, lines) = skip_char_literal(&chars, i + 1);
+                out.tokens.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                line += lines;
+                i = next;
+                continue;
+            }
+        }
+        if c == '"' {
+            let (body, next, lines) = scan_string(&chars, i);
+            out.tokens.push(Tok { kind: TokKind::Str, text: body, line });
+            line += lines;
+            i = next;
+            continue;
+        }
+        if c == '\'' {
+            // Char literal vs lifetime: 'x' / '\n' are chars; 'a (no
+            // closing quote after one element) is a lifetime.
+            if i + 1 < n && chars[i + 1] == '\\' {
+                let (next, lines) = skip_char_literal(&chars, i);
+                out.tokens.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                line += lines;
+                i = next;
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                out.tokens.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            out.tokens.push(Tok { kind: TokKind::Lifetime, text, line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (text, next) = scan_number(&chars, i);
+            let float = number_is_float(&text);
+            out.tokens.push(Tok { kind: TokKind::Number { float }, text, line });
+            i = next;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            out.tokens.push(Tok { kind: TokKind::Ident, text, line });
+            i = j;
+            continue;
+        }
+        // Punctuation: longest known multi-char first, else single char.
+        let mut matched = false;
+        for p in MULTI_PUNCT {
+            let pl = p.chars().count();
+            if i + pl <= n && chars[i..i + pl].iter().collect::<String>() == p {
+                out.tokens.push(Tok { kind: TokKind::Punct, text: p.to_string(), line });
+                i += pl;
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            out.tokens.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Try to lex a raw/byte string starting at `i` (`r`, `b`, or `br`
+/// prefix). Returns `(body, next_index, newlines_consumed)`.
+fn try_string_prefix(chars: &[char], i: usize) -> Option<(String, usize, usize)> {
+    let n = chars.len();
+    let mut j = i;
+    let mut raw = false;
+    if chars[j] == 'b' {
+        j += 1;
+        if j < n && chars[j] == 'r' {
+            raw = true;
+            j += 1;
+        }
+    } else if chars[j] == 'r' {
+        raw = true;
+        j += 1;
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while j < n && chars[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        // `r#ident` (raw identifier) has no quote after the hash run.
+        if j >= n || chars[j] != '"' {
+            return None;
+        }
+        let close: Vec<char> = format!("\"{}", "#".repeat(hashes)).chars().collect();
+        let mut k = j + 1;
+        let mut lines = 0usize;
+        let start = k;
+        while k < n {
+            if chars[k] == '\n' {
+                lines += 1;
+            }
+            if chars[k] == '"'
+                && chars[k..].len() >= close.len()
+                && chars[k..k + close.len()] == close[..]
+            {
+                let body: String = chars[start..k].iter().collect();
+                return Some((body, k + close.len(), lines));
+            }
+            k += 1;
+        }
+        let body: String = chars[start..].iter().collect();
+        return Some((body, n, lines));
+    }
+    // Non-raw byte string: b"…".
+    if j < n && chars[j] == '"' {
+        let (body, next, lines) = scan_string(chars, j);
+        return Some((body, next, lines));
+    }
+    None
+}
+
+/// Scan a regular (escaped) string literal whose opening quote is at
+/// `i`. Returns `(body, next_index, newlines_consumed)`.
+fn scan_string(chars: &[char], i: usize) -> (String, usize, usize) {
+    let n = chars.len();
+    let mut j = i + 1;
+    let mut lines = 0usize;
+    let start = j;
+    while j < n {
+        match chars[j] {
+            '\\' => j += 2,
+            '\n' => {
+                lines += 1;
+                j += 1;
+            }
+            '"' => {
+                let body: String = chars[start..j].iter().collect();
+                return (body, j + 1, lines);
+            }
+            _ => j += 1,
+        }
+    }
+    (chars[start..].iter().collect(), n, lines)
+}
+
+/// Skip a (possibly escaped) char literal whose opening quote is at `i`.
+fn skip_char_literal(chars: &[char], i: usize) -> (usize, usize) {
+    let n = chars.len();
+    let mut j = i + 1;
+    while j < n {
+        match chars[j] {
+            '\\' => j += 2,
+            '\'' => return (j + 1, 0),
+            '\n' => return (j, 0),
+            _ => j += 1,
+        }
+    }
+    (n, 0)
+}
+
+/// Scan a numeric literal starting at a digit. Consumes suffixes
+/// (`u64`, `f32`), fractional parts, and signed exponents; stops before
+/// `..` ranges and method calls on integer literals (`1.max(2)`).
+fn scan_number(chars: &[char], i: usize) -> (String, usize) {
+    let n = chars.len();
+    let hex = chars[i] == '0'
+        && i + 1 < n
+        && matches!(chars[i + 1], 'x' | 'X' | 'b' | 'B' | 'o' | 'O');
+    let mut j = i;
+    while j < n {
+        let ch = chars[j];
+        if ch.is_ascii_alphanumeric() || ch == '_' {
+            j += 1;
+            continue;
+        }
+        if ch == '.' && !hex {
+            if j + 1 < n
+                && (chars[j + 1] == '.' || chars[j + 1].is_alphabetic() || chars[j + 1] == '_')
+            {
+                break;
+            }
+            j += 1;
+            continue;
+        }
+        if (ch == '+' || ch == '-') && !hex && j > i && matches!(chars[j - 1], 'e' | 'E') {
+            j += 1;
+            continue;
+        }
+        break;
+    }
+    (chars[i..j].iter().collect(), j)
+}
+
+/// Float classification of a scanned numeric literal: fractional part,
+/// `f32`/`f64` suffix, or an exponent with a digit after it (`usize`
+/// carries an `e` but never `e<digit>`).
+fn number_is_float(text: &str) -> bool {
+    let lower = text.to_ascii_lowercase();
+    if lower.starts_with("0x") || lower.starts_with("0b") || lower.starts_with("0o") {
+        return false;
+    }
+    if lower.ends_with("f32") || lower.ends_with("f64") || lower.contains('.') {
+        return true;
+    }
+    let b = lower.as_bytes();
+    for k in 0..b.len() {
+        if b[k] == b'e' && k + 1 < b.len() {
+            let mut m = k + 1;
+            if b[m] == b'+' || b[m] == b'-' {
+                m += 1;
+            }
+            if m < b.len() && b[m].is_ascii_digit() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Parse an allow directive out of one line-comment body, if present.
+/// Malformed directives (missing rule, close paren, or reason) come back
+/// with empty fields and are reported as `bad_allow` by the linter.
+fn parse_allow(comment: &str, line: usize) -> Option<AllowDirective> {
+    let idx = comment.find("lint:allow")?;
+    let rest = &comment[idx + "lint:allow".len()..];
+    let Some(rest) = rest.strip_prefix('(') else {
+        return Some(AllowDirective { line, rule: String::new(), reason: String::new() });
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(AllowDirective { line, rule: String::new(), reason: String::new() });
+    };
+    let rule = rest[..close].trim().to_string();
+    let after = &rest[close + 1..];
+    let reason = after.strip_prefix(':').map(str::trim).unwrap_or("").to_string();
+    Some(AllowDirective { line, rule, reason })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_contents() {
+        let src = r##"
+// HashMap in a comment
+/* Instant::now() in a /* nested */ block */
+const S: &str = "HashMap and println!";
+const R: &str = r#"thread::spawn and .sum::<f64>()"#;
+fn real() {}
+"##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()));
+        assert!(!ids.contains(&"Instant".to_string()));
+        assert!(!ids.contains(&"spawn".to_string()));
+        assert!(ids.contains(&"real".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_and_chars_disambiguate() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }";
+        let lexed = lex(src);
+        let lifetimes: Vec<_> =
+            lexed.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        let chars: Vec<_> = lexed.tokens.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(chars.len(), 1);
+    }
+
+    #[test]
+    fn number_float_classification() {
+        for (text, want) in [
+            ("3.5", true),
+            ("1e-9", true),
+            ("7e3", true),
+            ("2f64", true),
+            ("1.0f32", true),
+            ("42", false),
+            ("1usize", false),
+            ("0x9E37", false),
+            ("1_000", false),
+        ] {
+            assert_eq!(number_is_float(text), want, "literal {text}");
+        }
+    }
+
+    #[test]
+    fn number_scan_stops_at_ranges_and_methods() {
+        let lexed = lex("for i in 0..n { let x = 1.max(2); }");
+        let nums: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| matches!(t.kind, TokKind::Number { .. }))
+            .map(|t| (t.text.clone(), t.kind))
+            .collect();
+        assert_eq!(nums[0].0, "0");
+        assert_eq!(nums[0].1, TokKind::Number { float: false });
+        assert_eq!(nums[1].0, "1");
+        assert_eq!(nums[1].1, TokKind::Number { float: false });
+    }
+
+    #[test]
+    fn allow_directives_parse_from_comments_only() {
+        let src = r#"
+let x = 1; // lint:allow(wall_clock): bench harness measures real time
+const S: &str = "lint:allow(wall_clock): not a directive";
+// lint:allow(bogus)
+"#;
+        let lexed = lex(src);
+        assert_eq!(lexed.allows.len(), 2);
+        assert_eq!(lexed.allows[0].rule, "wall_clock");
+        assert!(!lexed.allows[0].reason.is_empty());
+        assert_eq!(lexed.allows[1].rule, "bogus");
+        assert!(lexed.allows[1].reason.is_empty());
+    }
+
+    #[test]
+    fn multiline_strings_track_lines() {
+        let src = "let a = \"x\ny\";\nlet b = 1;";
+        let lexed = lex(src);
+        let b = lexed.tokens.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 3);
+    }
+}

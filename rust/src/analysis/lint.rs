@@ -1,0 +1,275 @@
+//! Determinism lint driver: walk a source tree, lex each file, run the
+//! rule set, apply `lint:allow` suppressions, and emit a byte-stable
+//! report (text or JSON) sorted `(file, line, rule)`.
+//!
+//! `hybridflow lint [--json] [--src <dir>]` is the CLI surface; the
+//! committed tree is pinned clean by `rust/tests/analysis.rs`, and
+//! `scripts/verify.sh` additionally asserts that the seeded-bad fixture
+//! corpus still draws a nonzero exit.
+
+use crate::analysis::lexer::{lex, Tok, TokKind};
+use crate::analysis::rules::{known_rule, run_rules, Diagnostic};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// A full lint pass over one tree.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Findings, sorted `(file, line, rule)`.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Human-readable listing; one `file:line: [rule] message` row per
+    /// finding plus a trailing summary. Deterministic.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&format!("{}:{}: [{}] {}\n", d.file, d.line, d.rule, d.message));
+        }
+        s.push_str(&format!(
+            "lint: {} finding(s) across {} file(s)\n",
+            self.diagnostics.len(),
+            self.files
+        ));
+        s
+    }
+
+    /// Canonical JSON (sorted keys via `util::json`); byte-identical
+    /// across reruns on the same tree.
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("file", Json::Str(d.file.clone())),
+                    ("line", Json::Num(d.line as f64)),
+                    ("message", Json::Str(d.message.clone())),
+                    ("rule", Json::Str(d.rule.to_string())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("files", Json::Num(self.files as f64)),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+
+    /// Rendered JSON with a trailing newline (the `--json` stdout form).
+    pub fn json_text(&self) -> String {
+        let mut t = self.to_json().to_string_pretty();
+        t.push('\n');
+        t
+    }
+}
+
+/// Lint one file's source text. `file` is the display path used in
+/// diagnostics (forward slashes; also drives path-based exemptions).
+pub fn lint_source(file: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lex(src);
+    let regions = test_regions(&lexed.tokens);
+    let in_test = |line: usize| regions.iter().any(|&(a, b)| a <= line && line <= b);
+    let mut diags = run_rules(file, &lexed.tokens, &in_test);
+
+    // Validate directives: a suppression must name a known rule and
+    // carry a `: reason` justification, else it is itself a finding.
+    for a in &lexed.allows {
+        if !known_rule(&a.rule) {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: a.line,
+                rule: "bad_allow",
+                message: format!("lint:allow names unknown rule '{}'", a.rule),
+            });
+        } else if a.reason.is_empty() {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: a.line,
+                rule: "bad_allow",
+                message: format!("lint:allow({}) has no ': reason' justification", a.rule),
+            });
+        }
+    }
+
+    // Apply suppressions: a justified allow on line L covers findings of
+    // its rule on L (trailing comment) and L+1 (preceding line).
+    diags.retain(|d| {
+        d.rule == "bad_allow"
+            || !lexed.allows.iter().any(|a| {
+                a.rule == d.rule
+                    && !a.reason.is_empty()
+                    && (a.line == d.line || a.line + 1 == d.line)
+            })
+    });
+    diags.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    diags
+}
+
+/// Lint every `.rs` file under `root` (recursive, sorted traversal).
+pub fn lint_tree(root: &Path) -> anyhow::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut diagnostics = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let name = slash_path(path);
+        diagnostics.extend(lint_source(&name, &src));
+    }
+    diagnostics.sort_by(|a, b| {
+        a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule))
+    });
+    Ok(LintReport { files: files.len(), diagnostics })
+}
+
+fn slash_path(p: &Path) -> String {
+    p.to_string_lossy().replace('\\', "/")
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("lint root {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for e in entries {
+        let entry = e.map_err(|e| anyhow::anyhow!("read entry under {}: {e}", dir.display()))?;
+        paths.push(entry.path());
+    }
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Line ranges (inclusive) of `#[cfg(test)]`-gated items: from the
+/// attribute line to the close of the item's brace block (or its `;`
+/// for braceless items). The repo convention is `#[cfg(test)] mod
+/// tests { .. }`, but gated fns/uses are handled too.
+fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let is_p = |t: &Tok, s: &str| t.kind == TokKind::Punct && t.text == s;
+    let is_id = |t: &Tok, s: &str| t.kind == TokKind::Ident && t.text == s;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let gate = is_p(&toks[i], "#")
+            && is_p(&toks[i + 1], "[")
+            && is_id(&toks[i + 2], "cfg")
+            && is_p(&toks[i + 3], "(")
+            && is_id(&toks[i + 4], "test")
+            && is_p(&toks[i + 5], ")")
+            && is_p(&toks[i + 6], "]");
+        if !gate {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + 7;
+        let mut depth = 0usize;
+        let mut entered = false;
+        let mut end_line = toks.last().map(|t| t.line).unwrap_or(start_line);
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "{" => {
+                        depth += 1;
+                        entered = true;
+                    }
+                    "}" => {
+                        depth = depth.saturating_sub(1);
+                        if entered && depth == 0 {
+                            end_line = t.line;
+                            break;
+                        }
+                    }
+                    ";" if !entered && depth == 0 => {
+                        end_line = t.line;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        out.push((start_line, end_line));
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_suppresses_same_and_next_line() {
+        let src = "\
+// lint:allow(wall_clock): harness measures real time on purpose
+let t0 = std::time::Instant::now();
+let t1 = std::time::Instant::now(); // lint:allow(wall_clock): ditto
+";
+        assert!(lint_source("rust/src/eval/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unjustified_or_unknown_allow_is_a_finding() {
+        let src = "\
+// lint:allow(wall_clock)
+let t0 = std::time::Instant::now();
+// lint:allow(no_such_rule): because
+let x = 1;
+";
+        let d = lint_source("rust/src/eval/mod.rs", src);
+        let rules: Vec<_> = d.iter().map(|x| x.rule).collect();
+        // The reasonless allow does not suppress, so the wall_clock
+        // finding survives alongside both bad_allow findings.
+        assert_eq!(rules, ["bad_allow", "wall_clock", "bad_allow"]);
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "\
+pub fn lib_code() {}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn t() {
+        let _m: HashMap<u32, u32> = HashMap::new();
+        let _t = std::time::Instant::now();
+    }
+}
+";
+        assert!(lint_source("rust/src/eval/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn gated_use_without_braces_is_bounded_by_semicolon() {
+        let src = "\
+#[cfg(test)]
+use std::collections::HashMap;
+
+pub fn lib_code() -> std::collections::HashMap<u32, u32> {
+    std::collections::HashMap::new()
+}
+";
+        let d = lint_source("rust/src/eval/mod.rs", src);
+        // The gated `use` is exempt; the two real mentions flag.
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| x.rule == "hash_collection"));
+    }
+}

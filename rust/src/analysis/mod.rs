@@ -1,0 +1,25 @@
+//! Static analysis: the determinism contract, enforced before anything
+//! runs.
+//!
+//! Two dependency-free passes back the repo's reproducibility story:
+//!
+//! * [`lint`] — a token-level determinism lint over the source tree
+//!   (`hybridflow lint`). A small Rust lexer ([`lexer`]) feeds pattern
+//!   rules ([`rules`]) that ban the hazard classes which have actually
+//!   bitten this codebase: `partial_cmp().unwrap()` NaN panics, hash-map
+//!   iteration feeding rendered output, wall clocks and ad-hoc threads
+//!   inside the virtual-time kernel, prints from library code, and
+//!   silent float→int casts in kernel hot paths. Suppressions must be
+//!   justified in-line (`// lint:allow(rule): reason`).
+//! * [`scenario`] — a static feasibility checker for scenario specs
+//!   (`hybridflow check --scenario`): queueing stability, budget
+//!   feasibility, cache sizing, and shard-split degeneracy, estimated
+//!   from the profiler's cost model without executing the kernel.
+//!
+//! Both passes emit byte-stable, sorted diagnostics, and both are wired
+//! into `scripts/verify.sh` and the fuzz harness.
+
+pub mod lexer;
+pub mod lint;
+pub mod rules;
+pub mod scenario;

@@ -1,0 +1,366 @@
+//! Determinism lint rules: token-level patterns over [`crate::analysis::lexer`]
+//! output that enforce the repo's reproducibility contract.
+//!
+//! Every rule is an over-approximation tuned to this codebase: the goal
+//! is zero unexplained hazards, not soundness for arbitrary Rust. Code
+//! inside `#[cfg(test)]`-gated items is exempt (tests may use wall
+//! clocks and hash maps), and a few modules are path-exempt where the
+//! hazard *is* the module's purpose (`util::pool` owns threads and the
+//! wall clock; `main.rs` and `report/` own stdout).
+
+use crate::analysis::lexer::{Tok, TokKind};
+
+/// One lint finding. Sorted `(file, line, rule)` so output is
+/// byte-stable and diffable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// The rule registry: `(id, rationale)`. The id is what `lint:allow(id)`
+/// names; the rationale feeds the README table and `bad_allow`
+/// validation (suppressing an unknown rule is itself a finding).
+pub const RULES: [(&str, &str); 7] = [
+    (
+        "partial_cmp_unwrap",
+        "`.partial_cmp().unwrap()` panics on NaN and hides total-order intent; use `total_cmp`",
+    ),
+    (
+        "hash_collection",
+        "HashMap/HashSet iteration order is nondeterministic; use BTreeMap/BTreeSet or sort",
+    ),
+    (
+        "wall_clock",
+        "Instant/SystemTime in kernel or library code breaks virtual-clock determinism",
+    ),
+    ("thread_spawn", "ad-hoc threads escape the deterministic util::pool merge discipline"),
+    (
+        "print_in_lib",
+        "stdout/stderr writes from library code pollute byte-stable reports; route via CLI",
+    ),
+    (
+        "unordered_float_sum",
+        "float accumulation over a hash-ordered iterator is order-sensitive; sort first",
+    ),
+    (
+        "float_int_cast",
+        "`as` float->int in a kernel path rounds/saturates silently; make rounding explicit",
+    ),
+];
+
+/// Integer target types for the cast rule.
+const INT_TYPES: [&str; 12] =
+    ["usize", "u8", "u16", "u32", "u64", "u128", "isize", "i8", "i16", "i32", "i64", "i128"];
+
+/// True when `id` names a registered rule.
+pub fn known_rule(id: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == id)
+}
+
+fn is_p(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn is_any_id(t: &Tok, names: &[&str]) -> bool {
+    t.kind == TokKind::Ident && names.iter().any(|n| t.text == *n)
+}
+
+/// Index of the `)` matching the `(` at `open`, if any.
+fn match_paren(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if is_p(t, "(") {
+            depth += 1;
+        } else if is_p(t, ")") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Path predicates, on forward-slash-normalized paths.
+fn in_pool(file: &str) -> bool {
+    file.ends_with("util/pool.rs")
+}
+
+fn print_exempt(file: &str) -> bool {
+    file.ends_with("main.rs") || file.contains("/report/") || file.starts_with("report/")
+}
+
+fn kernel_path(file: &str) -> bool {
+    file.contains("/sim/")
+        || file.contains("/scheduler/")
+        || file.starts_with("sim/")
+        || file.starts_with("scheduler/")
+}
+
+/// Statement-boundary tokens for backward statement scans.
+fn is_stmt_boundary(t: &Tok) -> bool {
+    t.kind == TokKind::Punct && matches!(t.text.as_str(), ";" | "{" | "}")
+}
+
+/// Run every rule over one file's token stream. `in_test` reports
+/// whether a source line sits inside a `#[cfg(test)]`-gated item.
+pub fn run_rules(file: &str, toks: &[Tok], in_test: &dyn Fn(usize) -> bool) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, message: String| {
+        out.push(Diagnostic { file: file.to_string(), line, rule, message });
+    };
+
+    for w in 0..toks.len() {
+        let t = &toks[w];
+        if t.kind != TokKind::Ident || in_test(t.line) {
+            continue;
+        }
+        match t.text.as_str() {
+            // `.partial_cmp(..).unwrap()` / `.expect(..)`: NaN panic +
+            // non-total order. Trait impls (`fn partial_cmp`) and
+            // `unwrap_or(..)` fallbacks do not match.
+            "partial_cmp" => {
+                if w > 0
+                    && is_p(&toks[w - 1], ".")
+                    && w + 1 < toks.len()
+                    && is_p(&toks[w + 1], "(")
+                {
+                    if let Some(close) = match_paren(toks, w + 1) {
+                        if close + 2 < toks.len()
+                            && is_p(&toks[close + 1], ".")
+                            && is_any_id(&toks[close + 2], &["unwrap", "expect"])
+                        {
+                            push(
+                                t.line,
+                                "partial_cmp_unwrap",
+                                "`.partial_cmp().unwrap()` chain; use `total_cmp`".into(),
+                            );
+                        }
+                    }
+                }
+            }
+            // Hash collections anywhere in non-test library code. The
+            // repo contract is BTree everywhere; the one justified use
+            // (PJRT executable lookup) carries an allow.
+            "HashMap" | "HashSet" => {
+                push(
+                    t.line,
+                    "hash_collection",
+                    format!("{} iteration order is nondeterministic; use BTree", t.text),
+                );
+            }
+            // Wall-clock types outside util::pool: virtual time is the
+            // only clock the kernel may observe.
+            "Instant" | "SystemTime" => {
+                if !in_pool(file) {
+                    push(
+                        t.line,
+                        "wall_clock",
+                        format!("{} is wall-clock; kernel code uses the virtual clock", t.text),
+                    );
+                }
+            }
+            // `thread::spawn` / `Builder::spawn` outside util::pool.
+            "spawn" => {
+                if !in_pool(file)
+                    && w > 0
+                    && (is_p(&toks[w - 1], "::") || is_p(&toks[w - 1], "."))
+                    && w + 1 < toks.len()
+                    && is_p(&toks[w + 1], "(")
+                {
+                    push(
+                        t.line,
+                        "thread_spawn",
+                        "ad-hoc thread spawn; deterministic threads live in util::pool".into(),
+                    );
+                }
+            }
+            // println!/eprintln! in library modules.
+            "println" | "eprintln" | "print" | "eprint" => {
+                if !print_exempt(file) && w + 1 < toks.len() && is_p(&toks[w + 1], "!") {
+                    push(
+                        t.line,
+                        "print_in_lib",
+                        format!("{}! in library code; print from the CLI layer", t.text),
+                    );
+                }
+            }
+            // `.sum::<f64>()` with a hash collection in the same
+            // statement: order-sensitive float accumulation.
+            "sum" => {
+                if w > 0
+                    && is_p(&toks[w - 1], ".")
+                    && w + 3 < toks.len()
+                    && is_p(&toks[w + 1], "::")
+                    && is_p(&toks[w + 2], "<")
+                    && is_any_id(&toks[w + 3], &["f64", "f32"])
+                    && stmt_mentions_hash(toks, w)
+                {
+                    push(
+                        t.line,
+                        "unordered_float_sum",
+                        "float sum over a hash-ordered iterator; sort into a Vec first".into(),
+                    );
+                }
+            }
+            // `<float expr> as <int type>` in kernel paths (sim/,
+            // scheduler/): silent truncation in the hot loop.
+            "as" => {
+                if kernel_path(file)
+                    && w + 1 < toks.len()
+                    && is_any_id(&toks[w + 1], &INT_TYPES)
+                    && cast_operand_has_float(toks, w)
+                {
+                    push(
+                        t.line,
+                        "float_int_cast",
+                        "float->int `as` cast in a kernel path; make rounding explicit".into(),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Backward statement scan from token `w`: does the current statement
+/// mention a hash collection? (Defense-in-depth for the float-sum rule;
+/// the `hash_collection` rule already flags the collection itself.)
+fn stmt_mentions_hash(toks: &[Tok], w: usize) -> bool {
+    let mut k = w;
+    while k > 0 {
+        k -= 1;
+        let t = &toks[k];
+        if is_stmt_boundary(t) {
+            return false;
+        }
+        if is_any_id(t, &["HashMap", "HashSet"]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Backward operand scan from the `as` at `w`: walk left over the cast
+/// operand (stopping at statement boundaries, commas, `=`, ranges, and
+/// unbalanced open brackets) looking for float evidence — a float
+/// literal, an `f64`/`f32` ident, or a rounding method. Integer-only
+/// casts like `(0..n as u32)` terminate at `..` before reaching any
+/// float elsewhere in the expression.
+fn cast_operand_has_float(toks: &[Tok], w: usize) -> bool {
+    let mut depth = 0usize;
+    let mut k = w;
+    while k > 0 {
+        k -= 1;
+        let t = &toks[k];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                ")" | "]" => depth += 1,
+                "(" | "[" => {
+                    if depth == 0 {
+                        return false;
+                    }
+                    depth -= 1;
+                }
+                ";" | "{" | "}" | "," | "=" | ".." | "..=" | "=>" | "->" => {
+                    if depth == 0 {
+                        return false;
+                    }
+                }
+                _ => {}
+            }
+            continue;
+        }
+        if matches!(t.kind, TokKind::Number { float: true }) {
+            return true;
+        }
+        if is_any_id(t, &["f64", "f32", "floor", "ceil", "round", "trunc"]) {
+            return true;
+        }
+        if depth == 0 && is_any_id(t, &["let", "return", "match", "if", "while", "for"]) {
+            return false;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn diags(file: &str, src: &str) -> Vec<Diagnostic> {
+        let lexed = lex(src);
+        run_rules(file, &lexed.tokens, &|_| false)
+    }
+
+    fn rules_of(d: &[Diagnostic]) -> Vec<&'static str> {
+        d.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn partial_cmp_chain_flags_but_trait_impl_does_not() {
+        let bad = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());";
+        assert_eq!(rules_of(&diags("x.rs", bad)), ["partial_cmp_unwrap"]);
+        let expect = "v.sort_by(|a, b| a.partial_cmp(b).expect(\"finite\"));";
+        assert_eq!(rules_of(&diags("x.rs", expect)), ["partial_cmp_unwrap"]);
+        let imp = "fn partial_cmp(&self, other: &Self) -> Option<Ordering> { None }";
+        assert!(diags("x.rs", imp).is_empty());
+        let fallback = "a.partial_cmp(b).unwrap_or(Ordering::Equal);";
+        assert!(diags("x.rs", fallback).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_and_spawn_respect_pool_exemption() {
+        let src = "let t = std::time::Instant::now(); std::thread::spawn(|| {});";
+        let d = diags("rust/src/sim/mod.rs", src);
+        assert_eq!(rules_of(&d), ["wall_clock", "thread_spawn"]);
+        assert!(diags("rust/src/util/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn print_exemptions() {
+        let src = "println!(\"hello\");";
+        assert_eq!(rules_of(&diags("rust/src/eval/mod.rs", src)), ["print_in_lib"]);
+        assert!(diags("rust/src/main.rs", src).is_empty());
+        assert!(diags("rust/src/report/table.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_cast_needs_kernel_path_and_float_evidence() {
+        let bad = "let b = (x * n as f64).floor() as usize;";
+        assert_eq!(rules_of(&diags("rust/src/sim/mod.rs", bad)), ["float_int_cast"]);
+        // Outside kernel paths the rule is silent.
+        assert!(diags("rust/src/eval/mod.rs", bad).is_empty());
+        // Integer-only cast with a float elsewhere in the statement:
+        // the `..` range terminates the operand scan.
+        let ok = "let v = (0..n as u32).map(|w| (0.0, w)).collect();";
+        assert!(diags("rust/src/scheduler/pool.rs", ok).is_empty());
+        let plain = "let w = workers as u64;";
+        assert!(diags("rust/src/scheduler/pool.rs", plain).is_empty());
+    }
+
+    #[test]
+    fn unordered_sum_needs_hash_in_statement() {
+        // Same statement as a HashMap mention: flags (plus the
+        // hash_collection finding for the map itself).
+        let bad = "let t = read_map::<HashMap<u64, f64>>().values().sum::<f64>();";
+        let d = diags("rust/src/eval/mod.rs", bad);
+        assert!(d.iter().any(|x| x.rule == "unordered_float_sum"), "{d:?}");
+        // Ordered iterator: silent.
+        let ok = "let t: f64 = xs.iter().sum::<f64>();";
+        assert!(diags("rust/src/eval/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn test_regions_are_exempt_via_callback() {
+        let src = "let t = std::time::Instant::now();";
+        let lexed = lex(src);
+        let d = run_rules("rust/src/sim/mod.rs", &lexed.tokens, &|_| true);
+        assert!(d.is_empty());
+    }
+}

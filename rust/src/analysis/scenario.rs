@@ -1,0 +1,502 @@
+//! Static feasibility checker for [`ScenarioSpec`]: queueing stability,
+//! budget feasibility, cache sizing, and shard-split degeneracy —
+//! computed *without executing the kernel*, by probing the same cost
+//! model the offline profiler uses ([`crate::workload::profiling`]).
+//!
+//! `hybridflow check --scenario <file.json>` is the CLI surface (sweep
+//! files are checked cell by cell). The checker is coherent with
+//! [`ScenarioSpec::validate`]: it never panics on any spec, reports
+//! validation failures as findings, and a spec that checks without
+//! errors is guaranteed to `build()` (pinned by the fuzz harness).
+
+use crate::engine::Backend;
+use crate::models::SimExecutor;
+use crate::planner::{synthetic::SyntheticPlanner, Planner};
+use crate::scenario::ScenarioSpec;
+use crate::util::rng::Rng;
+use crate::workload::trace::ArrivalProcess;
+use crate::workload::{generate_queries, sample_latents};
+
+/// Queries probed through the planner/cost model per spec. Small and
+/// fixed: the probe is a mean-service estimate, not a simulation.
+pub const PROBE_QUERIES: usize = 16;
+
+/// Offered-load ratio above which a side is called near-saturated.
+pub const RHO_WARN: f64 = 0.9;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One checker finding. `code` groups findings by diagnostic family
+/// (`validate`, `stability`, `budget`, `cache`, `shard_split`, `load`).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub severity: Severity,
+    pub code: &'static str,
+    pub message: String,
+}
+
+/// The probe's aggregate cost estimates for one spec.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadEstimate {
+    /// Long-run arrival rate (queries per virtual second; infinite for
+    /// zero-gap bursts).
+    pub lambda: f64,
+    /// Expected per-query service seconds if every subtask ran on edge.
+    pub edge_service: f64,
+    /// Expected per-query service seconds if every subtask ran on cloud.
+    pub cloud_service: f64,
+    /// Expected per-query dollars if every subtask ran on cloud.
+    pub cloud_dollars: f64,
+    /// Mean subtasks per query under the planner's decomposition.
+    pub mean_subtasks: f64,
+    /// Offered load with all traffic on edge / on cloud workers.
+    pub rho_edge: f64,
+    pub rho_cloud: f64,
+    /// Offered load under the best service-proportional split across
+    /// both pools — the stability bound no router can beat.
+    pub rho_split: f64,
+}
+
+/// Checker output: findings plus the load estimate they derive from.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    pub name: String,
+    pub findings: Vec<Finding>,
+    pub load: LoadEstimate,
+}
+
+impl CheckReport {
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// True when the spec is feasible (warnings allowed, errors not).
+    pub fn passed(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// Deterministic text listing (the CLI output).
+    pub fn render(&self) -> String {
+        let mut s = format!("feasibility: {}\n", self.name);
+        let l = &self.load;
+        s.push_str(&format!(
+            "  load: lambda={:.4}/s  edge={:.3}s/q  cloud={:.3}s/q  cloud-$={:.5}/q  \
+             subtasks={:.2}\n",
+            l.lambda,
+            l.edge_service,
+            l.cloud_service,
+            l.cloud_dollars,
+            l.mean_subtasks,
+        ));
+        s.push_str(&format!(
+            "  rho: all-edge={:.3}  all-cloud={:.3}  best-split={:.3}\n",
+            l.rho_edge, l.rho_cloud, l.rho_split,
+        ));
+        for f in &self.findings {
+            s.push_str(&format!("  [{}] {}: {}\n", f.severity.label(), f.code, f.message));
+        }
+        s.push_str(&format!(
+            "  result: {} error(s), {} warning(s)\n",
+            self.errors(),
+            self.warnings()
+        ));
+        s
+    }
+}
+
+/// Run every static check against one spec. Never panics: an invalid
+/// spec comes back as a single `validate` error finding.
+pub fn check_spec(spec: &ScenarioSpec) -> CheckReport {
+    let mut report = CheckReport { name: spec.name.clone(), ..CheckReport::default() };
+    if let Err(e) = spec.validate() {
+        report.findings.push(Finding {
+            severity: Severity::Error,
+            code: "validate",
+            message: format!("spec fails validation: {e}"),
+        });
+        return report;
+    }
+    report.load = estimate_load(spec);
+    stability_findings(spec, &report.load, &mut report.findings);
+    budget_findings(spec, &report.load, &mut report.findings);
+    cache_findings(spec, &mut report.findings);
+    shard_findings(spec, &report.load, &mut report.findings);
+    report
+}
+
+/// Probe the profiler's cost model: plan + latent-sample a small prefix
+/// of the workload and price every subtask on both sides. Uses the
+/// paper-pair executor (the same endpoints every scenario run uses), so
+/// estimates line up with what the kernel will actually charge.
+fn estimate_load(spec: &ScenarioSpec) -> LoadEstimate {
+    let executor = SimExecutor::paper_pair();
+    let sp = executor.sp();
+    let planner = SyntheticPlanner::paper_main();
+    let n_probe = spec.workload.n.min(PROBE_QUERIES).max(1);
+    let base = generate_queries(spec.workload.benchmark, n_probe, spec.seed);
+    let queries = match &spec.workload.zipf {
+        Some(z) => z.apply(&base, spec.seed),
+        None => base,
+    };
+    let mut rng = Rng::new(spec.seed);
+    let (mut edge_s, mut cloud_s, mut dollars, mut subtasks) = (0.0f64, 0.0f64, 0.0f64, 0usize);
+    for q in &queries {
+        let plan = planner.plan(q, spec.engine.n_max, &mut rng);
+        let dag = &plan.dag;
+        let latents = sample_latents(dag, q, sp, &mut rng);
+        let order = dag.topo_order().unwrap_or_else(|| (0..dag.len()).collect());
+        let mut out_tokens: Vec<f64> = latents.iter().map(|l| l.out_tokens).collect();
+        for &i in &order {
+            let in_tok: f64 = q.query_tokens
+                + dag.nodes[i].deps.iter().map(|&d| out_tokens[d]).sum::<f64>();
+            let cloud_out = latents[i].out_tokens * sp.cloud_verbosity;
+            edge_s += executor.profile(false).latency_mean(in_tok, latents[i].out_tokens);
+            cloud_s += executor.profile(true).latency_mean(in_tok, cloud_out);
+            dollars += executor.profile(true).api_cost(in_tok, cloud_out);
+            out_tokens[i] = latents[i].out_tokens;
+            subtasks += 1;
+        }
+    }
+    let nq = queries.len().max(1) as f64;
+    let edge_service = edge_s / nq;
+    let cloud_service = cloud_s / nq;
+    let cloud_dollars = dollars / nq;
+    let mean_subtasks = subtasks as f64 / nq;
+    let lambda = arrival_rate(&spec.workload.arrival, spec.workload.n, spec.seed);
+    // Zero-worker sides are legal topology: the kernel pads a phantom
+    // single slot per side, so capacity is max(workers, 1) either way.
+    let we = spec.topology.edge_workers.max(1) as f64;
+    let wc = spec.topology.cloud_workers.max(1) as f64;
+    let rho_edge = offered(lambda, edge_service, we);
+    let rho_cloud = offered(lambda, cloud_service, wc);
+    // Best service-proportional split: route fraction p to edge so both
+    // pools see equal utilization; rho* = lambda·Se·Sc / (Se·Wc + Sc·We)
+    // is the utilization both sides share at that optimum.
+    let denom = edge_service * wc + cloud_service * we;
+    let rho_split = if denom > 0.0 {
+        lambda * edge_service * cloud_service / denom
+    } else {
+        0.0
+    };
+    LoadEstimate {
+        lambda,
+        edge_service,
+        cloud_service,
+        cloud_dollars,
+        mean_subtasks,
+        rho_edge,
+        rho_cloud,
+        rho_split,
+    }
+}
+
+fn offered(lambda: f64, service: f64, workers: f64) -> f64 {
+    if service <= 0.0 {
+        return 0.0;
+    }
+    lambda * service / workers
+}
+
+/// Long-run arrival rate of a (validated) arrival process.
+fn arrival_rate(arrival: &ArrivalProcess, n: usize, seed: u64) -> f64 {
+    match arrival {
+        ArrivalProcess::Poisson { rate } => *rate,
+        ArrivalProcess::Periodic { gap } => {
+            if *gap > 0.0 {
+                1.0 / gap
+            } else if n > 1 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        }
+        ArrivalProcess::Trace(_) => {
+            if n < 2 {
+                return 0.0;
+            }
+            let times = arrival.sample(n, seed);
+            let span = times[times.len() - 1] - times[0];
+            if span > 0.0 {
+                (n as f64 - 1.0) / span
+            } else {
+                f64::INFINITY
+            }
+        }
+    }
+}
+
+fn stability_findings(spec: &ScenarioSpec, load: &LoadEstimate, out: &mut Vec<Finding>) {
+    let rho = load.rho_split;
+    if rho >= 1.0 {
+        if spec.topology.admission_limit == 0 {
+            out.push(Finding {
+                severity: Severity::Error,
+                code: "stability",
+                message: format!(
+                    "offered load rho={:.3} >= 1 under the best edge/cloud split with \
+                     unbounded admission (admission_limit = 0): the queue grows without bound",
+                    rho,
+                ),
+            });
+        } else {
+            out.push(Finding {
+                severity: Severity::Warning,
+                code: "stability",
+                message: format!(
+                    "offered load rho={:.3} >= 1 under the best edge/cloud split; bounded \
+                     admission (limit {}) caps the backlog but sojourn times will sit at \
+                     the admission ceiling",
+                    rho, spec.topology.admission_limit,
+                ),
+            });
+        }
+    } else if rho >= RHO_WARN {
+        out.push(Finding {
+            severity: Severity::Warning,
+            code: "stability",
+            message: format!(
+                "offered load rho={:.3} >= {:.1} under the best edge/cloud split: the fleet \
+                 runs near saturation and queueing delay dominates latency",
+                rho, RHO_WARN,
+            ),
+        });
+    }
+}
+
+fn budget_findings(spec: &ScenarioSpec, load: &LoadEstimate, out: &mut Vec<Finding>) {
+    let per_query = load.cloud_dollars;
+    if per_query <= 0.0 {
+        return;
+    }
+    let n = spec.workload.n as f64;
+    let n_tenants = spec.topology.tenants.len().max(1) as f64;
+    // Arrivals are assigned round-robin, so each tenant sees ~n/T
+    // queries (WorkloadSpec::arrivals).
+    let tenant_share = n / n_tenants;
+    for t in &spec.topology.tenants {
+        let Some(cap) = t.k_cap else { continue };
+        if cap < per_query {
+            out.push(Finding {
+                severity: Severity::Warning,
+                code: "budget",
+                message: format!(
+                    "tenant '{}' cap ${:.5} is below the expected all-cloud cost of a \
+                     single query (${:.5}): the cap force-edges ~100% of its traffic",
+                    t.name, cap, per_query,
+                ),
+            });
+        } else if cap < per_query * tenant_share {
+            out.push(Finding {
+                severity: Severity::Info,
+                code: "budget",
+                message: format!(
+                    "tenant '{}' cap ${:.5} covers ~{:.0} of ~{:.0} expected queries at \
+                     all-cloud cost; offloading throttles once the cap is drawn down",
+                    t.name,
+                    (cap / per_query).floor(),
+                    tenant_share,
+                ),
+            });
+        }
+    }
+    if let Some(cap) = spec.topology.global_k_cap {
+        if cap < per_query {
+            out.push(Finding {
+                severity: Severity::Warning,
+                code: "budget",
+                message: format!(
+                    "global cap ${:.5} is below the expected all-cloud cost of a single \
+                     query (${:.5}): the fleet force-edges ~100% of traffic",
+                    cap, per_query,
+                ),
+            });
+        } else if cap < per_query * n {
+            out.push(Finding {
+                severity: Severity::Info,
+                code: "budget",
+                message: format!(
+                    "global cap ${:.5} covers ~{:.0} of {} queries at all-cloud cost; \
+                     offloading throttles once the cap is drawn down",
+                    cap,
+                    (cap / per_query).floor(),
+                    spec.workload.n,
+                ),
+            });
+        }
+    }
+}
+
+fn cache_findings(spec: &ScenarioSpec, out: &mut Vec<Finding>) {
+    let Some(cache) = &spec.engine.cache else {
+        return;
+    };
+    if cache.capacity == 0 {
+        out.push(Finding {
+            severity: Severity::Info,
+            code: "cache",
+            message: "cache configured with capacity 0: the cache is disabled".into(),
+        });
+        return;
+    }
+    match &spec.workload.zipf {
+        Some(z) => {
+            let working_set = z.distinct.min(spec.workload.n);
+            if cache.capacity < working_set {
+                out.push(Finding {
+                    severity: Severity::Warning,
+                    code: "cache",
+                    message: format!(
+                        "cache capacity {} is below the Zipf working set of {} distinct \
+                         queries: steady-state evictions churn the partition",
+                        cache.capacity, working_set,
+                    ),
+                });
+            }
+        }
+        None => {
+            out.push(Finding {
+                severity: Severity::Info,
+                code: "cache",
+                message: "cache on, but the workload has no zipf repetition: hit rate ~0".into(),
+            });
+        }
+    }
+}
+
+fn shard_findings(spec: &ScenarioSpec, load: &LoadEstimate, out: &mut Vec<Finding>) {
+    let shards = spec.topology.shards;
+    if shards <= 1 {
+        return;
+    }
+    // Expected dollars for a single cloud call, from the probe.
+    let per_call = if load.mean_subtasks > 0.0 {
+        load.cloud_dollars / load.mean_subtasks
+    } else {
+        0.0
+    };
+    if per_call <= 0.0 {
+        return;
+    }
+    let s = shards as f64;
+    for t in &spec.topology.tenants {
+        let Some(cap) = t.k_cap else { continue };
+        if cap / s < per_call && cap >= per_call {
+            out.push(Finding {
+                severity: Severity::Warning,
+                code: "shard_split",
+                message: format!(
+                    "tenant '{}' cap ${:.5} splits to ${:.5} per shard across {} shards — \
+                     below one expected cloud call (${:.5}); every shard force-edges even \
+                     though the whole-fleet cap would not",
+                    t.name,
+                    cap,
+                    cap / s,
+                    shards,
+                    per_call,
+                ),
+            });
+        }
+    }
+    if let Some(cap) = spec.topology.global_k_cap {
+        if cap / s < per_call && cap >= per_call {
+            out.push(Finding {
+                severity: Severity::Warning,
+                code: "shard_split",
+                message: format!(
+                    "global cap ${:.5} splits to ${:.5} per shard across {} shards — below \
+                     one expected cloud call (${:.5}); sharding alone disables offloading",
+                    cap,
+                    cap / s,
+                    shards,
+                    per_call,
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+
+    fn overloaded() -> ScenarioSpec {
+        let mut spec = presets::golden_fleet();
+        spec.name = "overloaded".into();
+        spec.topology.edge_workers = 1;
+        spec.topology.cloud_workers = 1;
+        spec.topology.admission_limit = 0;
+        spec.workload.n = 40;
+        spec.workload.arrival = ArrivalProcess::Poisson { rate: 4.0 };
+        spec
+    }
+
+    #[test]
+    fn overload_with_unbounded_admission_is_an_error() {
+        let report = check_spec(&overloaded());
+        assert!(report.load.rho_split >= 1.0, "{:?}", report.load);
+        assert!(!report.passed(), "{}", report.render());
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.severity == Severity::Error && f.code == "stability"));
+    }
+
+    #[test]
+    fn bounded_admission_downgrades_overload_to_warning() {
+        let mut spec = overloaded();
+        spec.topology.admission_limit = 8;
+        let report = check_spec(&spec);
+        assert!(report.passed(), "{}", report.render());
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.severity == Severity::Warning && f.code == "stability"));
+    }
+
+    #[test]
+    fn invalid_spec_reports_instead_of_panicking() {
+        let mut spec = presets::golden_fleet();
+        spec.workload.n = 0;
+        let report = check_spec(&spec);
+        assert!(!report.passed());
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].code, "validate");
+    }
+
+    #[test]
+    fn tiny_tenant_cap_flags_force_edge() {
+        let mut spec = presets::golden_fleet();
+        spec.topology.tenants[0].k_cap = Some(1e-9);
+        let report = check_spec(&spec);
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.code == "budget" && f.severity == Severity::Warning));
+    }
+
+    #[test]
+    fn report_render_is_rerun_identical() {
+        let spec = overloaded();
+        assert_eq!(check_spec(&spec).render(), check_spec(&spec).render());
+    }
+}

@@ -8,6 +8,7 @@
 //!   rows the paper reports.
 
 use crate::util::stats::Summary;
+// lint:allow(wall_clock): the bench harness exists to measure real time
 use std::time::Instant;
 
 /// Result of timing a closure.
@@ -56,6 +57,7 @@ pub fn human_time(secs: f64) -> String {
 /// warmup. Returns per-iteration timing statistics over measured batches.
 pub fn time_fn<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Timing {
     // Warmup + calibration: run until 10% of budget or 3 iterations.
+    // lint:allow(wall_clock): timing closures is the harness's purpose
     let cal_start = Instant::now();
     let mut cal_iters = 0usize;
     while cal_start.elapsed().as_secs_f64() < budget_s * 0.1 || cal_iters < 3 {
@@ -72,8 +74,10 @@ pub fn time_fn<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Timing {
     let batch = ((1e-3 / per_iter).ceil() as usize).clamp(1, 1_000_000);
     let mut samples = Vec::new();
     let mut iters = 0usize;
+    // lint:allow(wall_clock): timing closures is the harness's purpose
     let meas_start = Instant::now();
     while meas_start.elapsed().as_secs_f64() < budget_s * 0.9 {
+        // lint:allow(wall_clock): per-batch sample timer
         let t0 = Instant::now();
         for _ in 0..batch {
             f();
@@ -106,12 +110,14 @@ impl Bench {
 
     pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Timing {
         let t = time_fn(name, self.budget_s, f);
+        // lint:allow(print_in_lib): bench binaries report incrementally
         println!("  {}", t.report());
         self.timings.push(t);
         self.timings.last().unwrap()
     }
 
     pub fn header(&self) {
+        // lint:allow(print_in_lib): bench binaries report incrementally
         println!("\n== bench group: {} (budget {:.1}s/case) ==", self.group, self.budget_s);
     }
 }
@@ -171,6 +177,7 @@ impl Table {
     }
 
     pub fn print(&self) {
+        // lint:allow(print_in_lib): bench binaries print their tables
         print!("{}", self.render());
     }
 }

@@ -82,6 +82,7 @@ impl ExpContext {
         match MirrorPredictor::from_meta_file(&self.artifacts_dir.join("router_meta.json")) {
             Ok(p) => Arc::new(p),
             Err(e) => {
+                // lint:allow(print_in_lib): loud fallback warning by design
                 eprintln!(
                     "[eval] WARNING: trained router unavailable ({e}); using synthetic predictor"
                 );

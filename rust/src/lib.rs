@@ -37,6 +37,7 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod bench;
 pub mod testing;
 pub mod util;

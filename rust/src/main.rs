@@ -7,7 +7,10 @@
 //!   serve    concurrent serving loop, report throughput/latency
 //!   profile  regenerate the App. C profiling dataset (JSONL)
 //!   exp      run a paper experiment (table1..table8, fig3, fig5, calibrate)
-//!   check    verify artifacts + PJRT round trip + mirror parity
+//!   check    verify artifacts + PJRT round trip + mirror parity;
+//!            `--scenario <file.json>` statically checks a spec's
+//!            feasibility instead (queueing stability, budgets, cache)
+//!   lint     dependency-free determinism lint over rust/src
 //!   fuzz     random-but-valid scenario specs through the invariant harness
 //!
 //! Unknown options and malformed values print the usage block and exit
@@ -33,13 +36,14 @@ use hybridflow::workload::{generate_queries, profiling, Benchmark};
 use std::path::PathBuf;
 use std::sync::Arc;
 
-const COMMANDS: [(&str, &str); 7] = [
+const COMMANDS: [(&str, &str); 8] = [
     ("plan", "decompose a synthetic query and print plan + repaired DAG"),
     ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario; --shards N overrides its shard count, --trace-out/--metrics-out/--metrics-interval export observability artifacts, --threads N caps the shard fan-out)"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
     ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy|fleet_cache>"),
-    ("check", "verify artifacts, PJRT round trip, and mirror parity"),
+    ("check", "verify artifacts, PJRT round trip, and mirror parity; or --scenario <file.json> for a static feasibility check of a spec (no kernel execution)"),
+    ("lint", "determinism lint over the rust source tree: [--json] [--src <dir>]"),
     ("fuzz", "run random-but-valid scenario specs through the invariant harness: --cases <n> --seed <s> [--adversarial]"),
 ];
 
@@ -56,7 +60,8 @@ fn allowed_options(cmd: &str) -> Vec<&'static str> {
         "plan" => return vec!["artifacts", "benchmark", "seed"],
         "profile" => return vec!["n", "seed", "out"],
         "fuzz" => return vec!["cases", "seed", "adversarial"],
-        "check" => return vec!["artifacts"],
+        "check" => return vec!["artifacts", "scenario"],
+        "lint" => return vec!["json", "src"],
         "exp" => return vec!["artifacts", "id", "quick", "scale", "seeds", "out", "json"],
         "run" => vec![
             "n", "scenario", "json", "shards", "threads", "trace-out", "metrics-out",
@@ -103,7 +108,15 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
     // Artifact options take a file path; a bare `--trace-out` means the
     // path was forgotten (or swallowed by a following `--option`).
     for key in ["trace-out", "metrics-out", "json", "out"] {
+        // `lint --json` is an output *mode* (JSON to stdout), not a path.
+        if cmd == "lint" && key == "json" {
+            continue;
+        }
         anyhow::ensure!(!args.flag(key), "--{key} expects a file path");
+    }
+    // `lint --src` names the tree to scan; bare means the path was lost.
+    if cmd == "lint" {
+        anyhow::ensure!(!args.flag("src"), "--src expects a directory path");
     }
     // `--shards` overrides the spec's `topology.shards`, so it only makes
     // sense next to a scenario file, and zero shards is meaningless
@@ -158,7 +171,7 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
 fn main() {
     let args = Args::from_env();
     let code = match args.subcommand.as_deref() {
-        Some(cmd @ ("plan" | "run" | "serve" | "profile" | "exp" | "check" | "fuzz")) => {
+        Some(cmd @ ("plan" | "run" | "serve" | "profile" | "exp" | "check" | "lint" | "fuzz")) => {
             // Argument problems (unknown options, malformed values) print
             // the usage block; runtime failures inside a command print
             // just the error, so the cause is not buried under help text.
@@ -176,6 +189,7 @@ fn main() {
                         "profile" => cmd_profile(&args),
                         "exp" => cmd_exp(&args),
                         "check" => cmd_check(&args),
+                        "lint" => cmd_lint(&args),
                         "fuzz" => cmd_fuzz(&args),
                         _ => unreachable!("dispatch covers every command"),
                     };
@@ -521,6 +535,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             let mut rng = hybridflow::util::rng::Rng::new(
                 seed ^ q.id.wrapping_mul(0x9E3779B97f4A7C15),
             );
+            // lint:allow(wall_clock): CLI telemetry reports real elapsed time
             let t0 = std::time::Instant::now();
             let (exec, outcome) = pipeline.run_query_traced(q, &mut rng);
             telemetry.record_plan_outcome(outcome);
@@ -568,6 +583,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     if let Some(n) = args.get_usize("seeds")? {
         ctx.seeds = (0..n as u64).map(|i| 11 + 11 * i).collect();
     }
+    // lint:allow(wall_clock): experiment runtimes are reported in real time
     let t0 = std::time::Instant::now();
     let out = run_experiment(&id, &ctx)?;
     println!("{out}");
@@ -596,6 +612,11 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_check(args: &Args) -> anyhow::Result<()> {
     use hybridflow::config::simparams::FEAT_DIM;
+    // `check --scenario <file>` is the static feasibility path: analyse
+    // the spec against the cost model, no artifacts and no kernel run.
+    if let Some(path) = args.get("scenario") {
+        return cmd_check_scenario(path);
+    }
     let dir = artifacts_dir(args);
     println!("artifacts dir: {}", dir.display());
 
@@ -636,6 +657,61 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `check --scenario <file.json>`: static feasibility check of a
+/// scenario (or sweep) spec — queueing stability, budget caps vs
+/// expected spend, cache sizing, shard-split degeneracy — estimated
+/// from the profiler's cost model without executing the kernel
+/// ([`hybridflow::analysis::scenario`]). Sweep grids are checked cell
+/// by cell. Exits non-zero on any error-severity finding.
+fn cmd_check_scenario(path: &str) -> anyhow::Result<()> {
+    use hybridflow::analysis::scenario::check_spec;
+
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+    let parsed = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let mut errors = 0usize;
+    if SweepSpec::is_sweep_json(&parsed) {
+        let sweep = SweepSpec::from_json(&parsed)?;
+        let cells = sweep.cells()?;
+        println!("sweep '{}': {} cell(s)", sweep.name, cells.len());
+        for cell in &cells {
+            let label: Vec<String> = sweep
+                .axes
+                .iter()
+                .zip(&cell.values)
+                .map(|(a, v)| format!("{}={}", a.field.render(), v))
+                .collect();
+            println!("--- cell [{}] ---", label.join(", "));
+            let report = check_spec(&cell.spec);
+            print!("{}", report.render());
+            errors += report.errors();
+        }
+    } else {
+        let spec = ScenarioSpec::from_json(&parsed)?;
+        let report = check_spec(&spec);
+        print!("{}", report.render());
+        errors += report.errors();
+    }
+    anyhow::ensure!(errors == 0, "{errors} feasibility error(s) in {path}");
+    Ok(())
+}
+
+/// `lint [--json] [--src <dir>]`: dependency-free determinism lint over
+/// the rust source tree ([`hybridflow::analysis::lint`]). Diagnostics
+/// are sorted `(file, line, rule)` and byte-stable across reruns;
+/// nonzero exit on any finding.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let root = args.get_or("src", "rust/src");
+    let report = hybridflow::analysis::lint::lint_tree(std::path::Path::new(root))?;
+    if args.flag("json") {
+        print!("{}", report.json_text());
+    } else {
+        print!("{}", report.render());
+    }
+    anyhow::ensure!(report.clean(), "{} lint finding(s)", report.diagnostics.len());
+    Ok(())
+}
+
 /// `fuzz --cases N --seed S [--adversarial]`: generate N random-but-valid
 /// scenario specs and run each through the kernel under the invariant
 /// harness ([`hybridflow::testing::fuzz`]). Any violation prints the full
@@ -650,6 +726,7 @@ fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
         "fuzz: {cases} case(s) from base seed {base_seed} ({} generator)",
         if adversarial { "adversarial" } else { "valid-surface" },
     );
+    // lint:allow(wall_clock): fuzz progress lines report real elapsed time
     let t0 = std::time::Instant::now();
     for case in 0..cases {
         let spec = spec_for_case(base_seed, case, adversarial);
@@ -710,6 +787,24 @@ mod tests {
         // --cases is typed: a malformed count fails fast, not mid-fuzz.
         let a = parse("hybridflow fuzz --cases lots");
         assert!(validate_command_args("fuzz", &a).is_err());
+    }
+
+    #[test]
+    fn lint_and_check_scenario_options_validate() {
+        // `lint --json` is an output mode, not a file path.
+        let a = parse("hybridflow lint --json");
+        assert!(validate_command_args("lint", &a).is_ok());
+        let a = parse("hybridflow lint --src rust/tests/lint_fixtures/clean");
+        assert!(validate_command_args("lint", &a).is_ok());
+        // A bare `--src` forgot its directory path.
+        let a = parse("hybridflow lint --src");
+        assert!(validate_command_args("lint", &a).is_err());
+        // The lint has no scenario surface.
+        let a = parse("hybridflow lint --scenario s.json");
+        assert!(validate_command_args("lint", &a).is_err());
+        // `check --scenario` is the static feasibility path.
+        let a = parse("hybridflow check --scenario scenarios/fleet_sim.json");
+        assert!(validate_command_args("check", &a).is_ok());
     }
 
     #[test]

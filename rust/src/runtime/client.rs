@@ -90,6 +90,7 @@ mod stub_impl {
 mod pjrt_impl {
     use super::*;
     use crate::config::simparams::FEAT_DIM;
+    // lint:allow(hash_collection): PJRT executable table is keyed lookup only
     use std::collections::HashMap;
     use std::path::PathBuf;
 
@@ -97,6 +98,7 @@ mod pjrt_impl {
     pub struct PjrtEngine {
         client: xla::PjRtClient,
         /// batch size -> compiled router executable.
+        // lint:allow(hash_collection): keyed by batch size, never iterated
         routers: HashMap<usize, xla::PjRtLoadedExecutable>,
         edge_lm: Option<xla::PjRtLoadedExecutable>,
         /// Reused edge-LM input activations.
@@ -109,6 +111,7 @@ mod pjrt_impl {
         pub fn load(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
             let client = xla::PjRtClient::cpu()
                 .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+            // lint:allow(hash_collection): populated once, looked up by key
             let mut routers = HashMap::new();
             for b in ROUTER_BATCHES {
                 let path = artifacts_dir.join(format!("router_b{b}.hlo.txt"));

@@ -36,6 +36,7 @@ impl RouterService {
         let dir = artifacts_dir.to_path_buf();
         let handle = std::thread::Builder::new()
             .name("pjrt-router-service".into())
+            // lint:allow(thread_spawn): dedicated PJRT service thread, joined on Drop
             .spawn(move || {
                 let engine = match PjrtEngine::load(&dir) {
                     Ok(e) => {
@@ -115,6 +116,7 @@ impl UtilityPredictor for RouterService {
         match self.score(feats, c_used) {
             Ok(v) => v,
             Err(e) => {
+                // lint:allow(print_in_lib): serving-path degradation must be visible
                 eprintln!("[runtime] router scoring failed: {e}; defaulting to edge");
                 vec![0.0; feats.len()]
             }

@@ -862,7 +862,7 @@ mod tests {
         let exec = run(RoutePolicy::hybridflow(&sp), &ScheduleConfig::default(), 9);
         // Threshold trace exists and starts at tau0.
         assert_eq!(exec.events.len(), 5);
-        let first_tau = exec.events.iter().min_by(|a, b| a.start.partial_cmp(&b.start).unwrap()).unwrap().tau;
+        let first_tau = exec.events.iter().min_by(|a, b| a.start.total_cmp(&b.start)).unwrap().tau;
         assert!((first_tau - sp.tau0).abs() < 0.3);
     }
 

@@ -30,6 +30,7 @@ use crate::workload::trace::{ArrivalProcess, ZipfMix};
 use crate::workload::{Benchmark, Query};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+// lint:allow(wall_clock): the wall-clock serving loop measures real throughput
 use std::time::Instant;
 
 /// Serving statistics for one run.
@@ -116,6 +117,7 @@ pub fn serve(
     if let Some(c) = pipeline.config.schedule.cache.as_deref() {
         c.reset();
     }
+    // lint:allow(wall_clock): coordinator throughput is a real-time metric
     let t0 = Instant::now();
 
     let results: Vec<(QueryOutcome, f64)> = pool.map(queries, {
@@ -126,6 +128,7 @@ pub fn serve(
             // Seed by query id (not arrival order) so results are exactly
             // reproducible regardless of thread interleaving.
             let mut rng = Rng::new(seed ^ q.id.wrapping_mul(0x9E3779B97f4A7C15));
+            // lint:allow(wall_clock): per-query wall latency is the point here
             let start = Instant::now();
             let outcome = pipeline.run_query(&q, &mut rng);
             (outcome, start.elapsed().as_secs_f64())

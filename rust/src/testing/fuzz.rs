@@ -266,6 +266,26 @@ pub fn run_case(spec: &ScenarioSpec) -> Vec<String> {
         }
     }
 
+    // Static-analysis coherence: the feasibility checker must never
+    // panic on any generated spec, must render byte-identically across
+    // reruns, and must not pass a spec that `build()` goes on to reject
+    // (checked against the build outcome below).
+    let checker_passed = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let r = crate::analysis::scenario::check_spec(spec);
+        (r.passed(), r.render())
+    })) {
+        Err(e) => {
+            v.push(format!("feasibility checker panicked: {}", panic_message(&e)));
+            false
+        }
+        Ok((passed, rendered)) => {
+            if crate::analysis::scenario::check_spec(spec).render() != rendered {
+                v.push("feasibility checker rerun is not byte-identical".into());
+            }
+            passed
+        }
+    };
+
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
         || -> anyhow::Result<(Session, Report, Report)> {
             let session = spec.build(Arc::new(MirrorPredictor::synthetic_for_tests()))?;
@@ -276,7 +296,12 @@ pub fn run_case(spec: &ScenarioSpec) -> Vec<String> {
     ));
     match outcome {
         Err(e) => v.push(format!("panicked during build/run: {}", panic_message(&e))),
-        Ok(Err(e)) => v.push(format!("valid spec failed to build: {e}")),
+        Ok(Err(e)) => {
+            if checker_passed {
+                v.push(format!("feasibility checker passed a spec that build() rejects: {e}"));
+            }
+            v.push(format!("valid spec failed to build: {e}"));
+        }
         Ok(Ok((session, a, b))) => {
             check_report(spec, &session, &a, &mut v);
             if a.trace_text() != b.trace_text() {

@@ -1,0 +1,166 @@
+//! Acceptance pins for the static-analysis suite (PR 9).
+//!
+//! * The committed tree is lint-clean (zero unexplained determinism
+//!   hazards), and the `--json` report is byte-identical across reruns.
+//! * Every seeded-bad fixture under `rust/tests/lint_fixtures/bad/`
+//!   flags its namesake rule; the allow-annotated twins and the
+//!   string/comment traps under `clean/` stay silent.
+//! * Every shipped `scenarios/*.json` passes the feasibility checker
+//!   (sweeps cell by cell); the overloaded corpus spec draws a
+//!   stability error.
+//! * The checker never panics on fuzz-generated specs, and a spec that
+//!   checks without errors always `build()`s.
+
+use hybridflow::analysis::lint::{lint_source, lint_tree};
+use hybridflow::analysis::scenario::{check_spec, Severity};
+use hybridflow::router::MirrorPredictor;
+use hybridflow::scenario::{ScenarioSpec, SweepSpec};
+use hybridflow::testing::fuzz::spec_for_case;
+use hybridflow::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Recursive sorted `.rs` listing (mirrors the linter's traversal).
+fn rs_files_under(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for e in std::fs::read_dir(&d).expect("fixture dir") {
+            let p = e.expect("fixture entry").path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+// -------------------------------------------------------------------------
+// Lint: committed tree + fixture corpus.
+// -------------------------------------------------------------------------
+
+#[test]
+fn committed_tree_is_lint_clean() {
+    let report = lint_tree(&repo_root().join("rust/src")).expect("lint run");
+    assert!(report.clean(), "determinism lint findings:\n{}", report.render());
+    assert!(report.files > 40, "tree scan looks truncated: {} files", report.files);
+}
+
+#[test]
+fn every_seeded_bad_fixture_flags_its_namesake_rule() {
+    let dir = repo_root().join("rust/tests/lint_fixtures/bad");
+    let files = rs_files_under(&dir);
+    assert_eq!(files.len(), 7, "one seeded-bad fixture per rule: {files:?}");
+    for path in files {
+        let stem = path.file_stem().unwrap().to_string_lossy().to_string();
+        let src = std::fs::read_to_string(&path).unwrap();
+        let name = path.to_string_lossy().replace('\\', "/");
+        let diags = lint_source(&name, &src);
+        assert!(
+            diags.iter().any(|d| d.rule == stem),
+            "{name}: expected a '{stem}' finding, got {diags:?}"
+        );
+    }
+}
+
+#[test]
+fn clean_fixtures_stay_silent() {
+    let dir = repo_root().join("rust/tests/lint_fixtures/clean");
+    let report = lint_tree(&dir).expect("lint run");
+    assert!(report.clean(), "clean fixtures flagged:\n{}", report.render());
+    assert_eq!(report.files, 4, "fixture set drifted");
+}
+
+#[test]
+fn lint_json_report_is_byte_identical_across_reruns() {
+    let root = repo_root().join("rust/src");
+    let a = lint_tree(&root).expect("first run").json_text();
+    let b = lint_tree(&root).expect("second run").json_text();
+    assert_eq!(a, b, "lint --json must be byte-stable");
+    let parsed = Json::parse(&a).expect("lint --json parses");
+    assert!(parsed.get("files").is_some());
+    assert!(parsed.get("findings").is_some());
+}
+
+// -------------------------------------------------------------------------
+// Feasibility checker: shipped scenarios + corpus + fuzz coherence.
+// -------------------------------------------------------------------------
+
+#[test]
+fn every_shipped_scenario_passes_the_checker() {
+    let dir = repo_root().join("scenarios");
+    let mut paths: Vec<PathBuf> =
+        std::fs::read_dir(&dir).expect("scenarios dir").map(|e| e.unwrap().path()).collect();
+    paths.sort();
+    let mut checked = 0usize;
+    for path in paths {
+        if !path.extension().is_some_and(|x| x == "json") {
+            continue;
+        }
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        if SweepSpec::is_sweep_json(&j) {
+            let sweep = SweepSpec::from_json(&j).expect("sweep parses");
+            for cell in sweep.cells().expect("cells resolve") {
+                let report = check_spec(&cell.spec);
+                assert!(report.passed(), "{}:\n{}", path.display(), report.render());
+            }
+        } else {
+            let spec = ScenarioSpec::from_json(&j).expect("scenario parses");
+            let report = check_spec(&spec);
+            assert!(report.passed(), "{}:\n{}", path.display(), report.render());
+        }
+        checked += 1;
+    }
+    assert!(checked >= 5, "expected the shipped scenario set, saw {checked}");
+}
+
+#[test]
+fn overloaded_corpus_spec_draws_a_stability_error() {
+    let path = repo_root().join("rust/tests/corpus/check_overloaded_pool.json");
+    let spec = ScenarioSpec::parse(&std::fs::read_to_string(&path).unwrap()).expect("parses");
+    let report = check_spec(&spec);
+    assert!(report.load.rho_split >= 1.0, "not overloaded: {:?}", report.load);
+    assert!(
+        report
+            .findings
+            .iter()
+            .any(|f| f.severity == Severity::Error && f.code == "stability"),
+        "expected a stability error:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn checker_never_panics_and_passing_specs_build() {
+    let predictor = Arc::new(MirrorPredictor::synthetic_for_tests());
+    let mut passed = 0usize;
+    for adversarial in [false, true] {
+        for case in 0..128usize {
+            let spec = spec_for_case(0xC0FFEE, case, adversarial);
+            let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                check_spec(&spec)
+            }))
+            .unwrap_or_else(|_| panic!("check_spec panicked on case {case}\n{}", spec.render()));
+            // Byte-stable rendering on arbitrary specs.
+            assert_eq!(report.render(), check_spec(&spec).render(), "case {case}");
+            if report.passed() {
+                passed += 1;
+                let pred: Arc<dyn hybridflow::router::UtilityPredictor> = predictor.clone();
+                assert!(
+                    spec.build(pred).is_ok(),
+                    "case {case}: checker passed but build() rejected\n{}",
+                    spec.render()
+                );
+            }
+        }
+    }
+    assert!(passed > 0, "the generator never produced a checker-clean spec");
+}

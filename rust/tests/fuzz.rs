@@ -4,9 +4,12 @@
 //! the fuzz harness ever flushed out is checked in as a minimized spec.
 //! `reject_*.json` files must fail `ScenarioSpec::parse` (validation
 //! regressions); `run_*.json` files must parse and hold every kernel
-//! invariant (crash/behavior regressions). Then a bounded randomized
-//! sweep runs fresh specs — case count via `HYBRIDFLOW_FUZZ_CASES`
-//! (default 64; CI keeps it small, `hybridflow fuzz` goes deep).
+//! invariant (crash/behavior regressions); `check_*.json` files must
+//! parse but draw an error from the static feasibility checker
+//! (`hybridflow check --scenario` regressions). Then a bounded
+//! randomized sweep runs fresh specs — case count via
+//! `HYBRIDFLOW_FUZZ_CASES` (default 64; CI keeps it small,
+//! `hybridflow fuzz` goes deep).
 //!
 //! A failing case prints the full spec JSON plus a one-line repro:
 //! `hybridflow fuzz --cases 1 --seed <base+case> [--adversarial]`.
@@ -53,8 +56,19 @@ fn corpus_replays_clean() {
                 "{name}: corpus spec violated invariants:\n  - {}",
                 violations.join("\n  - ")
             );
+        } else if name.starts_with("check_") {
+            let spec = ScenarioSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("{name}: corpus spec must parse: {e}"));
+            let report = hybridflow::analysis::scenario::check_spec(&spec);
+            assert!(
+                !report.passed(),
+                "{name}: spec must draw a feasibility error:\n{}",
+                report.render()
+            );
         } else {
-            panic!("corpus file '{name}' must be named reject_*.json or run_*.json");
+            panic!(
+                "corpus file '{name}' must be named reject_*.json, run_*.json, or check_*.json"
+            );
         }
     }
 }

@@ -1,0 +1,12 @@
+// Seeded-bad fixture: `hybridflow lint` must flag the hash_collection
+// rule here. Not compiled into any cargo target.
+
+use std::collections::HashMap;
+
+pub fn tally(xs: &[u64]) -> HashMap<u64, usize> {
+    let mut m = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,11 @@
+// Seeded-bad fixture: `hybridflow lint` must flag the partial_cmp_unwrap
+// rule here (rust/tests/analysis.rs + scripts/verify.sh assert nonzero
+// exit). Not compiled into any cargo target.
+
+pub fn pick_max(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn pick_named(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+}

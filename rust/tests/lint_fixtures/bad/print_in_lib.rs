@@ -1,0 +1,8 @@
+// Seeded-bad fixture: `hybridflow lint` must flag the print_in_lib rule
+// here (the fixture path is not main.rs and not under report/). Not
+// compiled into any cargo target.
+
+pub fn report(x: f64) {
+    println!("value = {x}");
+    eprintln!("warn = {x}");
+}

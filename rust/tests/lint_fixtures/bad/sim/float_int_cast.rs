@@ -1,0 +1,7 @@
+// Seeded-bad fixture: `hybridflow lint` must flag the float_int_cast
+// rule here — the fixture sits under a `sim/` path segment, so the
+// kernel-path scoping applies. Not compiled into any cargo target.
+
+pub fn bucket(x: f64, n: usize) -> usize {
+    (x * n as f64).floor() as usize
+}

@@ -1,0 +1,7 @@
+// Seeded-bad fixture: `hybridflow lint` must flag the thread_spawn rule
+// here. Not compiled into any cargo target.
+
+pub fn fan_out() -> i32 {
+    let h = std::thread::spawn(|| 1 + 1);
+    h.join().unwrap_or(0)
+}

@@ -1,0 +1,10 @@
+// Seeded-bad fixture: `hybridflow lint` must flag the
+// unordered_float_sum rule here (a `.sum::<f64>()` with a hash
+// collection in the same statement; the HashMap mentions also draw
+// hash_collection findings). Not compiled into any cargo target.
+
+use std::collections::HashMap;
+
+pub fn total(xs: &[(u64, f64)]) -> f64 {
+    xs.iter().copied().collect::<HashMap<u64, f64>>().values().sum::<f64>()
+}

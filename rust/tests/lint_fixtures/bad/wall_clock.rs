@@ -1,0 +1,11 @@
+// Seeded-bad fixture: `hybridflow lint` must flag the wall_clock rule
+// here. Not compiled into any cargo target.
+
+pub fn stamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

@@ -1,0 +1,32 @@
+// Allow-annotated twins of the seeded-bad fixtures: every hazard below
+// carries a justified `lint:allow`, so `hybridflow lint` must stay
+// silent on this file. Not compiled into any cargo target.
+
+// lint:allow(hash_collection): fixture exercises a justified suppression
+use std::collections::HashMap;
+
+pub fn pick_max(v: &mut [f64]) {
+    // lint:allow(partial_cmp_unwrap): fixture exercises a justified suppression
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn stamp() -> f64 {
+    // lint:allow(wall_clock): fixture exercises a justified suppression
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn fan_out() -> i32 {
+    // lint:allow(thread_spawn): fixture exercises a justified suppression
+    let h = std::thread::spawn(|| 1 + 1);
+    h.join().unwrap_or(0)
+}
+
+pub fn report(x: f64) {
+    println!("value = {x}"); // lint:allow(print_in_lib): trailing-form suppression
+}
+
+pub fn total(xs: &[(u64, f64)]) -> f64 {
+    // lint:allow(unordered_float_sum): preceding-line suppression
+    xs.iter().copied().collect::<HashMap<u64, f64>>().values().sum::<f64>() // lint:allow(hash_collection): trailing-form suppression
+}

@@ -1,0 +1,21 @@
+// Kernel-path cast traps (the fixture sits under `sim/`): integer-only
+// `as` casts must stay silent even with floats elsewhere in the
+// expression, and a genuinely float cast is suppressed with a justified
+// allow. Not compiled into any cargo target.
+
+pub fn widen(workers: usize) -> u64 {
+    workers as u64
+}
+
+pub fn seeded(seed: u64, index: usize) -> u64 {
+    seed ^ (index as u64).wrapping_mul(0x9E3779B97f4A7C15)
+}
+
+pub fn enumerated(n: usize) -> Vec<(f64, u32)> {
+    (0..n as u32).map(|w| (0.0, w)).collect()
+}
+
+pub fn bucket(x: f64, n: usize) -> usize {
+    // lint:allow(float_int_cast): fixture exercises a justified suppression
+    (x * n as f64).floor() as usize
+}

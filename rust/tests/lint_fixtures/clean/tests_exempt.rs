@@ -1,0 +1,22 @@
+// `#[cfg(test)]`-gated hazards are exempt (tests may use wall clocks,
+// hash maps, and prints), so `hybridflow lint` must stay silent on this
+// file. Not compiled into any cargo target.
+
+pub fn lib_code() -> u32 {
+    7
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn hazards_are_fine_in_tests() {
+        let mut m = HashMap::new();
+        m.insert(1u32, 2u32);
+        let t0 = std::time::Instant::now();
+        let mut v = vec![2.0, 1.0];
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!("elapsed {:?} {:?} {:?}", t0.elapsed(), m, v);
+    }
+}

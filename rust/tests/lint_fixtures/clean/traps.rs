@@ -1,0 +1,21 @@
+// String/comment traps: every hazard token below lives inside a string
+// literal or a comment, so the lexer must hide it from the rules and
+// `hybridflow lint` must stay silent. Not compiled into any target.
+
+// A comment mentioning HashMap, std::time::Instant::now(), println!,
+// thread::spawn, and a.partial_cmp(b).unwrap() changes nothing.
+
+/* Block comments too: SystemTime::now() and .sum::<f64>() over a
+   HashSet, /* nested: Instant::now() */ still nothing. */
+
+pub const DOC: &str = "call partial_cmp(x).unwrap() or println! on a HashMap";
+pub const RAW: &str = r#"std::time::Instant::now() and thread::spawn(|| {})"#;
+pub const HASHY: &str = r##"raw with hashes: HashSet::new() and eprintln!("x")"##;
+pub const TRICKY: &str = "escaped \" then SystemTime::now() and a \\ backslash";
+pub const MULTI: &str = "line one mentions Instant::now()
+line two mentions HashMap::new()";
+
+pub fn lifetimes<'a>(x: &'a str) -> (&'a str, char) {
+    let c = 'x';
+    (x, c)
+}

@@ -95,19 +95,50 @@ fi
 rm -f /tmp/hybridflow_obs_t1.json /tmp/hybridflow_obs_t1.jsonl \
     /tmp/hybridflow_obs_t4.json /tmp/hybridflow_obs_t4.jsonl
 
+echo "== determinism lint (enforced) =="
+# The dependency-free source lint (analysis::lint): the committed tree
+# must be clean, the --json report must be byte-identical across reruns,
+# every seeded-bad fixture must draw a nonzero exit, and the
+# allow-annotated/trap fixtures must pass.
+cargo run --release -- lint
+cargo run --release -- lint --json > /tmp/hybridflow_lint_a.json
+cargo run --release -- lint --json > /tmp/hybridflow_lint_b.json
+diff /tmp/hybridflow_lint_a.json /tmp/hybridflow_lint_b.json
+rm -f /tmp/hybridflow_lint_a.json /tmp/hybridflow_lint_b.json
+for bad in rust/tests/lint_fixtures/bad rust/tests/lint_fixtures/bad/sim; do
+    if cargo run --release --quiet -- lint --src "$bad" >/dev/null 2>&1; then
+        echo "error: lint passed the seeded-bad fixture tree $bad"
+        exit 1
+    fi
+done
+cargo run --release -- lint --src rust/tests/lint_fixtures/clean
+
+echo "== scenario feasibility check (enforced) =="
+# The static checker (analysis::scenario) over every shipped scenario
+# (sweeps cell by cell); the overloaded corpus spec must draw a
+# stability error (nonzero exit).
+for s in scenarios/*.json; do
+    cargo run --release -- check --scenario "$s"
+done
+if cargo run --release --quiet -- check \
+    --scenario rust/tests/corpus/check_overloaded_pool.json >/dev/null 2>&1; then
+    echo "error: feasibility checker passed the overloaded corpus spec"
+    exit 1
+fi
+
 echo "== kernel perf bench (smoke, BENCH_SCALE=0.05) =="
 # Emits BENCH_kernel.json (worker-pool + fleet-size scaling, indexed vs
 # the retained linear-scan baseline) and self-validates that the artifact
 # parses with util::json — a malformed emission exits non-zero.
 BENCH_SCALE=0.05 cargo bench --bench kernel
 
-echo "== cargo clippy --no-default-features (advisory) =="
-# Lints are reported but do not fail verification (the seed predates
-# clippy enforcement).
+echo "== cargo clippy --no-default-features (enforced) =="
+# Enforced as of PR 9 against the pinned deny list in Cargo.toml's
+# [lints.clippy] table (dbg_macro / todo / unimplemented /
+# disallowed_types, the latter configured in clippy.toml to ban hash
+# collections in default-feature code).
 if cargo clippy --version >/dev/null 2>&1; then
-    if ! cargo clippy --no-default-features; then
-        echo "WARNING: cargo clippy reported issues (advisory only)"
-    fi
+    cargo clippy --no-default-features
 else
     echo "clippy unavailable; skipping lint check"
 fi
