@@ -20,6 +20,11 @@
 //!   (spans + metrics) off vs on, pinning the cost of full
 //!   instrumentation (observe-off takes the exact uninstrumented code
 //!   path, so its cell doubles as the PR 7 baseline).
+//! * `fault_overhead` — the identical fleet with the fault-injection +
+//!   resilience layer off vs on (preset-shaped failure probabilities,
+//!   stragglers, default retry policy), pinning the cost of per-attempt
+//!   fault draws and retry bookkeeping (faults-off takes the exact
+//!   pre-fault code path, so its cell doubles as the pre-fault baseline).
 //! * `shard_scaling` — the same 100k-query fleet partitioned across 1, 2,
 //!   4, and 8 kernel shards (`run_fleet_sharded`, one OS thread per
 //!   shard), reporting events/sec and queries/sec per shard count plus
@@ -34,6 +39,7 @@
 
 use hybridflow::budget::TenantPool;
 use hybridflow::config::simparams::SimParams;
+use hybridflow::fault::{FaultConfig, ResilienceConfig};
 use hybridflow::models::SimExecutor;
 use hybridflow::obs::ObserveConfig;
 use hybridflow::pipeline::{HybridFlowPipeline, PipelineConfig};
@@ -297,6 +303,42 @@ fn main() {
         ("off_vs_on_events_ratio", Json::Num(obs_ratio)),
     ])];
 
+    println!("-- fault-layer overhead (64-worker pools) --");
+    let n_fault = ((5000.0 * scale).round() as usize).max(50);
+    let fault_off = run_kernel(64, n_fault, 17, false);
+    let fault_on = run_kernel_cfg(
+        64,
+        n_fault,
+        17,
+        false,
+        FleetConfig {
+            record_trace: false,
+            faults: Some(FaultConfig {
+                edge_fail_p: 0.02,
+                cloud_fail_p: 0.05,
+                straggler_p: 0.02,
+                straggler_mult: 4.0,
+                seed: 7,
+                outages: vec![],
+            }),
+            resilience: Some(ResilienceConfig::default()),
+            ..Default::default()
+        },
+    );
+    // Retries add events, so events/sec (not wall time) is the honest
+    // per-event cost comparison against the faults-off baseline.
+    let fault_ratio = fault_off.events_per_s / fault_on.events_per_s.max(1e-9);
+    println!(
+        "faults  n={n_fault:<6} off {:>10.0} ev/s   on {:>10.0} ev/s   off/on {:.2}x",
+        fault_off.events_per_s, fault_on.events_per_s, fault_ratio,
+    );
+    let fault_overhead = vec![Json::obj(vec![
+        ("queries", Json::Num(n_fault as f64)),
+        ("off", fault_off.to_json(n_fault)),
+        ("on", fault_on.to_json(n_fault)),
+        ("off_vs_on_events_ratio", Json::Num(fault_ratio)),
+    ])];
+
     println!("-- shard scaling (100k-query fleet, 64-worker pools per shard) --");
     let n_shard_cell = ((100_000.0 * scale).round() as usize).max(1_000);
     let mut shard_ev: Vec<(usize, f64)> = Vec::new();
@@ -347,6 +389,7 @@ fn main() {
         ("worker_sweep", Json::Arr(worker_sweep)),
         ("fleet_sweep", Json::Arr(fleet_sweep)),
         ("observe_overhead", Json::Arr(observe_overhead)),
+        ("fault_overhead", Json::Arr(fault_overhead)),
         ("shard_scaling", Json::Arr(shard_scaling)),
         ("shard_scaling_4_vs_1", Json::Num(shard4_vs_1)),
         ("indexed_flatness_1024_vs_4", Json::Num(flatness)),
@@ -374,9 +417,14 @@ fn main() {
             std::process::exit(1);
         }
     };
-    for key in
-        ["pool_microbench", "worker_sweep", "fleet_sweep", "observe_overhead", "shard_scaling"]
-    {
+    for key in [
+        "pool_microbench",
+        "worker_sweep",
+        "fleet_sweep",
+        "observe_overhead",
+        "fault_overhead",
+        "shard_scaling",
+    ] {
         if parsed.get(key).and_then(Json::as_arr).map_or(true, <[Json]>::is_empty) {
             eprintln!("error: {out_path} is missing section '{key}'");
             std::process::exit(1);

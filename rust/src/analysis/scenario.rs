@@ -10,9 +10,10 @@
 //! errors is guaranteed to `build()` (pinned by the fuzz harness).
 
 use crate::engine::Backend;
+use crate::fault::FaultModel;
 use crate::models::SimExecutor;
 use crate::planner::{synthetic::SyntheticPlanner, Planner};
-use crate::scenario::ScenarioSpec;
+use crate::scenario::{PolicySpec, ScenarioSpec};
 use crate::util::rng::Rng;
 use crate::workload::trace::ArrivalProcess;
 use crate::workload::{generate_queries, sample_latents};
@@ -42,7 +43,8 @@ impl Severity {
 }
 
 /// One checker finding. `code` groups findings by diagnostic family
-/// (`validate`, `stability`, `budget`, `cache`, `shard_split`, `load`).
+/// (`validate`, `stability`, `budget`, `cache`, `shard_split`, `load`,
+/// `fault_outage_total`, `fault_load`, `fault_timeout`).
 #[derive(Debug, Clone)]
 pub struct Finding {
     pub severity: Severity,
@@ -140,6 +142,7 @@ pub fn check_spec(spec: &ScenarioSpec) -> CheckReport {
     budget_findings(spec, &report.load, &mut report.findings);
     cache_findings(spec, &mut report.findings);
     shard_findings(spec, &report.load, &mut report.findings);
+    fault_findings(spec, &report.load, &mut report.findings);
     report
 }
 
@@ -434,9 +437,124 @@ fn shard_findings(spec: &ScenarioSpec, load: &LoadEstimate, out: &mut Vec<Findin
     }
 }
 
+/// Fault-layer feasibility: a scheduled outage that blankets the whole
+/// arrival horizon on a side some policy pins traffic to is an error
+/// (every regular attempt on that traffic is rejected; the run completes
+/// only through degraded completions). Retry/straggler inflation that
+/// pushes the effective offered load past 1, or a timeout below the
+/// profiled mean per-call service time, are warnings — the run still
+/// terminates (retries are bounded), but mostly through the resilience
+/// machinery rather than clean completions.
+fn fault_findings(spec: &ScenarioSpec, load: &LoadEstimate, out: &mut Vec<Finding>) {
+    let Some(model) =
+        FaultModel::from_parts(spec.engine.faults.clone(), spec.engine.resilience.clone())
+    else {
+        return;
+    };
+    let f = &model.faults;
+    let r = &model.resilience;
+
+    // --- Total outage on a pinned side --------------------------------
+    // Horizon estimate: the last expected arrival. A single window with
+    // `start <= 0 <= horizon <= end` rejects every first-attempt dispatch
+    // of the run on its side (later retries land inside it too).
+    let horizon = if load.lambda.is_finite() && load.lambda > 0.0 {
+        spec.workload.n as f64 / load.lambda
+    } else {
+        0.0
+    };
+    // Sides some traffic is pinned to: the engine default applies to any
+    // tenant without an override; overrides pin their own tenant.
+    let mut pinned = [false; 2]; // [edge, cloud]
+    let mut note = |p: &PolicySpec| match p {
+        PolicySpec::AllEdge => pinned[0] = true,
+        PolicySpec::AllCloud => pinned[1] = true,
+        _ => {}
+    };
+    if spec.topology.tenants.iter().any(|t| t.policy.is_none()) {
+        note(&spec.engine.policy);
+    }
+    for t in &spec.topology.tenants {
+        if let Some(p) = &t.policy {
+            note(p);
+        }
+    }
+    for (idx, cloud) in [(0usize, false), (1usize, true)] {
+        if !pinned[idx] {
+            continue;
+        }
+        let total = f
+            .outages
+            .iter()
+            .find(|w| w.cloud == cloud && w.start <= 0.0 && w.end >= horizon && w.end > w.start);
+        if let Some(w) = total {
+            out.push(Finding {
+                severity: Severity::Error,
+                code: "fault_outage_total",
+                message: format!(
+                    "outage [{:.1}, {:.1}) on the {} side blankets the whole ~{:.1}s arrival \
+                     horizon while a policy pins traffic there: every regular attempt is \
+                     rejected and the run completes only through degraded completions",
+                    w.start,
+                    w.end,
+                    if cloud { "cloud" } else { "edge" },
+                    horizon,
+                ),
+            });
+        }
+    }
+
+    // --- Retry + straggler load inflation -----------------------------
+    // Expected attempts per call under the worst per-side failure
+    // probability (geometric, truncated at the attempt budget), times the
+    // expected straggler service multiplier, scales the offered load.
+    let p_fail = f.edge_fail_p.max(f.cloud_fail_p);
+    let attempts = (1.0 / (1.0 - p_fail).max(1e-9)).min(f64::from(model.max_attempts()));
+    let service_mult = 1.0 + f.straggler_p * (f.straggler_mult - 1.0);
+    let rho_eff = load.rho_split * attempts * service_mult;
+    if rho_eff >= 1.0 && load.rho_split < 1.0 {
+        out.push(Finding {
+            severity: Severity::Warning,
+            code: "fault_load",
+            message: format!(
+                "retries and stragglers inflate the offered load from rho={:.3} to \
+                 ~{:.3} (x{:.2} expected attempts, x{:.2} straggler service): the fleet \
+                 saturates under the fault process even though the clean workload would not",
+                load.rho_split,
+                rho_eff,
+                attempts,
+                service_mult,
+            ),
+        });
+    }
+
+    // --- Timeout below the profiled mean service ----------------------
+    if let Some(tmo) = r.timeout {
+        let per_call = if load.mean_subtasks > 0.0 {
+            (load.edge_service / load.mean_subtasks)
+                .max(load.cloud_service / load.mean_subtasks)
+        } else {
+            0.0
+        };
+        if tmo < per_call {
+            out.push(Finding {
+                severity: Severity::Warning,
+                code: "fault_timeout",
+                message: format!(
+                    "resilience.timeout {:.2}s is below the profiled mean per-call service \
+                     time {:.2}s: most attempts will time out, and with max_retries {} each \
+                     subtask burns its whole attempt budget before degrading",
+                    tmo, per_call, r.max_retries,
+                ),
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::{FaultConfig, OutageWindow, ResilienceConfig};
     use crate::scenario::presets;
 
     fn overloaded() -> ScenarioSpec {
@@ -498,5 +616,99 @@ mod tests {
     fn report_render_is_rerun_identical() {
         let spec = overloaded();
         assert_eq!(check_spec(&spec).render(), check_spec(&spec).render());
+    }
+
+    #[test]
+    fn shipped_faulty_preset_checks_clean() {
+        // The shipped fault scenario must pass the checker with zero
+        // errors (mid-run outage, modest failure probabilities, generous
+        // timeout — nothing pins traffic to the outaged side).
+        use crate::workload::Benchmark;
+        let spec = presets::fleet_faulty(Benchmark::Gpqa, 60, 0.5, 11);
+        let report = check_spec(&spec);
+        assert!(report.passed(), "{}", report.render());
+        assert!(
+            !report.findings.iter().any(|f| f.code.starts_with("fault_")),
+            "{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn total_outage_on_pinned_side_is_an_error() {
+        let mut spec = presets::golden_fleet();
+        spec.engine.policy = PolicySpec::AllCloud;
+        spec.topology.tenants = vec![crate::scenario::TenantSpec::unlimited("a")];
+        // Horizon: 12 periodic arrivals at 1.5s gaps => ~18s; blanket it.
+        spec.engine.faults = Some(FaultConfig {
+            outages: vec![OutageWindow { cloud: true, start: 0.0, end: 1e6 }],
+            ..FaultConfig::default()
+        });
+        let report = check_spec(&spec);
+        assert!(!report.passed(), "{}", report.render());
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.severity == Severity::Error && f.code == "fault_outage_total"));
+        // The same outage with traffic free to route around it is no error.
+        let mut free = spec.clone();
+        free.engine.policy = PolicySpec::HybridFlow;
+        assert!(check_spec(&free).passed(), "{}", check_spec(&free).render());
+        // A mid-run window on the pinned side is not total either.
+        let mut partial = spec.clone();
+        partial.engine.faults = Some(FaultConfig {
+            outages: vec![OutageWindow { cloud: true, start: 5.0, end: 10.0 }],
+            ..FaultConfig::default()
+        });
+        assert!(check_spec(&partial).passed(), "{}", check_spec(&partial).render());
+        // A tenant override pins traffic even when the default does not.
+        let mut via_tenant = partial.clone();
+        via_tenant.engine.policy = PolicySpec::HybridFlow;
+        via_tenant.topology.tenants =
+            vec![crate::scenario::TenantSpec::unlimited("pinned")
+                .with_policy(PolicySpec::AllCloud)];
+        via_tenant.engine.faults = Some(FaultConfig {
+            outages: vec![OutageWindow { cloud: true, start: 0.0, end: 1e6 }],
+            ..FaultConfig::default()
+        });
+        assert!(!check_spec(&via_tenant).passed());
+    }
+
+    #[test]
+    fn retry_inflation_and_short_timeout_warn() {
+        // Rescale the overloaded spec's arrival rate so the clean load
+        // sits at rho ~0.75 (rho is linear in the Poisson rate), then add
+        // p=0.6 failures: ~2.5 expected attempts push the effective load
+        // past 1 while the clean workload stays stable.
+        let mut spec = overloaded();
+        let base = check_spec(&spec);
+        assert!(base.load.rho_split > 0.0, "{}", base.render());
+        spec.workload.arrival = ArrivalProcess::Poisson { rate: 4.0 * 0.75 / base.load.rho_split };
+        let clean = check_spec(&spec);
+        assert!(clean.load.rho_split < 1.0, "{}", clean.render());
+        assert!(clean.passed(), "{}", clean.render());
+        spec.engine.faults =
+            Some(FaultConfig { edge_fail_p: 0.6, cloud_fail_p: 0.6, ..FaultConfig::default() });
+        let report = check_spec(&spec);
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.severity == Severity::Warning && f.code == "fault_load"),
+            "{}",
+            report.render());
+        // A timeout far below any realistic per-call service time warns.
+        let mut spec = presets::golden_fleet();
+        spec.engine.resilience = Some(ResilienceConfig {
+            timeout: Some(1e-6),
+            ..ResilienceConfig::default()
+        });
+        let report = check_spec(&spec);
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.severity == Severity::Warning && f.code == "fault_timeout"),
+            "{}",
+            report.render());
+        assert!(report.passed(), "warnings only: {}", report.render());
     }
 }

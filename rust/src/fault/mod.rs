@@ -1,0 +1,423 @@
+//! Deterministic fault injection + resilience policies.
+//!
+//! The kernel lives on a virtual clock, so failures must be *scheduled
+//! randomness*, not wall-clock accidents: every fault draw comes from an
+//! RNG stream forked from the global `(query, node, attempt)` index
+//! ([`FaultModel::attempt_rng`]), exactly like the sharded kernel's
+//! arrival forking. Realizations are therefore shard-invariant and
+//! byte-reproducible across reruns and thread counts — the same query
+//! sees the same transient failure on attempt 2 whether the fleet runs
+//! unsharded, sharded, or on 16 threads.
+//!
+//! Three ingredient structs:
+//! * [`FaultConfig`] — what goes wrong: per-side transient failure
+//!   probability, scheduled outage windows on the virtual clock
+//!   ([`OutageWindow`]), and straggler tail inflation (latency multiplier
+//!   applied with probability `straggler_p`).
+//! * [`ResilienceConfig`] — what the scheduler does about it: per-subtask
+//!   timeout, bounded retries with exponential backoff + jitter,
+//!   cross-side failover after `failover_after` same-side failures, and
+//!   graceful degradation (retry budget exhausted ⇒ the attempt runs on
+//!   edge with every fault check suppressed, so the DAG always drains).
+//! * [`FaultModel`] — the pair the kernel threads through `run_group`,
+//!   `Some` iff either block was configured (absent ⇒ the exact
+//!   pre-feature code path).
+//!
+//! Billing semantics: a failed attempt bills the work actually performed
+//! (a failed cloud call still costs its tokens and dollars); an
+//! outage-window rejection performs no work and bills nothing; a timed-out
+//! attempt bills in full at dispatch and refunds the unconsumed share
+//! `(1 - timeout/latency)` through the existing cancel machinery.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Golden-ratio multiplier shared with the kernel's per-query forking.
+const PHI64: u64 = 0x9E3779B97f4A7C15;
+/// Distinct odd mix constants for the node / attempt axes.
+const NODE_MIX: u64 = 0xC2B2AE3D27D4EB4F;
+const ATTEMPT_MIX: u64 = 0x165667B19E3779F9;
+
+/// A scheduled outage on the virtual clock: every dispatch on the given
+/// side with `start <= t < end` is rejected instantly (no work, no cost).
+/// Zero-length windows (`start == end`) match nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutageWindow {
+    /// `true` = cloud side, `false` = edge side.
+    pub cloud: bool,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// What goes wrong (see module docs). All probabilities are per-attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Transient failure probability of an edge attempt.
+    pub edge_fail_p: f64,
+    /// Transient failure probability of a cloud attempt.
+    pub cloud_fail_p: f64,
+    /// Probability an attempt is a straggler.
+    pub straggler_p: f64,
+    /// Latency multiplier applied to straggler attempts (>= 1).
+    pub straggler_mult: f64,
+    /// Base seed of the forked per-attempt fault streams.
+    pub seed: u64,
+    /// Scheduled outage windows on the virtual clock.
+    pub outages: Vec<OutageWindow>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            edge_fail_p: 0.0,
+            cloud_fail_p: 0.0,
+            straggler_p: 0.0,
+            straggler_mult: 1.0,
+            seed: 0,
+            outages: Vec::new(),
+        }
+    }
+}
+
+/// What the scheduler does about faults (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceConfig {
+    /// Per-subtask attempt deadline on the virtual clock (`None` = no
+    /// timeout). An attempt whose service time exceeds it is cancelled at
+    /// `start + timeout`, the worker released, the unconsumed cost share
+    /// refunded.
+    pub timeout: Option<f64>,
+    /// Retry budget per subtask: after `max_retries` failed attempts the
+    /// next attempt is the degraded completion (edge side, fault checks
+    /// suppressed), so every DAG terminates.
+    pub max_retries: usize,
+    /// Backoff before retry k is `backoff_base * 2^min(k,10)` seconds ...
+    pub backoff_base: f64,
+    /// ... inflated by `1 + backoff_jitter * U` with `U ~ Uniform[0,1)`
+    /// from the forked attempt stream.
+    pub backoff_jitter: f64,
+    /// After this many failures on one side, the next attempt reroutes to
+    /// the other side (`0` disables failover). Failover onto the cloud
+    /// side additionally requires spendable budget — otherwise the
+    /// attempt degrades to edge instead of burning dollars.
+    pub failover_after: usize,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            timeout: None,
+            max_retries: 3,
+            backoff_base: 0.05,
+            backoff_jitter: 0.1,
+            failover_after: 2,
+        }
+    }
+}
+
+/// Per-attempt fault realization, drawn once per `(query, node, attempt)`
+/// from the forked stream. The draw order (failure, straggler, backoff
+/// jitter) is fixed so realizations never depend on which draws a caller
+/// ends up using.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttemptDraws {
+    /// Transient failure fired.
+    pub failed: bool,
+    /// Straggler inflation fired.
+    pub straggler: bool,
+    /// Backoff delay (seconds) before the *next* attempt, jitter applied.
+    pub backoff: f64,
+}
+
+/// The fault + resilience pair the kernel threads through dispatch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultModel {
+    pub faults: FaultConfig,
+    pub resilience: ResilienceConfig,
+}
+
+impl FaultModel {
+    /// `Some` iff either block was configured; a missing half takes its
+    /// defaults (no faults / default resilience).
+    pub fn from_parts(
+        faults: Option<FaultConfig>,
+        resilience: Option<ResilienceConfig>,
+    ) -> Option<FaultModel> {
+        if faults.is_none() && resilience.is_none() {
+            return None;
+        }
+        Some(FaultModel {
+            faults: faults.unwrap_or_default(),
+            resilience: resilience.unwrap_or_default(),
+        })
+    }
+
+    /// Independent fault stream of one `(query, node, attempt)` cell. The
+    /// query index is the *global* arrival index, so realizations are
+    /// shard-invariant by construction.
+    pub fn attempt_rng(&self, query: u64, node: u64, attempt: u64) -> Rng {
+        Rng::new(
+            self.faults.seed
+                ^ query.wrapping_mul(PHI64)
+                ^ node.wrapping_mul(NODE_MIX)
+                ^ attempt.wrapping_mul(ATTEMPT_MIX),
+        )
+    }
+
+    /// Fixed-order fault realization of one attempt (see [`AttemptDraws`]).
+    pub fn draws(&self, query: u64, node: u64, attempt: u64, cloud: bool) -> AttemptDraws {
+        let mut rng = self.attempt_rng(query, node, attempt);
+        let p = if cloud { self.faults.cloud_fail_p } else { self.faults.edge_fail_p };
+        let failed = rng.bernoulli(p);
+        let straggler = rng.bernoulli(self.faults.straggler_p);
+        let backoff = self.backoff(attempt, rng.f64());
+        AttemptDraws { failed, straggler, backoff }
+    }
+
+    /// Whether side `cloud` is inside a scheduled outage at virtual time `t`.
+    pub fn in_outage(&self, cloud: bool, t: f64) -> bool {
+        self.faults.outages.iter().any(|w| w.cloud == cloud && t >= w.start && t < w.end)
+    }
+
+    /// Deterministic exponential backoff with jitter: `base * 2^min(k,10)
+    /// * (1 + jitter * u)` where `u` comes from the forked attempt stream.
+    pub fn backoff(&self, attempt: u64, u: f64) -> f64 {
+        let pow = f64::from(1u32 << attempt.min(10) as u32);
+        self.resilience.backoff_base * pow * (1.0 + self.resilience.backoff_jitter * u)
+    }
+
+    /// Attempts allowed before the degraded completion (retries + 1).
+    pub fn max_attempts(&self) -> u32 {
+        self.resilience.max_retries as u32 + 1
+    }
+}
+
+/// Per-attempt fault annotation carried on trace events and spans.
+/// `Default` (attempt 0, no flags) means "nothing fault-related happened",
+/// and every renderer keeps such events byte-identical to the pre-fault
+/// format — that is what pins faults-off (and fault-enabled-but-silent)
+/// output to the golden bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultMark {
+    /// 0-based attempt index of this dispatch.
+    pub attempt: u32,
+    /// Attempt failed transiently (work performed, result discarded).
+    pub failed: bool,
+    /// Attempt was rejected by an outage window (no work performed).
+    pub outage: bool,
+    /// Attempt was cancelled by the per-subtask timeout.
+    pub timeout: bool,
+    /// Attempt was rerouted to the other side by failover.
+    pub failed_over: bool,
+    /// Degraded completion (retry budget exhausted, forced edge).
+    pub degraded: bool,
+}
+
+impl FaultMark {
+    pub fn is_default(&self) -> bool {
+        *self == FaultMark::default()
+    }
+
+    /// Trace-line suffix (leading space included), empty when default so
+    /// unannotated lines keep their golden bytes.
+    pub fn trace_suffix(&self) -> String {
+        let mut s = String::new();
+        if self.attempt > 0 {
+            s.push_str(&format!(" attempt={}", self.attempt));
+        }
+        if self.failed_over {
+            s.push_str(" failover=1");
+        }
+        if self.outage {
+            s.push_str(" outage=1");
+        }
+        if self.failed {
+            s.push_str(" failed=1");
+        }
+        if self.timeout {
+            s.push_str(" timeout=1");
+        }
+        if self.degraded {
+            s.push_str(" degraded=1");
+        }
+        s
+    }
+}
+
+/// Roll-up of fault/resilience activity across a run (or one shard of
+/// one; shards merge by summation).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultStats {
+    /// Dispatch attempts made under the fault layer (cache hits excluded).
+    pub attempts: usize,
+    /// Transient + outage failures (timeouts counted separately).
+    pub failures: usize,
+    /// Attempts cancelled by the per-subtask timeout.
+    pub timeouts: usize,
+    /// Re-dispatches scheduled after a failed/timed-out attempt.
+    pub retries: usize,
+    /// Attempts rerouted to the other side by failover.
+    pub failovers: usize,
+    /// Queries that completed with at least one degraded subtask.
+    pub degraded_queries: usize,
+    /// Dollars refunded for the unconsumed share of timed-out attempts.
+    pub refund: f64,
+}
+
+impl FaultStats {
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.attempts += other.attempts;
+        self.failures += other.failures;
+        self.timeouts += other.timeouts;
+        self.retries += other.retries;
+        self.failovers += other.failovers;
+        self.degraded_queries += other.degraded_queries;
+        self.refund += other.refund;
+    }
+
+    /// Fraction of attempts that completed (neither failed nor timed out);
+    /// 1.0 when no attempt ran under the fault layer.
+    pub fn availability(&self) -> f64 {
+        if self.attempts == 0 {
+            1.0
+        } else {
+            (self.attempts - self.failures - self.timeouts) as f64 / self.attempts as f64
+        }
+    }
+
+    pub fn render_line(&self) -> String {
+        format!(
+            "faults: {} attempts, {} failures, {} timeouts, {} retries, {} failovers, \
+             {} degraded queries, ${:.4} refunded, availability {:.1}%",
+            self.attempts,
+            self.failures,
+            self.timeouts,
+            self.retries,
+            self.failovers,
+            self.degraded_queries,
+            self.refund,
+            100.0 * self.availability()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("attempts", Json::Num(self.attempts as f64)),
+            ("failures", Json::Num(self.failures as f64)),
+            ("timeouts", Json::Num(self.timeouts as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("degraded_queries", Json::Num(self.degraded_queries as f64)),
+            ("refund", Json::Num(self.refund)),
+            ("availability", Json::Num(self.availability())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_parts_is_some_iff_either_block() {
+        assert!(FaultModel::from_parts(None, None).is_none());
+        let m = FaultModel::from_parts(Some(FaultConfig::default()), None).unwrap();
+        assert_eq!(m.resilience, ResilienceConfig::default());
+        let m = FaultModel::from_parts(None, Some(ResilienceConfig::default())).unwrap();
+        assert_eq!(m.faults, FaultConfig::default());
+    }
+
+    #[test]
+    fn attempt_streams_are_deterministic_and_independent() {
+        let m = FaultModel::from_parts(Some(FaultConfig::default()), None).unwrap();
+        let a: Vec<u64> = (0..4).map(|_| m.attempt_rng(3, 1, 0).next_u64()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]), "same cell, same stream");
+        // Any axis change moves the stream.
+        assert_ne!(m.attempt_rng(3, 1, 0).next_u64(), m.attempt_rng(4, 1, 0).next_u64());
+        assert_ne!(m.attempt_rng(3, 1, 0).next_u64(), m.attempt_rng(3, 2, 0).next_u64());
+        assert_ne!(m.attempt_rng(3, 1, 0).next_u64(), m.attempt_rng(3, 1, 1).next_u64());
+    }
+
+    #[test]
+    fn draws_respect_probability_extremes() {
+        let cfg = FaultConfig {
+            edge_fail_p: 0.0,
+            cloud_fail_p: 1.0,
+            straggler_p: 1.0,
+            ..FaultConfig::default()
+        };
+        let m = FaultModel::from_parts(Some(cfg), None).unwrap();
+        for q in 0..8 {
+            let d = m.draws(q, 0, 0, true);
+            assert!(d.failed && d.straggler, "p=1 always fires");
+            let d = m.draws(q, 0, 0, false);
+            assert!(!d.failed, "p=0 never fires");
+        }
+    }
+
+    #[test]
+    fn outage_windows_are_half_open_and_side_scoped() {
+        let cfg = FaultConfig {
+            outages: vec![
+                OutageWindow { cloud: true, start: 10.0, end: 20.0 },
+                OutageWindow { cloud: false, start: 5.0, end: 5.0 }, // zero-length
+            ],
+            ..FaultConfig::default()
+        };
+        let m = FaultModel::from_parts(Some(cfg), None).unwrap();
+        assert!(m.in_outage(true, 10.0));
+        assert!(m.in_outage(true, 19.999));
+        assert!(!m.in_outage(true, 20.0), "end is exclusive");
+        assert!(!m.in_outage(true, 9.999));
+        assert!(!m.in_outage(false, 15.0), "edge side unaffected");
+        assert!(!m.in_outage(false, 5.0), "zero-length window matches nothing");
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps_and_jitters() {
+        let r = ResilienceConfig {
+            backoff_base: 0.1,
+            backoff_jitter: 0.5,
+            ..ResilienceConfig::default()
+        };
+        let m = FaultModel::from_parts(None, Some(r)).unwrap();
+        assert!((m.backoff(0, 0.0) - 0.1).abs() < 1e-12);
+        assert!((m.backoff(3, 0.0) - 0.8).abs() < 1e-12);
+        assert_eq!(m.backoff(10, 0.0), m.backoff(40, 0.0), "exponent caps at 10");
+        assert!((m.backoff(0, 1.0) - 0.15).abs() < 1e-12, "jitter inflates by 1+j*u");
+    }
+
+    #[test]
+    fn fault_mark_suffix_is_empty_when_default() {
+        assert_eq!(FaultMark::default().trace_suffix(), "");
+        assert!(FaultMark::default().is_default());
+        let m = FaultMark { attempt: 2, failed: true, ..FaultMark::default() };
+        assert_eq!(m.trace_suffix(), " attempt=2 failed=1");
+        let m = FaultMark { timeout: true, degraded: true, ..FaultMark::default() };
+        assert_eq!(m.trace_suffix(), " timeout=1 degraded=1");
+    }
+
+    #[test]
+    fn stats_merge_and_availability() {
+        let mut a = FaultStats {
+            attempts: 10,
+            failures: 2,
+            timeouts: 1,
+            retries: 3,
+            failovers: 1,
+            degraded_queries: 1,
+            refund: 0.5,
+        };
+        let b = FaultStats { attempts: 5, failures: 1, ..FaultStats::default() };
+        a.merge(&b);
+        assert_eq!(a.attempts, 15);
+        assert_eq!(a.failures, 3);
+        assert!((a.availability() - 11.0 / 15.0).abs() < 1e-12);
+        assert_eq!(FaultStats::default().availability(), 1.0);
+        let line = a.render_line();
+        assert!(line.starts_with("faults: 15 attempts"), "{line}");
+        let j = a.to_json();
+        assert_eq!(j.get("attempts").and_then(Json::as_i64), Some(15));
+        assert_eq!(j.get("degraded_queries").and_then(Json::as_i64), Some(1));
+    }
+}

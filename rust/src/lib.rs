@@ -51,6 +51,7 @@ pub mod runtime;
 pub mod budget;
 pub mod cache;
 pub mod engine;
+pub mod fault;
 pub mod models;
 pub mod obs;
 pub mod router;

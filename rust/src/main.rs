@@ -38,7 +38,7 @@ use std::sync::Arc;
 
 const COMMANDS: [(&str, &str); 8] = [
     ("plan", "decompose a synthetic query and print plan + repaired DAG"),
-    ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario; --shards N overrides its shard count, --trace-out/--metrics-out/--metrics-interval export observability artifacts, --threads N caps the shard fan-out)"),
+    ("run", "run N queries end-to-end (or --scenario <file.json> for a declarative fleet scenario; --shards N overrides its shard count, --fault-seed S reseeds its faults block, --trace-out/--metrics-out/--metrics-interval export observability artifacts, --threads N caps the shard fan-out)"),
     ("serve", "concurrent serving loop with throughput/latency report"),
     ("profile", "emit the offline profiling dataset as JSONL"),
     ("exp", "run an experiment: --id <table1|table2|table3|table5|table6_fig4|fig3|table7|table8|fig5|calibrate|d1_exposure|ablations|fleet_serve|fleet_mixed_policy|fleet_cache>"),
@@ -65,7 +65,7 @@ fn allowed_options(cmd: &str) -> Vec<&'static str> {
         "exp" => return vec!["artifacts", "id", "quick", "scale", "seeds", "out", "json"],
         "run" => vec![
             "n", "scenario", "json", "shards", "threads", "trace-out", "metrics-out",
-            "metrics-interval",
+            "metrics-interval", "fault-seed",
         ],
         "serve" => vec!["n", "workers", "trace-in", "trace-out", "metrics", "json"],
         _ => vec![],
@@ -102,7 +102,7 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
         );
     }
     // Typed-value sanity (parse errors surface here, not mid-run).
-    for key in ["n", "workers", "cache", "seeds", "cases", "shards", "threads"] {
+    for key in ["n", "workers", "cache", "seeds", "cases", "shards", "threads", "fault-seed"] {
         let _ = args.get_usize(key)?;
     }
     // Artifact options take a file path; a bare `--trace-out` means the
@@ -133,7 +133,7 @@ fn validate_command_args(cmd: &str, args: &Args) -> anyhow::Result<()> {
     // The observability exports and the explicit thread budget configure a
     // scenario run; on the plain `run` path they would be silently dead.
     if cmd == "run" && args.get("scenario").is_none() {
-        for key in ["trace-out", "metrics-out", "metrics-interval", "threads"] {
+        for key in ["trace-out", "metrics-out", "metrics-interval", "threads", "fault-seed"] {
             anyhow::ensure!(
                 args.get(key).is_none(),
                 "--{key} configures a scenario run; pass it with --scenario <file.json>"
@@ -323,8 +323,9 @@ fn write_json(path: &str, j: &Json) -> anyhow::Result<()> {
 /// out across the thread pool, print the tabulated cells.
 fn cmd_run_sweep(args: &Args, path: &str, j: &Json) -> anyhow::Result<()> {
     // A sweep aggregates many cells into one table; there is no single
-    // span stream or metrics series to export.
-    for key in ["trace-out", "metrics-out", "metrics-interval"] {
+    // span stream or metrics series to export (and no single faults block
+    // to reseed).
+    for key in ["trace-out", "metrics-out", "metrics-interval", "fault-seed"] {
         anyhow::ensure!(
             args.get(key).is_none(),
             "--{key} applies to a single scenario run, not a sweep"
@@ -363,6 +364,18 @@ fn cmd_run_scenario(args: &Args, path: &str) -> anyhow::Result<()> {
     let mut spec = ScenarioSpec::from_json(&parsed)?;
     if let Some(shards) = args.get_usize("shards")? {
         spec.topology.shards = shards;
+    }
+    // `--fault-seed` reseeds the spec's fault streams (a different
+    // realization of the same fault process); it needs a faults block to
+    // reseed — silently creating one would turn the override into a
+    // competing run definition.
+    if let Some(seed) = args.get_usize("fault-seed")? {
+        let faults = spec.engine.faults.as_mut().ok_or_else(|| {
+            anyhow::anyhow!(
+                "--fault-seed reseeds a scenario's engine.faults block, but {path} has none"
+            )
+        })?;
+        faults.seed = seed as u64;
     }
     // `--trace-out` / `--metrics-out` switch the matching recorder on (on
     // top of whatever the spec's `observe` block enables), and
@@ -918,6 +931,29 @@ mod tests {
         assert!(validate_command_args("serve", &a).is_err());
         let a = parse("hybridflow plan --trace-out t.json");
         assert!(validate_command_args("plan", &a).is_err());
+    }
+
+    #[test]
+    fn fault_seed_override_is_validated() {
+        // The happy path: reseed a scenario's fault streams.
+        let a = parse("hybridflow run --scenario scenarios/fleet_faulty.json --fault-seed 9");
+        assert!(validate_command_args("run", &a).is_ok());
+        // Typed: a malformed seed fails fast.
+        for bad in ["-1", "2.5", "lots"] {
+            let a = parse(&format!("hybridflow run --scenario s.json --fault-seed {bad}"));
+            assert!(validate_command_args("run", &a).is_err(), "--fault-seed {bad}");
+        }
+        // The override configures a scenario run; plain `run` has no
+        // faults block to reseed.
+        let a = parse("hybridflow run --n 5 --fault-seed 9");
+        let err = validate_command_args("run", &a).unwrap_err().to_string();
+        assert!(err.contains("--scenario"), "{err}");
+        // Commands without a scenario surface reject it like any unknown
+        // option.
+        for cmd in ["serve", "plan", "check", "fuzz"] {
+            let a = parse(&format!("hybridflow {cmd} --fault-seed 9"));
+            assert!(validate_command_args(cmd, &a).is_err(), "{cmd}");
+        }
     }
 
     #[test]

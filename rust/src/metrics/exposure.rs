@@ -88,6 +88,7 @@ mod tests {
             hedged: false,
             cached: false,
             worker: 0,
+            fault: crate::fault::FaultMark::default(),
         }
     }
 

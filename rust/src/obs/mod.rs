@@ -103,6 +103,10 @@ pub struct Span {
     pub cached: bool,
     /// Dollars refunded on cancellation.
     pub refund: f64,
+    /// Fault/resilience annotation of the attempt (`Default` = fault-free;
+    /// renders no extra Chrome-trace args, so fault-off artifacts keep
+    /// their pre-fault bytes).
+    pub fault: crate::fault::FaultMark,
 }
 
 impl Span {
@@ -140,21 +144,40 @@ impl Span {
         } else {
             "edge"
         };
+        // Fault markers are emitted only when non-default: `Json::obj`
+        // sorts keys, and absent keys keep fault-free span args
+        // byte-identical to the pre-fault exporter.
+        let mut args = vec![
+            ("cached", Json::Bool(self.cached)),
+            ("cancelled", Json::Bool(self.cancelled)),
+            ("dollars", Json::Num(self.dollars)),
+            ("hedged", Json::Bool(self.hedged)),
+            ("planned", Json::Num(self.planned)),
+            ("queued", Json::Num(self.queued)),
+            ("refund", Json::Num(self.refund)),
+            ("tenant", Json::Num(self.tenant as f64)),
+            ("tokens", Json::Num(self.tokens)),
+        ];
+        if !self.fault.is_default() {
+            args.push(("attempt", Json::Num(f64::from(self.fault.attempt))));
+            if self.fault.failed {
+                args.push(("failed", Json::Bool(true)));
+            }
+            if self.fault.outage {
+                args.push(("outage", Json::Bool(true)));
+            }
+            if self.fault.timeout {
+                args.push(("timeout", Json::Bool(true)));
+            }
+            if self.fault.failed_over {
+                args.push(("failover", Json::Bool(true)));
+            }
+            if self.fault.degraded {
+                args.push(("degraded", Json::Bool(true)));
+            }
+        }
         Json::obj(vec![
-            (
-                "args",
-                Json::obj(vec![
-                    ("cached", Json::Bool(self.cached)),
-                    ("cancelled", Json::Bool(self.cancelled)),
-                    ("dollars", Json::Num(self.dollars)),
-                    ("hedged", Json::Bool(self.hedged)),
-                    ("planned", Json::Num(self.planned)),
-                    ("queued", Json::Num(self.queued)),
-                    ("refund", Json::Num(self.refund)),
-                    ("tenant", Json::Num(self.tenant as f64)),
-                    ("tokens", Json::Num(self.tokens)),
-                ]),
-            ),
+            ("args", Json::obj(args)),
             ("cat", Json::Str(cat.into())),
             ("dur", Json::Num(dur)),
             ("name", Json::Str(format!("q{}:n{}", self.q, self.node))),
@@ -347,6 +370,7 @@ mod tests {
             cancelled: false,
             cached: false,
             refund: 0.0,
+            fault: crate::fault::FaultMark::default(),
         }
     }
 

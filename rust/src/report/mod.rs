@@ -9,6 +9,7 @@
 //! mode-specific lines, then appends the shared hedge/cache sections.
 
 use crate::cache::CacheStats;
+use crate::fault::FaultStats;
 use crate::obs::CriticalPathSummary;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -60,6 +61,16 @@ impl ReportRenderer {
     pub fn critical_path(&mut self, cp: Option<&CriticalPathSummary>) -> &mut Self {
         if let Some(cp) = cp {
             self.line(cp.render_line());
+        }
+        self
+    }
+
+    /// Shared fault/resilience section ([`FaultStats::render_line`]).
+    /// Silent when the fault layer was off, so fault-free reports are
+    /// byte-identical to pre-fault-injection ones.
+    pub fn faults(&mut self, stats: Option<&FaultStats>) -> &mut Self {
+        if let Some(f) = stats {
+            self.line(f.render_line());
         }
         self
     }

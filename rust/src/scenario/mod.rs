@@ -37,6 +37,7 @@ pub use sweep::{SweepAxis, SweepCellResult, SweepField, SweepReport, SweepSpec};
 use crate::budget::TenantPool;
 use crate::cache::{CachePolicyKind, SubtaskCache};
 use crate::config::simparams::SimParams;
+use crate::fault::{FaultConfig, OutageWindow, ResilienceConfig};
 use crate::obs::ObserveConfig;
 use crate::models::SimExecutor;
 use crate::pipeline::{HybridFlowPipeline, PipelineConfig};
@@ -229,6 +230,17 @@ pub struct EngineSpec {
     /// uninstrumented code path and the key is omitted from the rendered
     /// spec, so pre-observability spec files round-trip unchanged.
     pub observe: Option<ObserveConfig>,
+    /// Deterministic fault injection (transient failures, outage windows,
+    /// stragglers — [`FaultConfig`]). When both this and `resilience` are
+    /// `None` (the default; keys omitted from the rendered spec) the
+    /// kernel takes the exact pre-fault code path, so pre-fault spec files
+    /// round-trip unchanged and keep their golden bytes.
+    pub faults: Option<FaultConfig>,
+    /// Resilience policy (per-subtask timeout, bounded retries with
+    /// backoff, cross-side failover, graceful degradation —
+    /// [`ResilienceConfig`]). The fault layer activates when *either*
+    /// block is present; a missing half takes its defaults.
+    pub resilience: Option<ResilienceConfig>,
 }
 
 impl Default for EngineSpec {
@@ -244,6 +256,8 @@ impl Default for EngineSpec {
             record_trace: true,
             cache: None,
             observe: None,
+            faults: None,
+            resilience: None,
         }
     }
 }
@@ -330,6 +344,44 @@ impl ScenarioSpec {
                     ("spans", Json::Bool(o.spans)),
                     ("metrics", Json::Bool(o.metrics)),
                     ("metrics_interval", Json::Num(o.metrics_interval)),
+                ]),
+            ));
+        }
+        // Same contract as `observe`: emitted only when present, so
+        // pre-fault spec files keep their exact rendered bytes.
+        if let Some(f) = &self.engine.faults {
+            let outages: Vec<Json> = f
+                .outages
+                .iter()
+                .map(|w| {
+                    Json::obj(vec![
+                        ("side", Json::Str(if w.cloud { "cloud" } else { "edge" }.into())),
+                        ("start", Json::Num(w.start)),
+                        ("end", Json::Num(w.end)),
+                    ])
+                })
+                .collect();
+            engine.push((
+                "faults",
+                Json::obj(vec![
+                    ("edge_fail_p", Json::Num(f.edge_fail_p)),
+                    ("cloud_fail_p", Json::Num(f.cloud_fail_p)),
+                    ("straggler_p", Json::Num(f.straggler_p)),
+                    ("straggler_mult", Json::Num(f.straggler_mult)),
+                    ("seed", Json::Num(f.seed as f64)),
+                    ("outages", Json::Arr(outages)),
+                ]),
+            ));
+        }
+        if let Some(r) = &self.engine.resilience {
+            engine.push((
+                "resilience",
+                Json::obj(vec![
+                    ("timeout", opt_num(r.timeout)),
+                    ("max_retries", Json::Num(r.max_retries as f64)),
+                    ("backoff_base", Json::Num(r.backoff_base)),
+                    ("backoff_jitter", Json::Num(r.backoff_jitter)),
+                    ("failover_after", Json::Num(r.failover_after as f64)),
                 ]),
             ));
         }
@@ -462,6 +514,54 @@ impl ScenarioSpec {
                 })
             }
         };
+        let faults = match eng.get("faults") {
+            None | Some(Json::Null) => None,
+            Some(f) => {
+                let d = FaultConfig::default();
+                let outages = match f.get("outages") {
+                    None | Some(Json::Null) => Vec::new(),
+                    Some(Json::Arr(ws)) => ws
+                        .iter()
+                        .map(|w| {
+                            let cloud = match req_str(w, "side")? {
+                                "cloud" => true,
+                                "edge" => false,
+                                other => anyhow::bail!(
+                                    "outage side must be 'edge' or 'cloud', got '{other}'"
+                                ),
+                            };
+                            Ok(OutageWindow {
+                                cloud,
+                                start: req_num(w, "start")?,
+                                end: req_num(w, "end")?,
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<OutageWindow>>>()?,
+                    Some(_) => anyhow::bail!("'faults.outages' must be an array"),
+                };
+                Some(FaultConfig {
+                    edge_fail_p: num_or(f, "edge_fail_p", d.edge_fail_p)?,
+                    cloud_fail_p: num_or(f, "cloud_fail_p", d.cloud_fail_p)?,
+                    straggler_p: num_or(f, "straggler_p", d.straggler_p)?,
+                    straggler_mult: num_or(f, "straggler_mult", d.straggler_mult)?,
+                    seed: count_or(f, "seed", d.seed as usize)? as u64,
+                    outages,
+                })
+            }
+        };
+        let resilience = match eng.get("resilience") {
+            None | Some(Json::Null) => None,
+            Some(r) => {
+                let d = ResilienceConfig::default();
+                Some(ResilienceConfig {
+                    timeout: opt_num_field(r, "timeout")?,
+                    max_retries: count_or(r, "max_retries", d.max_retries)?,
+                    backoff_base: num_or(r, "backoff_base", d.backoff_base)?,
+                    backoff_jitter: num_or(r, "backoff_jitter", d.backoff_jitter)?,
+                    failover_after: count_or(r, "failover_after", d.failover_after)?,
+                })
+            }
+        };
         let defaults = EngineSpec::default();
         let engine = EngineSpec {
             policy,
@@ -473,6 +573,8 @@ impl ScenarioSpec {
             record_trace: bool_or(eng, "record_trace", defaults.record_trace)?,
             cache,
             observe,
+            faults,
+            resilience,
         };
         let spec = ScenarioSpec { name, seed, topology, workload, engine };
         spec.validate()?;
@@ -594,6 +696,61 @@ impl ScenarioSpec {
                 o.metrics_interval
             );
         }
+        if let Some(f) = &self.engine.faults {
+            for (name, p) in [
+                ("edge_fail_p", f.edge_fail_p),
+                ("cloud_fail_p", f.cloud_fail_p),
+                ("straggler_p", f.straggler_p),
+            ] {
+                anyhow::ensure!(
+                    p.is_finite() && (0.0..=1.0).contains(&p),
+                    "faults.{name} must be a probability in [0, 1], got {p}"
+                );
+            }
+            anyhow::ensure!(
+                f.straggler_mult.is_finite() && f.straggler_mult >= 1.0,
+                "faults.straggler_mult must be a finite latency multiplier >= 1, got {}",
+                f.straggler_mult
+            );
+            for w in &f.outages {
+                anyhow::ensure!(
+                    w.start.is_finite() && w.end.is_finite() && w.start >= 0.0 && w.start <= w.end,
+                    "faults outage window must satisfy 0 <= start <= end with finite \
+                     bounds, got [{}, {})",
+                    w.start,
+                    w.end
+                );
+            }
+        }
+        if let Some(r) = &self.engine.resilience {
+            if let Some(t) = r.timeout {
+                anyhow::ensure!(
+                    t.is_finite() && t > 0.0,
+                    "resilience.timeout must be a finite positive number of virtual \
+                     seconds (use null for no timeout), got {t}"
+                );
+            }
+            anyhow::ensure!(
+                r.max_retries <= 64,
+                "resilience.max_retries must be at most 64, got {}",
+                r.max_retries
+            );
+            anyhow::ensure!(
+                r.backoff_base.is_finite() && r.backoff_base >= 0.0,
+                "resilience.backoff_base must be finite and non-negative, got {}",
+                r.backoff_base
+            );
+            anyhow::ensure!(
+                r.backoff_jitter.is_finite() && (0.0..=1.0).contains(&r.backoff_jitter),
+                "resilience.backoff_jitter must be in [0, 1], got {}",
+                r.backoff_jitter
+            );
+            anyhow::ensure!(
+                r.failover_after <= 64,
+                "resilience.failover_after must be at most 64 (0 disables failover), got {}",
+                r.failover_after
+            );
+        }
         Ok(())
     }
 
@@ -622,6 +779,8 @@ impl ScenarioSpec {
                 .map(|t| t.policy.as_ref().map(|p| p.build(&sp)))
                 .collect(),
             observe: self.engine.observe.clone(),
+            faults: self.engine.faults.clone(),
+            resilience: self.engine.resilience.clone(),
         };
         Ok(Session { spec: self.clone(), pipeline, tenants, fleet, predictor })
     }
@@ -1141,6 +1300,135 @@ mod tests {
             ScenarioSpec::from_json(&j).unwrap().engine.observe,
             Some(ObserveConfig::default())
         );
+    }
+
+    #[test]
+    fn fault_blocks_roundtrip_and_default_to_none() {
+        let mut spec = small_spec();
+        spec.engine.faults = Some(FaultConfig {
+            edge_fail_p: 0.05,
+            cloud_fail_p: 0.2,
+            straggler_p: 0.1,
+            straggler_mult: 4.0,
+            seed: 99,
+            outages: vec![OutageWindow { cloud: true, start: 3.0, end: 8.0 }],
+        });
+        spec.engine.resilience = Some(ResilienceConfig {
+            timeout: Some(12.0),
+            max_retries: 4,
+            backoff_base: 0.1,
+            backoff_jitter: 0.25,
+            failover_after: 1,
+        });
+        let back = ScenarioSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec, "fault blocks survive the JSON round trip");
+        assert_eq!(back.render(), spec.render(), "render fixpoint with faults");
+        // Pre-fault spec files carry neither key: fully off.
+        let plain = small_spec();
+        let parsed = ScenarioSpec::parse(&plain.render()).unwrap();
+        assert!(parsed.engine.faults.is_none() && parsed.engine.resilience.is_none());
+        assert!(
+            !plain.render().contains("faults") && !plain.render().contains("resilience"),
+            "fault-off specs keep their pre-fault bytes"
+        );
+        // Bare `{}` blocks read as the defaults (no faults / default
+        // resilience), and an explicit `null` is the same as absent.
+        let mut j = small_spec().to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(eng)) = o.get_mut("engine") {
+                eng.insert("faults".into(), Json::obj(vec![]));
+                eng.insert("resilience".into(), Json::Null);
+            }
+        }
+        let parsed = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(parsed.engine.faults, Some(FaultConfig::default()));
+        assert!(parsed.engine.resilience.is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_fault_knobs() {
+        let cases: Vec<(&str, Box<dyn Fn(&mut ScenarioSpec)>)> = vec![
+            ("edge_fail_p", Box::new(|s| {
+                s.engine.faults =
+                    Some(FaultConfig { edge_fail_p: 1.5, ..FaultConfig::default() });
+            })),
+            ("cloud_fail_p", Box::new(|s| {
+                s.engine.faults =
+                    Some(FaultConfig { cloud_fail_p: f64::NAN, ..FaultConfig::default() });
+            })),
+            ("straggler_mult", Box::new(|s| {
+                s.engine.faults =
+                    Some(FaultConfig { straggler_mult: 0.5, ..FaultConfig::default() });
+            })),
+            ("outage", Box::new(|s| {
+                s.engine.faults = Some(FaultConfig {
+                    outages: vec![OutageWindow { cloud: false, start: 9.0, end: 3.0 }],
+                    ..FaultConfig::default()
+                });
+            })),
+            ("timeout", Box::new(|s| {
+                s.engine.resilience =
+                    Some(ResilienceConfig { timeout: Some(0.0), ..ResilienceConfig::default() });
+            })),
+            ("max_retries", Box::new(|s| {
+                s.engine.resilience =
+                    Some(ResilienceConfig { max_retries: 65, ..ResilienceConfig::default() });
+            })),
+            ("backoff_jitter", Box::new(|s| {
+                s.engine.resilience =
+                    Some(ResilienceConfig { backoff_jitter: 2.0, ..ResilienceConfig::default() });
+            })),
+            ("failover_after", Box::new(|s| {
+                s.engine.resilience =
+                    Some(ResilienceConfig { failover_after: 100, ..ResilienceConfig::default() });
+            })),
+        ];
+        for (field, mutate) in cases {
+            let mut s = small_spec();
+            mutate(&mut s);
+            let err = s.validate().unwrap_err().to_string();
+            assert!(err.contains(field), "{field}: {err}");
+        }
+        // Unknown outage side is a parse error.
+        let mut spec = small_spec();
+        spec.engine.faults = Some(FaultConfig {
+            outages: vec![OutageWindow { cloud: true, start: 0.0, end: 1.0 }],
+            ..FaultConfig::default()
+        });
+        let mut j = spec.to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(eng)) = o.get_mut("engine") {
+                if let Some(Json::Obj(f)) = eng.get_mut("faults") {
+                    if let Some(Json::Arr(ws)) = f.get_mut("outages") {
+                        if let Json::Obj(w) = &mut ws[0] {
+                            w.insert("side".into(), Json::Str("moon".into()));
+                        }
+                    }
+                }
+            }
+        }
+        let err = ScenarioSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("side"), "{err}");
+    }
+
+    #[test]
+    fn silent_fault_layer_matches_plain_trace() {
+        // A fault layer whose every probability is zero and whose outage
+        // list is empty must reproduce the plain kernel's trace bytes:
+        // the per-attempt draws come from forked streams, not the query
+        // stream, so enabling the layer consumes no shared randomness.
+        let plain = small_spec().build(predictor()).unwrap().run();
+        let mut spec = small_spec();
+        spec.engine.faults = Some(FaultConfig { seed: 42, ..FaultConfig::default() });
+        spec.engine.resilience = Some(ResilienceConfig::default());
+        let silent = spec.build(predictor()).unwrap().run();
+        assert_eq!(plain.trace_text(), silent.trace_text(), "trace bytes unchanged");
+        let stats = silent.faults.expect("fault layer reports stats");
+        assert_eq!(stats.failures, 0);
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.availability(), 1.0);
+        assert!(stats.attempts > 0, "attempts counted under the layer");
+        assert!(plain.faults.is_none(), "fault-off report carries no section");
     }
 
     #[test]

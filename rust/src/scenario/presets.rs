@@ -12,6 +12,7 @@ use super::{
     TenantSpec, TopologySpec, WorkloadSpec,
 };
 use crate::cache::CachePolicyKind;
+use crate::fault::{FaultConfig, OutageWindow, ResilienceConfig};
 use crate::obs::ObserveConfig;
 use crate::workload::trace::{ArrivalProcess, ZipfMix};
 use crate::workload::Benchmark;
@@ -271,6 +272,38 @@ pub fn fleet_sharded(bench: Benchmark, n: usize, rate: f64, seed: u64) -> Scenar
     spec
 }
 
+/// The `fleet_faulty` scenario: the [`fleet_sim`] fleet under the fault
+/// layer — a mid-run cloud outage window, per-side transient failure
+/// probabilities, and straggler tail inflation, handled by bounded
+/// retries with backoff, cross-side failover, a generous per-subtask
+/// timeout, and graceful degradation. Shipped as
+/// `scenarios/fleet_faulty.json`; `scripts/verify.sh` runs it twice (and
+/// once at `--threads 4`) and checks the report bytes match — fault
+/// realizations are drawn from per-attempt forked streams, so the whole
+/// scenario is byte-reproducible. Tracing is off (the degradation path
+/// traces are pinned by `rust/tests/faults.rs`).
+pub fn fleet_faulty(bench: Benchmark, n: usize, rate: f64, seed: u64) -> ScenarioSpec {
+    let knobs = FleetSimKnobs { record_trace: false, ..Default::default() };
+    let mut spec = fleet_sim(bench, n, rate, seed, &knobs);
+    spec.name = "fleet_faulty".into();
+    spec.engine.faults = Some(FaultConfig {
+        edge_fail_p: 0.02,
+        cloud_fail_p: 0.05,
+        straggler_p: 0.02,
+        straggler_mult: 4.0,
+        seed: 7,
+        outages: vec![OutageWindow { cloud: true, start: 40.0, end: 80.0 }],
+    });
+    spec.engine.resilience = Some(ResilienceConfig {
+        timeout: Some(60.0),
+        max_retries: 3,
+        backoff_base: 0.05,
+        backoff_jitter: 0.1,
+        failover_after: 2,
+    });
+    spec
+}
+
 /// The `fleet_serve` contention grid as a declarative sweep: the
 /// [`fleet_serve`] scenario with the Poisson arrival rate swept from idle
 /// to saturated — the exact grid the `fleet_serve` experiment tabulates
@@ -352,6 +385,7 @@ mod tests {
             mixed_policy(Benchmark::Gpqa, 90, 0.6, 11, &MixedPolicyKnobs::default()),
             fleet_cache(Benchmark::Gpqa, 120, 0.5, 11, &FleetCacheKnobs::default()),
             fleet_sharded(Benchmark::Gpqa, 240, 2.0, 11),
+            fleet_faulty(Benchmark::Gpqa, 60, 0.5, 11),
             golden_fleet(),
         ];
         for spec in specs {

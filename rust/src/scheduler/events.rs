@@ -3,6 +3,7 @@
 //! debugging scheduling decisions — plus [`EventKey`], the single heap
 //! ordering shared by every scheduler event queue.
 
+use crate::fault::FaultMark;
 use std::cmp::Ordering;
 
 /// Shared min-heap key for every scheduler event queue: the single-query
@@ -81,9 +82,13 @@ pub struct TraceEvent {
     /// side that produced the *original* cached record).
     pub cached: bool,
     /// Worker index of the winning replica within its side's pool (0 for
-    /// cache hits and chain-mode virtual execution, which occupy no pool
-    /// worker) — the observability layer's span lane.
+    /// cache hits, chain-mode virtual execution, and outage rejections,
+    /// which occupy no pool worker) — the observability layer's span lane.
     pub worker: usize,
+    /// Fault/resilience annotation of this dispatch attempt. `Default`
+    /// means "nothing fault-related" and renders to zero extra bytes, so
+    /// fault-free traces keep their golden format.
+    pub fault: FaultMark,
 }
 
 /// Position histogram used by Figure 3: per position, (edge count, cloud
@@ -148,6 +153,7 @@ mod tests {
             hedged: false,
             cached: false,
             worker: 0,
+            fault: FaultMark::default(),
         }
     }
 

@@ -59,6 +59,7 @@ use crate::cache::{CachedResult, Fingerprint, SubtaskCache};
 use crate::dag::TaskDag;
 use crate::embed::{FeatureContext, Features};
 use crate::engine::Backend;
+use crate::fault::{FaultMark, FaultModel, FaultStats};
 use crate::router::predictor::UtilityPredictor;
 use crate::router::{RoutePolicy, RouterState};
 use crate::util::rng::Rng;
@@ -147,6 +148,9 @@ pub struct QueryExecution {
     pub n_subtasks: usize,
     pub events: Vec<TraceEvent>,
     pub budget: BudgetState,
+    /// At least one subtask completed through graceful degradation (retry
+    /// budget exhausted, served by the edge with fault checks suppressed).
+    pub degraded: bool,
 }
 
 /// Mutable per-query execution accumulators shared by the single-query
@@ -159,6 +163,17 @@ pub(crate) struct QueryExecState {
     /// Query-local budget (reported in [`QueryExecution`]; also the routing
     /// budget in single-query mode).
     pub budget: BudgetState,
+    /// Dispatch attempts made per node under the fault layer (0-based; the
+    /// next attempt's index). Stays all-zero with faults off.
+    pub attempts: Vec<u32>,
+    /// Per-node failure counts by side (`[edge, cloud]`) — the failover
+    /// trigger state.
+    pub side_fails: Vec<[u32; 2]>,
+    /// Whether any subtask completed through graceful degradation.
+    pub degraded: bool,
+    /// Per-query fault tally, rolled into the run's [`FaultStats`] at
+    /// finalization (`degraded_queries` is derived there from `degraded`).
+    pub fault: FaultStats,
 }
 
 impl QueryExecState {
@@ -169,6 +184,10 @@ impl QueryExecState {
             api_total: 0.0,
             events: Vec::with_capacity(n),
             budget: BudgetState::new(),
+            attempts: vec![0; n],
+            side_fails: vec![[0, 0]; n],
+            degraded: false,
+            fault: FaultStats::default(),
         }
     }
 }
@@ -198,6 +217,17 @@ pub(crate) struct FleetRouteCtx<'a> {
     pub forced_edge: &'a mut usize,
 }
 
+/// What the caller should do when a dispatched attempt reaches `finish`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum DispatchOutcome {
+    /// The node completed: mark it done and release its children.
+    Done,
+    /// The attempt failed (transient fault, outage rejection, or timeout):
+    /// re-dispatch the node at virtual time `at` (finish + backoff). The
+    /// node is *not* done; its children stay blocked.
+    Retry { at: f64 },
+}
+
 /// One decided-and-dispatched node: the winning replica's timing plus the
 /// optional losing replica of a hedged dispatch, to be cancelled by the
 /// caller at the winner's finish instant.
@@ -207,24 +237,37 @@ pub(crate) struct Dispatch {
     pub start: f64,
     pub finish: f64,
     pub cancel: Option<CancelTicket>,
+    pub outcome: DispatchOutcome,
 }
 
-/// Losing replica of a hedged dispatch. `refund_*` is the unconsumed share
-/// of the speculative cloud spend (zero when the loser ran on the edge,
-/// which is free).
+/// A reservation to cancel: the losing replica of a hedged dispatch, or a
+/// timed-out fault-layer attempt. `refund_*` is the unconsumed share of
+/// the cloud spend (zero when the replica ran on the edge, which is free).
 #[derive(Debug, Clone)]
 pub(crate) struct CancelTicket {
     pub node: usize,
-    /// Side of the losing replica.
+    /// Side of the cancelled replica.
     pub cloud: bool,
-    /// Worker index holding the loser's reservation.
+    /// Worker index holding the reservation.
     pub worker: usize,
-    /// Loser's reserved start / end on that worker.
+    /// Reserved start / end on that worker.
     pub start: f64,
     pub reserved_until: f64,
     /// Normalized-cost and dollar refund due at cancellation.
     pub refund_c: f64,
     pub refund_k: f64,
+    /// `true` for a fault-layer timeout cancellation (accounted in the
+    /// fault stats), `false` for a hedge loser (accounted in the hedge
+    /// stats).
+    pub timeout: bool,
+}
+
+/// Fault-layer context for one query's dispatches: the kernel's
+/// [`FaultModel`] plus the query's *global* arrival index, the axis that
+/// keeps per-attempt fault streams shard-invariant.
+pub(crate) struct FaultCtx<'a> {
+    pub model: &'a FaultModel,
+    pub q_global: u64,
 }
 
 /// Apply one cancellation at virtual time `cancel_time`: release the
@@ -281,9 +324,23 @@ pub(crate) fn apply_cancel(
 /// step). Executed (non-hit) results are inserted under the node's
 /// fingerprint for later queries.
 ///
+/// `faults` is the fault-injection + resilience gate (`None` = the exact
+/// pre-fault engine). With a fault context, every non-cached dispatch is
+/// one *attempt*: it may be rejected instantly by an outage window (no
+/// work, no cost), fail transiently after performing (and billing) its
+/// work, straggle, or be cancelled by the per-subtask timeout with the
+/// unconsumed cost share refunded. Failed attempts return a
+/// [`DispatchOutcome::Retry`] carrying the backoff-delayed re-dispatch
+/// time; the retry budget's exhaustion degrades the node to a guaranteed
+/// edge completion. All fault draws come from streams forked off the
+/// global `(query, node, attempt)` index — never from the query stream —
+/// so a fault config that never fires consumes RNG identically to
+/// `faults = None`. Hedging is disabled under the fault layer (a
+/// speculative replica of a failing attempt has no defined semantics).
+///
 /// `plan_done` is the virtual time planning finished (the origin for the
 /// budget's latency frontier). Executed nodes are appended to `dispatched`;
-/// the caller schedules winner completions and loser cancellations.
+/// the caller schedules winner completions, retries, and cancellations.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_group(
     g: &GroupCtx<'_>,
@@ -299,6 +356,7 @@ pub(crate) fn run_group(
     mut fleet: Option<&mut FleetRouteCtx<'_>>,
     hedge: Option<f64>,
     cache: Option<&SubtaskCache>,
+    faults: Option<&FaultCtx<'_>>,
     dispatched: &mut Vec<Dispatch>,
 ) {
     let sp = g.executor.sp();
@@ -373,8 +431,15 @@ pub(crate) fn run_group(
                     hedged: false,
                     cached: true,
                     worker: 0,
+                    fault: FaultMark::default(),
                 });
-                dispatched.push(Dispatch { node, start, finish: finish_t, cancel: None });
+                dispatched.push(Dispatch {
+                    node,
+                    start,
+                    finish: finish_t,
+                    cancel: None,
+                    outcome: DispatchOutcome::Done,
+                });
                 continue;
             }
         }
@@ -425,13 +490,106 @@ pub(crate) fn run_group(
         let in_tok = g.query.query_tokens
             + g.dag.nodes[node].deps.iter().map(|&d| st.out_tokens[d]).sum::<f64>();
 
+        // --- Fault layer: attempt bookkeeping, failover, degradation,
+        // --- outage rejection ---------------------------------------------
+        let mut fmark = FaultMark::default();
+        let mut exec_cloud = to_cloud;
+        let mut fdraws = None;
+        if let Some(fc) = faults {
+            let attempt = st.attempts[node];
+            fmark.attempt = attempt;
+            st.attempts[node] += 1;
+            st.fault.attempts += 1;
+            if attempt >= fc.model.max_attempts() {
+                // Retry budget exhausted: graceful degradation. The attempt
+                // runs on the edge with every fault check suppressed, so
+                // the node — and therefore the DAG — always terminates.
+                fmark.degraded = true;
+                st.degraded = true;
+                exec_cloud = false;
+            } else {
+                if fc.model.resilience.failover_after > 0
+                    && st.side_fails[node][usize::from(exec_cloud)]
+                        >= fc.model.resilience.failover_after as u32
+                {
+                    // Cross-side failover; onto the cloud side only while
+                    // the dollar pools can still spend — otherwise degrade
+                    // to edge instead of burning budget on a failing side.
+                    let target = !exec_cloud;
+                    let spendable = !target
+                        || match fleet.as_deref_mut() {
+                            Some(f) => f.tenant.can_spend() && f.global.can_spend(),
+                            None => true,
+                        };
+                    if spendable {
+                        exec_cloud = target;
+                        fmark.failed_over = true;
+                        st.fault.failovers += 1;
+                    } else {
+                        fmark.degraded = true;
+                        st.degraded = true;
+                        exec_cloud = false;
+                    }
+                }
+                if !fmark.degraded {
+                    fdraws = Some(fc.model.draws(
+                        fc.q_global,
+                        node as u64,
+                        u64::from(attempt),
+                        exec_cloud,
+                    ));
+                    let t_dispatch = chain_clock.as_deref().map_or(now, |c| *c);
+                    if fc.model.in_outage(exec_cloud, t_dispatch) {
+                        // Outage rejection: instant failure, no work
+                        // performed, nothing billed, no worker occupied.
+                        fmark.outage = true;
+                        fmark.failed = true;
+                        st.side_fails[node][usize::from(exec_cloud)] += 1;
+                        st.fault.failures += 1;
+                        st.fault.retries += 1;
+                        let backoff = fdraws.as_ref().map_or(0.0, |d| d.backoff);
+                        st.events.push(TraceEvent {
+                            node,
+                            position: g.depths[node],
+                            cloud: exec_cloud,
+                            tau,
+                            u_hat,
+                            start: t_dispatch,
+                            finish: t_dispatch,
+                            api_cost: 0.0,
+                            correct: false,
+                            in_tokens: in_tok,
+                            hedged: false,
+                            cached: false,
+                            worker: 0,
+                            fault: fmark,
+                        });
+                        if let Some(clock) = chain_clock.as_deref_mut() {
+                            *clock += backoff;
+                        }
+                        dispatched.push(Dispatch {
+                            node,
+                            start: t_dispatch,
+                            finish: t_dispatch,
+                            cancel: None,
+                            outcome: DispatchOutcome::Retry { at: t_dispatch + backoff },
+                        });
+                        continue;
+                    }
+                }
+            }
+        }
+
         // Speculative dual dispatch: an edge-routed pivotal subtask also
         // fires a cloud replica. In fleet mode the replica is gated on the
         // same dollar pools a routed cloud decision draws from; in
         // single-query mode there are no dollar pools (caps are a fleet
-        // concept — routed cloud calls are ungated there too).
+        // concept — routed cloud calls are ungated there too). Disabled
+        // under the fault layer (see the function docs).
         let hedge_this = match hedge {
-            Some(threshold) if !to_cloud && u_hat > threshold && chain_clock.is_none() => {
+            Some(threshold)
+                if faults.is_none() && !to_cloud && u_hat > threshold && chain_clock.is_none() =>
+            {
                 match fleet.as_deref_mut() {
                     Some(f) => f.tenant.can_spend() && f.global.can_spend(),
                     None => true,
@@ -489,6 +647,7 @@ pub(crate) fn run_group(
                     reserved_until: f_e,
                     refund_c: 0.0,
                     refund_k: 0.0,
+                    timeout: false,
                 }
             } else {
                 // Winner = edge: the node counts as an edge decision; the
@@ -515,6 +674,7 @@ pub(crate) fn run_group(
                     reserved_until: f_c,
                     refund_c: c_norm * (1.0 - consumed),
                     refund_k: rec_c.api_cost * (1.0 - consumed),
+                    timeout: false,
                 }
             };
 
@@ -548,41 +708,90 @@ pub(crate) fn run_group(
                 hedged: true,
                 cached: false,
                 worker: if cloud_wins { wc } else { we },
+                fault: FaultMark::default(),
             });
-            dispatched.push(Dispatch { node, start, finish: finish_t, cancel: Some(cancel) });
+            dispatched.push(Dispatch {
+                node,
+                start,
+                finish: finish_t,
+                cancel: Some(cancel),
+                outcome: DispatchOutcome::Done,
+            });
             continue;
         }
 
         // --- Execution (non-hedged path) ----------------------------------
+        // The backend call draws from the query stream exactly as in the
+        // fault-free engine; straggler inflation and the fail verdict come
+        // from the pre-drawn attempt stream, so a zero-probability fault
+        // config consumes RNG identically to `faults = None`.
         let rec =
-            g.executor.execute_subtask(g.query.domain, &g.latents[node], in_tok, to_cloud, rng);
-        st.out_tokens[node] = rec.out_tokens;
-        st.correct[node] = rec.correct;
+            g.executor.execute_subtask(g.query.domain, &g.latents[node], in_tok, exec_cloud, rng);
+        let mut service = rec.latency;
+        let mut transient_fail = false;
+        if let Some(d) = fdraws.as_ref() {
+            if d.straggler {
+                if let Some(fc) = faults {
+                    service *= fc.model.faults.straggler_mult;
+                }
+            }
+            transient_fail = d.failed;
+        }
+        let timeout_hit = match faults {
+            Some(fc) if !fmark.degraded => match fc.model.resilience.timeout {
+                Some(tmo) if service > tmo => Some(tmo),
+                _ => None,
+            },
+            _ => None,
+        };
+        let success = fmark.degraded || (!transient_fail && timeout_hit.is_none());
+
+        if success {
+            st.out_tokens[node] = rec.out_tokens;
+            st.correct[node] = rec.correct;
+        }
         st.api_total += rec.api_cost;
 
-        let (worker, start, finish_t) = if let Some(clock) = chain_clock.as_deref_mut() {
-            let s = *clock;
-            *clock += rec.latency;
-            (0, s, *clock)
-        } else if to_cloud {
-            cloud.claim(now, rec.latency)
-        } else {
-            edge.claim(now, rec.latency)
-        };
+        // The worker is reserved for the full (possibly straggling) service
+        // time; a timeout releases it at the deadline through the Cancel
+        // machinery below, so `finish_t` (the attempt's observable end) and
+        // `reserved_end` (the pool reservation) diverge only then.
+        let dur = timeout_hit.unwrap_or(service);
+        let (worker, start, finish_t, reserved_end) =
+            if let Some(clock) = chain_clock.as_deref_mut() {
+                let s = *clock;
+                *clock += dur;
+                (0, s, *clock, *clock)
+            } else {
+                let (w, s, f) =
+                    if exec_cloud { cloud.claim(now, service) } else { edge.claim(now, service) };
+                let finish = match timeout_hit {
+                    Some(tmo) => s + tmo,
+                    None => f,
+                };
+                (w, s, finish, f)
+            };
 
         // --- Budget + bandit feedback -------------------------------------
-        if to_cloud {
+        // Billing covers work actually performed: a failed or timed-out
+        // cloud attempt still dispatched the call, so it bills in full here
+        // (the timeout's unconsumed share comes back as a refund below).
+        // The bandit observes zero quality gain for a failed attempt.
+        let mut attempt_cost_c = 0.0;
+        if exec_cloud {
             let edge_equiv =
                 g.executor.profile(false).latency_mean(in_tok, g.latents[node].out_tokens);
-            let dl = (rec.latency - edge_equiv).max(0.0);
+            let dl = (service - edge_equiv).max(0.0);
             st.budget.record_cloud(sp, dl, rec.api_cost);
             if let Some(f) = fleet.as_deref_mut() {
                 f.tenant.state.record_cloud(sp, dl, rec.api_cost);
                 f.global.record(rec.api_cost);
             }
-            let realized_dq =
-                g.executor.true_dq(g.query.domain, g.latents, node) + rng.normal_ms(0.0, 0.02);
+            let true_dq =
+                if success { g.executor.true_dq(g.query.domain, g.latents, node) } else { 0.0 };
+            let realized_dq = true_dq + rng.normal_ms(0.0, 0.02);
             let realized_c = BudgetState::normalized_cost(sp, dl, rec.api_cost);
+            attempt_cost_c = realized_c;
             router.observe_offloaded(
                 sp,
                 u_hat,
@@ -598,37 +807,106 @@ pub(crate) fn run_group(
             }
         }
 
+        // --- Timeout: refund the unconsumed cost share; non-chain mode
+        // --- releases the worker at the deadline via a Cancel ticket ------
+        let mut cancel = None;
+        if let Some(tmo) = timeout_hit {
+            let consumed = if service > 0.0 { (tmo / service).clamp(0.0, 1.0) } else { 1.0 };
+            let refund_c = attempt_cost_c * (1.0 - consumed);
+            let refund_k = rec.api_cost * (1.0 - consumed);
+            st.fault.refund += refund_k;
+            if chain_clock.is_some() {
+                // Chain mode occupies no pool worker and schedules no
+                // Cancel event: the refund applies inline at the deadline.
+                if refund_c > 0.0 || refund_k > 0.0 {
+                    st.budget.refund(refund_c, refund_k);
+                    st.api_total = (st.api_total - refund_k).max(0.0);
+                    if let Some(f) = fleet.as_deref_mut() {
+                        f.tenant.state.refund(refund_c, refund_k);
+                        f.global.refund(refund_k);
+                    }
+                }
+            } else {
+                cancel = Some(CancelTicket {
+                    node,
+                    cloud: exec_cloud,
+                    worker,
+                    start,
+                    reserved_until: reserved_end,
+                    refund_c,
+                    refund_k,
+                    timeout: true,
+                });
+            }
+        }
+
+        if !success {
+            st.side_fails[node][usize::from(exec_cloud)] += 1;
+            if timeout_hit.is_some() {
+                fmark.timeout = true;
+                st.fault.timeouts += 1;
+            } else {
+                fmark.failed = true;
+                st.fault.failures += 1;
+            }
+            st.fault.retries += 1;
+        }
+
         // Populate the cross-query cache with the realized result; it is
         // servable to same-session probes only from its finish instant
-        // (a result must not be consumed before it exists).
-        if let Some(c) = cache {
-            let tenant_part = fleet.as_deref().map_or(0, |f| f.tenant_idx);
-            let role = g.dag.nodes[node].role;
-            c.insert(
-                tenant_part,
-                Fingerprint::of_node(g.query, node, role, to_cloud),
-                CachedResult { cloud: to_cloud, rec },
-                now,
-                finish_t,
-            );
+        // (a result must not be consumed before it exists). Failed attempts
+        // produced no servable result and are never cached.
+        if success {
+            if let Some(c) = cache {
+                let tenant_part = fleet.as_deref().map_or(0, |f| f.tenant_idx);
+                let role = g.dag.nodes[node].role;
+                c.insert(
+                    tenant_part,
+                    Fingerprint::of_node(g.query, node, role, exec_cloud),
+                    CachedResult { cloud: exec_cloud, rec },
+                    now,
+                    finish_t,
+                );
+            }
         }
 
         st.events.push(TraceEvent {
             node,
             position: g.depths[node],
-            cloud: to_cloud,
+            cloud: exec_cloud,
             tau,
             u_hat,
             start,
             finish: finish_t,
             api_cost: rec.api_cost,
-            correct: rec.correct,
+            correct: success && rec.correct,
             in_tokens: rec.in_tokens,
             hedged: false,
             cached: false,
             worker,
+            fault: fmark,
         });
-        dispatched.push(Dispatch { node, start, finish: finish_t, cancel: None });
+        if success {
+            dispatched.push(Dispatch {
+                node,
+                start,
+                finish: finish_t,
+                cancel,
+                outcome: DispatchOutcome::Done,
+            });
+        } else {
+            let backoff = fdraws.as_ref().map_or(0.0, |d| d.backoff);
+            if let Some(clock) = chain_clock.as_deref_mut() {
+                *clock += backoff;
+            }
+            dispatched.push(Dispatch {
+                node,
+                start,
+                finish: finish_t,
+                cancel,
+                outcome: DispatchOutcome::Retry { at: finish_t + backoff },
+            });
+        }
     }
 }
 
@@ -700,6 +978,7 @@ pub fn execute_query_arc(
         tenant: 0,
         query,
         arrival: 0.0,
+        global_index: 0,
         rng: rng.clone(),
         // The kernel owns the router for the duration of the run; a cheap
         // placeholder keeps the caller's binding valid until hand-back.
@@ -719,6 +998,7 @@ pub fn execute_query_arc(
             global_k_cap: f64::INFINITY,
             cache_sessions: CacheSessions::EpochPerRun,
             observe: None, // single-query mode is never observed
+            fault: None,   // single-query mode runs fault-free
         },
         tenants: Vec::new(),
         jobs: vec![job],

@@ -49,6 +49,7 @@ use crate::budget::{GlobalBudget, TenantPool};
 use crate::cache::CacheStats;
 use crate::embed::FeatureContext;
 use crate::engine::Backend;
+use crate::fault::{FaultConfig, FaultMark, FaultModel, FaultStats, ResilienceConfig};
 use crate::obs::{
     CriticalPathSummary, Histogram, MetricsSnapshot, ObsData, ObserveConfig, QueryPath, Span,
     MAX_METRIC_SNAPSHOTS,
@@ -62,8 +63,8 @@ use crate::router::{RoutePolicy, RouterState};
 use crate::scheduler::events::EventKey;
 use crate::scheduler::pool::WorkerPool;
 use crate::scheduler::{
-    apply_cancel, run_group, CancelTicket, Dispatch, FleetRouteCtx, GroupCtx, QueryExecState,
-    QueryExecution, ScheduleConfig,
+    apply_cancel, run_group, CancelTicket, Dispatch, DispatchOutcome, FaultCtx, FleetRouteCtx,
+    GroupCtx, QueryExecState, QueryExecution, ScheduleConfig,
 };
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -97,6 +98,15 @@ pub struct FleetConfig {
     /// uninstrumented code path (byte-identity pinned by the golden fleet
     /// trace).
     pub observe: Option<ObserveConfig>,
+    /// Deterministic fault injection (transient failures, outage windows,
+    /// stragglers). `None` with `resilience: None` is fully off: the
+    /// kernel takes the exact pre-fault code path (byte-identity pinned by
+    /// the golden fleet trace).
+    pub faults: Option<FaultConfig>,
+    /// Resilience policies (timeout, retries with backoff, failover,
+    /// graceful degradation). Activating either block activates the fault
+    /// layer; the missing half takes its defaults.
+    pub resilience: Option<ResilienceConfig>,
 }
 
 impl Default for FleetConfig {
@@ -107,6 +117,8 @@ impl Default for FleetConfig {
             record_trace: true,
             tenant_policies: Vec::new(),
             observe: None,
+            faults: None,
+            resilience: None,
         }
     }
 }
@@ -177,6 +189,11 @@ pub struct FleetReport {
     /// per-query critical paths) — `None` unless the run carried an
     /// [`ObserveConfig`].
     pub obs: Option<ObsData>,
+    /// Fault/resilience roll-up (attempts, failures, timeouts, retries,
+    /// failovers, degraded queries, refunds) — `None` unless the run
+    /// carried a fault layer, so fault-free reports render and serialize
+    /// byte-identically to pre-fault-injection ones.
+    pub faults: Option<FaultStats>,
     /// Fleet-level critical-path aggregate, derived from `obs` paths
     /// (`None` whenever `obs` is, so observe-off reports render and
     /// serialize byte-identically to pre-observability ones).
@@ -222,6 +239,7 @@ impl FleetReport {
         r.hedge(self.hedge_cancelled, self.hedge_refund);
         r.cache(self.cache.as_ref());
         r.critical_path(self.critical_path.as_ref());
+        r.faults(self.faults.as_ref());
         r.finish()
     }
 
@@ -279,6 +297,11 @@ impl FleetReport {
         // byte-identical to the pre-observability report.
         if let Some(cp) = &self.critical_path {
             pairs.push(("critical_path", cp.to_json()));
+        }
+        // Same convention: the fault roll-up appears only when the fault
+        // layer was active.
+        if let Some(f) = &self.faults {
+            pairs.push(("faults", f.to_json()));
         }
         Json::obj(pairs)
     }
@@ -350,6 +373,10 @@ pub(crate) struct Job {
     /// query behind an `Arc` (zero-copy job contract).
     pub query: Arc<Query>,
     pub arrival: f64,
+    /// Position in the *full* (unsharded) arrival list — the fault layer's
+    /// attempt streams fork from this global index, so fault realizations
+    /// are invariant to shard assignment and thread count.
+    pub global_index: usize,
     pub rng: Rng,
     pub router: RouterState,
     pub preplanned: Option<Preplanned>,
@@ -386,6 +413,9 @@ pub(crate) struct KernelSpec<'a> {
     pub cache_sessions: CacheSessions,
     /// Observability recorders; `None` takes the uninstrumented path.
     pub observe: Option<ObserveConfig>,
+    /// Fault-injection + resilience model; `None` takes the exact
+    /// pre-fault path.
+    pub fault: Option<FaultModel>,
 }
 
 /// Everything a kernel run produces: the report plus each job's final
@@ -432,6 +462,7 @@ struct QueryRun {
     tenant: usize,
     query: Arc<Query>,
     arrival: f64,
+    global_index: usize,
     admitted: f64,
     plan_done: f64,
     rng: Rng,
@@ -458,6 +489,9 @@ pub(crate) struct RunStats {
     /// the report reflects real pool occupancy, not just winner events.
     pub(crate) hedge_loser_busy: [f64; 2],
     pub(crate) clock_monotone: bool,
+    /// Fault/resilience roll-up across completed queries (zero when the
+    /// fault layer is off).
+    pub(crate) fault: FaultStats,
 }
 
 /// Per-run observability state, allocated only when the kernel spec
@@ -714,21 +748,32 @@ fn finalize_query(
         executor.final_answer_correct(&ps.latents, &ps.st.correct, &mut q.rng)
     };
     let ps = q.plan.take().expect("plan state");
+    stats.fault.merge(&ps.st.fault);
+    if ps.st.degraded {
+        stats.fault.degraded_queries += 1;
+    }
     let exec = QueryExecution {
         correct: final_correct,
         latency: makespan_abs - q.arrival,
         api_cost: ps.st.api_total,
         offload_rate: ps.st.budget.offload_rate(),
         n_subtasks: ps.dag.len(),
+        degraded: ps.st.degraded,
         events: ps.st.events,
         budget: ps.st.budget,
     };
     stats.sojourns.push(makespan_abs - q.arrival);
     if record_trace {
         trace.push(format!(
-            "t={:.6} tenant={} q={} complete correct={} latency={:.6} api={:.6} offload={:.6}",
-            makespan_abs, q.tenant, qi, exec.correct, exec.latency, exec.api_cost,
-            exec.offload_rate
+            "t={:.6} tenant={} q={} complete correct={} latency={:.6} api={:.6} offload={:.6}{}",
+            makespan_abs,
+            q.tenant,
+            qi,
+            exec.correct,
+            exec.latency,
+            exec.api_cost,
+            exec.offload_rate,
+            if exec.degraded { " degraded=1" } else { "" }
         ));
     }
     q.completed_at = makespan_abs;
@@ -782,6 +827,7 @@ impl<'a> Kernel<'a> {
                 tenant: j.tenant,
                 query: j.query,
                 arrival: j.arrival,
+                global_index: j.global_index,
                 admitted: f64::NAN,
                 plan_done: f64::NAN,
                 rng: j.rng,
@@ -810,6 +856,7 @@ impl<'a> Kernel<'a> {
             hedge_refund: 0.0,
             hedge_loser_busy: [0.0, 0.0],
             clock_monotone: true,
+            fault: FaultStats::default(),
         };
         let mut trace: Vec<String> = Vec::new();
         let mut waitq: VecDeque<usize> = VecDeque::new();
@@ -907,91 +954,111 @@ impl<'a> Kernel<'a> {
                             // (single-query semantics preserved exactly).
                             let mut chain_clock = q.plan_done;
                             for &node in &order {
-                                let now = chain_clock;
-                                let gctx = GroupCtx {
-                                    dag: &ps.dag,
-                                    latents: &ps.latents,
-                                    query: &q.query,
-                                    executor: spec.executor,
-                                    predictor: spec.predictor,
-                                    ctx: &ps.fctx,
-                                    depths: &ps.depths,
-                                    max_depth: ps.max_depth,
-                                };
-                                let mut route = if spec.query_local {
-                                    None
-                                } else {
-                                    Some(FleetRouteCtx {
-                                        tenant: &mut tenants[ti],
-                                        tenant_idx: ti,
-                                        global: &mut global,
-                                        forced_edge: &mut q.forced_edge,
-                                    })
-                                };
-                                dispatched.clear();
-                                run_group(
-                                    &gctx,
-                                    now,
-                                    &[node],
-                                    q.plan_done,
-                                    &mut ps.st,
-                                    &mut q.router,
-                                    &mut q.rng,
-                                    &mut edge,
-                                    &mut cloud,
-                                    Some(&mut chain_clock),
-                                    route.as_mut(),
-                                    hedge,
-                                    cache,
-                                    &mut dispatched,
-                                );
-                                // Chain subtasks bypass the pools: zero wait by
-                                // construction (keeps the queue-wait summary
-                                // well-defined for chain fleets).
-                                for _ in &dispatched {
-                                    stats.queue_waits.push(0.0);
-                                }
-                                if record_trace {
-                                    let tail = ps.st.events.len() - dispatched.len();
-                                    for (k, d) in dispatched.iter().enumerate() {
-                                        let e = &ps.st.events[tail + k];
-                                        let side = if e.cached {
-                                            "cache"
-                                        } else if e.cloud {
-                                            "cloud"
-                                        } else {
-                                            "edge"
-                                        };
-                                        trace.push(format!(
-                                            "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}",
-                                            now, ti, qi, d.node, side, d.start, d.finish, 0.0
-                                        ));
+                                // Fault layer: a failed attempt advances the
+                                // chain clock by (consumed service + backoff)
+                                // and the node re-dispatches immediately —
+                                // the loop exits on the guaranteed `Done`
+                                // (bounded by degradation).
+                                loop {
+                                    let now = chain_clock;
+                                    let gctx = GroupCtx {
+                                        dag: &ps.dag,
+                                        latents: &ps.latents,
+                                        query: &q.query,
+                                        executor: spec.executor,
+                                        predictor: spec.predictor,
+                                        ctx: &ps.fctx,
+                                        depths: &ps.depths,
+                                        max_depth: ps.max_depth,
+                                    };
+                                    let mut route = if spec.query_local {
+                                        None
+                                    } else {
+                                        Some(FleetRouteCtx {
+                                            tenant: &mut tenants[ti],
+                                            tenant_idx: ti,
+                                            global: &mut global,
+                                            forced_edge: &mut q.forced_edge,
+                                        })
+                                    };
+                                    let fctx = spec.fault.as_ref().map(|m| FaultCtx {
+                                        model: m,
+                                        q_global: q.global_index as u64,
+                                    });
+                                    dispatched.clear();
+                                    run_group(
+                                        &gctx,
+                                        now,
+                                        &[node],
+                                        q.plan_done,
+                                        &mut ps.st,
+                                        &mut q.router,
+                                        &mut q.rng,
+                                        &mut edge,
+                                        &mut cloud,
+                                        Some(&mut chain_clock),
+                                        route.as_mut(),
+                                        hedge,
+                                        cache,
+                                        fctx.as_ref(),
+                                        &mut dispatched,
+                                    );
+                                    // Chain subtasks bypass the pools: zero wait by
+                                    // construction (keeps the queue-wait summary
+                                    // well-defined for chain fleets).
+                                    for _ in &dispatched {
+                                        stats.queue_waits.push(0.0);
                                     }
-                                }
-                                if let Some(o) = obs.as_mut() {
-                                    if o.cfg.spans {
+                                    if record_trace {
                                         let tail = ps.st.events.len() - dispatched.len();
                                         for (k, d) in dispatched.iter().enumerate() {
                                             let e = &ps.st.events[tail + k];
-                                            o.spans.push(Span {
-                                                q: qi,
-                                                node: d.node,
-                                                shard: 0,
-                                                tenant: ti,
-                                                cloud: e.cloud,
-                                                worker: e.worker,
-                                                planned: q.plan_done,
-                                                queued: now,
-                                                dispatched: d.start,
-                                                finished: d.finish,
-                                                tokens: e.in_tokens,
-                                                dollars: e.api_cost,
-                                                hedged: e.hedged,
-                                                cancelled: false,
-                                                cached: e.cached,
-                                                refund: 0.0,
-                                            });
+                                            let side = if e.cached {
+                                                "cache"
+                                            } else if e.cloud {
+                                                "cloud"
+                                            } else {
+                                                "edge"
+                                            };
+                                            trace.push(format!(
+                                                "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}{}",
+                                                now, ti, qi, d.node, side, d.start, d.finish, 0.0,
+                                                e.fault.trace_suffix()
+                                            ));
                                         }
+                                    }
+                                    if let Some(o) = obs.as_mut() {
+                                        if o.cfg.spans {
+                                            let tail = ps.st.events.len() - dispatched.len();
+                                            for (k, d) in dispatched.iter().enumerate() {
+                                                let e = &ps.st.events[tail + k];
+                                                o.spans.push(Span {
+                                                    q: qi,
+                                                    node: d.node,
+                                                    shard: 0,
+                                                    tenant: ti,
+                                                    cloud: e.cloud,
+                                                    worker: e.worker,
+                                                    planned: q.plan_done,
+                                                    queued: now,
+                                                    dispatched: d.start,
+                                                    finished: d.finish,
+                                                    tokens: e.in_tokens,
+                                                    dollars: e.api_cost,
+                                                    hedged: e.hedged,
+                                                    cancelled: false,
+                                                    cached: e.cached,
+                                                    refund: 0.0,
+                                                    fault: e.fault,
+                                                });
+                                            }
+                                        }
+                                    }
+                                    if !matches!(
+                                        dispatched.last().map(|d| d.outcome),
+                                        Some(DispatchOutcome::Retry { .. })
+                                    ) {
+                                        break;
                                     }
                                 }
                             }
@@ -1103,30 +1170,51 @@ impl<'a> Kernel<'a> {
                                 &mut cloud,
                                 route.as_mut(),
                             );
-                            stats.hedge_cancelled += 1;
-                            stats.hedge_refund += ticket.refund_k;
-                            // The loser occupied its worker from start until
-                            // the cancel instant (zero if cancelled pre-start).
-                            let release =
-                                ev.key.time.clamp(ticket.start, ticket.reserved_until);
-                            stats.hedge_loser_busy[usize::from(ticket.cloud)] +=
-                                release - ticket.start;
-                            if let Some(o) = obs.as_mut() {
-                                if let Some(idx) = o.open.remove(&(qi, ev.key.node)) {
-                                    o.spans[idx].finished = release;
-                                    o.spans[idx].refund = ticket.refund_k;
+                            if ticket.timeout {
+                                // Fault-layer timeout: the deadline released
+                                // the worker and refunded the unconsumed cost
+                                // share; this is not a hedge loser, so the
+                                // hedge counters and loser-busy accounting
+                                // stay untouched (the attempt's own trace
+                                // event already covers its busy window).
+                                if record_trace {
+                                    trace.push(format!(
+                                        "t={:.6} tenant={} q={} timeout node={} side={} refund={:.6}",
+                                        ev.key.time,
+                                        ti,
+                                        qi,
+                                        ticket.node,
+                                        if ticket.cloud { "cloud" } else { "edge" },
+                                        ticket.refund_k
+                                    ));
                                 }
-                            }
-                            if record_trace {
-                                trace.push(format!(
-                                    "t={:.6} tenant={} q={} cancel node={} side={} refund={:.6}",
-                                    ev.key.time,
-                                    ti,
-                                    qi,
-                                    ticket.node,
-                                    if ticket.cloud { "cloud" } else { "edge" },
-                                    ticket.refund_k
-                                ));
+                            } else {
+                                stats.hedge_cancelled += 1;
+                                stats.hedge_refund += ticket.refund_k;
+                                // The loser occupied its worker from start
+                                // until the cancel instant (zero if cancelled
+                                // pre-start).
+                                let release =
+                                    ev.key.time.clamp(ticket.start, ticket.reserved_until);
+                                stats.hedge_loser_busy[usize::from(ticket.cloud)] +=
+                                    release - ticket.start;
+                                if let Some(o) = obs.as_mut() {
+                                    if let Some(idx) = o.open.remove(&(qi, ev.key.node)) {
+                                        o.spans[idx].finished = release;
+                                        o.spans[idx].refund = ticket.refund_k;
+                                    }
+                                }
+                                if record_trace {
+                                    trace.push(format!(
+                                        "t={:.6} tenant={} q={} cancel node={} side={} refund={:.6}",
+                                        ev.key.time,
+                                        ti,
+                                        qi,
+                                        ticket.node,
+                                        if ticket.cloud { "cloud" } else { "edge" },
+                                        ticket.refund_k
+                                    ));
+                                }
                             }
                         }
                     }
@@ -1184,6 +1272,10 @@ impl<'a> Kernel<'a> {
                             forced_edge: &mut q.forced_edge,
                         })
                     };
+                    let fctx = spec.fault.as_ref().map(|m| FaultCtx {
+                        model: m,
+                        q_global: q.global_index as u64,
+                    });
                     dispatched.clear();
                     run_group(
                         &gctx,
@@ -1199,14 +1291,44 @@ impl<'a> Kernel<'a> {
                         route.as_mut(),
                         hedge,
                         cache,
+                        fctx.as_ref(),
                         &mut dispatched,
                     );
                     for d in &dispatched {
                         stats.queue_waits.push(d.start - now);
-                        heap.push(Ev {
-                            key: EventKey { time: d.finish, pri: PRI_DONE, q: qi, node: d.node },
-                            kind: EvKind::Done,
-                        });
+                        match d.outcome {
+                            DispatchOutcome::Done => {
+                                heap.push(Ev {
+                                    key: EventKey {
+                                        time: d.finish,
+                                        pri: PRI_DONE,
+                                        q: qi,
+                                        node: d.node,
+                                    },
+                                    kind: EvKind::Done,
+                                });
+                            }
+                            // Failed attempt: the node goes back onto the
+                            // ready frontier at the backoff-delayed instant
+                            // instead of completing — no `Done` fires, so
+                            // dependents stay blocked until a later attempt
+                            // succeeds (or degrades).
+                            DispatchOutcome::Retry { at } => {
+                                ps.ready.push(EventKey::ready(at, d.node));
+                                if let Some(o) = obs.as_mut() {
+                                    o.ready_depth += 1;
+                                }
+                                heap.push(Ev {
+                                    key: EventKey {
+                                        time: at,
+                                        pri: PRI_MARKER,
+                                        q: qi,
+                                        node: d.node,
+                                    },
+                                    kind: EvKind::Marker,
+                                });
+                            }
+                        }
                         if let Some(ticket) = &d.cancel {
                             ps.cancel_tickets[d.node] = Some(ticket.clone());
                             heap.push(Ev {
@@ -1232,7 +1354,7 @@ impl<'a> Kernel<'a> {
                                 "edge"
                             };
                             trace.push(format!(
-                                "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}",
+                                "t={:.6} tenant={} q={} exec node={} side={} start={:.6} finish={:.6} wait={:.6}{}",
                                 now,
                                 ti,
                                 qi,
@@ -1240,7 +1362,8 @@ impl<'a> Kernel<'a> {
                                 side,
                                 d.start,
                                 d.finish,
-                                d.start - now
+                                d.start - now,
+                                e.fault.trace_suffix()
                             ));
                         }
                     }
@@ -1266,32 +1389,40 @@ impl<'a> Kernel<'a> {
                                     cancelled: false,
                                     cached: e.cached,
                                     refund: 0.0,
+                                    fault: e.fault,
                                 });
                                 if let Some(ticket) = &d.cancel {
-                                    // Losing replica of a hedged dispatch:
-                                    // opened now, closed (finish + refund)
-                                    // by its `Cancel` event. Its payload is
-                                    // accounted on the winner span.
-                                    let idx = o.spans.len();
-                                    o.spans.push(Span {
-                                        q: qi,
-                                        node: d.node,
-                                        shard: 0,
-                                        tenant: ti,
-                                        cloud: ticket.cloud,
-                                        worker: ticket.worker,
-                                        planned: q.plan_done,
-                                        queued: now,
-                                        dispatched: ticket.start,
-                                        finished: ticket.reserved_until,
-                                        tokens: 0.0,
-                                        dollars: 0.0,
-                                        hedged: true,
-                                        cancelled: true,
-                                        cached: false,
-                                        refund: 0.0,
-                                    });
-                                    o.open.insert((qi, d.node), idx);
+                                    if !ticket.timeout {
+                                        // Losing replica of a hedged
+                                        // dispatch: opened now, closed
+                                        // (finish + refund) by its `Cancel`
+                                        // event. Its payload is accounted on
+                                        // the winner span. A fault-layer
+                                        // timeout ticket is *not* a replica —
+                                        // its attempt span above already
+                                        // carries the timeout marker.
+                                        let idx = o.spans.len();
+                                        o.spans.push(Span {
+                                            q: qi,
+                                            node: d.node,
+                                            shard: 0,
+                                            tenant: ti,
+                                            cloud: ticket.cloud,
+                                            worker: ticket.worker,
+                                            planned: q.plan_done,
+                                            queued: now,
+                                            dispatched: ticket.start,
+                                            finished: ticket.reserved_until,
+                                            tokens: 0.0,
+                                            dollars: 0.0,
+                                            hedged: true,
+                                            cancelled: true,
+                                            cached: false,
+                                            refund: 0.0,
+                                            fault: FaultMark::default(),
+                                        });
+                                        o.open.insert((qi, d.node), idx);
+                                    }
                                 }
                             }
                         }
@@ -1515,6 +1646,9 @@ impl<'a> Kernel<'a> {
             trace,
             obs: obs_data,
             critical_path,
+            // Present iff the fault layer ran, so fault-free reports keep
+            // their pre-fault bytes.
+            faults: spec.fault.as_ref().map(|_| stats.fault),
         };
         KernelRun { report, routers, rngs, stats }
     }
@@ -1577,6 +1711,7 @@ pub(crate) fn fleet_job(
         // Moved behind an Arc, never deep-copied again.
         query: Arc::new(a.query),
         arrival: a.time,
+        global_index: index,
         rng,
         router,
         preplanned: None,
@@ -1606,6 +1741,7 @@ pub(crate) fn run_fleet_jobs(
             global_k_cap: cfg.global_k_cap,
             cache_sessions: CacheSessions::ResetCold,
             observe: cfg.observe.clone(),
+            fault: FaultModel::from_parts(cfg.faults.clone(), cfg.resilience.clone()),
         },
         tenants,
         jobs,

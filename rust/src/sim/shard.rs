@@ -107,6 +107,11 @@ where
         record_trace: cfg.record_trace,
         tenant_policies: cfg.tenant_policies.clone(),
         observe: cfg.observe.clone(),
+        // Fault realizations fork from the global (query, node, attempt)
+        // index, so an identical config per shard reproduces the same
+        // faults no matter the partition.
+        faults: cfg.faults.clone(),
+        resilience: cfg.resilience.clone(),
     };
     let shard_tenants: Vec<TenantPool> =
         tenants.iter().map(|t| TenantPool::new(&t.name, split_cap(t.k_cap, shards))).collect();
@@ -180,6 +185,7 @@ fn merge_shard_runs(
     let mut hedge_refund = 0.0f64;
     let (mut edge_busy, mut cloud_busy) = (0.0f64, 0.0f64);
     let mut clock_monotone = true;
+    let mut fault = crate::fault::FaultStats::default();
     for (_, stats) in &outcomes {
         admission_delays.extend_from_slice(&stats.admission_delays);
         queue_waits.extend_from_slice(&stats.queue_waits);
@@ -189,6 +195,7 @@ fn merge_shard_runs(
         edge_busy += stats.hedge_loser_busy[0];
         cloud_busy += stats.hedge_loser_busy[1];
         clock_monotone &= stats.clock_monotone;
+        fault.merge(&stats.fault);
     }
 
     // Cache counters are per-shard caches of the same configuration:
@@ -313,6 +320,9 @@ fn merge_shard_runs(
         trace,
         obs,
         critical_path,
+        // Same presence rule as the kernel: the roll-up appears iff the
+        // fault layer was configured.
+        faults: (cfg.faults.is_some() || cfg.resilience.is_some()).then_some(fault),
     }
 }
 

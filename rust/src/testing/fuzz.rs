@@ -29,6 +29,19 @@
 //!   run overlapping spans (outside chain mode), and the metrics series
 //!   is monotone in virtual time and bounded by the per-shard snapshot
 //!   cap;
+//! * fault accounting is coherent: the `faults` roll-up appears iff the
+//!   spec carries a fault layer, `retries = failures + timeouts`, failed
+//!   attempts never outnumber attempts, no node exceeds its retry budget
+//!   (so every query terminates — the DAG never wedges, even at
+//!   certain-failure probabilities or under a horizon-spanning outage),
+//!   outage rejections bill nothing and occupy no worker time, degraded
+//!   attempts land on the edge, hedging stays off while the layer is
+//!   active, and refunds are finite and non-negative (budget
+//!   conservation — `total_api_cost = global spend = Σ tenant spends` —
+//!   is re-checked on every faulty run, so timeout refunds cannot leak);
+//! * a *silent* fault layer (every probability zero, no outages, no
+//!   timeout) reproduces a faults-off twin byte-for-byte: trace, report
+//!   JSON (minus the `faults` roll-up), and observability artifacts;
 //! * `parse(render(spec)) == spec` and `render` is a fixpoint.
 //!
 //! When a case fails, [`minimize`] greedily shrinks the offending spec
@@ -46,6 +59,7 @@
 //! `hybridflow fuzz --cases 1 --seed <S+i>`.
 
 use crate::cache::CachePolicyKind;
+use crate::fault::{FaultConfig, OutageWindow, ResilienceConfig};
 use crate::obs::{ObserveConfig, MAX_METRIC_SNAPSHOTS};
 use crate::router::MirrorPredictor;
 use crate::scenario::{
@@ -65,6 +79,62 @@ const PHI64: u64 = 0x9E3779B97f4A7C15;
 
 fn pick<'a, T>(g: &mut Gen, xs: &'a [T]) -> &'a T {
     &xs[g.usize_in(0..xs.len())]
+}
+
+/// A random fault block spanning the interesting domain: probabilities
+/// across all of [0, 1] *including both endpoints* (p = 1 forces the
+/// degradation path; p = 0 must stay silent), outage windows from
+/// zero-length (matches nothing — half-open) to horizon-spanning.
+fn random_faults(g: &mut Gen) -> FaultConfig {
+    fn prob(g: &mut Gen) -> f64 {
+        match g.usize_in(0..5) {
+            0 => 0.0,
+            1 => 1.0,
+            _ => g.f64_in(0.0..0.3),
+        }
+    }
+    let outages = (0..g.usize_in(0..3))
+        .map(|_| {
+            let (start, end) = match g.usize_in(0..3) {
+                0 => {
+                    let t = g.f64_in(0.0..50.0);
+                    (t, t) // zero-length: half-open, matches nothing
+                }
+                1 => (0.0, 1e9), // spans any realistic horizon
+                _ => {
+                    let s = g.f64_in(0.0..50.0);
+                    (s, s + g.f64_in(0.0..30.0))
+                }
+            };
+            OutageWindow { cloud: g.bool(), start, end }
+        })
+        .collect();
+    FaultConfig {
+        edge_fail_p: prob(g),
+        cloud_fail_p: prob(g),
+        straggler_p: prob(g),
+        straggler_mult: g.f64_in(1.0..10.0),
+        seed: g.usize_in(0..1_000) as u64,
+        outages,
+    }
+}
+
+/// A random resilience block: timeouts from "fires on every call" (far
+/// below any profiled service time) to "never fires", retry budgets from
+/// 0 (first failure degrades) to 16.
+fn random_resilience(g: &mut Gen) -> ResilienceConfig {
+    ResilienceConfig {
+        timeout: match g.usize_in(0..4) {
+            0 => None,
+            1 => Some(1e-3),
+            2 => Some(g.f64_in(0.1..120.0)),
+            _ => Some(1e9),
+        },
+        max_retries: *pick(g, &[0usize, 1, 3, 16]),
+        backoff_base: g.f64_in(0.0..1.0),
+        backoff_jitter: g.f64_in(0.0..1.0),
+        failover_after: *pick(g, &[0usize, 1, 2, 8]),
+    }
 }
 
 fn random_policy(g: &mut Gen) -> PolicySpec {
@@ -159,6 +229,11 @@ fn random_spec(g: &mut Gen) -> ScenarioSpec {
             } else {
                 None
             },
+            // The fault layer is fuzzed from day one. Either block alone
+            // activates it (the missing half takes its defaults); specs
+            // carrying neither must take the exact pre-fault code path.
+            faults: if g.bool() { Some(random_faults(g)) } else { None },
+            resilience: if g.bool() { Some(random_resilience(g)) } else { None },
         },
     }
 }
@@ -169,7 +244,7 @@ fn random_spec(g: &mut Gen) -> ScenarioSpec {
 /// covered by the `reject_*` corpus and unit tests).
 fn adversarialize(g: &mut Gen, spec: &mut ScenarioSpec) {
     for _ in 0..g.usize_in(1..4) {
-        match g.usize_in(0..15) {
+        match g.usize_in(0..17) {
             0 => spec.topology.edge_workers = *pick(g, &[0usize, 1, 1024]),
             1 => spec.topology.cloud_workers = *pick(g, &[0usize, 1, 1024]),
             2 => spec.topology.admission_limit = g.usize_in(0..2),
@@ -223,7 +298,39 @@ fn adversarialize(g: &mut Gen, spec: &mut ScenarioSpec) {
                     metrics_interval: *pick(g, &[1e-4, 1e6]),
                 });
             }
-            _ => spec.engine.observe = None,
+            14 => spec.engine.observe = None,
+            15 => {
+                // Fault layer at the extremes: certain failure on one
+                // side, the other side dark for the whole run (or for a
+                // zero-length instant), a timeout below any realistic
+                // service time, and retry budgets of 0 or 16. The kernel
+                // must still terminate every query (degradation) with the
+                // books balanced.
+                let edge_down = g.bool();
+                spec.engine.faults = Some(FaultConfig {
+                    edge_fail_p: if edge_down { 1.0 } else { 0.0 },
+                    cloud_fail_p: if edge_down { 0.0 } else { 1.0 },
+                    straggler_p: *pick(g, &[0.0, 1.0]),
+                    straggler_mult: *pick(g, &[1.0, 100.0]),
+                    seed: 1,
+                    outages: vec![OutageWindow {
+                        cloud: !edge_down,
+                        start: 0.0,
+                        end: *pick(g, &[0.0, 1e12]),
+                    }],
+                });
+                spec.engine.resilience = Some(ResilienceConfig {
+                    timeout: if g.bool() { Some(1e-6) } else { None },
+                    max_retries: *pick(g, &[0usize, 16]),
+                    backoff_base: *pick(g, &[0.0, 10.0]),
+                    backoff_jitter: *pick(g, &[0.0, 1.0]),
+                    failover_after: *pick(g, &[0usize, 1]),
+                });
+            }
+            _ => {
+                spec.engine.faults = None;
+                spec.engine.resilience = None;
+            }
         }
     }
 }
@@ -314,6 +421,7 @@ pub fn run_case(spec: &ScenarioSpec) -> Vec<String> {
                 v.push("rerun observability artifacts are not identical".into());
             }
             check_obs(spec, &a, &mut v);
+            check_faults(spec, &a, &mut v);
             check_sharding_identities(spec, &session, &a, &mut v);
         }
     }
@@ -426,6 +534,145 @@ fn check_obs(spec: &ScenarioSpec, r: &Report, v: &mut Vec<String>) {
             ("snapshot.latency_mean", s.latency_mean),
         ] {
             check_finite(label, x, v);
+        }
+    }
+}
+
+/// The fault-layer invariant set (see the module docs for the list):
+/// roll-up/spec coherence, attempt accounting, per-event fault-mark
+/// semantics, and the silent-layer twin identity.
+fn check_faults(spec: &ScenarioSpec, r: &Report, v: &mut Vec<String>) {
+    let layer_on = spec.engine.faults.is_some() || spec.engine.resilience.is_some();
+    let Some(f) = &r.faults else {
+        if layer_on {
+            v.push("fault layer on but the report carries no faults roll-up".into());
+        }
+        for q in &r.results {
+            for e in &q.exec.events {
+                if !e.fault.is_default() {
+                    v.push(format!(
+                        "faults-off trace carries a fault mark on query {} node {}",
+                        q.query_id, e.node
+                    ));
+                }
+            }
+        }
+        return;
+    };
+    if !layer_on {
+        v.push("faults-off report carries a faults roll-up".into());
+        return;
+    }
+
+    // -- roll-up accounting ---------------------------------------------
+    // Every failed, timed-out, or outage-rejected attempt schedules
+    // exactly one retry (or the degradation attempt), so the counters are
+    // coupled: retries = failures + timeouts, and both are attempts.
+    if f.retries != f.failures + f.timeouts {
+        v.push(format!(
+            "fault retries {} != failures {} + timeouts {}",
+            f.retries, f.failures, f.timeouts
+        ));
+    }
+    if f.failures + f.timeouts > f.attempts {
+        v.push(format!(
+            "{} failure(s) + {} timeout(s) outnumber {} attempt(s)",
+            f.failures, f.timeouts, f.attempts
+        ));
+    }
+    if f.degraded_queries > r.results.len() {
+        v.push(format!(
+            "{} degraded queries in an n={} workload",
+            f.degraded_queries,
+            r.results.len()
+        ));
+    }
+    check_finite("faults.refund", f.refund, v);
+    if f.refund < -1e-12 {
+        v.push(format!("negative fault refund {}", f.refund));
+    }
+    let avail = f.availability();
+    if !avail.is_finite() || !(-1e-9..=1.0 + 1e-9).contains(&avail) {
+        v.push(format!("availability {avail} outside [0, 1]"));
+    }
+
+    // -- per-event fault-mark semantics -----------------------------------
+    // The retry budget bounds every node's attempt index (the degradation
+    // attempt sits at exactly max_retries + 1), outage rejections perform
+    // no work (zero cost, zero duration), degraded attempts run on the
+    // edge, failed attempts are never correct, and hedging is disabled
+    // while the layer is active.
+    let rc = spec.engine.resilience.clone().unwrap_or_default();
+    let max_attempts = rc.max_retries as u32 + 1;
+    for q in &r.results {
+        for e in &q.exec.events {
+            if e.fault.attempt > max_attempts {
+                v.push(format!(
+                    "query {} node {} reached attempt {} with a retry budget of {}",
+                    q.query_id, e.node, e.fault.attempt, rc.max_retries
+                ));
+            }
+            if e.fault.outage && (e.api_cost != 0.0 || e.finish != e.start) {
+                v.push(format!(
+                    "query {} node {} outage rejection billed {} over [{}, {}]",
+                    q.query_id, e.node, e.api_cost, e.start, e.finish
+                ));
+            }
+            if e.fault.degraded && e.cloud {
+                v.push(format!(
+                    "query {} node {} degraded onto the cloud side",
+                    q.query_id, e.node
+                ));
+            }
+            if (e.fault.failed || e.fault.timeout) && e.correct {
+                v.push(format!(
+                    "query {} node {} failed attempt marked correct",
+                    q.query_id, e.node
+                ));
+            }
+            if e.hedged {
+                v.push(format!(
+                    "query {} node {} hedged with the fault layer active",
+                    q.query_id, e.node
+                ));
+            }
+        }
+    }
+
+    // -- silent layer twin ------------------------------------------------
+    // A fault layer that can never fire must reproduce a faults-off run
+    // byte-for-byte (modulo the `faults` roll-up). Hedging is forced off
+    // in the twin because the fault layer disables it regardless.
+    let fc = spec.engine.faults.clone().unwrap_or_default();
+    let silent = fc.edge_fail_p == 0.0
+        && fc.cloud_fail_p == 0.0
+        && fc.straggler_p == 0.0
+        && fc.outages.is_empty()
+        && rc.timeout.is_none();
+    if !silent {
+        return;
+    }
+    let mut twin_spec = spec.clone();
+    twin_spec.engine.faults = None;
+    twin_spec.engine.resilience = None;
+    twin_spec.engine.hedge = false;
+    match twin_spec.build(Arc::new(MirrorPredictor::synthetic_for_tests())) {
+        Err(e) => v.push(format!("faults-off twin failed to build: {e}")),
+        Ok(twin) => {
+            let off = twin.run();
+            if off.trace_text() != r.trace_text() {
+                v.push("a silent fault layer changed the event trace".into());
+            }
+            let mut on_json = r.to_json();
+            if let Json::Obj(o) = &mut on_json {
+                o.remove("faults");
+            }
+            if off.to_json().to_string_pretty() != on_json.to_string_pretty() {
+                v.push("a silent fault layer changed the report JSON".into());
+            }
+            if off.obs != r.obs {
+                v.push("a silent fault layer changed the observability artifacts".into());
+            }
         }
     }
 }
@@ -801,6 +1048,25 @@ fn shrink_steps(cur: &ScenarioSpec) -> Vec<ScenarioSpec> {
         step(&|s| s.engine.policy = PolicySpec::HybridFlow);
         step(&|s| s.engine.n_max = EngineSpec::default().n_max);
         step(&|s| s.engine.observe = None);
+        // Fault layer off first (the biggest win), then half at a time,
+        // then individual knobs so a failure that needs one live fault
+        // mechanism keeps exactly that one.
+        step(&|s| {
+            s.engine.faults = None;
+            s.engine.resilience = None;
+        });
+        step(&|s| s.engine.faults = None);
+        step(&|s| s.engine.resilience = None);
+        step(&|s| {
+            if let Some(f) = &mut s.engine.faults {
+                f.outages.clear();
+            }
+        });
+        step(&|s| {
+            if let Some(r) = &mut s.engine.resilience {
+                r.timeout = None;
+            }
+        });
         // Per-tenant fields: clear each tenant's cap / policy override
         // individually so a failure that needs one capped tenant keeps
         // exactly that one.
@@ -894,6 +1160,41 @@ mod tests {
     }
 
     #[test]
+    fn fault_extremes_hold_all_invariants() {
+        // The issue-list extremes, hand-built: certain edge failure, a
+        // horizon-spanning outage on the other side, a zero-length window
+        // (must match nothing), stragglers on every call, and the two
+        // retry-budget endpoints (0: first failure degrades; 16: a long
+        // retry ladder) — once with a timeout below any service time.
+        let mut spec = spec_for_case(21, 0, false);
+        spec.topology.shards = 1;
+        spec.workload.n = 4;
+        for (max_retries, timeout) in [(0usize, Some(1e-6)), (16, None)] {
+            let mut s = spec.clone();
+            s.engine.faults = Some(FaultConfig {
+                edge_fail_p: 1.0,
+                cloud_fail_p: 0.0,
+                straggler_p: 1.0,
+                straggler_mult: 8.0,
+                seed: 3,
+                outages: vec![
+                    OutageWindow { cloud: true, start: 0.0, end: 1e12 },
+                    OutageWindow { cloud: false, start: 5.0, end: 5.0 },
+                ],
+            });
+            s.engine.resilience = Some(ResilienceConfig {
+                timeout,
+                max_retries,
+                backoff_base: 0.01,
+                backoff_jitter: 0.5,
+                failover_after: 1,
+            });
+            let violations = run_case(&s);
+            assert!(violations.is_empty(), "{}", failure_report(&s, 21, 0, false, &violations));
+        }
+    }
+
+    #[test]
     fn run_case_reports_violations_instead_of_panicking() {
         // An invalid spec must come back as a violation string, not a
         // panic or a silent pass.
@@ -921,6 +1222,8 @@ mod tests {
         spec.engine.hedge = true;
         spec.topology.shards = 4;
         spec.engine.observe = Some(ObserveConfig::default());
+        spec.engine.faults = Some(FaultConfig { edge_fail_p: 0.5, ..FaultConfig::default() });
+        spec.engine.resilience = Some(ResilienceConfig::default());
         let min = minimize(&spec, |s| s.engine.hedge);
         assert!(min.engine.hedge, "the preserved failure survives");
         assert!(min.validate().is_ok(), "minimized spec stays valid");
@@ -931,6 +1234,8 @@ mod tests {
         assert!(min.workload.zipf.is_none());
         assert!(min.engine.cache.is_none());
         assert!(min.engine.observe.is_none(), "observability resets to off");
+        assert!(min.engine.faults.is_none(), "fault injection resets to off");
+        assert!(min.engine.resilience.is_none(), "resilience resets to off");
         assert!(min.topology.tenants[0].k_cap.is_none());
         assert!(min.topology.tenants[0].policy.is_none());
         assert_eq!(min.seed, 0);

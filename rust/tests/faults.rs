@@ -1,0 +1,212 @@
+//! Fault-injection + resilience integration tests: the degradation
+//! paths the fuzz harness can only hit probabilistically, pinned as
+//! deterministic scenarios.
+//!
+//! * A cloud outage covering the whole run, with every decision forced
+//!   cloudward and failover disabled: every query must still complete —
+//!   through edge degradation — with zero cloud dollars billed and the
+//!   report byte-stable across reruns.
+//! * A timeout storm (deadline far below any service time): bounded
+//!   retries must terminate every query through degradation, with
+//!   refunds keeping the books conserved.
+//! * The shipped `scenarios/fleet_faulty.json`: report bytes independent
+//!   of reruns, worker-thread counts, and the sharded-merge path.
+
+use hybridflow::fault::{FaultConfig, OutageWindow, ResilienceConfig};
+use hybridflow::router::{MirrorPredictor, UtilityPredictor};
+use hybridflow::scenario::{
+    EngineSpec, PolicySpec, ScenarioSpec, TenantSpec, TopologySpec, WorkloadSpec,
+};
+use hybridflow::workload::trace::ArrivalProcess;
+use hybridflow::workload::Benchmark;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn predictor() -> Arc<dyn UtilityPredictor> {
+    Arc::new(MirrorPredictor::synthetic_for_tests())
+}
+
+fn base_spec(name: &str, n: usize) -> ScenarioSpec {
+    ScenarioSpec {
+        name: name.into(),
+        seed: 17,
+        topology: TopologySpec {
+            edge_workers: 4,
+            cloud_workers: 8,
+            admission_limit: 16,
+            global_k_cap: None,
+            shards: 1,
+            tenants: vec![TenantSpec { name: "t0".into(), k_cap: None, policy: None }],
+        },
+        workload: WorkloadSpec {
+            benchmark: Benchmark::Gpqa,
+            n,
+            arrival: ArrivalProcess::Poisson { rate: 0.5 },
+            zipf: None,
+        },
+        engine: EngineSpec { record_trace: true, ..EngineSpec::default() },
+    }
+}
+
+#[test]
+fn cloud_dark_whole_run_completes_every_query_via_edge_degradation() {
+    let mut spec = base_spec("cloud_dark", 12);
+    // Every decision forced cloudward, the cloud dark for any realistic
+    // horizon, and failover disabled — so the only way out is the retry
+    // ladder ending in edge degradation.
+    spec.engine.policy = PolicySpec::AllCloud;
+    spec.engine.faults = Some(FaultConfig {
+        outages: vec![OutageWindow { cloud: true, start: 0.0, end: 1e12 }],
+        ..FaultConfig::default()
+    });
+    spec.engine.resilience = Some(ResilienceConfig {
+        timeout: None,
+        max_retries: 2,
+        backoff_base: 0.05,
+        backoff_jitter: 0.1,
+        failover_after: 0,
+    });
+    let session = spec.build(predictor()).unwrap();
+    let a = session.run();
+    let b = session.run();
+
+    // 100% completion: the DAG never wedges.
+    assert_eq!(a.results.len(), 12, "every query completes");
+    let stats = a.faults.expect("fault layer reports stats");
+    assert_eq!(stats.degraded_queries, 12, "every query finished degraded");
+    assert!(stats.failures > 0, "outage rejections counted as failures");
+    assert_eq!(stats.timeouts, 0);
+    assert_eq!(stats.retries, stats.failures + stats.timeouts);
+
+    // A dark cloud bills zero dollars, globally and per tenant.
+    assert_eq!(a.total_api_cost, 0.0, "no cloud work happened, nothing billed");
+    assert_eq!(a.global.k_spent, 0.0);
+    for t in &a.tenants {
+        assert_eq!(t.state.k_used, 0.0, "tenant '{}' spent cloud dollars", t.name);
+    }
+
+    for q in &a.results {
+        assert!(
+            q.exec.events.iter().any(|e| e.fault.degraded && !e.cloud),
+            "query {} lacks an edge-side degraded completion",
+            q.query_id
+        );
+        for e in &q.exec.events {
+            if e.cloud {
+                // Every cloud attempt was an instant outage rejection:
+                // free, and occupying no worker time.
+                assert!(e.fault.outage, "query {} node {} ran on a dark cloud", q.query_id, e.node);
+                assert_eq!(e.api_cost, 0.0);
+                assert_eq!(e.start, e.finish, "rejection held a worker");
+            }
+        }
+    }
+
+    // Byte-stable across reruns.
+    assert_eq!(a.trace_text(), b.trace_text(), "rerun trace drifted");
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "rerun report drifted"
+    );
+}
+
+#[test]
+fn timeout_storm_terminates_through_bounded_retries() {
+    let mut spec = base_spec("timeout_storm", 10);
+    // A deadline far below any profiled service time: every attempt
+    // times out until the retry budget is exhausted, then the degraded
+    // attempt (fault checks suppressed) completes the node.
+    spec.engine.faults = Some(FaultConfig { seed: 3, ..FaultConfig::default() });
+    spec.engine.resilience = Some(ResilienceConfig {
+        timeout: Some(1e-6),
+        max_retries: 2,
+        backoff_base: 0.01,
+        backoff_jitter: 0.5,
+        failover_after: 2,
+    });
+    let session = spec.build(predictor()).unwrap();
+    let a = session.run();
+    let b = session.run();
+
+    assert_eq!(a.results.len(), 10, "every query completes");
+    let stats = a.faults.expect("fault layer reports stats");
+    assert_eq!(stats.degraded_queries, 10, "every query degraded after the storm");
+    assert!(stats.timeouts > 0, "the storm fired");
+    assert_eq!(stats.failures, 0, "no transient failures configured");
+    assert_eq!(stats.retries, stats.failures + stats.timeouts);
+    assert!(stats.refund.is_finite() && stats.refund >= 0.0, "refund {}", stats.refund);
+
+    // The retry budget bounds every node's attempt ladder: attempts
+    // 0..=2 time out, attempt 3 is the degraded completion.
+    for q in &a.results {
+        for e in &q.exec.events {
+            assert!(
+                e.fault.attempt <= 3,
+                "query {} node {} reached attempt {}",
+                q.query_id,
+                e.node,
+                e.fault.attempt
+            );
+        }
+    }
+
+    // Timeout refunds keep the books conserved.
+    let tenant_sum: f64 = a.tenants.iter().map(|t| t.state.k_used).sum();
+    assert!((a.global.k_spent - tenant_sum).abs() < 1e-9, "global vs tenant spend");
+    assert!((a.total_api_cost - a.global.k_spent).abs() < 1e-9, "billed vs spent");
+
+    assert_eq!(a.trace_text(), b.trace_text(), "rerun trace drifted");
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "rerun report drifted"
+    );
+}
+
+#[test]
+fn shipped_faulty_scenario_is_byte_stable_across_threads_and_shards() {
+    let path = repo_root().join("scenarios").join("fleet_faulty.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let spec = ScenarioSpec::parse(&text).unwrap();
+    let session = spec.build(predictor()).unwrap();
+    let a = session.run();
+    let b = session.run();
+    assert_eq!(a.trace_text(), b.trace_text(), "rerun trace drifted");
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "rerun report drifted"
+    );
+    let stats = a.faults.expect("fault layer reports stats");
+    assert!(stats.attempts > 0, "the faulty fleet dispatched work");
+    assert!(stats.failures + stats.timeouts > 0, "the preset's faults fired");
+
+    // Fault realizations are attempt-addressed, so the bytes are
+    // independent of worker-thread count and of the shard split.
+    for shards in [1usize, 4] {
+        let serial = session.run_sharded(shards, 1);
+        let threaded = session.run_sharded(shards, 4);
+        assert_eq!(
+            serial.trace_text(),
+            threaded.trace_text(),
+            "shards={shards}: trace depends on thread count"
+        );
+        assert_eq!(
+            serial.to_json().to_string_pretty(),
+            threaded.to_json().to_string_pretty(),
+            "shards={shards}: report depends on thread count"
+        );
+    }
+    // shards = 1 through the sharded merge path matches the plain kernel.
+    assert_eq!(
+        session.run_sharded(1, 1).to_json().to_string_pretty(),
+        a.to_json().to_string_pretty(),
+        "sharded(1) drifted from the unsharded kernel"
+    );
+}

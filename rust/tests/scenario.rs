@@ -37,7 +37,7 @@ fn repo_root() -> PathBuf {
 }
 
 fn shipped_specs() -> Vec<PathBuf> {
-    ["fleet_sim", "fleet_mixed_policy", "fleet_cache", "fleet_sharded"]
+    ["fleet_sim", "fleet_mixed_policy", "fleet_cache", "fleet_sharded", "fleet_faulty"]
         .iter()
         .map(|name| repo_root().join("scenarios").join(format!("{name}.json")))
         .collect()
@@ -96,6 +96,7 @@ fn shipped_specs_match_their_presets() {
             ),
         ),
         ("fleet_sharded", presets::fleet_sharded(Benchmark::Gpqa, 240, 2.0, 11)),
+        ("fleet_faulty", presets::fleet_faulty(Benchmark::Gpqa, 60, 0.5, 11)),
     ];
     for (name, preset) in cases {
         let path = repo_root().join("scenarios").join(format!("{name}.json"));

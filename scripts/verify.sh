@@ -95,6 +95,24 @@ fi
 rm -f /tmp/hybridflow_obs_t1.json /tmp/hybridflow_obs_t1.jsonl \
     /tmp/hybridflow_obs_t4.json /tmp/hybridflow_obs_t4.jsonl
 
+echo "== fault-injection smoke run =="
+# The shipped faulty fleet (transient failures, a cloud outage window,
+# stragglers, timeout + retry + failover policies): rerunning must
+# reproduce the report byte-for-byte, and so must forcing 4 worker
+# threads (fault realizations are attempt-addressed, not
+# thread-scheduled). --fault-seed reseeds the realization end to end.
+cargo run --release -- run --scenario scenarios/fleet_faulty.json \
+    --json /tmp/hybridflow_faulty_a.json
+cargo run --release -- run --scenario scenarios/fleet_faulty.json \
+    --json /tmp/hybridflow_faulty_b.json
+cargo run --release -- run --scenario scenarios/fleet_faulty.json \
+    --threads 4 --json /tmp/hybridflow_faulty_t4.json
+diff /tmp/hybridflow_faulty_a.json /tmp/hybridflow_faulty_b.json
+diff /tmp/hybridflow_faulty_a.json /tmp/hybridflow_faulty_t4.json
+cargo run --release -- run --scenario scenarios/fleet_faulty.json --fault-seed 99
+rm -f /tmp/hybridflow_faulty_a.json /tmp/hybridflow_faulty_b.json \
+    /tmp/hybridflow_faulty_t4.json
+
 echo "== determinism lint (enforced) =="
 # The dependency-free source lint (analysis::lint): the committed tree
 # must be clean, the --json report must be byte-identical across reruns,
